@@ -1,0 +1,71 @@
+//! L3 hot-path benchmark — the §Perf target: the estimator must simulate
+//! millions of tasks per second so that whole co-design sweeps stay in the
+//! "coffee break" regime the paper promises even for much larger apps.
+//!
+//! Measures: event-engine throughput (tasks/s) for large synthetic
+//! programs, dependence-tracker build rate, and end-to-end sweep latency.
+
+use zynq_estimator::apps::{cholesky::Cholesky, matmul::Matmul};
+use zynq_estimator::config::{BoardConfig, CoDesign};
+use zynq_estimator::coordinator::deps::DepGraph;
+use zynq_estimator::coordinator::elaborate::ElabProgram;
+use zynq_estimator::coordinator::sched::Policy;
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::sim::engine::{resolve_codesign, Simulator};
+use zynq_estimator::sim::EstimatorModel;
+use zynq_estimator::util::bench::{bench, black_box};
+
+fn main() {
+    let board = BoardConfig::zynq706();
+
+    // Large workloads: matmul NB=16 (4096 tasks) and NB=24 (13824 tasks),
+    // cholesky NB=40 (12340 tasks).
+    for (name, program, cd) in [
+        (
+            "matmul NB=16 (4096 tasks, 2acc+smp)",
+            Matmul::new(1024, 64).build_program(&board),
+            CoDesign::new("2acc+smp")
+                .with_accel("mxm64", 32)
+                .with_accel("mxm64", 32)
+                .with_smp("mxm64"),
+        ),
+        (
+            "matmul NB=24 (13824 tasks, 2acc)",
+            Matmul::new(1536, 64).build_program(&board),
+            CoDesign::new("2acc")
+                .with_accel("mxm64", 32)
+                .with_accel("mxm64", 32),
+        ),
+        (
+            "cholesky NB=40 (12341 tasks, dgemm+dtrsm)",
+            Cholesky::new(2560, 64).build_program(&board),
+            CoDesign::new("pair")
+                .with_accel("dgemm", 16)
+                .with_accel("dtrsm", 16),
+        ),
+    ] {
+        let n_tasks = program.tasks.len();
+        let graph = DepGraph::build(&program);
+        let elab = ElabProgram::build(&program, &graph);
+        let (accels, smp) =
+            resolve_codesign(&program, &cd, &board, &FpgaPart::xc7z045()).unwrap();
+        let stats = bench(&format!("simulate {name}"), 2, 20, || {
+            let sim = Simulator::new(&program, &elab, &board, &accels, &smp, Policy::Greedy);
+            let mut model = EstimatorModel::new(&board);
+            black_box(sim.run(&mut model));
+        });
+        println!(
+            "    -> {:.2} M simulated tasks/s\n",
+            n_tasks as f64 / (stats.min_ms / 1e3) / 1e6
+        );
+    }
+
+    // Dependence tracking and program generation rates.
+    let big = Matmul::new(1536, 64).build_program(&board);
+    bench("DepGraph::build (13824 tasks)", 2, 20, || {
+        black_box(DepGraph::build(&big));
+    });
+    bench("Matmul::build_program (13824 tasks)", 2, 20, || {
+        black_box(Matmul::new(1536, 64).build_program(&board));
+    });
+}

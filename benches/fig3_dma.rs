@@ -1,0 +1,51 @@
+//! Fig. 3 regeneration: speedup of 2 accelerators vs 1 for input/output
+//! DMA transfers (512 KB and 1024 KB), plus model micro-timings.
+//!
+//! Paper shape to hold: inputs scale (close to 2x), outputs do not (~1x).
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::experiments;
+use zynq_estimator::sim::dma;
+use zynq_estimator::util::bench::{bench, black_box};
+
+fn main() {
+    let board = BoardConfig::zynq706();
+
+    println!("=== Fig. 3: DMA speedup, 2 accelerators vs 1 ===");
+    println!(
+        "{:>10}  {:>12} {:>12}  {:>12} {:>12}",
+        "size", "in est", "in board", "out est", "out board"
+    );
+    for (label, est, brd) in experiments::fig3(&board) {
+        println!(
+            "{label:>10}  {:>12.2} {:>12.2}  {:>12.2} {:>12.2}",
+            est.input_speedup, brd.input_speedup, est.output_speedup, brd.output_speedup
+        );
+    }
+    println!("paper: input ~2x (scales), output ~1x (shared channel)\n");
+
+    // Extension sweep: 1-8 accelerators at 1 MB (beyond the paper's 2).
+    println!("extension: input-transfer speedup vs accelerator count (1 MB)");
+    for k in 1..=8u32 {
+        let est = dma::fig3_estimator(&board, 1 << 20, k);
+        let brd = dma::fig3_board(&board, 1 << 20, k);
+        println!(
+            "  {k} accel: est {:>5.2}x  board {:>5.2}x",
+            est.input_speedup, brd.input_speedup
+        );
+    }
+    println!();
+
+    bench("dma::fig3_estimator (both sizes)", 10, 100, || {
+        for bytes in [512 * 1024u64, 1024 * 1024] {
+            black_box(dma::fig3_estimator(&board, bytes, 2));
+        }
+    });
+    bench("dma::input_transfer_ps x 10k", 5, 50, || {
+        let mut acc = 0u64;
+        for i in 0..10_000u64 {
+            acc = acc.wrapping_add(dma::input_transfer_ps(&board, 4096 + i, 2));
+        }
+        black_box(acc);
+    });
+}

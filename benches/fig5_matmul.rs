@@ -1,0 +1,29 @@
+//! Fig. 5 regeneration: tiled matmul, estimator vs board emulator over the
+//! six co-designs, normalized to the slowest ("1acc 128 + smp" in the
+//! paper). Shape to hold: best = 1acc 128 (FPGA only), "+smp" variants
+//! collapse under the greedy policy, estimator optimistic but same trend.
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::experiments;
+use zynq_estimator::util::bench::bench;
+
+fn main() {
+    let board = BoardConfig::zynq706();
+    let table = experiments::fig5(512, &board, experiments::BOARD_REPS).unwrap();
+    println!(
+        "{}",
+        table.render("Fig. 5: matmul 512x512 — estimator vs board emulator (normalized to slowest)")
+    );
+
+    // Harness timing: the cost of one full co-design analysis — the number
+    // behind the paper's "less than 5 minutes of work (coffee break)".
+    bench("fig5 full sweep (6 configs, est+10x board)", 1, 5, || {
+        experiments::fig5(512, &board, experiments::BOARD_REPS).unwrap();
+    });
+    bench("fig5 estimator only (6 configs)", 1, 10, || {
+        for (cd, app) in zynq_estimator::apps::matmul::fig5_cases(512) {
+            let p = app.build_program(&board);
+            zynq_estimator::sim::estimate(&p, &cd, &board).unwrap();
+        }
+    });
+}

@@ -1,0 +1,45 @@
+//! Fig. 7 regeneration: Paraver traces of the four matmul configurations
+//! the paper visualizes (1acc 128, 2acc 64, 2acc 64 + SMP, 1acc 128 + SMP)
+//! at the same time scale, plus writer throughput.
+
+use zynq_estimator::apps::matmul;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::experiments;
+use zynq_estimator::sim::estimate;
+use zynq_estimator::trace::paraver;
+use zynq_estimator::util::bench::{bench, black_box};
+
+fn main() {
+    let board = BoardConfig::zynq706();
+    let out = std::path::PathBuf::from("out/paraver");
+    let stems = experiments::fig7(512, &board, &out).unwrap();
+    println!("=== Fig. 7: Paraver bundles (same time axis; load in wxparaver) ===");
+    for s in &stems {
+        let prv = std::fs::read_to_string(s.with_extension("prv")).unwrap();
+        let header = prv.lines().next().unwrap().to_string();
+        let dur_ns: u64 = header
+            .split_once("):")
+            .unwrap()
+            .1
+            .split(':')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        println!(
+            "  {:28} {:>10.1} ms  {:>7} records",
+            s.file_name().unwrap().to_string_lossy(),
+            dur_ns as f64 / 1e6,
+            prv.lines().count() - 1
+        );
+    }
+    println!("(paper reading: +smp traces show SMP bars loaded with slow mxmBlock tasks\n while the accelerator rows go idle — the load-imbalance story)\n");
+
+    // Writer throughput.
+    let (cd, app) = matmul::fig5_cases(512).into_iter().nth(1).unwrap(); // 2acc 64
+    let program = app.build_program(&board);
+    let res = estimate(&program, &cd, &board).unwrap();
+    bench("paraver::to_prv (2acc 64, 512 tasks)", 3, 30, || {
+        black_box(paraver::to_prv(&program, &board, &res));
+    });
+}

@@ -1,0 +1,31 @@
+//! Fig. 9 regeneration: tiled cholesky, estimator vs board emulator across
+//! the six resource-distribution co-designs (FR-dgemm / FR-dsyrk /
+//! FR-dtrsm and the three dgemm pairs), normalized to the slowest.
+//!
+//! Paper shape to hold: estimator and real execution pick the same best
+//! configuration; trends agree; the two-accelerator dgemm mixes beat the
+//! single full-resources variants.
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::experiments;
+use zynq_estimator::util::bench::bench;
+
+fn main() {
+    let board = BoardConfig::zynq706();
+    let table = experiments::fig9(512, &board, experiments::BOARD_REPS).unwrap();
+    println!(
+        "{}",
+        table.render("Fig. 9: cholesky 512x512 (BS=64 dp) — estimator vs board emulator")
+    );
+
+    bench("fig9 full sweep (6 configs, est+10x board)", 1, 5, || {
+        experiments::fig9(512, &board, experiments::BOARD_REPS).unwrap();
+    });
+    bench("fig9 estimator only (6 configs)", 1, 10, || {
+        let app = zynq_estimator::apps::cholesky::Cholesky::new(512, 64);
+        let p = app.build_program(&board);
+        for cd in zynq_estimator::apps::cholesky::fig9_codesigns() {
+            zynq_estimator::sim::estimate(&p, &cd, &board).unwrap();
+        }
+    });
+}

@@ -1,0 +1,40 @@
+//! The paper's cholesky study (§VI): Fig. 9 resource-distribution sweep
+//! (which kernels deserve the fabric), Fig. 8 dependency-graph export, and
+//! the day-and-a-half-to-ten-minutes productivity claim.
+//!
+//! Run: `cargo run --release --example cholesky_codesign [-- --n 512]`
+
+use zynq_estimator::cli::Args;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::experiments;
+use zynq_estimator::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n = args.u64_or("n", 512)?;
+    let board = BoardConfig::zynq706();
+
+    // Fig. 9 — FR-* variants vs two-accelerator combinations.
+    let table = experiments::fig9(n, &board, experiments::BOARD_REPS)?;
+    println!(
+        "{}",
+        table.render(&format!(
+            "Fig. 9: cholesky {n}x{n} (64x64 dp blocks) — estimator vs board emulator"
+        ))
+    );
+
+    // Fig. 8 — the NB=4 task dependency graph.
+    std::fs::create_dir_all("out")?;
+    let dot = experiments::fig8(4, &board);
+    std::fs::write("out/fig8_cholesky_nb4.dot", &dot)?;
+    println!("Fig. 8: wrote out/fig8_cholesky_nb4.dot (render with `dot -Tpng`)\n");
+
+    // §VI productivity: 1.5 days of bitstreams vs minutes of estimation.
+    let (meth, trad) = experiments::analysis_time_cholesky(n, &board)?;
+    println!("Productivity (§VI):");
+    println!("  methodology (measured wall-clock): {}", fmt_secs(meth));
+    println!("  traditional hw generation (model): {}", fmt_secs(trad));
+    println!("  => {:.0}x", trad / meth);
+    Ok(())
+}

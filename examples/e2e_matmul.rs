@@ -1,0 +1,132 @@
+//! End-to-end driver — proves all three layers compose on a real workload.
+//!
+//! 1. **Decide** (L3 estimator): sweep the paper's six matmul co-designs
+//!    through the coarse-grain estimator and pick the winner — the
+//!    minutes-instead-of-hours decision of §VI.
+//! 2. **Execute** (L3 coordinator + L1/L2 artifacts): run the chosen
+//!    blocked matmul *for real*: the Rust dataflow coordinator schedules
+//!    every mxmBlock task over a worker pool in dependence order, and each
+//!    task executes the AOT-compiled JAX/Pallas kernel through the PJRT
+//!    runtime (Python is not involved). The result is validated against a
+//!    pure-Rust reference.
+//! 3. **Report**: wall-clock, task throughput, GFLOP/s, numeric error,
+//!    plus the simulated-Zynq timings that drove the decision. Recorded in
+//!    EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_matmul [-- --n 512]`
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use zynq_estimator::apps::matmul;
+use zynq_estimator::cli::Args;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::coordinator::deps::DepGraph;
+use zynq_estimator::experiments;
+use zynq_estimator::runtime::{executor, reference, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n = args.u64_or("n", 512)? as usize;
+    let workers = args.u64_or("workers", 4)? as usize;
+    let board = BoardConfig::zynq706();
+
+    // ---- Phase 1: co-design decision via the estimator -------------------
+    println!("== Phase 1: coarse-grain estimation over the Fig. 5 co-design set");
+    let t0 = Instant::now();
+    let table = experiments::fig5(n as u64, &board, 3)?;
+    let decision_s = t0.elapsed().as_secs_f64();
+    println!("{}", table.render("estimator vs board emulator"));
+    let best = &table.rows[table.best_estimator()];
+    println!(
+        "decision: '{}' in {:.2} s (the traditional flow would synthesize every bitstream first)\n",
+        best.name, decision_s
+    );
+
+    // The winning co-design tells us the granularity to run.
+    let bs = if best.name.contains("128") { 128usize } else { 64usize };
+    let kernel = format!("mxm{bs}");
+    let nb = n / bs;
+
+    // ---- Phase 2: real execution through the PJRT runtime ----------------
+    println!("== Phase 2: executing matmul {n}x{n} (bs={bs}, {nb}^3 = {} tasks) on {workers} workers",
+        nb * nb * nb);
+    let app = matmul::Matmul::new(n as u64, bs as u64);
+    let program = app.build_program(&board);
+    let graph = DepGraph::build(&program);
+
+    // Tile storage. A/B are read-only; each C tile has its own lock —
+    // dependence chains already serialize same-tile tasks, the lock only
+    // protects the memcpy.
+    let mut rng = zynq_estimator::util::Rng::new(0xE2E);
+    let mut tile = |seed_off: u64| -> Vec<f32> {
+        let _ = seed_off;
+        (0..bs * bs).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+    };
+    let a_tiles: Vec<Vec<f32>> = (0..nb * nb).map(|i| tile(i as u64)).collect();
+    let b_tiles: Vec<Vec<f32>> = (0..nb * nb).map(|i| tile(1000 + i as u64)).collect();
+    let c_tiles: Vec<Mutex<Vec<f32>>> =
+        (0..nb * nb).map(|_| Mutex::new(vec![0f32; bs * bs])).collect();
+
+    let t1 = Instant::now();
+    let stats = executor::execute(
+        &program,
+        &graph,
+        workers,
+        // PJRT clients are not Sync: one runtime per worker.
+        |_w| Runtime::new(std::path::Path::new("artifacts")),
+        &|rt: &mut Runtime, task| {
+            // task id encodes (k, i, j) in the emission order.
+            let t = task as usize;
+            let (k, rem) = (t / (nb * nb), t % (nb * nb));
+            let (i, j) = (rem / nb, rem % nb);
+            let a = &a_tiles[i * nb + k];
+            let b = &b_tiles[k * nb + j];
+            let c_in = c_tiles[i * nb + j].lock().unwrap().clone();
+            let out = rt.run_mxm(&kernel, bs, a, b, &c_in)?;
+            *c_tiles[i * nb + j].lock().unwrap() = out;
+            Ok(())
+        },
+    )
+    .map_err(|e| anyhow::anyhow!("{e:#} (are artifacts built? run `make artifacts`)"))?;
+    let exec_s = t1.elapsed().as_secs_f64();
+    let n_tasks = stats.tasks;
+    println!(
+        "  per-worker task counts: {:?} (library executor: runtime::executor)",
+        stats.per_worker
+    );
+
+    // ---- Phase 3: validate + report --------------------------------------
+    println!("== Phase 3: validation");
+    // Assemble C and compare against the pure-Rust blocked reference.
+    let mut a_full = vec![0f32; n * n];
+    let mut b_full = vec![0f32; n * n];
+    let mut c_full = vec![0f32; n * n];
+    for bi in 0..nb {
+        for bj in 0..nb {
+            reference::paste_tile(n, bs, &mut a_full, bi, bj, &a_tiles[bi * nb + bj]);
+            reference::paste_tile(n, bs, &mut b_full, bi, bj, &b_tiles[bi * nb + bj]);
+            let t = c_tiles[bi * nb + bj].lock().unwrap();
+            reference::paste_tile(n, bs, &mut c_full, bi, bj, &t);
+        }
+    }
+    let mut expect = vec![0f32; n * n];
+    reference::blocked_matmul(n, bs, &a_full, &b_full, &mut expect);
+    let diff = reference::max_abs_diff(&c_full, &expect);
+    let max = expect.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let rel = diff / max;
+    println!("  max relative error vs reference: {rel:.2e}");
+    anyhow::ensure!(rel < 1e-3, "numeric validation FAILED");
+
+    let flops = 2.0 * (n as f64).powi(3);
+    println!("\n== E2E report");
+    println!("  co-design decision:        '{}' in {decision_s:.2} s", best.name);
+    println!("  tasks executed via PJRT:   {n_tasks} ({:.0} tasks/s)", n_tasks as f64 / exec_s);
+    println!("  wall-clock execution:      {exec_s:.3} s ({:.2} GFLOP/s on this host)",
+        flops / exec_s / 1e9);
+    println!("  simulated Zynq makespan:   est {:.1} ms / board {:.1} ms",
+        best.estimator_ms, best.board_ms);
+    println!("  numeric validation:        PASS (rel err {rel:.2e})");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! The paper's full matmul study (§VI): Fig. 5 estimator-vs-real sweep,
+//! Fig. 6 analysis-time comparison and Fig. 7 Paraver trace export, in one
+//! run.
+//!
+//! Run: `cargo run --release --example matmul_codesign [-- --n 512]`
+
+use zynq_estimator::cli::Args;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::experiments;
+use zynq_estimator::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n = args.u64_or("n", 512)?;
+    let board = BoardConfig::zynq706();
+
+    // Fig. 5 — the six co-designs under both models.
+    let table = experiments::fig5(n, &board, experiments::BOARD_REPS)?;
+    println!(
+        "{}",
+        table.render(&format!("Fig. 5: matmul {n}x{n} — estimator vs board emulator"))
+    );
+
+    // Fig. 7 — Paraver traces of the four configurations the paper plots.
+    let out = std::path::PathBuf::from("out/paraver");
+    let stems = experiments::fig7(n, &board, &out)?;
+    println!("Fig. 7: Paraver bundles (load in wxparaver):");
+    for s in &stems {
+        println!("  {}.prv", s.display());
+    }
+    println!();
+
+    // Fig. 6 — minutes vs hours.
+    let (meth, trad) = experiments::analysis_time_matmul(n, &board)?;
+    println!("Fig. 6: analysis time (both axes log-scale in the paper)");
+    println!("  methodology (measured wall-clock): {}", fmt_secs(meth));
+    println!("  traditional hw generation (model): {}", fmt_secs(trad));
+    println!("  => {:.0}x faster co-design decisions", trad / meth);
+    Ok(())
+}

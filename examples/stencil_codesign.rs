@@ -1,0 +1,51 @@
+//! Stencil co-design study — the extension app: a blocked Jacobi sweep
+//! whose halo-exchange dependence pattern differs from both matmul's
+//! accumulation chains and cholesky's panel graph.
+//!
+//! Demonstrates the general-programmer workflow on a *new* application:
+//! 1. declare the kernels + task granularity (the OmpSs annotations),
+//! 2. let the DSE enumerate every feasible accelerator allocation,
+//! 3. read the Paraver-style bottleneck analysis for the winner.
+//!
+//! Run: `cargo run --release --example stencil_codesign [-- --n 512 --sweeps 8]`
+
+use zynq_estimator::apps::stencil::Stencil;
+use zynq_estimator::cli::Args;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::dse::{explore, DseSpace, Objective};
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::metrics::utilization_report;
+use zynq_estimator::sim::estimate;
+use zynq_estimator::trace::{paraver, prv_analyze};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n = args.u64_or("n", 512)?;
+    let sweeps = args.u64_or("sweeps", 8)? as u32;
+    let board = BoardConfig::zynq706();
+
+    // 1. The application.
+    let app = Stencil::new(n, 64, sweeps);
+    let program = app.build_program(&board);
+    println!(
+        "stencil {n}x{n}, {sweeps} sweeps -> {} tasks of kernel '{}'\n",
+        program.tasks.len(),
+        app.kernel_name()
+    );
+
+    // 2. Explore every feasible co-design, ranked by time.
+    let space = DseSpace::from_program(&program);
+    let points = explore(&program, &board, &FpgaPart::xc7z045(), &space, Objective::Time)?;
+    println!("{}", zynq_estimator::dse::render(&points, 8, Objective::Time));
+    let best = &points[0].codesign;
+
+    // 3. Simulate the winner and analyze its bottleneck like Fig. 7.
+    let res = estimate(&program, best, &board)?;
+    print!("{}", utilization_report(&res));
+    let prv = paraver::to_prv(&program, &board, &res);
+    let row = paraver::to_row(&board, &res);
+    let analysis = prv_analyze::analyze(&prv, Some(&row))?;
+    println!("\n{}", analysis.render());
+    Ok(())
+}

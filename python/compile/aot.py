@@ -1,0 +1,90 @@
+"""AOT lowering: jit + lower every Layer-2 function to HLO *text* and write
+``artifacts/<stem>.hlo.txt`` for the Rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the pinned xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` runs). Lowering is pure tracing; nothing executes here.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """(stem, fn, example_args) for every artifact the runtime loads."""
+    return [
+        # mxmBlock at the paper's two granularities (Fig. 5 sweep).
+        ("mxm64", model.mxm_block_fn, (f32(64, 64),) * 3),
+        ("mxm128", model.mxm_block_fn, (f32(128, 128),) * 3),
+        # MXU-native bf16 variant (dtype A/B study; see kernels/mxm.py).
+        ("mxm128_bf16", model.mxm_block_bf16_fn, (f32(128, 128),) * 3),
+        # Cholesky tile family, BS = 64 (Fig. 9 sweep).
+        ("dgemm64", model.gemm_fn, (f32(64, 64),) * 3),
+        ("dsyrk64", model.syrk_fn, (f32(64, 64),) * 2),
+        ("dtrsm64", model.trsm_fn, (f32(64, 64),) * 2),
+        ("dpotrf64", model.potrf_fn, (f32(64, 64),)),
+        # Stencil tile.
+        ("jacobi64", model.jacobi_fn, (f32(64, 64),) * 5),
+        # Fused L2 whole-matrix model (BlockSpec HBM->VMEM schedule demo).
+        ("matmul512", model.matmul_full, (f32(512, 512), f32(512, 512))),
+    ]
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for stem, fn, args in artifact_specs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{stem}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[stem] = {
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": [list(a.shape) for a in args],
+        }
+        print(f"  {stem:12} {len(text):>9} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    print(f"lowering artifacts to {args.out_dir} (jax {jax.__version__})")
+    lower_all(args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

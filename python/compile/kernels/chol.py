@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernels for the paper's Cholesky tile family (Fig. 4).
+
+The paper annotates dgemm / dsyrk / dtrsm with ``device(fpga,smp)`` and
+keeps dpotrf on the SMP. The artifact dtype is f32 (DESIGN.md section 1,
+substitution 3); names keep the paper's d-prefixed labels.
+
+TPU mapping (DESIGN.md section 4):
+  * dgemm / dsyrk are MXU work — one `jnp.dot` per 64x64 tile (a quarter
+    MXU pass; the paper's BS=64 granularity under-fills the systolic array
+    exactly as it under-fills a full-resources HLS datapath);
+  * dtrsm keeps its sequential column recurrence — expressed with a
+    `fori_loop` over columns inside VMEM, the analogue of the II=4 HLS
+    pipeline the fabric pays for the same dependence;
+  * dpotrf is SMP-only in the paper; its artifact exists for the runtime's
+    numeric end-to-end validation and uses an unblocked column loop.
+
+All kernels interpret=True (CPU PJRT has no Mosaic).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+# --- dgemm: C' = C - A @ B^T ------------------------------------------------
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] - jnp.dot(
+        a_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def gemm_tile(a, b, c):
+    bs = a.shape[0]
+    return pl.pallas_call(
+        _gemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b, c)
+
+
+# --- dsyrk: C' = C - A @ A^T -------------------------------------------------
+
+def _syrk_kernel(a_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] - jnp.dot(
+        a_ref[...], a_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def syrk_tile(a, c):
+    bs = a.shape[0]
+    return pl.pallas_call(
+        _syrk_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), jnp.float32),
+        interpret=INTERPRET,
+    )(a, c)
+
+
+# --- dtrsm: B' = B @ L^-T ----------------------------------------------------
+
+def _trsm_kernel(l_ref, b_ref, o_ref):
+    """Forward substitution, column by column, inside VMEM.
+
+    Solves X L^T = B. Column j of X: x_j = (b_j - sum_{i<j} X_i L[j,i]) /
+    L[j,j]. The j-loop is the sequential recurrence the fabric pipeline
+    pays II=4 for; here it serializes `bs` VMEM-resident vector ops.
+    """
+    l = l_ref[...]
+    b = b_ref[...]
+    bs = b.shape[0]
+
+    def col(j, x):
+        # acc = X[:, :j] @ L[j, :j]^T computed as a masked full matvec to
+        # keep shapes static.
+        mask = (jnp.arange(bs) < j).astype(b.dtype)
+        lj = l[j, :] * mask
+        acc = x @ lj
+        xj = (b[:, j] - acc) / l[j, j]
+        return x.at[:, j].set(xj)
+
+    o_ref[...] = lax.fori_loop(0, bs, col, jnp.zeros_like(b))
+
+
+def trsm_tile(l, b):
+    bs = b.shape[0]
+    return pl.pallas_call(
+        _trsm_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), jnp.float32),
+        interpret=INTERPRET,
+    )(l, b)
+
+
+# --- dpotrf: L = chol(A) -----------------------------------------------------
+
+def potrf_tile(a):
+    """Unblocked Cholesky via a column fori_loop (plain HLO ops only, so
+    the artifact loads in the pinned XLA runtime — no Cholesky custom
+    call). Not a Pallas kernel: the paper keeps dpotrf on the SMP, so this
+    is Layer-2 jnp used only for end-to-end numeric validation."""
+    a = jnp.asarray(a)  # numpy inputs must not be indexed with tracers
+    bs = a.shape[0]
+    idx = jnp.arange(bs)
+
+    def col(j, l):
+        # l[j, j] = sqrt(a[j, j] - sum_{k<j} l[j, k]^2)
+        mask = (idx < j).astype(a.dtype)
+        row_j = l[j, :] * mask
+        djj = jnp.sqrt(a[j, j] - row_j @ row_j)
+        # below-diagonal column j
+        sub = (l * mask[None, :]) @ row_j  # rows dot row_j over k<j
+        colj = (a[:, j] - sub) / djj
+        keep_low = (idx > j).astype(a.dtype)
+        new_col = colj * keep_low + jnp.where(idx == j, djj, 0.0)
+        return l.at[:, j].set(new_col)
+
+    return lax.fori_loop(0, bs, col, jnp.zeros_like(a))

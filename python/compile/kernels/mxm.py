@@ -1,0 +1,129 @@
+"""Layer-1 Pallas kernels for the paper's mxmBlock (Fig. 1).
+
+HARDWARE ADAPTATION (DESIGN.md section 4). The paper's kernel is HLS C for
+the Zynq fabric: BRAM-resident A/B/C tiles fed by AXI DMA, a pipelined MAC
+loop over DSP48 slices. The TPU restatement of the same insight:
+
+  * the BRAM tile becomes a **VMEM block** (`BlockSpec` keeps the operand
+    tiles resident next to the compute unit);
+  * the DSP MAC cascade becomes the **MXU** — one `jnp.dot` per tile pair
+    drives the 128x128 systolic array, so BS=128 maps 1:1 onto an MXU pass
+    while BS=64 under-fills it (the same granularity trade-off the paper
+    sweeps on the FPGA);
+  * the per-accelerator input DMA becomes the **HBM->VMEM BlockSpec
+    schedule**: in `matmul_tiled` the grid walks K and Pallas
+    double-buffers the next tile while the MXU consumes the current one —
+    the overlap the paper models as scaling input DMA channels.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and the
+real-TPU numbers are estimated analytically (DESIGN.md section 5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic lowerings.
+
+
+def _mxm_kernel(a_ref, b_ref, c_ref, o_ref):
+    """Single-tile body: O = A @ B + C, fully VMEM-resident."""
+    o_ref[...] = (
+        jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+        + c_ref[...]
+    )
+
+
+def mxm_block(a, b, c):
+    """The paper's mxmBlock as a Pallas call: ``C' = A @ B + C``.
+
+    One grid step, whole-tile BlockSpecs: for BS<=128 the full A/B/C tile
+    set fits VMEM with double-buffering headroom (3 x 64 KiB at BS=128).
+    """
+    bs = a.shape[0]
+    assert a.shape == b.shape == c.shape == (bs, bs)
+    return pl.pallas_call(
+        _mxm_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b, c)
+
+
+def _tiled_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    """Grid body for the full-matrix kernel: accumulate over the K walk.
+
+    The grid is (M/bm, N/bn, K/bk) with K innermost; `acc_ref` is VMEM
+    scratch that lives across the K steps of one (i, j) tile — the same
+    role as the HLS kernel's BRAM C tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def matmul_tiled(a, b, bm=128, bn=128, bk=128):
+    """Layer-2-facing full matmul: C = A @ B with an HBM->VMEM schedule.
+
+    BlockSpecs express exactly what the paper expressed with per-accelerator
+    DMA: which HBM tile streams into local memory at each grid step.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_tiled_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        # VMEM accumulator tile (f32), persistent across the K walk — the
+        # role the HLS kernel's BRAM C buffer plays on the fabric.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def mxm_block_bf16(a, b, c):
+    """MXU-native variant: bf16 operands, f32 accumulate.
+
+    On a real TPU this is the preferred numerics for the MXU (the systolic
+    array multiplies bf16 natively and accumulates in f32); the Zynq paper
+    has no analogue because DSP48 slices are fixed-point/float32. Exposed
+    as a separate artifact so the Rust side can A/B the dtypes.
+    """
+    bs = a.shape[0]
+
+    def kernel(a_ref, b_ref, c_ref, o_ref):
+        o_ref[...] = (
+            jnp.dot(
+                a_ref[...].astype(jnp.bfloat16),
+                b_ref[...].astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32,
+            )
+            + c_ref[...]
+        )
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b, c)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness references the Pallas kernels are validated
+against at build time (pytest + hypothesis). They are *not* lowered into
+artifacts; only the `kernels/*.py` implementations are.
+
+Tile conventions (row-major, square BS x BS, f32 unless stated):
+  * mxm_block:   C' = A @ B + C          (the paper's mxmBlock, Fig. 1)
+  * gemm_tile:   C' = C - A @ B^T        (cholesky trailing update)
+  * syrk_tile:   C' = C - A @ A^T        (cholesky diagonal update)
+  * trsm_tile:   B' = B @ L^-T           (right solve against the lower
+                                          factor's transpose)
+  * potrf_tile:  L  = cholesky(A)        (lower factor)
+  * jacobi_tile: O  = (C + N + S + W + E) / 5   (5-point blocked stencil)
+
+The paper's cholesky kernels are double precision; the compiled artifacts
+are f32 (MXU-friendly; see DESIGN.md section 1, substitution 3) and the
+oracles follow the artifact dtype.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def mxm_block(a, b, c):
+    """The paper's mxmBlock: C += A @ B."""
+    return a @ b + c
+
+
+def gemm_tile(a, b, c):
+    """Cholesky trailing-panel update: C -= A @ B^T."""
+    return c - a @ b.T
+
+
+def syrk_tile(a, c):
+    """Cholesky diagonal update: C -= A @ A^T."""
+    return c - a @ a.T
+
+
+def trsm_tile(l, b):
+    """Triangular solve B := B L^-T (right side, lower, transposed)."""
+    # Solve X L^T = B  <=>  L X^T = B^T.
+    x_t = jsl.solve_triangular(l, b.T, lower=True)
+    return x_t.T
+
+
+def potrf_tile(a):
+    """Lower Cholesky factor of an SPD tile."""
+    return jnp.linalg.cholesky(a)
+
+
+def jacobi_tile(c, n, s, w, e):
+    """Blocked 5-point Jacobi sweep body (tile-granular approximation)."""
+    return (c + n + s + w + e) / 5.0
+
+
+def make_spd(x, eps=1e-3):
+    """Turn an arbitrary square tile into a well-conditioned SPD matrix."""
+    n = x.shape[0]
+    return x @ x.T + (n + eps) * jnp.eye(n, dtype=x.dtype)
+
+
+def blocked_matmul(a, b, bs):
+    """Full blocked matmul reference (the paper's Fig. 1 driver)."""
+    n = a.shape[0]
+    assert n % bs == 0
+    nb = n // bs
+    c = jnp.zeros_like(a)
+    for k in range(nb):
+        for i in range(nb):
+            for j in range(nb):
+                ai = a[i * bs:(i + 1) * bs, k * bs:(k + 1) * bs]
+                bj = b[k * bs:(k + 1) * bs, j * bs:(j + 1) * bs]
+                cij = c[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
+                c = c.at[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs].set(
+                    mxm_block(ai, bj, cij)
+                )
+    return c

@@ -1,0 +1,96 @@
+"""Layer-2 JAX model: the application compute graphs, composed from the
+Layer-1 Pallas kernels.
+
+Everything here is build-time only. `aot.py` lowers the jitted functions to
+HLO text; the Rust runtime loads and executes the artifacts, and Python is
+never on the request path.
+
+The per-task tile functions (`mxm_block_fn`, `gemm_fn`, ...) are the units
+the Rust coordinator invokes — one artifact per OmpSs kernel, exactly
+mirroring the accelerator granularity of the paper. `matmul_full` is the
+fused whole-matrix variant used to validate the L2 composition and to
+demonstrate the HBM->VMEM BlockSpec schedule.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import chol, mxm, stencil
+
+
+# --- per-task tile functions (one artifact per OmpSs kernel) -----------------
+
+def mxm_block_fn(a, b, c):
+    """mxmBlock (Fig. 1): C' = A @ B + C. Artifact stems: mxm64 / mxm128."""
+    return (mxm.mxm_block(a, b, c),)
+
+
+def mxm_block_bf16_fn(a, b, c):
+    """bf16-multiply mxmBlock variant. Artifact stem: mxm128_bf16."""
+    return (mxm.mxm_block_bf16(a, b, c),)
+
+
+def gemm_fn(a, b, c):
+    """dgemm tile: C' = C - A @ B^T. Artifact stem: dgemm64."""
+    return (chol.gemm_tile(a, b, c),)
+
+
+def syrk_fn(a, c):
+    """dsyrk tile: C' = C - A @ A^T. Artifact stem: dsyrk64."""
+    return (chol.syrk_tile(a, c),)
+
+
+def trsm_fn(l, b):
+    """dtrsm tile: B' = B @ L^-T. Artifact stem: dtrsm64."""
+    return (chol.trsm_tile(l, b),)
+
+
+def potrf_fn(a):
+    """dpotrf tile: L = chol(A). Artifact stem: dpotrf64 (SMP-side kernel,
+    compiled for end-to-end numeric validation)."""
+    return (chol.potrf_tile(a),)
+
+
+def jacobi_fn(c, n, s, w, e):
+    """jacobiBlock tile. Artifact stem: jacobi64."""
+    return (stencil.jacobi_tile(c, n, s, w, e),)
+
+
+# --- fused whole-matrix model (L2 composition check) --------------------------
+
+def matmul_full(a, b):
+    """C = A @ B over the full matrix via the gridded Pallas kernel.
+
+    The donated-output / fusion story of DESIGN.md section 5 (L2): one
+    pallas_call, no intermediate HBM round-trips.
+    """
+    return (mxm.matmul_tiled(a, b, bm=128, bn=128, bk=128),)
+
+
+def cholesky_full(a):
+    """Blocked right-looking Cholesky over a full SPD matrix, composed from
+    the four tile kernels — validates that the L1 kernel family assembles
+    into the paper's application. Unrolled at trace time (bs fixed 64)."""
+    n = a.shape[0]
+    bs = 64
+    nb = n // bs
+    tiles = {}
+    for i in range(nb):
+        for j in range(nb):
+            tiles[(i, j)] = a[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
+    for k in range(nb):
+        for j in range(k):
+            tiles[(k, k)] = chol.syrk_tile(tiles[(k, j)], tiles[(k, k)])
+        tiles[(k, k)] = chol.potrf_tile(tiles[(k, k)])
+        for i in range(k + 1, nb):
+            for j in range(k):
+                tiles[(i, k)] = chol.gemm_tile(
+                    tiles[(i, j)], tiles[(k, j)], tiles[(i, k)]
+                )
+        for i in range(k + 1, nb):
+            tiles[(i, k)] = chol.trsm_tile(tiles[(k, k)], tiles[(i, k)])
+    rows = [
+        jnp.concatenate([tiles[(i, j)] if j <= i else jnp.zeros((bs, bs), a.dtype)
+                         for j in range(nb)], axis=1)
+        for i in range(nb)
+    ]
+    return (jnp.concatenate(rows, axis=0),)

@@ -1,0 +1,150 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; fixed-seed cases pin the
+paper's exact granularities (64, 128).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chol, mxm, ref, stencil
+
+RTOL = 1e-4
+ATOL = 1e-4
+
+# Tile sizes: the paper's granularities plus smaller powers of two to sweep
+# shape handling. Hypothesis draws from these.
+SIZES = [4, 8, 16, 32, 64, 128]
+
+
+def tiles(draw, n_tiles, bs, lo=-2.0, hi=2.0, seed=None):
+    rng = np.random.default_rng(seed)
+    return [rng.uniform(lo, hi, size=(bs, bs)).astype(np.float32) for _ in range(n_tiles)]
+
+
+@st.composite
+def tile_case(draw, n_tiles):
+    bs = draw(st.sampled_from(SIZES))
+    seed = draw(st.integers(0, 2**32 - 1))
+    return bs, tiles(draw, n_tiles, bs, seed=seed)
+
+
+@given(tile_case(3))
+@settings(max_examples=25, deadline=None)
+def test_mxm_block_matches_ref(case):
+    bs, (a, b, c) = case
+    out = mxm.mxm_block(a, b, c)
+    expect = ref.mxm_block(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+
+@given(tile_case(3))
+@settings(max_examples=25, deadline=None)
+def test_gemm_tile_matches_ref(case):
+    bs, (a, b, c) = case
+    out = chol.gemm_tile(a, b, c)
+    expect = ref.gemm_tile(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+
+@given(tile_case(2))
+@settings(max_examples=25, deadline=None)
+def test_syrk_tile_matches_ref(case):
+    bs, (a, c) = case
+    out = chol.syrk_tile(a, c)
+    expect = ref.syrk_tile(jnp.asarray(a), jnp.asarray(c))
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+
+@given(tile_case(2))
+@settings(max_examples=15, deadline=None)
+def test_trsm_tile_matches_ref(case):
+    bs, (x, b) = case
+    # Build a well-conditioned lower-triangular factor.
+    l = np.asarray(ref.potrf_tile(ref.make_spd(jnp.asarray(x))))
+    out = chol.trsm_tile(l, b)
+    expect = ref.trsm_tile(jnp.asarray(l), jnp.asarray(b))
+    np.testing.assert_allclose(out, expect, rtol=5e-3, atol=5e-3)
+    # And the defining property: out @ l.T == b.
+    np.testing.assert_allclose(np.asarray(out) @ l.T, b, rtol=5e-3, atol=5e-3)
+
+
+@given(tile_case(1))
+@settings(max_examples=15, deadline=None)
+def test_potrf_tile_matches_ref(case):
+    bs, (x,) = case
+    a = np.asarray(ref.make_spd(jnp.asarray(x)))
+    out = np.asarray(chol.potrf_tile(a))
+    expect = np.asarray(ref.potrf_tile(jnp.asarray(a)))
+    np.testing.assert_allclose(out, expect, rtol=5e-3, atol=5e-3)
+    # Lower-triangular and reconstructs A.
+    assert np.allclose(np.triu(out, 1), 0.0)
+    np.testing.assert_allclose(out @ out.T, a, rtol=5e-3, atol=5e-3)
+
+
+@given(tile_case(5))
+@settings(max_examples=25, deadline=None)
+def test_jacobi_tile_matches_ref(case):
+    bs, ts = case
+    out = stencil.jacobi_tile(*ts)
+    expect = ref.jacobi_tile(*[jnp.asarray(t) for t in ts])
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bs", [64, 128])
+def test_paper_granularities_exact(bs):
+    rng = np.random.default_rng(7)
+    a, b, c = (rng.standard_normal((bs, bs)).astype(np.float32) for _ in range(3))
+    out = mxm.mxm_block(a, b, c)
+    np.testing.assert_allclose(out, a @ b + c, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(256, 256, 256), (512, 256, 128)])
+def test_matmul_tiled_full(shape):
+    m, n, k = shape
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out = mxm.matmul_tiled(a, b, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-2)
+
+
+def test_blocked_matmul_ref_consistent():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((128, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 128)).astype(np.float32)
+    out = ref.blocked_matmul(jnp.asarray(a), jnp.asarray(b), 64)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-2)
+
+
+def test_bf16_variant_close_to_f32():
+    """bf16 multiply / f32 accumulate: ~3 decimal digits of mantissa, so
+    the tile result stays within a loose relative tolerance of f32."""
+    rng = np.random.default_rng(21)
+    bs = 64
+    a, b, c = (rng.standard_normal((bs, bs)).astype(np.float32) for _ in range(3))
+    out = mxm.mxm_block_bf16(a, b, c)
+    expect = a @ b + c
+    err = np.abs(np.asarray(out) - expect)
+    scale = np.abs(expect) + 1.0
+    assert np.max(err / scale) < 0.1, np.max(err / scale)
+
+
+@given(
+    st.sampled_from([64, 128, 256]),
+    st.sampled_from([64, 128]),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=8, deadline=None)
+def test_matmul_tiled_block_size_sweep(n, blk, seed):
+    """The gridded kernel must be correct for every (matrix, block) combo
+    the BlockSpec schedule can express."""
+    if n % blk != 0:
+        return
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    out = mxm.matmul_tiled(a, b, bm=blk, bn=blk, bk=blk)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=5e-2)

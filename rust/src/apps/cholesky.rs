@@ -1,0 +1,316 @@
+//! Tiled Cholesky decomposition — the paper's Fig. 4 application.
+//!
+//! ```c
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]A) inout([BS*BS]C)
+//! void dsyrk(double *A, double *C, int BS);
+//! #pragma omp task inout([BS*BS]A)                 // SMP only!
+//! void dpotrf(double *A, int t, int BS);
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]A) inout([BS*BS]B)
+//! void dtrsm(double *A, double *B, int t, int BS);
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]A,[BS*BS]B) inout([BS*BS]C)
+//! void dgemm(double *A, double *B, double *C, int t, int BS);
+//!
+//! void chol_ll(double **AA, int t, int NB, int BS) {
+//!   for (k = 0; k < NB; k++) {
+//!     for (j = 0; j < k; j++)  dsyrk(AA[j*NB+k], AA[k*NB+k], BS);
+//!     dpotrf(AA[k*NB+k], t, BS);
+//!     for (i = k+1; i < NB; i++)
+//!       for (j = 0; j < k; j++)
+//!         dgemm(AA[j*NB+i], AA[j*NB+k], AA[k*NB+i], t, BS);
+//!     for (i = k+1; i < NB; i++) dtrsm(AA[k*NB+k], AA[k*NB+i], t, BS);
+//!   }
+//! }
+//! ```
+//!
+//! Three of the four kernels are annotated for SMP *and* FPGA; `dpotrf` is
+//! SMP-only ("the fourth one has not been considered to be mapped to the
+//! FPGA by the programmer", §V). The paper's experiment is double
+//! precision with 64×64 blocks; the complex interleaved dependency graph
+//! (Fig. 8) is exactly what makes run-time analysis necessary.
+
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::task::{
+    Dep, KernelDecl, KernelProfile, TaskProgram, Targets,
+};
+
+use super::{smp_cycles_model, ExperimentSet};
+
+/// "Full resources" unroll: the accelerator maximizes fabric usage and
+/// nothing else fits (§VI's FR-dgemm / FR-dsyrk / FR-dtrsm variants).
+pub const UNROLL_FR: u32 = 44;
+/// Pair unroll: two accelerators of this size fit together.
+pub const UNROLL_PAIR: u32 = 16;
+
+const A_BASE: u64 = 0x4000_0000;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Cholesky {
+    /// Matrix dimension (elements). 512 in the reproduction runs.
+    pub n: u64,
+    /// Block dimension — fixed at 64 in the paper's evaluation.
+    pub bs: u64,
+}
+
+impl Cholesky {
+    pub fn new(n: u64, bs: u64) -> Self {
+        assert!(n % bs == 0, "matrix size must be a multiple of block size");
+        Self { n, bs }
+    }
+
+    pub fn nb(&self) -> u64 {
+        self.n / self.bs
+    }
+
+    fn tile_bytes(&self) -> u64 {
+        self.bs * self.bs * 8 // double precision
+    }
+
+    fn addr(&self, row: u64, col: u64) -> u64 {
+        A_BASE + (row * self.nb() + col) * self.tile_bytes()
+    }
+
+    /// Kernel profiles. FLOP counts are the standard ones for BS×BS tiles;
+    /// `inner_trip` is the pipelined-loop iteration count HLS sees.
+    pub fn profiles(&self) -> [(&'static str, Targets, KernelProfile); 4] {
+        let bs = self.bs;
+        let tile = self.tile_bytes();
+        [
+            (
+                "dgemm",
+                Targets::BOTH,
+                KernelProfile {
+                    flops: 2 * bs * bs * bs,
+                    inner_trip: bs * bs * bs,
+                    in_bytes: 3 * tile, // A, B in + C inout
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: false,
+                },
+            ),
+            (
+                "dsyrk",
+                Targets::BOTH,
+                KernelProfile {
+                    flops: bs * bs * bs,
+                    inner_trip: bs * bs * bs / 2,
+                    in_bytes: 2 * tile, // A in + C inout
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: false,
+                },
+            ),
+            (
+                "dtrsm",
+                Targets::BOTH,
+                KernelProfile {
+                    flops: bs * bs * bs,
+                    inner_trip: bs * bs * bs / 2,
+                    in_bytes: 2 * tile, // A in + B inout
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: true, // triangular solve: division recurrence
+                },
+            ),
+            (
+                "dpotrf",
+                Targets::SMP, // not mapped to the FPGA by the programmer
+                KernelProfile {
+                    flops: bs * bs * bs / 3,
+                    inner_trip: bs * bs * bs / 6,
+                    in_bytes: tile,
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: true, // sqrt + division on the diagonal
+                },
+            ),
+        ]
+    }
+
+    pub fn build_program(&self, board: &BoardConfig) -> TaskProgram {
+        let mut p = TaskProgram::new(&format!("cholesky{}-bs{}", self.n, self.bs));
+        let mut ids = [0u16; 4];
+        let mut cycles = [0u64; 4];
+        for (i, (name, targets, profile)) in self.profiles().into_iter().enumerate() {
+            cycles[i] = smp_cycles_model(&profile, board);
+            ids[i] = p.add_kernel(KernelDecl {
+                name: name.to_string(),
+                targets,
+                profile,
+            });
+        }
+        let [dgemm, dsyrk, dtrsm, dpotrf] = [ids[0], ids[1], ids[2], ids[3]];
+        let [c_gemm, c_syrk, c_trsm, c_potrf] = [cycles[0], cycles[1], cycles[2], cycles[3]];
+        let nb = self.nb();
+        let tb = self.tile_bytes();
+        for k in 0..nb {
+            for j in 0..k {
+                // dsyrk(AA[j*NB+k] in, AA[k*NB+k] inout)
+                p.add_task(
+                    dsyrk,
+                    c_syrk,
+                    vec![
+                        Dep::input(self.addr(j, k), tb),
+                        Dep::inout(self.addr(k, k), tb),
+                    ],
+                );
+            }
+            // dpotrf(AA[k*NB+k] inout)
+            p.add_task(dpotrf, c_potrf, vec![Dep::inout(self.addr(k, k), tb)]);
+            for i in (k + 1)..nb {
+                for j in 0..k {
+                    // dgemm(AA[j*NB+i] in, AA[j*NB+k] in, AA[k*NB+i] inout)
+                    p.add_task(
+                        dgemm,
+                        c_gemm,
+                        vec![
+                            Dep::input(self.addr(j, i), tb),
+                            Dep::input(self.addr(j, k), tb),
+                            Dep::inout(self.addr(k, i), tb),
+                        ],
+                    );
+                }
+            }
+            for i in (k + 1)..nb {
+                // dtrsm(AA[k*NB+k] in, AA[k*NB+i] inout)
+                p.add_task(
+                    dtrsm,
+                    c_trsm,
+                    vec![
+                        Dep::input(self.addr(k, k), tb),
+                        Dep::inout(self.addr(k, i), tb),
+                    ],
+                );
+            }
+        }
+        p
+    }
+}
+
+/// The six co-designs of Fig. 9: three "full resources" single-accelerator
+/// variants and the three feasible two-accelerator combinations of the
+/// FPGA-annotated kernels (dgemm, dsyrk, dtrsm); dpotrf always on SMP.
+pub fn fig9_codesigns() -> Vec<CoDesign> {
+    vec![
+        CoDesign::new("FR-dgemm").with_accel("dgemm", UNROLL_FR),
+        CoDesign::new("FR-dsyrk").with_accel("dsyrk", UNROLL_FR),
+        CoDesign::new("FR-dtrsm").with_accel("dtrsm", UNROLL_FR),
+        CoDesign::new("dgemm+dgemm")
+            .with_accel("dgemm", UNROLL_PAIR)
+            .with_accel("dgemm", UNROLL_PAIR),
+        CoDesign::new("dgemm+dsyrk")
+            .with_accel("dgemm", UNROLL_PAIR)
+            .with_accel("dsyrk", UNROLL_PAIR),
+        CoDesign::new("dgemm+dtrsm")
+            .with_accel("dgemm", UNROLL_PAIR)
+            .with_accel("dtrsm", UNROLL_PAIR),
+    ]
+}
+
+pub fn fig9_experiment() -> ExperimentSet {
+    ExperimentSet {
+        app: "cholesky".into(),
+        codesigns: fig9_codesigns(),
+        baseline: "".into(), // normalized to the measured slowest
+    }
+}
+
+/// Expected task-instance counts for NB blocks (closed forms).
+pub fn expected_counts(nb: u64) -> (u64, u64, u64, u64) {
+    let dpotrf = nb;
+    let dsyrk = nb * (nb - 1) / 2;
+    let dtrsm = nb * (nb - 1) / 2;
+    // sum_k k*(nb-k-1)
+    let dgemm: u64 = (0..nb).map(|k| k * (nb - k - 1)).sum();
+    (dgemm, dsyrk, dtrsm, dpotrf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::deps::DepGraph;
+
+    #[test]
+    fn task_counts_match_closed_form() {
+        let b = BoardConfig::zynq706();
+        let app = Cholesky::new(512, 64); // NB = 8
+        let p = app.build_program(&b);
+        let h = p.instance_histogram();
+        let (g, s, t, pf) = expected_counts(8);
+        assert_eq!(h["dgemm"] as u64, g);
+        assert_eq!(h["dsyrk"] as u64, s);
+        assert_eq!(h["dtrsm"] as u64, t);
+        assert_eq!(h["dpotrf"] as u64, pf);
+        assert_eq!(g, 56);
+        assert_eq!(s, 28);
+        assert!(p.validate().is_empty());
+    }
+
+    #[test]
+    fn dpotrf_is_smp_only() {
+        let b = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&b);
+        let k = p.kernel_id("dpotrf").unwrap();
+        assert!(p.kernel(k).targets.smp);
+        assert!(!p.kernel(k).targets.fpga);
+    }
+
+    #[test]
+    fn fig8_graph_nb4_structure() {
+        // Fig. 8 shows the NB=4 dependency graph: potrf(0) -> 3 trsm ->
+        // gemms/syrks of later panels, etc.
+        let b = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&b);
+        let g = DepGraph::build(&p);
+        assert!(g.respects_program_order());
+        // First task (k=0) is dpotrf on the first diagonal block; it is a
+        // root.
+        assert!(g.roots().contains(&0));
+        // The graph is deep: at least 3 levels per panel times NB-ish.
+        assert!(g.depth() >= 7, "depth = {}", g.depth());
+        // dgemm count for NB=4 is 0+2+2... sum k(nb-k-1) for nb=4: 0*3 +
+        // 1*2 + 2*1 + 3*0 = 4
+        assert_eq!(expected_counts(4).0, 4);
+    }
+
+    #[test]
+    fn dependency_chain_potrf_trsm() {
+        // dpotrf(k,k) must precede every dtrsm of panel k (reads A[k,k]).
+        let b = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&b);
+        let g = DepGraph::build(&p);
+        let potrf0 = 0u32; // first task at k=0
+        let succs = &g.succs[potrf0 as usize];
+        // NB-1 = 3 dtrsm tasks read the k=0 diagonal.
+        assert!(succs.len() >= 3, "potrf successors: {succs:?}");
+    }
+
+    #[test]
+    fn fr_variants_exclusive_pairs_feasible() {
+        use crate::hls::{CostModel, FpgaPart};
+        let b = BoardConfig::zynq706();
+        let cm = CostModel::from_board(&b);
+        let part = FpgaPart::xc7z045();
+        let app = Cholesky::new(512, 64);
+        let gemm = &app.profiles()[0].2;
+        let fr = cm.estimate("dgemm", gemm, UNROLL_FR).resources;
+        let pair = cm.estimate("dgemm", gemm, UNROLL_PAIR).resources;
+        assert!(part.fits(&[fr]), "FR variant must fit alone");
+        assert!(!part.fits(&[fr, pair]), "FR leaves no room for a second accel");
+        assert!(part.fits(&[pair, pair]), "two pair variants must fit");
+    }
+
+    #[test]
+    fn fig9_set_is_complete() {
+        let cds = fig9_codesigns();
+        assert_eq!(cds.len(), 6);
+        assert_eq!(cds.iter().filter(|c| c.accels.len() == 1).count(), 3);
+        assert_eq!(cds.iter().filter(|c| c.accels.len() == 2).count(), 3);
+        // every pair includes dgemm (the paper's combinations)
+        for cd in cds.iter().filter(|c| c.accels.len() == 2) {
+            assert!(cd.accels.iter().any(|a| a.kernel == "dgemm"));
+        }
+    }
+}

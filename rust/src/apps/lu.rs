@@ -1,0 +1,274 @@
+//! Tiled LU decomposition (no pivoting) — a fourth application, exercising
+//! yet another dependence shape: the right-looking LU panel graph has both
+//! cholesky-style panel chains *and* matmul-style trailing updates, with a
+//! row/column asymmetry cholesky lacks.
+//!
+//! Kernel family (standard tiled LU):
+//! ```c
+//! #pragma omp task inout([BS*BS]A)                       // SMP only
+//! void ludiag(double *A, int BS);                        // A = L*U in place
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]D) inout([BS*BS]A)
+//! void trsm_row(double *D, double *A, int BS);           // A = L^-1 A
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]D) inout([BS*BS]A)
+//! void trsm_col(double *D, double *A, int BS);           // A = A U^-1
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]L,[BS*BS]U) inout([BS*BS]A)
+//! void lugemm(double *L, double *U, double *A, int BS);  // A -= L*U
+//! ```
+//!
+//! Like the paper's cholesky, the diagonal factorization stays on the SMP
+//! (divisions + no parallelism) and the three bulk kernels are FPGA
+//! candidates.
+
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::task::{Dep, KernelDecl, KernelProfile, TaskProgram, Targets};
+
+use super::smp_cycles_model;
+
+const A_BASE: u64 = 0x9000_0000;
+
+/// Full-resource and pair unrolls mirror the cholesky study.
+pub const UNROLL_FR: u32 = 44;
+pub const UNROLL_PAIR: u32 = 16;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Lu {
+    pub n: u64,
+    pub bs: u64,
+}
+
+impl Lu {
+    pub fn new(n: u64, bs: u64) -> Self {
+        assert!(n % bs == 0);
+        Self { n, bs }
+    }
+
+    pub fn nb(&self) -> u64 {
+        self.n / self.bs
+    }
+
+    fn tile_bytes(&self) -> u64 {
+        self.bs * self.bs * 8
+    }
+
+    fn addr(&self, row: u64, col: u64) -> u64 {
+        A_BASE + (row * self.nb() + col) * self.tile_bytes()
+    }
+
+    pub fn profiles(&self) -> [(&'static str, Targets, KernelProfile); 4] {
+        let bs = self.bs;
+        let tile = self.tile_bytes();
+        [
+            (
+                "lugemm",
+                Targets::BOTH,
+                KernelProfile {
+                    flops: 2 * bs * bs * bs,
+                    inner_trip: bs * bs * bs,
+                    in_bytes: 3 * tile,
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: false,
+                },
+            ),
+            (
+                "trsm_row",
+                Targets::BOTH,
+                KernelProfile {
+                    flops: bs * bs * bs,
+                    inner_trip: bs * bs * bs / 2,
+                    in_bytes: 2 * tile,
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: false, // unit-lower solve: no division
+                },
+            ),
+            (
+                "trsm_col",
+                Targets::BOTH,
+                KernelProfile {
+                    flops: bs * bs * bs,
+                    inner_trip: bs * bs * bs / 2,
+                    in_bytes: 2 * tile,
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: true, // divides by U's diagonal
+                },
+            ),
+            (
+                "ludiag",
+                Targets::SMP,
+                KernelProfile {
+                    flops: 2 * bs * bs * bs / 3,
+                    inner_trip: bs * bs * bs / 3,
+                    in_bytes: tile,
+                    out_bytes: tile,
+                    dtype_bytes: 8,
+                    divsqrt: true,
+                },
+            ),
+        ]
+    }
+
+    pub fn build_program(&self, board: &BoardConfig) -> TaskProgram {
+        let mut p = TaskProgram::new(&format!("lu{}-bs{}", self.n, self.bs));
+        let mut ids = [0u16; 4];
+        let mut cycles = [0u64; 4];
+        for (i, (name, targets, profile)) in self.profiles().into_iter().enumerate() {
+            cycles[i] = smp_cycles_model(&profile, board);
+            ids[i] = p.add_kernel(KernelDecl {
+                name: name.to_string(),
+                targets,
+                profile,
+            });
+        }
+        let [gemm, trow, tcol, diag] = ids;
+        let [c_gemm, c_trow, c_tcol, c_diag] = cycles;
+        let nb = self.nb();
+        let tb = self.tile_bytes();
+        for k in 0..nb {
+            p.add_task(diag, c_diag, vec![Dep::inout(self.addr(k, k), tb)]);
+            for j in (k + 1)..nb {
+                // row panel: A[k][j] = L(k,k)^-1 A[k][j]
+                p.add_task(
+                    trow,
+                    c_trow,
+                    vec![
+                        Dep::input(self.addr(k, k), tb),
+                        Dep::inout(self.addr(k, j), tb),
+                    ],
+                );
+            }
+            for i in (k + 1)..nb {
+                // column panel: A[i][k] = A[i][k] U(k,k)^-1
+                p.add_task(
+                    tcol,
+                    c_tcol,
+                    vec![
+                        Dep::input(self.addr(k, k), tb),
+                        Dep::inout(self.addr(i, k), tb),
+                    ],
+                );
+            }
+            for i in (k + 1)..nb {
+                for j in (k + 1)..nb {
+                    // trailing update: A[i][j] -= A[i][k] * A[k][j]
+                    p.add_task(
+                        gemm,
+                        c_gemm,
+                        vec![
+                            Dep::input(self.addr(i, k), tb),
+                            Dep::input(self.addr(k, j), tb),
+                            Dep::inout(self.addr(i, j), tb),
+                        ],
+                    );
+                }
+            }
+        }
+        p
+    }
+}
+
+/// Co-design set analogous to Fig. 9 for the LU kernel family.
+pub fn study_codesigns() -> Vec<CoDesign> {
+    vec![
+        CoDesign::new("FR-lugemm").with_accel("lugemm", UNROLL_FR),
+        CoDesign::new("FR-trsm_row").with_accel("trsm_row", UNROLL_FR),
+        CoDesign::new("FR-trsm_col").with_accel("trsm_col", UNROLL_FR),
+        CoDesign::new("lugemm+trsm_row")
+            .with_accel("lugemm", UNROLL_PAIR)
+            .with_accel("trsm_row", UNROLL_PAIR),
+        CoDesign::new("lugemm+trsm_col")
+            .with_accel("lugemm", UNROLL_PAIR)
+            .with_accel("trsm_col", UNROLL_PAIR),
+        CoDesign::new("lugemm+lugemm")
+            .with_accel("lugemm", UNROLL_PAIR)
+            .with_accel("lugemm", UNROLL_PAIR),
+    ]
+}
+
+/// Closed-form instance counts for NB blocks:
+/// (lugemm, trsm_row, trsm_col, ludiag).
+pub fn expected_counts(nb: u64) -> (u64, u64, u64, u64) {
+    let diag = nb;
+    let trow: u64 = (0..nb).map(|k| nb - k - 1).sum();
+    let tcol = trow;
+    let gemm: u64 = (0..nb).map(|k| (nb - k - 1) * (nb - k - 1)).sum();
+    (gemm, trow, tcol, diag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::deps::DepGraph;
+    use crate::sim::{emulate, estimate};
+
+    #[test]
+    fn counts_match_closed_form() {
+        let b = BoardConfig::zynq706();
+        let app = Lu::new(512, 64); // NB = 8
+        let p = app.build_program(&b);
+        let h = p.instance_histogram();
+        let (g, tr, tc, d) = expected_counts(8);
+        assert_eq!(h["lugemm"] as u64, g);
+        assert_eq!(h["trsm_row"] as u64, tr);
+        assert_eq!(h["trsm_col"] as u64, tc);
+        assert_eq!(h["ludiag"] as u64, d);
+        assert_eq!(g, 140); // sum of squares 49+36+25+16+9+4+1
+        assert!(p.validate().is_empty());
+    }
+
+    #[test]
+    fn graph_structure() {
+        let b = BoardConfig::zynq706();
+        let p = Lu::new(256, 64).build_program(&b); // NB = 4
+        let g = DepGraph::build(&p);
+        assert!(g.respects_program_order());
+        // Panel chain: diag -> trsm -> gemm per k, serialized across k on
+        // the trailing submatrix: depth >= 3 * NB - 2.
+        assert!(g.depth() >= 10, "depth {}", g.depth());
+        // First diag is the only root (everything depends on panel 0
+        // through the trailing update chain... row/col panels of k=0 do).
+        assert!(g.roots().contains(&0));
+    }
+
+    #[test]
+    fn study_runs_and_gemm_pairs_win() {
+        let b = BoardConfig::zynq706();
+        let app = Lu::new(512, 64);
+        let p = app.build_program(&b);
+        let mut results = Vec::new();
+        for cd in study_codesigns() {
+            let est = estimate(&p, &cd, &b).unwrap();
+            assert!(est.validate().is_empty());
+            results.push((cd.name.clone(), est.makespan_ms()));
+        }
+        // lugemm dominates the FLOPs: every pair containing it must beat
+        // the FR variants of the small kernels.
+        let ms = |name: &str| results.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!(ms("FR-lugemm") < ms("FR-trsm_row"));
+        assert!(ms("FR-lugemm") < ms("FR-trsm_col"));
+        let best = results
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(best.0.contains("lugemm"), "winner: {}", best.0);
+    }
+
+    #[test]
+    fn estimator_and_board_agree_on_trends() {
+        let b = BoardConfig::zynq706();
+        let app = Lu::new(512, 64);
+        let p = app.build_program(&b);
+        let mut est_v = Vec::new();
+        let mut brd_v = Vec::new();
+        for cd in study_codesigns() {
+            est_v.push(estimate(&p, &cd, &b).unwrap().makespan_ms());
+            brd_v.push(emulate(&p, &cd, &b).unwrap().makespan_ms());
+        }
+        let tau = crate::util::kendall_tau(&est_v, &brd_v);
+        assert!(tau >= 0.7, "tau {tau}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Tiled matrix multiplication — the paper's Fig. 1 application.
+//!
+//! ```c
+//! #pragma omp target device(fpga,smp)
+//! #pragma omp task in([BS*BS]A,[BS*BS]B) inout([BS*BS]C)
+//! void mxmBlock(REAL *A, REAL *B, REAL *C);
+//!
+//! void matmul(...) {
+//!   for (k = 0; k < NB; k++)
+//!     for (i = 0; i < NB; i++)
+//!       for (j = 0; j < NB; j++)
+//!         mxmBlock(AA[i*NB+k], BB[k*NB+j], CC[i*NB+j]);
+//! }
+//! ```
+//!
+//! The kernel is single-precision (`REAL = float`, §V). Granularities
+//! evaluated by the paper: 64×64 and 128×128 blocks over the same matrix.
+
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::task::{
+    Dep, KernelDecl, KernelProfile, TaskProgram, Targets,
+};
+
+use super::{smp_cycles_model, ExperimentSet};
+
+/// Canonical HLS unroll for the 64-block accelerator (two fit on Z-7045).
+pub const UNROLL_64: u32 = 32;
+/// Canonical HLS unroll for the 128-block accelerator (only one fits —
+/// §VI feasibility statement; checked in `hls::cost_model` tests).
+pub const UNROLL_128: u32 = 128;
+
+/// Base heap addresses (disjoint per matrix, as malloc would give).
+const A_BASE: u64 = 0x1000_0000;
+const B_BASE: u64 = 0x2000_0000;
+const C_BASE: u64 = 0x3000_0000;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Matmul {
+    /// Matrix dimension (elements). The paper's runs use 512.
+    pub n: u64,
+    /// Block (tile) dimension: 64 or 128 in the paper.
+    pub bs: u64,
+}
+
+impl Matmul {
+    pub fn new(n: u64, bs: u64) -> Self {
+        assert!(n % bs == 0, "matrix size must be a multiple of block size");
+        Self { n, bs }
+    }
+
+    pub fn nb(&self) -> u64 {
+        self.n / self.bs
+    }
+
+    pub fn kernel_name(&self) -> String {
+        format!("mxm{}", self.bs)
+    }
+
+    pub fn profile(&self) -> KernelProfile {
+        let bs = self.bs;
+        KernelProfile {
+            flops: 2 * bs * bs * bs,
+            inner_trip: bs * bs * bs,
+            in_bytes: 3 * bs * bs * 4, // A, B in + C inout (f32)
+            out_bytes: bs * bs * 4,    // C out
+            dtype_bytes: 4,
+            divsqrt: false,
+        }
+    }
+
+    fn tile_bytes(&self) -> u64 {
+        self.bs * self.bs * 4
+    }
+
+    fn block_addr(&self, base: u64, row: u64, col: u64) -> u64 {
+        base + (row * self.nb() + col) * self.tile_bytes()
+    }
+
+    /// Build the task program — the moral equivalent of running the
+    /// instrumented sequential binary (basic trace of §IV).
+    pub fn build_program(&self, board: &BoardConfig) -> TaskProgram {
+        let mut p = TaskProgram::new(&format!("matmul{}-bs{}", self.n, self.bs));
+        let profile = self.profile();
+        let smp_cycles = smp_cycles_model(&profile, board);
+        let k_id = p.add_kernel(KernelDecl {
+            name: self.kernel_name(),
+            targets: Targets::BOTH,
+            profile,
+        });
+        let nb = self.nb();
+        let tb = self.tile_bytes();
+        for k in 0..nb {
+            for i in 0..nb {
+                for j in 0..nb {
+                    p.add_task(
+                        k_id,
+                        smp_cycles,
+                        vec![
+                            Dep::input(self.block_addr(A_BASE, i, k), tb),
+                            Dep::input(self.block_addr(B_BASE, k, j), tb),
+                            Dep::inout(self.block_addr(C_BASE, i, j), tb),
+                        ],
+                    );
+                }
+            }
+        }
+        p
+    }
+}
+
+/// The six co-designs of Fig. 5. All operate on the same 512×512 matrix;
+/// the task granularity (64 vs 128) is an app-level choice, so the sweep
+/// harness pairs each co-design with the right [`Matmul`] instance via
+/// [`fig5_cases`].
+pub fn fig5_codesigns() -> Vec<CoDesign> {
+    vec![
+        CoDesign::new("1acc 64").with_accel("mxm64", UNROLL_64),
+        CoDesign::new("2acc 64")
+            .with_accel("mxm64", UNROLL_64)
+            .with_accel("mxm64", UNROLL_64),
+        CoDesign::new("1acc 128").with_accel("mxm128", UNROLL_128),
+        CoDesign::new("1acc 64 + smp")
+            .with_accel("mxm64", UNROLL_64)
+            .with_smp("mxm64"),
+        CoDesign::new("2acc 64 + smp")
+            .with_accel("mxm64", UNROLL_64)
+            .with_accel("mxm64", UNROLL_64)
+            .with_smp("mxm64"),
+        CoDesign::new("1acc 128 + smp")
+            .with_accel("mxm128", UNROLL_128)
+            .with_smp("mxm128"),
+    ]
+}
+
+/// (co-design, app instance) pairs for the Fig. 5 sweep on an `n`-sized
+/// matrix (the paper: 512).
+pub fn fig5_cases(n: u64) -> Vec<(CoDesign, Matmul)> {
+    fig5_codesigns()
+        .into_iter()
+        .map(|cd| {
+            let bs = if cd.accels[0].kernel == "mxm128" { 128 } else { 64 };
+            (cd, Matmul::new(n, bs))
+        })
+        .collect()
+}
+
+pub fn fig5_experiment() -> ExperimentSet {
+    ExperimentSet {
+        app: "matmul".into(),
+        codesigns: fig5_codesigns(),
+        baseline: "1acc 128 + smp".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::deps::DepGraph;
+
+    #[test]
+    fn task_count_is_nb_cubed() {
+        let b = BoardConfig::zynq706();
+        let app = Matmul::new(512, 64);
+        assert_eq!(app.nb(), 8);
+        let p = app.build_program(&b);
+        assert_eq!(p.tasks.len(), 512);
+        assert!(p.validate().is_empty());
+    }
+
+    #[test]
+    fn dependence_structure_matches_blocked_matmul() {
+        let b = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&b); // NB = 4
+        let g = DepGraph::build(&p);
+        assert!(g.respects_program_order());
+        // Depth = NB: the accumulation chain on each C block.
+        assert_eq!(g.depth(), 4);
+        // All tasks of the first k-slice are independent.
+        assert_eq!(g.max_level_width(), 16);
+    }
+
+    #[test]
+    fn both_granularities_same_total_flops() {
+        let b = BoardConfig::zynq706();
+        let p64 = Matmul::new(512, 64).build_program(&b);
+        let p128 = Matmul::new(512, 128).build_program(&b);
+        let f64_total: u64 =
+            p64.tasks.len() as u64 * p64.kernels[0].profile.flops;
+        let f128_total: u64 =
+            p128.tasks.len() as u64 * p128.kernels[0].profile.flops;
+        assert_eq!(f64_total, f128_total);
+        assert_eq!(f64_total, 2 * 512 * 512 * 512);
+    }
+
+    #[test]
+    fn coarser_blocks_move_fewer_bytes() {
+        // The key reason 128-blocks win: halved DMA traffic.
+        let b = BoardConfig::zynq706();
+        let bytes = |bs: u64| {
+            let app = Matmul::new(512, bs);
+            let p = app.build_program(&b);
+            p.tasks.len() as u64 * app.profile().in_bytes
+        };
+        assert_eq!(bytes(64), 2 * bytes(128));
+    }
+
+    #[test]
+    fn fig5_set_is_complete() {
+        let cds = fig5_codesigns();
+        assert_eq!(cds.len(), 6);
+        let smp_variants = cds.iter().filter(|c| !c.smp_kernels.is_empty()).count();
+        assert_eq!(smp_variants, 3);
+        // No 2acc 128 (paper: infeasible).
+        assert!(!cds
+            .iter()
+            .any(|c| c.accel_count_for("mxm128") > 1));
+    }
+
+    #[test]
+    fn fig5_cases_pick_matching_granularity() {
+        for (cd, app) in fig5_cases(512) {
+            let k = &cd.accels[0].kernel;
+            assert_eq!(*k, app.kernel_name());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_divisible_size_panics() {
+        Matmul::new(500, 64);
+    }
+}

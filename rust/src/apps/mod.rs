@@ -1,0 +1,86 @@
+//! Application layer — the OmpSs-annotated programs of the paper.
+//!
+//! Each app builds a [`TaskProgram`]: the kernel declarations (the
+//! `#pragma omp target device(...)` / `#pragma omp task in/out/inout`
+//! annotations) plus the dynamic task trace the instrumented sequential
+//! execution would record. Address assignment mirrors a real heap layout so
+//! the run-time dependence tracker sees exactly the pattern Nanos++ would.
+//!
+//! * [`matmul`] — tiled matrix multiply (paper Fig. 1), BS ∈ {64, 128}.
+//! * [`cholesky`] — tiled left-looking Cholesky (paper Fig. 4), 4 kernels.
+//! * [`lu`] — tiled LU decomposition (extension app, 4 kernels).
+//! * [`stencil`] — blocked Jacobi stencil (extra domain app exercising a
+//!   halo-exchange dependence pattern the paper's intro motivates).
+
+pub mod cholesky;
+pub mod lu;
+pub mod matmul;
+pub mod stencil;
+
+use crate::config::BoardConfig;
+use crate::coordinator::task::KernelProfile;
+
+/// Model of the instrumented sequential execution's per-task ARM cycle
+/// count — the stand-in for the gettimeofday instrumentation of §V.
+/// `flops / flops_per_cycle`, de-rated for double precision and for
+/// division/sqrt-heavy kernels, matching how the A9 VFP behaves on -O3
+/// compiled loops.
+pub fn smp_cycles_model(profile: &KernelProfile, board: &BoardConfig) -> u64 {
+    let mut cycles = profile.flops as f64 / board.smp_flops_per_cycle;
+    if profile.dtype_bytes >= 8 {
+        cycles *= board.smp_dp_penalty;
+    }
+    if profile.divsqrt {
+        cycles *= board.smp_divsqrt_penalty;
+    }
+    // Capacity misses: working sets beyond the 32 KiB L1D pay an extra
+    // factor per doubling (L2/TLB pressure). This is why an SMP 128-block
+    // mxm is more than 8x an SMP 64-block mxm on the A9 — and why the
+    // paper's slowest configuration is "1acc 128 + smp".
+    let ws_kb = (profile.in_bytes + profile.out_bytes) as f64 / 1024.0;
+    if ws_kb > board.smp_l1_kb {
+        cycles *= 1.0 + board.smp_cache_alpha * (ws_kb / board.smp_l1_kb).log2();
+    }
+    cycles.round() as u64
+}
+
+/// Named co-design set for an app's paper experiment (one figure).
+pub struct ExperimentSet {
+    pub app: String,
+    pub codesigns: Vec<crate::config::CoDesign>,
+    /// Name of the configuration the paper normalizes against (slowest).
+    pub baseline: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smp_cycles_penalties_stack() {
+        let b = BoardConfig::zynq706();
+        let base = KernelProfile {
+            flops: 1_000_000,
+            inner_trip: 1,
+            in_bytes: 1,
+            out_bytes: 1,
+            dtype_bytes: 4,
+            divsqrt: false,
+        };
+        let c0 = smp_cycles_model(&base, &b);
+        assert_eq!(c0, 2_000_000); // 0.5 flops/cycle
+
+        let dp = KernelProfile {
+            dtype_bytes: 8,
+            ..base.clone()
+        };
+        assert_eq!(smp_cycles_model(&dp, &b), 3_200_000);
+
+        let hard = KernelProfile {
+            dtype_bytes: 8,
+            divsqrt: true,
+            ..base
+        };
+        assert_eq!(smp_cycles_model(&hard, &b), 7_040_000);
+    }
+}

@@ -1,0 +1,595 @@
+//! CLI implementation — argument parsing substrate plus one function per
+//! subcommand. `main.rs` is a thin dispatcher so examples, tests and
+//! benches can reuse every command programmatically.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::apps::{cholesky, lu, matmul, stencil};
+use crate::config::{AccelSpec, BoardConfig, CoDesign};
+use crate::coordinator::sched::Policy;
+use crate::coordinator::task::TaskProgram;
+use crate::experiments;
+use crate::hls::{CostModel, FpgaPart};
+use crate::metrics::{utilization_report, SpeedupTable};
+use crate::sim;
+use crate::util::fmt_secs;
+
+/// Minimal argument parser: positionals + `--key value` + `--flag`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(key) = arg.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    a.options
+                        .entry(key.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.options.entry(key.to_string()).or_default();
+                    i += 1;
+                }
+            } else {
+                a.positional.push(arg.clone());
+                i += 1;
+            }
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.first()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .get(key)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+pub fn board_from_args(args: &Args) -> anyhow::Result<BoardConfig> {
+    match args.get("board") {
+        Some(path) => BoardConfig::from_toml_file(std::path::Path::new(path)),
+        None => Ok(BoardConfig::zynq706()),
+    }
+}
+
+fn build_app_program(
+    app: &str,
+    n: u64,
+    bs: u64,
+    board: &BoardConfig,
+) -> anyhow::Result<TaskProgram> {
+    Ok(match app {
+        "matmul" => matmul::Matmul::new(n, bs).build_program(board),
+        "cholesky" => cholesky::Cholesky::new(n, bs).build_program(board),
+        "lu" => lu::Lu::new(n, bs).build_program(board),
+        "stencil" => stencil::Stencil::new(n, bs, 4).build_program(board),
+        other => anyhow::bail!("unknown app '{other}' (matmul|cholesky|lu|stencil)"),
+    })
+}
+
+pub const USAGE: &str = "zynq-estimator — coarse-grain performance estimator for Zynq-style heterogeneous systems
+
+USAGE: zynq-estimator <command> [options]
+
+COMMANDS (one per paper experiment, plus utilities):
+  sweep          --app matmul|cholesky|lu [--n 512] [--reps 10]  Fig. 5 / Fig. 9 / LU ext.
+  dma                                                           Fig. 3
+  analysis-time  --app matmul|cholesky [--n 512]                Fig. 6 / §VI productivity
+  paraver        --app matmul [--n 512] [--out out/]            Fig. 7 (.prv bundles)
+  graph          --app cholesky [--nb 4] [--out fig8.dot]       Fig. 8 (DOT)
+  estimate       --app <app> [--n N] [--bs BS] --accel k:U<u>... [--smp k]...
+                 [--policy greedy|lookahead] [--real]           one co-design
+  trace          --app <app> [--n N] [--bs BS] --out t.jsonl    dump basic trace (§IV)
+  sim-trace      --trace t.jsonl --accel k:U<u>... [--smp k]... simulate a trace file
+  hls            --kernel <name> [--bs 64] [--unroll 32]        Vivado-HLS-style report
+  dse            --app <app> [--objective time|energy|edp]      explore the co-design space
+                 [--top 15]                                     (paper §VII future work)
+  energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
+  robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
+  analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
+  lint           --trace t.jsonl                                validate a basic trace (§IV)
+  measure        [--reps 5]                                     time AOT kernels via PJRT vs model
+  cross-board    [--n 512]                                      ZC706 vs UltraScale+ decision
+  help                                                          this text
+
+COMMON OPTIONS:
+  --board <file.toml>   board description (default: built-in zynq706)
+";
+
+pub fn run(argv: &[String]) -> anyhow::Result<i32> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    let board = board_from_args(&args)?;
+    match cmd {
+        "sweep" => cmd_sweep(&args, &board),
+        "dma" => cmd_dma(&board),
+        "analysis-time" => cmd_analysis_time(&args, &board),
+        "paraver" => cmd_paraver(&args, &board),
+        "graph" => cmd_graph(&args, &board),
+        "estimate" => cmd_estimate(&args, &board),
+        "trace" => cmd_trace(&args, &board),
+        "sim-trace" => cmd_sim_trace(&args, &board),
+        "hls" => cmd_hls(&args, &board),
+        "dse" => cmd_dse(&args, &board),
+        "energy" => cmd_energy(&args, &board),
+        "robustness" => cmd_robustness(&args, &board),
+        "analyze-prv" => cmd_analyze_prv(&args),
+        "lint" => cmd_lint(&args),
+        "measure" => cmd_measure(&args, &board),
+        "cross-board" => cmd_cross_board(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let app = args.get("app").unwrap_or("matmul");
+    let n = args.u64_or("n", 512)?;
+    let reps = args.u64_or("reps", experiments::BOARD_REPS as u64)? as u32;
+    let table: SpeedupTable = match app {
+        "matmul" => experiments::fig5(n, board, reps)?,
+        "cholesky" => experiments::fig9(n, board, reps)?,
+        "lu" => experiments::lu_study(n, board, reps)?,
+        other => anyhow::bail!("sweep supports matmul|cholesky|lu, got '{other}'"),
+    };
+    let fig = match app {
+        "matmul" => "Fig. 5",
+        "cholesky" => "Fig. 9",
+        _ => "LU study (extension)",
+    };
+    println!(
+        "{}",
+        table.render(&format!("{fig}: {app} (n = {n}) — estimator vs board emulator"))
+    );
+    Ok(0)
+}
+
+fn cmd_dma(board: &BoardConfig) -> anyhow::Result<i32> {
+    println!("== Fig. 3: DMA speedup of 2 accelerators vs 1 (in/out transfers)");
+    println!(
+        "{:>10}  {:>12} {:>12}  {:>12} {:>12}",
+        "size", "in est", "in board", "out est", "out board"
+    );
+    for (label, est, brd) in experiments::fig3(board) {
+        println!(
+            "{label:>10}  {:>12.2} {:>12.2}  {:>12.2} {:>12.2}",
+            est.input_speedup, brd.input_speedup, est.output_speedup, brd.output_speedup
+        );
+    }
+    println!("(inputs scale with accelerators; outputs serialize — §IV)");
+    Ok(0)
+}
+
+fn cmd_analysis_time(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let app = args.get("app").unwrap_or("matmul");
+    let n = args.u64_or("n", 512)?;
+    let (meth, trad) = match app {
+        "matmul" => experiments::analysis_time_matmul(n, board)?,
+        "cholesky" => experiments::analysis_time_cholesky(n, board)?,
+        other => anyhow::bail!("analysis-time supports matmul|cholesky, got '{other}'"),
+    };
+    println!("== Fig. 6: analysis time, {app} configuration set (log scale in the paper)");
+    println!("  this methodology (measured):   {}", fmt_secs(meth));
+    println!("  traditional flow (modelled):   {}", fmt_secs(trad));
+    println!("  speedup: {:.0}x", trad / meth);
+    Ok(0)
+}
+
+fn cmd_paraver(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let n = args.u64_or("n", 512)?;
+    let out = PathBuf::from(args.get("out").unwrap_or("out/paraver"));
+    let stems = experiments::fig7(n, board, &out)?;
+    println!("== Fig. 7: Paraver bundles written:");
+    for s in stems {
+        println!("  {}.prv/.pcf/.row", s.display());
+    }
+    Ok(0)
+}
+
+fn cmd_graph(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let nb = args.u64_or("nb", 4)?;
+    let dot = experiments::fig8(nb, board);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &dot)?;
+            println!("wrote {path} ({} bytes) — render with `dot -Tpng`", dot.len());
+        }
+        None => println!("{dot}"),
+    }
+    Ok(0)
+}
+
+fn codesign_from_args(args: &Args) -> anyhow::Result<CoDesign> {
+    let mut cd = CoDesign::new("cli");
+    for spec in args.get_all("accel") {
+        cd.accels.push(AccelSpec::parse(spec)?);
+    }
+    for k in args.get_all("smp") {
+        cd.smp_kernels.push(k.to_string());
+    }
+    Ok(cd)
+}
+
+fn cmd_estimate(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let app = args
+        .get("app")
+        .ok_or_else(|| anyhow::anyhow!("estimate requires --app"))?;
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
+    let program = build_app_program(app, n, bs, board)?;
+    let cd = codesign_from_args(args)?;
+    let policy = match args.get("policy") {
+        None => Policy::Greedy,
+        Some(p) => Policy::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}' (greedy|lookahead)"))?,
+    };
+    let mut model = sim::EstimatorModel::new(board);
+    let res = sim::simulate(&program, &cd, board, &FpgaPart::xc7z045(), policy, &mut model)?;
+    println!("== estimator: {app} n={n} bs={bs} accels={:?} policy={}",
+        cd.accels.iter().map(|a| a.to_spec_string()).collect::<Vec<_>>(),
+        policy.as_str());
+    print!("{}", utilization_report(&res));
+    if args.has("real") {
+        let mean = sim::emulate_mean_ms(&program, &cd, board, experiments::BOARD_REPS)?;
+        println!("board emulator mean of {} runs: {mean:.3} ms", experiments::BOARD_REPS);
+    }
+    Ok(0)
+}
+
+fn cmd_trace(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let app = args
+        .get("app")
+        .ok_or_else(|| anyhow::anyhow!("trace requires --app"))?;
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("trace requires --out <file.jsonl>"))?;
+    let program = build_app_program(app, n, bs, board)?;
+    crate::trace::save(&program, std::path::Path::new(out))?;
+    println!(
+        "wrote {} tasks ({} kernels) to {out}",
+        program.tasks.len(),
+        program.kernels.len()
+    );
+    Ok(0)
+}
+
+fn cmd_sim_trace(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("sim-trace requires --trace <file.jsonl>"))?;
+    let program = crate::trace::load(std::path::Path::new(path))?;
+    let cd = codesign_from_args(args)?;
+    let res = sim::estimate(&program, &cd, board)?;
+    println!("== estimator on trace {path} ({} tasks)", program.tasks.len());
+    print!("{}", utilization_report(&res));
+    Ok(0)
+}
+
+fn cmd_hls(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let kernel = args
+        .get("kernel")
+        .ok_or_else(|| anyhow::anyhow!("hls requires --kernel <name>"))?;
+    let bs = args.u64_or("bs", 64)?;
+    let unroll = args.u64_or("unroll", 32)? as u32;
+    // Resolve the kernel profile from the app layer.
+    let profile = match kernel {
+        k if k.starts_with("mxm") => matmul::Matmul::new(bs.max(64) * 4, bs).profile(),
+        "dgemm" | "dsyrk" | "dtrsm" | "dpotrf" => {
+            let app = cholesky::Cholesky::new(bs * 4, bs);
+            app.profiles()
+                .into_iter()
+                .find(|(n, _, _)| *n == kernel)
+                .map(|(_, _, p)| p)
+                .ok_or_else(|| anyhow::anyhow!("unknown cholesky kernel"))?
+        }
+        k if k.starts_with("jacobi") => stencil::Stencil::new(bs * 4, bs, 1).profile(),
+        other => anyhow::bail!("unknown kernel '{other}'"),
+    };
+    let report = CostModel::from_board(board).estimate(kernel, &profile, unroll);
+    print!("{}", report.render());
+    let part = FpgaPart::xc7z045();
+    let u = part.utilization(&[report.resources]);
+    println!(
+        "fits {}: {} (utilization {:.0}%, {} instances fit)",
+        part.name,
+        report.resources.fits_in(&part.effective_budget()),
+        u * 100.0,
+        (1.0 / u.max(1e-9)).floor().min(16.0) as u32,
+    );
+    Ok(0)
+}
+
+fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let app = args.get("app").unwrap_or("matmul");
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
+    let top = args.u64_or("top", 15)? as usize;
+    let objective = match args.get("objective") {
+        None => crate::dse::Objective::Time,
+        Some(o) => crate::dse::Objective::parse(o)
+            .ok_or_else(|| anyhow::anyhow!("unknown objective '{o}' (time|energy|edp)"))?,
+    };
+    let program = build_app_program(app, n, bs, board)?;
+    let space = crate::dse::DseSpace::from_program(&program);
+    let points = crate::dse::explore(&program, board, &FpgaPart::xc7z045(), &space, objective)?;
+    print!("{}", crate::dse::render(&points, top, objective));
+    Ok(0)
+}
+
+fn cmd_energy(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let app = args
+        .get("app")
+        .ok_or_else(|| anyhow::anyhow!("energy requires --app"))?;
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
+    let program = build_app_program(app, n, bs, board)?;
+    let cd = codesign_from_args(args)?;
+    let res = sim::estimate(&program, &cd, board)?;
+    let cm = CostModel::from_board(board);
+    let resources: Vec<crate::hls::Resources> = cd
+        .accels
+        .iter()
+        .map(|a| {
+            let kid = program
+                .kernel_id(&a.kernel)
+                .ok_or_else(|| anyhow::anyhow!("unknown kernel '{}'", a.kernel))?;
+            Ok(cm
+                .estimate(&a.kernel, &program.kernel(kid).profile, a.unroll)
+                .resources)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let part = FpgaPart::xc7z045();
+    let util = part.utilization(&resources);
+    let e = crate::power::PowerModel::default().energy(&res, &resources, util, board.fabric_freq_mhz);
+    println!("== energy: {app} n={n}");
+    println!("  makespan:        {:.3} ms", e.makespan_s * 1e3);
+    println!("  static energy:   {:.3} J", e.static_j);
+    println!("  SMP dynamic:     {:.3} J", e.smp_dynamic_j);
+    println!("  accel dynamic:   {:.3} J", e.accel_dynamic_j);
+    println!("  DMA dynamic:     {:.3} J", e.dma_dynamic_j);
+    println!("  total:           {:.3} J  (mean {:.2} W)", e.total_j(), e.mean_power_w());
+    println!("  EDP:             {:.4} mJ*s", e.edp() * 1e3);
+    Ok(0)
+}
+
+fn cmd_robustness(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let n = args.u64_or("n", 512)?;
+    let trials = args.u64_or("trials", 25)? as u32;
+    let errs = [0.05, 0.1, 0.2, 0.3, 0.5];
+    let rows =
+        crate::experiments::robustness::matmul_decision_stability(n, board, &errs, trials, 0xB0B)?;
+    print!("{}", crate::experiments::robustness::render(&rows));
+    Ok(0)
+}
+
+fn cmd_analyze_prv(args: &Args) -> anyhow::Result<i32> {
+    let prv_path = args
+        .get("prv")
+        .ok_or_else(|| anyhow::anyhow!("analyze-prv requires --prv <file.prv>"))?;
+    let prv = std::fs::read_to_string(prv_path)?;
+    let row = match args.get("row") {
+        Some(p) => Some(std::fs::read_to_string(p)?),
+        None => {
+            // Try the sibling .row file.
+            let p = std::path::Path::new(prv_path).with_extension("row");
+            p.exists().then(|| std::fs::read_to_string(p)).transpose()?
+        }
+    };
+    let analysis = crate::trace::prv_analyze::analyze(&prv, row.as_deref())?;
+    print!("{}", analysis.render());
+    Ok(0)
+}
+
+fn cmd_lint(args: &Args) -> anyhow::Result<i32> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("lint requires --trace <file.jsonl>"))?;
+    let program = crate::trace::load(std::path::Path::new(path))?;
+    let findings = crate::trace::validate::lint(&program);
+    if findings.is_empty() {
+        println!("{path}: clean ({} tasks, {} kernels)", program.tasks.len(), program.kernels.len());
+        return Ok(0);
+    }
+    for f in &findings {
+        println!("{:?}: {}", f.severity, f.message);
+    }
+    let errors = findings
+        .iter()
+        .filter(|f| f.severity == crate::trace::validate::Severity::Error)
+        .count();
+    Ok(if errors > 0 { 1 } else { 0 })
+}
+
+fn cmd_measure(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let reps = args.u64_or("reps", 5)? as u32;
+    let rt = crate::runtime::Runtime::new(std::path::Path::new("artifacts"))
+        .map_err(|e| anyhow::anyhow!("{e:#} — run `make artifacts` first"))?;
+    // (artifact, bs, #inputs, matching app-kernel profile)
+    let chol = cholesky::Cholesky::new(512, 64);
+    let profiles = chol.profiles();
+    let prof = |n: &str| profiles.iter().find(|(k, _, _)| *k == n).unwrap().2.clone();
+    let cases: Vec<(&str, usize, usize, crate::coordinator::task::KernelProfile)> = vec![
+        ("mxm64", 64, 3, matmul::Matmul::new(512, 64).profile()),
+        ("mxm128", 128, 3, matmul::Matmul::new(512, 128).profile()),
+        ("dgemm64", 64, 3, prof("dgemm")),
+        ("dsyrk64", 64, 2, prof("dsyrk")),
+        ("dtrsm64", 64, 2, prof("dtrsm")),
+        ("dpotrf64", 64, 1, prof("dpotrf")),
+    ];
+    println!("== measured kernel times (PJRT CPU host) vs analytic ARM model ratios");
+    println!("{:>10} {:>12} {:>14} {:>14}", "kernel", "host (ms)", "host ratio", "model ratio");
+    let mut measured = Vec::new();
+    for (stem, bs, ni, profile) in &cases {
+        let ms = rt.time_kernel_ms(stem, *bs, *ni, reps)?;
+        let cyc = crate::apps::smp_cycles_model(profile, board) as f64;
+        measured.push((stem.to_string(), ms, cyc));
+    }
+    let (base_ms, base_cyc) = (measured[0].1, measured[0].2);
+    for (stem, ms, cyc) in &measured {
+        println!(
+            "{:>10} {:>12.3} {:>14.2} {:>14.2}",
+            stem,
+            ms,
+            ms / base_ms,
+            cyc / base_cyc
+        );
+    }
+    println!("(ratios are normalized to mxm64; the host is x86, so absolute times differ\n from the A9 — the paper's methodology needs only the relative costs)");
+    Ok(0)
+}
+
+fn cmd_cross_board(args: &Args) -> anyhow::Result<i32> {
+    let n = args.u64_or("n", 512)?;
+    println!("== Cross-board study: same app, different platform, different decision");
+    for (board, best, ms) in crate::experiments::cross_board_matmul(n)? {
+        println!("  {board:18} best co-design: {best:12} ({ms:.1} ms estimated)");
+    }
+    println!("(2acc 128 is infeasible on the ZC706 — feasibility is part of the decision)");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn args_parser_basics() {
+        let a = Args::parse(&argv("--app matmul --n 256 --real --accel a:U2 --accel b:U4"));
+        assert_eq!(a.get("app"), Some("matmul"));
+        assert_eq!(a.u64_or("n", 0).unwrap(), 256);
+        assert!(a.has("real"));
+        assert_eq!(a.get_all("accel"), vec!["a:U2", "b:U4"]);
+        assert_eq!(a.u64_or("missing", 7).unwrap(), 7);
+        assert!(a.u64_or("app", 0).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert_eq!(run(&argv("help")).unwrap(), 0);
+        assert_eq!(run(&argv("frobnicate")).unwrap(), 2);
+        assert_eq!(run(&[]).unwrap(), 2);
+    }
+
+    #[test]
+    fn dma_command_runs() {
+        assert_eq!(run(&argv("dma")).unwrap(), 0);
+    }
+
+    #[test]
+    fn hls_command_runs() {
+        assert_eq!(run(&argv("hls --kernel mxm128 --bs 128 --unroll 128")).unwrap(), 0);
+        assert_eq!(run(&argv("hls --kernel dtrsm --bs 64 --unroll 16")).unwrap(), 0);
+        assert!(run(&argv("hls --kernel bogus")).is_err());
+    }
+
+    #[test]
+    fn estimate_command_runs() {
+        assert_eq!(
+            run(&argv(
+                "estimate --app matmul --n 256 --bs 64 --accel mxm64:U32"
+            ))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn estimate_rejects_bad_policy() {
+        assert!(run(&argv(
+            "estimate --app matmul --n 256 --bs 64 --accel mxm64:U32 --policy bogus"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn trace_roundtrip_through_cli() {
+        let dir = std::env::temp_dir().join("zynq_cli_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let cmd = format!(
+            "trace --app cholesky --n 256 --bs 64 --out {}",
+            path.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let cmd = format!(
+            "sim-trace --trace {} --accel dgemm:U16 --accel dtrsm:U16",
+            path.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lint_command_roundtrip() {
+        let dir = std::env::temp_dir().join("zynq_cli_lint");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let cmd = format!("trace --app lu --n 256 --bs 64 --out {}", path.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let cmd = format!("lint --trace {}", path.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_lu_runs() {
+        assert_eq!(run(&argv("sweep --app lu --n 256 --reps 2")).unwrap(), 0);
+    }
+
+    #[test]
+    fn graph_command_writes_dot() {
+        let dir = std::env::temp_dir().join("zynq_cli_dot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fig8.dot");
+        let cmd = format!("graph --app cholesky --nb 4 --out {}", path.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        assert!(std::fs::read_to_string(&path).unwrap().contains("digraph"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

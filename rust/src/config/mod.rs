@@ -1,0 +1,402 @@
+//! Configuration system: board descriptions, co-design points, sweeps.
+//!
+//! A [`BoardConfig`] captures everything the cost models need to know about
+//! the target platform (the paper's: Zynq APSoC on the ZC706 board — dual
+//! Cortex-A9 @ 667 MHz + Kintex-7-class fabric). A [`CoDesign`] is one
+//! hardware/software partitioning decision: which accelerators to
+//! instantiate (kernel + unroll variant) and which kernels the runtime may
+//! *also* schedule on the SMP (the paper's "+ smp" configurations).
+//!
+//! Configs load from TOML files (see `configs/zynq706.toml`) through the
+//! `toml` submodule and every field has a calibrated default so programs
+//! also run config-free.
+
+pub mod toml;
+
+use std::path::Path;
+
+use crate::coordinator::task::KernelId;
+
+/// Parameters of the detailed board emulator — the effects §VI says the
+/// coarse-grain estimator deliberately ignores ("our estimator does not
+/// consider memory hierarchy aspects like cache coherence and pinning of
+/// memory pages, neither memory contention, etc.").
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmuConfig {
+    /// Memory/AXI-port contention: effective DMA bandwidth is divided by
+    /// `1 + alpha * (streams - 1)` when `streams` transfers are in flight.
+    pub contention_alpha: f64,
+    /// Cache-coherence / flush cost (us) charged when a buffer last touched
+    /// by a different device class is consumed (ACP/cache-flush traffic).
+    pub coherence_us: f64,
+    /// Page-pinning cost (us per KiB) charged on the first DMA touching a
+    /// buffer (Linux get_user_pages on the ZC706 environment).
+    pub pinning_us_per_kb: f64,
+    /// SMP slowdown factor from sharing the L2/DDR with active DMA streams.
+    pub smp_mem_factor: f64,
+    /// Coefficient of variation of the lognormal-ish execution jitter.
+    pub jitter_cv: f64,
+    /// Seed for the emulator's jitter stream.
+    pub seed: u64,
+}
+
+impl Default for EmuConfig {
+    fn default() -> Self {
+        Self {
+            contention_alpha: 0.12,
+            coherence_us: 18.0,
+            pinning_us_per_kb: 0.22,
+            smp_mem_factor: 0.12,
+            jitter_cv: 0.04,
+            seed: 0x5EED_2706,
+        }
+    }
+}
+
+/// Platform description consumed by both the estimator and the emulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoardConfig {
+    pub name: String,
+    /// Number of ARM cores available to the runtime (ZC706: dual A9).
+    pub smp_cores: u32,
+    pub smp_freq_mhz: f64,
+    /// Fabric clock Vivado HLS targets for the generated accelerators.
+    pub fabric_freq_mhz: f64,
+
+    // --- DMA subsystem (Fig. 3 behaviour) ---
+    /// Input transfers use per-accelerator channels and scale with the
+    /// number of accelerators (true on the ZC706 environment of the paper).
+    pub dma_in_scales: bool,
+    /// Output transfers share one channel and serialize (false = shared).
+    pub dma_out_scales: bool,
+    /// Sustained per-channel DMA bandwidth, MB/s.
+    pub dma_bw_mbps: f64,
+    /// Software cost (us) to program one DMA descriptor — the "submit"
+    /// tasks of §IV, serialized on a shared resource.
+    pub dma_submit_us: f64,
+
+    // --- OmpSs runtime costs ---
+    /// Task creation cost (us), run on the SMP regardless of where the task
+    /// executes (§IV "creation cost task").
+    pub task_creation_us: f64,
+
+    // --- SMP cost model (stands in for the instrumented gettimeofday) ---
+    /// Sustained FLOPs per cycle per A9 core for -O3 compiled kernels.
+    pub smp_flops_per_cycle: f64,
+    /// Multiplier on kernels with division/sqrt recurrences (dtrsm/dpotrf).
+    pub smp_divsqrt_penalty: f64,
+    /// Multiplier for double precision on the A9 VFP.
+    pub smp_dp_penalty: f64,
+    /// L1 data cache size per A9 core (KiB) — working sets beyond it pay
+    /// the capacity-miss factor below (why SMP 128×128 tiles are
+    /// disproportionately slower than 8× a 64×64 tile).
+    pub smp_l1_kb: f64,
+    /// Capacity-miss slowdown per doubling of working set beyond L1.
+    pub smp_cache_alpha: f64,
+
+    pub emu: EmuConfig,
+}
+
+impl BoardConfig {
+    /// The paper's platform: Zynq All-Programmable SoC on the ZC706 board
+    /// (XC7Z045: dual Cortex-A9 @ 667 MHz, Kintex-7 fabric, HLS ~125 MHz).
+    /// Timing constants are calibrated against public OmpSs@Zynq numbers,
+    /// see DESIGN.md §1 and the calibration tests in `board/`.
+    pub fn zynq706() -> Self {
+        Self {
+            name: "zynq706".into(),
+            smp_cores: 2,
+            smp_freq_mhz: 667.0,
+            fabric_freq_mhz: 125.0,
+            dma_in_scales: true,
+            dma_out_scales: false,
+            dma_bw_mbps: 400.0,
+            dma_submit_us: 4.0,
+            task_creation_us: 18.0,
+            smp_flops_per_cycle: 0.5,
+            smp_divsqrt_penalty: 2.2,
+            smp_dp_penalty: 1.6,
+            smp_l1_kb: 32.0,
+            smp_cache_alpha: 0.1,
+            emu: EmuConfig::default(),
+        }
+    }
+
+    /// Next-generation preset: Zynq UltraScale+ MPSoC (ZU9EG-class), the
+    /// platform the paper's intro points to ("also includes GPUs in the
+    /// next generation Zynq UltraScale+ MPSoC"). Quad Cortex-A53 @ 1.2 GHz
+    /// (in-order but dual-issue: ~0.8 flops/cycle sustained), faster
+    /// fabric and full-duplex high-bandwidth DMA. Pair with
+    /// `hls::FpgaPart::xczu9eg()` in sweeps.
+    pub fn zynq_ultrascale() -> Self {
+        Self {
+            name: "zynq-ultrascale".into(),
+            smp_cores: 4,
+            smp_freq_mhz: 1200.0,
+            fabric_freq_mhz: 300.0,
+            dma_in_scales: true,
+            dma_out_scales: true, // US+ DMA: independent full-duplex channels
+            dma_bw_mbps: 1600.0,
+            dma_submit_us: 2.0,
+            task_creation_us: 8.0,
+            smp_flops_per_cycle: 0.8,
+            smp_divsqrt_penalty: 1.8,
+            smp_dp_penalty: 1.3,
+            smp_l1_kb: 32.0,
+            smp_cache_alpha: 0.08,
+            emu: EmuConfig::default(),
+        }
+    }
+
+    pub fn smp_clock(&self) -> crate::sim::time::Clock {
+        crate::sim::time::Clock::new(self.smp_freq_mhz)
+    }
+
+    pub fn fabric_clock(&self) -> crate::sim::time::Clock {
+        crate::sim::time::Clock::new(self.fabric_freq_mhz)
+    }
+
+    /// Load from a TOML file; unspecified keys keep the zynq706 defaults.
+    pub fn from_toml_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let d = Self::zynq706();
+        Ok(Self {
+            name: doc.str_or("name", &d.name),
+            smp_cores: doc.i64_or("smp.cores", d.smp_cores as i64) as u32,
+            smp_freq_mhz: doc.f64_or("smp.freq_mhz", d.smp_freq_mhz),
+            fabric_freq_mhz: doc.f64_or("fabric.freq_mhz", d.fabric_freq_mhz),
+            dma_in_scales: doc.bool_or("dma.in_scales", d.dma_in_scales),
+            dma_out_scales: doc.bool_or("dma.out_scales", d.dma_out_scales),
+            dma_bw_mbps: doc.f64_or("dma.bw_mbps", d.dma_bw_mbps),
+            dma_submit_us: doc.f64_or("dma.submit_us", d.dma_submit_us),
+            task_creation_us: doc.f64_or("runtime.task_creation_us", d.task_creation_us),
+            smp_flops_per_cycle: doc.f64_or("smp.flops_per_cycle", d.smp_flops_per_cycle),
+            smp_divsqrt_penalty: doc.f64_or("smp.divsqrt_penalty", d.smp_divsqrt_penalty),
+            smp_dp_penalty: doc.f64_or("smp.dp_penalty", d.smp_dp_penalty),
+            smp_l1_kb: doc.f64_or("smp.l1_kb", d.smp_l1_kb),
+            smp_cache_alpha: doc.f64_or("smp.cache_alpha", d.smp_cache_alpha),
+            emu: EmuConfig {
+                contention_alpha: doc.f64_or("emu.contention_alpha", d.emu.contention_alpha),
+                coherence_us: doc.f64_or("emu.coherence_us", d.emu.coherence_us),
+                pinning_us_per_kb: doc.f64_or("emu.pinning_us_per_kb", d.emu.pinning_us_per_kb),
+                smp_mem_factor: doc.f64_or("emu.smp_mem_factor", d.emu.smp_mem_factor),
+                jitter_cv: doc.f64_or("emu.jitter_cv", d.emu.jitter_cv),
+                seed: doc.i64_or("emu.seed", d.emu.seed as i64) as u64,
+            },
+        })
+    }
+
+    /// Serialize to TOML (round-trips through `from_toml`).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "name = \"{}\"\n\n[smp]\ncores = {}\nfreq_mhz = {}\nflops_per_cycle = {}\ndivsqrt_penalty = {}\ndp_penalty = {}\nl1_kb = {}\ncache_alpha = {}\n\n[fabric]\nfreq_mhz = {}\n\n[dma]\nin_scales = {}\nout_scales = {}\nbw_mbps = {}\nsubmit_us = {}\n\n[runtime]\ntask_creation_us = {}\n\n[emu]\ncontention_alpha = {}\ncoherence_us = {}\npinning_us_per_kb = {}\nsmp_mem_factor = {}\njitter_cv = {}\nseed = {}\n",
+            self.name,
+            self.smp_cores,
+            self.smp_freq_mhz,
+            self.smp_flops_per_cycle,
+            self.smp_divsqrt_penalty,
+            self.smp_dp_penalty,
+            self.smp_l1_kb,
+            self.smp_cache_alpha,
+            self.fabric_freq_mhz,
+            self.dma_in_scales,
+            self.dma_out_scales,
+            self.dma_bw_mbps,
+            self.dma_submit_us,
+            self.task_creation_us,
+            self.emu.contention_alpha,
+            self.emu.coherence_us,
+            self.emu.pinning_us_per_kb,
+            self.emu.smp_mem_factor,
+            self.emu.jitter_cv,
+            self.emu.seed,
+        )
+    }
+}
+
+impl Default for BoardConfig {
+    fn default() -> Self {
+        Self::zynq706()
+    }
+}
+
+/// One accelerator instance of a co-design: which kernel it implements and
+/// the HLS unroll variant (how much fabric it is allowed to burn).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AccelSpec {
+    pub kernel: String,
+    /// Unroll factor of the innermost pipelined loop — the HLS knob that
+    /// trades DSP/LUT area for latency. `hls::CostModel` maps it to both.
+    pub unroll: u32,
+}
+
+impl AccelSpec {
+    pub fn new(kernel: &str, unroll: u32) -> Self {
+        Self {
+            kernel: kernel.to_string(),
+            unroll,
+        }
+    }
+
+    /// Compact text form used in config files and CLI: `"mxm64:U32"`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (k, u) = s
+            .split_once(":U")
+            .ok_or_else(|| anyhow::anyhow!("accel spec '{s}' must look like 'kernel:U<unroll>'"))?;
+        Ok(Self {
+            kernel: k.to_string(),
+            unroll: u
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad unroll in accel spec '{s}'"))?,
+        })
+    }
+
+    pub fn to_spec_string(&self) -> String {
+        format!("{}:U{}", self.kernel, self.unroll)
+    }
+}
+
+/// A hardware/software co-design point — the object the paper's programmer
+/// iterates over ("which kernels have accelerators, how many, how big, and
+/// is heterogeneous SMP execution allowed").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CoDesign {
+    pub name: String,
+    pub accels: Vec<AccelSpec>,
+    /// Kernels the scheduler may run on the SMP even though they have an
+    /// accelerator ("+ smp" configurations). Kernels *without* an
+    /// accelerator always run on SMP if their annotation allows it.
+    pub smp_kernels: Vec<String>,
+}
+
+impl CoDesign {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_accel(mut self, kernel: &str, unroll: u32) -> Self {
+        self.accels.push(AccelSpec::new(kernel, unroll));
+        self
+    }
+
+    pub fn with_smp(mut self, kernel: &str) -> Self {
+        self.smp_kernels.push(kernel.to_string());
+        self
+    }
+
+    pub fn accel_count_for(&self, kernel: &str) -> usize {
+        self.accels.iter().filter(|a| a.kernel == kernel).count()
+    }
+
+    pub fn allows_smp(&self, kernel: &str) -> bool {
+        self.smp_kernels.iter().any(|k| k == kernel)
+    }
+
+    pub fn has_accel(&self, kernel: &str) -> bool {
+        self.accel_count_for(kernel) > 0
+    }
+
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let mut cd = CoDesign::new(&doc.str_or("name", "unnamed"));
+        if let Some(arr) = doc.get("accels").and_then(|i| i.as_str_arr()) {
+            for s in arr {
+                cd.accels.push(AccelSpec::parse(s)?);
+            }
+        }
+        if let Some(arr) = doc.get("smp_kernels").and_then(|i| i.as_str_arr()) {
+            cd.smp_kernels = arr.to_vec();
+        }
+        Ok(cd)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let accels: Vec<String> = self
+            .accels
+            .iter()
+            .map(|a| format!("\"{}\"", a.to_spec_string()))
+            .collect();
+        let smp: Vec<String> = self.smp_kernels.iter().map(|k| format!("\"{k}\"")).collect();
+        format!(
+            "name = \"{}\"\naccels = [{}]\nsmp_kernels = [{}]\n",
+            self.name,
+            accels.join(", "),
+            smp.join(", ")
+        )
+    }
+}
+
+/// Mapping from co-design accel specs to the kernel-id space of a concrete
+/// program (resolved at simulation setup).
+#[derive(Clone, Debug)]
+pub struct ResolvedAccel {
+    pub kernel: KernelId,
+    pub unroll: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zynq706_defaults_sane() {
+        let b = BoardConfig::zynq706();
+        assert_eq!(b.smp_cores, 2);
+        assert!(b.dma_in_scales && !b.dma_out_scales);
+        assert!(b.smp_freq_mhz > b.fabric_freq_mhz);
+    }
+
+    #[test]
+    fn board_toml_roundtrip() {
+        let b = BoardConfig::zynq706();
+        let b2 = BoardConfig::from_toml(&b.to_toml()).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn board_toml_partial_overrides() {
+        let b = BoardConfig::from_toml("[dma]\nbw_mbps = 600.0\n").unwrap();
+        assert_eq!(b.dma_bw_mbps, 600.0);
+        assert_eq!(b.smp_cores, 2); // default retained
+    }
+
+    #[test]
+    fn accel_spec_parse() {
+        let a = AccelSpec::parse("mxm128:U64").unwrap();
+        assert_eq!(a.kernel, "mxm128");
+        assert_eq!(a.unroll, 64);
+        assert_eq!(a.to_spec_string(), "mxm128:U64");
+        assert!(AccelSpec::parse("nounroll").is_err());
+        assert!(AccelSpec::parse("k:Uxx").is_err());
+    }
+
+    #[test]
+    fn codesign_builders_and_queries() {
+        let cd = CoDesign::new("2acc64+smp")
+            .with_accel("mxm64", 32)
+            .with_accel("mxm64", 32)
+            .with_smp("mxm64");
+        assert_eq!(cd.accel_count_for("mxm64"), 2);
+        assert!(cd.allows_smp("mxm64"));
+        assert!(!cd.allows_smp("other"));
+        assert!(cd.has_accel("mxm64"));
+        assert!(!cd.has_accel("other"));
+    }
+
+    #[test]
+    fn codesign_toml_roundtrip() {
+        let cd = CoDesign::new("fr-dgemm")
+            .with_accel("dgemm", 48)
+            .with_smp("dgemm");
+        let cd2 = CoDesign::from_toml(&cd.to_toml()).unwrap();
+        assert_eq!(cd, cd2);
+    }
+}

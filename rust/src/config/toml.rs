@@ -1,0 +1,327 @@
+//! Minimal TOML-subset parser for the configuration system.
+//!
+//! Supported grammar (everything the shipped configs use):
+//! - `[section]` and `[section.sub]` headers
+//! - `key = "string"`, `key = 123`, `key = 1.5`, `key = true/false`
+//! - `key = ["a", "b"]` (homogeneous string / number arrays)
+//! - `#` comments, blank lines
+//!
+//! Documents parse into a flat `BTreeMap<String, Item>` keyed by
+//! `section.key` (dotted path), which is all the typed accessors in
+//! `config::mod` need. Unsupported TOML constructs produce a parse error
+//! rather than silent misconfiguration.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArr(Vec<String>),
+    NumArr(Vec<f64>),
+}
+
+impl Item {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Item::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Item::Int(i) => Some(*i as f64),
+            Item::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Item::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Item::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str_arr(&self) -> Option<&[String]> {
+        match self {
+            Item::StrArr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: dotted-path key → item.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub items: BTreeMap<String, Item>,
+}
+
+impl Doc {
+    pub fn get(&self, path: &str) -> Option<&Item> {
+        self.items.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(Item::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Item::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Item::as_i64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Item::as_bool).unwrap_or(default)
+    }
+}
+
+pub fn parse(text: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let errl = ln + 1;
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line: errl,
+                msg: "unterminated section header".into(),
+            })?;
+            if name.starts_with('[') {
+                return Err(TomlError {
+                    line: errl,
+                    msg: "array-of-tables ([[..]]) is not supported; use string arrays".into(),
+                });
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: errl,
+            msg: "expected 'key = value'".into(),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line: errl,
+                msg: "empty key".into(),
+            });
+        }
+        let val = line[eq + 1..].trim();
+        let item = parse_value(val).map_err(|msg| TomlError { line: errl, msg })?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.items.insert(path, item);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Item, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Item::Str(unescape(s)?));
+    }
+    if v == "true" {
+        return Ok(Item::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Item::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Item::StrArr(Vec::new()));
+        }
+        let parts = split_array(inner)?;
+        if parts.iter().all(|p| p.starts_with('"')) {
+            let mut out = Vec::new();
+            for p in parts {
+                match parse_value(&p)? {
+                    Item::Str(s) => out.push(s),
+                    _ => return Err("mixed array".into()),
+                }
+            }
+            return Ok(Item::StrArr(out));
+        }
+        let mut out = Vec::new();
+        for p in parts {
+            out.push(
+                p.parse::<f64>()
+                    .map_err(|_| format!("bad array element '{p}'"))?,
+            );
+        }
+        return Ok(Item::NumArr(out));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Item::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Item::Float(f));
+    }
+    Err(format!("unrecognized value '{v}'"))
+}
+
+fn split_array(inner: &str) -> Result<Vec<String>, String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                let t = cur.trim().to_string();
+                if !t.is_empty() {
+                    parts.push(t);
+                }
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    let t = cur.trim().to_string();
+    if !t.is_empty() {
+        parts.push(t);
+    }
+    Ok(parts)
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape '\\{other:?}'")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+# a board
+name = "zynq706"
+[smp]
+cores = 2
+freq_mhz = 667.0
+[dma]
+in_scales = true
+kernels = ["a", "b"]
+weights = [1, 2.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "zynq706");
+        assert_eq!(doc.i64_or("smp.cores", 0), 2);
+        assert_eq!(doc.f64_or("smp.freq_mhz", 0.0), 667.0);
+        assert!(doc.bool_or("dma.in_scales", false));
+        assert_eq!(
+            doc.get("dma.kernels").unwrap().as_str_arr().unwrap(),
+            &["a".to_string(), "b".to_string()]
+        );
+        assert_eq!(
+            doc.get("dma.weights"),
+            Some(&Item::NumArr(vec![1.0, 2.5]))
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.f64_or("x.y", 9.5), 9.5);
+        assert_eq!(doc.str_or("z", "d"), "d");
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a # not comment");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[sec\nx = 1").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn rejects_array_of_tables() {
+        assert!(parse("[[accel]]\nname = \"x\"").is_err());
+    }
+
+    #[test]
+    fn escape_sequences() {
+        let doc = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a\nb\t\"c\"");
+    }
+
+    #[test]
+    fn ints_vs_floats() {
+        let doc = parse("i = 42\nf = 42.0\nn = -3").unwrap();
+        assert_eq!(doc.get("i"), Some(&Item::Int(42)));
+        assert_eq!(doc.get("f"), Some(&Item::Float(42.0)));
+        assert_eq!(doc.i64_or("n", 0), -3);
+    }
+}

@@ -1,0 +1,143 @@
+//! Trace elaboration — the §IV transformations that turn the basic task
+//! trace into the graph the simulator executes.
+//!
+//! Statically elaborated here:
+//! * **creation-cost tasks**: every task instance is preceded by a creation
+//!   task that runs only on the SMP (the OmpSs master creates tasks
+//!   sequentially, so creation tasks form a chain in program order);
+//! * **transfer accounting**: per-task input/output DMA transfer counts and
+//!   byte totals derived from the dependence list.
+//!
+//! The remaining §IV artifacts — DMA *submit* tasks (shared software
+//! resource) and *output-transfer* tasks (shared channel) — exist only when
+//! the scheduler actually places the task on an FPGA accelerator, which is
+//! a run-time decision; the engine materializes them at dispatch
+//! (`sim::engine`), exactly as the paper describes them being created for
+//! device-executed tasks.
+
+use super::deps::DepGraph;
+use super::task::{TaskId, TaskProgram};
+
+/// Per-task transfer footprint extracted from the dependence list.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Xfers {
+    /// Number of input DMA descriptors (in + inout dependences).
+    pub n_in: u32,
+    /// Number of output DMA descriptors (out + inout dependences).
+    pub n_out: u32,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// The statically elaborated program: creation chain + compute nodes +
+/// transfer footprints. Node identity convention used across the engine:
+/// creation node of task `t` and compute node of task `t` are addressed by
+/// `t` itself plus a node-kind discriminant.
+#[derive(Clone, Debug)]
+pub struct ElabProgram {
+    pub n_tasks: usize,
+    /// Number of unsatisfied predecessors of each compute node:
+    /// data preds (from the dependence graph) + 1 (its creation task).
+    pub compute_preds: Vec<u32>,
+    /// Data successors (dependence graph edges).
+    pub data_succs: Vec<Vec<TaskId>>,
+    /// Transfer footprint per task.
+    pub xfers: Vec<Xfers>,
+}
+
+impl ElabProgram {
+    pub fn build(program: &TaskProgram, graph: &DepGraph) -> Self {
+        assert_eq!(program.tasks.len(), graph.len());
+        let n = program.tasks.len();
+        let mut compute_preds = Vec::with_capacity(n);
+        let mut xfers = Vec::with_capacity(n);
+        for t in &program.tasks {
+            compute_preds.push(graph.preds[t.id as usize].len() as u32 + 1);
+            let mut x = Xfers::default();
+            for d in &t.deps {
+                if d.dir.reads() {
+                    x.n_in += 1;
+                    x.bytes_in += d.len;
+                }
+                if d.dir.writes() {
+                    x.n_out += 1;
+                    x.bytes_out += d.len;
+                }
+            }
+            xfers.push(x);
+        }
+        ElabProgram {
+            n_tasks: n,
+            compute_preds,
+            data_succs: graph.succs.clone(),
+            xfers,
+        }
+    }
+
+    /// Total bytes DMA'd in if every task ran on the FPGA (upper bound used
+    /// by reports).
+    pub fn total_bytes_in(&self) -> u64 {
+        self.xfers.iter().map(|x| x.bytes_in).sum()
+    }
+
+    pub fn total_bytes_out(&self) -> u64 {
+        self.xfers.iter().map(|x| x.bytes_out).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Dep, KernelDecl, KernelProfile, Targets};
+
+    fn prog() -> TaskProgram {
+        let mut p = TaskProgram::new("t");
+        p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::BOTH,
+            profile: KernelProfile {
+                flops: 1,
+                inner_trip: 1,
+                in_bytes: 4,
+                out_bytes: 4,
+                dtype_bytes: 4,
+                divsqrt: false,
+            },
+        });
+        p
+    }
+
+    #[test]
+    fn xfers_from_deps() {
+        let mut p = prog();
+        p.add_task(
+            0,
+            1,
+            vec![
+                Dep::input(0x100, 1024),
+                Dep::input(0x200, 1024),
+                Dep::inout(0x300, 512),
+            ],
+        );
+        let g = DepGraph::build(&p);
+        let e = ElabProgram::build(&p, &g);
+        assert_eq!(e.xfers[0].n_in, 3); // 2 in + 1 inout
+        assert_eq!(e.xfers[0].n_out, 1); // inout
+        assert_eq!(e.xfers[0].bytes_in, 2560);
+        assert_eq!(e.xfers[0].bytes_out, 512);
+        assert_eq!(e.total_bytes_in(), 2560);
+        assert_eq!(e.total_bytes_out(), 512);
+    }
+
+    #[test]
+    fn compute_preds_include_creation() {
+        let mut p = prog();
+        p.add_task(0, 1, vec![Dep::output(0x1, 8)]);
+        p.add_task(0, 1, vec![Dep::input(0x1, 8)]);
+        let g = DepGraph::build(&p);
+        let e = ElabProgram::build(&p, &g);
+        assert_eq!(e.compute_preds[0], 1); // creation only
+        assert_eq!(e.compute_preds[1], 2); // creation + data dep
+        assert_eq!(e.data_succs[0], vec![1]);
+    }
+}

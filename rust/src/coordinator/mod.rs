@@ -1,0 +1,15 @@
+//! The OmpSs-runtime-equivalent coordinator: task model, run-time
+//! dependence tracking, trace elaboration (§IV) and scheduling policies.
+//!
+//! This is the layer the paper's contribution lives in: the simulator
+//! "implements the runtime of the OmpSs programming model" — tasks become
+//! ready when their dependences are satisfied and run on whichever capable
+//! device the policy selects.
+
+pub mod deps;
+pub mod elaborate;
+pub mod sched;
+pub mod task;
+
+pub use deps::DepGraph;
+pub use task::{Dep, Dir, KernelDecl, KernelId, KernelProfile, TaskId, TaskInstance, TaskProgram, Targets};

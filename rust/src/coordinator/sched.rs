@@ -1,0 +1,102 @@
+//! Scheduling policies — how a ready task picks a device.
+//!
+//! The paper evaluates the *availability-based* policy of the OmpSs runtime
+//! of the time ("the OmpSs runtime can take care of scheduling different
+//! instances of the kernel, when their dependences are ready, in both
+//! resources based on availability") and observes in §VI that it "does not
+//! help to improve the performance when running mxmBlock in both SMP and
+//! FPGA" — a free SMP core greedily grabs tasks that the accelerator would
+//! have finished sooner, creating load imbalance.
+//!
+//! [`Policy::Greedy`] reproduces that behaviour. [`Policy::Lookahead`] is
+//! the paper's future-work heuristic ("look-ahead scheduling heuristics"):
+//! an SMP core only steals an accelerator-capable task when the
+//! accelerator backlog makes the SMP execution pay off. The ablation bench
+//! compares the two.
+
+use crate::sim::time::Ps;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Nanos++ availability scheduling (the paper's measured policy): any
+    /// free capable device takes the oldest ready task.
+    Greedy,
+    /// SMP steals an accelerator-capable task only if the estimated wait
+    /// for an accelerator (backlog × per-task accel time) exceeds the SMP
+    /// execution time. Models the paper's proposed look-ahead extension.
+    Lookahead,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "greedy" => Some(Policy::Greedy),
+            "lookahead" => Some(Policy::Lookahead),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Policy::Greedy => "greedy",
+            Policy::Lookahead => "lookahead",
+        }
+    }
+
+    /// Decide whether an SMP core should execute an accelerator-capable
+    /// ready task. `accel_backlog` = tasks queued for the kernel's
+    /// accelerators (including in-flight), `accel_task_ps` = per-task
+    /// accelerator occupancy, `accels` = number of accelerators serving the
+    /// kernel, `smp_task_ps` = cost on this core.
+    pub fn smp_should_take(
+        &self,
+        accel_backlog: usize,
+        accel_task_ps: Ps,
+        accels: u32,
+        smp_task_ps: Ps,
+    ) -> bool {
+        match self {
+            Policy::Greedy => true,
+            Policy::Lookahead => {
+                if accels == 0 {
+                    return true;
+                }
+                // Expected completion if left to the accelerators: the task
+                // waits behind the backlog split across `accels`.
+                let wait = (accel_backlog as u64 + 1) * accel_task_ps / accels as u64;
+                smp_task_ps < wait
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_always_takes() {
+        assert!(Policy::Greedy.smp_should_take(0, 1_000, 2, u64::MAX as Ps));
+    }
+
+    #[test]
+    fn lookahead_declines_when_accel_faster() {
+        // Empty backlog, accel 10x faster: leave it to the accelerator.
+        assert!(!Policy::Lookahead.smp_should_take(0, 100, 1, 1_000));
+        // Deep backlog: stealing pays.
+        assert!(Policy::Lookahead.smp_should_take(50, 100, 1, 1_000));
+    }
+
+    #[test]
+    fn lookahead_without_accels_takes() {
+        assert!(Policy::Lookahead.smp_should_take(0, 0, 0, 1_000));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Policy::Greedy, Policy::Lookahead] {
+            assert_eq!(Policy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Policy::parse("nope"), None);
+    }
+}

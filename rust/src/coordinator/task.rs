@@ -1,0 +1,352 @@
+//! Task model — the OmpSs-equivalent front-end types.
+//!
+//! In the paper the programmer annotates C functions with
+//! `#pragma omp target device(fpga,smp)` and `#pragma omp task in(...)
+//! inout(...)`; Mercurium then emits an instrumented sequential binary whose
+//! execution produces the *basic task trace* (§IV): one record per task
+//! instance with its name, creation time, SMP cost and dependence list.
+//!
+//! Here the same information is carried by [`KernelDecl`] (the annotated
+//! function: name, allowed targets, workload profile) and [`TaskInstance`]
+//! (one dynamic instance: creation timestamp, SMP cycles, dependences).
+//! Applications in `apps/` build a [`TaskProgram`] — the moral equivalent of
+//! running the instrumented binary.
+
+use std::collections::BTreeMap;
+
+/// Dynamic task instance id (dense, in trace order).
+pub type TaskId = u32;
+/// Kernel (task type) id — index into [`TaskProgram::kernels`].
+pub type KernelId = u16;
+
+/// Dependence direction, as in the OmpSs clauses `in`, `out`, `inout`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dir {
+    In,
+    Out,
+    InOut,
+}
+
+impl Dir {
+    pub fn reads(self) -> bool {
+        matches!(self, Dir::In | Dir::InOut)
+    }
+    pub fn writes(self) -> bool {
+        matches!(self, Dir::Out | Dir::InOut)
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dir::In => "in",
+            Dir::Out => "out",
+            Dir::InOut => "inout",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Dir> {
+        match s {
+            "in" => Some(Dir::In),
+            "out" => Some(Dir::Out),
+            "inout" => Some(Dir::InOut),
+            _ => None,
+        }
+    }
+}
+
+/// A data dependence: base address + length + direction, exactly the record
+/// the paper's instrumented binary emits per dependence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dep {
+    pub addr: u64,
+    pub len: u64,
+    pub dir: Dir,
+}
+
+impl Dep {
+    pub fn input(addr: u64, len: u64) -> Self {
+        Self { addr, len, dir: Dir::In }
+    }
+    pub fn output(addr: u64, len: u64) -> Self {
+        Self { addr, len, dir: Dir::Out }
+    }
+    pub fn inout(addr: u64, len: u64) -> Self {
+        Self { addr, len, dir: Dir::InOut }
+    }
+}
+
+/// Device classes a kernel may be annotated with
+/// (`#pragma omp target device(...)`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Targets {
+    pub smp: bool,
+    pub fpga: bool,
+}
+
+impl Targets {
+    pub const SMP: Targets = Targets { smp: true, fpga: false };
+    pub const FPGA: Targets = Targets { smp: false, fpga: true };
+    pub const BOTH: Targets = Targets { smp: true, fpga: true };
+}
+
+/// Workload characterization of a kernel, consumed by the cost models
+/// (the analytic stand-ins for `gettimeofday` on the ARM and for the Vivado
+/// HLS report on the fabric side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelProfile {
+    /// Total floating-point operations per task instance.
+    pub flops: u64,
+    /// Iterations of the innermost (pipelined) loop per task instance —
+    /// the quantity Vivado HLS's `II × trip` latency estimate hinges on.
+    pub inner_trip: u64,
+    /// Bytes DMA-transferred *to* the accelerator per instance
+    /// (`in` + `inout` footprint).
+    pub in_bytes: u64,
+    /// Bytes DMA-transferred *from* the accelerator per instance
+    /// (`out` + `inout` footprint).
+    pub out_bytes: u64,
+    /// Element width (4 = single, 8 = double). The paper's cholesky is
+    /// double precision; its cost weights are preserved even though the
+    /// compiled PJRT artifacts are f32 (see DESIGN.md §1 substitution 3).
+    pub dtype_bytes: u8,
+    /// Division / sqrt on the critical recurrence path (dtrsm, dpotrf):
+    /// lengthens the HLS pipeline II and the ARM per-flop cost.
+    pub divsqrt: bool,
+}
+
+impl KernelProfile {
+    /// Arithmetic intensity in FLOP/byte over the DMA traffic.
+    pub fn arith_intensity(&self) -> f64 {
+        let bytes = (self.in_bytes + self.out_bytes).max(1);
+        self.flops as f64 / bytes as f64
+    }
+}
+
+/// A task type — the annotated function.
+#[derive(Clone, Debug)]
+pub struct KernelDecl {
+    pub name: String,
+    /// Devices the programmer annotated (`device(fpga,smp)`).
+    pub targets: Targets,
+    pub profile: KernelProfile,
+}
+
+/// One dynamic task instance — one record of the basic trace (§IV).
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub id: TaskId,
+    pub kernel: KernelId,
+    /// Creation timestamp (ns) in the sequential instrumented run. Only the
+    /// order matters to the simulator; kept for trace fidelity.
+    pub creation_ns: u64,
+    /// Elapsed execution cycles on the ARM core in the instrumented run
+    /// (or from the SMP cost model when generated synthetically).
+    pub smp_cycles: u64,
+    pub deps: Vec<Dep>,
+}
+
+/// A full application: kernel table + dynamic task trace, in sequential
+/// program order. The moral equivalent of "instrumented binary output".
+#[derive(Clone, Debug, Default)]
+pub struct TaskProgram {
+    pub app_name: String,
+    pub kernels: Vec<KernelDecl>,
+    pub tasks: Vec<TaskInstance>,
+}
+
+impl TaskProgram {
+    pub fn new(app_name: &str) -> Self {
+        Self {
+            app_name: app_name.to_string(),
+            kernels: Vec::new(),
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Register a kernel declaration, returning its id. Names must be
+    /// unique; re-registering a name returns the existing id.
+    pub fn add_kernel(&mut self, decl: KernelDecl) -> KernelId {
+        if let Some((i, _)) = self
+            .kernels
+            .iter()
+            .enumerate()
+            .find(|(_, k)| k.name == decl.name)
+        {
+            return i as KernelId;
+        }
+        self.kernels.push(decl);
+        (self.kernels.len() - 1) as KernelId
+    }
+
+    pub fn kernel_id(&self, name: &str) -> Option<KernelId> {
+        self.kernels
+            .iter()
+            .position(|k| k.name == name)
+            .map(|i| i as KernelId)
+    }
+
+    pub fn kernel(&self, id: KernelId) -> &KernelDecl {
+        &self.kernels[id as usize]
+    }
+
+    /// Append a task instance (id is assigned densely in program order,
+    /// creation_ns defaults to the instance index — sequential order).
+    pub fn add_task(&mut self, kernel: KernelId, smp_cycles: u64, deps: Vec<Dep>) -> TaskId {
+        let id = self.tasks.len() as TaskId;
+        self.tasks.push(TaskInstance {
+            id,
+            kernel,
+            creation_ns: id as u64,
+            smp_cycles,
+            deps,
+        });
+        id
+    }
+
+    /// Count of task instances per kernel name (reporting).
+    pub fn instance_histogram(&self) -> BTreeMap<String, usize> {
+        let mut h = BTreeMap::new();
+        for t in &self.tasks {
+            *h.entry(self.kernels[t.kernel as usize].name.clone())
+                .or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Total serial SMP cycles over all tasks (the 1-core lower bound used
+    /// to sanity-check simulated makespans).
+    pub fn total_smp_cycles(&self) -> u64 {
+        self.tasks.iter().map(|t| t.smp_cycles).sum()
+    }
+
+    /// Validate internal consistency; returns a list of problems.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id as usize != i {
+                errs.push(format!("task #{i} has non-dense id {}", t.id));
+            }
+            if t.kernel as usize >= self.kernels.len() {
+                errs.push(format!("task #{i} references unknown kernel {}", t.kernel));
+                continue;
+            }
+            let k = &self.kernels[t.kernel as usize];
+            if !k.targets.smp && !k.targets.fpga {
+                errs.push(format!("kernel '{}' has no targets", k.name));
+            }
+            if t.deps.is_empty() {
+                errs.push(format!("task #{i} ({}) has no dependences", k.name));
+            }
+            for d in &t.deps {
+                if d.len == 0 {
+                    errs.push(format!("task #{i} ({}) has zero-length dep", k.name));
+                }
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> KernelProfile {
+        KernelProfile {
+            flops: 2 * 64 * 64 * 64,
+            inner_trip: 64 * 64 * 64,
+            in_bytes: 3 * 64 * 64 * 4,
+            out_bytes: 64 * 64 * 4,
+            dtype_bytes: 4,
+            divsqrt: false,
+        }
+    }
+
+    #[test]
+    fn dir_semantics() {
+        assert!(Dir::In.reads() && !Dir::In.writes());
+        assert!(!Dir::Out.reads() && Dir::Out.writes());
+        assert!(Dir::InOut.reads() && Dir::InOut.writes());
+        for d in [Dir::In, Dir::Out, Dir::InOut] {
+            assert_eq!(Dir::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(Dir::parse("bogus"), None);
+    }
+
+    #[test]
+    fn kernel_registration_dedups() {
+        let mut p = TaskProgram::new("t");
+        let k1 = p.add_kernel(KernelDecl {
+            name: "mxm".into(),
+            targets: Targets::BOTH,
+            profile: profile(),
+        });
+        let k2 = p.add_kernel(KernelDecl {
+            name: "mxm".into(),
+            targets: Targets::BOTH,
+            profile: profile(),
+        });
+        assert_eq!(k1, k2);
+        assert_eq!(p.kernels.len(), 1);
+        assert_eq!(p.kernel_id("mxm"), Some(k1));
+        assert_eq!(p.kernel_id("nope"), None);
+    }
+
+    #[test]
+    fn task_ids_dense_and_ordered() {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        for i in 0..10 {
+            let id = p.add_task(k, 100, vec![Dep::inout(0x1000, 64)]);
+            assert_eq!(id, i);
+        }
+        assert!(p.validate().is_empty());
+        assert_eq!(p.total_smp_cycles(), 1000);
+    }
+
+    #[test]
+    fn validate_catches_problems() {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets { smp: false, fpga: false },
+            profile: profile(),
+        });
+        p.add_task(k, 1, vec![]);
+        p.add_task(k, 1, vec![Dep::input(0x0, 0)]);
+        let errs = p.validate();
+        assert!(errs.iter().any(|e| e.contains("no targets")));
+        assert!(errs.iter().any(|e| e.contains("no dependences")));
+        assert!(errs.iter().any(|e| e.contains("zero-length")));
+    }
+
+    #[test]
+    fn arith_intensity() {
+        let p = profile();
+        let ai = p.arith_intensity();
+        // 524288 flops / (49152 in + 16384 out) bytes = 8
+        assert!((ai - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut p = TaskProgram::new("t");
+        let a = p.add_kernel(KernelDecl {
+            name: "a".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        let b = p.add_kernel(KernelDecl {
+            name: "b".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        p.add_task(a, 1, vec![Dep::inout(0, 4)]);
+        p.add_task(a, 1, vec![Dep::inout(0, 4)]);
+        p.add_task(b, 1, vec![Dep::inout(4, 4)]);
+        let h = p.instance_histogram();
+        assert_eq!(h["a"], 2);
+        assert_eq!(h["b"], 1);
+    }
+}

@@ -1,0 +1,328 @@
+//! Experiment harnesses — one entry point per paper figure. The CLI,
+//! benches and examples all call through here so the numbers in
+//! EXPERIMENTS.md regenerate from a single implementation.
+
+pub mod robustness;
+
+use std::time::Instant;
+
+use crate::apps::{cholesky, lu, matmul};
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::task::TaskProgram;
+use crate::hls::{CostModel, FpgaPart, SynthesisTimeModel};
+use crate::metrics::{ConfigRow, SpeedupTable};
+use crate::sim::{dma, emulate_mean_ms, estimate};
+
+/// Default board-emulator repetitions (the paper averages 10 real runs).
+pub const BOARD_REPS: u32 = 10;
+
+/// Run one (program, co-design) under both models.
+pub fn run_pair(
+    program: &TaskProgram,
+    cd: &CoDesign,
+    board: &BoardConfig,
+    reps: u32,
+) -> anyhow::Result<ConfigRow> {
+    let est = estimate(program, cd, board)?;
+    let real = emulate_mean_ms(program, cd, board, reps)?;
+    Ok(ConfigRow {
+        name: cd.name.clone(),
+        estimator_ms: est.makespan_ms(),
+        board_ms: real,
+    })
+}
+
+/// Fig. 5 — matmul estimator-vs-real across the six co-designs.
+pub fn fig5(n: u64, board: &BoardConfig, reps: u32) -> anyhow::Result<SpeedupTable> {
+    let mut rows = Vec::new();
+    for (cd, app) in matmul::fig5_cases(n) {
+        let program = app.build_program(board);
+        rows.push(run_pair(&program, &cd, board, reps)?);
+    }
+    Ok(SpeedupTable::build(rows))
+}
+
+/// Fig. 9 — cholesky estimator-vs-real across the six co-designs.
+pub fn fig9(n: u64, board: &BoardConfig, reps: u32) -> anyhow::Result<SpeedupTable> {
+    let app = cholesky::Cholesky::new(n, 64);
+    let program = app.build_program(board);
+    let mut rows = Vec::new();
+    for cd in cholesky::fig9_codesigns() {
+        rows.push(run_pair(&program, &cd, board, reps)?);
+    }
+    Ok(SpeedupTable::build(rows))
+}
+
+/// Extension: the LU study (same shape as Fig. 9, for the tiled LU app).
+pub fn lu_study(n: u64, board: &BoardConfig, reps: u32) -> anyhow::Result<SpeedupTable> {
+    let app = lu::Lu::new(n, 64);
+    let program = app.build_program(board);
+    let mut rows = Vec::new();
+    for cd in lu::study_codesigns() {
+        rows.push(run_pair(&program, &cd, board, reps)?);
+    }
+    Ok(SpeedupTable::build(rows))
+}
+
+/// Extension: cross-board study — the same application swept on the
+/// paper's ZC706 and on a Zynq UltraScale+ (ZU9EG), showing how the
+/// co-design decision shifts with the platform (the paper's §I outlook).
+/// Returns (board name, best co-design, best ms) per platform.
+pub fn cross_board_matmul(n: u64) -> anyhow::Result<Vec<(String, String, f64)>> {
+    use crate::coordinator::sched::Policy;
+    use crate::sim::{simulate, EstimatorModel};
+    let mut out = Vec::new();
+    for (board, part) in [
+        (BoardConfig::zynq706(), FpgaPart::xc7z045()),
+        (BoardConfig::zynq_ultrascale(), FpgaPart::xczu9eg()),
+    ] {
+        let mut best: Option<(String, f64)> = None;
+        for (cd, app) in matmul::fig5_cases(n) {
+            let program = app.build_program(&board);
+            let mut model = EstimatorModel::new(&board);
+            // Feasibility differs per part: skip what does not fit.
+            let Ok(res) = simulate(&program, &cd, &board, &part, Policy::Greedy, &mut model)
+            else {
+                continue;
+            };
+            let ms = res.makespan_ms();
+            if best.as_ref().map(|(_, b)| ms < *b).unwrap_or(true) {
+                best = Some((cd.name.clone(), ms));
+            }
+        }
+        // On the bigger part, also try the configuration the ZC706 cannot
+        // fit: two full-unroll 128-block accelerators.
+        let two128 = crate::config::CoDesign::new("2acc 128")
+            .with_accel("mxm128", matmul::UNROLL_128)
+            .with_accel("mxm128", matmul::UNROLL_128);
+        let program = matmul::Matmul::new(n, 128).build_program(&board);
+        let mut model = EstimatorModel::new(&board);
+        if let Ok(res) = simulate(&program, &two128, &board, &part, Policy::Greedy, &mut model) {
+            let ms = res.makespan_ms();
+            if best.as_ref().map(|(_, b)| ms < *b).unwrap_or(true) {
+                best = Some((two128.name.clone(), ms));
+            }
+        }
+        let (name, ms) = best.unwrap();
+        out.push((board.name.clone(), name, ms));
+    }
+    Ok(out)
+}
+
+/// Fig. 3 — DMA speedup (2 accels vs 1) for 512 KB and 1024 KB, inputs vs
+/// outputs, under both models.
+pub fn fig3(board: &BoardConfig) -> Vec<(String, dma::DmaSpeedup, dma::DmaSpeedup)> {
+    [512 * 1024u64, 1024 * 1024]
+        .into_iter()
+        .map(|bytes| {
+            (
+                format!("{} KB", bytes / 1024),
+                dma::fig3_estimator(board, bytes, 2),
+                dma::fig3_board(board, bytes, 2),
+            )
+        })
+        .collect()
+}
+
+/// Fig. 6 — analysis time of the methodology (measured wall-clock of this
+/// toolchain) vs the traditional hardware-generation flow (synthesis-time
+/// model). Returns `(methodology_secs, traditional_secs)`.
+pub fn analysis_time_matmul(n: u64, board: &BoardConfig) -> anyhow::Result<(f64, f64)> {
+    let t0 = Instant::now();
+    let _table = fig5(n, board, BOARD_REPS)?;
+    let methodology = t0.elapsed().as_secs_f64();
+
+    let cm = CostModel::from_board(board);
+    let part = FpgaPart::xc7z045();
+    let m64 = matmul::Matmul::new(n, 64);
+    let m128 = matmul::Matmul::new(n, 128);
+    let a64 = cm
+        .estimate("mxm64", &m64.profile(), matmul::UNROLL_64)
+        .resources;
+    let a128 = cm
+        .estimate("mxm128", &m128.profile(), matmul::UNROLL_128)
+        .resources;
+    // Bitstreams needed by the Fig. 5 set (the +smp variants share them).
+    let traditional = SynthesisTimeModel::default().total_seconds(
+        &part,
+        &[vec![a64], vec![a64, a64], vec![a128]],
+    );
+    Ok((methodology, traditional))
+}
+
+/// §VI cholesky productivity claim: six bitstreams vs < 10 min of
+/// methodology. Returns `(methodology_secs, traditional_secs)`.
+pub fn analysis_time_cholesky(n: u64, board: &BoardConfig) -> anyhow::Result<(f64, f64)> {
+    let t0 = Instant::now();
+    let _table = fig9(n, board, BOARD_REPS)?;
+    let methodology = t0.elapsed().as_secs_f64();
+
+    let cm = CostModel::from_board(board);
+    let part = FpgaPart::xc7z045();
+    let app = cholesky::Cholesky::new(n, 64);
+    let profiles = app.profiles();
+    let res = |name: &str, unroll: u32| {
+        let p = profiles.iter().find(|(n, _, _)| *n == name).unwrap();
+        cm.estimate(name, &p.2, unroll).resources
+    };
+    let fr = cholesky::UNROLL_FR;
+    let pr = cholesky::UNROLL_PAIR;
+    let traditional = SynthesisTimeModel::default().total_seconds(
+        &part,
+        &[
+            vec![res("dgemm", fr)],
+            vec![res("dsyrk", fr)],
+            vec![res("dtrsm", fr)],
+            vec![res("dgemm", pr), res("dgemm", pr)],
+            vec![res("dgemm", pr), res("dsyrk", pr)],
+            vec![res("dgemm", pr), res("dtrsm", pr)],
+        ],
+    );
+    Ok((methodology, traditional))
+}
+
+/// Fig. 7 — write Paraver bundles for the four matmul configurations the
+/// paper visualizes. Returns the written stems.
+pub fn fig7(
+    n: u64,
+    board: &BoardConfig,
+    outdir: &std::path::Path,
+) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    std::fs::create_dir_all(outdir)?;
+    let wanted = ["1acc 128", "2acc 64", "2acc 64 + smp", "1acc 128 + smp"];
+    let mut stems = Vec::new();
+    for (cd, app) in matmul::fig5_cases(n) {
+        if !wanted.contains(&cd.name.as_str()) {
+            continue;
+        }
+        let program = app.build_program(board);
+        let res = estimate(&program, &cd, board)?;
+        let stem = outdir.join(cd.name.replace([' ', '+'], "_"));
+        crate::trace::paraver::save_bundle(&program, board, &res, &stem)?;
+        stems.push(stem);
+    }
+    Ok(stems)
+}
+
+/// Fig. 8 — DOT export of the cholesky dependency graph (NB blocks).
+pub fn fig8(nb: u64, board: &BoardConfig) -> String {
+    let app = cholesky::Cholesky::new(nb * 64, 64);
+    let program = app.build_program(board);
+    let graph = crate::coordinator::deps::DepGraph::build(&program);
+    crate::trace::dot::to_dot(&program, &graph)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_trends_match_paper() {
+        let board = BoardConfig::zynq706();
+        let t = fig5(512, &board, 3).unwrap();
+        // Core claims of §VI for matmul:
+        // 1. estimator and real execution agree on the best co-design;
+        let best = &t.rows[t.best_estimator()].name;
+        assert!(t.best_agrees(), "{}", t.render("fig5"));
+        // 2. the best co-design is 128x128 blocks on FPGA only;
+        assert_eq!(best, "1acc 128", "{}", t.render("fig5"));
+        // 3. the slowest is "1acc 128 + smp" (the paper normalizes to it);
+        let est_slowest = t
+            .rows
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.estimator_ms.partial_cmp(&b.1.estimator_ms).unwrap())
+            .unwrap();
+        assert_eq!(est_slowest.1.name, "1acc 128 + smp", "{}", t.render("fig5"));
+        // 4. trends agree strongly.
+        assert!(
+            t.trend_agreement() >= 0.7,
+            "tau = {}\n{}",
+            t.trend_agreement(),
+            t.render("fig5")
+        );
+    }
+
+    #[test]
+    fn fig9_trends_match_paper() {
+        let board = BoardConfig::zynq706();
+        let t = fig9(512, &board, 3).unwrap();
+        assert!(t.best_agrees(), "{}", t.render("fig9"));
+        // dgemm must be in the winning combination (it dominates the task
+        // count); the paper's winner is a two-accelerator dgemm mix.
+        let best = &t.rows[t.best_estimator()].name;
+        assert!(best.contains("dgemm"), "{}", t.render("fig9"));
+        assert!(
+            t.trend_agreement() >= 0.7,
+            "tau = {}\n{}",
+            t.trend_agreement(),
+            t.render("fig9")
+        );
+        // FR-dgemm beats the other FR variants (it offloads the dominant
+        // kernel).
+        let ms = |name: &str| {
+            t.rows
+                .iter()
+                .find(|r| r.name == name)
+                .unwrap()
+                .estimator_ms
+        };
+        assert!(ms("FR-dgemm") < ms("FR-dsyrk"));
+        assert!(ms("FR-dgemm") < ms("FR-dtrsm"));
+    }
+
+    #[test]
+    fn fig3_rows() {
+        let board = BoardConfig::zynq706();
+        let rows = fig3(&board);
+        assert_eq!(rows.len(), 2);
+        for (_, est, brd) in rows {
+            assert!((est.input_speedup - 2.0).abs() < 1e-9);
+            assert!(brd.input_speedup > 1.6 && brd.input_speedup < 2.0);
+            assert!((est.output_speedup - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn analysis_time_speedup_over_two_orders() {
+        // §VII: "speedups of more than two orders of magnitude (minutes vs
+        // days)". Our simulator is much faster than the paper's, so the
+        // ratio is even larger; assert the >100x claim.
+        let board = BoardConfig::zynq706();
+        let (meth, trad) = analysis_time_matmul(512, &board).unwrap();
+        assert!(meth > 0.0);
+        assert!(trad / meth > 100.0, "speedup = {}", trad / meth);
+        assert!(trad > 10.0 * 3600.0, "traditional must be > 10 h");
+    }
+
+    #[test]
+    fn lu_study_trends_agree() {
+        let board = BoardConfig::zynq706();
+        let t = lu_study(512, &board, 3).unwrap();
+        assert!(t.best_agrees(), "{}", t.render("lu"));
+        assert!(t.trend_agreement() >= 0.7, "{}", t.render("lu"));
+    }
+
+    #[test]
+    fn cross_board_decision_shifts() {
+        let rows = cross_board_matmul(512).unwrap();
+        assert_eq!(rows.len(), 2);
+        let (z7, us) = (&rows[0], &rows[1]);
+        assert_eq!(z7.0, "zynq706");
+        // On the ZC706 the winner is the single 128 accelerator (2x does
+        // not fit); on the UltraScale+ the infeasible-on-ZC706 "2acc 128"
+        // wins — the decision is platform-dependent, which is exactly why
+        // the estimator must model the platform.
+        assert_eq!(z7.1, "1acc 128");
+        assert_eq!(us.1, "2acc 128", "us+ winner: {} ({} ms)", us.1, us.2);
+        assert!(us.2 < z7.2, "US+ must be faster outright");
+    }
+
+    #[test]
+    fn fig8_dot_generates() {
+        let board = BoardConfig::zynq706();
+        let dot = fig8(4, &board);
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("dpotrf"));
+    }
+}

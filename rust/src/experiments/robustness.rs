@@ -1,0 +1,179 @@
+//! Estimation-error robustness — how wrong can the HLS estimates be before
+//! the co-design decision flips?
+//!
+//! The whole methodology rests on Vivado HLS *estimates* ("considering
+//! only synthesis estimation results", abstract). This experiment
+//! quantifies the safety margin: perturb every kernel's accelerator
+//! latency by a random factor in `[1-err, 1+err]` (independent per kernel
+//! per trial), re-run the sweep, and measure how often the winning
+//! co-design survives. A decision that is stable under ±30% cycle-estimate
+//! error is exactly what "coarse-grain but order-of-magnitude right"
+//! means; instability at small errors would invalidate the approach.
+
+use std::collections::HashMap;
+
+use crate::apps::matmul;
+use crate::config::BoardConfig;
+use crate::coordinator::sched::Policy;
+use crate::coordinator::task::KernelId;
+use crate::hls::FpgaPart;
+use crate::sim::engine::{TaskCtx, TimingModel};
+use crate::sim::time::Ps;
+use crate::sim::{simulate, EstimatorModel};
+use crate::util::Rng;
+
+/// Wraps the estimator model, scaling accelerator occupancy per kernel.
+struct PerturbedModel {
+    inner: EstimatorModel,
+    factors: HashMap<KernelId, f64>,
+}
+
+impl TimingModel for PerturbedModel {
+    fn creation_ps(&mut self, board: &BoardConfig) -> Ps {
+        self.inner.creation_ps(board)
+    }
+    fn smp_compute_ps(&mut self, ctx: &TaskCtx, board: &BoardConfig) -> Ps {
+        self.inner.smp_compute_ps(ctx, board)
+    }
+    fn accel_occupancy_ps(
+        &mut self,
+        ctx: &TaskCtx,
+        board: &BoardConfig,
+        input_in_occupancy: bool,
+    ) -> Ps {
+        let base = self.inner.accel_occupancy_ps(ctx, board, input_in_occupancy);
+        let f = self.factors.get(&ctx.kernel).copied().unwrap_or(1.0);
+        (base as f64 * f) as Ps
+    }
+    fn submit_ps(&mut self, n: u32, board: &BoardConfig) -> Ps {
+        self.inner.submit_ps(n, board)
+    }
+    fn dma_ps(&mut self, bytes: u64, ctx: &TaskCtx, board: &BoardConfig) -> Ps {
+        self.inner.dma_ps(bytes, ctx, board)
+    }
+}
+
+/// One row of the robustness study.
+#[derive(Clone, Debug)]
+pub struct RobustnessRow {
+    /// Relative error bound on the HLS latency estimates.
+    pub err: f64,
+    /// Fraction of trials where the winner matched the unperturbed winner.
+    pub decision_stability: f64,
+    /// Mean relative makespan deviation of the winning configuration.
+    pub mean_makespan_dev: f64,
+}
+
+/// Run the study over the matmul Fig. 5 co-design set.
+pub fn matmul_decision_stability(
+    n: u64,
+    board: &BoardConfig,
+    errs: &[f64],
+    trials: u32,
+    seed: u64,
+) -> anyhow::Result<Vec<RobustnessRow>> {
+    let cases = matmul::fig5_cases(n);
+    let part = FpgaPart::xc7z045();
+
+    // Unperturbed winner and makespans.
+    let mut base_ms = Vec::new();
+    for (cd, app) in &cases {
+        let program = app.build_program(board);
+        let mut model = EstimatorModel::new(board);
+        let res = simulate(&program, cd, board, &part, Policy::Greedy, &mut model)?;
+        base_ms.push(res.makespan_ms());
+    }
+    let base_winner = argmin(&base_ms);
+
+    let mut rows = Vec::new();
+    for &err in errs {
+        let mut stable = 0u32;
+        let mut devs = Vec::new();
+        let mut rng = Rng::new(seed ^ (err * 1e6) as u64);
+        for _ in 0..trials {
+            let mut ms = Vec::new();
+            for (cd, app) in &cases {
+                let program = app.build_program(board);
+                let factors: HashMap<KernelId, f64> = (0..program.kernels.len())
+                    .map(|k| (k as KernelId, 1.0 + rng.gen_range_f64(-err, err)))
+                    .collect();
+                let mut model = PerturbedModel {
+                    inner: EstimatorModel::new(board),
+                    factors,
+                };
+                let res = simulate(&program, cd, board, &part, Policy::Greedy, &mut model)?;
+                ms.push(res.makespan_ms());
+            }
+            if argmin(&ms) == base_winner {
+                stable += 1;
+            }
+            devs.push((ms[base_winner] - base_ms[base_winner]).abs() / base_ms[base_winner]);
+        }
+        rows.push(RobustnessRow {
+            err,
+            decision_stability: stable as f64 / trials as f64,
+            mean_makespan_dev: crate::util::mean(&devs),
+        });
+    }
+    Ok(rows)
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+pub fn render(rows: &[RobustnessRow]) -> String {
+    let mut out = String::from(
+        "== Robustness: co-design decision stability vs HLS estimate error\n",
+    );
+    out.push_str(&format!(
+        "{:>10} {:>18} {:>22}\n",
+        "est. error", "decision stable", "winner makespan dev"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>9.0}% {:>17.0}% {:>21.1}%\n",
+            r.err * 100.0,
+            r.decision_stability * 100.0,
+            r.mean_makespan_dev * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_is_stable_under_moderate_error() {
+        let board = BoardConfig::zynq706();
+        let rows =
+            matmul_decision_stability(512, &board, &[0.1, 0.3], 10, 42).unwrap();
+        assert_eq!(rows.len(), 2);
+        // At ±10% HLS error the winner must essentially never flip.
+        assert!(
+            rows[0].decision_stability >= 0.9,
+            "stability at 10%: {}",
+            rows[0].decision_stability
+        );
+        // Deviation grows with error.
+        assert!(rows[1].mean_makespan_dev >= rows[0].mean_makespan_dev);
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let rows = vec![RobustnessRow {
+            err: 0.2,
+            decision_stability: 0.95,
+            mean_makespan_dev: 0.07,
+        }];
+        let s = render(&rows);
+        assert!(s.contains("20%"));
+        assert!(s.contains("95%"));
+    }
+}

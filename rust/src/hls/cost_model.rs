@@ -1,0 +1,232 @@
+//! Analytic Vivado-HLS cost model — the substitute for running Vivado HLS
+//! 2013.2 on the extracted kernel C code (DESIGN.md §1, substitution 2).
+//!
+//! The estimator toolchain needs exactly what the paper reads out of the
+//! HLS report: per-kernel compute cycles and input/output transfer cycles,
+//! plus a resource vector for the feasibility analysis. This model derives
+//! them from the kernel's [`KernelProfile`] and an unroll factor using the
+//! standard HLS latency equation
+//!
+//! ```text
+//! latency ≈ ceil(trip_count / unroll) × II + pipeline_depth
+//! ```
+//!
+//! and 7-series floating-point operator costs (LogiCORE FP v7 era):
+//! an f32 MAC ≈ 5 DSP48E1 (3 mul + 2 add), an f64 MAC ≈ 14 (11 + 3).
+//! Division/sqrt recurrences (dtrsm, dpotrf) cannot pipeline at II=1 and
+//! are modelled with II=4, matching the order of HLS's scheduling results
+//! for feedback loops of that era.
+
+use crate::config::BoardConfig;
+use crate::coordinator::task::KernelProfile;
+use crate::sim::time::transfer_ps;
+
+use super::report::{HlsReport, Resources};
+
+/// DSPs per fused multiply-add datapath lane.
+fn mac_dsps(dtype_bytes: u8) -> u64 {
+    if dtype_bytes >= 8 {
+        14 // f64: 11 (mul) + 3 (add)
+    } else {
+        5 // f32: 3 (mul) + 2 (add)
+    }
+}
+
+/// LUTs per datapath lane (operator glue + partition muxing).
+fn lane_luts(dtype_bytes: u8, divsqrt: bool) -> u64 {
+    let base = if dtype_bytes >= 8 { 900 } else { 420 };
+    // Divider/sqrt cores are LUT-heavy (no DSP mapping in that era).
+    if divsqrt {
+        base + 1_600
+    } else {
+        base
+    }
+}
+
+/// The analytic model. Stateless; all inputs are explicit so property tests
+/// can sweep it.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Fabric clock HLS targets (from the board config).
+    pub fabric_mhz: f64,
+    /// DMA bandwidth used to express transfer latencies in fabric cycles,
+    /// as Vivado HLS does for the AXI master ports.
+    pub dma_bw_mbps: f64,
+}
+
+impl CostModel {
+    pub fn from_board(board: &BoardConfig) -> Self {
+        Self {
+            fabric_mhz: board.fabric_freq_mhz,
+            dma_bw_mbps: board.dma_bw_mbps,
+        }
+    }
+
+    /// Produce the HLS report for `kernel` at `unroll`.
+    ///
+    /// Panics if `unroll == 0`.
+    pub fn estimate(&self, kernel: &str, profile: &KernelProfile, unroll: u32) -> HlsReport {
+        assert!(unroll > 0, "unroll factor must be >= 1");
+        let u = unroll as u64;
+
+        // --- latency ---
+        let ii: u32 = if profile.divsqrt { 4 } else { 1 };
+        // Pipeline depth: FP add/mul chains ~8 stages, deeper with wider
+        // reduction trees (log2(U) levels) and much deeper with div/sqrt.
+        let depth: u32 = 8
+            + 3 * (64 - (unroll as u64).leading_zeros()).saturating_sub(1)
+            + if profile.divsqrt { 24 } else { 0 };
+        let iterations = profile.inner_trip.div_ceil(u);
+        let compute_cycles = iterations * ii as u64 + depth as u64;
+
+        // --- transfers, expressed in fabric cycles as HLS reports them ---
+        let period_ps = 1e6 / self.fabric_mhz;
+        let in_cycles =
+            (transfer_ps(profile.in_bytes, self.dma_bw_mbps) as f64 / period_ps).ceil() as u64;
+        let out_cycles =
+            (transfer_ps(profile.out_bytes, self.dma_bw_mbps) as f64 / period_ps).ceil() as u64;
+
+        // --- resources ---
+        let dsps = u * mac_dsps(profile.dtype_bytes) + 12; // +12: AXI/control
+        let luts = 5_200 + u * lane_luts(profile.dtype_bytes, profile.divsqrt);
+        let ffs = luts * 2; // FF/LUT ratio ~2 for pipelined FP datapaths
+        // Local tile buffers, double-buffered, in 18Kb BRAMs (2,304 bytes
+        // each); array partitioning for U-wide access forces >= U banks.
+        let buffer_bytes = (profile.in_bytes + profile.out_bytes) * 2;
+        let bram18 = buffer_bytes.div_ceil(2_304).max(u);
+
+        HlsReport {
+            kernel: kernel.to_string(),
+            unroll,
+            ii,
+            depth,
+            compute_cycles,
+            fmax_mhz: self.fabric_mhz,
+            in_cycles,
+            out_cycles,
+            resources: Resources {
+                luts,
+                ffs,
+                dsps,
+                bram18,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::resources::FpgaPart;
+
+    fn mxm_profile(bs: u64) -> KernelProfile {
+        KernelProfile {
+            flops: 2 * bs * bs * bs,
+            inner_trip: bs * bs * bs,
+            in_bytes: 3 * bs * bs * 4,
+            out_bytes: bs * bs * 4,
+            dtype_bytes: 4,
+            divsqrt: false,
+        }
+    }
+
+    fn model() -> CostModel {
+        CostModel::from_board(&BoardConfig::zynq706())
+    }
+
+    #[test]
+    fn latency_decreases_with_unroll() {
+        let m = model();
+        let p = mxm_profile(64);
+        let mut last = u64::MAX;
+        for u in [1u32, 2, 4, 8, 16, 32, 64] {
+            let r = m.estimate("mxm64", &p, u);
+            assert!(r.compute_cycles < last, "unroll {u} did not help");
+            last = r.compute_cycles;
+        }
+    }
+
+    #[test]
+    fn resources_increase_with_unroll() {
+        let m = model();
+        let p = mxm_profile(64);
+        let r1 = m.estimate("mxm64", &p, 8);
+        let r2 = m.estimate("mxm64", &p, 32);
+        assert!(r2.resources.dsps > r1.resources.dsps);
+        assert!(r2.resources.luts > r1.resources.luts);
+    }
+
+    #[test]
+    fn paper_feasibility_one_128_fits_two_do_not() {
+        // §VI: "the hardware resource estimation for two 128x128-block
+        // mxmBlock accelerators indicates that it is not feasible".
+        let m = model();
+        let part = FpgaPart::xc7z045();
+        let r128 = m.estimate("mxm128", &mxm_profile(128), 128);
+        assert!(part.fits(&[r128.resources.clone()]), "one mxm128 must fit");
+        assert!(
+            !part.fits(&[r128.resources.clone(), r128.resources.clone()]),
+            "two mxm128 must NOT fit"
+        );
+    }
+
+    #[test]
+    fn paper_feasibility_two_64_fit() {
+        let m = model();
+        let part = FpgaPart::xc7z045();
+        let r64 = m.estimate("mxm64", &mxm_profile(64), 32);
+        assert!(part.fits(&[r64.resources.clone(), r64.resources.clone()]));
+    }
+
+    #[test]
+    fn divsqrt_kernels_pay_ii() {
+        let m = model();
+        let mut p = mxm_profile(64);
+        let plain = m.estimate("k", &p, 16);
+        p.divsqrt = true;
+        let hard = m.estimate("k", &p, 16);
+        assert_eq!(plain.ii, 1);
+        assert_eq!(hard.ii, 4);
+        assert!(hard.compute_cycles > 3 * plain.compute_cycles);
+    }
+
+    #[test]
+    fn double_precision_burns_more_dsps() {
+        let m = model();
+        let mut p = mxm_profile(64);
+        let sp = m.estimate("k", &p, 16);
+        p.dtype_bytes = 8;
+        let dp = m.estimate("k", &p, 16);
+        assert!(dp.resources.dsps > 2 * sp.resources.dsps);
+    }
+
+    #[test]
+    fn transfer_cycles_match_bandwidth() {
+        let m = model();
+        let p = mxm_profile(128); // in = 192 KiB
+        let r = m.estimate("mxm128", &p, 64);
+        // 196608 bytes at 400 MB/s = 491.52 us = 61440 cycles at 125 MHz
+        assert_eq!(r.in_cycles, 61_440);
+        assert_eq!(r.out_cycles, 20_480);
+    }
+
+    #[test]
+    fn mxm128_latency_sane() {
+        // 128^3 / 128 = 16384 iterations at II=1 + depth — near 131 us at
+        // 125 MHz, the calibration point from DESIGN.md.
+        let m = model();
+        let r = m.estimate("mxm128", &mxm_profile(128), 128);
+        let us = crate::sim::time::ps_to_us(r.compute_ps());
+        assert!(us > 125.0 && us < 140.0, "mxm128 compute = {us} us");
+    }
+
+    #[test]
+    fn bram_at_least_unroll_banks() {
+        let m = model();
+        let mut p = mxm_profile(64);
+        p.in_bytes = 256; // tiny buffers
+        p.out_bytes = 256;
+        let r = m.estimate("k", &p, 32);
+        assert!(r.resources.bram18 >= 32);
+    }
+}

@@ -1,0 +1,15 @@
+//! High-level-synthesis substrate: the analytic stand-in for Vivado HLS
+//! (latency + resource reports), the FPGA part budgets and feasibility
+//! checks, and the traditional-flow synthesis-time model used by Fig. 6.
+//!
+//! See DESIGN.md §1 (substitution 2) for the calibration rationale.
+
+pub mod cost_model;
+pub mod report;
+pub mod resources;
+pub mod synthesis_time;
+
+pub use cost_model::CostModel;
+pub use report::{HlsReport, Resources};
+pub use resources::FpgaPart;
+pub use synthesis_time::SynthesisTimeModel;

@@ -1,0 +1,166 @@
+//! HLS report structures — the information the paper extracts from Vivado
+//! HLS for each annotated kernel (§IV): estimated compute cycles and
+//! estimated input/output transfer cycles, plus the resource usage the
+//! feasibility analysis needs.
+
+use crate::sim::time::{Clock, Ps};
+
+/// Resource vector of one synthesized accelerator (7-series primitives).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// BRAM counted in 18 Kb halves (a BRAM36 = 2 × BRAM18).
+    pub bram18: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        luts: 0,
+        ffs: 0,
+        dsps: 0,
+        bram18: 0,
+    };
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            dsps: self.dsps + o.dsps,
+            bram18: self.bram18 + o.bram18,
+        }
+    }
+
+    pub fn fits_in(&self, budget: &Resources) -> bool {
+        self.luts <= budget.luts
+            && self.ffs <= budget.ffs
+            && self.dsps <= budget.dsps
+            && self.bram18 <= budget.bram18
+    }
+
+    /// Highest fractional utilization across resource classes w.r.t. a
+    /// budget (the quantity place-and-route difficulty tracks).
+    pub fn max_utilization(&self, budget: &Resources) -> f64 {
+        [
+            self.luts as f64 / budget.luts as f64,
+            self.ffs as f64 / budget.ffs as f64,
+            self.dsps as f64 / budget.dsps as f64,
+            self.bram18 as f64 / budget.bram18 as f64,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+/// One kernel variant's synthesis estimate — the stand-in for the Vivado
+/// HLS report the paper's toolchain parses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HlsReport {
+    pub kernel: String,
+    pub unroll: u32,
+    /// Achieved initiation interval of the pipelined innermost loop.
+    pub ii: u32,
+    /// Pipeline depth (fill/flush latency), cycles.
+    pub depth: u32,
+    /// Estimated compute cycles per task invocation (fabric clock).
+    pub compute_cycles: u64,
+    /// Achieved fabric clock after HLS scheduling, MHz.
+    pub fmax_mhz: f64,
+    /// Estimated cycles to DMA the inputs in (fabric clock domain).
+    pub in_cycles: u64,
+    /// Estimated cycles to DMA the outputs back (fabric clock domain).
+    pub out_cycles: u64,
+    pub resources: Resources,
+}
+
+impl HlsReport {
+    pub fn clock(&self) -> Clock {
+        Clock::new(self.fmax_mhz)
+    }
+
+    /// Compute-only latency in picoseconds.
+    pub fn compute_ps(&self) -> Ps {
+        self.clock().cycles_to_ps(self.compute_cycles)
+    }
+
+    /// Input-transfer latency in picoseconds.
+    pub fn in_ps(&self) -> Ps {
+        self.clock().cycles_to_ps(self.in_cycles)
+    }
+
+    /// Output-transfer latency in picoseconds.
+    pub fn out_ps(&self) -> Ps {
+        self.clock().cycles_to_ps(self.out_cycles)
+    }
+
+    /// Render in the style of a Vivado HLS synthesis summary (human
+    /// consumption; the `hls` CLI subcommand prints this).
+    pub fn render(&self) -> String {
+        format!(
+            "== Vivado HLS-style report: {} (U{})\n\
+             * Timing: target clock {:.1} MHz\n\
+             * Latency: compute {} cycles (II={}, depth={})\n\
+             *          xfer-in {} cycles, xfer-out {} cycles\n\
+             * Utilization: {} DSP48E, {} BRAM18K, {} LUT, {} FF\n",
+            self.kernel,
+            self.unroll,
+            self.fmax_mhz,
+            self.compute_cycles,
+            self.ii,
+            self.depth,
+            self.in_cycles,
+            self.out_cycles,
+            self.resources.dsps,
+            self.resources.bram18,
+            self.resources.luts,
+            self.resources.ffs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resources_algebra() {
+        let a = Resources {
+            luts: 100,
+            ffs: 200,
+            dsps: 10,
+            bram18: 4,
+        };
+        let b = a.add(&a);
+        assert_eq!(b.dsps, 20);
+        let budget = Resources {
+            luts: 1000,
+            ffs: 1000,
+            dsps: 25,
+            bram18: 100,
+        };
+        assert!(a.fits_in(&budget));
+        assert!(b.fits_in(&budget));
+        assert!(!b.add(&a).fits_in(&budget)); // 30 dsps > 25
+        assert!((b.max_utilization(&budget) - 0.8).abs() < 1e-12); // 20/25
+    }
+
+    #[test]
+    fn report_latency_conversion() {
+        let r = HlsReport {
+            kernel: "k".into(),
+            unroll: 1,
+            ii: 1,
+            depth: 10,
+            compute_cycles: 125_000, // 1 ms at 125 MHz
+            fmax_mhz: 125.0,
+            in_cycles: 12_500, // 100 us
+            out_cycles: 1_250, // 10 us
+            resources: Resources::ZERO,
+        };
+        assert_eq!(r.compute_ps(), 1_000_000_000);
+        assert_eq!(r.in_ps(), 100_000_000);
+        assert_eq!(r.out_ps(), 10_000_000);
+        assert!(r.render().contains("DSP48E"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Device resource budgets and co-design feasibility — the reason the paper
+//! needs an estimator at all: not every accelerator combination fits the
+//! programmable logic ("the hardware resource estimation for two
+//! 128x128-block mxmBlock accelerators indicates that it is not feasible to
+//! map them", §VI).
+
+use super::report::Resources;
+
+/// A programmable-logic part description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FpgaPart {
+    pub name: String,
+    pub budget: Resources,
+    /// Fraction of the raw budget usable before place-and-route fails or
+    /// timing collapses (routability headroom). Industry rule of thumb and
+    /// what Vivado's utilization warnings track.
+    pub routable_fraction: f64,
+}
+
+impl FpgaPart {
+    /// Zynq-7045 (ZC706 board): Kintex-7-class fabric.
+    /// 218,600 LUT / 437,200 FF / 545 BRAM36 (=1090 BRAM18) / 900 DSP48E1.
+    pub fn xc7z045() -> Self {
+        Self {
+            name: "xc7z045".into(),
+            budget: Resources {
+                luts: 218_600,
+                ffs: 437_200,
+                dsps: 900,
+                bram18: 1_090,
+            },
+            routable_fraction: 0.8,
+        }
+    }
+
+    /// Zynq-7020 (smaller Zedboard-class part) — used by tests to check the
+    /// feasibility logic generalizes.
+    pub fn xc7z020() -> Self {
+        Self {
+            name: "xc7z020".into(),
+            budget: Resources {
+                luts: 53_200,
+                ffs: 106_400,
+                dsps: 220,
+                bram18: 280,
+            },
+            routable_fraction: 0.8,
+        }
+    }
+
+    /// Zynq UltraScale+ ZU9EG (ZCU102 board): 274,080 LUT / 548,160 FF /
+    /// 912 BRAM36 (=1,824 BRAM18) / 2,520 DSP48E2.
+    pub fn xczu9eg() -> Self {
+        Self {
+            name: "xczu9eg".into(),
+            budget: Resources {
+                luts: 274_080,
+                ffs: 548_160,
+                dsps: 2_520,
+                bram18: 1_824,
+            },
+            routable_fraction: 0.8,
+        }
+    }
+
+    /// The budget after routability derating — what co-designs must fit in.
+    pub fn effective_budget(&self) -> Resources {
+        Resources {
+            luts: (self.budget.luts as f64 * self.routable_fraction) as u64,
+            ffs: (self.budget.ffs as f64 * self.routable_fraction) as u64,
+            dsps: (self.budget.dsps as f64 * self.routable_fraction) as u64,
+            bram18: (self.budget.bram18 as f64 * self.routable_fraction) as u64,
+        }
+    }
+
+    /// Do the given accelerator resource vectors fit together?
+    pub fn fits(&self, accels: &[Resources]) -> bool {
+        let total = accels
+            .iter()
+            .fold(Resources::ZERO, |acc, r| acc.add(r));
+        total.fits_in(&self.effective_budget())
+    }
+
+    /// Total utilization (max over classes, w.r.t. the *raw* budget) of a
+    /// set of accelerators — drives the synthesis-time model.
+    pub fn utilization(&self, accels: &[Resources]) -> f64 {
+        let total = accels
+            .iter()
+            .fold(Resources::ZERO, |acc, r| acc.add(r));
+        total.max_utilization(&self.budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn z7045_budget() {
+        let p = FpgaPart::xc7z045();
+        assert_eq!(p.budget.dsps, 900);
+        let eff = p.effective_budget();
+        assert_eq!(eff.dsps, 720);
+        assert_eq!(eff.bram18, 872);
+    }
+
+    #[test]
+    fn fits_is_additive() {
+        let p = FpgaPart::xc7z045();
+        let half = Resources {
+            luts: 80_000,
+            ffs: 100_000,
+            dsps: 400,
+            bram18: 300,
+        };
+        assert!(p.fits(&[half]));
+        assert!(!p.fits(&[half, half])); // 800 dsps > 720 effective
+    }
+
+    #[test]
+    fn utilization_tracks_max_class() {
+        let p = FpgaPart::xc7z045();
+        let r = Resources {
+            luts: 0,
+            ffs: 0,
+            dsps: 450,
+            bram18: 0,
+        };
+        assert!((p.utilization(&[r]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_codesign_fits() {
+        assert!(FpgaPart::xc7z045().fits(&[]));
+        assert_eq!(FpgaPart::xc7z045().utilization(&[]), 0.0);
+    }
+}

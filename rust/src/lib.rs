@@ -1,0 +1,35 @@
+//! # zynq-estimator
+//!
+//! Reproduction of *"Coarse-Grain Performance Estimator for Heterogeneous
+//! Parallel Computing Architectures like Zynq All-Programmable SoC"*
+//! (Jiménez-González et al., 2015) as a three-layer Rust + JAX + Pallas
+//! stack. See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! the paper-vs-measured record.
+//!
+//! Layer map:
+//! * `coordinator` — OmpSs-equivalent task model, dependence tracking,
+//!   trace elaboration (§IV) and scheduling policies.
+//! * `sim` — discrete-event engine + the coarse-grain estimator model.
+//! * `board` — detailed Zynq board emulator ("real execution" stand-in).
+//! * `hls` — analytic Vivado-HLS latency/resource model + feasibility.
+//! * `apps` — the paper's applications (matmul, cholesky) + extras.
+//! * `trace` — basic-trace JSON-lines IO, DOT export, Paraver writer.
+//! * `runtime` — PJRT execution of the AOT-compiled JAX/Pallas kernels.
+//! * `config` — board/co-design TOML configs.
+//! * `metrics` — speedup tables, trend agreement, report rendering.
+//! * `util` — PRNG, stats, JSON substrate.
+
+pub mod apps;
+pub mod board;
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod dse;
+pub mod hls;
+pub mod metrics;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,13 @@
+//! zynq-estimator CLI — the leader entrypoint. All command logic lives in
+//! `zynq_estimator::cli` so tests, examples and benches reuse it.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match zynq_estimator::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Makespan lower bounds — the analysis that tells a programmer *why* a
+//! configuration is slow (and the invariant harness the property tests
+//! lean on).
+//!
+//! Two classic bounds, evaluated against a concrete co-design:
+//! * **critical-path bound**: the dependence chain under each task's best
+//!   possible device time;
+//! * **work bound per device class**: total work assigned to a class
+//!   (under the must-run rules) divided by the number of servers, for SMP
+//!   cores, each kernel's accelerators, the shared submit resource and the
+//!   shared output channel.
+//!
+//! The max of these is a valid lower bound for *any* schedule, so
+//! `makespan >= bound` is asserted by the property tests, and
+//! `makespan / bound` tells the analyst how much scheduling slack remains.
+
+use crate::config::BoardConfig;
+use crate::coordinator::deps::DepGraph;
+use crate::coordinator::task::{TaskId, TaskProgram};
+use crate::sim::engine::AccelInstance;
+use crate::sim::time::{transfer_ps, us_to_ps, Ps};
+
+/// The individual bounds (all in picoseconds).
+#[derive(Clone, Debug)]
+pub struct Bounds {
+    pub critical_path: Ps,
+    /// Work bound of the busiest device class.
+    pub device_work: Ps,
+    /// Creation chain on the SMP (serialized task issue).
+    pub creation_chain: Ps,
+    /// Serialized output-DMA channel (if all tasks run on the FPGA).
+    pub output_channel: Ps,
+}
+
+impl Bounds {
+    pub fn lower_bound(&self) -> Ps {
+        self.critical_path
+            .max(self.device_work)
+            .max(self.creation_chain)
+    }
+}
+
+/// Compute bounds for a (program, accels) pair. `smp_eligible[k]` mirrors
+/// the engine's device rules.
+pub fn bounds(
+    program: &TaskProgram,
+    graph: &DepGraph,
+    board: &BoardConfig,
+    accels: &[AccelInstance],
+    smp_eligible: &[bool],
+) -> Bounds {
+    let smp_clock = board.smp_clock();
+    let n_kernels = program.kernels.len();
+    let mut accel_count = vec![0u64; n_kernels];
+    let mut accel_task_ps = vec![Ps::MAX; n_kernels];
+    for a in accels {
+        accel_count[a.kernel as usize] += 1;
+        let t = a.report.compute_ps();
+        accel_task_ps[a.kernel as usize] = accel_task_ps[a.kernel as usize].min(t);
+    }
+
+    // Best-case per-task time (used for the critical path).
+    let best_case = |t: TaskId| -> Ps {
+        let task = &program.tasks[t as usize];
+        let k = task.kernel as usize;
+        let smp = if smp_eligible[k] || accel_count[k] == 0 {
+            smp_clock.cycles_to_ps(task.smp_cycles)
+        } else {
+            Ps::MAX
+        };
+        let acc = if accel_count[k] > 0 {
+            // input DMA + compute is the occupancy; take compute only as
+            // the optimistic bound.
+            accel_task_ps[k]
+        } else {
+            Ps::MAX
+        };
+        smp.min(acc)
+    };
+    let critical_path = graph.critical_path(&|t| best_case(t));
+
+    // Per-class work bounds.
+    let mut smp_work = 0u128;
+    let mut accel_work = vec![0u128; n_kernels];
+    let mut out_bytes_total = 0u64;
+    for task in &program.tasks {
+        let k = task.kernel as usize;
+        if accel_count[k] > 0 {
+            // Optimistic: assume everything eligible for an accelerator
+            // runs there (input DMA counted — it occupies the device).
+            let in_bytes: u64 = task
+                .deps
+                .iter()
+                .filter(|d| d.dir.reads())
+                .map(|d| d.len)
+                .sum();
+            let occupancy = accel_task_ps[k] + transfer_ps(in_bytes, board.dma_bw_mbps);
+            accel_work[k] += occupancy as u128;
+            out_bytes_total += task
+                .deps
+                .iter()
+                .filter(|d| d.dir.writes())
+                .map(|d| d.len)
+                .sum::<u64>();
+        } else {
+            smp_work += smp_clock.cycles_to_ps(task.smp_cycles) as u128;
+        }
+    }
+    let mut device_work = (smp_work / board.smp_cores as u128) as Ps;
+    for k in 0..n_kernels {
+        if accel_count[k] > 0 {
+            device_work = device_work.max((accel_work[k] / accel_count[k] as u128) as Ps);
+        }
+    }
+
+    let creation_chain = us_to_ps(board.task_creation_us) * program.tasks.len() as Ps;
+    let output_channel = if board.dma_out_scales {
+        0
+    } else {
+        transfer_ps(out_bytes_total, board.dma_bw_mbps)
+    };
+
+    Bounds {
+        critical_path,
+        device_work,
+        creation_chain,
+        output_channel,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::{self, Matmul};
+    use crate::hls::FpgaPart;
+    use crate::sim::engine::resolve_codesign;
+    use crate::sim::estimate;
+
+    #[test]
+    fn makespan_respects_lower_bound_all_fig5_configs() {
+        let board = BoardConfig::zynq706();
+        for (cd, app) in matmul::fig5_cases(512) {
+            let p = app.build_program(&board);
+            let g = DepGraph::build(&p);
+            let (accels, smp) =
+                resolve_codesign(&p, &cd, &board, &FpgaPart::xc7z045()).unwrap();
+            let b = bounds(&p, &g, &board, &accels, &smp);
+            let res = estimate(&p, &cd, &board).unwrap();
+            assert!(
+                res.makespan >= b.lower_bound(),
+                "{}: makespan {} < bound {}",
+                cd.name,
+                res.makespan,
+                b.lower_bound()
+            );
+            // The bound is useful for the FPGA-only configurations (the
+            // greedy "+smp" runs sit far above any bound — that *is* the
+            // paper's load-imbalance finding, not bound looseness).
+            if cd.smp_kernels.is_empty() {
+                assert!(
+                    res.makespan < b.lower_bound() * 4,
+                    "{}: bound too loose ({} vs {})",
+                    cd.name,
+                    res.makespan,
+                    b.lower_bound()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fpga_only_config_is_near_its_work_bound() {
+        // 1acc 128: the accelerator work bound should explain most of the
+        // makespan (the estimator schedules it almost back-to-back).
+        let board = BoardConfig::zynq706();
+        let app = Matmul::new(512, 128);
+        let p = app.build_program(&board);
+        let g = DepGraph::build(&p);
+        let cd = crate::config::CoDesign::new("1acc128")
+            .with_accel("mxm128", matmul::UNROLL_128);
+        let (accels, smp) =
+            resolve_codesign(&p, &cd, &board, &FpgaPart::xc7z045()).unwrap();
+        let b = bounds(&p, &g, &board, &accels, &smp);
+        let res = estimate(&p, &cd, &board).unwrap();
+        let ratio = res.makespan as f64 / b.device_work as f64;
+        assert!(
+            ratio < 1.15,
+            "device-work bound should be tight for FPGA-only: ratio {ratio}"
+        );
+    }
+}

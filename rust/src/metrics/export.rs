@@ -1,0 +1,105 @@
+//! Machine-readable experiment export: CSV and JSON writers for the figure
+//! data, so the reproduction plots can be regenerated outside this binary
+//! (gnuplot / matplotlib) and diffed in CI.
+
+use crate::metrics::SpeedupTable;
+use crate::util::json::{arr, obj, Value};
+
+/// CSV for a Fig.5/Fig.9-style table.
+pub fn speedup_table_csv(table: &SpeedupTable) -> String {
+    let mut out = String::from("config,estimator_ms,board_ms,estimator_speedup,board_speedup\n");
+    for (i, r) in table.rows.iter().enumerate() {
+        out.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{:.6}\n",
+            csv_escape(&r.name),
+            r.estimator_ms,
+            r.board_ms,
+            table.est_speedup[i],
+            table.board_speedup[i]
+        ));
+    }
+    out
+}
+
+/// JSON document for a speedup table, with the trend metadata.
+pub fn speedup_table_json(table: &SpeedupTable, title: &str) -> String {
+    let rows: Vec<Value> = table
+        .rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            obj(vec![
+                ("config", r.name.as_str().into()),
+                ("estimator_ms", r.estimator_ms.into()),
+                ("board_ms", r.board_ms.into()),
+                ("estimator_speedup", table.est_speedup[i].into()),
+                ("board_speedup", table.board_speedup[i].into()),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("title", title.into()),
+        ("rows", arr(rows)),
+        ("kendall_tau", table.trend_agreement().into()),
+        ("best_agrees", table.best_agrees().into()),
+        (
+            "best_config",
+            table.rows[table.best_estimator()].name.as_str().into(),
+        ),
+    ])
+    .to_json()
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ConfigRow;
+
+    fn table() -> SpeedupTable {
+        SpeedupTable::build(vec![
+            ConfigRow {
+                name: "a, plain".into(),
+                estimator_ms: 10.0,
+                board_ms: 12.0,
+            },
+            ConfigRow {
+                name: "b".into(),
+                estimator_ms: 5.0,
+                board_ms: 6.0,
+            },
+        ])
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = speedup_table_csv(&table());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("config,"));
+        assert!(lines[1].starts_with("\"a, plain\"")); // escaped comma
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let j = speedup_table_json(&table(), "fig-test");
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str().unwrap(), "fig-test");
+        assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("best_config").unwrap().as_str().unwrap(), "b");
+        assert_eq!(v.get("best_agrees").unwrap().as_bool().unwrap(), true);
+    }
+
+    #[test]
+    fn csv_quote_escaping() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("with \"q\""), "\"with \"\"q\"\"\"");
+    }
+}

@@ -1,0 +1,200 @@
+//! Result analysis: normalized speedup tables (the paper's Fig. 5 / Fig. 9
+//! presentation), estimator-vs-board trend agreement, device utilization
+//! and report rendering. Submodules: `bounds` (makespan lower bounds),
+//! `export` (CSV/JSON figure data).
+
+pub mod bounds;
+pub mod export;
+
+use crate::sim::engine::{DeviceLabel, SimResult};
+use crate::util::kendall_tau;
+
+/// One configuration's timing under both models.
+#[derive(Clone, Debug)]
+pub struct ConfigRow {
+    pub name: String,
+    pub estimator_ms: f64,
+    pub board_ms: f64,
+}
+
+/// A Fig.5/Fig.9-style table: per-configuration speedups normalized to the
+/// slowest configuration of each column (the paper normalizes "with
+/// respect to the slowest case").
+#[derive(Clone, Debug)]
+pub struct SpeedupTable {
+    pub rows: Vec<ConfigRow>,
+    pub est_speedup: Vec<f64>,
+    pub board_speedup: Vec<f64>,
+}
+
+impl SpeedupTable {
+    pub fn build(rows: Vec<ConfigRow>) -> Self {
+        assert!(!rows.is_empty());
+        let est_slowest = rows
+            .iter()
+            .map(|r| r.estimator_ms)
+            .fold(f64::MIN, f64::max);
+        let board_slowest = rows.iter().map(|r| r.board_ms).fold(f64::MIN, f64::max);
+        let est_speedup = rows.iter().map(|r| est_slowest / r.estimator_ms).collect();
+        let board_speedup = rows.iter().map(|r| board_slowest / r.board_ms).collect();
+        Self {
+            rows,
+            est_speedup,
+            board_speedup,
+        }
+    }
+
+    /// Kendall rank correlation between the two speedup columns — the
+    /// quantitative version of the paper's "the same speedup trends".
+    pub fn trend_agreement(&self) -> f64 {
+        kendall_tau(&self.est_speedup, &self.board_speedup)
+    }
+
+    /// Index of the best configuration under each model. The paper's core
+    /// claim is that these agree.
+    pub fn best_estimator(&self) -> usize {
+        argmax(&self.est_speedup)
+    }
+
+    pub fn best_board(&self) -> usize {
+        argmax(&self.board_speedup)
+    }
+
+    pub fn best_agrees(&self) -> bool {
+        self.best_estimator() == self.best_board()
+    }
+
+    /// Render an ASCII version of the figure: two bars per configuration.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("== {title}\n");
+        let width = self
+            .rows
+            .iter()
+            .map(|r| r.name.len())
+            .max()
+            .unwrap_or(10)
+            .max(10);
+        let max_speedup = self
+            .est_speedup
+            .iter()
+            .chain(&self.board_speedup)
+            .fold(1.0f64, |a, &b| a.max(b));
+        out.push_str(&format!(
+            "{:width$}  {:>9}  {:>9}  {:>7}  {:>7}\n",
+            "config", "est (ms)", "real (ms)", "est x", "real x"
+        ));
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "{:width$}  {:>9.2}  {:>9.2}  {:>7.2}  {:>7.2}  ",
+                r.name, r.estimator_ms, r.board_ms, self.est_speedup[i], self.board_speedup[i]
+            ));
+            let bar = |v: f64| "#".repeat(((v / max_speedup) * 30.0).round() as usize);
+            out.push_str(&format!(
+                "E|{:<30}  R|{}\n",
+                bar(self.est_speedup[i]),
+                bar(self.board_speedup[i])
+            ));
+        }
+        out.push_str(&format!(
+            "trend agreement (Kendall tau): {:+.3}; best config agrees: {} ({} vs {})\n",
+            self.trend_agreement(),
+            self.best_agrees(),
+            self.rows[self.best_estimator()].name,
+            self.rows[self.best_board()].name,
+        ));
+        out
+    }
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Per-device utilization summary of one simulation.
+pub fn utilization_report(result: &SimResult) -> String {
+    let mut devs: Vec<(&DeviceLabel, &u64)> = result.device_busy.iter().collect();
+    devs.sort_by_key(|(d, _)| **d);
+    let mut out = format!(
+        "makespan {:.3} ms | {} tasks on SMP, {} on FPGA\n",
+        result.makespan_ms(),
+        result.tasks_on_smp,
+        result.tasks_on_accel
+    );
+    for (d, busy) in devs {
+        let pct = if result.makespan > 0 {
+            *busy as f64 / result.makespan as f64 * 100.0
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "  {:16} busy {:>6.1}%  ({:.3} ms)\n",
+            d.display(&result.accel_kernels),
+            pct,
+            crate::sim::time::ps_to_ms(*busy)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<ConfigRow> {
+        vec![
+            ConfigRow {
+                name: "a".into(),
+                estimator_ms: 100.0,
+                board_ms: 140.0,
+            },
+            ConfigRow {
+                name: "b".into(),
+                estimator_ms: 50.0,
+                board_ms: 80.0,
+            },
+            ConfigRow {
+                name: "c".into(),
+                estimator_ms: 25.0,
+                board_ms: 50.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn speedups_normalized_to_slowest() {
+        let t = SpeedupTable::build(rows());
+        assert_eq!(t.est_speedup, vec![1.0, 2.0, 4.0]);
+        assert_eq!(t.board_speedup, vec![1.0, 1.75, 2.8]);
+    }
+
+    #[test]
+    fn trend_agreement_perfect_here() {
+        let t = SpeedupTable::build(rows());
+        assert_eq!(t.trend_agreement(), 1.0);
+        assert!(t.best_agrees());
+        assert_eq!(t.best_estimator(), 2);
+    }
+
+    #[test]
+    fn disagreement_detected() {
+        let mut r = rows();
+        r[2].board_ms = 200.0; // board says c is slowest
+        let t = SpeedupTable::build(r);
+        assert!(t.trend_agreement() < 1.0);
+        assert!(!t.best_agrees());
+    }
+
+    #[test]
+    fn render_contains_all_configs() {
+        let t = SpeedupTable::build(rows());
+        let s = t.render("Fig test");
+        for name in ["a", "b", "c"] {
+            assert!(s.contains(name));
+        }
+        assert!(s.contains("Kendall"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Power and energy estimation — the paper's §VII future work ("integrate
+//! power-efficiency ... into the simulator"), implemented as a first-class
+//! extension.
+//!
+//! The model is the standard platform-level decomposition used by the ESL
+//! estimation work the paper cites ([11], [19]): per-device *static* power
+//! whenever the platform is on, plus *dynamic* power while a device is
+//! busy, integrated over the simulated timeline. Constants default to
+//! public Zynq-7045 numbers (XPE-era): PS ≈ 1.5 W static + ~0.7 W/core
+//! dynamic; fabric static ≈ 0.25 W plus leakage proportional to the
+//! configured area; accelerator dynamic power scales with DSP/BRAM/LUT
+//! usage and clock; DMA engines a few hundred mW while streaming.
+//!
+//! Output: energy per configuration and the energy-delay product, so the
+//! co-design sweep can rank by performance, energy, or EDP — which flips
+//! winners exactly the way the future-work section anticipates.
+
+use crate::hls::Resources;
+use crate::sim::engine::{DeviceLabel, SimResult};
+
+/// Platform power constants (watts). See module docs for provenance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PowerModel {
+    /// PS static power (regulators, DDR PHY, always-on).
+    pub ps_static_w: f64,
+    /// Per-A9-core dynamic power while executing.
+    pub smp_dynamic_w: f64,
+    /// PL static power for the configured device (leakage floor).
+    pub pl_static_w: f64,
+    /// PL leakage per 1% of fabric utilization.
+    pub pl_static_per_util_w: f64,
+    /// Dynamic watts per active DSP slice at 100 MHz (scaled by clock).
+    pub w_per_dsp_100mhz: f64,
+    /// Dynamic watts per active BRAM18 at 100 MHz.
+    pub w_per_bram_100mhz: f64,
+    /// Dynamic watts per 10k LUTs at 100 MHz.
+    pub w_per_10kluts_100mhz: f64,
+    /// DMA engine power while a channel streams.
+    pub dma_dynamic_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        Self {
+            ps_static_w: 1.5,
+            smp_dynamic_w: 0.7,
+            pl_static_w: 0.25,
+            pl_static_per_util_w: 0.006,
+            w_per_dsp_100mhz: 0.0023,
+            w_per_bram_100mhz: 0.0028,
+            w_per_10kluts_100mhz: 0.012,
+            dma_dynamic_w: 0.35,
+        }
+    }
+}
+
+/// Energy report for one simulated configuration.
+#[derive(Clone, Debug)]
+pub struct EnergyReport {
+    pub makespan_s: f64,
+    pub static_j: f64,
+    pub smp_dynamic_j: f64,
+    pub accel_dynamic_j: f64,
+    pub dma_dynamic_j: f64,
+}
+
+impl EnergyReport {
+    pub fn total_j(&self) -> f64 {
+        self.static_j + self.smp_dynamic_j + self.accel_dynamic_j + self.dma_dynamic_j
+    }
+
+    /// Energy-delay product (J·s) — the metric that penalizes both slow
+    /// and power-hungry co-designs.
+    pub fn edp(&self) -> f64 {
+        self.total_j() * self.makespan_s
+    }
+
+    pub fn mean_power_w(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.total_j() / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+}
+
+impl PowerModel {
+    /// Dynamic power of one accelerator instance while busy.
+    pub fn accel_dynamic_w(&self, res: &Resources, fmax_mhz: f64) -> f64 {
+        let clock_scale = fmax_mhz / 100.0;
+        clock_scale
+            * (res.dsps as f64 * self.w_per_dsp_100mhz
+                + res.bram18 as f64 * self.w_per_bram_100mhz
+                + res.luts as f64 / 10_000.0 * self.w_per_10kluts_100mhz)
+    }
+
+    /// Integrate energy over a simulation result. `accel_resources[i]` is
+    /// the resource vector of accelerator instance `i`; `fabric_util` the
+    /// total PL utilization of the co-design in [0, 1].
+    pub fn energy(
+        &self,
+        result: &SimResult,
+        accel_resources: &[Resources],
+        fabric_util: f64,
+        fabric_mhz: f64,
+    ) -> EnergyReport {
+        let makespan_s = result.makespan as f64 / 1e12;
+        let pl_static =
+            self.pl_static_w + self.pl_static_per_util_w * (fabric_util * 100.0);
+        let static_j = (self.ps_static_w + pl_static) * makespan_s;
+
+        let mut smp_dynamic_j = 0.0;
+        let mut accel_dynamic_j = 0.0;
+        let mut dma_dynamic_j = 0.0;
+        for (dev, busy_ps) in &result.device_busy {
+            let busy_s = *busy_ps as f64 / 1e12;
+            match dev {
+                DeviceLabel::Smp(_) => smp_dynamic_j += self.smp_dynamic_w * busy_s,
+                DeviceLabel::Accel(i) => {
+                    let res = accel_resources
+                        .get(*i as usize)
+                        .copied()
+                        .unwrap_or(Resources::ZERO);
+                    accel_dynamic_j += self.accel_dynamic_w(&res, fabric_mhz) * busy_s;
+                }
+                DeviceLabel::DmaSubmit => smp_dynamic_j += self.smp_dynamic_w * 0.3 * busy_s,
+                DeviceLabel::DmaChan(_) => dma_dynamic_j += self.dma_dynamic_w * busy_s,
+            }
+        }
+        EnergyReport {
+            makespan_s,
+            static_j,
+            smp_dynamic_j,
+            accel_dynamic_j,
+            dma_dynamic_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::{self, Matmul};
+    use crate::config::BoardConfig;
+    use crate::hls::{CostModel, FpgaPart};
+    use crate::sim::estimate;
+
+    fn energy_of(cd_name: &str) -> EnergyReport {
+        let board = BoardConfig::zynq706();
+        let (cd, app) = matmul::fig5_cases(512)
+            .into_iter()
+            .find(|(cd, _)| cd.name == cd_name)
+            .unwrap();
+        let p = app.build_program(&board);
+        let res = estimate(&p, &cd, &board).unwrap();
+        let cm = CostModel::from_board(&board);
+        let resources: Vec<Resources> = cd
+            .accels
+            .iter()
+            .map(|a| {
+                let kid = p.kernel_id(&a.kernel).unwrap();
+                cm.estimate(&a.kernel, &p.kernel(kid).profile, a.unroll)
+                    .resources
+            })
+            .collect();
+        let util = FpgaPart::xc7z045().utilization(&resources);
+        PowerModel::default().energy(&res, &resources, util, board.fabric_freq_mhz)
+    }
+
+    #[test]
+    fn energy_components_positive_and_consistent() {
+        let e = energy_of("1acc 128");
+        assert!(e.static_j > 0.0);
+        assert!(e.accel_dynamic_j > 0.0);
+        assert!(e.total_j() >= e.static_j);
+        assert!(e.mean_power_w() > 1.5, "must exceed PS static");
+        assert!(e.mean_power_w() < 15.0, "implausible for a Zynq board");
+    }
+
+    #[test]
+    fn fpga_only_beats_smp_heavy_on_energy() {
+        // The heterogeneous config burns both A9 cores for 5x longer —
+        // it must lose on energy, not just time.
+        let fpga = energy_of("1acc 128");
+        let smp = energy_of("1acc 128 + smp");
+        assert!(fpga.total_j() < smp.total_j());
+        assert!(fpga.edp() < smp.edp());
+    }
+
+    #[test]
+    fn accel_power_scales_with_area_and_clock() {
+        let pm = PowerModel::default();
+        let small = Resources {
+            luts: 10_000,
+            ffs: 20_000,
+            dsps: 100,
+            bram18: 50,
+        };
+        let big = Resources {
+            luts: 60_000,
+            ffs: 120_000,
+            dsps: 600,
+            bram18: 300,
+        };
+        assert!(pm.accel_dynamic_w(&big, 125.0) > pm.accel_dynamic_w(&small, 125.0));
+        assert!(pm.accel_dynamic_w(&small, 250.0) > pm.accel_dynamic_w(&small, 125.0));
+    }
+
+    #[test]
+    fn static_energy_grows_with_makespan() {
+        let fast = energy_of("1acc 128");
+        let slow = energy_of("1acc 64");
+        assert!(slow.makespan_s > fast.makespan_s);
+        assert!(slow.static_j > fast.static_j);
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust. Python never runs
+//! on this path: the artifacts are plain HLO *text* (see
+//! /opt/xla-example/README.md — serialized protos from jax >= 0.5 are
+//! rejected by xla_extension 0.5.1), compiled once per process by the PJRT
+//! CPU client and cached.
+//!
+//! The end-to-end example (`examples/e2e_matmul.rs`) uses this to actually
+//! *execute* the application whose schedule the estimator predicted —
+//! numerically validating the kernels while the simulator supplies the
+//! Zynq timing.
+
+pub mod executor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// A compiled kernel executable with its I/O contract.
+pub struct KernelExe {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected input ranks/sizes, purely informational.
+    pub path: PathBuf,
+}
+
+/// Registry of compiled kernels, keyed by artifact stem
+/// (`artifacts/mxm64.hlo.txt` → `"mxm64"`). Compilation happens once per
+/// kernel; execution is thread-safe behind the client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    kernels: Mutex<HashMap<String, KernelExe>>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Self {
+            client,
+            kernels: Mutex::new(HashMap::new()),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// List artifact stems available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if let Ok(dir) = std::fs::read_dir(&self.artifacts_dir) {
+            for e in dir.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    v.push(stem.to_string());
+                }
+            }
+        }
+        v.sort();
+        v
+    }
+
+    /// Load + compile a kernel (no-op if already compiled).
+    pub fn load(&self, name: &str) -> Result<()> {
+        let mut kernels = self.kernels.lock().unwrap();
+        if kernels.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        kernels.insert(
+            name.to_string(),
+            KernelExe {
+                name: name.to_string(),
+                exe,
+                path,
+            },
+        );
+        Ok(())
+    }
+
+    /// Execute a kernel on f32 input buffers (each a flattened `[n, n]`
+    /// tile). Returns the first output, flattened. The artifacts are
+    /// lowered with `return_tuple=True`, so the result is a 1-tuple.
+    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        let kernels = self.kernels.lock().unwrap();
+        let k = kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel '{name}' not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Convenience: square-tile matmul-accumulate artifact
+    /// `c' = a @ b + c` over `[bs, bs]` f32 tiles.
+    pub fn run_mxm(&self, name: &str, bs: usize, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        let dims = [bs as i64, bs as i64];
+        anyhow::ensure!(
+            a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs,
+            "tile size mismatch"
+        );
+        self.run_f32(name, &[(a, &dims), (b, &dims), (c, &dims)])
+    }
+}
+
+/// Pure-Rust reference implementations used to validate PJRT outputs in
+/// the e2e example and tests.
+pub mod reference {
+    /// `c += a @ b` on `bs×bs` row-major f32 tiles.
+    pub fn mxm_block(bs: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        for i in 0..bs {
+            for k in 0..bs {
+                let av = a[i * bs + k];
+                for j in 0..bs {
+                    c[i * bs + j] += av * b[k * bs + j];
+                }
+            }
+        }
+    }
+
+    /// Full blocked matmul driver mirroring the paper's Fig. 1 loop nest.
+    pub fn blocked_matmul(n: usize, bs: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        let nb = n / bs;
+        let mut ta = vec![0f32; bs * bs];
+        let mut tb = vec![0f32; bs * bs];
+        let mut tc = vec![0f32; bs * bs];
+        for k in 0..nb {
+            for i in 0..nb {
+                for j in 0..nb {
+                    copy_tile(n, bs, a, i, k, &mut ta);
+                    copy_tile(n, bs, b, k, j, &mut tb);
+                    copy_tile(n, bs, c, i, j, &mut tc);
+                    mxm_block(bs, &ta, &tb, &mut tc);
+                    paste_tile(n, bs, c, i, j, &tc);
+                }
+            }
+        }
+    }
+
+    pub fn copy_tile(n: usize, bs: usize, m: &[f32], bi: usize, bj: usize, tile: &mut [f32]) {
+        for r in 0..bs {
+            let src = (bi * bs + r) * n + bj * bs;
+            tile[r * bs..(r + 1) * bs].copy_from_slice(&m[src..src + bs]);
+        }
+    }
+
+    pub fn paste_tile(n: usize, bs: usize, m: &mut [f32], bi: usize, bj: usize, tile: &[f32]) {
+        for r in 0..bs {
+            let dst = (bi * bs + r) * n + bj * bs;
+            m[dst..dst + bs].copy_from_slice(&tile[r * bs..(r + 1) * bs]);
+        }
+    }
+
+    /// Max absolute difference.
+    pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::reference::*;
+
+    #[test]
+    fn reference_mxm_block() {
+        // 2x2: [[1,2],[3,4]] @ [[1,1],[1,1]] + 0 = [[3,3],[7,7]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 1.0, 1.0, 1.0];
+        let mut c = [0.0; 4];
+        mxm_block(2, &a, &b, &mut c);
+        assert_eq!(c, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn blocked_matches_flat() {
+        let n = 8;
+        let bs = 4;
+        let a: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let mut c_blocked = vec![0f32; n * n];
+        blocked_matmul(n, bs, &a, &b, &mut c_blocked);
+        // Flat reference.
+        let mut c_flat = vec![0f32; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                for j in 0..n {
+                    c_flat[i * n + j] += a[i * n + k] * b[k * n + j];
+                }
+            }
+        }
+        assert!(max_abs_diff(&c_blocked, &c_flat) < 1e-4);
+    }
+
+    #[test]
+    fn tile_copy_paste_roundtrip() {
+        let n = 8;
+        let bs = 4;
+        let m: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        let mut tile = vec![0f32; bs * bs];
+        copy_tile(n, bs, &m, 1, 1, &mut tile);
+        let mut m2 = m.clone();
+        paste_tile(n, bs, &mut m2, 1, 1, &tile);
+        assert_eq!(m, m2);
+    }
+}
+
+impl Runtime {
+    /// Wall-clock one kernel execution (min over `reps`, milliseconds).
+    /// This is the repository's analogue of the paper's gettimeofday
+    /// instrumentation: `trace --measure` uses the *measured ratios*
+    /// between kernels instead of the analytic SMP model, so the basic
+    /// trace carries empirical relative costs exactly as an instrumented
+    /// sequential run would.
+    pub fn time_kernel_ms(&self, name: &str, bs: usize, n_inputs: usize, reps: u32) -> Result<f64> {
+        self.load(name)?;
+        let dims = [bs as i64, bs as i64];
+        let tile: Vec<f32> = (0..bs * bs).map(|i| (i % 97) as f32 * 0.013).collect();
+        let inputs: Vec<(&[f32], &[i64])> =
+            (0..n_inputs).map(|_| (tile.as_slice(), &dims[..])).collect();
+        // Warm-up (compile caches, allocator).
+        self.run_f32(name, &inputs)?;
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t = std::time::Instant::now();
+            self.run_f32(name, &inputs)?;
+            best = best.min(t.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(best)
+    }
+}

@@ -1,0 +1,165 @@
+//! DMA transfer model — the Fig. 3 behaviour.
+//!
+//! On the ZC706 environment the paper analyzes, *input* DMA transfers use
+//! per-accelerator channels and scale with the number of accelerators,
+//! while *output* transfers serialize on a shared resource ("the input
+//! parameters seem to scale with the number of accelerators, but not the
+//! output parameters", §IV). This module provides the closed-form transfer
+//! model used both by the Fig. 3 microbenchmark and by the cost models, and
+//! the contention-aware variant the board emulator layers on top.
+
+use crate::config::BoardConfig;
+use crate::sim::time::{transfer_ps, Ps};
+
+/// Closed-form model of moving `bytes` of *input* data split evenly across
+/// `accels` accelerators (one channel each when the platform scales).
+pub fn input_transfer_ps(board: &BoardConfig, bytes: u64, accels: u32) -> Ps {
+    assert!(accels >= 1);
+    if board.dma_in_scales {
+        // Parallel channels: wall-clock = largest share.
+        transfer_ps(bytes.div_ceil(accels as u64), board.dma_bw_mbps)
+    } else {
+        transfer_ps(bytes, board.dma_bw_mbps)
+    }
+}
+
+/// Closed-form model of moving `bytes` of *output* data produced by
+/// `accels` accelerators.
+pub fn output_transfer_ps(board: &BoardConfig, bytes: u64, accels: u32) -> Ps {
+    assert!(accels >= 1);
+    if board.dma_out_scales {
+        transfer_ps(bytes.div_ceil(accels as u64), board.dma_bw_mbps)
+    } else {
+        // Shared channel: fully serialized regardless of accel count.
+        transfer_ps(bytes, board.dma_bw_mbps)
+    }
+}
+
+/// Contention-degraded bandwidth: `streams` concurrent transfers share the
+/// memory ports, each seeing `bw / (1 + alpha * (streams - 1))`. This is
+/// the detail the coarse-grain estimator deliberately ignores and the
+/// board emulator charges.
+pub fn contended_bw_mbps(bw_mbps: f64, alpha: f64, streams: u32) -> f64 {
+    assert!(streams >= 1);
+    bw_mbps / (1.0 + alpha * (streams as f64 - 1.0))
+}
+
+/// Board-emulator variant of [`input_transfer_ps`]: parallel channels, but
+/// each channel's bandwidth degraded by port contention.
+pub fn input_transfer_contended_ps(board: &BoardConfig, bytes: u64, accels: u32) -> Ps {
+    assert!(accels >= 1);
+    if board.dma_in_scales {
+        let bw = contended_bw_mbps(board.dma_bw_mbps, board.emu.contention_alpha, accels);
+        transfer_ps(bytes.div_ceil(accels as u64), bw)
+    } else {
+        transfer_ps(bytes, board.dma_bw_mbps)
+    }
+}
+
+/// One row of the Fig. 3 microbenchmark: speedup of `accels` accelerators
+/// vs 1 for a transfer of `bytes`, for inputs and outputs, under a model.
+#[derive(Clone, Copy, Debug)]
+pub struct DmaSpeedup {
+    pub bytes: u64,
+    pub accels: u32,
+    pub input_speedup: f64,
+    pub output_speedup: f64,
+}
+
+/// Compute Fig. 3's rows under the *estimator* model (ideal scaling).
+pub fn fig3_estimator(board: &BoardConfig, bytes: u64, accels: u32) -> DmaSpeedup {
+    let in1 = input_transfer_ps(board, bytes, 1) as f64;
+    let ink = input_transfer_ps(board, bytes, accels) as f64;
+    let out1 = output_transfer_ps(board, bytes, 1) as f64;
+    let outk = output_transfer_ps(board, bytes, accels) as f64;
+    DmaSpeedup {
+        bytes,
+        accels,
+        input_speedup: in1 / ink,
+        output_speedup: out1 / outk,
+    }
+}
+
+/// Compute Fig. 3's rows under the *board* model (contention included) —
+/// the numbers the paper actually measured on the ZC706.
+pub fn fig3_board(board: &BoardConfig, bytes: u64, accels: u32) -> DmaSpeedup {
+    let in1 = input_transfer_contended_ps(board, bytes, 1) as f64;
+    let ink = input_transfer_contended_ps(board, bytes, accels) as f64;
+    let out1 = output_transfer_ps(board, bytes, 1) as f64;
+    let outk = output_transfer_ps(board, bytes, accels) as f64;
+    DmaSpeedup {
+        bytes,
+        accels,
+        input_speedup: in1 / ink,
+        output_speedup: out1 / outk,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board() -> BoardConfig {
+        BoardConfig::zynq706()
+    }
+
+    #[test]
+    fn input_scales_output_does_not() {
+        let b = board();
+        let bytes = 512 * 1024;
+        let s = fig3_estimator(&b, bytes, 2);
+        assert!((s.input_speedup - 2.0).abs() < 1e-9, "ideal input scaling");
+        assert!((s.output_speedup - 1.0).abs() < 1e-9, "output serialized");
+    }
+
+    #[test]
+    fn fig3_board_trend_matches_paper() {
+        // Paper Fig. 3: with 2 accelerators the input transfers speed up
+        // close to 2x (but measurably below), outputs stay at ~1x, for both
+        // 512 KB and 1024 KB.
+        let b = board();
+        for bytes in [512 * 1024, 1024 * 1024] {
+            let s = fig3_board(&b, bytes, 2);
+            assert!(
+                s.input_speedup > 1.6 && s.input_speedup < 2.0,
+                "input speedup {} out of the paper's band",
+                s.input_speedup
+            );
+            assert!((s.output_speedup - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn contention_monotone_in_streams() {
+        let mut last = f64::INFINITY;
+        for k in 1..=8 {
+            let bw = contended_bw_mbps(400.0, 0.2, k);
+            assert!(bw < last || k == 1);
+            last = bw;
+        }
+    }
+
+    #[test]
+    fn non_scaling_platform_input_serializes() {
+        let mut b = board();
+        b.dma_in_scales = false;
+        let s = fig3_estimator(&b, 1 << 20, 4);
+        assert!((s.input_speedup - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_output_platform() {
+        let mut b = board();
+        b.dma_out_scales = true;
+        let s = fig3_estimator(&b, 1 << 20, 2);
+        assert!((s.output_speedup - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_times_proportional_to_bytes() {
+        let b = board();
+        let t1 = input_transfer_ps(&b, 1 << 20, 1);
+        let t2 = input_transfer_ps(&b, 2 << 20, 1);
+        assert_eq!(t2, 2 * t1);
+    }
+}

@@ -1,0 +1,150 @@
+//! The coarse-grain performance estimator's timing model — the paper's
+//! contribution. Deliberately ignores memory hierarchy, contention,
+//! coherence and OS effects (§VI: "our estimator does not consider memory
+//! hierarchy aspects like cache coherence and pinning of memory pages,
+//! neither memory contention"): every cost is a clean closed form over the
+//! basic trace, the HLS report and the board parameters.
+
+use crate::config::BoardConfig;
+use crate::sim::engine::{TaskCtx, TimingModel};
+use crate::sim::time::{transfer_ps, us_to_ps, Clock, Ps};
+
+/// Deterministic coarse-grain cost model.
+#[derive(Clone, Debug)]
+pub struct EstimatorModel {
+    smp_clock: Clock,
+}
+
+impl EstimatorModel {
+    pub fn new(board: &BoardConfig) -> Self {
+        Self {
+            smp_clock: board.smp_clock(),
+        }
+    }
+}
+
+impl TimingModel for EstimatorModel {
+    fn needs_coherence(&self) -> bool {
+        false // §VI: the coarse-grain estimator ignores cache coherence
+    }
+
+    fn creation_ps(&mut self, board: &BoardConfig) -> Ps {
+        us_to_ps(board.task_creation_us)
+    }
+
+    fn smp_compute_ps(&mut self, ctx: &TaskCtx, _board: &BoardConfig) -> Ps {
+        // The basic trace carries the measured (or modelled) ARM cycles.
+        self.smp_clock
+            .cycles_to_ps(ctx.program.tasks[ctx.task as usize].smp_cycles)
+    }
+
+    fn accel_occupancy_ps(
+        &mut self,
+        ctx: &TaskCtx,
+        board: &BoardConfig,
+        input_in_occupancy: bool,
+    ) -> Ps {
+        let report = ctx
+            .report
+            .expect("accel occupancy requires an HLS report");
+        let compute = report.compute_ps();
+        if input_in_occupancy {
+            // §IV: "the time associated with a task running in a hardware
+            // accelerator device can be seen as the time of the input data
+            // DMA transfer plus the computation time".
+            compute + transfer_ps(ctx.xfers.bytes_in, board.dma_bw_mbps)
+        } else {
+            compute
+        }
+    }
+
+    fn submit_ps(&mut self, n_transfers: u32, board: &BoardConfig) -> Ps {
+        us_to_ps(board.dma_submit_us) * n_transfers as Ps
+    }
+
+    fn dma_ps(&mut self, bytes: u64, _ctx: &TaskCtx, board: &BoardConfig) -> Ps {
+        transfer_ps(bytes, board.dma_bw_mbps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Dep, KernelDecl, KernelProfile, Targets, TaskProgram};
+
+    fn fixture() -> (TaskProgram, BoardConfig) {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::BOTH,
+            profile: KernelProfile {
+                flops: 1000,
+                inner_trip: 1000,
+                in_bytes: 4000,
+                out_bytes: 2000,
+                dtype_bytes: 4,
+                divsqrt: false,
+            },
+        });
+        p.add_task(k, 667_000, vec![Dep::inout(0x10, 2000)]); // 1 ms at 667 MHz
+        (p, BoardConfig::zynq706())
+    }
+
+    fn ctx<'a>(p: &'a TaskProgram) -> TaskCtx<'a> {
+        TaskCtx {
+            task: 0,
+            kernel: 0,
+            program: p,
+            xfers: crate::coordinator::elaborate::Xfers {
+                n_in: 1,
+                n_out: 1,
+                bytes_in: 4000,
+                bytes_out: 2000,
+            },
+            report: None,
+            accels_for_kernel: 1,
+            active_dma_streams: 0,
+            cross_device_inputs: 0,
+            now: 0,
+        }
+    }
+
+    #[test]
+    fn smp_cost_follows_trace_cycles() {
+        let (p, b) = fixture();
+        let mut m = EstimatorModel::new(&b);
+        let c = ctx(&p);
+        let ps = m.smp_compute_ps(&c, &b);
+        // 667000 cycles at 667 MHz = 1 ms
+        assert!((ps as i64 - 1_000_000_000).abs() < 1000);
+    }
+
+    #[test]
+    fn submit_scales_with_transfer_count() {
+        let (_p, b) = fixture();
+        let mut m = EstimatorModel::new(&b);
+        assert_eq!(m.submit_ps(3, &b), 3 * us_to_ps(b.dma_submit_us));
+        assert_eq!(m.submit_ps(0, &b), 0);
+    }
+
+    #[test]
+    fn dma_matches_bandwidth() {
+        let (p, b) = fixture();
+        let mut m = EstimatorModel::new(&b);
+        let c = ctx(&p);
+        // 400 MB/s: 4000 bytes = 10 us
+        assert_eq!(m.dma_ps(4_000_000, &c, &b), us_to_ps(10_000.0));
+    }
+
+    #[test]
+    fn estimator_is_deterministic() {
+        let (p, b) = fixture();
+        let mut m1 = EstimatorModel::new(&b);
+        let mut m2 = EstimatorModel::new(&b);
+        let c = ctx(&p);
+        for _ in 0..5 {
+            assert_eq!(m1.smp_compute_ps(&c, &b), m2.smp_compute_ps(&c, &b));
+            assert_eq!(m1.creation_ps(&b), m2.creation_ps(&b));
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Simulation substrate: time/clock domains, the discrete-event engine,
+//! the DMA transfer model and the coarse-grain estimator timing model.
+//!
+//! The high-level entry points are [`estimate`] and [`emulate`]: run one
+//! (program, co-design) pair under the coarse-grain estimator or under the
+//! detailed board emulator respectively.
+
+pub mod dma;
+pub mod engine;
+pub mod estimator;
+pub mod time;
+
+use crate::board::BoardModel;
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::deps::DepGraph;
+use crate::coordinator::elaborate::ElabProgram;
+use crate::coordinator::sched::Policy;
+use crate::coordinator::task::TaskProgram;
+use crate::hls::FpgaPart;
+
+pub use engine::{
+    resolve_codesign, AccelInstance, DeviceLabel, SegKind, Segment, SimResult, Simulator,
+    TaskCtx, TimingModel,
+};
+pub use estimator::EstimatorModel;
+
+/// Run a program under a co-design with an arbitrary timing model.
+pub fn simulate(
+    program: &TaskProgram,
+    codesign: &CoDesign,
+    board: &BoardConfig,
+    part: &FpgaPart,
+    policy: Policy,
+    timing: &mut dyn TimingModel,
+) -> anyhow::Result<SimResult> {
+    let graph = DepGraph::build(program);
+    let elab = ElabProgram::build(program, &graph);
+    let (accels, smp_eligible) = resolve_codesign(program, codesign, board, part)?;
+    let sim = Simulator::new(program, &elab, board, &accels, &smp_eligible, policy);
+    Ok(sim.run(timing))
+}
+
+/// Run under the coarse-grain estimator (the paper's tool).
+pub fn estimate(
+    program: &TaskProgram,
+    codesign: &CoDesign,
+    board: &BoardConfig,
+) -> anyhow::Result<SimResult> {
+    let mut model = EstimatorModel::new(board);
+    simulate(
+        program,
+        codesign,
+        board,
+        &FpgaPart::xc7z045(),
+        Policy::Greedy,
+        &mut model,
+    )
+}
+
+/// Run under the detailed board emulator (the "real execution" stand-in).
+pub fn emulate(
+    program: &TaskProgram,
+    codesign: &CoDesign,
+    board: &BoardConfig,
+) -> anyhow::Result<SimResult> {
+    let mut model = BoardModel::new(board);
+    simulate(
+        program,
+        codesign,
+        board,
+        &FpgaPart::xc7z045(),
+        Policy::Greedy,
+        &mut model,
+    )
+}
+
+/// Run the board emulator `reps` times with distinct seeds and return the
+/// mean makespan in ms — mirroring the paper's "average elapsed execution
+/// time of 10 application executions".
+pub fn emulate_mean_ms(
+    program: &TaskProgram,
+    codesign: &CoDesign,
+    board: &BoardConfig,
+    reps: u32,
+) -> anyhow::Result<f64> {
+    let mut total = 0.0;
+    for i in 0..reps {
+        let mut b = board.clone();
+        b.emu.seed = board.emu.seed.wrapping_add(i as u64 * 0x9E37_79B9);
+        let r = emulate(program, codesign, &b)?;
+        total += r.makespan_ms();
+    }
+    Ok(total / reps as f64)
+}

@@ -1,0 +1,127 @@
+//! Simulated time: picosecond-resolution timestamps and clock domains.
+//!
+//! The Zynq APSoC has (at least) three relevant clock domains — the ARM
+//! Cortex-A9 PS clock (667 MHz on the Z-7045/ZC706), the programmable-logic
+//! fabric clock produced by Vivado HLS (100–150 MHz for the paper's
+//! generation), and the DMA/AXI interconnect. Mixing "cycles" across domains
+//! is the classic source of estimator bugs, so all engine time is carried in
+//! integer **picoseconds** and converted at the edges.
+
+/// Simulated time in picoseconds. u64 covers ~213 days of simulated time.
+pub type Ps = u64;
+
+pub const PS_PER_NS: u64 = 1_000;
+pub const PS_PER_US: u64 = 1_000_000;
+pub const PS_PER_MS: u64 = 1_000_000_000;
+pub const PS_PER_S: u64 = 1_000_000_000_000;
+
+/// A clock domain with a frequency in MHz.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Clock {
+    pub freq_mhz: f64,
+}
+
+impl Clock {
+    pub fn new(freq_mhz: f64) -> Self {
+        assert!(freq_mhz > 0.0, "clock frequency must be positive");
+        Self { freq_mhz }
+    }
+
+    /// Clock period in picoseconds (fractional; callers round per-interval,
+    /// not per-cycle, to keep error bounded).
+    #[inline]
+    pub fn period_ps(&self) -> f64 {
+        1e6 / self.freq_mhz
+    }
+
+    /// Convert a cycle count in this domain to picoseconds (rounded to the
+    /// nearest ps over the whole interval).
+    #[inline]
+    pub fn cycles_to_ps(&self, cycles: u64) -> Ps {
+        (cycles as f64 * self.period_ps()).round() as Ps
+    }
+
+    /// Convert picoseconds to cycles in this domain (ceiling: an interval
+    /// occupies the cycle it ends in).
+    #[inline]
+    pub fn ps_to_cycles(&self, ps: Ps) -> u64 {
+        (ps as f64 / self.period_ps()).ceil() as u64
+    }
+}
+
+/// Convert microseconds (f64, used by config files) to picoseconds.
+#[inline]
+pub fn us_to_ps(us: f64) -> Ps {
+    (us * PS_PER_US as f64).round() as Ps
+}
+
+/// Convert picoseconds to fractional milliseconds (reporting).
+#[inline]
+pub fn ps_to_ms(ps: Ps) -> f64 {
+    ps as f64 / PS_PER_MS as f64
+}
+
+/// Convert picoseconds to fractional microseconds (reporting).
+#[inline]
+pub fn ps_to_us(ps: Ps) -> f64 {
+    ps as f64 / PS_PER_US as f64
+}
+
+/// Time to move `bytes` at `mb_per_s` (decimal MB/s, the unit DMA and AXI
+/// bandwidths are quoted in), in picoseconds.
+#[inline]
+pub fn transfer_ps(bytes: u64, mb_per_s: f64) -> Ps {
+    assert!(mb_per_s > 0.0);
+    (bytes as f64 / (mb_per_s * 1e6) * PS_PER_S as f64).round() as Ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_period() {
+        let c = Clock::new(100.0);
+        assert_eq!(c.period_ps(), 10_000.0); // 100 MHz = 10 ns
+        assert_eq!(c.cycles_to_ps(1_000), 10_000_000); // 1000 cycles = 10 us
+    }
+
+    #[test]
+    fn arm_clock_rounding_is_bounded() {
+        // 667 MHz has a non-integer ps period (1499.25 ps); converting a
+        // large interval at once keeps the rounding error < 1 ps total.
+        let c = Clock::new(667.0);
+        let ps = c.cycles_to_ps(667_000_000); // 1 s worth of cycles
+        assert!((ps as i64 - PS_PER_S as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn cycles_roundtrip() {
+        let c = Clock::new(125.0);
+        for cycles in [0u64, 1, 7, 1000, 123_456_789] {
+            let ps = c.cycles_to_ps(cycles);
+            assert_eq!(c.ps_to_cycles(ps), cycles);
+        }
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 1 MB at 400 MB/s = 2.5 ms
+        assert_eq!(transfer_ps(1_000_000, 400.0), 2_500 * PS_PER_US);
+        // 0 bytes is instantaneous
+        assert_eq!(transfer_ps(0, 400.0), 0);
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert_eq!(us_to_ps(1.5), 1_500_000);
+        assert_eq!(ps_to_ms(PS_PER_MS), 1.0);
+        assert_eq!(ps_to_us(PS_PER_US * 3), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_clock_panics() {
+        Clock::new(0.0);
+    }
+}

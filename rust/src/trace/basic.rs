@@ -1,0 +1,225 @@
+//! Basic task-trace interchange format — the §IV record, as JSON lines.
+//!
+//! Line 1 is a header object carrying the app name and the kernel table
+//! (name, targets, workload profile). Every following line is one task
+//! instance exactly as the paper's instrumented sequential binary records
+//! it: "task number, creation time and elapsed execution time in cycles in
+//! the CPU based machine, number of dependences of the task, and for each
+//! dependence: the data dependence memory address and a label indicating
+//! the direction".
+
+use std::io::{BufRead, Write};
+
+use crate::coordinator::task::{
+    Dep, Dir, KernelDecl, KernelProfile, TaskProgram, Targets,
+};
+use crate::util::json::{self, arr, obj, Value};
+
+/// Serialize a program to JSON-lines trace text.
+pub fn write_trace(program: &TaskProgram) -> String {
+    let mut out = String::new();
+    let kernels: Vec<Value> = program
+        .kernels
+        .iter()
+        .map(|k| {
+            obj(vec![
+                ("name", k.name.as_str().into()),
+                ("smp", k.targets.smp.into()),
+                ("fpga", k.targets.fpga.into()),
+                ("flops", k.profile.flops.into()),
+                ("inner_trip", k.profile.inner_trip.into()),
+                ("in_bytes", k.profile.in_bytes.into()),
+                ("out_bytes", k.profile.out_bytes.into()),
+                ("dtype_bytes", (k.profile.dtype_bytes as u64).into()),
+                ("divsqrt", k.profile.divsqrt.into()),
+            ])
+        })
+        .collect();
+    out.push_str(
+        &obj(vec![
+            ("app", program.app_name.as_str().into()),
+            ("kernels", arr(kernels)),
+        ])
+        .to_json(),
+    );
+    out.push('\n');
+    for t in &program.tasks {
+        let deps: Vec<Value> = t
+            .deps
+            .iter()
+            .map(|d| {
+                obj(vec![
+                    ("addr", d.addr.into()),
+                    ("len", d.len.into()),
+                    ("dir", d.dir.as_str().into()),
+                ])
+            })
+            .collect();
+        out.push_str(
+            &obj(vec![
+                ("task", t.id.into()),
+                ("kernel", (t.kernel as u64).into()),
+                ("create_ns", t.creation_ns.into()),
+                ("cycles", t.smp_cycles.into()),
+                ("deps", arr(deps)),
+            ])
+            .to_json(),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSON-lines trace back into a program.
+pub fn read_trace(text: &str) -> anyhow::Result<TaskProgram> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty trace"))?;
+    let h = json::parse(header).map_err(|e| anyhow::anyhow!("header: {e}"))?;
+    let mut program = TaskProgram::new(
+        h.get("app")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("header missing 'app'"))?,
+    );
+    for k in h
+        .get("kernels")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("header missing 'kernels'"))?
+    {
+        let name = k
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("kernel missing name"))?;
+        let field = |f: &str| -> anyhow::Result<u64> {
+            k.get(f)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("kernel '{name}' missing '{f}'"))
+        };
+        program.add_kernel(KernelDecl {
+            name: name.to_string(),
+            targets: Targets {
+                smp: k.get("smp").and_then(Value::as_bool).unwrap_or(false),
+                fpga: k.get("fpga").and_then(Value::as_bool).unwrap_or(false),
+            },
+            profile: KernelProfile {
+                flops: field("flops")?,
+                inner_trip: field("inner_trip")?,
+                in_bytes: field("in_bytes")?,
+                out_bytes: field("out_bytes")?,
+                dtype_bytes: field("dtype_bytes")? as u8,
+                divsqrt: k.get("divsqrt").and_then(Value::as_bool).unwrap_or(false),
+            },
+        });
+    }
+    for (lineno, line) in lines.enumerate() {
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("task line {}: {e}", lineno + 2))?;
+        let kernel = v
+            .get("kernel")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("task missing kernel"))? as u16;
+        if kernel as usize >= program.kernels.len() {
+            anyhow::bail!("task references unknown kernel {kernel}");
+        }
+        let cycles = v
+            .get("cycles")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("task missing cycles"))?;
+        let mut deps = Vec::new();
+        for d in v
+            .get("deps")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("task missing deps"))?
+        {
+            deps.push(Dep {
+                addr: d
+                    .get("addr")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("dep missing addr"))?,
+                len: d
+                    .get("len")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("dep missing len"))?,
+                dir: Dir::parse(
+                    d.get("dir")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("dep missing dir"))?,
+                )
+                .ok_or_else(|| anyhow::anyhow!("bad dep dir"))?,
+            });
+        }
+        let id = program.add_task(kernel, cycles, deps);
+        if let Some(c) = v.get("create_ns").and_then(Value::as_u64) {
+            program.tasks[id as usize].creation_ns = c;
+        }
+    }
+    Ok(program)
+}
+
+/// Write a trace to a file.
+pub fn save(program: &TaskProgram, path: &std::path::Path) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(write_trace(program).as_bytes())?;
+    Ok(())
+}
+
+/// Load a trace from a file (streaming-friendly: reads line by line).
+pub fn load(path: &std::path::Path) -> anyhow::Result<TaskProgram> {
+    let f = std::fs::File::open(path)?;
+    let mut text = String::new();
+    for line in std::io::BufReader::new(f).lines() {
+        text.push_str(&line?);
+        text.push('\n');
+    }
+    read_trace(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::config::BoardConfig;
+
+    #[test]
+    fn roundtrip_matmul_trace() {
+        let b = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&b);
+        let text = write_trace(&p);
+        let p2 = read_trace(&text).unwrap();
+        assert_eq!(p.app_name, p2.app_name);
+        assert_eq!(p.kernels.len(), p2.kernels.len());
+        assert_eq!(p.tasks.len(), p2.tasks.len());
+        for (a, c) in p.tasks.iter().zip(&p2.tasks) {
+            assert_eq!(a.kernel, c.kernel);
+            assert_eq!(a.smp_cycles, c.smp_cycles);
+            assert_eq!(a.deps, c.deps);
+        }
+        assert_eq!(p.kernels[0].profile, p2.kernels[0].profile);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_trace("").is_err());
+        assert!(read_trace("{\"app\":\"x\"}\n").is_err()); // no kernels
+        let ok_header = r#"{"app":"x","kernels":[{"name":"k","smp":true,"fpga":false,"flops":1,"inner_trip":1,"in_bytes":1,"out_bytes":1,"dtype_bytes":4,"divsqrt":false}]}"#;
+        assert!(read_trace(&format!("{ok_header}\n{{\"task\":0}}\n")).is_err());
+        assert!(read_trace(&format!(
+            "{ok_header}\n{{\"task\":0,\"kernel\":9,\"cycles\":1,\"deps\":[]}}\n"
+        ))
+        .is_err()); // unknown kernel
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let b = BoardConfig::zynq706();
+        let p = Matmul::new(128, 64).build_program(&b);
+        let dir = std::env::temp_dir().join("zynq_est_test_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save(&p, &path).unwrap();
+        let p2 = load(&path).unwrap();
+        assert_eq!(p.tasks.len(), p2.tasks.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,84 @@
+//! Graphviz DOT export of the task dependency graph — regenerates the
+//! paper's Fig. 8 (cholesky task dependency graph for NB = 4).
+
+use crate::coordinator::deps::DepGraph;
+use crate::coordinator::task::TaskProgram;
+
+/// Fixed palette (one colour per kernel, wraps around).
+const PALETTE: [&str; 8] = [
+    "#4c72b0", "#dd8452", "#55a868", "#c44e52", "#8172b3", "#937860", "#da8bc3", "#8c8c8c",
+];
+
+/// Render the dependence DAG as DOT. Node label = `name#id`; one colour
+/// per kernel; edges follow dataflow order.
+pub fn to_dot(program: &TaskProgram, graph: &DepGraph) -> String {
+    let mut s = String::new();
+    s.push_str("digraph tasks {\n");
+    s.push_str("  rankdir=TB;\n  node [style=filled, fontname=\"monospace\"];\n");
+    s.push_str(&format!(
+        "  label=\"{} task dependency graph ({} tasks, {} edges)\";\n",
+        program.app_name,
+        program.tasks.len(),
+        graph.edge_count()
+    ));
+    for t in &program.tasks {
+        let k = &program.kernels[t.kernel as usize];
+        let color = PALETTE[t.kernel as usize % PALETTE.len()];
+        s.push_str(&format!(
+            "  t{} [label=\"{}#{}\", fillcolor=\"{}\"];\n",
+            t.id, k.name, t.id, color
+        ));
+    }
+    for (t, preds) in graph.preds.iter().enumerate() {
+        for &p in preds {
+            s.push_str(&format!("  t{p} -> t{t};\n"));
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Legend mapping kernels to colours (printed next to the graph).
+pub fn legend(program: &TaskProgram) -> String {
+    program
+        .kernels
+        .iter()
+        .enumerate()
+        .map(|(i, k)| format!("{} = {}", k.name, PALETTE[i % PALETTE.len()]))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::cholesky::Cholesky;
+    use crate::config::BoardConfig;
+
+    #[test]
+    fn dot_is_syntactically_plausible() {
+        let b = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&b); // NB=4, Fig. 8
+        let g = DepGraph::build(&p);
+        let dot = to_dot(&p, &g);
+        assert!(dot.starts_with("digraph tasks {"));
+        assert!(dot.trim_end().ends_with('}'));
+        // One node line per task.
+        let nodes = dot.lines().filter(|l| l.contains("[label=")).count();
+        assert_eq!(nodes, p.tasks.len());
+        // One edge line per dependence edge.
+        let edges = dot.lines().filter(|l| l.contains(" -> ")).count();
+        assert_eq!(edges, g.edge_count());
+        assert!(dot.contains("dpotrf#0"));
+    }
+
+    #[test]
+    fn legend_lists_all_kernels() {
+        let b = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&b);
+        let l = legend(&p);
+        for k in ["dgemm", "dsyrk", "dtrsm", "dpotrf"] {
+            assert!(l.contains(k));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Trace IO: the basic task trace of §IV (JSON lines), Graphviz DOT export
+//! of the dependency graph (Fig. 8) and the Paraver bundle writer (Fig. 7).
+
+pub mod basic;
+pub mod dot;
+pub mod paraver;
+pub mod prv_analyze;
+pub mod validate;
+
+pub use basic::{load, read_trace, save, write_trace};
+pub use dot::to_dot;

@@ -1,0 +1,297 @@
+//! Paraver trace writer — the Extrae-equivalent output path (Fig. 7).
+//!
+//! The paper integrates its simulator with a modified Extrae so that the
+//! estimated execution can be inspected in Paraver ("an approximate
+//! visualization of what one would expect in a real task execution"). This
+//! module writes the three-file Paraver bundle directly from a [`SimResult`]:
+//!
+//! * `.prv` — the trace: one thread row per device (SMP cores, FPGA
+//!   accelerators, DMA submit, DMA output channels), state records for
+//!   busy/idle intervals and event records carrying kernel / task-id /
+//!   segment-kind, matching Fig. 7's row layout;
+//! * `.pcf` — the config: state names, event types, kernel value tables
+//!   and a colour palette;
+//! * `.row` — the row labels.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::config::BoardConfig;
+use crate::coordinator::task::TaskProgram;
+use crate::sim::engine::{DeviceLabel, SegKind, SimResult};
+
+/// Event type ids (Extrae convention: user events in the 4xxxxxxx range).
+pub const EV_KERNEL: u64 = 40_000_001;
+pub const EV_SEGKIND: u64 = 40_000_002;
+pub const EV_TASKID: u64 = 40_000_003;
+
+fn seg_state(kind: SegKind) -> u32 {
+    match kind {
+        SegKind::Creation => 2,
+        SegKind::SmpCompute => 1,
+        SegKind::AccelTask => 1,
+        SegKind::SubmitIn | SegKind::SubmitOut => 3,
+        SegKind::DmaIn | SegKind::DmaOut => 4,
+    }
+}
+
+fn seg_kind_value(kind: SegKind) -> u64 {
+    match kind {
+        SegKind::Creation => 1,
+        SegKind::SmpCompute => 2,
+        SegKind::AccelTask => 3,
+        SegKind::SubmitIn => 4,
+        SegKind::SubmitOut => 5,
+        SegKind::DmaIn => 6,
+        SegKind::DmaOut => 7,
+    }
+}
+
+/// The device → row mapping. Row order mirrors the paper's Fig. 7: SMP
+/// first, accelerators in the middle, shared locked resources (output DMA,
+/// submit) last.
+pub fn device_rows(board: &BoardConfig, result: &SimResult) -> Vec<(DeviceLabel, String)> {
+    let mut rows = Vec::new();
+    for c in 0..board.smp_cores {
+        rows.push((
+            DeviceLabel::Smp(c),
+            format!("SMP core {c}"),
+        ));
+    }
+    for (i, k) in result.accel_kernels.iter().enumerate() {
+        rows.push((
+            DeviceLabel::Accel(i as u32),
+            format!("FPGA acc {i} ({k})"),
+        ));
+    }
+    let max_chan = result
+        .segments
+        .iter()
+        .filter_map(|s| match s.device {
+            DeviceLabel::DmaChan(n) => Some(n),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(0);
+    for n in 0..=max_chan {
+        rows.push((DeviceLabel::DmaChan(n), format!("DMA out {n}")));
+    }
+    rows.push((DeviceLabel::DmaSubmit, "DMA submit".to_string()));
+    rows
+}
+
+/// Render the `.prv` trace body. Times are nanoseconds (Paraver's usual
+/// unit for Extrae traces).
+pub fn to_prv(program: &TaskProgram, board: &BoardConfig, result: &SimResult) -> String {
+    let rows = device_rows(board, result);
+    let row_of: BTreeMap<DeviceLabel, usize> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, (d, _))| (*d, i + 1)) // Paraver ids are 1-based
+        .collect();
+    let dur_ns = result.makespan / 1000;
+    let nthreads = rows.len();
+    let mut out = String::new();
+    // Header: #Paraver (dd/mm/yy at hh:mm):ftime:nNodes(nCpus):nAppl:applList
+    out.push_str(&format!(
+        "#Paraver (01/01/15 at 00:00):{dur_ns}:1({nthreads}):1:1({nthreads}:1)\n"
+    ));
+
+    // Sort segments per row by start for contiguous idle/busy states.
+    let mut per_row: BTreeMap<usize, Vec<&crate::sim::engine::Segment>> = BTreeMap::new();
+    for s in &result.segments {
+        per_row
+            .entry(row_of[&s.device])
+            .or_default()
+            .push(s);
+    }
+    for (row, segs) in &mut per_row {
+        segs.sort_by_key(|s| s.start);
+        let mut cursor = 0u64;
+        for s in segs.iter() {
+            let (b, e) = (s.start / 1000, s.end / 1000);
+            if b > cursor {
+                // Idle gap.
+                let _ = writeln!(out, "1:{row}:1:1:{row}:{cursor}:{b}:0");
+            }
+            let _ = writeln!(out, "1:{row}:1:1:{row}:{b}:{e}:{}", seg_state(s.kind));
+            // Events at segment start (kernel, kind, task id) and end
+            // (value 0 = end marker), Extrae style.
+            let _ = writeln!(
+                out,
+                "2:{row}:1:1:{row}:{b}:{EV_KERNEL}:{}:{EV_SEGKIND}:{}:{EV_TASKID}:{}",
+                s.kernel as u64 + 1,
+                seg_kind_value(s.kind),
+                s.task as u64 + 1
+            );
+            let _ = writeln!(
+                out,
+                "2:{row}:1:1:{row}:{e}:{EV_KERNEL}:0:{EV_SEGKIND}:0:{EV_TASKID}:0"
+            );
+            cursor = e.max(cursor);
+        }
+        if cursor < dur_ns {
+            let _ = writeln!(out, "1:{row}:1:1:{row}:{cursor}:{dur_ns}:0");
+        }
+    }
+    let _ = program;
+    out
+}
+
+/// Render the `.pcf` config.
+pub fn to_pcf(program: &TaskProgram) -> String {
+    let mut out = String::new();
+    out.push_str("DEFAULT_OPTIONS\n\nLEVEL               THREAD\nUNITS               NANOSEC\n\n");
+    out.push_str("STATES\n0    Idle\n1    Running\n2    Task creation\n3    DMA submit\n4    DMA transfer\n\n");
+    out.push_str("STATES_COLOR\n0    {117,195,255}\n1    {0,0,255}\n2    {255,255,170}\n3    {174,129,255}\n4    {255,140,0}\n\n");
+    out.push_str(&format!("EVENT_TYPE\n0    {EV_KERNEL}    Kernel name\nVALUES\n0      End\n"));
+    for (i, k) in program.kernels.iter().enumerate() {
+        out.push_str(&format!("{}      {}\n", i + 1, k.name));
+    }
+    out.push('\n');
+    out.push_str(&format!(
+        "EVENT_TYPE\n0    {EV_SEGKIND}    Segment kind\nVALUES\n0      End\n1      Creation\n2      SMP compute\n3      Accelerator task\n4      Submit in\n5      Submit out\n6      DMA in\n7      DMA out\n\n"
+    ));
+    out.push_str(&format!(
+        "EVENT_TYPE\n0    {EV_TASKID}    Task instance\n\n"
+    ));
+    out
+}
+
+/// Render the `.row` labels.
+pub fn to_row(board: &BoardConfig, result: &SimResult) -> String {
+    let rows = device_rows(board, result);
+    let mut out = format!("LEVEL THREAD SIZE {}\n", rows.len());
+    for (_, name) in &rows {
+        out.push_str(name);
+        out.push('\n');
+    }
+    out
+}
+
+/// Write the three-file bundle `<stem>.prv/.pcf/.row`.
+pub fn save_bundle(
+    program: &TaskProgram,
+    board: &BoardConfig,
+    result: &SimResult,
+    stem: &Path,
+) -> anyhow::Result<()> {
+    std::fs::write(stem.with_extension("prv"), to_prv(program, board, result))?;
+    std::fs::write(stem.with_extension("pcf"), to_pcf(program))?;
+    std::fs::write(stem.with_extension("row"), to_row(board, result))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::config::CoDesign;
+    use crate::sim::estimate;
+
+    fn fixture() -> (TaskProgram, BoardConfig, SimResult) {
+        let b = BoardConfig::zynq706();
+        let app = Matmul::new(256, 64);
+        let p = app.build_program(&b);
+        let cd = CoDesign::new("1acc").with_accel("mxm64", 32);
+        let r = estimate(&p, &cd, &b).unwrap();
+        (p, b, r)
+    }
+
+    #[test]
+    fn prv_header_and_records_well_formed() {
+        let (p, b, r) = fixture();
+        let prv = to_prv(&p, &b, &r);
+        let mut lines = prv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("#Paraver "));
+        // The date field contains ':'; the duration follows the first "):".
+        let dur: u64 = header
+            .split_once("):")
+            .unwrap()
+            .1
+            .split(':')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(dur, r.makespan / 1000);
+        for line in lines {
+            let kind = line.split(':').next().unwrap();
+            assert!(kind == "1" || kind == "2", "bad record: {line}");
+            if kind == "1" {
+                let f: Vec<u64> = line.split(':').skip(1).map(|x| x.parse().unwrap()).collect();
+                assert!(f[4] <= f[5], "state begin after end: {line}");
+                assert!(f[5] <= dur);
+            }
+        }
+    }
+
+    #[test]
+    fn states_partition_each_row() {
+        let (p, b, r) = fixture();
+        let prv = to_prv(&p, &b, &r);
+        let dur: u64 = prv
+            .lines()
+            .next()
+            .unwrap()
+            .split_once("):")
+            .unwrap()
+            .1
+            .split(':')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        let mut per_row: BTreeMap<u64, Vec<(u64, u64)>> = BTreeMap::new();
+        for line in prv.lines().skip(1).filter(|l| l.starts_with("1:")) {
+            let f: Vec<u64> = line.split(':').skip(1).map(|x| x.parse().unwrap()).collect();
+            per_row.entry(f[0]).or_default().push((f[4], f[5]));
+        }
+        for (_row, mut iv) in per_row {
+            iv.sort_unstable();
+            // Contiguous cover from 0 to dur (non-empty rows).
+            assert_eq!(iv.first().unwrap().0, 0);
+            assert_eq!(iv.last().unwrap().1, dur);
+            for w in iv.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "states must tile the row");
+            }
+        }
+    }
+
+    #[test]
+    fn pcf_lists_kernels_and_states() {
+        let (p, _, _) = fixture();
+        let pcf = to_pcf(&p);
+        assert!(pcf.contains("mxm64"));
+        assert!(pcf.contains("STATES"));
+        assert!(pcf.contains("Segment kind"));
+    }
+
+    #[test]
+    fn row_labels_match_fig7_layout() {
+        let (_, b, r) = fixture();
+        let row = to_row(&b, &r);
+        let lines: Vec<&str> = row.lines().collect();
+        assert!(lines[0].starts_with("LEVEL THREAD SIZE"));
+        assert!(lines[1].starts_with("SMP core 0"));
+        assert!(lines.iter().any(|l| l.starts_with("FPGA acc 0")));
+        // Shared locked resources last (paper: "last two bars").
+        assert!(lines.last().unwrap().starts_with("DMA submit"));
+        assert!(lines[lines.len() - 2].starts_with("DMA out"));
+    }
+
+    #[test]
+    fn bundle_written_to_disk() {
+        let (p, b, r) = fixture();
+        let dir = std::env::temp_dir().join("zynq_est_prv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("trace");
+        save_bundle(&p, &b, &r, &stem).unwrap();
+        for ext in ["prv", "pcf", "row"] {
+            assert!(stem.with_extension(ext).exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

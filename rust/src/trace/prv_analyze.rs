@@ -1,0 +1,201 @@
+//! Paraver trace analyzer — the programmatic version of the paper's
+//! "Paraver traces can be visualized and compared to detect potential
+//! bottlenecks in the parallel and heterogeneous execution" (§VI).
+//!
+//! Parses `.prv` files (ours or any state-record trace using the same
+//! subset) and reports per-row utilization, the longest idle gap and the
+//! bottleneck resource — the numbers an analyst reads off the Fig. 7
+//! timelines by eye.
+
+use std::collections::BTreeMap;
+
+/// Per-row (device) statistics extracted from a trace.
+#[derive(Clone, Debug)]
+pub struct RowStats {
+    pub row: u32,
+    pub label: String,
+    pub busy_ns: u64,
+    pub busy_fraction: f64,
+    pub longest_idle_ns: u64,
+    pub segments: usize,
+}
+
+/// Whole-trace analysis.
+#[derive(Clone, Debug)]
+pub struct PrvAnalysis {
+    pub duration_ns: u64,
+    pub rows: Vec<RowStats>,
+}
+
+impl PrvAnalysis {
+    /// The busiest row — the resource limiting the execution.
+    pub fn bottleneck(&self) -> Option<&RowStats> {
+        self.rows
+            .iter()
+            .max_by(|a, b| a.busy_fraction.partial_cmp(&b.busy_fraction).unwrap())
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "trace duration {:.3} ms, {} rows\n",
+            self.duration_ns as f64 / 1e6,
+            self.rows.len()
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "  row {:>2} {:24} busy {:>5.1}%  segs {:>6}  longest idle {:>9.3} ms\n",
+                r.row,
+                r.label,
+                r.busy_fraction * 100.0,
+                r.segments,
+                r.longest_idle_ns as f64 / 1e6
+            ));
+        }
+        if let Some(b) = self.bottleneck() {
+            out.push_str(&format!(
+                "bottleneck: {} ({:.1}% busy)\n",
+                b.label,
+                b.busy_fraction * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// Parse a `.prv` body (+ optional `.row` labels) into an analysis.
+pub fn analyze(prv: &str, row_labels: Option<&str>) -> anyhow::Result<PrvAnalysis> {
+    let mut lines = prv.lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace"))?;
+    if !header.starts_with("#Paraver") {
+        anyhow::bail!("not a Paraver trace (missing #Paraver header)");
+    }
+    let duration_ns: u64 = header
+        .split_once("):")
+        .ok_or_else(|| anyhow::anyhow!("malformed header"))?
+        .1
+        .split(':')
+        .next()
+        .unwrap()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration in header"))?;
+
+    // Busy intervals per row from state records with state != 0.
+    let mut busy: BTreeMap<u32, Vec<(u64, u64)>> = BTreeMap::new();
+    for (ln, line) in lines.enumerate() {
+        if !line.starts_with("1:") {
+            continue; // events and comments are ignored here
+        }
+        let f: Vec<&str> = line.split(':').collect();
+        if f.len() != 8 {
+            anyhow::bail!("line {}: malformed state record", ln + 2);
+        }
+        let row: u32 = f[1].parse().map_err(|_| anyhow::anyhow!("bad row"))?;
+        let begin: u64 = f[5].parse().map_err(|_| anyhow::anyhow!("bad begin"))?;
+        let end: u64 = f[6].parse().map_err(|_| anyhow::anyhow!("bad end"))?;
+        let state: u32 = f[7].parse().map_err(|_| anyhow::anyhow!("bad state"))?;
+        if state != 0 {
+            busy.entry(row).or_default().push((begin, end));
+        } else {
+            busy.entry(row).or_default();
+        }
+    }
+
+    let labels: Vec<String> = row_labels
+        .map(|t| t.lines().skip(1).map(|s| s.to_string()).collect())
+        .unwrap_or_default();
+
+    let mut rows = Vec::new();
+    for (row, mut iv) in busy {
+        iv.sort_unstable();
+        let busy_ns: u64 = iv.iter().map(|(b, e)| e - b).sum();
+        let mut longest_idle = 0u64;
+        let mut cursor = 0u64;
+        for &(b, e) in &iv {
+            if b > cursor {
+                longest_idle = longest_idle.max(b - cursor);
+            }
+            cursor = cursor.max(e);
+        }
+        if duration_ns > cursor {
+            longest_idle = longest_idle.max(duration_ns - cursor);
+        }
+        let label = labels
+            .get(row as usize - 1)
+            .cloned()
+            .unwrap_or_else(|| format!("row {row}"));
+        rows.push(RowStats {
+            row,
+            label,
+            busy_ns,
+            busy_fraction: if duration_ns > 0 {
+                busy_ns as f64 / duration_ns as f64
+            } else {
+                0.0
+            },
+            longest_idle_ns: longest_idle,
+            segments: iv.len(),
+        });
+    }
+    Ok(PrvAnalysis { duration_ns, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::config::{BoardConfig, CoDesign};
+    use crate::sim::estimate;
+    use crate::trace::paraver;
+
+    fn bundle(cd: &CoDesign, bs: u64) -> (String, String) {
+        let b = BoardConfig::zynq706();
+        let app = Matmul::new(512, bs);
+        let p = app.build_program(&b);
+        let r = estimate(&p, cd, &b).unwrap();
+        (paraver::to_prv(&p, &b, &r), paraver::to_row(&b, &r))
+    }
+
+    #[test]
+    fn analyzes_own_output() {
+        let cd = CoDesign::new("1acc").with_accel("mxm64", 32);
+        let (prv, row) = bundle(&cd, 64);
+        let a = analyze(&prv, Some(&row)).unwrap();
+        assert!(a.duration_ns > 0);
+        // The single accelerator is the bottleneck of an FPGA-only run.
+        let b = a.bottleneck().unwrap();
+        assert!(b.label.contains("FPGA acc 0"), "bottleneck: {}", b.label);
+        assert!(b.busy_fraction > 0.8);
+    }
+
+    #[test]
+    fn two_accels_split_load() {
+        let cd = CoDesign::new("2acc")
+            .with_accel("mxm64", 32)
+            .with_accel("mxm64", 32);
+        let (prv, row) = bundle(&cd, 64);
+        let a = analyze(&prv, Some(&row)).unwrap();
+        let accels: Vec<&RowStats> = a
+            .rows
+            .iter()
+            .filter(|r| r.label.contains("FPGA acc"))
+            .collect();
+        assert_eq!(accels.len(), 2);
+        let (f0, f1) = (accels[0].busy_fraction, accels[1].busy_fraction);
+        assert!((f0 - f1).abs() < 0.15, "imbalanced: {f0} vs {f1}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(analyze("", None).is_err());
+        assert!(analyze("not a trace\n", None).is_err());
+        assert!(analyze("#Paraver (x):abc:1(1):1:1(1:1)\n", None).is_err());
+    }
+
+    #[test]
+    fn render_mentions_bottleneck() {
+        let cd = CoDesign::new("1acc").with_accel("mxm64", 32);
+        let (prv, row) = bundle(&cd, 64);
+        let a = analyze(&prv, Some(&row)).unwrap();
+        assert!(a.render().contains("bottleneck"));
+    }
+}

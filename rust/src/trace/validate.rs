@@ -1,0 +1,235 @@
+//! Trace linter — §IV well-formedness checks for basic task traces.
+//!
+//! The paper's toolchain consumes traces produced by an instrumented
+//! binary; corrupted or hand-edited traces must fail loudly *before* a
+//! simulation silently produces garbage co-design decisions. The linter
+//! checks everything the simulator assumes.
+
+use std::collections::HashMap;
+
+use crate::coordinator::task::TaskProgram;
+
+/// Severity of a lint finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// The simulator would mis-run or panic.
+    Error,
+    /// Suspicious but simulable (e.g. zero-cost tasks).
+    Warning,
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub severity: Severity,
+    pub message: String,
+}
+
+/// Run all checks; errors first.
+pub fn lint(program: &TaskProgram) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut err = |m: String| {
+        out.push(Finding {
+            severity: Severity::Error,
+            message: m,
+        })
+    };
+
+    if program.app_name.is_empty() {
+        err("trace has no application name".into());
+    }
+    if program.kernels.is_empty() {
+        err("trace declares no kernels".into());
+    }
+
+    // Structural errors (shared with TaskProgram::validate).
+    for msg in program.validate() {
+        err(msg);
+    }
+
+    let mut warnings = Vec::new();
+    // Creation timestamps must be non-decreasing (sequential emission).
+    let mut last_creation = 0u64;
+    for t in &program.tasks {
+        if t.creation_ns < last_creation {
+            warnings.push(format!(
+                "task {} created at {} ns, before its predecessor ({} ns) — \
+                 trace not in sequential emission order",
+                t.id, t.creation_ns, last_creation
+            ));
+        }
+        last_creation = last_creation.max(t.creation_ns);
+        if t.smp_cycles == 0 {
+            warnings.push(format!("task {} has zero SMP cycles", t.id));
+        }
+    }
+
+    // Dependences on addresses only ever read (never produced) are
+    // program inputs — fine — but a kernel whose every instance writes an
+    // address nobody reads suggests a mis-recorded direction.
+    let mut read_addrs: HashMap<u64, u32> = HashMap::new();
+    let mut written_addrs: HashMap<u64, u32> = HashMap::new();
+    for t in &program.tasks {
+        for d in &t.deps {
+            if d.dir.reads() {
+                *read_addrs.entry(d.addr).or_insert(0) += 1;
+            }
+            if d.dir.writes() {
+                *written_addrs.entry(d.addr).or_insert(0) += 1;
+            }
+        }
+    }
+    let dead_writes = written_addrs
+        .keys()
+        .filter(|a| !read_addrs.contains_key(a))
+        .count();
+    if dead_writes > 0 && dead_writes == written_addrs.len() {
+        warnings.push(format!(
+            "none of the {} written addresses is ever read — directions \
+             likely inverted in the instrumentation",
+            written_addrs.len()
+        ));
+    }
+
+    // Inconsistent transfer sizes per address (the paper records len per
+    // dependence; differing lens on one address break transfer accounting).
+    let mut len_of: HashMap<u64, u64> = HashMap::new();
+    for t in &program.tasks {
+        for d in &t.deps {
+            match len_of.insert(d.addr, d.len) {
+                Some(prev) if prev != d.len => {
+                    warnings.push(format!(
+                        "address {:#x} used with lengths {} and {}",
+                        d.addr, prev, d.len
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    for w in warnings {
+        out.push(Finding {
+            severity: Severity::Warning,
+            message: w,
+        });
+    }
+    out.sort_by_key(|f| match f.severity {
+        Severity::Error => 0,
+        Severity::Warning => 1,
+    });
+    out
+}
+
+/// True if the trace has no errors (warnings allowed).
+pub fn is_simulable(program: &TaskProgram) -> bool {
+    !lint(program)
+        .iter()
+        .any(|f| f.severity == Severity::Error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::config::BoardConfig;
+    use crate::coordinator::task::{Dep, KernelDecl, KernelProfile, Targets};
+
+    fn profile() -> KernelProfile {
+        KernelProfile {
+            flops: 1,
+            inner_trip: 1,
+            in_bytes: 4,
+            out_bytes: 4,
+            dtype_bytes: 4,
+            divsqrt: false,
+        }
+    }
+
+    #[test]
+    fn clean_app_traces_lint_clean() {
+        let b = BoardConfig::zynq706();
+        for bs in [64, 128] {
+            let p = Matmul::new(512, bs).build_program(&b);
+            let findings = lint(&p);
+            assert!(
+                findings.is_empty(),
+                "bs={bs}: {:?}",
+                findings
+            );
+            assert!(is_simulable(&p));
+        }
+    }
+
+    #[test]
+    fn empty_trace_errors() {
+        let p = TaskProgram::new("");
+        let findings = lint(&p);
+        assert!(findings.iter().any(|f| f.severity == Severity::Error));
+        assert!(!is_simulable(&p));
+    }
+
+    #[test]
+    fn zero_cycles_warn() {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        p.add_task(k, 0, vec![Dep::inout(0x1, 4)]);
+        let findings = lint(&p);
+        assert!(findings
+            .iter()
+            .any(|f| f.severity == Severity::Warning && f.message.contains("zero SMP cycles")));
+        assert!(is_simulable(&p)); // warning only
+    }
+
+    #[test]
+    fn out_of_order_creation_warns() {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        p.add_task(k, 1, vec![Dep::inout(0x1, 4)]);
+        p.add_task(k, 1, vec![Dep::inout(0x1, 4)]);
+        p.tasks[0].creation_ns = 100;
+        p.tasks[1].creation_ns = 50;
+        let findings = lint(&p);
+        assert!(findings
+            .iter()
+            .any(|f| f.message.contains("sequential emission order")));
+    }
+
+    #[test]
+    fn inconsistent_lengths_warn() {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        p.add_task(k, 1, vec![Dep::inout(0x100, 64)]);
+        p.add_task(k, 1, vec![Dep::inout(0x100, 128)]);
+        let findings = lint(&p);
+        assert!(findings.iter().any(|f| f.message.contains("lengths")));
+    }
+
+    #[test]
+    fn all_dead_writes_warn() {
+        let mut p = TaskProgram::new("t");
+        let k = p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::SMP,
+            profile: profile(),
+        });
+        // Writers that nobody reads (inverted directions).
+        p.add_task(k, 1, vec![Dep::output(0x100, 64)]);
+        p.add_task(k, 1, vec![Dep::output(0x200, 64)]);
+        let findings = lint(&p);
+        assert!(findings
+            .iter()
+            .any(|f| f.message.contains("directions likely inverted")));
+    }
+}

@@ -1,0 +1,65 @@
+//! Minimal benchmark harness — the criterion-equivalent substrate for the
+//! vendored-offline build. `cargo bench` runs each `benches/*.rs` binary
+//! (`harness = false`); they use [`bench`] for timing and print the same
+//! rows/series the paper's figures report.
+
+use std::time::Instant;
+
+/// Result of one benchmark: wall-clock stats over the measured iterations.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ms: f64,
+    pub stdev_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations and print
+/// a criterion-style line. Returns the stats for programmatic use.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = super::mean(&samples);
+    let stdev = super::stdev(&samples);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "bench {name:40} {mean:>10.3} ms/iter (+/- {stdev:>7.3}, min {min:>8.3}, n={iters})"
+    );
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        stdev_ms: stdev,
+        min_ms: min,
+    }
+}
+
+/// Black-box: defeat the optimizer without the unstable intrinsic.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-ish", 1, 5, || {
+            let v: u64 = (0..1000).sum();
+            black_box(v);
+        });
+        assert!(s.mean_ms >= 0.0);
+        assert!(s.min_ms <= s.mean_ms + 1e-9);
+        assert_eq!(s.iters, 5);
+    }
+}

@@ -1,0 +1,129 @@
+//! FxHash — the rustc-internal multiply-xor hasher, reimplemented locally
+//! (the `fxhash`/`rustc-hash` crates are not in the vendored set).
+//!
+//! Not DoS-resistant; used only for internal maps keyed by addresses and
+//! dense ids where SipHash showed up at ~18% of the simulation profile
+//! (EXPERIMENTS.md §Perf).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The FxHash state.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(i as u64);
+    }
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        // Finalizer: fold the high bits down. Without this, page-aligned
+        // keys (tile addresses are 0x1000 multiples) leave the low bits of
+        // `hash * SEED` all zero, and hashbrown indexes buckets by the low
+        // bits — instant pathological collisions (observed as a 3x
+        // simulation slowdown before this line existed).
+        self.hash ^ (self.hash >> 32)
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributes_sequential_keys() {
+        // Sequential u64 keys must not collide in the low bits (the part
+        // hash tables use).
+        let mut buckets = [0u32; 64];
+        for i in 0..64_000u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(i);
+            buckets[(h.finish() % 64) as usize] += 1;
+        }
+        let max = *buckets.iter().max().unwrap();
+        let min = *buckets.iter().min().unwrap();
+        assert!(max < 2 * min.max(1), "skewed: {min}..{max}");
+    }
+
+    #[test]
+    fn distributes_page_aligned_keys() {
+        // The regression case: 4 KiB-aligned addresses (task tile buffers).
+        let mut buckets = [0u32; 64];
+        for i in 0..64_000u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(i * 0x1000);
+            buckets[(h.finish() % 64) as usize] += 1;
+        }
+        let max = *buckets.iter().max().unwrap();
+        let min = *buckets.iter().min().unwrap();
+        assert!(max < 2 * min.max(1), "skewed: {min}..{max}");
+    }
+
+    #[test]
+    fn map_and_set_work() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(i * 0x1000, i as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&0x5000], 5);
+        let mut s: FxHashSet<u16> = FxHashSet::default();
+        s.insert(7);
+        assert!(s.contains(&7));
+    }
+
+    #[test]
+    fn byte_writes_consistent() {
+        let mut a = FxHasher::default();
+        a.write(b"hello world!");
+        let mut b = FxHasher::default();
+        b.write(b"hello world!");
+        assert_eq!(a.finish(), b.finish());
+        let mut c = FxHasher::default();
+        c.write(b"hello worl!d");
+        assert_ne!(a.finish(), c.finish());
+    }
+}

@@ -1,0 +1,364 @@
+//! Property-based tests over randomly generated programs and co-designs.
+//!
+//! The external `proptest` crate is not in the vendored dependency set, so
+//! this uses the repository's seeded PRNG with a small forall harness —
+//! same idea: hundreds of random cases per invariant, fully reproducible
+//! (failures print the case seed).
+
+use std::collections::HashMap;
+
+use zynq_estimator::config::{BoardConfig, CoDesign};
+use zynq_estimator::coordinator::deps::DepGraph;
+use zynq_estimator::coordinator::elaborate::ElabProgram;
+use zynq_estimator::coordinator::sched::Policy;
+use zynq_estimator::coordinator::task::{
+    Dep, Dir, KernelDecl, KernelProfile, TaskProgram, Targets,
+};
+use zynq_estimator::hls::{CostModel, FpgaPart};
+use zynq_estimator::sim::engine::{resolve_codesign, SegKind, Simulator};
+use zynq_estimator::sim::time::transfer_ps;
+use zynq_estimator::sim::EstimatorModel;
+use zynq_estimator::util::{json, Rng};
+
+fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Random task program: 1-4 kernels (always SMP-capable, sometimes FPGA),
+/// up to 80 tasks over a small shared address pool so dependences collide.
+fn random_program(rng: &mut Rng) -> TaskProgram {
+    let mut p = TaskProgram::new("prop");
+    let n_kernels = rng.gen_range(1, 5);
+    for k in 0..n_kernels {
+        let fpga = rng.next_f64() < 0.7;
+        p.add_kernel(KernelDecl {
+            name: format!("k{k}"),
+            targets: Targets { smp: true, fpga },
+            profile: KernelProfile {
+                flops: rng.gen_range(1_000, 1_000_000),
+                inner_trip: rng.gen_range(1_000, 500_000),
+                in_bytes: rng.gen_range(256, 65_536),
+                out_bytes: rng.gen_range(256, 32_768),
+                dtype_bytes: if rng.next_f64() < 0.5 { 4 } else { 8 },
+                divsqrt: rng.next_f64() < 0.3,
+            },
+        });
+    }
+    let n_tasks = rng.gen_range(1, 81);
+    let pool: Vec<u64> = (0..12).map(|i| 0x1000 + i * 0x1000).collect();
+    for _ in 0..n_tasks {
+        let kernel = rng.gen_range(0, n_kernels) as u16;
+        let n_deps = rng.gen_range(1, 4);
+        let mut deps = Vec::new();
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..n_deps {
+            let addr = pool[rng.gen_range(0, pool.len() as u64) as usize];
+            if !used.insert(addr) {
+                continue;
+            }
+            let dir = match rng.gen_range(0, 3) {
+                0 => Dir::In,
+                1 => Dir::Out,
+                _ => Dir::InOut,
+            };
+            deps.push(Dep {
+                addr,
+                len: rng.gen_range(64, 16_384),
+                dir,
+            });
+        }
+        if deps.is_empty() {
+            deps.push(Dep::inout(pool[0], 64));
+        }
+        p.add_task(kernel, rng.gen_range(1_000, 2_000_000), deps);
+    }
+    p
+}
+
+fn random_codesign(rng: &mut Rng, p: &TaskProgram) -> CoDesign {
+    let mut cd = CoDesign::new("prop");
+    for k in &p.kernels {
+        if k.targets.fpga {
+            let n_acc = rng.gen_range(0, 3);
+            for _ in 0..n_acc {
+                let unroll = 1 << rng.gen_range(1, 5); // 2..16
+                cd = cd.with_accel(&k.name, unroll);
+            }
+            if n_acc > 0 && rng.next_f64() < 0.5 {
+                cd = cd.with_smp(&k.name);
+            }
+        }
+    }
+    cd
+}
+
+#[test]
+fn prop_depgraph_respects_program_order_and_bounds() {
+    forall(300, 0xDEAD, |seed, rng| {
+        let p = random_program(rng);
+        let g = DepGraph::build(&p);
+        assert!(g.respects_program_order(), "seed {seed}");
+        // Critical path with unit weights is between 1 and n.
+        let d = g.depth();
+        assert!(d >= 1 && d <= p.tasks.len() as u64, "seed {seed}");
+        // Weighted critical path <= serial sum.
+        let w: Vec<u64> = p.tasks.iter().map(|t| t.smp_cycles).collect();
+        let cp = g.critical_path(&|t| w[t as usize]);
+        let serial: u64 = w.iter().sum();
+        assert!(cp <= serial, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_simulation_is_valid_schedule() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    forall(150, 0xBEEF, |seed, rng| {
+        let p = random_program(rng);
+        let cd = random_codesign(rng, &p);
+        let Ok((accels, smp)) = resolve_codesign(&p, &cd, &board, &part) else {
+            return; // infeasible co-design: rejection is a valid outcome
+        };
+        let g = DepGraph::build(&p);
+        let e = ElabProgram::build(&p, &g);
+        let policy = if rng.next_f64() < 0.5 {
+            Policy::Greedy
+        } else {
+            Policy::Lookahead
+        };
+        let sim = Simulator::new(&p, &e, &board, &accels, &smp, policy);
+        let mut model = EstimatorModel::new(&board);
+        let res = sim.run(&mut model);
+
+        // 1. Schedule validity: no device overlap, segments in range.
+        let errs = res.validate();
+        assert!(errs.is_empty(), "seed {seed}: {errs:?}");
+
+        // 2. Every task executed exactly once on exactly one device class.
+        assert_eq!(
+            res.tasks_on_smp + res.tasks_on_accel,
+            p.tasks.len(),
+            "seed {seed}"
+        );
+
+        // 3. Dependence correctness: every successor's non-creation work
+        //    starts at/after its predecessor's completion.
+        let mut task_end: HashMap<u32, u64> = HashMap::new();
+        let mut task_start: HashMap<u32, u64> = HashMap::new();
+        for s in &res.segments {
+            if s.kind == SegKind::Creation {
+                continue;
+            }
+            let e = task_end.entry(s.task).or_insert(0);
+            *e = (*e).max(s.end);
+            let st = task_start.entry(s.task).or_insert(u64::MAX);
+            *st = (*st).min(s.start);
+        }
+        for (t, preds) in g.preds.iter().enumerate() {
+            for &pr in preds {
+                let pred_end = task_end[&pr];
+                let succ_start = task_start[&(t as u32)];
+                assert!(
+                    succ_start >= pred_end,
+                    "seed {seed}: task {t} starts {succ_start} before pred {pr} ends {pred_end}"
+                );
+            }
+        }
+
+        // 4. Makespan bounded below by the critical path of pure compute
+        //    (any device's best case can't beat the dependency chain).
+        let smp_clock = board.smp_clock();
+        let best_case = |t: u32| {
+            let task = &p.tasks[t as usize];
+            let smp_ps = smp_clock.cycles_to_ps(task.smp_cycles);
+            accels
+                .iter()
+                .filter(|a| a.kernel == task.kernel)
+                .map(|a| a.report.compute_ps())
+                .min()
+                .map(|acc| acc.min(smp_ps))
+                .unwrap_or(smp_ps)
+        };
+        let cp = g.critical_path(&best_case);
+        assert!(
+            res.makespan >= cp,
+            "seed {seed}: makespan {} < critical path {cp}",
+            res.makespan
+        );
+    });
+}
+
+#[test]
+fn prop_inout_chains_serialize_in_time() {
+    // Directed check of the §IV semantics: tasks inout-chained on one
+    // address never overlap, under any co-design.
+    let board = BoardConfig::zynq706();
+    forall(100, 0xC0FFEE, |seed, rng| {
+        let mut p = TaskProgram::new("chain");
+        p.add_kernel(KernelDecl {
+            name: "k".into(),
+            targets: Targets::BOTH,
+            profile: KernelProfile {
+                flops: 10_000,
+                inner_trip: 10_000,
+                in_bytes: 4_096,
+                out_bytes: 4_096,
+                dtype_bytes: 4,
+                divsqrt: false,
+            },
+        });
+        let n = rng.gen_range(2, 30);
+        for _ in 0..n {
+            p.add_task(0, rng.gen_range(10_000, 100_000), vec![Dep::inout(0x42, 4_096)]);
+        }
+        let cd = random_codesign(rng, &p);
+        let res = zynq_estimator::sim::estimate(&p, &cd, &board).unwrap();
+        let mut intervals: Vec<(u64, u64)> = Vec::new();
+        for s in &res.segments {
+            if matches!(s.kind, SegKind::SmpCompute | SegKind::AccelTask) {
+                intervals.push((s.start, s.end));
+            }
+        }
+        intervals.sort_unstable();
+        for w in intervals.windows(2) {
+            assert!(w[1].0 >= w[0].1, "seed {seed}: chain tasks overlap");
+        }
+    });
+}
+
+#[test]
+fn prop_dma_model_monotone() {
+    let board = BoardConfig::zynq706();
+    forall(500, 0xD1A, |seed, rng| {
+        let b1 = rng.gen_range(1, 1 << 22);
+        let b2 = b1 + rng.gen_range(1, 1 << 20);
+        // Monotone in bytes.
+        assert!(
+            transfer_ps(b2, board.dma_bw_mbps) >= transfer_ps(b1, board.dma_bw_mbps),
+            "seed {seed}"
+        );
+        // Input transfer non-increasing in accelerator count.
+        let k1 = rng.gen_range(1, 8) as u32;
+        let k2 = k1 + 1;
+        let t1 = zynq_estimator::sim::dma::input_transfer_ps(&board, b1, k1);
+        let t2 = zynq_estimator::sim::dma::input_transfer_ps(&board, b1, k2);
+        assert!(t2 <= t1, "seed {seed}");
+        // Output transfer invariant in accelerator count (shared channel).
+        let o1 = zynq_estimator::sim::dma::output_transfer_ps(&board, b1, k1);
+        let o2 = zynq_estimator::sim::dma::output_transfer_ps(&board, b1, k2);
+        assert_eq!(o1, o2, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_hls_model_monotone_and_feasibility_antitone() {
+    let board = BoardConfig::zynq706();
+    let cm = CostModel::from_board(&board);
+    let part = FpgaPart::xc7z045();
+    forall(300, 0x8175, |seed, rng| {
+        let profile = KernelProfile {
+            flops: rng.gen_range(1_000, 10_000_000),
+            inner_trip: rng.gen_range(1_000, 5_000_000),
+            in_bytes: rng.gen_range(1_024, 1 << 20),
+            out_bytes: rng.gen_range(1_024, 1 << 19),
+            dtype_bytes: if rng.next_f64() < 0.5 { 4 } else { 8 },
+            divsqrt: rng.next_f64() < 0.5,
+        };
+        let u1 = 1 << rng.gen_range(0, 6); // 1..32
+        let u2 = u1 * 2;
+        let r1 = cm.estimate("k", &profile, u1);
+        let r2 = cm.estimate("k", &profile, u2);
+        assert!(r2.compute_cycles <= r1.compute_cycles, "seed {seed}");
+        assert!(r2.resources.dsps >= r1.resources.dsps, "seed {seed}");
+        assert!(r2.resources.luts >= r1.resources.luts, "seed {seed}");
+        assert!(r2.resources.bram18 >= r1.resources.bram18, "seed {seed}");
+        // If the bigger variant fits n times, the smaller fits n times.
+        let fits2 = part.fits(&[r2.resources, r2.resources]);
+        let fits1 = part.fits(&[r1.resources, r1.resources]);
+        if fits2 {
+            assert!(fits1, "seed {seed}: feasibility must be antitone in unroll");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_value(rng: &mut Rng, depth: u32) -> json::Value {
+        match rng.gen_range(0, if depth == 0 { 5 } else { 7 }) {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.next_f64() < 0.5),
+            2 => json::Value::Int(rng.next_u64() as i64 / 2),
+            3 => json::Value::Num((rng.next_f64() - 0.5) * 1e6),
+            4 => {
+                let n = rng.gen_range(0, 12);
+                json::Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.gen_range(32, 127) as u8 as char;
+                            if c == '\\' { 'x' } else { c }
+                        })
+                        .collect(),
+                )
+            }
+            5 => {
+                let n = rng.gen_range(0, 5);
+                json::Value::Arr((0..n).map(|_| random_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.gen_range(0, 5);
+                json::Value::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    forall(500, 0x15A4, |seed, rng| {
+        let v = random_value(rng, 3);
+        let text = v.to_json();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        match (&v, &back) {
+            (json::Value::Num(a), json::Value::Num(b)) => {
+                assert!((a - b).abs() <= a.abs() * 1e-12, "seed {seed}")
+            }
+            _ => assert_eq!(v, back, "seed {seed}"),
+        }
+    });
+}
+
+#[test]
+fn prop_trace_roundtrip_random_programs() {
+    forall(100, 0x7ACE, |seed, rng| {
+        let p = random_program(rng);
+        let text = zynq_estimator::trace::write_trace(&p);
+        let p2 = zynq_estimator::trace::read_trace(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(p.tasks.len(), p2.tasks.len(), "seed {seed}");
+        for (a, b) in p.tasks.iter().zip(&p2.tasks) {
+            assert_eq!(a.deps, b.deps, "seed {seed}");
+            assert_eq!(a.smp_cycles, b.smp_cycles, "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_estimator_deterministic_board_seeded() {
+    let board = BoardConfig::zynq706();
+    forall(50, 0x5EED, |seed, rng| {
+        let p = random_program(rng);
+        let cd = random_codesign(rng, &p);
+        let Ok(r1) = zynq_estimator::sim::estimate(&p, &cd, &board) else {
+            return;
+        };
+        let r2 = zynq_estimator::sim::estimate(&p, &cd, &board).unwrap();
+        assert_eq!(r1.makespan, r2.makespan, "seed {seed}");
+        let b1 = zynq_estimator::sim::emulate(&p, &cd, &board).unwrap();
+        let b2 = zynq_estimator::sim::emulate(&p, &cd, &board).unwrap();
+        assert_eq!(b1.makespan, b2.makespan, "seed {seed}");
+    });
+}

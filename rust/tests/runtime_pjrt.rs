@@ -1,0 +1,201 @@
+//! Integration tests of the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise, so `cargo
+//! test` stays green on a fresh checkout before the Python step).
+
+use zynq_estimator::runtime::{reference, Runtime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("mxm64.hlo.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("artifacts/ missing; run `make artifacts` first — skipping");
+                return;
+            }
+        }
+    };
+}
+
+fn rng_tile(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = zynq_estimator::util::Rng::new(seed);
+    (0..n * n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+#[test]
+fn mxm64_matches_reference() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let (a, b, c) = (rng_tile(1, 64), rng_tile(2, 64), rng_tile(3, 64));
+    let out = rt.run_mxm("mxm64", 64, &a, &b, &c).unwrap();
+    let mut expect = c.clone();
+    reference::mxm_block(64, &a, &b, &mut expect);
+    assert!(reference::max_abs_diff(&out, &expect) < 1e-3);
+}
+
+#[test]
+fn mxm128_matches_reference() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let (a, b, c) = (rng_tile(4, 128), rng_tile(5, 128), rng_tile(6, 128));
+    let out = rt.run_mxm("mxm128", 128, &a, &b, &c).unwrap();
+    let mut expect = c.clone();
+    reference::mxm_block(128, &a, &b, &mut expect);
+    assert!(reference::max_abs_diff(&out, &expect) < 1e-3);
+}
+
+#[test]
+fn cholesky_kernels_satisfy_identities() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let bs = 64usize;
+    let dims = [bs as i64, bs as i64];
+    let a = rng_tile(7, bs);
+    let b = rng_tile(8, bs);
+    let c = rng_tile(9, bs);
+
+    // dgemm64: out = c - a @ b^T
+    let out = rt
+        .run_f32("dgemm64", &[(&a, &dims), (&b, &dims), (&c, &dims)])
+        .unwrap();
+    let mut bt = vec![0f32; bs * bs];
+    for i in 0..bs {
+        for j in 0..bs {
+            bt[i * bs + j] = b[j * bs + i];
+        }
+    }
+    let mut ab = vec![0f32; bs * bs];
+    reference::mxm_block(bs, &a, &bt, &mut ab);
+    let expect: Vec<f32> = c.iter().zip(&ab).map(|(x, y)| x - y).collect();
+    assert!(reference::max_abs_diff(&out, &expect) < 1e-2);
+
+    // dsyrk64: out = c - a @ a^T
+    let out = rt.run_f32("dsyrk64", &[(&a, &dims), (&c, &dims)]).unwrap();
+    let mut at = vec![0f32; bs * bs];
+    for i in 0..bs {
+        for j in 0..bs {
+            at[i * bs + j] = a[j * bs + i];
+        }
+    }
+    let mut aat = vec![0f32; bs * bs];
+    reference::mxm_block(bs, &a, &at, &mut aat);
+    let expect: Vec<f32> = c.iter().zip(&aat).map(|(x, y)| x - y).collect();
+    assert!(reference::max_abs_diff(&out, &expect) < 1e-2);
+
+    // dpotrf64 then dtrsm64: L @ L^T == SPD(a); (trsm out) @ L^T == b.
+    // SPD tile: a @ a^T + bs * I.
+    let mut spd = vec![0f32; bs * bs];
+    reference::mxm_block(bs, &a, &at, &mut spd);
+    for i in 0..bs {
+        spd[i * bs + i] += bs as f32;
+    }
+    let l = rt.run_f32("dpotrf64", &[(&spd, &dims)]).unwrap();
+    // check L lower-triangular and L L^T == spd
+    for i in 0..bs {
+        for j in (i + 1)..bs {
+            assert!(l[i * bs + j].abs() < 1e-3, "upper triangle not zero");
+        }
+    }
+    let mut lt = vec![0f32; bs * bs];
+    for i in 0..bs {
+        for j in 0..bs {
+            lt[i * bs + j] = l[j * bs + i];
+        }
+    }
+    let mut llt = vec![0f32; bs * bs];
+    reference::mxm_block(bs, &l, &lt, &mut llt);
+    let scale = bs as f32;
+    let rel: f32 = llt
+        .iter()
+        .zip(&spd)
+        .map(|(x, y)| (x - y).abs() / scale)
+        .fold(0.0, f32::max);
+    assert!(rel < 1e-2, "L L^T reconstruction error {rel}");
+
+    let x = rt.run_f32("dtrsm64", &[(&l, &dims), (&b, &dims)]).unwrap();
+    let mut xlt = vec![0f32; bs * bs];
+    reference::mxm_block(bs, &x, &lt, &mut xlt);
+    assert!(reference::max_abs_diff(&xlt, &b) < 1e-2);
+}
+
+#[test]
+fn jacobi_kernel_averages() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let bs = 64usize;
+    let dims = [bs as i64, bs as i64];
+    let ts: Vec<Vec<f32>> = (0..5).map(|i| rng_tile(20 + i, bs)).collect();
+    let inputs: Vec<(&[f32], &[i64])> = ts.iter().map(|t| (t.as_slice(), &dims[..])).collect();
+    let out = rt.run_f32("jacobi64", &inputs).unwrap();
+    for i in 0..bs * bs {
+        let expect = (ts[0][i] + ts[1][i] + ts[2][i] + ts[3][i] + ts[4][i]) / 5.0;
+        assert!((out[i] - expect).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn fused_matmul512_matches_blocked_reference() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let n = 512usize;
+    let a = rng_tile(31, n);
+    let b = rng_tile(32, n);
+    let dims = [n as i64, n as i64];
+    let out = rt.run_f32("matmul512", &[(&a, &dims), (&b, &dims)]).unwrap();
+    let mut expect = vec![0f32; n * n];
+    reference::blocked_matmul(n, 128, &a, &b, &mut expect);
+    // Relative tolerance: K = 512 accumulations.
+    let max = expect.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let diff = reference::max_abs_diff(&out, &expect);
+    assert!(diff / max < 1e-3, "relative diff {}", diff / max);
+}
+
+#[test]
+fn runtime_lists_artifacts() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let avail = rt.available();
+    for stem in ["mxm64", "mxm128", "dgemm64", "dsyrk64", "dtrsm64", "dpotrf64"] {
+        assert!(avail.iter().any(|s| s == stem), "missing {stem}");
+    }
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.load("no_such_kernel").is_err());
+}
+
+#[test]
+fn bf16_variant_loads_and_roughly_matches() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let (a, b, c) = (rng_tile(41, 128), rng_tile(42, 128), rng_tile(43, 128));
+    let out = rt.run_mxm("mxm128_bf16", 128, &a, &b, &c).unwrap();
+    let mut expect = c.clone();
+    reference::mxm_block(128, &a, &b, &mut expect);
+    // bf16 multiply: ~2-3 significant digits.
+    let max = expect.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let rel = reference::max_abs_diff(&out, &expect) / max;
+    assert!(rel < 0.05, "bf16 rel err {rel}");
+}
+
+#[test]
+fn kernel_timing_is_positive_and_ordered() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let t64 = rt.time_kernel_ms("mxm64", 64, 3, 5).unwrap();
+    let t128 = rt.time_kernel_ms("mxm128", 128, 3, 5).unwrap();
+    assert!(t64 > 0.0 && t128 > 0.0);
+    // 8x the FLOPs: the 128 tile should be slower. Integration tests run
+    // concurrently, so keep the margin generous — only the ordering must
+    // hold, not the exact ratio.
+    assert!(t128 > t64, "t128 {t128} vs t64 {t64}");
+}
