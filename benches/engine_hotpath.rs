@@ -3,20 +3,49 @@
 //! "coffee break" regime the paper promises even for much larger apps.
 //!
 //! Measures: event-engine throughput (tasks/s) for large synthetic
-//! programs, dependence-tracker build rate, and end-to-end sweep latency.
+//! programs — fresh-simulator-per-run (the seed path) vs the
+//! reset-reuse/no-segment sweep path — dependence-tracker build rate, and
+//! end-to-end DSE sweep latency (serial rebuild vs parallel shared
+//! context).
+//!
+//! Emits `BENCH_engine.json` (via `util::json`) so the perf trajectory is
+//! tracked across PRs.
 
 use zynq_estimator::apps::{cholesky::Cholesky, matmul::Matmul};
 use zynq_estimator::config::{BoardConfig, CoDesign};
 use zynq_estimator::coordinator::deps::DepGraph;
 use zynq_estimator::coordinator::elaborate::ElabProgram;
 use zynq_estimator::coordinator::sched::Policy;
+use zynq_estimator::dse::default_workers;
+use zynq_estimator::experiments;
 use zynq_estimator::hls::FpgaPart;
 use zynq_estimator::sim::engine::{resolve_codesign, Simulator};
 use zynq_estimator::sim::EstimatorModel;
-use zynq_estimator::util::bench::{bench, black_box};
+use zynq_estimator::util::bench::{bench, black_box, BenchStats};
+use zynq_estimator::util::json::{arr, obj, Value};
+
+fn stat_record(stats: &BenchStats, tasks: usize) -> Value {
+    obj(vec![
+        ("name", stats.name.clone().into()),
+        ("iters", stats.iters.into()),
+        ("mean_ms", stats.mean_ms.into()),
+        ("stdev_ms", stats.stdev_ms.into()),
+        ("min_ms", stats.min_ms.into()),
+        ("tasks", tasks.into()),
+        (
+            "mtasks_per_sec",
+            if tasks > 0 && stats.min_ms > 0.0 {
+                (tasks as f64 / (stats.min_ms / 1e3) / 1e6).into()
+            } else {
+                Value::Null
+            },
+        ),
+    ])
+}
 
 fn main() {
     let board = BoardConfig::zynq706();
+    let mut records: Vec<Value> = Vec::new();
 
     // Large workloads: matmul NB=16 (4096 tasks) and NB=24 (13824 tasks),
     // cholesky NB=40 (12340 tasks).
@@ -49,23 +78,66 @@ fn main() {
         let elab = ElabProgram::build(&program, &graph);
         let (accels, smp) =
             resolve_codesign(&program, &cd, &board, &FpgaPart::xc7z045()).unwrap();
-        let stats = bench(&format!("simulate {name}"), 2, 20, || {
+
+        // Seed path: a fresh simulator (all buffers allocated) per run.
+        let fresh = bench(&format!("simulate fresh {name}"), 2, 20, || {
             let sim = Simulator::new(&program, &elab, &board, &accels, &smp, Policy::Greedy);
             let mut model = EstimatorModel::new(&board);
             black_box(sim.run(&mut model));
         });
         println!(
-            "    -> {:.2} M simulated tasks/s\n",
-            n_tasks as f64 / (stats.min_ms / 1e3) / 1e6
+            "    -> {:.2} M simulated tasks/s (fresh)",
+            n_tasks as f64 / (fresh.min_ms / 1e3) / 1e6
         );
+        records.push(stat_record(&fresh, n_tasks));
+
+        // Sweep path: one simulator reset per run, no segment recording.
+        let mut sim = Simulator::new(&program, &elab, &board, &accels, &smp, Policy::Greedy);
+        sim.set_record_segments(false);
+        let mut model = EstimatorModel::new(&board);
+        let reused = bench(&format!("simulate reuse {name}"), 2, 20, || {
+            sim.reset(&accels, &smp);
+            black_box(sim.run_mut(&mut model));
+        });
+        println!(
+            "    -> {:.2} M simulated tasks/s (reset-reuse, no segments)\n",
+            n_tasks as f64 / (reused.min_ms / 1e3) / 1e6
+        );
+        records.push(stat_record(&reused, n_tasks));
     }
 
     // Dependence tracking and program generation rates.
     let big = Matmul::new(1536, 64).build_program(&board);
-    bench("DepGraph::build (13824 tasks)", 2, 20, || {
+    let s = bench("DepGraph::build (13824 tasks)", 2, 20, || {
         black_box(DepGraph::build(&big));
     });
-    bench("Matmul::build_program (13824 tasks)", 2, 20, || {
+    records.push(stat_record(&s, big.tasks.len()));
+    let s = bench("Matmul::build_program (13824 tasks)", 2, 20, || {
         black_box(Matmul::new(1536, 64).build_program(&board));
     });
+    records.push(stat_record(&s, big.tasks.len()));
+
+    // End-to-end DSE sweep: seed serial rebuild vs parallel shared context.
+    let workers = default_workers();
+    let chol = Cholesky::new(512, 64).build_program(&board);
+    let (base_s, sweep_s, points) =
+        experiments::dse_sweep_latency(&chol, &board, workers).unwrap();
+    println!(
+        "sweep cholesky n=512: {points} points, serial-rebuild {base_s:.3} s, parallel({workers}) {sweep_s:.3} s, speedup {:.1}x",
+        base_s / sweep_s.max(1e-12)
+    );
+    records.push(obj(vec![
+        ("name", "dse sweep cholesky n=512".into()),
+        ("points", points.into()),
+        ("workers", workers.into()),
+        ("serial_rebuild_s", base_s.into()),
+        ("parallel_s", sweep_s.into()),
+        ("speedup", (base_s / sweep_s.max(1e-12)).into()),
+    ]));
+
+    let out = arr(records).to_json();
+    match std::fs::write("BENCH_engine.json", &out) {
+        Ok(()) => println!("wrote BENCH_engine.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
+    }
 }

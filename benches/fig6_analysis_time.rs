@@ -4,8 +4,15 @@
 //!
 //! Paper shape to hold: traditional > 10 h (matmul) / ~1.5 days
 //! (cholesky); methodology minutes; gap > 2 orders of magnitude.
+//!
+//! Extended with the DSE sweep-latency comparison: the seed serial
+//! rebuild-everything loop vs the shared-`SweepContext` parallel engine
+//! (target: >= 4x end-to-end on a 4-core host, with identical rankings —
+//! the harness asserts equality before reporting times).
 
+use zynq_estimator::apps::{cholesky::Cholesky, matmul::Matmul};
 use zynq_estimator::config::BoardConfig;
+use zynq_estimator::dse::default_workers;
 use zynq_estimator::experiments;
 use zynq_estimator::util::fmt_secs;
 
@@ -30,5 +37,28 @@ fn main() {
     println!(
         "\nheadline (§VII): both gaps exceed two orders of magnitude: {}",
         trad / meth > 100.0 && trad_c / meth_c > 100.0
+    );
+
+    // --- DSE sweep latency: serial rebuild baseline vs parallel context ---
+    let workers = default_workers();
+    println!(
+        "\n=== DSE sweep latency: seed serial rebuild vs shared-context parallel ({workers} workers) ==="
+    );
+    let mut all_hit_target = true;
+    for (name, program) in [
+        ("matmul   n=512 bs=64 ", Matmul::new(512, 64).build_program(&board)),
+        ("cholesky n=512 bs=64 ", Cholesky::new(512, 64).build_program(&board)),
+    ] {
+        let (base_s, sweep_s, points) =
+            experiments::dse_sweep_latency(&program, &board, workers).unwrap();
+        let speedup = base_s / sweep_s.max(1e-12);
+        all_hit_target &= speedup >= 4.0;
+        println!(
+            "{name} {points:>5} points   serial-rebuild {base_s:>8.3} s   parallel {sweep_s:>8.3} s   speedup {speedup:>5.1}x"
+        );
+    }
+    println!(
+        "sweep speedup target (>= 4x on a 4-core host, identical rankings): {}",
+        if all_hit_target { "MET" } else { "not met on this host" }
     );
 }

@@ -114,7 +114,8 @@ COMMANDS (one per paper experiment, plus utilities):
   sim-trace      --trace t.jsonl --accel k:U<u>... [--smp k]... simulate a trace file
   hls            --kernel <name> [--bs 64] [--unroll 32]        Vivado-HLS-style report
   dse            --app <app> [--objective time|energy|edp]      explore the co-design space
-                 [--top 15]                                     (paper §VII future work)
+                 [--top 15] [--workers N]                       (paper §VII future work;
+                                                                 N=0 -> one per core)
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
   robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
   analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
@@ -351,10 +352,24 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         Some(o) => crate::dse::Objective::parse(o)
             .ok_or_else(|| anyhow::anyhow!("unknown objective '{o}' (time|energy|edp)"))?,
     };
+    let workers = match args.u64_or("workers", 0)? as usize {
+        0 => crate::dse::default_workers(),
+        w => w,
+    };
     let program = build_app_program(app, n, bs, board)?;
     let space = crate::dse::DseSpace::from_program(&program);
-    let points = crate::dse::explore(&program, board, &FpgaPart::xc7z045(), &space, objective)?;
+    let ctx = crate::dse::SweepContext::for_space(&program, board, &FpgaPart::xc7z045(), &space);
+    let t0 = std::time::Instant::now();
+    let points = ctx.explore(&space, objective, workers);
+    let secs = t0.elapsed().as_secs_f64();
     print!("{}", crate::dse::render(&points, top, objective));
+    println!(
+        "swept {} points in {:.3} s ({:.0} points/s, {workers} workers, {} cached HLS reports)",
+        points.len(),
+        secs,
+        points.len() as f64 / secs.max(1e-9),
+        ctx.cached_reports(),
+    );
     Ok(0)
 }
 
@@ -575,6 +590,18 @@ mod tests {
         let cmd = format!("lint --trace {}", path.display());
         assert_eq!(run(&argv(&cmd)).unwrap(), 0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dse_command_runs_serial_and_parallel() {
+        assert_eq!(
+            run(&argv("dse --app matmul --n 256 --bs 64 --workers 1 --top 5")).unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv("dse --app matmul --n 256 --bs 64 --workers 2 --top 5")).unwrap(),
+            0
+        );
     }
 
     #[test]

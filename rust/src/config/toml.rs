@@ -57,12 +57,19 @@ impl Item {
     }
 }
 
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// A parsed document: dotted-path key → item.
 #[derive(Clone, Debug, Default, PartialEq)]

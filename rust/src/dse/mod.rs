@@ -5,14 +5,22 @@
 //! milliseconds, plain enumeration over the feasible co-design space is
 //! practical for the paper's app sizes; that is what this module does,
 //! with multi-objective ranking (time / energy / EDP) and a Pareto front.
+//!
+//! Evaluation runs through the [`sweep`] engine: a shared [`SweepContext`]
+//! (one-time dependence graph + elaboration + memoized HLS reports) and
+//! parallel, deterministic point evaluation. The free functions here are
+//! thin wrappers kept for the CLI/tests; long-lived callers should build a
+//! `SweepContext` themselves and reuse it.
+
+pub mod sweep;
 
 use std::collections::BTreeMap;
 
 use crate::config::{BoardConfig, CoDesign};
 use crate::coordinator::task::TaskProgram;
-use crate::hls::{CostModel, FpgaPart, Resources};
-use crate::power::PowerModel;
-use crate::sim::estimate;
+use crate::hls::FpgaPart;
+
+pub use sweep::{default_workers, SweepContext, SweepWorker};
 
 /// Exploration space for one kernel.
 #[derive(Clone, Debug)]
@@ -91,87 +99,16 @@ impl DsePoint {
 }
 
 /// Enumerate feasible co-designs over the space (resource-pruned).
+///
+/// Thin wrapper: builds a primed [`SweepContext`] and delegates. Callers
+/// that also evaluate points should build the context once and reuse it.
 pub fn enumerate(
     program: &TaskProgram,
     board: &BoardConfig,
     part: &FpgaPart,
     space: &DseSpace,
 ) -> Vec<CoDesign> {
-    let cm = CostModel::from_board(board);
-    // Per-kernel options: (accel list, smp flag).
-    let mut per_kernel: Vec<Vec<(Vec<(String, u32)>, bool)>> = Vec::new();
-    for ks in &space.kernels {
-        let kid = match program.kernel_id(&ks.kernel) {
-            Some(k) => k,
-            None => continue,
-        };
-        let profile = &program.kernel(kid).profile;
-        let mut opts: Vec<(Vec<(String, u32)>, bool)> = vec![(Vec::new(), false)];
-        for &u in &ks.unrolls {
-            let res = cm.estimate(&ks.kernel, profile, u).resources;
-            // Quick per-kernel prune: even alone it must fit.
-            if !part.fits(&[res]) {
-                continue;
-            }
-            for count in 1..=ks.max_instances {
-                let accels: Vec<(String, u32)> =
-                    (0..count).map(|_| (ks.kernel.clone(), u)).collect();
-                opts.push((accels.clone(), false));
-                if ks.try_smp {
-                    opts.push((accels, true));
-                }
-            }
-        }
-        per_kernel.push(opts);
-    }
-
-    // Cartesian product with feasibility pruning.
-    let mut out = Vec::new();
-    let mut idx = vec![0usize; per_kernel.len()];
-    loop {
-        // Assemble the candidate.
-        let mut cd = CoDesign::new("dse");
-        for (ki, &i) in idx.iter().enumerate() {
-            let (accels, smp) = &per_kernel[ki][i];
-            for (k, u) in accels {
-                cd = cd.with_accel(k, *u);
-            }
-            if *smp {
-                cd = cd.with_smp(&space.kernels[ki].kernel);
-            }
-        }
-        // Feasibility: total resources fit.
-        let resources: Vec<Resources> = cd
-            .accels
-            .iter()
-            .map(|a| {
-                let kid = program.kernel_id(&a.kernel).unwrap();
-                cm.estimate(&a.kernel, &program.kernel(kid).profile, a.unroll)
-                    .resources
-            })
-            .collect();
-        if part.fits(&resources) {
-            cd.name = describe(&cd);
-            out.push(cd);
-        }
-        // Advance the odometer.
-        let mut carry = true;
-        for (ki, i) in idx.iter_mut().enumerate() {
-            if !carry {
-                break;
-            }
-            *i += 1;
-            if *i < per_kernel[ki].len() {
-                carry = false;
-            } else {
-                *i = 0;
-            }
-        }
-        if carry {
-            break;
-        }
-    }
-    out
+    SweepContext::for_space(program, board, part, space).enumerate(space)
 }
 
 fn describe(cd: &CoDesign) -> String {
@@ -194,6 +131,11 @@ fn describe(cd: &CoDesign) -> String {
 }
 
 /// Evaluate every feasible point and rank by the objective.
+///
+/// Runs the shared-context sweep engine with one worker per available
+/// core; the output is bit-identical to a serial sweep (see
+/// `dse::sweep`). Use [`SweepContext::explore`] directly to control the
+/// worker count or amortize the context across multiple spaces.
 pub fn explore(
     program: &TaskProgram,
     board: &BoardConfig,
@@ -201,35 +143,8 @@ pub fn explore(
     space: &DseSpace,
     objective: Objective,
 ) -> anyhow::Result<Vec<DsePoint>> {
-    let cm = CostModel::from_board(board);
-    let pm = PowerModel::default();
-    let mut points = Vec::new();
-    for cd in enumerate(program, board, part, space) {
-        // Skip configurations where some kernel has nowhere to run.
-        let Ok(res) = estimate(program, &cd, board) else {
-            continue;
-        };
-        let resources: Vec<Resources> = cd
-            .accels
-            .iter()
-            .map(|a| {
-                let kid = program.kernel_id(&a.kernel).unwrap();
-                cm.estimate(&a.kernel, &program.kernel(kid).profile, a.unroll)
-                    .resources
-            })
-            .collect();
-        let util = part.utilization(&resources);
-        let energy = pm.energy(&res, &resources, util, board.fabric_freq_mhz);
-        points.push(DsePoint {
-            codesign: cd,
-            est_ms: res.makespan_ms(),
-            energy_j: energy.total_j(),
-            edp: energy.edp(),
-            fabric_util: util,
-        });
-    }
-    points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
-    Ok(points)
+    let ctx = SweepContext::for_space(program, board, part, space);
+    Ok(ctx.explore(space, objective, default_workers()))
 }
 
 /// Indices of the time-energy Pareto-optimal points.

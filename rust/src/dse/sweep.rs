@@ -1,0 +1,553 @@
+//! Zero-rebuild, parallel DSE sweep engine.
+//!
+//! The seed exploration loop paid O(points × tasks) redundant work: every
+//! enumerated co-design rebuilt the dependence graph and elaborated
+//! program from scratch (`sim::estimate` → `DepGraph::build` +
+//! `ElabProgram::build`), re-ran the HLS cost model for every
+//! (kernel, unroll) it touched, and evaluated points one after another.
+//! CEDR (Mack et al., 2022) and the hardware-HEFT scheduler work (Fusco et
+//! al., 2022) both separate one-time program analysis from
+//! per-configuration scheduling; [`SweepContext`] is that separation here:
+//!
+//! * the [`DepGraph`] and [`ElabProgram`] are built **once** per program
+//!   and shared (immutably) by every evaluation;
+//! * HLS reports are memoized per `(kernel, unroll)` — [`SweepContext::prime`]
+//!   fills the cache for a [`DseSpace`] up front so a sweep performs zero
+//!   duplicate cost-model calls;
+//! * point evaluation shards across `std::thread::scope` workers (keeping
+//!   the repository's zero-external-dependency style). Each worker keeps
+//!   one [`Simulator`] alive and [`Simulator::reset`]s it per point, so the
+//!   event heap, ready queues and predecessor counters are allocated once
+//!   per worker, not once per point, and segment recording is disabled
+//!   because ranking needs only makespan + busy accounting.
+//!
+//! Determinism: candidates are evaluated under a work-stealing index
+//! cursor, results are keyed by candidate index and merged in enumeration
+//! order, and the final ranking uses the same stable sort as the serial
+//! path — so `explore` returns a bit-identical `Vec<DsePoint>` for any
+//! worker count (asserted by `rust/tests/sweep_determinism.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::deps::DepGraph;
+use crate::coordinator::elaborate::ElabProgram;
+use crate::coordinator::sched::Policy;
+use crate::coordinator::task::{KernelId, TaskProgram};
+use crate::hls::{CostModel, FpgaPart, HlsReport, Resources};
+use crate::power::PowerModel;
+use crate::sim::engine::{AccelInstance, Simulator};
+use crate::sim::{EstimatorModel, SimResult};
+use crate::util::fxhash::FxHashMap;
+
+use super::{describe, DsePoint, DseSpace, Objective};
+
+/// Number of evaluation workers to use by default: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Shared, immutable evaluation context for one (program, board, part)
+/// triple: dependence graph, elaborated program and memoized HLS reports.
+/// Build it once, then run any number of enumerations / explorations /
+/// single-point estimates against it.
+pub struct SweepContext<'p> {
+    pub program: &'p TaskProgram,
+    pub board: &'p BoardConfig,
+    pub part: FpgaPart,
+    pub graph: DepGraph,
+    pub elab: ElabProgram,
+    cost: CostModel,
+    power: PowerModel,
+    /// Memoized `(kernel, unroll) → HlsReport`.
+    reports: FxHashMap<(KernelId, u32), HlsReport>,
+}
+
+impl<'p> SweepContext<'p> {
+    /// Build the one-time program analysis (graph + elaboration). The HLS
+    /// cache starts empty; call [`SweepContext::prime`] with the space you
+    /// are about to sweep.
+    pub fn new(program: &'p TaskProgram, board: &'p BoardConfig, part: FpgaPart) -> Self {
+        let graph = DepGraph::build(program);
+        let elab = ElabProgram::build(program, &graph);
+        SweepContext {
+            program,
+            board,
+            part,
+            graph,
+            elab,
+            cost: CostModel::from_board(board),
+            power: PowerModel::default(),
+            reports: FxHashMap::default(),
+        }
+    }
+
+    /// Convenience constructor: build and prime for `space` in one step.
+    pub fn for_space(
+        program: &'p TaskProgram,
+        board: &'p BoardConfig,
+        part: &FpgaPart,
+        space: &DseSpace,
+    ) -> Self {
+        let mut ctx = Self::new(program, board, part.clone());
+        ctx.prime(space);
+        ctx
+    }
+
+    /// Memoize the HLS report of every `(kernel, unroll)` pair the space
+    /// can touch, so the sweep itself performs zero cost-model calls.
+    pub fn prime(&mut self, space: &DseSpace) {
+        for ks in &space.kernels {
+            let Some(kid) = self.program.kernel_id(&ks.kernel) else {
+                continue;
+            };
+            for &u in &ks.unrolls {
+                if self.reports.contains_key(&(kid, u)) {
+                    continue;
+                }
+                let r = self
+                    .cost
+                    .estimate(&ks.kernel, &self.program.kernel(kid).profile, u);
+                self.reports.insert((kid, u), r);
+            }
+        }
+    }
+
+    /// Number of memoized HLS reports (bench/diagnostic).
+    pub fn cached_reports(&self) -> usize {
+        self.reports.len()
+    }
+
+    /// The HLS report for a variant: cache hit, or an on-the-fly estimate
+    /// for variants outside the primed space (same numbers either way —
+    /// the cost model is deterministic).
+    pub fn report_for(&self, kid: KernelId, kernel: &str, unroll: u32) -> HlsReport {
+        match self.reports.get(&(kid, unroll)) {
+            Some(r) => r.clone(),
+            None => self
+                .cost
+                .estimate(kernel, &self.program.kernel(kid).profile, unroll),
+        }
+    }
+
+    /// Resource vector only (avoids cloning the report's strings on hit).
+    pub fn resources_for(&self, kid: KernelId, kernel: &str, unroll: u32) -> Resources {
+        match self.reports.get(&(kid, unroll)) {
+            Some(r) => r.resources,
+            None => {
+                self.cost
+                    .estimate(kernel, &self.program.kernel(kid).profile, unroll)
+                    .resources
+            }
+        }
+    }
+
+    /// Resolve a co-design against the program using the memoized reports —
+    /// the cached equivalent of [`crate::sim::resolve_codesign`], with the
+    /// same feasibility checks and error conditions.
+    pub fn resolve(&self, codesign: &CoDesign) -> anyhow::Result<(Vec<AccelInstance>, Vec<bool>)> {
+        let mut accels = Vec::with_capacity(codesign.accels.len());
+        for spec in &codesign.accels {
+            let kid = self.program.kernel_id(&spec.kernel).ok_or_else(|| {
+                anyhow::anyhow!("co-design accel '{}' not in program", spec.kernel)
+            })?;
+            if !self.program.kernel(kid).targets.fpga {
+                anyhow::bail!(
+                    "kernel '{}' is not annotated with target device(fpga)",
+                    spec.kernel
+                );
+            }
+            accels.push(AccelInstance {
+                kernel: kid,
+                report: self.report_for(kid, &spec.kernel, spec.unroll),
+            });
+        }
+        let resources: Vec<Resources> = accels.iter().map(|a| a.report.resources).collect();
+        if !self.part.fits(&resources) {
+            anyhow::bail!(
+                "co-design '{}' does not fit {} (utilization {:.0}%)",
+                codesign.name,
+                self.part.name,
+                self.part.utilization(&resources) * 100.0
+            );
+        }
+        let mut smp_eligible = Vec::with_capacity(self.program.kernels.len());
+        for (kid, k) in self.program.kernels.iter().enumerate() {
+            let has_accel = accels.iter().any(|a| a.kernel as usize == kid);
+            let eligible = if has_accel {
+                k.targets.smp && codesign.allows_smp(&k.name)
+            } else {
+                k.targets.smp
+            };
+            if !eligible && !has_accel {
+                anyhow::bail!(
+                    "kernel '{}' can run nowhere under co-design '{}'",
+                    k.name,
+                    codesign.name
+                );
+            }
+            smp_eligible.push(eligible);
+        }
+        Ok((accels, smp_eligible))
+    }
+
+    /// One-shot coarse-grain estimate of a co-design against the shared
+    /// context — equals `sim::estimate` on the same inputs, without
+    /// rebuilding the graph/elaboration. For many points, prefer
+    /// [`SweepContext::worker`] which also reuses the simulator buffers.
+    pub fn estimate(&self, codesign: &CoDesign) -> anyhow::Result<SimResult> {
+        let (accels, smp) = self.resolve(codesign)?;
+        let mut sim = Simulator::new(
+            self.program,
+            &self.elab,
+            self.board,
+            &accels,
+            &smp,
+            Policy::Greedy,
+        );
+        let mut model = EstimatorModel::new(self.board);
+        Ok(sim.run_mut(&mut model))
+    }
+
+    /// Enumerate feasible co-designs over the space (resource-pruned),
+    /// identical to the seed `dse::enumerate` but with every resource
+    /// vector served from the memoized reports.
+    pub fn enumerate(&self, space: &DseSpace) -> Vec<CoDesign> {
+        // Per-kernel options: (accel list, smp flag), parallel to the
+        // surviving KernelSpace entries.
+        let mut per_kernel: Vec<Vec<(Vec<(String, u32)>, bool)>> = Vec::new();
+        let mut kspaces: Vec<&super::KernelSpace> = Vec::new();
+        for ks in &space.kernels {
+            let Some(kid) = self.program.kernel_id(&ks.kernel) else {
+                continue;
+            };
+            let mut opts: Vec<(Vec<(String, u32)>, bool)> = vec![(Vec::new(), false)];
+            for &u in &ks.unrolls {
+                let res = self.resources_for(kid, &ks.kernel, u);
+                // Quick per-kernel prune: even alone it must fit.
+                if !self.part.fits(&[res]) {
+                    continue;
+                }
+                for count in 1..=ks.max_instances {
+                    let accels: Vec<(String, u32)> =
+                        (0..count).map(|_| (ks.kernel.clone(), u)).collect();
+                    opts.push((accels.clone(), false));
+                    if ks.try_smp {
+                        opts.push((accels, true));
+                    }
+                }
+            }
+            per_kernel.push(opts);
+            kspaces.push(ks);
+        }
+
+        // Cartesian product with feasibility pruning.
+        let mut out = Vec::new();
+        let mut idx = vec![0usize; per_kernel.len()];
+        let mut resources: Vec<Resources> = Vec::new();
+        loop {
+            // Assemble the candidate.
+            let mut cd = CoDesign::new("dse");
+            for (ki, &i) in idx.iter().enumerate() {
+                let (accels, smp) = &per_kernel[ki][i];
+                for (k, u) in accels {
+                    cd = cd.with_accel(k, *u);
+                }
+                if *smp {
+                    cd = cd.with_smp(&kspaces[ki].kernel);
+                }
+            }
+            // Feasibility: total resources fit.
+            resources.clear();
+            for a in &cd.accels {
+                let kid = self.program.kernel_id(&a.kernel).unwrap();
+                resources.push(self.resources_for(kid, &a.kernel, a.unroll));
+            }
+            if self.part.fits(&resources) {
+                cd.name = describe(&cd);
+                out.push(cd);
+            }
+            // Advance the odometer.
+            let mut carry = true;
+            for (ki, i) in idx.iter_mut().enumerate() {
+                if !carry {
+                    break;
+                }
+                *i += 1;
+                if *i < per_kernel[ki].len() {
+                    carry = false;
+                } else {
+                    *i = 0;
+                }
+            }
+            if carry {
+                break;
+            }
+        }
+        out
+    }
+
+    /// A reusable evaluation worker: one simulator + one timing model,
+    /// reset per point. Create one per thread.
+    pub fn worker<'c>(&'c self) -> SweepWorker<'c, 'p> {
+        let mut sim = Simulator::new(
+            self.program,
+            &self.elab,
+            self.board,
+            &[],
+            &[],
+            Policy::Greedy,
+        );
+        // Ranking needs only makespan + busy accounting.
+        sim.set_record_segments(false);
+        SweepWorker {
+            ctx: self,
+            sim,
+            model: EstimatorModel::new(self.board),
+        }
+    }
+
+    /// Turn a finished simulation into a ranked design point.
+    fn point_from(&self, codesign: &CoDesign, res: &SimResult) -> DsePoint {
+        let resources: Vec<Resources> = codesign
+            .accels
+            .iter()
+            .map(|a| {
+                let kid = self.program.kernel_id(&a.kernel).unwrap();
+                self.resources_for(kid, &a.kernel, a.unroll)
+            })
+            .collect();
+        let util = self.part.utilization(&resources);
+        let energy = self
+            .power
+            .energy(res, &resources, util, self.board.fabric_freq_mhz);
+        DsePoint {
+            codesign: codesign.clone(),
+            est_ms: res.makespan_ms(),
+            energy_j: energy.total_j(),
+            edp: energy.edp(),
+            fabric_util: util,
+        }
+    }
+
+    /// Evaluate a candidate list across `workers` threads with
+    /// deterministic (enumeration-order) output. Points whose co-design
+    /// cannot run (some kernel has nowhere to execute) are skipped, as in
+    /// the serial path.
+    pub fn evaluate_all(&self, cands: &[CoDesign], workers: usize) -> Vec<DsePoint> {
+        let n = cands.len();
+        let workers = workers.max(1).min(n.max(1));
+        if workers <= 1 {
+            let mut w = self.worker();
+            return cands.iter().filter_map(|cd| w.evaluate(cd)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut indexed: Vec<(usize, DsePoint)> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut w = self.worker();
+                        let mut out: Vec<(usize, DsePoint)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            if let Some(p) = w.evaluate(&cands[i]) {
+                                out.push((i, p));
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                indexed.extend(h.join().expect("sweep worker panicked"));
+            }
+        });
+        // Restore enumeration order so ranking ties break exactly like the
+        // serial path (the score sort below is stable).
+        indexed.sort_unstable_by_key(|e| e.0);
+        indexed.into_iter().map(|(_, p)| p).collect()
+    }
+
+    /// Enumerate + evaluate + rank. Bit-identical output for any worker
+    /// count, including `workers == 1`.
+    pub fn explore(
+        &self,
+        space: &DseSpace,
+        objective: Objective,
+        workers: usize,
+    ) -> Vec<DsePoint> {
+        let cands = self.enumerate(space);
+        let mut points = self.evaluate_all(&cands, workers);
+        points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+        points
+    }
+}
+
+/// Worker-local evaluation state: a [`Simulator`] whose buffers persist
+/// across points (reset per co-design) and an estimator timing model.
+pub struct SweepWorker<'c, 'p> {
+    ctx: &'c SweepContext<'p>,
+    sim: Simulator<'c>,
+    model: EstimatorModel,
+}
+
+impl<'c, 'p> SweepWorker<'c, 'p> {
+    /// Evaluate one co-design; `None` if it cannot run (skipped point).
+    pub fn evaluate(&mut self, codesign: &CoDesign) -> Option<DsePoint> {
+        let (accels, smp) = self.ctx.resolve(codesign).ok()?;
+        // `resolve` already built owned instances: hand them to the
+        // simulator instead of copying them a second time.
+        self.sim.reset_owned(accels, smp);
+        let res = self.sim.run_mut(&mut self.model);
+        Some(self.ctx.point_from(codesign, &res))
+    }
+}
+
+/// The seed *evaluation* path, kept for benchmarking and equivalence
+/// testing: rebuilds the dependence graph and elaborated program for
+/// **every** point (inside `sim::estimate`) and re-runs the HLS cost model
+/// per point — exactly what `SweepContext` eliminates. (Candidate
+/// enumeration goes through the shared wrapper, so both paths sweep the
+/// identical candidate list; the timed difference is per-point
+/// evaluation, which dominates.)
+pub fn explore_rebuild_baseline(
+    program: &TaskProgram,
+    board: &BoardConfig,
+    part: &FpgaPart,
+    space: &DseSpace,
+    objective: Objective,
+) -> anyhow::Result<Vec<DsePoint>> {
+    let cm = CostModel::from_board(board);
+    let pm = PowerModel::default();
+    let mut points = Vec::new();
+    for cd in super::enumerate(program, board, part, space) {
+        // Skip configurations where some kernel has nowhere to run.
+        let Ok(res) = crate::sim::estimate(program, &cd, board) else {
+            continue;
+        };
+        let resources: Vec<Resources> = cd
+            .accels
+            .iter()
+            .map(|a| {
+                let kid = program.kernel_id(&a.kernel).unwrap();
+                cm.estimate(&a.kernel, &program.kernel(kid).profile, a.unroll)
+                    .resources
+            })
+            .collect();
+        let util = part.utilization(&resources);
+        let energy = pm.energy(&res, &resources, util, board.fabric_freq_mhz);
+        points.push(DsePoint {
+            codesign: cd,
+            est_ms: res.makespan_ms(),
+            energy_j: energy.total_j(),
+            edp: energy.edp(),
+            fabric_util: util,
+        });
+    }
+    points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::dse::KernelSpace;
+
+    fn space() -> DseSpace {
+        DseSpace {
+            kernels: vec![KernelSpace {
+                kernel: "mxm64".into(),
+                unrolls: vec![8, 16, 32],
+                max_instances: 2,
+                try_smp: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn context_enumeration_matches_free_function() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let part = FpgaPart::xc7z045();
+        let sp = space();
+        let ctx = SweepContext::for_space(&p, &board, &part, &sp);
+        let a = ctx.enumerate(&sp);
+        let b = super::super::enumerate(&p, &board, &part, &sp);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn prime_fills_the_cache() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let sp = space();
+        let mut ctx = SweepContext::new(&p, &board, FpgaPart::xc7z045());
+        assert_eq!(ctx.cached_reports(), 0);
+        ctx.prime(&sp);
+        assert_eq!(ctx.cached_reports(), 3);
+        // Idempotent.
+        ctx.prime(&sp);
+        assert_eq!(ctx.cached_reports(), 3);
+        // Cache hits equal fresh estimates.
+        let kid = p.kernel_id("mxm64").unwrap();
+        let cached = ctx.report_for(kid, "mxm64", 16);
+        let fresh = CostModel::from_board(&board).estimate("mxm64", &p.kernel(kid).profile, 16);
+        assert_eq!(cached, fresh);
+        // Uncached unrolls fall through to the cost model.
+        let off_space = ctx.report_for(kid, "mxm64", 64);
+        let fresh64 = CostModel::from_board(&board).estimate("mxm64", &p.kernel(kid).profile, 64);
+        assert_eq!(off_space, fresh64);
+    }
+
+    #[test]
+    fn cached_estimate_matches_sim_estimate() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let ctx = SweepContext::new(&p, &board, FpgaPart::xc7z045());
+        let cd = CoDesign::new("2acc").with_accel("mxm64", 32).with_accel("mxm64", 32);
+        let a = ctx.estimate(&cd).unwrap();
+        let b = crate::sim::estimate(&p, &cd, &board).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.device_busy, b.device_busy);
+        // Infeasible co-designs error through both paths.
+        let huge = CoDesign::new("huge")
+            .with_accel("mxm64", 512)
+            .with_accel("mxm64", 512);
+        assert!(ctx.estimate(&huge).is_err());
+        assert!(crate::sim::estimate(&p, &huge, &board).is_err());
+    }
+
+    #[test]
+    fn explore_matches_rebuild_baseline() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let part = FpgaPart::xc7z045();
+        let sp = space();
+        let ctx = SweepContext::for_space(&p, &board, &part, &sp);
+        let baseline =
+            explore_rebuild_baseline(&p, &board, &part, &sp, Objective::Time).unwrap();
+        for workers in [1, 2, 4] {
+            let pts = ctx.explore(&sp, Objective::Time, workers);
+            assert_eq!(pts.len(), baseline.len(), "workers={workers}");
+            for (a, b) in pts.iter().zip(&baseline) {
+                assert_eq!(a.codesign.name, b.codesign.name, "workers={workers}");
+                assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "workers={workers}");
+                assert_eq!(
+                    a.energy_j.to_bits(),
+                    b.energy_j.to_bits(),
+                    "workers={workers}"
+                );
+            }
+        }
+    }
+}

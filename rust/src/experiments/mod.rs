@@ -181,6 +181,46 @@ pub fn analysis_time_cholesky(n: u64, board: &BoardConfig) -> anyhow::Result<(f6
     Ok((methodology, traditional))
 }
 
+/// DSE sweep latency on an app's default space: the seed-style serial
+/// rebuild-everything loop vs the shared-`SweepContext` parallel engine.
+/// Returns `(baseline_secs, sweep_secs, n_points)`; both paths produce the
+/// identical ranked point list (asserted here, measured by the Fig. 6
+/// bench).
+pub fn dse_sweep_latency(
+    program: &TaskProgram,
+    board: &BoardConfig,
+    workers: usize,
+) -> anyhow::Result<(f64, f64, usize)> {
+    use crate::dse::{sweep, DseSpace, Objective, SweepContext};
+    let space = DseSpace::from_program(program);
+    let part = FpgaPart::xc7z045();
+
+    let t0 = Instant::now();
+    let baseline =
+        sweep::explore_rebuild_baseline(program, board, &part, &space, Objective::Time)?;
+    let baseline_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let ctx = SweepContext::for_space(program, board, &part, &space);
+    let points = ctx.explore(&space, Objective::Time, workers);
+    let sweep_secs = t1.elapsed().as_secs_f64();
+
+    anyhow::ensure!(
+        points.len() == baseline.len(),
+        "sweep point-count mismatch: {} vs {}",
+        points.len(),
+        baseline.len()
+    );
+    for (a, b) in points.iter().zip(&baseline) {
+        anyhow::ensure!(
+            a.codesign.name == b.codesign.name && a.est_ms == b.est_ms,
+            "sweep ranking diverged from the serial baseline at '{}'",
+            b.codesign.name
+        );
+    }
+    Ok((baseline_secs, sweep_secs, points.len()))
+}
+
 /// Fig. 7 — write Paraver bundles for the four matmul configurations the
 /// paper visualizes. Returns the written stems.
 pub fn fig7(
@@ -316,6 +356,16 @@ mod tests {
         assert_eq!(z7.1, "1acc 128");
         assert_eq!(us.1, "2acc 128", "us+ winner: {} ({} ms)", us.1, us.2);
         assert!(us.2 < z7.2, "US+ must be faster outright");
+    }
+
+    #[test]
+    fn dse_sweep_latency_paths_agree() {
+        let board = BoardConfig::zynq706();
+        let program = matmul::Matmul::new(256, 64).build_program(&board);
+        // The harness itself asserts baseline/sweep ranking equality.
+        let (base_s, sweep_s, points) = dse_sweep_latency(&program, &board, 2).unwrap();
+        assert!(points > 0);
+        assert!(base_s > 0.0 && sweep_s > 0.0);
     }
 
     #[test]

@@ -309,14 +309,22 @@ enum ProducerClass {
     Fpga,
 }
 
-/// The simulator. Construct one per (program, co-design, policy) and call
-/// [`Simulator::run`] with a timing model.
+/// The simulator.
+///
+/// Construct one per (program, policy) and call [`Simulator::run`] with a
+/// timing model, or — on the sweep hot path — keep it alive across
+/// co-designs: [`Simulator::reset`] swaps in the next co-design while
+/// reusing the event heap, ready queues, `preds_left` storage and busy
+/// accumulators, and [`Simulator::run_mut`] runs without consuming the
+/// simulator. [`Simulator::set_record_segments`] disables per-segment
+/// recording for sweeps that only need makespan + busy accounting, which
+/// removes the last per-event heap allocation.
 pub struct Simulator<'a> {
     program: &'a TaskProgram,
     elab: &'a ElabProgram,
     board: &'a BoardConfig,
-    accels: &'a [AccelInstance],
-    smp_eligible: &'a [bool],
+    accels: Vec<AccelInstance>,
+    smp_eligible: Vec<bool>,
     policy: Policy,
 
     now: Ps,
@@ -352,6 +360,9 @@ pub struct Simulator<'a> {
     active_dma_streams: u32,
 
     segments: Vec<Segment>,
+    /// When false (sweep mode), skip building `segments` entirely; busy
+    /// accounting and makespan stay exact.
+    record_segments: bool,
     /// Dense busy accumulator: [smp cores | accels | submit | chans].
     busy_acc: Vec<Ps>,
     tasks_on_smp: usize,
@@ -363,57 +374,138 @@ impl<'a> Simulator<'a> {
         program: &'a TaskProgram,
         elab: &'a ElabProgram,
         board: &'a BoardConfig,
-        accels: &'a [AccelInstance],
-        smp_eligible: &'a [bool],
+        accels: &[AccelInstance],
+        smp_eligible: &[bool],
         policy: Policy,
     ) -> Self {
         assert_eq!(program.tasks.len(), elab.n_tasks);
         assert!(board.smp_cores >= 1, "need at least one SMP core");
         let n_kernels = program.kernels.len();
-        let mut kernel_accels: Vec<Vec<u32>> = vec![Vec::new(); n_kernels];
-        for (i, a) in accels.iter().enumerate() {
-            kernel_accels[a.kernel as usize].push(i as u32);
-        }
-        let n_chans = if board.dma_out_scales {
-            accels.len().max(1)
-        } else {
-            1
-        };
-        let accel_q = vec![VecDeque::new(); n_kernels];
-        let accel_backlog = vec![0usize; n_kernels];
-        Simulator {
+        let mut sim = Simulator {
             program,
             elab,
             board,
-            accels,
-            smp_eligible,
+            accels: Vec::new(),
+            smp_eligible: Vec::new(),
             policy,
             now: 0,
             seq: 0,
             heap: BinaryHeap::with_capacity(64 + elab.n_tasks / 2),
-            free_cores: (0..board.smp_cores).collect(),
+            free_cores: VecDeque::with_capacity(board.smp_cores as usize),
             ready_smp: VecDeque::new(),
             next_creation: 0,
-            preds_left: elab.compute_preds.clone(),
-            dispatched: vec![false; elab.n_tasks],
-            completed: vec![false; elab.n_tasks],
+            preds_left: Vec::with_capacity(elab.n_tasks),
+            dispatched: Vec::with_capacity(elab.n_tasks),
+            completed: Vec::with_capacity(elab.n_tasks),
             n_completed: 0,
-            accel_free: vec![true; accels.len()],
-            kernel_accels,
-            accel_q,
-            accel_backlog,
+            accel_free: Vec::new(),
+            kernel_accels: vec![Vec::new(); n_kernels],
+            accel_q: vec![VecDeque::new(); n_kernels],
+            accel_backlog: vec![0usize; n_kernels],
             submit_busy: false,
             submit_q: VecDeque::new(),
-            chan_busy: vec![false; n_chans],
-            chan_q: vec![VecDeque::new(); n_chans],
+            chan_busy: Vec::new(),
+            chan_q: Vec::new(),
             producer: FxHashMap::default(),
             track_coherence: true,
             active_dma_streams: 0,
             segments: Vec::with_capacity(elab.n_tasks * 4),
-            busy_acc: vec![0; board.smp_cores as usize + accels.len() + 1 + n_chans],
+            record_segments: true,
+            busy_acc: Vec::new(),
             tasks_on_smp: 0,
             tasks_on_accel: 0,
+        };
+        sim.reset(accels, smp_eligible);
+        sim
+    }
+
+    /// Reconfigure for the next co-design and rewind simulated time,
+    /// reusing every internal buffer (heap, queues, predecessor counters,
+    /// busy accumulators). Copies the accelerator instances; sweep loops
+    /// that already own them should use [`Simulator::reset_owned`] to avoid
+    /// the extra clone.
+    pub fn reset(&mut self, accels: &[AccelInstance], smp_eligible: &[bool]) {
+        self.accels.clear();
+        self.accels.extend_from_slice(accels);
+        self.smp_eligible.clear();
+        self.smp_eligible.extend_from_slice(smp_eligible);
+        self.reset_run_state();
+    }
+
+    /// Like [`Simulator::reset`] but takes ownership of the co-design
+    /// state, so per-point sweep evaluation performs no accelerator copy.
+    pub fn reset_owned(&mut self, accels: Vec<AccelInstance>, smp_eligible: Vec<bool>) {
+        self.accels = accels;
+        self.smp_eligible = smp_eligible;
+        self.reset_run_state();
+    }
+
+    fn reset_run_state(&mut self) {
+        let n_tasks = self.elab.n_tasks;
+        let n_kernels = self.program.kernels.len();
+
+        self.now = 0;
+        self.seq = 0;
+        self.heap.clear();
+        self.free_cores.clear();
+        self.free_cores.extend(0..self.board.smp_cores);
+        self.ready_smp.clear();
+        self.next_creation = 0;
+        self.preds_left.clear();
+        self.preds_left.extend_from_slice(&self.elab.compute_preds);
+        self.dispatched.clear();
+        self.dispatched.resize(n_tasks, false);
+        self.completed.clear();
+        self.completed.resize(n_tasks, false);
+        self.n_completed = 0;
+
+        self.accel_free.clear();
+        self.accel_free.resize(self.accels.len(), true);
+        for v in &mut self.kernel_accels {
+            v.clear();
         }
+        self.kernel_accels.resize(n_kernels, Vec::new());
+        for (i, a) in self.accels.iter().enumerate() {
+            self.kernel_accels[a.kernel as usize].push(i as u32);
+        }
+        for q in &mut self.accel_q {
+            q.clear();
+        }
+        self.accel_q.resize(n_kernels, VecDeque::new());
+        self.accel_backlog.clear();
+        self.accel_backlog.resize(n_kernels, 0);
+
+        self.submit_busy = false;
+        self.submit_q.clear();
+
+        let n_chans = if self.board.dma_out_scales {
+            self.accels.len().max(1)
+        } else {
+            1
+        };
+        for q in &mut self.chan_q {
+            q.clear();
+        }
+        self.chan_q.resize(n_chans, VecDeque::new());
+        self.chan_busy.clear();
+        self.chan_busy.resize(n_chans, false);
+
+        self.producer.clear();
+        self.active_dma_streams = 0;
+
+        self.segments.clear();
+        self.busy_acc.clear();
+        self.busy_acc
+            .resize(self.board.smp_cores as usize + self.accels.len() + 1 + n_chans, 0);
+        self.tasks_on_smp = 0;
+        self.tasks_on_accel = 0;
+    }
+
+    /// Disable (or re-enable) per-segment timeline recording. Sweeps that
+    /// only rank co-designs by makespan/energy turn it off; trace-producing
+    /// runs (Paraver, validation) leave it on (the default).
+    pub fn set_record_segments(&mut self, record: bool) {
+        self.record_segments = record;
     }
 
     fn push_event(&mut self, time: Ps, ev: Ev) {
@@ -426,15 +518,17 @@ impl<'a> Simulator<'a> {
     }
 
     fn record(&mut self, device: DeviceLabel, kind: SegKind, task: TaskId, start: Ps, end: Ps) {
-        let kernel = self.program.tasks[task as usize].kernel;
-        self.segments.push(Segment {
-            device,
-            kind,
-            task,
-            kernel,
-            start,
-            end,
-        });
+        if self.record_segments {
+            let kernel = self.program.tasks[task as usize].kernel;
+            self.segments.push(Segment {
+                device,
+                kind,
+                task,
+                kernel,
+                start,
+                end,
+            });
+        }
         let di = self.dense_index(device);
         self.busy_acc[di] += end - start;
     }
@@ -451,7 +545,7 @@ impl<'a> Simulator<'a> {
         }
     }
 
-    fn ctx(&self, task: TaskId, report: Option<&'a HlsReport>) -> TaskCtx<'a> {
+    fn ctx<'s>(&'s self, task: TaskId, report: Option<&'s HlsReport>) -> TaskCtx<'s> {
         let t = &self.program.tasks[task as usize];
         let accels_for_kernel = self.kernel_accels[t.kernel as usize].len() as u32;
         let cross = if self.track_coherence && !self.producer.is_empty() {
@@ -485,6 +579,13 @@ impl<'a> Simulator<'a> {
     /// Run to completion. Panics on deadlock (which would indicate an
     /// engine bug — the dependence graph is acyclic by construction).
     pub fn run(mut self, timing: &mut dyn TimingModel) -> SimResult {
+        self.run_mut(timing)
+    }
+
+    /// Like [`Simulator::run`] but leaves the simulator alive so a sweep
+    /// can [`Simulator::reset`] it for the next co-design. Call `reset`
+    /// before every subsequent `run_mut`.
+    pub fn run_mut(&mut self, timing: &mut dyn TimingModel) -> SimResult {
         self.track_coherence = timing.needs_coherence();
         // Seed: first creation task.
         if self.elab.n_tasks > 0 {
@@ -517,7 +618,7 @@ impl<'a> Simulator<'a> {
             .collect();
         SimResult {
             makespan: self.now,
-            segments: self.segments,
+            segments: std::mem::take(&mut self.segments),
             device_busy: {
                 let cores = self.board.smp_cores as usize;
                 let n_acc = self.accels.len();
@@ -688,8 +789,10 @@ impl<'a> Simulator<'a> {
                 }
             }
         }
-        let succs = self.elab.data_succs[task as usize].clone();
-        for s in succs {
+        // `elab` is an `&'a` shared borrow independent of `&mut self`, so
+        // the successor list can be walked in place — no per-event clone.
+        let elab = self.elab;
+        for &s in &elab.data_succs[task as usize] {
             self.satisfy_pred(s, timing);
         }
     }
@@ -809,8 +912,8 @@ impl<'a> Simulator<'a> {
         input_in_occupancy: bool,
         timing: &mut dyn TimingModel,
     ) {
-        let report = &self.accels[accel as usize].report;
         self.active_dma_streams += u32::from(input_in_occupancy);
+        let report = &self.accels[accel as usize].report;
         let ctx = self.ctx(task, Some(report));
         let dur = timing.accel_occupancy_ps(&ctx, self.board, input_in_occupancy);
         self.active_dma_streams -= u32::from(input_in_occupancy);
@@ -1117,6 +1220,40 @@ mod tests {
         let b = run_config(&p, &cd, &board);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.segments.len(), b.segments.len());
+    }
+
+    #[test]
+    fn reset_reuse_matches_fresh_run() {
+        let board = BoardConfig::zynq706();
+        let p = chain_program(20, Targets::FPGA);
+        let cd = CoDesign::new("1acc").with_accel("k", 4);
+        let graph = DepGraph::build(&p);
+        let elab = ElabProgram::build(&p, &graph);
+        let (accels, smp) =
+            resolve_codesign(&p, &cd, &board, &FpgaPart::xc7z045()).unwrap();
+        let fresh = run_config(&p, &cd, &board);
+
+        let mut sim = Simulator::new(&p, &elab, &board, &accels, &smp, Policy::Greedy);
+        let mut model = EstimatorModel::new(&board);
+        let a = sim.run_mut(&mut model);
+        // Sweep mode: reuse the buffers, skip the timeline.
+        sim.reset(&accels, &smp);
+        sim.set_record_segments(false);
+        let b = sim.run_mut(&mut model);
+        // And back: re-enabled recording restores the full timeline.
+        sim.reset(&accels, &smp);
+        sim.set_record_segments(true);
+        let c = sim.run_mut(&mut model);
+
+        assert_eq!(a.makespan, fresh.makespan);
+        assert_eq!(b.makespan, fresh.makespan);
+        assert_eq!(c.makespan, fresh.makespan);
+        assert_eq!(a.segments.len(), fresh.segments.len());
+        assert!(b.segments.is_empty(), "sweep mode must not record segments");
+        assert_eq!(c.segments.len(), fresh.segments.len());
+        assert_eq!(a.device_busy, b.device_busy);
+        assert_eq!(a.device_busy, fresh.device_busy);
+        assert_eq!(b.tasks_on_accel, fresh.tasks_on_accel);
     }
 
     #[test]

@@ -191,12 +191,19 @@ impl From<bool> for Value {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -1,7 +1,9 @@
 //! Integration tests of the PJRT runtime against the real AOT artifacts.
 //!
-//! Requires `make artifacts` to have run (skipped otherwise, so `cargo
-//! test` stays green on a fresh checkout before the Python step).
+//! Requires the `pjrt` feature (real xla backend) AND `make artifacts` to
+//! have run (skipped otherwise, so `cargo test` stays green on a fresh
+//! checkout before the Python step).
+#![cfg(feature = "pjrt")]
 
 use zynq_estimator::runtime::{reference, Runtime};
 

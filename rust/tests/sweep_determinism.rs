@@ -1,0 +1,230 @@
+//! Sweep-engine guarantees: parallel `explore()` is bit-identical to the
+//! serial path (any worker count, any objective), and `SweepContext`
+//! cached estimation equals a fresh `sim::estimate` for random co-designs
+//! (seeded forall harness, same style as `proptests.rs`).
+
+use zynq_estimator::apps::{cholesky::Cholesky, matmul::Matmul};
+use zynq_estimator::config::{BoardConfig, CoDesign};
+use zynq_estimator::coordinator::task::{
+    Dep, Dir, KernelDecl, KernelProfile, TaskProgram, Targets,
+};
+use zynq_estimator::dse::{sweep, DsePoint, DseSpace, Objective, SweepContext};
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::util::Rng;
+
+fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Random task program: 1-4 kernels (always SMP-capable, sometimes FPGA),
+/// up to 60 tasks over a small shared address pool so dependences collide.
+fn random_program(rng: &mut Rng) -> TaskProgram {
+    let mut p = TaskProgram::new("prop");
+    let n_kernels = rng.gen_range(1, 5);
+    for k in 0..n_kernels {
+        let fpga = rng.next_f64() < 0.7;
+        p.add_kernel(KernelDecl {
+            name: format!("k{k}"),
+            targets: Targets { smp: true, fpga },
+            profile: KernelProfile {
+                flops: rng.gen_range(1_000, 1_000_000),
+                inner_trip: rng.gen_range(1_000, 500_000),
+                in_bytes: rng.gen_range(256, 65_536),
+                out_bytes: rng.gen_range(256, 32_768),
+                dtype_bytes: if rng.next_f64() < 0.5 { 4 } else { 8 },
+                divsqrt: rng.next_f64() < 0.3,
+            },
+        });
+    }
+    let n_tasks = rng.gen_range(1, 61);
+    let pool: Vec<u64> = (0..12).map(|i| 0x1000 + i * 0x1000).collect();
+    for _ in 0..n_tasks {
+        let kernel = rng.gen_range(0, n_kernels) as u16;
+        let n_deps = rng.gen_range(1, 4);
+        let mut deps = Vec::new();
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..n_deps {
+            let addr = pool[rng.gen_range(0, pool.len() as u64) as usize];
+            if !used.insert(addr) {
+                continue;
+            }
+            let dir = match rng.gen_range(0, 3) {
+                0 => Dir::In,
+                1 => Dir::Out,
+                _ => Dir::InOut,
+            };
+            deps.push(Dep {
+                addr,
+                len: rng.gen_range(64, 16_384),
+                dir,
+            });
+        }
+        if deps.is_empty() {
+            deps.push(Dep::inout(pool[0], 64));
+        }
+        p.add_task(kernel, rng.gen_range(1_000, 2_000_000), deps);
+    }
+    p
+}
+
+fn random_codesign(rng: &mut Rng, p: &TaskProgram) -> CoDesign {
+    let mut cd = CoDesign::new("prop");
+    for k in &p.kernels {
+        if k.targets.fpga {
+            let n_acc = rng.gen_range(0, 3);
+            for _ in 0..n_acc {
+                let unroll = 1 << rng.gen_range(1, 5); // 2..16
+                cd = cd.with_accel(&k.name, unroll);
+            }
+            if n_acc > 0 && rng.next_f64() < 0.5 {
+                cd = cd.with_smp(&k.name);
+            }
+        }
+    }
+    cd
+}
+
+fn assert_points_bit_identical(a: &[DsePoint], b: &[DsePoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: point count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.codesign.name, y.codesign.name, "{what}: name at rank {i}");
+        assert_eq!(
+            x.codesign.accels, y.codesign.accels,
+            "{what}: accels at rank {i}"
+        );
+        assert_eq!(
+            x.est_ms.to_bits(),
+            y.est_ms.to_bits(),
+            "{what}: est_ms at rank {i}"
+        );
+        assert_eq!(
+            x.energy_j.to_bits(),
+            y.energy_j.to_bits(),
+            "{what}: energy_j at rank {i}"
+        );
+        assert_eq!(x.edp.to_bits(), y.edp.to_bits(), "{what}: edp at rank {i}");
+        assert_eq!(
+            x.fabric_util.to_bits(),
+            y.fabric_util.to_bits(),
+            "{what}: fabric_util at rank {i}"
+        );
+    }
+}
+
+#[test]
+fn parallel_explore_is_bit_identical_to_serial() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    for (name, program) in [
+        ("matmul", Matmul::new(512, 64).build_program(&board)),
+        ("cholesky", Cholesky::new(256, 64).build_program(&board)),
+    ] {
+        let space = DseSpace::from_program(&program);
+        let ctx = SweepContext::for_space(&program, &board, &part, &space);
+        for objective in [Objective::Time, Objective::Energy, Objective::Edp] {
+            let serial = ctx.explore(&space, objective, 1);
+            for workers in [2, 3, 4, 8] {
+                let parallel = ctx.explore(&space, objective, workers);
+                assert_points_bit_identical(
+                    &serial,
+                    &parallel,
+                    &format!("{name}/{objective:?}/workers={workers}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_explore_matches_seed_rebuild_baseline() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(512, 64).build_program(&board);
+    let space = DseSpace::from_program(&program);
+    let baseline =
+        sweep::explore_rebuild_baseline(&program, &board, &part, &space, Objective::Time)
+            .unwrap();
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let parallel = ctx.explore(&space, Objective::Time, 4);
+    assert_points_bit_identical(&baseline, &parallel, "matmul vs seed baseline");
+}
+
+#[test]
+fn free_explore_wrapper_still_ranks_like_the_seed() {
+    // The public entry point (parallel by default) must keep the seed's
+    // headline result: the 2x half-unroll matmul discovery.
+    let board = BoardConfig::zynq706();
+    let program = Matmul::new(512, 128).build_program(&board);
+    let space = DseSpace::from_program(&program);
+    let pts = zynq_estimator::dse::explore(
+        &program,
+        &board,
+        &FpgaPart::xc7z045(),
+        &space,
+        Objective::Time,
+    )
+    .unwrap();
+    assert!(!pts.is_empty());
+    for w in pts.windows(2) {
+        assert!(w[0].est_ms <= w[1].est_ms, "ranking must be sorted");
+    }
+}
+
+#[test]
+fn prop_cached_estimation_equals_fresh_estimate() {
+    let board = BoardConfig::zynq706();
+    forall(60, 0x5EEB, |seed, rng| {
+        let p = random_program(rng);
+        let ctx = SweepContext::new(&p, &board, FpgaPart::xc7z045());
+        for _ in 0..4 {
+            let cd = random_codesign(rng, &p);
+            let fresh = zynq_estimator::sim::estimate(&p, &cd, &board);
+            let cached = ctx.estimate(&cd);
+            match (fresh, cached) {
+                (Ok(f), Ok(c)) => {
+                    assert_eq!(f.makespan, c.makespan, "seed {seed}");
+                    assert_eq!(f.tasks_on_smp, c.tasks_on_smp, "seed {seed}");
+                    assert_eq!(f.tasks_on_accel, c.tasks_on_accel, "seed {seed}");
+                    assert_eq!(f.device_busy, c.device_busy, "seed {seed}");
+                    assert_eq!(f.segments.len(), c.segments.len(), "seed {seed}");
+                }
+                (Err(_), Err(_)) => {} // both reject: fine
+                (f, c) => panic!(
+                    "seed {seed}: paths disagree on feasibility (fresh ok={}, cached ok={})",
+                    f.is_ok(),
+                    c.is_ok()
+                ),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_worker_reuse_is_stateless_across_points() {
+    // Evaluating A, then B, then A again through one reused worker must
+    // reproduce A exactly — i.e. `Simulator::reset` leaks nothing.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    forall(40, 0xA11C, |seed, rng| {
+        let p = random_program(rng);
+        let ctx = SweepContext::new(&p, &board, part.clone());
+        let mut w = ctx.worker();
+        let a = random_codesign(rng, &p);
+        let b = random_codesign(rng, &p);
+        let r1 = w.evaluate(&a);
+        let _ = w.evaluate(&b);
+        let r2 = w.evaluate(&a);
+        match (r1, r2) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits(), "seed {seed}");
+                assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "seed {seed}");
+            }
+            (None, None) => {}
+            _ => panic!("seed {seed}: reused worker changed feasibility"),
+        }
+    });
+}

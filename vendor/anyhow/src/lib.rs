@@ -1,0 +1,225 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The repository builds without network access, so the subset of `anyhow`
+//! it actually uses is vendored here: the type-erased [`Error`], the
+//! [`Result`] alias, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Semantics match upstream for that subset:
+//!
+//! * `Error` wraps any `std::error::Error + Send + Sync + 'static` (so `?`
+//!   converts foreign errors) or a plain display message;
+//! * `Display` prints the error; the alternate form (`{:#}`) appends the
+//!   source chain as `": cause"` segments;
+//! * `Debug` prints the error followed by a `Caused by:` list — what
+//!   `fn main() -> anyhow::Result<()>` shows on exit.
+//!
+//! Intentionally not implemented (unused in this repository): `Context`,
+//! downcasting, and backtrace capture.
+
+use std::fmt;
+
+/// A type-erased error, compatible with `?` on any standard error type.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Build an error from a display-able message (what `anyhow!` calls).
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(MessageError(message)),
+        }
+    }
+
+    /// The lowest-level source in the chain (self if there is none).
+    pub fn root_cause(&self) -> &(dyn std::error::Error + 'static) {
+        let mut cause: &(dyn std::error::Error + 'static) = &*self.inner;
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+}
+
+/// Message-only payload promoted to a `std::error::Error`.
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(s) = source {
+                write!(f, ": {s}")?;
+                source = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// display-able expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf cause")
+        }
+    }
+    impl std::error::Error for Leaf {}
+
+    #[derive(Debug)]
+    struct Mid(Leaf);
+    impl fmt::Display for Mid {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "mid error")
+        }
+    }
+    impl std::error::Error for Mid {
+        fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+            Some(&self.0)
+        }
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            let _ = "nope".parse::<i32>()?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let name = "x";
+        let e = anyhow!("inline {name}");
+        assert_eq!(e.to_string(), "inline x");
+        let e = anyhow!("positional {}: {}", 1, "two");
+        assert_eq!(e.to_string(), "positional 1: two");
+        let e = anyhow!(String::from("from expr"));
+        assert_eq!(e.to_string(), "from expr");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_err() {
+        fn b() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(b().unwrap_err().to_string(), "boom 7");
+        fn e(x: u32) -> Result<u32> {
+            ensure!(x > 2, "too small: {x}");
+            Ok(x)
+        }
+        assert!(e(1).is_err());
+        assert_eq!(e(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e = Error::new(Mid(Leaf));
+        assert_eq!(format!("{e}"), "mid error");
+        assert_eq!(format!("{e:#}"), "mid error: leaf cause");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.root_cause().to_string(), "leaf cause");
+    }
+}
