@@ -1,0 +1,70 @@
+//! Batched suite-sweep benchmark — pruned vs exhaustive DSE over the
+//! matmul/cholesky/lu/stencil suite, both through one shared
+//! `dse::SweepSuite` worker pool.
+//!
+//! Reports, per application, how many points the exhaustive sweep
+//! evaluates vs how many survive the `dse::prune` cuts (resource subtree,
+//! unroll-variant dominance, lower bound), plus the end-to-end wall time
+//! of both passes. Emits `BENCH_dse_suite.json` so CI tracks the pruning
+//! ratio and the suite latency across PRs, next to `BENCH_engine.json`.
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::dse::default_workers;
+use zynq_estimator::experiments;
+use zynq_estimator::util::json::{arr, obj, Value};
+
+fn main() {
+    let board = BoardConfig::zynq706();
+    let workers = default_workers();
+    let n = 512;
+    let r = experiments::dse_suite_latency(n, &board, workers)
+        .expect("suite sweep must be lossless");
+
+    let mut records: Vec<Value> = Vec::new();
+    let mut evaluated = 0u64;
+    let mut feasible = 0u64;
+    println!("== DSE suite sweep (n = {n}, {workers} workers, one shared pool)");
+    println!(
+        "{:>10} {:>9} {:>9} {:>10} {:>10}  {}",
+        "app", "feasible", "pruned", "bound cut", "dom. cut", "best co-design"
+    );
+    for a in &r.apps {
+        println!(
+            "{:>10} {:>9} {:>9} {:>10} {:>10}  {}",
+            a.name, a.feasible, a.evaluated, a.bound_cut, a.dominance_cut, a.best
+        );
+        evaluated += a.evaluated;
+        feasible += a.feasible;
+        records.push(obj(vec![
+            ("app", a.name.clone().into()),
+            ("feasible_points", a.feasible.into()),
+            ("evaluated_points", a.evaluated.into()),
+            ("bound_cut", a.bound_cut.into()),
+            ("dominance_cut", a.dominance_cut.into()),
+            ("best", a.best.clone().into()),
+        ]));
+    }
+    println!(
+        "total: {evaluated}/{feasible} points evaluated ({:.0}% pruned); exhaustive {:.3} s, pruned {:.3} s ({:.2}x)",
+        100.0 * (1.0 - evaluated as f64 / feasible.max(1) as f64),
+        r.exhaustive_s,
+        r.pruned_s,
+        r.exhaustive_s / r.pruned_s.max(1e-12),
+    );
+
+    let out = obj(vec![
+        ("n", n.into()),
+        ("workers", r.workers.into()),
+        ("exhaustive_s", r.exhaustive_s.into()),
+        ("pruned_s", r.pruned_s.into()),
+        ("speedup", (r.exhaustive_s / r.pruned_s.max(1e-12)).into()),
+        ("feasible_points", feasible.into()),
+        ("evaluated_points", evaluated.into()),
+        ("apps", arr(records)),
+    ])
+    .to_json();
+    match std::fs::write("BENCH_dse_suite.json", &out) {
+        Ok(()) => println!("wrote BENCH_dse_suite.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_dse_suite.json: {e}"),
+    }
+}

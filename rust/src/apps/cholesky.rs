@@ -47,6 +47,7 @@ pub const UNROLL_PAIR: u32 = 16;
 const A_BASE: u64 = 0x4000_0000;
 
 #[derive(Clone, Copy, Debug)]
+/// Tiled left-looking Cholesky factorization (paper Fig. 4).
 pub struct Cholesky {
     /// Matrix dimension (elements). 512 in the reproduction runs.
     pub n: u64,
@@ -55,11 +56,13 @@ pub struct Cholesky {
 }
 
 impl Cholesky {
+    /// An `n`×`n` problem with `bs`×`bs` tiles (`n` divisible by `bs`).
     pub fn new(n: u64, bs: u64) -> Self {
         assert!(n % bs == 0, "matrix size must be a multiple of block size");
         Self { n, bs }
     }
 
+    /// Number of tile blocks per side.
     pub fn nb(&self) -> u64 {
         self.n / self.bs
     }
@@ -129,6 +132,7 @@ impl Cholesky {
         ]
     }
 
+    /// Build the task program — the instrumented sequential run's trace.
     pub fn build_program(&self, board: &BoardConfig) -> TaskProgram {
         let mut p = TaskProgram::new(&format!("cholesky{}-bs{}", self.n, self.bs));
         let mut ids = [0u16; 4];
@@ -209,6 +213,7 @@ pub fn fig9_codesigns() -> Vec<CoDesign> {
     ]
 }
 
+/// The Fig. 9 experiment set.
 pub fn fig9_experiment() -> ExperimentSet {
     ExperimentSet {
         app: "cholesky".into(),

@@ -31,20 +31,26 @@ const A_BASE: u64 = 0x9000_0000;
 
 /// Full-resource and pair unrolls mirror the cholesky study.
 pub const UNROLL_FR: u32 = 44;
+/// Pair unroll: two accelerators of this size fit together.
 pub const UNROLL_PAIR: u32 = 16;
 
 #[derive(Clone, Copy, Debug)]
+/// Tiled LU decomposition without pivoting (extension app).
 pub struct Lu {
+    /// Matrix dimension (elements).
     pub n: u64,
+    /// Block (tile) dimension.
     pub bs: u64,
 }
 
 impl Lu {
+    /// An `n`×`n` problem with `bs`×`bs` tiles (`n` divisible by `bs`).
     pub fn new(n: u64, bs: u64) -> Self {
         assert!(n % bs == 0);
         Self { n, bs }
     }
 
+    /// Number of tile blocks per side.
     pub fn nb(&self) -> u64 {
         self.n / self.bs
     }
@@ -57,6 +63,7 @@ impl Lu {
         A_BASE + (row * self.nb() + col) * self.tile_bytes()
     }
 
+    /// Kernel profiles (lugemm, trsm_row, trsm_col, ludiag).
     pub fn profiles(&self) -> [(&'static str, Targets, KernelProfile); 4] {
         let bs = self.bs;
         let tile = self.tile_bytes();
@@ -112,6 +119,7 @@ impl Lu {
         ]
     }
 
+    /// Build the task program (right-looking tiled LU trace).
     pub fn build_program(&self, board: &BoardConfig) -> TaskProgram {
         let mut p = TaskProgram::new(&format!("lu{}-bs{}", self.n, self.bs));
         let mut ids = [0u16; 4];

@@ -35,6 +35,7 @@ const B_BASE: u64 = 0x2000_0000;
 const C_BASE: u64 = 0x3000_0000;
 
 #[derive(Clone, Copy, Debug)]
+/// Tiled matrix multiply (paper Fig. 1).
 pub struct Matmul {
     /// Matrix dimension (elements). The paper's runs use 512.
     pub n: u64,
@@ -43,19 +44,23 @@ pub struct Matmul {
 }
 
 impl Matmul {
+    /// An `n`×`n` multiply with `bs`×`bs` blocks (`n` divisible by `bs`).
     pub fn new(n: u64, bs: u64) -> Self {
         assert!(n % bs == 0, "matrix size must be a multiple of block size");
         Self { n, bs }
     }
 
+    /// Number of tile blocks per side.
     pub fn nb(&self) -> u64 {
         self.n / self.bs
     }
 
+    /// The kernel name for this granularity (`mxm64` / `mxm128`).
     pub fn kernel_name(&self) -> String {
         format!("mxm{}", self.bs)
     }
 
+    /// Workload profile of one block multiply.
     pub fn profile(&self) -> KernelProfile {
         let bs = self.bs;
         KernelProfile {
@@ -144,6 +149,7 @@ pub fn fig5_cases(n: u64) -> Vec<(CoDesign, Matmul)> {
         .collect()
 }
 
+/// The Fig. 5 experiment set.
 pub fn fig5_experiment() -> ExperimentSet {
     ExperimentSet {
         app: "matmul".into(),

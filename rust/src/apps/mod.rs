@@ -46,7 +46,9 @@ pub fn smp_cycles_model(profile: &KernelProfile, board: &BoardConfig) -> u64 {
 
 /// Named co-design set for an app's paper experiment (one figure).
 pub struct ExperimentSet {
+    /// Application name.
     pub app: String,
+    /// The co-designs the figure compares.
     pub codesigns: Vec<crate::config::CoDesign>,
     /// Name of the configuration the paper normalizes against (slowest).
     pub baseline: String,

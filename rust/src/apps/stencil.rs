@@ -24,6 +24,7 @@ const A_BASE: u64 = 0x6000_0000;
 const B_BASE: u64 = 0x7000_0000;
 
 #[derive(Clone, Copy, Debug)]
+/// Blocked Jacobi stencil (extra halo-exchange domain app).
 pub struct Stencil {
     /// Grid dimension (elements per side).
     pub n: u64,
@@ -34,20 +35,24 @@ pub struct Stencil {
 }
 
 impl Stencil {
+    /// An `n`×`n` grid with `bs`×`bs` tiles and `sweeps` Jacobi sweeps.
     pub fn new(n: u64, bs: u64, sweeps: u32) -> Self {
         assert!(n % bs == 0);
         assert!(sweeps >= 1);
         Self { n, bs, sweeps }
     }
 
+    /// Number of tile blocks per side.
     pub fn nb(&self) -> u64 {
         self.n / self.bs
     }
 
+    /// The kernel name for this tile size (e.g. `jacobi64`).
     pub fn kernel_name(&self) -> String {
         format!("jacobi{}", self.bs)
     }
 
+    /// Workload profile of one 5-point tile update.
     pub fn profile(&self) -> KernelProfile {
         let bs = self.bs;
         KernelProfile {
@@ -74,6 +79,7 @@ impl Stencil {
         base + (r * self.nb() + c) * self.tile_bytes()
     }
 
+    /// Build the task program (double-buffered sweep trace).
     pub fn build_program(&self, board: &BoardConfig) -> TaskProgram {
         let mut p = TaskProgram::new(&format!(
             "stencil{}-bs{}-s{}",

@@ -40,6 +40,7 @@ pub struct BoardModel {
 }
 
 impl BoardModel {
+    /// Bind the emulator to a board description (seeds the jitter stream).
     pub fn new(board: &BoardConfig) -> Self {
         Self {
             smp_clock: board.smp_clock(),

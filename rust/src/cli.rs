@@ -18,11 +18,14 @@ use crate::util::fmt_secs;
 /// Minimal argument parser: positionals + `--key value` + `--flag`.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional (non-flag) arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` options and bare `--flag`s (flags map to an empty list).
     pub options: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
+    /// Parse raw argv (the subcommand name already stripped).
     pub fn parse(argv: &[String]) -> Self {
         let mut a = Args::default();
         let mut i = 0;
@@ -51,10 +54,12 @@ impl Args {
         a
     }
 
+    /// First value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).and_then(|v| v.first()).map(String::as_str)
     }
 
+    /// All values of a repeatable `--key`.
     pub fn get_all(&self, key: &str) -> Vec<&str> {
         self.options
             .get(key)
@@ -62,10 +67,12 @@ impl Args {
             .unwrap_or_default()
     }
 
+    /// Whether `--key` was given (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.options.contains_key(key)
     }
 
+    /// Integer value of `--key`, or `default` when absent; errors on a non-integer.
     pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -76,6 +83,7 @@ impl Args {
     }
 }
 
+/// Board description: `--board file.toml`, or the built-in ZC706 default.
 pub fn board_from_args(args: &Args) -> anyhow::Result<BoardConfig> {
     match args.get("board") {
         Some(path) => BoardConfig::from_toml_file(std::path::Path::new(path)),
@@ -98,6 +106,7 @@ fn build_app_program(
     })
 }
 
+/// CLI help text (the command reference of the README quickstart).
 pub const USAGE: &str = "zynq-estimator — coarse-grain performance estimator for Zynq-style heterogeneous systems
 
 USAGE: zynq-estimator <command> [options]
@@ -114,8 +123,11 @@ COMMANDS (one per paper experiment, plus utilities):
   sim-trace      --trace t.jsonl --accel k:U<u>... [--smp k]... simulate a trace file
   hls            --kernel <name> [--bs 64] [--unroll 32]        Vivado-HLS-style report
   dse            --app <app> [--objective time|energy|edp]      explore the co-design space
-                 [--top 15] [--workers N]                       (paper §VII future work;
-                                                                 N=0 -> one per core)
+                 [--n 512] [--bs 64] [--top 15] [--workers N]   (paper §VII future work;
+                 [--pruned] [--suite [--exhaustive]]             N=0 -> one per core;
+                                                                 --pruned: bound-guided cuts;
+                                                                 --suite: sweep matmul+cholesky
+                                                                 +lu+stencil in one shared pool)
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
   robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
   analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
@@ -128,6 +140,7 @@ COMMON OPTIONS:
   --board <file.toml>   board description (default: built-in zynq706)
 ";
 
+/// Dispatch one CLI invocation; returns the process exit code.
 pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     let Some(cmd) = argv.first().map(String::as_str) else {
         println!("{USAGE}");
@@ -343,9 +356,6 @@ fn cmd_hls(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
 }
 
 fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
-    let app = args.get("app").unwrap_or("matmul");
-    let n = args.u64_or("n", 512)?;
-    let bs = args.u64_or("bs", 64)?;
     let top = args.u64_or("top", 15)? as usize;
     let objective = match args.get("objective") {
         None => crate::dse::Objective::Time,
@@ -356,10 +366,30 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         0 => crate::dse::default_workers(),
         w => w,
     };
+    if args.has("suite") {
+        return cmd_dse_suite(args, board, objective, top, workers);
+    }
+    let app = args.get("app").unwrap_or("matmul");
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
     let program = build_app_program(app, n, bs, board)?;
     let space = crate::dse::DseSpace::from_program(&program);
     let ctx = crate::dse::SweepContext::for_space(&program, board, &FpgaPart::xc7z045(), &space);
     let t0 = std::time::Instant::now();
+    if args.has("pruned") {
+        let (points, stats) = ctx.explore_pruned(&space, objective, workers);
+        let secs = t0.elapsed().as_secs_f64();
+        print!("{}", crate::dse::render(&points, top, objective));
+        println!("pruning: {}", stats.render());
+        println!(
+            "swept {} of {} feasible points in {:.3} s ({workers} workers, {} cached HLS reports)",
+            stats.evaluated,
+            stats.feasible_points,
+            secs,
+            ctx.cached_reports(),
+        );
+        return Ok(0);
+    }
     let points = ctx.explore(&space, objective, workers);
     let secs = t0.elapsed().as_secs_f64();
     print!("{}", crate::dse::render(&points, top, objective));
@@ -369,6 +399,63 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         secs,
         points.len() as f64 / secs.max(1e-9),
         ctx.cached_reports(),
+    );
+    Ok(0)
+}
+
+/// `dse --suite`: sweep the whole matmul/cholesky/lu/stencil suite through
+/// one shared worker pool, with bound-guided pruning unless
+/// `--exhaustive` is given.
+fn cmd_dse_suite(
+    args: &Args,
+    board: &BoardConfig,
+    objective: crate::dse::Objective,
+    top: usize,
+    workers: usize,
+) -> anyhow::Result<i32> {
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
+    if let Some(app) = args.get("app") {
+        eprintln!("note: --suite sweeps all four apps; --app {app} is ignored");
+    }
+    let part = FpgaPart::xc7z045();
+    let programs: Vec<(&str, crate::coordinator::task::TaskProgram)> =
+        ["matmul", "cholesky", "lu", "stencil"]
+            .into_iter()
+            .map(|app| Ok((app, build_app_program(app, n, bs, board)?)))
+            .collect::<anyhow::Result<_>>()?;
+    let mut suite = crate::dse::SweepSuite::new();
+    for (name, program) in &programs {
+        let space = crate::dse::DseSpace::from_program(program);
+        suite.push(name, program, board, &part, space);
+    }
+    let pruned = !args.has("exhaustive");
+    let t0 = std::time::Instant::now();
+    let results = if pruned {
+        suite.explore_pruned(objective, workers)
+    } else {
+        suite.explore(objective, workers)
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let mut evaluated = 0u64;
+    let mut feasible = 0u64;
+    for r in &results {
+        println!("==== {} (n = {n})", r.name);
+        print!("{}", crate::dse::render(&r.points, top, objective));
+        if pruned {
+            println!("pruning: {}", r.stats.render());
+        }
+        println!();
+        evaluated += r.stats.evaluated;
+        feasible += r.stats.feasible_points;
+    }
+    println!(
+        "suite: {} apps, {} of {} feasible points evaluated in {:.3} s ({} mode, {workers} workers, one shared pool)",
+        results.len(),
+        evaluated,
+        feasible,
+        secs,
+        if pruned { "pruned" } else { "exhaustive" },
     );
     Ok(0)
 }
@@ -607,6 +694,26 @@ mod tests {
     #[test]
     fn sweep_lu_runs() {
         assert_eq!(run(&argv("sweep --app lu --n 256 --reps 2")).unwrap(), 0);
+    }
+
+    #[test]
+    fn dse_pruned_command_runs() {
+        assert_eq!(
+            run(&argv("dse --app matmul --n 256 --bs 64 --workers 2 --top 5 --pruned")).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn dse_suite_command_runs_pruned_and_exhaustive() {
+        assert_eq!(
+            run(&argv("dse --suite --n 256 --workers 2 --top 3")).unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv("dse --suite --n 256 --workers 2 --top 3 --exhaustive")).unwrap(),
+            0
+        );
     }
 
     #[test]

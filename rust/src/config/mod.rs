@@ -56,9 +56,11 @@ impl Default for EmuConfig {
 /// Platform description consumed by both the estimator and the emulator.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BoardConfig {
+    /// Board name (reports, tables).
     pub name: String,
     /// Number of ARM cores available to the runtime (ZC706: dual A9).
     pub smp_cores: u32,
+    /// ARM core clock, MHz.
     pub smp_freq_mhz: f64,
     /// Fabric clock Vivado HLS targets for the generated accelerators.
     pub fabric_freq_mhz: f64,
@@ -94,6 +96,7 @@ pub struct BoardConfig {
     /// Capacity-miss slowdown per doubling of working set beyond L1.
     pub smp_cache_alpha: f64,
 
+    /// Board-emulator-only effect parameters.
     pub emu: EmuConfig,
 }
 
@@ -148,10 +151,12 @@ impl BoardConfig {
         }
     }
 
+    /// The ARM clock domain.
     pub fn smp_clock(&self) -> crate::sim::time::Clock {
         crate::sim::time::Clock::new(self.smp_freq_mhz)
     }
 
+    /// The PL fabric clock domain.
     pub fn fabric_clock(&self) -> crate::sim::time::Clock {
         crate::sim::time::Clock::new(self.fabric_freq_mhz)
     }
@@ -162,6 +167,7 @@ impl BoardConfig {
         Self::from_toml(&text)
     }
 
+    /// Parse from TOML text; unspecified keys keep the zynq706 defaults.
     pub fn from_toml(text: &str) -> anyhow::Result<Self> {
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let d = Self::zynq706();
@@ -229,6 +235,7 @@ impl Default for BoardConfig {
 /// the HLS unroll variant (how much fabric it is allowed to burn).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct AccelSpec {
+    /// Kernel name the accelerator implements.
     pub kernel: String,
     /// Unroll factor of the innermost pipelined loop — the HLS knob that
     /// trades DSP/LUT area for latency. `hls::CostModel` maps it to both.
@@ -236,6 +243,7 @@ pub struct AccelSpec {
 }
 
 impl AccelSpec {
+    /// An accelerator spec for `kernel` at `unroll`.
     pub fn new(kernel: &str, unroll: u32) -> Self {
         Self {
             kernel: kernel.to_string(),
@@ -256,6 +264,7 @@ impl AccelSpec {
         })
     }
 
+    /// The compact `kernel:U<unroll>` form.
     pub fn to_spec_string(&self) -> String {
         format!("{}:U{}", self.kernel, self.unroll)
     }
@@ -266,7 +275,9 @@ impl AccelSpec {
 /// is heterogeneous SMP execution allowed").
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CoDesign {
+    /// Co-design name (tables, reports).
     pub name: String,
+    /// Accelerator instances to synthesize.
     pub accels: Vec<AccelSpec>,
     /// Kernels the scheduler may run on the SMP even though they have an
     /// accelerator ("+ smp" configurations). Kernels *without* an
@@ -275,6 +286,7 @@ pub struct CoDesign {
 }
 
 impl CoDesign {
+    /// An empty co-design with a name.
     pub fn new(name: &str) -> Self {
         Self {
             name: name.to_string(),
@@ -282,28 +294,34 @@ impl CoDesign {
         }
     }
 
+    /// Add one accelerator instance (builder).
     pub fn with_accel(mut self, kernel: &str, unroll: u32) -> Self {
         self.accels.push(AccelSpec::new(kernel, unroll));
         self
     }
 
+    /// Allow SMP execution for an accelerated kernel (builder).
     pub fn with_smp(mut self, kernel: &str) -> Self {
         self.smp_kernels.push(kernel.to_string());
         self
     }
 
+    /// Number of accelerator instances serving a kernel.
     pub fn accel_count_for(&self, kernel: &str) -> usize {
         self.accels.iter().filter(|a| a.kernel == kernel).count()
     }
 
+    /// Whether `+ smp` execution is allowed for a kernel.
     pub fn allows_smp(&self, kernel: &str) -> bool {
         self.smp_kernels.iter().any(|k| k == kernel)
     }
 
+    /// Whether any accelerator serves a kernel.
     pub fn has_accel(&self, kernel: &str) -> bool {
         self.accel_count_for(kernel) > 0
     }
 
+    /// Parse a co-design from TOML text.
     pub fn from_toml(text: &str) -> anyhow::Result<Self> {
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let mut cd = CoDesign::new(&doc.str_or("name", "unnamed"));
@@ -318,6 +336,7 @@ impl CoDesign {
         Ok(cd)
     }
 
+    /// Serialize to TOML (round-trips through `from_toml`).
     pub fn to_toml(&self) -> String {
         let accels: Vec<String> = self
             .accels
@@ -338,7 +357,9 @@ impl CoDesign {
 /// program (resolved at simulation setup).
 #[derive(Clone, Debug)]
 pub struct ResolvedAccel {
+    /// Kernel id in the resolved program.
     pub kernel: KernelId,
+    /// Unroll variant.
     pub unroll: u32,
 }
 

@@ -14,22 +14,31 @@
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
+/// One parsed TOML value.
 pub enum Item {
+    /// Quoted string.
     Str(String),
+    /// Integer.
     Int(i64),
+    /// Float.
     Float(f64),
+    /// Boolean.
     Bool(bool),
+    /// Array of strings.
     StrArr(Vec<String>),
+    /// Array of numbers.
     NumArr(Vec<f64>),
 }
 
 impl Item {
+    /// String value, if the item is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Item::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Float value (integers convert).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Item::Int(i) => Some(*i as f64),
@@ -37,18 +46,21 @@ impl Item {
             _ => None,
         }
     }
+    /// Integer value, if the item is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Item::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// Bool value, if the item is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Item::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// String-array value, if the item is one.
     pub fn as_str_arr(&self) -> Option<&[String]> {
         match self {
             Item::StrArr(v) => Some(v),
@@ -58,8 +70,11 @@ impl Item {
 }
 
 #[derive(Debug, Clone)]
+/// Parse failure with its line number.
 pub struct TomlError {
+    /// 1-based line of the error.
     pub line: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -74,14 +89,17 @@ impl std::error::Error for TomlError {}
 /// A parsed document: dotted-path key → item.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Doc {
+    /// Flat `section.key` → value map.
     pub items: BTreeMap<String, Item>,
 }
 
 impl Doc {
+    /// Item at a dotted path.
     pub fn get(&self, path: &str) -> Option<&Item> {
         self.items.get(path)
     }
 
+    /// String at a path, or the default.
     pub fn str_or(&self, path: &str, default: &str) -> String {
         self.get(path)
             .and_then(Item::as_str)
@@ -89,19 +107,23 @@ impl Doc {
             .to_string()
     }
 
+    /// Float at a path (integers convert), or the default.
     pub fn f64_or(&self, path: &str, default: f64) -> f64 {
         self.get(path).and_then(Item::as_f64).unwrap_or(default)
     }
 
+    /// Integer at a path, or the default.
     pub fn i64_or(&self, path: &str, default: i64) -> i64 {
         self.get(path).and_then(Item::as_i64).unwrap_or(default)
     }
 
+    /// Bool at a path, or the default.
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(Item::as_bool).unwrap_or(default)
     }
 }
 
+/// Parse a TOML-subset document.
 pub fn parse(text: &str) -> Result<Doc, TomlError> {
     let mut doc = Doc::default();
     let mut section = String::new();

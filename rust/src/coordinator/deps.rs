@@ -91,14 +91,17 @@ impl DepGraph {
         DepGraph { preds, succs }
     }
 
+    /// Number of tasks.
     pub fn len(&self) -> usize {
         self.preds.len()
     }
 
+    /// Whether the graph has no tasks.
     pub fn is_empty(&self) -> bool {
         self.preds.is_empty()
     }
 
+    /// Total dependence edges.
     pub fn edge_count(&self) -> usize {
         self.preds.iter().map(|p| p.len()).sum()
     }

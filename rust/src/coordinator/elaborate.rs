@@ -25,7 +25,9 @@ pub struct Xfers {
     pub n_in: u32,
     /// Number of output DMA descriptors (out + inout dependences).
     pub n_out: u32,
+    /// Total input bytes (in + inout).
     pub bytes_in: u64,
+    /// Total output bytes (out + inout).
     pub bytes_out: u64,
 }
 
@@ -35,6 +37,7 @@ pub struct Xfers {
 /// `t` itself plus a node-kind discriminant.
 #[derive(Clone, Debug)]
 pub struct ElabProgram {
+    /// Task count (creation and compute nodes share task ids).
     pub n_tasks: usize,
     /// Number of unsatisfied predecessors of each compute node:
     /// data preds (from the dependence graph) + 1 (its creation task).
@@ -46,6 +49,7 @@ pub struct ElabProgram {
 }
 
 impl ElabProgram {
+    /// Elaborate a program against its dependence graph.
     pub fn build(program: &TaskProgram, graph: &DepGraph) -> Self {
         assert_eq!(program.tasks.len(), graph.len());
         let n = program.tasks.len();
@@ -80,6 +84,7 @@ impl ElabProgram {
         self.xfers.iter().map(|x| x.bytes_in).sum()
     }
 
+    /// Total bytes DMA'd out if every task ran on the FPGA.
     pub fn total_bytes_out(&self) -> u64 {
         self.xfers.iter().map(|x| x.bytes_out).sum()
     }

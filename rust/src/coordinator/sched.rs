@@ -17,6 +17,7 @@
 use crate::sim::time::Ps;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Device-selection policy for ready tasks.
 pub enum Policy {
     /// Nanos++ availability scheduling (the paper's measured policy): any
     /// free capable device takes the oldest ready task.
@@ -28,6 +29,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Parse a CLI policy name (`greedy` | `lookahead`).
     pub fn parse(s: &str) -> Option<Policy> {
         match s {
             "greedy" => Some(Policy::Greedy),
@@ -36,6 +38,7 @@ impl Policy {
         }
     }
 
+    /// The CLI name of the policy.
     pub fn as_str(&self) -> &'static str {
         match self {
             Policy::Greedy => "greedy",

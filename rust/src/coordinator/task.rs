@@ -22,18 +22,24 @@ pub type KernelId = u16;
 /// Dependence direction, as in the OmpSs clauses `in`, `out`, `inout`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dir {
+    /// Read (`in` clause).
     In,
+    /// Write (`out` clause).
     Out,
+    /// Read-modify-write (`inout` clause).
     InOut,
 }
 
 impl Dir {
+    /// Whether the clause reads (`in` / `inout`).
     pub fn reads(self) -> bool {
         matches!(self, Dir::In | Dir::InOut)
     }
+    /// Whether the clause writes (`out` / `inout`).
     pub fn writes(self) -> bool {
         matches!(self, Dir::Out | Dir::InOut)
     }
+    /// The OmpSs clause keyword.
     pub fn as_str(self) -> &'static str {
         match self {
             Dir::In => "in",
@@ -41,6 +47,7 @@ impl Dir {
             Dir::InOut => "inout",
         }
     }
+    /// Parse an OmpSs clause keyword.
     pub fn parse(s: &str) -> Option<Dir> {
         match s {
             "in" => Some(Dir::In),
@@ -55,18 +62,24 @@ impl Dir {
 /// the paper's instrumented binary emits per dependence.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dep {
+    /// Base address (the dependence tracker's matching key).
     pub addr: u64,
+    /// Length in bytes (transfer accounting only).
     pub len: u64,
+    /// Clause direction.
     pub dir: Dir,
 }
 
 impl Dep {
+    /// An `in` dependence.
     pub fn input(addr: u64, len: u64) -> Self {
         Self { addr, len, dir: Dir::In }
     }
+    /// An `out` dependence.
     pub fn output(addr: u64, len: u64) -> Self {
         Self { addr, len, dir: Dir::Out }
     }
+    /// An `inout` dependence.
     pub fn inout(addr: u64, len: u64) -> Self {
         Self { addr, len, dir: Dir::InOut }
     }
@@ -76,13 +89,18 @@ impl Dep {
 /// (`#pragma omp target device(...)`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Targets {
+    /// May run on the ARM cores.
     pub smp: bool,
+    /// May run on an FPGA accelerator.
     pub fpga: bool,
 }
 
 impl Targets {
+    /// SMP-only annotation.
     pub const SMP: Targets = Targets { smp: true, fpga: false };
+    /// FPGA-only annotation.
     pub const FPGA: Targets = Targets { smp: false, fpga: true };
+    /// Heterogeneous annotation (`device(fpga,smp)`).
     pub const BOTH: Targets = Targets { smp: true, fpga: true };
 }
 
@@ -122,16 +140,20 @@ impl KernelProfile {
 /// A task type — the annotated function.
 #[derive(Clone, Debug)]
 pub struct KernelDecl {
+    /// Kernel (function) name.
     pub name: String,
     /// Devices the programmer annotated (`device(fpga,smp)`).
     pub targets: Targets,
+    /// Workload characterization for the cost models.
     pub profile: KernelProfile,
 }
 
 /// One dynamic task instance — one record of the basic trace (§IV).
 #[derive(Clone, Debug)]
 pub struct TaskInstance {
+    /// Dense instance id, trace order.
     pub id: TaskId,
+    /// The instance's kernel.
     pub kernel: KernelId,
     /// Creation timestamp (ns) in the sequential instrumented run. Only the
     /// order matters to the simulator; kept for trace fidelity.
@@ -139,6 +161,7 @@ pub struct TaskInstance {
     /// Elapsed execution cycles on the ARM core in the instrumented run
     /// (or from the SMP cost model when generated synthetically).
     pub smp_cycles: u64,
+    /// Dependence clauses of this instance.
     pub deps: Vec<Dep>,
 }
 
@@ -146,12 +169,16 @@ pub struct TaskInstance {
 /// program order. The moral equivalent of "instrumented binary output".
 #[derive(Clone, Debug, Default)]
 pub struct TaskProgram {
+    /// Application name.
     pub app_name: String,
+    /// Kernel (task type) table.
     pub kernels: Vec<KernelDecl>,
+    /// Dynamic task instances, sequential program order.
     pub tasks: Vec<TaskInstance>,
 }
 
 impl TaskProgram {
+    /// An empty program.
     pub fn new(app_name: &str) -> Self {
         Self {
             app_name: app_name.to_string(),
@@ -175,6 +202,7 @@ impl TaskProgram {
         (self.kernels.len() - 1) as KernelId
     }
 
+    /// Look up a kernel id by name.
     pub fn kernel_id(&self, name: &str) -> Option<KernelId> {
         self.kernels
             .iter()
@@ -182,6 +210,7 @@ impl TaskProgram {
             .map(|i| i as KernelId)
     }
 
+    /// The declaration behind a kernel id.
     pub fn kernel(&self, id: KernelId) -> &KernelDecl {
         &self.kernels[id as usize]
     }

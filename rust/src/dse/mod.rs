@@ -8,10 +8,15 @@
 //!
 //! Evaluation runs through the [`sweep`] engine: a shared [`SweepContext`]
 //! (one-time dependence graph + elaboration + memoized HLS reports) and
-//! parallel, deterministic point evaluation. The free functions here are
-//! thin wrappers kept for the CLI/tests; long-lived callers should build a
-//! `SweepContext` themselves and reuse it.
+//! parallel, deterministic point evaluation. The [`prune`] module cuts the
+//! cartesian space *before* evaluation (resource, dominance and
+//! lower-bound cuts — lossless for the best point and the Pareto front),
+//! and [`SweepSuite`] batches several applications through one shared
+//! worker pool. The free functions here are thin wrappers kept for the
+//! CLI/tests; long-lived callers should build a `SweepContext` themselves
+//! and reuse it.
 
+pub mod prune;
 pub mod sweep;
 
 use std::collections::BTreeMap;
@@ -20,11 +25,13 @@ use crate::config::{BoardConfig, CoDesign};
 use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
 
-pub use sweep::{default_workers, SweepContext, SweepWorker};
+pub use prune::{enumerate_pruned, PruneStats};
+pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
 
 /// Exploration space for one kernel.
 #[derive(Clone, Debug)]
 pub struct KernelSpace {
+    /// Kernel name (must match a program kernel to contribute options).
     pub kernel: String,
     /// Candidate unroll factors (HLS variants).
     pub unrolls: Vec<u32>,
@@ -37,6 +44,7 @@ pub struct KernelSpace {
 /// The whole space: one entry per FPGA-capable kernel.
 #[derive(Clone, Debug, Default)]
 pub struct DseSpace {
+    /// Per-kernel sub-spaces; the full space is their cartesian product.
     pub kernels: Vec<KernelSpace>,
 }
 
@@ -62,12 +70,16 @@ impl DseSpace {
 /// Ranking objective.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Objective {
+    /// Estimated makespan (ms).
     Time,
+    /// Total platform energy (J).
     Energy,
+    /// Energy-delay product (J·s).
     Edp,
 }
 
 impl Objective {
+    /// Parse a CLI objective name (`time` | `energy` | `edp`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "time" => Some(Objective::Time),
@@ -81,14 +93,20 @@ impl Objective {
 /// One evaluated design point.
 #[derive(Clone, Debug)]
 pub struct DsePoint {
+    /// The co-design that was simulated.
     pub codesign: CoDesign,
+    /// Estimated makespan in milliseconds.
     pub est_ms: f64,
+    /// Estimated total platform energy in joules.
     pub energy_j: f64,
+    /// Energy-delay product in J·s.
     pub edp: f64,
+    /// Programmable-logic utilization of the accelerator mix, in [0, 1].
     pub fabric_util: f64,
 }
 
 impl DsePoint {
+    /// The point's value under a ranking objective (lower is better).
     pub fn score(&self, obj: Objective) -> f64 {
         match obj {
             Objective::Time => self.est_ms,
@@ -145,6 +163,20 @@ pub fn explore(
 ) -> anyhow::Result<Vec<DsePoint>> {
     let ctx = SweepContext::for_space(program, board, part, space);
     Ok(ctx.explore(space, objective, default_workers()))
+}
+
+/// Time-energy coordinates of the Pareto front of a ranked point list, as
+/// exact `f64` bit patterns, sorted and deduplicated — the canonical form
+/// for comparing fronts across sweeps (used by the pruning-soundness tests
+/// and the suite harness).
+pub fn pareto_front_coords(points: &[DsePoint]) -> Vec<(u64, u64)> {
+    let mut f: Vec<(u64, u64)> = pareto_front(points)
+        .into_iter()
+        .map(|i| (points[i].est_ms.to_bits(), points[i].energy_j.to_bits()))
+        .collect();
+    f.sort_unstable();
+    f.dedup();
+    f
 }
 
 /// Indices of the time-energy Pareto-optimal points.

@@ -1,0 +1,850 @@
+//! Bound-guided pruned enumeration — cutting the co-design space *before*
+//! evaluation.
+//!
+//! The paper defers design-space exploration strategy ("a design space
+//! exploration strategy should be analyzed to reduce the amount of
+//! possible solutions", §I; §VII). With per-point evaluation now parallel
+//! and rebuild-free (`dse::sweep`), enumeration itself is the wall on big
+//! spaces. This module cuts the cartesian [`DseSpace`] odometer with three
+//! lossless prunes, applied in increasing order of cost:
+//!
+//! 1. **Resource-feasibility cuts.** Every accelerator variant's
+//!    [`Resources`] come from the memoized HLS reports of the shared
+//!    [`SweepContext`]. Variants that do not fit the
+//!    [`FpgaPart`](crate::hls::FpgaPart) alone
+//!    are dropped before the odometer starts, and during enumeration a
+//!    running prefix sum abandons a whole odometer subtree as soon as the
+//!    partial accelerator mix exceeds the effective budget (resources are
+//!    additive, so no completion of an infeasible prefix can fit). The
+//!    exhaustive path assembles and checks every candidate; this one
+//!    never materializes the infeasible ones.
+//!
+//! 2. **Dominance cuts between unroll variants.** A variant that is no
+//!    better in every HLS-reported latency (compute, input and output
+//!    transfer wall-clock times) *and* no cheaper in every resource class
+//!    than a sibling variant — strictly worse somewhere — never
+//!    enumerates: the
+//!    sibling-substituted co-design is itself part of the space and, task
+//!    for task, is served at least as fast with at least as little area.
+//!    With the analytic cost model this fires for unrolls past the
+//!    pipeline's saturation point, where extra unroll only deepens the
+//!    pipeline and burns area. One caveat keeps this cut in a weaker
+//!    class than the other two: when the substituted variant's timing is
+//!    *strictly* better (not merely equal), the argument assumes the
+//!    greedy event-driven schedule is monotone in per-task duration,
+//!    which discrete schedulers do not guarantee in general
+//!    (Graham-style timing anomalies). The cut is therefore
+//!    model-justified rather than proof-carried, and its losslessness is
+//!    enforced *empirically*: the property tests compare pruned vs
+//!    exhaustive best points and Pareto fronts on randomized spaces that
+//!    deliberately include saturated (dominated) variants. For
+//!    timing-equal dominated variants — the common saturation case — the
+//!    simulation is bit-identical and the cut is exact.
+//!
+//! 3. **Lower-bound cuts.** Reusing [`metrics::bounds`]: a candidate whose
+//!    makespan lower bound and (static-power × bound) energy lower bound
+//!    are both strictly dominated by an already-evaluated point can appear
+//!    on neither the time-energy Pareto front nor at the top of any
+//!    ranking (time, energy, or EDP — all three are monotone in the two
+//!    bounded axes), so it is skipped without simulation.
+//!
+//! # Determinism contract
+//!
+//! Bound cuts depend on what has been evaluated "so far", which is racy if
+//! best-so-far is shared freely between threads. To keep the bit-identical
+//! ranked-output contract of [`SweepContext::explore`], candidates are
+//! processed in **chunk-synchronous rounds**: candidates are ordered by
+//! ascending lower bound (deterministic), each round takes a fixed-size
+//! chunk per application, skip decisions consult only the Pareto frontier
+//! frozen at the previous round barrier, and the surviving chunk is
+//! evaluated by the parallel worker pool. Which points get evaluated — and
+//! therefore the full returned ranking — is identical for any worker
+//! count, including one (asserted by `rust/tests/prune_soundness.rs`).
+//!
+//! The resource cuts are exact and the bound cut is provably lossless
+//! (the bounds are true lower bounds of the simulated point); the
+//! dominance cut is lossless modulo the scheduler-monotonicity caveat
+//! above. Net guarantee, asserted on every tested space: the pruned sweep
+//! returns the same best co-design and the same time-energy Pareto front
+//! as the exhaustive sweep while simulating strictly fewer points (counts
+//! are reported in [`PruneStats`] and by `benches/dse_suite.rs`).
+//!
+//! [`metrics::bounds`]: crate::metrics::bounds
+
+use crate::config::CoDesign;
+use crate::hls::Resources;
+use crate::metrics::bounds::bounds;
+use crate::sim::time::{ps_to_ms, Ps};
+
+use super::sweep::SweepContext;
+use super::{describe, DsePoint, DseSpace, KernelSpace, Objective};
+
+/// Candidates evaluated per application per round of the bound-guided
+/// sweep. A *fixed* chunk size (rather than one derived from the worker
+/// count) is what makes the bound cut deterministic: the skip decision for
+/// a candidate depends only on which round it lands in, never on thread
+/// timing. Small enough that even the default 17-point per-app spaces get
+/// a post-incumbent round for the cut to act on; in a suite sweep the
+/// per-round work list is the *sum* of the apps' chunks, so the shared
+/// pool still sees wide rounds.
+const ROUND_CHUNK: usize = 8;
+
+/// Relative safety margin applied to the energy lower bound so that
+/// floating-point summation-order differences between the bound and the
+/// integrated energy report can never flip a strict comparison. The real
+/// slack of the bound is orders of magnitude larger than 1e-9.
+const ENERGY_LB_MARGIN: f64 = 1.0 - 1e-9;
+
+/// Where the points of a pruned sweep went. All counters refer to one
+/// `(program, space)` pair; `feasible_points` is exactly the number of
+/// candidates the exhaustive [`SweepContext::explore`] would simulate
+/// (minus the unrunnable ones it also skips).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Raw cartesian size of the space (including infeasible combinations).
+    pub space_points: u64,
+    /// Candidates that fit the FPGA part — what exhaustive enumeration
+    /// yields and the exhaustive sweep evaluates. Computed by a pure
+    /// counting odometer over the unpruned option footprints: it walks
+    /// O(`feasible_points`) nodes doing a resource add + compare each (a
+    /// few ns per node), which is four-plus orders of magnitude cheaper
+    /// than simulating a point — the statistic costs a negligible slice
+    /// of even a fully-pruned sweep.
+    pub feasible_points: u64,
+    /// Unroll variants dropped by the dominance cut (per kernel, summed).
+    pub dominated_variants: u64,
+    /// Feasible candidates never enumerated because they contained a
+    /// dominated — or byte-identical duplicate — unroll variant
+    /// (`feasible_points - enumerated`).
+    pub dominance_cut: u64,
+    /// Infeasible candidates skipped without being materialized (variant
+    /// and odometer-subtree resource cuts).
+    pub resource_cut: u64,
+    /// Enumerated candidates skipped by the lower-bound test.
+    pub bound_cut: u64,
+    /// Candidates where some kernel had nowhere to run (also skipped by
+    /// the exhaustive path).
+    pub unrunnable: u64,
+    /// Candidates actually simulated.
+    pub evaluated: u64,
+}
+
+impl PruneStats {
+    /// Candidates that survived enumeration (dominance + resource cuts)
+    /// and entered the bound-guided evaluation phase.
+    pub fn enumerated(&self) -> u64 {
+        self.feasible_points - self.dominance_cut
+    }
+
+    /// One-line human summary used by the CLI and benches.
+    pub fn render(&self) -> String {
+        format!(
+            "space {} -> feasible {} -> enumerated {} -> evaluated {} \
+             (cuts: resource {}, dominance {} [{} variants], bound {}, unrunnable {})",
+            self.space_points,
+            self.feasible_points,
+            self.enumerated(),
+            self.evaluated,
+            self.resource_cut,
+            self.dominance_cut,
+            self.dominated_variants,
+            self.bound_cut,
+            self.unrunnable,
+        )
+    }
+}
+
+/// One surviving accelerator variant of a kernel, with the data the
+/// odometer needs (resources for the prefix cut, timing for dominance).
+/// Latencies are wall-clock picoseconds, not cycles, so the dominance
+/// comparison stays correct even if the cost model ever derates the
+/// achieved clock per variant (every variant carries its own `fmax_mhz`).
+#[derive(Clone, Debug)]
+struct Variant {
+    unroll: u32,
+    res: Resources,
+    compute_ps: Ps,
+    in_ps: Ps,
+    out_ps: Ps,
+}
+
+fn dominates(b: &Variant, a: &Variant) -> bool {
+    let no_worse = b.compute_ps <= a.compute_ps
+        && b.in_ps <= a.in_ps
+        && b.out_ps <= a.out_ps
+        && b.res.luts <= a.res.luts
+        && b.res.ffs <= a.res.ffs
+        && b.res.dsps <= a.res.dsps
+        && b.res.bram18 <= a.res.bram18;
+    let strictly_better = b.compute_ps < a.compute_ps
+        || b.in_ps < a.in_ps
+        || b.out_ps < a.out_ps
+        || b.res.luts < a.res.luts
+        || b.res.ffs < a.res.ffs
+        || b.res.dsps < a.res.dsps
+        || b.res.bram18 < a.res.bram18;
+    no_worse && strictly_better
+}
+
+/// One per-kernel odometer option: an accelerator multiset plus the
+/// "+ smp" flag, with the option's total resource footprint precomputed.
+struct Opt {
+    accels: Vec<(String, u32)>,
+    smp: bool,
+    res: Resources,
+}
+
+/// Per-kernel option lists (pruned and unpruned counterparts share the
+/// construction; the unpruned list only feeds the feasible-point counter).
+struct OptionTable<'s> {
+    kernels: Vec<&'s KernelSpace>,
+    /// Options after variant dominance cuts — what actually enumerates.
+    pruned: Vec<Vec<Opt>>,
+    /// Option *footprints* with every feasible variant kept — used to
+    /// count what exhaustive enumeration would produce.
+    full_res: Vec<Vec<Resources>>,
+    dominated_variants: u64,
+    /// Raw cartesian size (counting per-variant infeasible options too).
+    space_points: u64,
+}
+
+fn build_options<'s>(ctx: &SweepContext<'_>, space: &'s DseSpace) -> OptionTable<'s> {
+    let mut kernels = Vec::new();
+    let mut pruned = Vec::new();
+    let mut full_res = Vec::new();
+    let mut dominated_variants = 0u64;
+    let mut space_points = 1u64;
+    for ks in &space.kernels {
+        let Some(kid) = ctx.program.kernel_id(&ks.kernel) else {
+            continue;
+        };
+        // Raw cartesian: the empty option plus every (unroll, count, smp?)
+        // combination, whether or not it fits.
+        let per_variant = ks.max_instances as u64 * if ks.try_smp { 2 } else { 1 };
+        space_points = space_points.saturating_mul(1 + ks.unrolls.len() as u64 * per_variant);
+
+        // Exhaustive option footprints, duplicates included — exactly the
+        // per-kernel options the unpruned odometer (and the exhaustive
+        // sweep) would enumerate, used only for the feasible-point count.
+        let mut all_res: Vec<Resources> = vec![Resources::ZERO];
+        for &u in &ks.unrolls {
+            let r = ctx.resources_for(kid, &ks.kernel, u);
+            if !ctx.part.fits(&[r]) {
+                continue;
+            }
+            for count in 1..=ks.max_instances {
+                let mut res = Resources::ZERO;
+                for _ in 0..count {
+                    res = res.add(&r);
+                }
+                all_res.push(res);
+                if ks.try_smp {
+                    all_res.push(res);
+                }
+            }
+        }
+
+        // Variants that fit the part at least once, deduplicated: a
+        // repeated unroll factor yields byte-identical candidates, so only
+        // the first copy enumerates (the dropped copies are counted
+        // together with the dominance cut — both are "never worth
+        // simulating for the same reason a dominated variant isn't").
+        let mut variants: Vec<Variant> = Vec::new();
+        for &u in &ks.unrolls {
+            if variants.iter().any(|v| v.unroll == u) {
+                continue;
+            }
+            let r = ctx.report_for(kid, &ks.kernel, u);
+            if !ctx.part.fits(&[r.resources]) {
+                continue;
+            }
+            variants.push(Variant {
+                unroll: u,
+                res: r.resources,
+                compute_ps: r.compute_ps(),
+                in_ps: r.in_ps(),
+                out_ps: r.out_ps(),
+            });
+        }
+        let keep: Vec<bool> = variants
+            .iter()
+            .map(|a| !variants.iter().any(|b| dominates(b, a)))
+            .collect();
+        dominated_variants += keep.iter().filter(|k| !**k).count() as u64;
+
+        // Options in the exact order `SweepContext::enumerate` uses, so
+        // the surviving candidates keep their enumeration-order tie-break.
+        let mut opts: Vec<Opt> = vec![Opt {
+            accels: Vec::new(),
+            smp: false,
+            res: Resources::ZERO,
+        }];
+        for (vi, v) in variants.iter().enumerate() {
+            if !keep[vi] {
+                continue;
+            }
+            for count in 1..=ks.max_instances {
+                let mut res = Resources::ZERO;
+                for _ in 0..count {
+                    res = res.add(&v.res);
+                }
+                let accels: Vec<(String, u32)> =
+                    (0..count).map(|_| (ks.kernel.clone(), v.unroll)).collect();
+                opts.push(Opt {
+                    accels: accels.clone(),
+                    smp: false,
+                    res,
+                });
+                if ks.try_smp {
+                    opts.push(Opt {
+                        accels,
+                        smp: true,
+                        res,
+                    });
+                }
+            }
+        }
+        kernels.push(ks);
+        pruned.push(opts);
+        full_res.push(all_res);
+    }
+    OptionTable {
+        kernels,
+        pruned,
+        full_res,
+        dominated_variants,
+        space_points,
+    }
+}
+
+/// Count the feasible candidates of an option table (what the exhaustive
+/// odometer would emit), using the same prefix-sum subtree cut.
+fn count_feasible(options: &[Vec<Resources>], budget: &Resources) -> u64 {
+    fn rec(options: &[Vec<Resources>], level: usize, total: Resources, budget: &Resources) -> u64 {
+        if level == 0 {
+            return 1;
+        }
+        let mut n = 0;
+        for res in &options[level - 1] {
+            let acc = total.add(res);
+            if acc.fits_in(budget) {
+                n += rec(options, level - 1, acc, budget);
+            }
+        }
+        n
+    }
+    if options.is_empty() {
+        return 1; // the smp-only candidate
+    }
+    rec(options, options.len(), Resources::ZERO, budget)
+}
+
+/// Pruned odometer: emits, in the exhaustive enumeration order, every
+/// feasible candidate built from the dominance-filtered options, skipping
+/// whole subtrees whose resource prefix already exceeds the budget.
+fn enumerate_options(table: &OptionTable<'_>, budget: &Resources, stats: &mut PruneStats) -> Vec<CoDesign> {
+    let n = table.pruned.len();
+    let mut out = Vec::new();
+    if n == 0 {
+        let mut cd = CoDesign::new("dse");
+        cd.name = describe(&cd);
+        out.push(cd);
+        return out;
+    }
+    // Subtree sizes: product of option counts of the levels below.
+    let mut below = vec![1u64; n + 1];
+    for k in 1..=n {
+        below[k] = below[k - 1].saturating_mul(table.pruned[k - 1].len() as u64);
+    }
+    // Recursion from the last kernel down so kernel 0 varies fastest —
+    // the same order as the serial odometer in `SweepContext::enumerate`.
+    fn rec(
+        table: &OptionTable<'_>,
+        budget: &Resources,
+        level: usize,
+        total: Resources,
+        picked: &mut Vec<usize>,
+        below: &[u64],
+        out: &mut Vec<CoDesign>,
+        resource_cut: &mut u64,
+    ) {
+        if level == 0 {
+            let mut cd = CoDesign::new("dse");
+            for (ki, &oi) in picked.iter().enumerate() {
+                let opt = &table.pruned[ki][oi];
+                for (k, u) in &opt.accels {
+                    cd = cd.with_accel(k, *u);
+                }
+                if opt.smp {
+                    cd = cd.with_smp(&table.kernels[ki].kernel);
+                }
+            }
+            cd.name = describe(&cd);
+            out.push(cd);
+            return;
+        }
+        let ki = level - 1;
+        for (oi, opt) in table.pruned[ki].iter().enumerate() {
+            let acc = total.add(&opt.res);
+            if !acc.fits_in(budget) {
+                // No completion of this prefix can fit: skip the subtree.
+                *resource_cut += below[ki];
+                continue;
+            }
+            picked[ki] = oi;
+            rec(table, budget, ki, acc, picked, below, out, resource_cut);
+        }
+    }
+    let mut picked = vec![0usize; n];
+    rec(
+        table,
+        budget,
+        n,
+        Resources::ZERO,
+        &mut picked,
+        &below,
+        &mut out,
+        &mut stats.resource_cut,
+    );
+    out
+}
+
+/// Enumerate the pruned candidate list for a space, with statistics.
+///
+/// The result is a subset of [`SweepContext::enumerate`] in the same
+/// relative order: exactly the feasible candidates that use no dominated
+/// unroll variant.
+pub fn enumerate_pruned(ctx: &SweepContext<'_>, space: &DseSpace) -> (Vec<CoDesign>, PruneStats) {
+    let mut stats = PruneStats::default();
+    let table = build_options(ctx, space);
+    let budget = ctx.part.effective_budget();
+    stats.space_points = table.space_points;
+    stats.dominated_variants = table.dominated_variants;
+    stats.feasible_points = count_feasible(&table.full_res, &budget);
+    let cands = enumerate_options(&table, &budget, &mut stats);
+    stats.dominance_cut = stats.feasible_points - cands.len() as u64;
+    (cands, stats)
+}
+
+/// Lower bounds of one candidate in objective space. Both are *valid*
+/// lower bounds of the evaluated [`DsePoint`]: `lb_ms <= est_ms` and
+/// `lb_energy_j <= energy_j` for the point the simulator would produce.
+#[derive(Clone, Copy, Debug)]
+struct CandBound {
+    lb_ms: f64,
+    lb_energy_j: f64,
+}
+
+impl CandBound {
+    fn score(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::Time => self.lb_ms,
+            Objective::Energy => self.lb_energy_j,
+            Objective::Edp => self.lb_ms * self.lb_energy_j,
+        }
+    }
+}
+
+/// Compute the makespan and energy lower bounds of a candidate against the
+/// shared context. `None` means the co-design cannot run at all (some
+/// kernel has no device) — the exhaustive sweep skips those too.
+fn bound_for(ctx: &SweepContext<'_>, cd: &CoDesign) -> Option<CandBound> {
+    let (accels, smp) = ctx.resolve(cd).ok()?;
+    let b = bounds(ctx.program, &ctx.graph, ctx.board, &accels, &smp);
+    let lb_ps = b.lower_bound();
+    // Energy >= static power over the bounded makespan plus the SMP
+    // dynamic power of the (unavoidable, serialized) creation chain. The
+    // utilization is computed exactly as `point_from` computes it, so the
+    // static-power watts match the evaluated report's bit for bit.
+    let resources: Vec<Resources> = accels.iter().map(|a| a.report.resources).collect();
+    let util = ctx.part.utilization(&resources);
+    let pm = ctx.power_model();
+    let static_w = pm.ps_static_w + pm.pl_static_w + pm.pl_static_per_util_w * (util * 100.0);
+    let lb_s = lb_ps as f64 / 1e12;
+    let creation_s = b.creation_chain as f64 / 1e12;
+    let lb_energy = (static_w * lb_s + pm.smp_dynamic_w * creation_s) * ENERGY_LB_MARGIN;
+    Some(CandBound {
+        lb_ms: ps_to_ms(lb_ps),
+        lb_energy_j: lb_energy,
+    })
+}
+
+/// Frozen time-energy frontier of the points evaluated in earlier rounds.
+/// A candidate is skippable when some frontier point is *strictly* below
+/// both of its lower bounds: the candidate is then strictly dominated in
+/// objective space, so it is neither Pareto-optimal nor best under any of
+/// the three objectives.
+#[derive(Default)]
+struct Frontier {
+    pts: Vec<(f64, f64)>,
+}
+
+impl Frontier {
+    fn insert(&mut self, ms: f64, energy: f64) {
+        if self
+            .pts
+            .iter()
+            .any(|&(m, e)| m <= ms && e <= energy)
+        {
+            return;
+        }
+        self.pts.retain(|&(m, e)| !(ms <= m && energy <= e));
+        self.pts.push((ms, energy));
+    }
+
+    fn strictly_dominates(&self, lb: &CandBound) -> bool {
+        self.pts
+            .iter()
+            .any(|&(m, e)| m < lb.lb_ms && e < lb.lb_energy_j)
+    }
+}
+
+/// Per-application pruned-exploration state threaded through the rounds.
+struct JobState<'a, 'p> {
+    ctx: &'a SweepContext<'p>,
+    cands: Vec<CoDesign>,
+    bounds: Vec<Option<CandBound>>,
+    /// Candidate indices in ascending-lower-bound order (the processing
+    /// order of the rounds).
+    order: Vec<usize>,
+    cursor: usize,
+    frontier: Frontier,
+    evaluated: Vec<(usize, DsePoint)>,
+    stats: PruneStats,
+}
+
+/// Evaluate `(job, candidate)` work items on a persistent pool of
+/// per-worker, per-job simulators. `slots` outlives the rounds, so each
+/// worker's simulator buffers are reused across every round *and* every
+/// application — one shared pool for the whole (suite) sweep.
+fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, workers: usize) {
+    // Deterministic processing order per job.
+    for job in jobs.iter_mut() {
+        let mut order: Vec<usize> = (0..job.cands.len())
+            .filter(|&i| job.bounds[i].is_some())
+            .collect();
+        job.stats.unrunnable = (job.cands.len() - order.len()) as u64;
+        order.sort_by(|&a, &b| {
+            let sa = job.bounds[a].as_ref().unwrap().score(objective);
+            let sb = job.bounds[b].as_ref().unwrap().score(objective);
+            sa.partial_cmp(&sb).unwrap().then(a.cmp(&b))
+        });
+        job.order = order;
+    }
+
+    let workers = workers.max(1);
+    // One persistent simulator slot per worker per job.
+    let mut slots: Vec<Vec<Option<super::sweep::SweepWorker<'a, 'p>>>> = Vec::new();
+    for _ in 0..workers {
+        slots.push((0..jobs.len()).map(|_| None).collect());
+    }
+
+    loop {
+        // Assemble this round's work list at the barrier: fixed chunk per
+        // job, bound cut against each job's frozen frontier.
+        let mut work: Vec<(usize, usize)> = Vec::new();
+        for (ji, job) in jobs.iter_mut().enumerate() {
+            let end = (job.cursor + ROUND_CHUNK).min(job.order.len());
+            for oi in job.cursor..end {
+                let ci = job.order[oi];
+                let lb = job.bounds[ci].as_ref().unwrap();
+                if job.frontier.strictly_dominates(lb) {
+                    job.stats.bound_cut += 1;
+                } else {
+                    work.push((ji, ci));
+                }
+            }
+            job.cursor = end;
+        }
+        if work.is_empty() {
+            if jobs.iter().all(|j| j.cursor >= j.order.len()) {
+                break;
+            }
+            continue; // a whole round was cut away; advance to the next
+        }
+
+        let jobs_ref: &[JobState<'a, 'p>] = &*jobs;
+        let n_slots = slots.len().min(work.len());
+        let results = super::sweep::parallel_for_indexed(
+            &mut slots[..n_slots],
+            work.len(),
+            |slot, w| {
+                let (ji, ci) = work[w];
+                let worker = slot[ji].get_or_insert_with(|| jobs_ref[ji].ctx.worker());
+                worker.evaluate(&jobs_ref[ji].cands[ci]).map(|p| (ji, ci, p))
+            },
+        );
+
+        // Barrier: merge results and thaw the frontier for the next round.
+        for (ji, ci, p) in results {
+            jobs[ji].frontier.insert(p.est_ms, p.energy_j);
+            jobs[ji].stats.evaluated += 1;
+            jobs[ji].evaluated.push((ci, p));
+        }
+    }
+}
+
+/// Bound-guided pruned exploration over one or more applications sharing
+/// one worker pool. Returns, per application, the ranked evaluated points
+/// and the cut statistics. See the module docs for the losslessness and
+/// determinism guarantees.
+pub(crate) fn explore_pruned_multi<'p>(
+    inputs: &[(&SweepContext<'p>, &DseSpace)],
+    objective: Objective,
+    workers: usize,
+) -> Vec<(Vec<DsePoint>, PruneStats)> {
+    let mut jobs: Vec<JobState<'_, 'p>> = inputs
+        .iter()
+        .map(|&(ctx, space)| {
+            let (cands, stats) = enumerate_pruned(ctx, space);
+            JobState {
+                ctx,
+                cands,
+                bounds: Vec::new(),
+                order: Vec::new(),
+                cursor: 0,
+                frontier: Frontier::default(),
+                evaluated: Vec::new(),
+                stats,
+            }
+        })
+        .collect();
+
+    // Bounds are cheap relative to simulation but not free: compute them
+    // in parallel across all jobs, keyed by (job, candidate) index so the
+    // result is independent of the worker count.
+    let flat: Vec<(usize, usize)> = jobs
+        .iter()
+        .enumerate()
+        .flat_map(|(ji, j)| (0..j.cands.len()).map(move |ci| (ji, ci)))
+        .collect();
+    let n_workers = workers.max(1).min(flat.len().max(1));
+    let computed: Vec<(usize, usize, Option<CandBound>)> = if n_workers <= 1 {
+        flat.iter()
+            .map(|&(ji, ci)| (ji, ci, bound_for(jobs[ji].ctx, &jobs[ji].cands[ci])))
+            .collect()
+    } else {
+        let jobs_ref: &[JobState<'_, 'p>] = &jobs;
+        let mut slots = vec![(); n_workers];
+        super::sweep::parallel_for_indexed(&mut slots, flat.len(), |_, w| {
+            let (ji, ci) = flat[w];
+            Some((ji, ci, bound_for(jobs_ref[ji].ctx, &jobs_ref[ji].cands[ci])))
+        })
+    };
+    for job in jobs.iter_mut() {
+        job.bounds = vec![None; job.cands.len()];
+    }
+    for (ji, ci, b) in computed {
+        jobs[ji].bounds[ci] = b;
+    }
+
+    run_rounds(&mut jobs, objective, workers);
+
+    jobs.into_iter()
+        .map(|mut job| {
+            // Enumeration order first, then the same stable score sort as
+            // the exhaustive path, so ranking ties break identically.
+            job.evaluated.sort_unstable_by_key(|e| e.0);
+            let mut points: Vec<DsePoint> = job.evaluated.into_iter().map(|(_, p)| p).collect();
+            points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+            (points, job.stats)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::cholesky::Cholesky;
+    use crate::apps::matmul::Matmul;
+    use crate::config::BoardConfig;
+    use crate::coordinator::task::{Dep, KernelDecl, KernelProfile, TaskProgram, Targets};
+    use crate::hls::FpgaPart;
+
+    use super::super::pareto_front_coords as front_coords;
+
+    fn assert_lossless(ctx: &SweepContext<'_>, space: &DseSpace, objective: Objective) -> PruneStats {
+        let exhaustive = ctx.explore(space, objective, 2);
+        let (pruned, stats) = ctx.explore_pruned(space, objective, 2);
+        assert_eq!(
+            stats.evaluated as usize,
+            pruned.len(),
+            "stats/result length mismatch"
+        );
+        assert!(!exhaustive.is_empty());
+        assert_eq!(
+            exhaustive[0].score(objective).to_bits(),
+            pruned[0].score(objective).to_bits(),
+            "best point diverged: {} vs {}",
+            exhaustive[0].codesign.name,
+            pruned[0].codesign.name
+        );
+        assert_eq!(
+            front_coords(&exhaustive),
+            front_coords(&pruned),
+            "Pareto front diverged"
+        );
+        assert_eq!(stats.feasible_points as usize, ctx.enumerate(space).len());
+        stats
+    }
+
+    #[test]
+    fn pruned_enumeration_matches_exhaustive_without_dominance() {
+        // Default matmul space: no variant is dominated, so the pruned
+        // candidate list must be exactly the exhaustive one, in order.
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        let (pruned, stats) = enumerate_pruned(&ctx, &space);
+        let exhaustive = ctx.enumerate(&space);
+        assert_eq!(stats.dominance_cut, 0);
+        assert_eq!(pruned.len(), exhaustive.len());
+        for (a, b) in pruned.iter().zip(&exhaustive) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(stats.feasible_points, exhaustive.len() as u64);
+        assert!(stats.space_points >= stats.feasible_points);
+    }
+
+    /// A kernel whose inner loop saturates at small unrolls: beyond the
+    /// trip count, extra unroll only deepens the pipeline (more cycles)
+    /// and burns more area — the textbook dominated variant.
+    fn tiny_trip_program() -> TaskProgram {
+        let mut p = TaskProgram::new("tiny");
+        let k = p.add_kernel(KernelDecl {
+            name: "tk".into(),
+            targets: Targets::FPGA,
+            profile: KernelProfile {
+                flops: 200,
+                inner_trip: 100,
+                in_bytes: 8_192,
+                out_bytes: 4_096,
+                dtype_bytes: 4,
+                divsqrt: false,
+            },
+        });
+        for i in 0..12u64 {
+            p.add_task(k, 10_000, vec![Dep::inout(0x1000 + i * 0x100, 4_096)]);
+        }
+        p
+    }
+
+    #[test]
+    fn dominance_cut_drops_saturated_unrolls() {
+        let board = BoardConfig::zynq706();
+        let p = tiny_trip_program();
+        let space = DseSpace {
+            kernels: vec![KernelSpace {
+                kernel: "tk".into(),
+                unrolls: vec![64, 128],
+                max_instances: 2,
+                try_smp: false,
+            }],
+        };
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        // Past saturation (trip = 100): U128 takes ceil(100/128) = 1
+        // iteration but a deeper pipeline than U64's 2 iterations, so it
+        // has strictly more cycles AND strictly more resources while still
+        // fitting the part — strictly worse in both, it never enumerates.
+        let (cands, stats) = enumerate_pruned(&ctx, &space);
+        assert_eq!(stats.dominated_variants, 1, "{stats:?}");
+        assert!(stats.dominance_cut > 0, "{stats:?}");
+        assert!(cands
+            .iter()
+            .all(|c| c.accels.iter().all(|a| a.unroll == 64)));
+        // And the cut is lossless.
+        let st = assert_lossless(&ctx, &space, Objective::Time);
+        assert!(
+            st.evaluated < st.feasible_points,
+            "pruning must evaluate strictly fewer points: {st:?}"
+        );
+    }
+
+    #[test]
+    fn subtree_resource_cut_counts_cartesian_holes() {
+        // Cholesky space: many cross-kernel combinations blow the DSP
+        // budget; the prefix cut must skip them without materializing.
+        let board = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        let (cands, stats) = enumerate_pruned(&ctx, &space);
+        assert!(stats.resource_cut > 0, "{stats:?}");
+        assert_eq!(stats.feasible_points as usize, ctx.enumerate(&space).len());
+        // No dominance in the default space: candidate sets must agree.
+        assert_eq!(cands.len(), ctx.enumerate(&space).len());
+    }
+
+    #[test]
+    fn bound_cut_fires_and_is_lossless_on_cholesky() {
+        let board = BoardConfig::zynq706();
+        let p = Cholesky::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        for objective in [Objective::Time, Objective::Edp] {
+            let stats = assert_lossless(&ctx, &space, objective);
+            assert!(stats.bound_cut > 0, "no bound cuts fired: {stats:?}");
+            assert!(
+                stats.evaluated < stats.feasible_points,
+                "pruning must evaluate strictly fewer points: {stats:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_explore_is_deterministic_across_worker_counts() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        let (base, base_stats) = ctx.explore_pruned(&space, Objective::Time, 1);
+        for workers in [2, 4, 8] {
+            let (pts, stats) = ctx.explore_pruned(&space, Objective::Time, workers);
+            assert_eq!(stats, base_stats, "workers={workers}");
+            assert_eq!(pts.len(), base.len(), "workers={workers}");
+            for (a, b) in pts.iter().zip(&base) {
+                assert_eq!(a.codesign.name, b.codesign.name, "workers={workers}");
+                assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "workers={workers}");
+                assert_eq!(
+                    a.energy_j.to_bits(),
+                    b.energy_j.to_bits(),
+                    "workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_are_valid_lower_bounds() {
+        // For every evaluated candidate of the matmul space, the bound
+        // used for cutting must sit at or below the evaluated point.
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        let mut w = ctx.worker();
+        for cd in ctx.enumerate(&space) {
+            let Some(lb) = bound_for(&ctx, &cd) else {
+                continue;
+            };
+            let Some(p) = w.evaluate(&cd) else {
+                panic!("bound exists but evaluation skipped for {}", cd.name);
+            };
+            assert!(
+                lb.lb_ms <= p.est_ms,
+                "{}: time bound {} > est {}",
+                cd.name,
+                lb.lb_ms,
+                p.est_ms
+            );
+            assert!(
+                lb.lb_energy_j <= p.energy_j,
+                "{}: energy bound {} > energy {}",
+                cd.name,
+                lb.lb_energy_j,
+                p.energy_j
+            );
+        }
+    }
+}

@@ -49,15 +49,66 @@ pub fn default_workers() -> usize {
         .unwrap_or(1)
 }
 
+/// Work-stealing indexed parallel map — the one scoped-thread loop every
+/// parallel stage of the DSE layer shares (point evaluation, suite
+/// evaluation, bound computation, pruned rounds).
+///
+/// Item indices `0..n_items` are claimed through a shared atomic cursor;
+/// `f` runs with the claiming worker's mutable slot (per-worker state such
+/// as a reusable simulator); every `Some` result is collected **unordered**
+/// — callers key results by index and sort, which is what keeps their
+/// output independent of the worker count.
+pub(crate) fn parallel_for_indexed<S, R, F>(slots: &mut [S], n_items: usize, f: F) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    F: Fn(&mut S, usize) -> Option<R> + Sync,
+{
+    debug_assert!(!slots.is_empty() || n_items == 0);
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<R> = Vec::with_capacity(n_items);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = slots
+            .iter_mut()
+            .map(|slot| {
+                let f = &f;
+                let cursor = &cursor;
+                s.spawn(move || {
+                    let mut acc: Vec<R> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_items {
+                            break;
+                        }
+                        if let Some(r) = f(slot, i) {
+                            acc.push(r);
+                        }
+                    }
+                    acc
+                })
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parallel worker panicked"));
+        }
+    });
+    out
+}
+
 /// Shared, immutable evaluation context for one (program, board, part)
 /// triple: dependence graph, elaborated program and memoized HLS reports.
 /// Build it once, then run any number of enumerations / explorations /
 /// single-point estimates against it.
 pub struct SweepContext<'p> {
+    /// The program under exploration.
     pub program: &'p TaskProgram,
+    /// Platform description shared by every evaluation.
     pub board: &'p BoardConfig,
+    /// FPGA part the co-designs must fit.
     pub part: FpgaPart,
+    /// One-time dependence graph (shared by bounds and simulation).
     pub graph: DepGraph,
+    /// One-time elaborated program (creation chain + transfer footprints).
     pub elab: ElabProgram,
     cost: CostModel,
     power: PowerModel,
@@ -118,6 +169,12 @@ impl<'p> SweepContext<'p> {
     /// Number of memoized HLS reports (bench/diagnostic).
     pub fn cached_reports(&self) -> usize {
         self.reports.len()
+    }
+
+    /// The power model shared by every point evaluation (the energy lower
+    /// bound of `dse::prune` must use the exact same constants).
+    pub(crate) fn power_model(&self) -> &PowerModel {
+        &self.power
     }
 
     /// The HLS report for a variant: cache hit, or an on-the-fly estimate
@@ -343,30 +400,11 @@ impl<'p> SweepContext<'p> {
             let mut w = self.worker();
             return cands.iter().filter_map(|cd| w.evaluate(cd)).collect();
         }
-        let next = AtomicUsize::new(0);
-        let mut indexed: Vec<(usize, DsePoint)> = Vec::with_capacity(n);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    s.spawn(|| {
-                        let mut w = self.worker();
-                        let mut out: Vec<(usize, DsePoint)> = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= n {
-                                break;
-                            }
-                            if let Some(p) = w.evaluate(&cands[i]) {
-                                out.push((i, p));
-                            }
-                        }
-                        out
-                    })
-                })
-                .collect();
-            for h in handles {
-                indexed.extend(h.join().expect("sweep worker panicked"));
-            }
+        // One lazily-built worker (simulator + model) per thread.
+        let mut slots: Vec<Option<SweepWorker<'_, 'p>>> = (0..workers).map(|_| None).collect();
+        let mut indexed = parallel_for_indexed(&mut slots, n, |slot, i| {
+            let w = slot.get_or_insert_with(|| self.worker());
+            w.evaluate(&cands[i]).map(|p| (i, p))
         });
         // Restore enumeration order so ranking ties break exactly like the
         // serial path (the score sort below is stable).
@@ -376,6 +414,31 @@ impl<'p> SweepContext<'p> {
 
     /// Enumerate + evaluate + rank. Bit-identical output for any worker
     /// count, including `workers == 1`.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use zynq_estimator::apps::matmul::Matmul;
+    /// use zynq_estimator::config::BoardConfig;
+    /// use zynq_estimator::dse::{DseSpace, Objective, SweepContext};
+    /// use zynq_estimator::hls::FpgaPart;
+    ///
+    /// let board = BoardConfig::zynq706();
+    /// let program = Matmul::new(256, 64).build_program(&board);
+    /// let space = DseSpace::from_program(&program);
+    /// let ctx = SweepContext::for_space(&program, &board, &FpgaPart::xc7z045(), &space);
+    /// let points = ctx.explore(&space, Objective::Time, 2);
+    /// assert!(!points.is_empty());
+    /// // The ranking is sorted by the objective...
+    /// assert!(points.windows(2).all(|w| w[0].est_ms <= w[1].est_ms));
+    /// // ...and is bit-identical for any worker count.
+    /// let serial = ctx.explore(&space, Objective::Time, 1);
+    /// assert_eq!(serial.len(), points.len());
+    /// assert!(serial
+    ///     .iter()
+    ///     .zip(&points)
+    ///     .all(|(a, b)| a.est_ms.to_bits() == b.est_ms.to_bits()));
+    /// ```
     pub fn explore(
         &self,
         space: &DseSpace,
@@ -386,6 +449,24 @@ impl<'p> SweepContext<'p> {
         let mut points = self.evaluate_all(&cands, workers);
         points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
         points
+    }
+
+    /// Like [`SweepContext::explore`], but with the bound-guided pruned
+    /// enumeration of [`dse::prune`](super::prune): infeasible odometer
+    /// subtrees, dominated unroll variants and bound-dominated candidates
+    /// are cut *before* simulation. The returned ranking contains only the
+    /// evaluated points, is bit-identical for any worker count, and its
+    /// best point and time-energy Pareto front equal the exhaustive
+    /// sweep's (see the prune module docs for the guarantee).
+    pub fn explore_pruned(
+        &self,
+        space: &DseSpace,
+        objective: Objective,
+        workers: usize,
+    ) -> (Vec<DsePoint>, super::prune::PruneStats) {
+        super::prune::explore_pruned_multi(&[(self, space)], objective, workers)
+            .pop()
+            .expect("one input yields one output")
     }
 }
 
@@ -406,6 +487,150 @@ impl<'c, 'p> SweepWorker<'c, 'p> {
         self.sim.reset_owned(accels, smp);
         let res = self.sim.run_mut(&mut self.model);
         Some(self.ctx.point_from(codesign, &res))
+    }
+}
+
+/// One application of a [`SweepSuite`]: its shared evaluation context and
+/// the space to sweep.
+pub struct SuiteApp<'p> {
+    /// Display name (CLI tables, bench records).
+    pub name: String,
+    /// The primed per-application evaluation context.
+    pub ctx: SweepContext<'p>,
+    /// The space swept for this application.
+    pub space: DseSpace,
+}
+
+/// Ranked sweep output for one application of a suite.
+pub struct SuiteAppResult {
+    /// The application's display name.
+    pub name: String,
+    /// Evaluated points, ranked by the sweep objective.
+    pub points: Vec<DsePoint>,
+    /// Cut statistics. Cut counters are zero for exhaustive sweeps;
+    /// `unrunnable` (candidates where some kernel has no device) is
+    /// filled either way, so `evaluated + unrunnable == feasible_points`
+    /// always holds for exhaustive sweeps.
+    pub stats: super::prune::PruneStats,
+}
+
+/// Batched multi-program sweep: several applications share **one** worker
+/// pool, and each worker keeps one lazily-built [`SweepWorker`] (simulator
+/// buffers included) per application, so a whole benchmark suite — e.g.
+/// matmul/cholesky/lu/stencil — sweeps in a single pass instead of four
+/// sequential sweeps with four pool spin-ups.
+///
+/// Determinism: work items are distributed by a work-stealing cursor but
+/// results are merged by `(application, enumeration index)`, so every
+/// application's ranking is bit-identical to running
+/// [`SweepContext::explore`] (or [`SweepContext::explore_pruned`]) on it
+/// alone, for any worker count.
+#[derive(Default)]
+pub struct SweepSuite<'p> {
+    apps: Vec<SuiteApp<'p>>,
+}
+
+impl<'p> SweepSuite<'p> {
+    /// An empty suite; add applications with [`SweepSuite::push`].
+    pub fn new() -> Self {
+        Self { apps: Vec::new() }
+    }
+
+    /// Add an application: builds and primes its [`SweepContext`].
+    pub fn push(
+        &mut self,
+        name: &str,
+        program: &'p TaskProgram,
+        board: &'p BoardConfig,
+        part: &FpgaPart,
+        space: DseSpace,
+    ) {
+        let ctx = SweepContext::for_space(program, board, part, &space);
+        self.apps.push(SuiteApp {
+            name: name.to_string(),
+            ctx,
+            space,
+        });
+    }
+
+    /// The registered applications.
+    pub fn apps(&self) -> &[SuiteApp<'p>] {
+        &self.apps
+    }
+
+    /// Exhaustively sweep every application in a single pass over one
+    /// shared worker pool. Per-application output is bit-identical to
+    /// [`SweepContext::explore`] on that application alone.
+    pub fn explore(&self, objective: Objective, workers: usize) -> Vec<SuiteAppResult> {
+        // Flatten (app, candidate) work items across the whole suite.
+        let per_app: Vec<Vec<CoDesign>> = self
+            .apps
+            .iter()
+            .map(|a| a.ctx.enumerate(&a.space))
+            .collect();
+        let flat: Vec<(usize, usize)> = per_app
+            .iter()
+            .enumerate()
+            .flat_map(|(ai, cands)| (0..cands.len()).map(move |ci| (ai, ci)))
+            .collect();
+        let workers = workers.max(1).min(flat.len().max(1));
+        // One lazily-built worker (simulator + model) per thread per
+        // application, reused for every point that thread evaluates for
+        // that application.
+        let mut slots: Vec<Vec<Option<SweepWorker<'_, 'p>>>> = (0..workers)
+            .map(|_| (0..self.apps.len()).map(|_| None).collect())
+            .collect();
+        let mut indexed = parallel_for_indexed(&mut slots, flat.len(), |pool, i| {
+            let (ai, ci) = flat[i];
+            let w = pool[ai].get_or_insert_with(|| self.apps[ai].ctx.worker());
+            w.evaluate(&per_app[ai][ci]).map(|p| (ai, ci, p))
+        });
+        // Restore per-application enumeration order, then rank.
+        indexed.sort_unstable_by_key(|&(ai, ci, _)| (ai, ci));
+        let mut results: Vec<SuiteAppResult> = self
+            .apps
+            .iter()
+            .enumerate()
+            .map(|(ai, a)| SuiteAppResult {
+                name: a.name.clone(),
+                points: Vec::new(),
+                stats: super::prune::PruneStats {
+                    feasible_points: per_app[ai].len() as u64,
+                    ..Default::default()
+                },
+            })
+            .collect();
+        for (ai, _, p) in indexed {
+            results[ai].points.push(p);
+        }
+        for r in &mut results {
+            r.stats.evaluated = r.points.len() as u64;
+            // Candidates the evaluation skipped (some kernel had nowhere
+            // to run) — account for them so `evaluated < feasible_points`
+            // can never read as pruning in an exhaustive sweep.
+            r.stats.unrunnable = r.stats.feasible_points - r.stats.evaluated;
+            r.points
+                .sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+        }
+        results
+    }
+
+    /// Bound-guided pruned sweep of the whole suite through one shared
+    /// worker pool (see [`dse::prune`](super::prune)): per application,
+    /// the best point and Pareto front equal [`SweepSuite::explore`]'s
+    /// while strictly fewer points are simulated.
+    pub fn explore_pruned(&self, objective: Objective, workers: usize) -> Vec<SuiteAppResult> {
+        let inputs: Vec<(&SweepContext<'p>, &DseSpace)> =
+            self.apps.iter().map(|a| (&a.ctx, &a.space)).collect();
+        super::prune::explore_pruned_multi(&inputs, objective, workers)
+            .into_iter()
+            .zip(&self.apps)
+            .map(|((points, stats), app)| SuiteAppResult {
+                name: app.name.clone(),
+                points,
+                stats,
+            })
+            .collect()
     }
 }
 

@@ -221,6 +221,112 @@ pub fn dse_sweep_latency(
     Ok((baseline_secs, sweep_secs, points.len()))
 }
 
+/// Per-application record of one suite-sweep comparison run.
+#[derive(Clone, Debug)]
+pub struct SuiteAppLatency {
+    /// Application name (matmul, cholesky, lu, stencil).
+    pub name: String,
+    /// Candidates the exhaustive sweep evaluates.
+    pub feasible: u64,
+    /// Candidates the pruned sweep actually simulated.
+    pub evaluated: u64,
+    /// Candidates skipped by the lower-bound cut.
+    pub bound_cut: u64,
+    /// Feasible candidates never enumerated (dominated variants).
+    pub dominance_cut: u64,
+    /// Best co-design (identical under both sweeps — asserted).
+    pub best: String,
+}
+
+/// Result of [`dse_suite_latency`]: wall time of the exhaustive vs pruned
+/// batched suite sweep plus the per-application point accounting.
+#[derive(Clone, Debug)]
+pub struct SuiteLatency {
+    /// Worker-pool size used for both passes.
+    pub workers: usize,
+    /// Wall time of the exhaustive shared-pool suite sweep (seconds).
+    pub exhaustive_s: f64,
+    /// Wall time of the bound-guided pruned suite sweep (seconds).
+    pub pruned_s: f64,
+    /// Per-application accounting.
+    pub apps: Vec<SuiteAppLatency>,
+}
+
+/// Batched multi-program DSE sweep latency: the matmul/cholesky/lu/stencil
+/// suite swept exhaustively and with bound-guided pruning, both through one
+/// shared `SweepSuite` worker pool. Asserts, per application, that the
+/// pruned sweep reproduces the exhaustive best point and time-energy
+/// Pareto front while evaluating strictly fewer points — the losslessness
+/// contract of `dse::prune` — and returns the counts the bench reports.
+pub fn dse_suite_latency(
+    n: u64,
+    board: &BoardConfig,
+    workers: usize,
+) -> anyhow::Result<SuiteLatency> {
+    use crate::dse::{pareto_front_coords, DseSpace, Objective, SweepSuite};
+
+    let part = FpgaPart::xc7z045();
+    let programs: Vec<(&str, TaskProgram)> = vec![
+        ("matmul", matmul::Matmul::new(n, 64).build_program(board)),
+        ("cholesky", cholesky::Cholesky::new(n, 64).build_program(board)),
+        ("lu", lu::Lu::new(n, 64).build_program(board)),
+        (
+            "stencil",
+            crate::apps::stencil::Stencil::new(n, 64, 4).build_program(board),
+        ),
+    ];
+    let mut suite = SweepSuite::new();
+    for (name, program) in &programs {
+        suite.push(name, program, board, &part, DseSpace::from_program(program));
+    }
+
+    let t0 = Instant::now();
+    let exhaustive = suite.explore(Objective::Time, workers);
+    let exhaustive_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let pruned = suite.explore_pruned(Objective::Time, workers);
+    let pruned_s = t1.elapsed().as_secs_f64();
+
+    let mut apps = Vec::new();
+    for (e, p) in exhaustive.iter().zip(&pruned) {
+        anyhow::ensure!(!e.points.is_empty(), "{}: empty exhaustive sweep", e.name);
+        anyhow::ensure!(
+            e.points[0].est_ms.to_bits() == p.points[0].est_ms.to_bits(),
+            "{}: pruned best diverged ({} vs {})",
+            e.name,
+            e.points[0].codesign.name,
+            p.points[0].codesign.name
+        );
+        anyhow::ensure!(
+            pareto_front_coords(&e.points) == pareto_front_coords(&p.points),
+            "{}: pruned Pareto front diverged",
+            e.name
+        );
+        anyhow::ensure!(
+            p.stats.evaluated < p.stats.feasible_points,
+            "{}: pruning evaluated {} of {} points (expected strictly fewer)",
+            e.name,
+            p.stats.evaluated,
+            p.stats.feasible_points
+        );
+        apps.push(SuiteAppLatency {
+            name: e.name.clone(),
+            feasible: p.stats.feasible_points,
+            evaluated: p.stats.evaluated,
+            bound_cut: p.stats.bound_cut,
+            dominance_cut: p.stats.dominance_cut,
+            best: e.points[0].codesign.name.clone(),
+        });
+    }
+    Ok(SuiteLatency {
+        workers,
+        exhaustive_s,
+        pruned_s,
+        apps,
+    })
+}
+
 /// Fig. 7 — write Paraver bundles for the four matmul configurations the
 /// paper visualizes. Returns the written stems.
 pub fn fig7(
@@ -366,6 +472,20 @@ mod tests {
         let (base_s, sweep_s, points) = dse_sweep_latency(&program, &board, 2).unwrap();
         assert!(points > 0);
         assert!(base_s > 0.0 && sweep_s > 0.0);
+    }
+
+    #[test]
+    fn dse_suite_latency_prunes_losslessly() {
+        // The harness itself asserts pruned best/front equality and the
+        // strictly-fewer-evaluations contract per app.
+        let board = BoardConfig::zynq706();
+        let r = dse_suite_latency(256, &board, 2).unwrap();
+        assert_eq!(r.apps.len(), 4);
+        assert!(r.exhaustive_s > 0.0 && r.pruned_s > 0.0);
+        let evaluated: u64 = r.apps.iter().map(|a| a.evaluated).sum();
+        let feasible: u64 = r.apps.iter().map(|a| a.feasible).sum();
+        assert!(evaluated < feasible, "{evaluated} vs {feasible}");
+        assert!(r.apps.iter().any(|a| a.bound_cut > 0));
     }
 
     #[test]

@@ -126,6 +126,7 @@ fn argmin(xs: &[f64]) -> usize {
         .unwrap_or(0)
 }
 
+/// Human-readable robustness table.
 pub fn render(rows: &[RobustnessRow]) -> String {
     let mut out = String::from(
         "== Robustness: co-design decision stability vs HLS estimate error\n",

@@ -55,6 +55,7 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Bind the model to a board's fabric clock and DMA bandwidth.
     pub fn from_board(board: &BoardConfig) -> Self {
         Self {
             fabric_mhz: board.fabric_freq_mhz,

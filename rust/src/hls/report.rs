@@ -8,14 +8,18 @@ use crate::sim::time::{Clock, Ps};
 /// Resource vector of one synthesized accelerator (7-series primitives).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Resources {
+    /// Look-up tables.
     pub luts: u64,
+    /// Flip-flops.
     pub ffs: u64,
+    /// DSP48 slices.
     pub dsps: u64,
     /// BRAM counted in 18 Kb halves (a BRAM36 = 2 × BRAM18).
     pub bram18: u64,
 }
 
 impl Resources {
+    /// The empty resource vector.
     pub const ZERO: Resources = Resources {
         luts: 0,
         ffs: 0,
@@ -23,6 +27,7 @@ impl Resources {
         bram18: 0,
     };
 
+    /// Component-wise sum.
     pub fn add(&self, o: &Resources) -> Resources {
         Resources {
             luts: self.luts + o.luts,
@@ -32,6 +37,7 @@ impl Resources {
         }
     }
 
+    /// Component-wise `<=` against a budget.
     pub fn fits_in(&self, budget: &Resources) -> bool {
         self.luts <= budget.luts
             && self.ffs <= budget.ffs
@@ -57,7 +63,9 @@ impl Resources {
 /// HLS report the paper's toolchain parses.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HlsReport {
+    /// Kernel the variant implements.
     pub kernel: String,
+    /// Unroll factor of the variant.
     pub unroll: u32,
     /// Achieved initiation interval of the pipelined innermost loop.
     pub ii: u32,
@@ -71,10 +79,12 @@ pub struct HlsReport {
     pub in_cycles: u64,
     /// Estimated cycles to DMA the outputs back (fabric clock domain).
     pub out_cycles: u64,
+    /// Resource usage of the synthesized accelerator.
     pub resources: Resources,
 }
 
 impl HlsReport {
+    /// The fabric clock domain the variant achieved.
     pub fn clock(&self) -> Clock {
         Clock::new(self.fmax_mhz)
     }

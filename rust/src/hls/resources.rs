@@ -9,7 +9,9 @@ use super::report::Resources;
 /// A programmable-logic part description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FpgaPart {
+    /// Part name (e.g. `xc7z045`).
     pub name: String,
+    /// Raw resource capacity of the part.
     pub budget: Resources,
     /// Fraction of the raw budget usable before place-and-route fails or
     /// timing collapses (routability headroom). Industry rule of thumb and

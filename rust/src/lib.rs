@@ -3,21 +3,59 @@
 //! Reproduction of *"Coarse-Grain Performance Estimator for Heterogeneous
 //! Parallel Computing Architectures like Zynq All-Programmable SoC"*
 //! (Jiménez-González et al., 2015) as a three-layer Rust + JAX + Pallas
-//! stack. See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! the paper-vs-measured record.
+//! stack, grown into a batch design-space-exploration system. See
+//! ARCHITECTURE.md for the module map and dataflow, DESIGN.md for the
+//! system inventory and EXPERIMENTS.md for the paper-vs-measured record.
 //!
-//! Layer map:
-//! * `coordinator` — OmpSs-equivalent task model, dependence tracking,
-//!   trace elaboration (§IV) and scheduling policies.
-//! * `sim` — discrete-event engine + the coarse-grain estimator model.
-//! * `board` — detailed Zynq board emulator ("real execution" stand-in).
-//! * `hls` — analytic Vivado-HLS latency/resource model + feasibility.
-//! * `apps` — the paper's applications (matmul, cholesky) + extras.
-//! * `trace` — basic-trace JSON-lines IO, DOT export, Paraver writer.
-//! * `runtime` — PJRT execution of the AOT-compiled JAX/Pallas kernels.
-//! * `config` — board/co-design TOML configs.
-//! * `metrics` — speedup tables, trend agreement, report rendering.
-//! * `util` — PRNG, stats, JSON substrate.
+//! ## Layer map
+//!
+//! * [`coordinator`] — OmpSs-equivalent task model, run-time dependence
+//!   tracking, trace elaboration (§IV) and scheduling policies.
+//! * [`sim`] — discrete-event engine + the coarse-grain estimator model.
+//! * [`board`] — detailed Zynq board emulator ("real execution" stand-in).
+//! * [`hls`] — analytic Vivado-HLS latency/resource model + feasibility.
+//! * [`apps`] — the paper's applications (matmul, cholesky) + extras
+//!   (lu, stencil).
+//! * [`dse`] — co-design space enumeration and ranking: the shared-context
+//!   parallel sweep engine ([`dse::sweep`]), the bound-guided pruned
+//!   enumeration ([`dse::prune`]) and batched multi-program suites
+//!   ([`dse::SweepSuite`]).
+//! * [`trace`] — basic-trace JSON-lines IO, DOT export, Paraver writer.
+//! * [`metrics`] — speedup tables, trend agreement, makespan lower bounds
+//!   ([`metrics::bounds`]), report rendering and figure-data export.
+//! * [`power`] — platform energy model (time / energy / EDP ranking).
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas kernels
+//!   (behind the `pjrt` feature; an API-compatible stub otherwise).
+//! * [`experiments`] — one harness per paper figure; the CLI, benches and
+//!   examples all call through here.
+//! * [`config`] — board/co-design TOML configs.
+//! * [`cli`] — the `zynq-estimator` command-line tool.
+//! * [`util`] — PRNG, stats, bench harness, JSON substrate (the build is
+//!   fully offline; no external general-purpose dependencies).
+//!
+//! ## Paper figures ↔ code
+//!
+//! | Paper artifact | Entry point | Bench |
+//! |---|---|---|
+//! | Fig. 3 (DMA scaling) | [`experiments::fig3`] | `benches/fig3_dma.rs` |
+//! | Fig. 5 (matmul sweep) | [`experiments::fig5`] | `benches/fig5_matmul.rs` |
+//! | Fig. 6 (analysis time) | [`experiments::analysis_time_matmul`] | `benches/fig6_analysis_time.rs` |
+//! | Fig. 7 (Paraver) | [`experiments::fig7`] | `benches/fig7_paraver.rs` |
+//! | Fig. 8 (task graph) | [`experiments::fig8`] | `benches/fig8_graph.rs` |
+//! | Fig. 9 (cholesky sweep) | [`experiments::fig9`] | `benches/fig9_cholesky.rs` |
+//! | §VII DSE outlook | [`dse::SweepContext::explore`], [`dse::SweepContext::explore_pruned`] | `benches/dse_suite.rs`, `benches/engine_hotpath.rs` |
+//!
+//! ## Quick taste
+//!
+//! Sweep the matmul co-design space and print the winner (see
+//! [`dse::SweepContext::explore`] and [`metrics::bounds::Bounds::lower_bound`]
+//! for runnable doctest examples):
+//!
+//! ```text
+//! cargo run --release -- dse --app matmul --n 512 --pruned
+//! cargo run --release -- dse --suite            # all four apps, one pool
+//! ```
+#![warn(missing_docs)]
 
 pub mod apps;
 pub mod board;

@@ -5,14 +5,21 @@
 //! Two classic bounds, evaluated against a concrete co-design:
 //! * **critical-path bound**: the dependence chain under each task's best
 //!   possible device time;
-//! * **work bound per device class**: total work assigned to a class
-//!   (under the must-run rules) divided by the number of servers, for SMP
-//!   cores, each kernel's accelerators, the shared submit resource and the
-//!   shared output channel.
+//! * **work bound per device class**: total work a class *must* execute
+//!   divided by the number of servers, for SMP cores, each kernel's
+//!   accelerators, and the shared output channel. Kernels that may run on
+//!   **either** device class (accelerated *and* SMP-eligible) get a fluid
+//!   bound instead: the summed best-case work of their tasks divided by
+//!   the combined server count — no fixed assignment is assumed, so the
+//!   bound stays valid however the scheduler splits them.
 //!
 //! The max of these is a valid lower bound for *any* schedule, so
-//! `makespan >= bound` is asserted by the property tests, and
-//! `makespan / bound` tells the analyst how much scheduling slack remains.
+//! `makespan >= bound` is asserted by the property tests, `makespan /
+//! bound` tells the analyst how much scheduling slack remains, and
+//! `dse::prune` uses the bound to skip candidates that provably cannot
+//! improve on an already-evaluated point (which is why validity for
+//! heterogeneous "+ smp" co-designs matters: an optimistic-but-invalid
+//! bound would prune winners).
 
 use crate::config::BoardConfig;
 use crate::coordinator::deps::DepGraph;
@@ -23,6 +30,7 @@ use crate::sim::time::{transfer_ps, us_to_ps, Ps};
 /// The individual bounds (all in picoseconds).
 #[derive(Clone, Debug)]
 pub struct Bounds {
+    /// Dependence-chain bound under best-case per-task device times.
     pub critical_path: Ps,
     /// Work bound of the busiest device class.
     pub device_work: Ps,
@@ -33,6 +41,31 @@ pub struct Bounds {
 }
 
 impl Bounds {
+    /// The combined makespan lower bound: the max of the critical-path,
+    /// device-work and creation-chain bounds. Valid for any schedule the
+    /// engine can produce, so `makespan >= lower_bound()` always holds.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use zynq_estimator::apps::matmul::Matmul;
+    /// use zynq_estimator::config::{BoardConfig, CoDesign};
+    /// use zynq_estimator::coordinator::deps::DepGraph;
+    /// use zynq_estimator::hls::FpgaPart;
+    /// use zynq_estimator::metrics::bounds::bounds;
+    /// use zynq_estimator::sim::engine::resolve_codesign;
+    ///
+    /// let board = BoardConfig::zynq706();
+    /// let program = Matmul::new(256, 64).build_program(&board);
+    /// let graph = DepGraph::build(&program);
+    /// let cd = CoDesign::new("1acc").with_accel("mxm64", 32);
+    /// let (accels, smp) =
+    ///     resolve_codesign(&program, &cd, &board, &FpgaPart::xc7z045()).unwrap();
+    /// let b = bounds(&program, &graph, &board, &accels, &smp);
+    /// let est = zynq_estimator::sim::estimate(&program, &cd, &board).unwrap();
+    /// assert!(b.lower_bound() > 0);
+    /// assert!(est.makespan >= b.lower_bound());
+    /// ```
     pub fn lower_bound(&self) -> Ps {
         self.critical_path
             .max(self.device_work)
@@ -79,36 +112,62 @@ pub fn bounds(
     };
     let critical_path = graph.critical_path(&|t| best_case(t));
 
-    // Per-class work bounds.
+    // Per-class work bounds. A kernel's tasks fall into three regimes:
+    // * no accelerator  -> they must run on the SMP cores;
+    // * accelerator only (not SMP-eligible) -> they must occupy an
+    //   accelerator for input DMA (when it rides the accel channel) plus
+    //   compute;
+    // * both devices -> no assignment can be assumed; each task occupies
+    //   *some* device for at least its best-case time, and at most
+    //   (accels + cores) devices serve the kernel, giving a fluid bound
+    //   that is valid for any split.
     let mut smp_work = 0u128;
     let mut accel_work = vec![0u128; n_kernels];
+    let mut hetero_work = vec![0u128; n_kernels];
     let mut out_bytes_total = 0u64;
     for task in &program.tasks {
         let k = task.kernel as usize;
         if accel_count[k] > 0 {
-            // Optimistic: assume everything eligible for an accelerator
-            // runs there (input DMA counted — it occupies the device).
             let in_bytes: u64 = task
                 .deps
                 .iter()
                 .filter(|d| d.dir.reads())
                 .map(|d| d.len)
                 .sum();
-            let occupancy = accel_task_ps[k] + transfer_ps(in_bytes, board.dma_bw_mbps);
-            accel_work[k] += occupancy as u128;
-            out_bytes_total += task
-                .deps
-                .iter()
-                .filter(|d| d.dir.writes())
-                .map(|d| d.len)
-                .sum::<u64>();
+            // Input DMA occupies the accelerator only on platforms whose
+            // input channels scale with the accelerators (ZC706, Fig. 3);
+            // otherwise inputs ride the shared channel and the occupancy
+            // is compute only.
+            let occupancy = if board.dma_in_scales {
+                accel_task_ps[k] + transfer_ps(in_bytes, board.dma_bw_mbps)
+            } else {
+                accel_task_ps[k]
+            };
+            if smp_eligible[k] {
+                let smp_ps = smp_clock.cycles_to_ps(task.smp_cycles);
+                hetero_work[k] += occupancy.min(smp_ps) as u128;
+            } else {
+                accel_work[k] += occupancy as u128;
+                out_bytes_total += task
+                    .deps
+                    .iter()
+                    .filter(|d| d.dir.writes())
+                    .map(|d| d.len)
+                    .sum::<u64>();
+            }
         } else {
             smp_work += smp_clock.cycles_to_ps(task.smp_cycles) as u128;
         }
     }
     let mut device_work = (smp_work / board.smp_cores as u128) as Ps;
     for k in 0..n_kernels {
-        if accel_count[k] > 0 {
+        if accel_count[k] == 0 {
+            continue;
+        }
+        if smp_eligible[k] {
+            let servers = accel_count[k] as u128 + board.smp_cores as u128;
+            device_work = device_work.max((hetero_work[k] / servers) as Ps);
+        } else {
             device_work = device_work.max((accel_work[k] / accel_count[k] as u128) as Ps);
         }
     }

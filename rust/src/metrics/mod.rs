@@ -12,8 +12,11 @@ use crate::util::kendall_tau;
 /// One configuration's timing under both models.
 #[derive(Clone, Debug)]
 pub struct ConfigRow {
+    /// Configuration name.
     pub name: String,
+    /// Coarse-grain estimator makespan, ms.
     pub estimator_ms: f64,
+    /// Board-emulator mean makespan, ms.
     pub board_ms: f64,
 }
 
@@ -22,12 +25,16 @@ pub struct ConfigRow {
 /// respect to the slowest case").
 #[derive(Clone, Debug)]
 pub struct SpeedupTable {
+    /// Per-configuration timings.
     pub rows: Vec<ConfigRow>,
+    /// Estimator speedups, normalized to the slowest configuration.
     pub est_speedup: Vec<f64>,
+    /// Board speedups, normalized to the slowest configuration.
     pub board_speedup: Vec<f64>,
 }
 
 impl SpeedupTable {
+    /// Build the table and its normalized speedup columns.
     pub fn build(rows: Vec<ConfigRow>) -> Self {
         assert!(!rows.is_empty());
         let est_slowest = rows
@@ -56,10 +63,12 @@ impl SpeedupTable {
         argmax(&self.est_speedup)
     }
 
+    /// Index of the best configuration under the board model.
     pub fn best_board(&self) -> usize {
         argmax(&self.board_speedup)
     }
 
+    /// Whether both models pick the same best configuration.
     pub fn best_agrees(&self) -> bool {
         self.best_estimator() == self.best_board()
     }

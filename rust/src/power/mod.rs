@@ -57,14 +57,20 @@ impl Default for PowerModel {
 /// Energy report for one simulated configuration.
 #[derive(Clone, Debug)]
 pub struct EnergyReport {
+    /// Simulated makespan, seconds.
     pub makespan_s: f64,
+    /// Static (always-on) energy, joules.
     pub static_j: f64,
+    /// ARM-core dynamic energy (incl. the DMA-submit software cost), joules.
     pub smp_dynamic_j: f64,
+    /// Accelerator dynamic energy, joules.
     pub accel_dynamic_j: f64,
+    /// DMA-channel dynamic energy, joules.
     pub dma_dynamic_j: f64,
 }
 
 impl EnergyReport {
+    /// Total energy, joules.
     pub fn total_j(&self) -> f64 {
         self.static_j + self.smp_dynamic_j + self.accel_dynamic_j + self.dma_dynamic_j
     }
@@ -75,6 +81,7 @@ impl EnergyReport {
         self.total_j() * self.makespan_s
     }
 
+    /// Mean power over the run, watts.
     pub fn mean_power_w(&self) -> f64 {
         if self.makespan_s > 0.0 {
             self.total_j() / self.makespan_s

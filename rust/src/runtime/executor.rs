@@ -23,8 +23,11 @@ pub type TaskFn<'a, C> = dyn Fn(&mut C, TaskId) -> anyhow::Result<()> + Sync + '
 /// Per-run statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
+    /// Tasks executed.
     pub tasks: usize,
+    /// End-to-end wall time, seconds.
     pub wall_seconds: f64,
+    /// Tasks executed per worker thread.
     pub per_worker: Vec<usize>,
 }
 

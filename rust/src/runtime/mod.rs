@@ -28,6 +28,7 @@ mod pjrt_backend {
 
     /// A compiled kernel executable with its I/O contract.
     pub struct KernelExe {
+        /// Artifact stem.
         pub name: String,
         exe: xla::PjRtLoadedExecutable,
         /// Expected input ranks/sizes, purely informational.
@@ -54,6 +55,7 @@ mod pjrt_backend {
             })
         }
 
+        /// PJRT platform name (e.g. `cpu`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -198,26 +200,32 @@ mod pjrt_stub {
     pub struct Runtime;
 
     impl Runtime {
+        /// Always fails: the backend is not compiled in.
         pub fn new(_artifacts_dir: &Path) -> Result<Self> {
             Err(unavailable())
         }
 
+        /// A placeholder platform name.
         pub fn platform(&self) -> String {
             "pjrt-unavailable".to_string()
         }
 
+        /// Always empty (no artifacts without a backend).
         pub fn available(&self) -> Vec<String> {
             Vec::new()
         }
 
+        /// Always fails: the backend is not compiled in.
         pub fn load(&self, _name: &str) -> Result<()> {
             Err(unavailable())
         }
 
+        /// Always fails: the backend is not compiled in.
         pub fn run_f32(&self, _name: &str, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
             Err(unavailable())
         }
 
+        /// Always fails: the backend is not compiled in.
         pub fn run_mxm(
             &self,
             _name: &str,
@@ -229,6 +237,7 @@ mod pjrt_stub {
             Err(unavailable())
         }
 
+        /// Always fails: the backend is not compiled in.
         pub fn time_kernel_ms(
             &self,
             _name: &str,
@@ -278,6 +287,7 @@ pub mod reference {
         }
     }
 
+    /// Copy block `(bi, bj)` of an `n`×`n` row-major matrix into a tile.
     pub fn copy_tile(n: usize, bs: usize, m: &[f32], bi: usize, bj: usize, tile: &mut [f32]) {
         for r in 0..bs {
             let src = (bi * bs + r) * n + bj * bs;
@@ -285,6 +295,7 @@ pub mod reference {
         }
     }
 
+    /// Write a tile back into block `(bi, bj)` of an `n`×`n` matrix.
     pub fn paste_tile(n: usize, bs: usize, m: &mut [f32], bi: usize, bj: usize, tile: &[f32]) {
         for r in 0..bs {
             let dst = (bi * bs + r) * n + bj * bs;

@@ -60,9 +60,13 @@ pub fn input_transfer_contended_ps(board: &BoardConfig, bytes: u64, accels: u32)
 /// vs 1 for a transfer of `bytes`, for inputs and outputs, under a model.
 #[derive(Clone, Copy, Debug)]
 pub struct DmaSpeedup {
+    /// Transfer size, bytes.
     pub bytes: u64,
+    /// Accelerator (channel) count compared against one.
     pub accels: u32,
+    /// Input-transfer speedup of `accels` channels vs one.
     pub input_speedup: f64,
+    /// Output-transfer speedup of `accels` channels vs one.
     pub output_speedup: f64,
 }
 

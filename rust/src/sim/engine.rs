@@ -47,6 +47,7 @@ pub enum DeviceLabel {
 }
 
 impl DeviceLabel {
+    /// Human-readable device name; accelerator rows show their kernel.
     pub fn display(&self, accel_kernels: &[String]) -> String {
         match self {
             DeviceLabel::Smp(n) => format!("SMP core {n}"),
@@ -66,45 +67,64 @@ impl DeviceLabel {
 /// What a timeline segment represents.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SegKind {
+    /// SMP-side task-creation cost (§IV creation-cost tasks).
     Creation,
+    /// Task body on an ARM core.
     SmpCompute,
     /// Accelerator occupancy: input DMA + compute (or compute only when
     /// inputs ride the shared channel).
     AccelTask,
+    /// DMA descriptor programming for inputs (shared submit resource).
     SubmitIn,
+    /// DMA descriptor programming for outputs.
     SubmitOut,
+    /// Input transfer on the shared channel (non-scaling platforms).
     DmaIn,
+    /// Output transfer on the shared channel.
     DmaOut,
 }
 
 /// One busy interval of one device — the unit Paraver rows are built from.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Segment {
+    /// The device the interval occupies.
     pub device: DeviceLabel,
+    /// What the interval represents (compute, DMA, submit, ...).
     pub kind: SegKind,
+    /// The task instance the interval belongs to.
     pub task: TaskId,
+    /// The task's kernel (denormalized for trace writers).
     pub kernel: KernelId,
+    /// Interval start, picoseconds.
     pub start: Ps,
+    /// Interval end, picoseconds.
     pub end: Ps,
 }
 
 /// Aggregate simulation output.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// End-to-end simulated time, picoseconds.
     pub makespan: Ps,
+    /// Per-device busy intervals (empty when recording is disabled).
     pub segments: Vec<Segment>,
+    /// Total busy time per device, picoseconds.
     pub device_busy: HashMap<DeviceLabel, Ps>,
+    /// Tasks executed on SMP cores.
     pub tasks_on_smp: usize,
+    /// Tasks executed on FPGA accelerators.
     pub tasks_on_accel: usize,
     /// Kernel names of the accelerator instances (for labeling).
     pub accel_kernels: Vec<String>,
 }
 
 impl SimResult {
+    /// Makespan in fractional milliseconds.
     pub fn makespan_ms(&self) -> f64 {
         crate::sim::time::ps_to_ms(self.makespan)
     }
 
+    /// Fraction of the makespan a device spent busy.
     pub fn busy_fraction(&self, dev: DeviceLabel) -> f64 {
         if self.makespan == 0 {
             return 0.0;
@@ -143,9 +163,13 @@ impl SimResult {
 
 /// Dispatch context handed to the timing model.
 pub struct TaskCtx<'a> {
+    /// The task being dispatched.
     pub task: TaskId,
+    /// The task's kernel.
     pub kernel: KernelId,
+    /// The whole program (task/kernel lookups).
     pub program: &'a TaskProgram,
+    /// The task's transfer footprint.
     pub xfers: Xfers,
     /// HLS report of the target accelerator (None for SMP execution).
     pub report: Option<&'a HlsReport>,
@@ -157,6 +181,7 @@ pub struct TaskCtx<'a> {
     /// Input dependences whose producer last ran on a different device
     /// class (coherence input for the board model).
     pub cross_device_inputs: u32,
+    /// Current simulated time.
     pub now: Ps,
 }
 
@@ -170,12 +195,15 @@ pub trait TimingModel {
         true
     }
 
+    /// Task-creation cost on the SMP (§IV creation-cost tasks).
     fn creation_ps(&mut self, board: &BoardConfig) -> Ps;
+    /// Task-body latency on an ARM core.
     fn smp_compute_ps(&mut self, ctx: &TaskCtx, board: &BoardConfig) -> Ps;
     /// Accelerator occupancy. When `input_in_occupancy` (platform scales
     /// input channels) this includes the input DMA time.
     fn accel_occupancy_ps(&mut self, ctx: &TaskCtx, board: &BoardConfig, input_in_occupancy: bool)
         -> Ps;
+    /// DMA-submit (descriptor programming) cost for `n_transfers` descriptors.
     fn submit_ps(&mut self, n_transfers: u32, board: &BoardConfig) -> Ps;
     /// Shared-channel transfer (output DMA always; input DMA when the
     /// platform does not scale input channels).
@@ -185,7 +213,9 @@ pub trait TimingModel {
 /// An accelerator instance resolved from a co-design.
 #[derive(Clone, Debug)]
 pub struct AccelInstance {
+    /// Kernel this instance serves.
     pub kernel: KernelId,
+    /// HLS variant report (latency + resources).
     pub report: HlsReport,
 }
 
@@ -370,6 +400,9 @@ pub struct Simulator<'a> {
 }
 
 impl<'a> Simulator<'a> {
+    /// Build a simulator for one (program, board, co-design, policy)
+    /// tuple. On sweep hot paths, keep it alive and [`Simulator::reset`]
+    /// it per co-design instead of constructing a new one.
     pub fn new(
         program: &'a TaskProgram,
         elab: &'a ElabProgram,
@@ -506,6 +539,22 @@ impl<'a> Simulator<'a> {
     /// runs (Paraver, validation) leave it on (the default).
     pub fn set_record_segments(&mut self, record: bool) {
         self.record_segments = record;
+    }
+
+    /// Hand a segment buffer from a previous [`SimResult`] back to the
+    /// simulator so the next recording run reuses its capacity instead of
+    /// growing a fresh vector from zero. `run_mut` moves the recorded
+    /// segments out into the result, which would otherwise leave the
+    /// simulator with an empty, capacity-less buffer — the one remaining
+    /// per-run allocation on trace-producing (Paraver / board-emulator)
+    /// repetition loops. The buffer is cleared; the recorded contents of
+    /// subsequent runs are bit-identical either way (regression-tested in
+    /// `sim::tests` and `engine::tests`).
+    pub fn recycle_segments(&mut self, mut segments: Vec<Segment>) {
+        segments.clear();
+        if segments.capacity() > self.segments.capacity() {
+            self.segments = segments;
+        }
     }
 
     fn push_event(&mut self, time: Ps, ev: Ev) {
@@ -1254,6 +1303,36 @@ mod tests {
         assert_eq!(a.device_busy, b.device_busy);
         assert_eq!(a.device_busy, fresh.device_busy);
         assert_eq!(b.tasks_on_accel, fresh.tasks_on_accel);
+    }
+
+    #[test]
+    fn recycled_segment_pool_reproduces_traces() {
+        // Recording runs that hand their segment vector back via
+        // `recycle_segments` must produce bit-identical timelines while
+        // reusing the buffer's capacity.
+        let board = BoardConfig::zynq706();
+        let p = chain_program(20, Targets::FPGA);
+        let cd = CoDesign::new("1acc").with_accel("k", 4);
+        let graph = DepGraph::build(&p);
+        let elab = ElabProgram::build(&p, &graph);
+        let (accels, smp) =
+            resolve_codesign(&p, &cd, &board, &FpgaPart::xc7z045()).unwrap();
+        let fresh = run_config(&p, &cd, &board);
+
+        let mut sim = Simulator::new(&p, &elab, &board, &accels, &smp, Policy::Greedy);
+        let mut model = EstimatorModel::new(&board);
+        let first = sim.run_mut(&mut model);
+        assert_eq!(first.segments, fresh.segments);
+        let recycled_cap = first.segments.capacity();
+        sim.recycle_segments(first.segments);
+        sim.reset(&accels, &smp);
+        let second = sim.run_mut(&mut model);
+        assert_eq!(second.segments, fresh.segments, "recycled run diverged");
+        assert_eq!(second.makespan, fresh.makespan);
+        assert!(
+            second.segments.capacity() <= recycled_cap.max(fresh.segments.capacity()),
+            "recycling must not grow the pool beyond one run's footprint"
+        );
     }
 
     #[test]

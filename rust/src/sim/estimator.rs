@@ -16,6 +16,7 @@ pub struct EstimatorModel {
 }
 
 impl EstimatorModel {
+    /// Bind the model to a board's SMP clock.
     pub fn new(board: &BoardConfig) -> Self {
         Self {
             smp_clock: board.smp_clock(),

@@ -77,18 +77,77 @@ pub fn emulate(
 /// Run the board emulator `reps` times with distinct seeds and return the
 /// mean makespan in ms — mirroring the paper's "average elapsed execution
 /// time of 10 application executions".
+///
+/// The program analysis (dependence graph, elaboration, co-design
+/// resolution) is shared across the repetitions, and the recording runs
+/// reuse one [`Simulator`] — including its segment buffer, handed back via
+/// [`Simulator::recycle_segments`] between runs — so a 10-rep board
+/// average allocates its timeline storage once instead of ten times. The
+/// per-rep results are bit-identical to running [`emulate`] with the same
+/// seeded board (regression-tested below): only `emu.seed` varies between
+/// repetitions and the engine itself never reads the emulator parameters.
 pub fn emulate_mean_ms(
     program: &TaskProgram,
     codesign: &CoDesign,
     board: &BoardConfig,
     reps: u32,
 ) -> anyhow::Result<f64> {
+    let graph = DepGraph::build(program);
+    let elab = ElabProgram::build(program, &graph);
+    let (accels, smp_eligible) =
+        resolve_codesign(program, codesign, board, &FpgaPart::xc7z045())?;
+    let mut sim = Simulator::new(program, &elab, board, &accels, &smp_eligible, Policy::Greedy);
     let mut total = 0.0;
     for i in 0..reps {
         let mut b = board.clone();
         b.emu.seed = board.emu.seed.wrapping_add(i as u64 * 0x9E37_79B9);
-        let r = emulate(program, codesign, &b)?;
+        let mut model = BoardModel::new(&b);
+        if i > 0 {
+            sim.reset(&accels, &smp_eligible);
+        }
+        let r = sim.run_mut(&mut model);
         total += r.makespan_ms();
+        sim.recycle_segments(r.segments);
     }
     Ok(total / reps as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+
+    #[test]
+    fn pooled_board_mean_matches_per_run_emulation() {
+        // The simulator-reuse + segment-pool path must reproduce the naive
+        // "fresh emulate() per rep" mean bit for bit.
+        let board = BoardConfig::zynq706();
+        let program = Matmul::new(256, 64).build_program(&board);
+        let cd = crate::config::CoDesign::new("2acc")
+            .with_accel("mxm64", 32)
+            .with_accel("mxm64", 32);
+        let reps = 4;
+        let mut total = 0.0;
+        for i in 0..reps {
+            let mut b = board.clone();
+            b.emu.seed = board.emu.seed.wrapping_add(i as u64 * 0x9E37_79B9);
+            total += emulate(&program, &cd, &b).unwrap().makespan_ms();
+        }
+        let naive = total / reps as f64;
+        let pooled = emulate_mean_ms(&program, &cd, &board, reps as u32).unwrap();
+        assert_eq!(naive.to_bits(), pooled.to_bits());
+    }
+
+    #[test]
+    fn pooled_board_runs_keep_segment_recording_on() {
+        // emulate_mean_ms is a *recording* loop (the board emulator is the
+        // stand-in for real execution, whose traces Fig. 7 visualizes):
+        // each rep must still produce a full timeline.
+        let board = BoardConfig::zynq706();
+        let program = Matmul::new(256, 64).build_program(&board);
+        let cd = crate::config::CoDesign::new("1acc").with_accel("mxm64", 32);
+        let r = emulate(&program, &cd, &board).unwrap();
+        assert!(!r.segments.is_empty());
+        assert!(emulate_mean_ms(&program, &cd, &board, 2).unwrap() > 0.0);
+    }
 }

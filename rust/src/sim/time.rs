@@ -10,18 +10,24 @@
 /// Simulated time in picoseconds. u64 covers ~213 days of simulated time.
 pub type Ps = u64;
 
+/// Picoseconds per nanosecond.
 pub const PS_PER_NS: u64 = 1_000;
+/// Picoseconds per microsecond.
 pub const PS_PER_US: u64 = 1_000_000;
+/// Picoseconds per millisecond.
 pub const PS_PER_MS: u64 = 1_000_000_000;
+/// Picoseconds per second.
 pub const PS_PER_S: u64 = 1_000_000_000_000;
 
 /// A clock domain with a frequency in MHz.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Clock {
+    /// Frequency in MHz.
     pub freq_mhz: f64,
 }
 
 impl Clock {
+    /// A clock domain at `freq_mhz` (must be positive).
     pub fn new(freq_mhz: f64) -> Self {
         assert!(freq_mhz > 0.0, "clock frequency must be positive");
         Self { freq_mhz }

@@ -23,7 +23,9 @@ use crate::sim::engine::{DeviceLabel, SegKind, SimResult};
 
 /// Event type ids (Extrae convention: user events in the 4xxxxxxx range).
 pub const EV_KERNEL: u64 = 40_000_001;
+/// Event type: segment kind (creation/compute/submit/DMA).
 pub const EV_SEGKIND: u64 = 40_000_002;
+/// Event type: task instance id.
 pub const EV_TASKID: u64 = 40_000_003;
 
 fn seg_state(kind: SegKind) -> u32 {

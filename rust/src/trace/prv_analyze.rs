@@ -12,18 +12,26 @@ use std::collections::BTreeMap;
 /// Per-row (device) statistics extracted from a trace.
 #[derive(Clone, Debug)]
 pub struct RowStats {
+    /// Row (thread) index in the trace.
     pub row: u32,
+    /// Row label from the `.row` file (or generated).
     pub label: String,
+    /// Total busy time, ns.
     pub busy_ns: u64,
+    /// Busy time over trace duration.
     pub busy_fraction: f64,
+    /// Longest idle gap, ns.
     pub longest_idle_ns: u64,
+    /// Number of busy segments.
     pub segments: usize,
 }
 
 /// Whole-trace analysis.
 #[derive(Clone, Debug)]
 pub struct PrvAnalysis {
+    /// Trace duration, ns.
     pub duration_ns: u64,
+    /// Per-row statistics, trace order.
     pub rows: Vec<RowStats>,
 }
 
@@ -35,6 +43,7 @@ impl PrvAnalysis {
             .max_by(|a, b| a.busy_fraction.partial_cmp(&b.busy_fraction).unwrap())
     }
 
+    /// Human-readable report (the `analyze-prv` CLI output).
     pub fn render(&self) -> String {
         let mut out = format!(
             "trace duration {:.3} ms, {} rows\n",

@@ -19,8 +19,11 @@ pub enum Severity {
 }
 
 #[derive(Clone, Debug)]
+/// One lint finding.
 pub struct Finding {
+    /// How bad it is.
     pub severity: Severity,
+    /// What is wrong.
     pub message: String,
 }
 

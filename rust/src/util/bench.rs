@@ -8,10 +8,15 @@ use std::time::Instant;
 /// Result of one benchmark: wall-clock stats over the measured iterations.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Measured iterations (after warm-up).
     pub iters: u32,
+    /// Mean wall-clock per iteration, ms.
     pub mean_ms: f64,
+    /// Sample standard deviation, ms.
     pub stdev_ms: f64,
+    /// Fastest iteration, ms (the figure benches compare minima).
     pub min_ms: f64,
 }
 

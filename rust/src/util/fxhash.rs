@@ -65,8 +65,11 @@ impl Hasher for FxHasher {
     }
 }
 
+/// `BuildHasher` for [`FxHasher`].
 pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+/// `std::collections::HashMap` keyed with FxHash.
 pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+/// `std::collections::HashSet` keyed with FxHash.
 pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
 
 #[cfg(test)]

@@ -13,18 +13,25 @@ use std::fmt;
 /// deterministic (stable diffs in golden tests).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// Boolean.
     Bool(bool),
     /// Integer fast path — preserves u64/i64 exactly (addresses, cycle
     /// counts). Writers emit it without a decimal point.
     Int(i64),
+    /// Floating-point number.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Value>),
+    /// Object (keys sorted, deterministic output).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The value as `i64`, if it is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -33,10 +40,12 @@ impl Value {
         }
     }
 
+    /// The value as `u64`, if it is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_i64().and_then(|i| u64::try_from(i).ok())
     }
 
+    /// The value as `f64` (integers convert).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Int(i) => Some(*i as f64),
@@ -45,6 +54,7 @@ impl Value {
         }
     }
 
+    /// The value as a string slice, if it is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -52,6 +62,7 @@ impl Value {
         }
     }
 
+    /// The value as a bool, if it is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -59,6 +70,7 @@ impl Value {
         }
     }
 
+    /// The value as an array slice, if it is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -66,6 +78,7 @@ impl Value {
         }
     }
 
+    /// The value as an object map, if it is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Some(m),
@@ -146,6 +159,7 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Build an array value.
 pub fn arr(items: Vec<Value>) -> Value {
     Value::Arr(items)
 }
@@ -192,8 +206,11 @@ impl From<bool> for Value {
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
+/// Parse failure: byte position and message.
 pub struct ParseError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

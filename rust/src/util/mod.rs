@@ -18,11 +18,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed a SplitMix64 stream.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -41,6 +43,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed the generator (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {
         let mut sm = SplitMix64::new(seed);
         Self {
@@ -49,6 +52,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

@@ -1,0 +1,229 @@
+//! Pruning-soundness properties: on randomized small spaces, the pruned
+//! sweep (`SweepContext::explore_pruned`) must return the same best point
+//! and the same time-energy Pareto front as the exhaustive sweep
+//! (`SweepContext::explore`) while never evaluating more points — the
+//! losslessness contract of `dse::prune`. Uses the repository's seeded
+//! forall harness (no external proptest crate), same style as
+//! `proptests.rs`.
+
+use zynq_estimator::apps::{cholesky::Cholesky, matmul::Matmul};
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::coordinator::task::{
+    Dep, KernelDecl, KernelProfile, TaskProgram, Targets,
+};
+use zynq_estimator::dse::{
+    pareto_front_coords as front_coords, DseSpace, KernelSpace, Objective, SweepContext,
+};
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::util::Rng;
+
+fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Randomize a space over a program's FPGA-capable kernels: random unroll
+/// subsets (including factors past pipeline saturation for small trip
+/// counts, which is what arms the dominance cut), 1-2 instances, random
+/// "+ smp" consideration.
+fn random_space(rng: &mut Rng, program: &TaskProgram) -> DseSpace {
+    let pool = [4u32, 8, 16, 32, 64, 128];
+    let kernels = program
+        .kernels
+        .iter()
+        .filter(|k| k.targets.fpga)
+        .map(|k| {
+            let n_unrolls = rng.gen_range(2, 5) as usize;
+            let mut unrolls: Vec<u32> = Vec::new();
+            while unrolls.len() < n_unrolls {
+                let u = pool[rng.gen_range(0, pool.len() as u64) as usize];
+                if !unrolls.contains(&u) {
+                    unrolls.push(u);
+                }
+            }
+            KernelSpace {
+                kernel: k.name.clone(),
+                unrolls,
+                max_instances: rng.gen_range(1, 3) as u32,
+                try_smp: k.targets.smp && rng.next_f64() < 0.5,
+            }
+        })
+        .collect();
+    DseSpace { kernels }
+}
+
+/// A synthetic program whose kernels have small pipelined trip counts, so
+/// unrolls beyond saturation are strictly dominated (more cycles, more
+/// area) — the regime the dominance cut exists for.
+fn tiny_trip_program(rng: &mut Rng) -> TaskProgram {
+    let mut p = TaskProgram::new("tiny");
+    let n_kernels = rng.gen_range(1, 3);
+    for k in 0..n_kernels {
+        p.add_kernel(KernelDecl {
+            name: format!("t{k}"),
+            targets: if rng.next_f64() < 0.5 {
+                Targets::BOTH
+            } else {
+                Targets::FPGA
+            },
+            profile: KernelProfile {
+                flops: rng.gen_range(100, 2_000),
+                inner_trip: rng.gen_range(20, 120),
+                in_bytes: rng.gen_range(2_048, 32_768),
+                out_bytes: rng.gen_range(1_024, 16_384),
+                dtype_bytes: 4,
+                divsqrt: false,
+            },
+        });
+    }
+    let n_tasks = rng.gen_range(4, 25);
+    for i in 0..n_tasks {
+        let kernel = rng.gen_range(0, n_kernels) as u16;
+        p.add_task(
+            kernel,
+            rng.gen_range(10_000, 500_000),
+            vec![Dep::inout(0x1000 + (i % 6) * 0x1000, 4_096)],
+        );
+    }
+    p
+}
+
+fn check_lossless(
+    seed: u64,
+    ctx: &SweepContext<'_>,
+    space: &DseSpace,
+    objective: Objective,
+) {
+    let exhaustive = ctx.explore(space, objective, 2);
+    let (pruned, stats) = ctx.explore_pruned(space, objective, 2);
+    assert_eq!(
+        stats.evaluated as usize,
+        pruned.len(),
+        "seed {seed}: stats disagree with results"
+    );
+    assert!(
+        stats.evaluated <= stats.feasible_points,
+        "seed {seed}: {stats:?}"
+    );
+    assert_eq!(
+        stats.feasible_points as usize,
+        ctx.enumerate(space).len(),
+        "seed {seed}: feasible accounting"
+    );
+    if exhaustive.is_empty() {
+        assert!(pruned.is_empty(), "seed {seed}");
+        return;
+    }
+    assert!(!pruned.is_empty(), "seed {seed}: pruned away everything");
+    assert_eq!(
+        exhaustive[0].score(objective).to_bits(),
+        pruned[0].score(objective).to_bits(),
+        "seed {seed}: best point diverged ({} vs {})",
+        exhaustive[0].codesign.name,
+        pruned[0].codesign.name
+    );
+    assert_eq!(
+        front_coords(&exhaustive),
+        front_coords(&pruned),
+        "seed {seed}: Pareto front diverged"
+    );
+}
+
+#[test]
+fn prop_pruned_sweep_lossless_on_app_spaces() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let matmul = Matmul::new(256, 64).build_program(&board);
+    let cholesky = Cholesky::new(192, 64).build_program(&board);
+    let objectives = [Objective::Time, Objective::Energy, Objective::Edp];
+    forall(8, 0x5C07, |seed, rng| {
+        for program in [&matmul, &cholesky] {
+            let space = random_space(rng, program);
+            let ctx = SweepContext::for_space(program, &board, &part, &space);
+            let objective = objectives[(seed % 3) as usize];
+            check_lossless(seed, &ctx, &space, objective);
+        }
+    });
+}
+
+#[test]
+fn prop_pruned_sweep_lossless_with_dominated_variants() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let objectives = [Objective::Time, Objective::Energy, Objective::Edp];
+    forall(10, 0xD0_17, |seed, rng| {
+        let program = tiny_trip_program(rng);
+        let space = random_space(rng, &program);
+        let ctx = SweepContext::for_space(&program, &board, &part, &space);
+        let objective = objectives[(seed % 3) as usize];
+        check_lossless(seed, &ctx, &space, objective);
+    });
+}
+
+#[test]
+fn prop_pruned_sweep_deterministic_across_worker_counts() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Cholesky::new(256, 64).build_program(&board);
+    let space = DseSpace::from_program(&program);
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let (base, base_stats) = ctx.explore_pruned(&space, Objective::Time, 1);
+    assert!(base_stats.bound_cut > 0, "{base_stats:?}");
+    for workers in [2, 3, 8] {
+        let (pts, stats) = ctx.explore_pruned(&space, Objective::Time, workers);
+        assert_eq!(stats, base_stats, "workers={workers}");
+        assert_eq!(pts.len(), base.len(), "workers={workers}");
+        for (a, b) in pts.iter().zip(&base) {
+            assert_eq!(a.codesign.name, b.codesign.name, "workers={workers}");
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "workers={workers}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "workers={workers}");
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits(), "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn suite_results_bit_identical_to_standalone_sweeps() {
+    // The batched shared-pool suite must not change any application's
+    // output relative to sweeping it alone — exhaustive and pruned.
+    use zynq_estimator::dse::SweepSuite;
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let programs = vec![
+        ("matmul", Matmul::new(256, 64).build_program(&board)),
+        ("cholesky", Cholesky::new(256, 64).build_program(&board)),
+    ];
+    let mut suite = SweepSuite::new();
+    for (name, program) in &programs {
+        suite.push(name, program, &board, &part, DseSpace::from_program(program));
+    }
+    for workers in [1, 4] {
+        let batched = suite.explore(Objective::Time, workers);
+        let batched_pruned = suite.explore_pruned(Objective::Time, workers);
+        for (i, (_, program)) in programs.iter().enumerate() {
+            let space = DseSpace::from_program(program);
+            let ctx = SweepContext::for_space(program, &board, &part, &space);
+            let alone = ctx.explore(&space, Objective::Time, workers);
+            assert_eq!(alone.len(), batched[i].points.len(), "workers={workers}");
+            for (a, b) in alone.iter().zip(&batched[i].points) {
+                assert_eq!(a.codesign.name, b.codesign.name, "workers={workers}");
+                assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "workers={workers}");
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "workers={workers}");
+            }
+            let (alone_pruned, alone_stats) = ctx.explore_pruned(&space, Objective::Time, workers);
+            assert_eq!(alone_stats, batched_pruned[i].stats, "workers={workers}");
+            assert_eq!(
+                alone_pruned.len(),
+                batched_pruned[i].points.len(),
+                "workers={workers}"
+            );
+            for (a, b) in alone_pruned.iter().zip(&batched_pruned[i].points) {
+                assert_eq!(a.codesign.name, b.codesign.name, "workers={workers}");
+                assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "workers={workers}");
+            }
+        }
+    }
+}
