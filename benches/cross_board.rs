@@ -1,0 +1,89 @@
+//! Cross-board DSE benchmark — the platform as a swept axis.
+//!
+//! Sweeps matmul + cholesky over the zynq702/zynq706 board axis through
+//! one shared pool, exhaustively and with both pruned modes (per-board
+//! lossless, and with the cross-board incumbent), asserting the
+//! losslessness contracts via `experiments::cross_board_dse`. Emits
+//! `BENCH_cross_board.json` — per-(board, app) point accounting plus the
+//! "which board wins at which budget" tables — which CI uploads in the
+//! `bench-results` artifact and gates with `bench-check`.
+
+use zynq_estimator::board::BoardSpace;
+use zynq_estimator::dse::default_workers;
+use zynq_estimator::experiments;
+use zynq_estimator::metrics::export::cross_board_json;
+use zynq_estimator::util::json::{obj, parse, Value};
+
+fn main() {
+    let boards = BoardSpace::resolve(&["zynq702", "zynq706"]).expect("built-in boards");
+    let workers = default_workers();
+    let n = 512;
+    let apps = ["matmul", "cholesky"];
+    let r = experiments::cross_board_dse(n, &boards, &apps, workers)
+        .expect("cross-board sweep must be lossless");
+
+    println!(
+        "== Cross-board DSE (n = {n}, {} boards x {} apps, {workers} workers, one shared pool)",
+        boards.targets.len(),
+        apps.len()
+    );
+    println!(
+        "{:>10} {:>16} {:>9} {:>9} {:>10} {:>10}  {}",
+        "app", "board", "feasible", "pruned", "bound cut", "global cut", "best co-design"
+    );
+    for (p, g) in r.results.iter().zip(&r.global_results) {
+        println!(
+            "{:>10} {:>16} {:>9} {:>9} {:>10} {:>10}  {}",
+            p.app,
+            p.board,
+            p.stats.feasible_points,
+            p.stats.evaluated,
+            p.stats.bound_cut,
+            g.stats.global_cut,
+            p.points
+                .first()
+                .map(|pt| pt.codesign.name.as_str())
+                .unwrap_or("-"),
+        );
+    }
+    for (app, rows) in &r.winners {
+        print!("{}", zynq_estimator::dse::cross::render_winner_table(app, rows));
+    }
+    println!(
+        "exhaustive {:.3} s, pruned {:.3} s ({:.2}x), global-cut {:.3} s ({:.2}x)",
+        r.exhaustive_s,
+        r.pruned_s,
+        r.exhaustive_s / r.pruned_s.max(1e-12),
+        r.global_s,
+        r.exhaustive_s / r.global_s.max(1e-12),
+    );
+
+    let detail = parse(&cross_board_json(&r.results, &r.winners))
+        .expect("own export must be valid JSON");
+    let global_cut: u64 = r.global_results.iter().map(|x| x.stats.global_cut).sum();
+    let out = obj(vec![
+        ("n", n.into()),
+        ("workers", r.workers.into()),
+        (
+            "boards",
+            Value::Arr(
+                boards
+                    .targets
+                    .iter()
+                    .map(|t| t.name.as_str().into())
+                    .collect(),
+            ),
+        ),
+        ("exhaustive_s", r.exhaustive_s.into()),
+        ("pruned_s", r.pruned_s.into()),
+        ("global_s", r.global_s.into()),
+        ("speedup", (r.exhaustive_s / r.pruned_s.max(1e-12)).into()),
+        ("global_cut_total", global_cut.into()),
+        ("cross_board", detail),
+    ])
+    .to_json();
+    match std::fs::write("BENCH_cross_board.json", &out) {
+        Ok(()) => println!("wrote BENCH_cross_board.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_cross_board.json: {e}"),
+    }
+}

@@ -18,7 +18,31 @@ pub mod matmul;
 pub mod stencil;
 
 use crate::config::BoardConfig;
-use crate::coordinator::task::KernelProfile;
+use crate::coordinator::task::{KernelProfile, TaskProgram};
+
+/// The canonical benchmark-suite application list, in sweep order — the
+/// one definition behind `dse --suite`, `dse --boards --suite` and the
+/// suite experiment harness.
+pub const SUITE_APPS: [&str; 4] = ["matmul", "cholesky", "lu", "stencil"];
+
+/// Build an application's [`TaskProgram`] by name — the one shared
+/// resolver behind the CLI (`--app`), the experiment harnesses and the
+/// cross-board sweeps, so the app-name → constructor mapping (including
+/// the stencil's halo depth) lives in exactly one place.
+pub fn build_app_program(
+    app: &str,
+    n: u64,
+    bs: u64,
+    board: &BoardConfig,
+) -> anyhow::Result<TaskProgram> {
+    Ok(match app {
+        "matmul" => matmul::Matmul::new(n, bs).build_program(board),
+        "cholesky" => cholesky::Cholesky::new(n, bs).build_program(board),
+        "lu" => lu::Lu::new(n, bs).build_program(board),
+        "stencil" => stencil::Stencil::new(n, bs, 4).build_program(board),
+        other => anyhow::bail!("unknown app '{other}' (matmul|cholesky|lu|stencil)"),
+    })
+}
 
 /// Model of the instrumented sequential execution's per-task ARM cycle
 /// count — the stand-in for the gettimeofday instrumentation of §V.

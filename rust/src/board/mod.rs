@@ -20,6 +20,10 @@
 //! Everything is seeded and deterministic given `EmuConfig::seed`, so
 //! "board measurements" are reproducible.
 
+pub mod space;
+
+pub use space::{BoardSpace, BoardTarget};
+
 use crate::util::fxhash::FxHashSet;
 
 use crate::config::BoardConfig;
@@ -148,7 +152,7 @@ mod tests {
         (p, BoardConfig::zynq706())
     }
 
-    fn ctx<'a>(p: &'a TaskProgram, streams: u32, cross: u32) -> TaskCtx<'a> {
+    fn ctx(p: &TaskProgram, streams: u32, cross: u32) -> TaskCtx<'_> {
         TaskCtx {
             task: 0,
             kernel: 0,

@@ -1,0 +1,164 @@
+//! The board axis of the design space — named platform candidates.
+//!
+//! The paper's §I outlook (and the cross-board study) makes the point that
+//! the *platform* is part of the co-design decision: the best
+//! hardware/software split shifts between a ZC702-class, a ZC706-class and
+//! an UltraScale+-class device. A [`BoardSpace`] makes that axis explicit:
+//! a list of named [`BoardTarget`]s — each a ([`BoardConfig`],
+//! [`FpgaPart`]) pair — that the cross-board sweep
+//! ([`crate::dse::CrossBoardSweep`]) expands into per-board evaluation
+//! contexts.
+//!
+//! Targets resolve from:
+//! * **built-in presets** by name: `zynq702`, `zynq706`, `zynq-ultrascale`;
+//! * **TOML board files** (`configs/*.toml`): the usual [`BoardConfig`]
+//!   keys plus an optional `[fabric] part = "xc7z020"` naming the FPGA
+//!   part (default: `xc7z045`).
+
+use std::path::Path;
+
+use crate::config::BoardConfig;
+use crate::hls::FpgaPart;
+
+/// One platform candidate of the board axis: a board description and the
+/// FPGA part its co-designs must fit.
+#[derive(Clone, Debug)]
+pub struct BoardTarget {
+    /// Display name (CLI tables, result rows) — the board config's name.
+    pub name: String,
+    /// Platform description (clocks, DMA, runtime costs).
+    pub board: BoardConfig,
+    /// Programmable-logic budget of the platform.
+    pub part: FpgaPart,
+}
+
+impl BoardTarget {
+    /// Bundle a board with its part, named after the board.
+    pub fn new(board: BoardConfig, part: FpgaPart) -> Self {
+        Self {
+            name: board.name.clone(),
+            board,
+            part,
+        }
+    }
+
+    /// A built-in preset by name: `zynq702` (ZC702 / XC7Z020), `zynq706`
+    /// (ZC706 / XC7Z045) or `zynq-ultrascale` (ZCU102-class / XCZU9EG).
+    pub fn builtin(name: &str) -> Option<Self> {
+        match name {
+            "zynq702" => Some(Self::new(BoardConfig::zynq702(), FpgaPart::xc7z020())),
+            "zynq706" => Some(Self::new(BoardConfig::zynq706(), FpgaPart::xc7z045())),
+            "zynq-ultrascale" => Some(Self::new(
+                BoardConfig::zynq_ultrascale(),
+                FpgaPart::xczu9eg(),
+            )),
+            _ => None,
+        }
+    }
+
+    /// Load a target from a TOML board file. The board keys follow
+    /// [`BoardConfig::from_toml`]; the part comes from `[fabric] part`
+    /// (a built-in part name, default `xc7z045`).
+    pub fn from_toml_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse a target from TOML text (see [`BoardTarget::from_toml_file`]).
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let board = BoardConfig::from_toml(text)?;
+        let doc = crate::config::toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        // `BoardConfig::from_toml` silently defaults a missing `name` to
+        // "zynq706" — fine for `--board`, but an axis entry's name labels
+        // every result row and is the duplicate key, so require it.
+        anyhow::ensure!(
+            doc.get("name").is_some(),
+            "board-axis TOML files must set a `name` (it labels the result rows)"
+        );
+        let part_name = doc.str_or("fabric.part", "xc7z045");
+        let part = FpgaPart::by_name(&part_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown FPGA part '{part_name}' in board file"))?;
+        Ok(Self::new(board, part))
+    }
+}
+
+/// The swept board axis: an ordered, de-duplicated list of targets.
+#[derive(Clone, Debug, Default)]
+pub struct BoardSpace {
+    /// The platform candidates, in resolution order.
+    pub targets: Vec<BoardTarget>,
+}
+
+impl BoardSpace {
+    /// Resolve a list of tokens into targets. Each token is either a
+    /// built-in preset name or a path to a TOML board file; tokens may
+    /// themselves be comma-separated lists (the CLI passes `--boards
+    /// zynq702,zynq706` through unsplit). Duplicate names are rejected —
+    /// a board axis with two identical entries would double-count every
+    /// candidate.
+    pub fn resolve(tokens: &[&str]) -> anyhow::Result<Self> {
+        let mut targets: Vec<BoardTarget> = Vec::new();
+        for token in tokens.iter().flat_map(|t| t.split(',')) {
+            let token = token.trim();
+            if token.is_empty() {
+                continue;
+            }
+            let target = match BoardTarget::builtin(token) {
+                Some(t) => t,
+                None if token.ends_with(".toml") => {
+                    BoardTarget::from_toml_file(Path::new(token))?
+                }
+                None => anyhow::bail!(
+                    "unknown board '{token}' (built-ins: zynq702|zynq706|zynq-ultrascale, \
+                     or a path to a .toml board file)"
+                ),
+            };
+            if targets.iter().any(|t| t.name == target.name) {
+                anyhow::bail!("duplicate board '{}' in the board axis", target.name);
+            }
+            targets.push(target);
+        }
+        anyhow::ensure!(!targets.is_empty(), "the board axis is empty");
+        Ok(Self { targets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_presets_resolve() {
+        let s = BoardSpace::resolve(&["zynq702,zynq706", "zynq-ultrascale"]).unwrap();
+        assert_eq!(s.targets.len(), 3);
+        assert_eq!(s.targets[0].name, "zynq702");
+        assert_eq!(s.targets[0].part.name, "xc7z020");
+        assert_eq!(s.targets[1].part.name, "xc7z045");
+        assert_eq!(s.targets[2].part.name, "xczu9eg");
+    }
+
+    #[test]
+    fn unknown_and_duplicate_boards_rejected() {
+        assert!(BoardSpace::resolve(&["zynq9000"]).is_err());
+        assert!(BoardSpace::resolve(&["zynq706", "zynq706"]).is_err());
+        assert!(BoardSpace::resolve(&[""]).is_err());
+    }
+
+    #[test]
+    fn toml_target_reads_part() {
+        let t = BoardTarget::from_toml(
+            "name = \"lab-z020\"\n[fabric]\nfreq_mhz = 100\npart = \"xc7z020\"\n",
+        )
+        .unwrap();
+        assert_eq!(t.name, "lab-z020");
+        assert_eq!(t.part.name, "xc7z020");
+        assert_eq!(t.board.fabric_freq_mhz, 100.0);
+        // Default part is the paper's.
+        let d = BoardTarget::from_toml("name = \"x\"\n").unwrap();
+        assert_eq!(d.part.name, "xc7z045");
+        // Unknown parts are an error, not a silent default.
+        assert!(BoardTarget::from_toml("name = \"x\"\n[fabric]\npart = \"xc9999\"\n").is_err());
+        // A nameless board file would silently label rows "zynq706".
+        assert!(BoardTarget::from_toml("[fabric]\npart = \"xc7z020\"\n").is_err());
+    }
+}

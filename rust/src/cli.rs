@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use crate::apps::{cholesky, lu, matmul, stencil};
+use crate::apps::{cholesky, matmul, stencil};
 use crate::config::{AccelSpec, BoardConfig, CoDesign};
 use crate::coordinator::sched::Policy;
 use crate::coordinator::task::TaskProgram;
@@ -97,13 +97,7 @@ fn build_app_program(
     bs: u64,
     board: &BoardConfig,
 ) -> anyhow::Result<TaskProgram> {
-    Ok(match app {
-        "matmul" => matmul::Matmul::new(n, bs).build_program(board),
-        "cholesky" => cholesky::Cholesky::new(n, bs).build_program(board),
-        "lu" => lu::Lu::new(n, bs).build_program(board),
-        "stencil" => stencil::Stencil::new(n, bs, 4).build_program(board),
-        other => anyhow::bail!("unknown app '{other}' (matmul|cholesky|lu|stencil)"),
-    })
+    crate::apps::build_app_program(app, n, bs, board)
 }
 
 /// CLI help text (the command reference of the README quickstart).
@@ -125,15 +119,20 @@ COMMANDS (one per paper experiment, plus utilities):
   dse            --app <app> [--objective time|energy|edp]      explore the co-design space
                  [--n 512] [--bs 64] [--top 15] [--workers N]   (paper §VII future work;
                  [--pruned] [--suite [--exhaustive]]             N=0 -> one per core;
-                                                                 --pruned: bound-guided cuts;
+                 [--boards zynq702,zynq706 [--global-cut]]       --pruned: bound-guided cuts;
                                                                  --suite: sweep matmul+cholesky
-                                                                 +lu+stencil in one shared pool)
+                                                                 +lu+stencil in one shared pool;
+                                                                 --boards: platform as a swept
+                                                                 axis + board-winner table,
+                                                                 pruned unless --exhaustive)
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
   robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
   analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
   lint           --trace t.jsonl                                validate a basic trace (§IV)
   measure        [--reps 5]                                     time AOT kernels via PJRT vs model
   cross-board    [--n 512]                                      ZC706 vs UltraScale+ decision
+  bench-check    --baseline b.json --current c.json             gate BENCH_*.json against a
+                 [--tolerance 0.2] [--strict-time]              checked-in baseline (CI)
   help                                                          this text
 
 COMMON OPTIONS:
@@ -165,6 +164,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
         "lint" => cmd_lint(&args),
         "measure" => cmd_measure(&args, &board),
         "cross-board" => cmd_cross_board(&args),
+        "bench-check" => cmd_bench_check(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(0)
@@ -279,9 +279,11 @@ fn cmd_estimate(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     };
     let mut model = sim::EstimatorModel::new(board);
     let res = sim::simulate(&program, &cd, board, &FpgaPart::xc7z045(), policy, &mut model)?;
-    println!("== estimator: {app} n={n} bs={bs} accels={:?} policy={}",
+    println!(
+        "== estimator: {app} n={n} bs={bs} accels={:?} policy={}",
         cd.accels.iter().map(|a| a.to_spec_string()).collect::<Vec<_>>(),
-        policy.as_str());
+        policy.as_str()
+    );
     print!("{}", utilization_report(&res));
     if args.has("real") {
         let mean = sim::emulate_mean_ms(&program, &cd, board, experiments::BOARD_REPS)?;
@@ -366,6 +368,9 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         0 => crate::dse::default_workers(),
         w => w,
     };
+    if args.has("boards") {
+        return cmd_dse_boards(args, objective, top, workers);
+    }
     if args.has("suite") {
         return cmd_dse_suite(args, board, objective, top, workers);
     }
@@ -419,11 +424,10 @@ fn cmd_dse_suite(
         eprintln!("note: --suite sweeps all four apps; --app {app} is ignored");
     }
     let part = FpgaPart::xc7z045();
-    let programs: Vec<(&str, crate::coordinator::task::TaskProgram)> =
-        ["matmul", "cholesky", "lu", "stencil"]
-            .into_iter()
-            .map(|app| Ok((app, build_app_program(app, n, bs, board)?)))
-            .collect::<anyhow::Result<_>>()?;
+    let programs: Vec<(&str, crate::coordinator::task::TaskProgram)> = crate::apps::SUITE_APPS
+        .into_iter()
+        .map(|app| Ok((app, build_app_program(app, n, bs, board)?)))
+        .collect::<anyhow::Result<_>>()?;
     let mut suite = crate::dse::SweepSuite::new();
     for (name, program) in &programs {
         let space = crate::dse::DseSpace::from_program(program);
@@ -460,6 +464,104 @@ fn cmd_dse_suite(
     Ok(0)
 }
 
+/// `dse --boards b1,b2[,...]`: the platform as a swept axis. Sweeps the
+/// chosen app (or the whole suite with `--suite`) on every board of the
+/// axis through one shared worker pool and prints, per (app, board), the
+/// ranked points plus the per-application "which board wins at which
+/// budget" table. Pruned by default — the per-board losslessness contract
+/// holds — like `dse --suite`; `--exhaustive` opts out, and
+/// `--global-cut` instead shares a cross-board incumbent between the
+/// boards of each app (exact for the global answer only).
+fn cmd_dse_boards(
+    args: &Args,
+    objective: crate::dse::Objective,
+    top: usize,
+    workers: usize,
+) -> anyhow::Result<i32> {
+    let n = args.u64_or("n", 512)?;
+    let bs = args.u64_or("bs", 64)?;
+    let axis = crate::board::BoardSpace::resolve(&args.get_all("boards"))?;
+    let apps: Vec<&str> = if args.has("suite") {
+        crate::apps::SUITE_APPS.to_vec()
+    } else {
+        vec![args.get("app").unwrap_or("matmul")]
+    };
+    let programs = crate::dse::cross::build_axis_programs(&axis, &apps, n, bs)?;
+    let sweep = crate::dse::cross::sweep_from_programs(&axis, &programs);
+    // Pruned by default (matching `dse --suite`); `--exhaustive` opts out.
+    let mode = if args.has("global-cut") {
+        "global-cut"
+    } else if args.has("exhaustive") {
+        "exhaustive"
+    } else {
+        "pruned"
+    };
+    let t0 = std::time::Instant::now();
+    let results = match mode {
+        "global-cut" => sweep.explore_pruned_global(objective, workers),
+        "pruned" => sweep.explore_pruned(objective, workers),
+        _ => sweep.explore(objective, workers),
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let mut evaluated = 0u64;
+    let mut feasible = 0u64;
+    for r in &results {
+        println!("==== {} @ {} (n = {n})", r.app, r.board);
+        print!("{}", crate::dse::render(&r.points, top, objective));
+        if mode != "exhaustive" {
+            println!("pruning: {}", r.stats.render());
+        }
+        println!();
+        evaluated += r.stats.evaluated;
+        feasible += r.stats.feasible_points;
+    }
+    for (app, rows) in crate::dse::board_winner_table(&results) {
+        print!("{}", crate::dse::cross::render_winner_table(&app, &rows));
+        println!();
+    }
+    println!(
+        "board axis: {} boards x {} apps, {evaluated} of {feasible} feasible points \
+         evaluated in {secs:.3} s ({mode} mode, {workers} workers, one shared pool)",
+        axis.targets.len(),
+        apps.len(),
+    );
+    Ok(0)
+}
+
+/// `bench-check`: compare a bench run's `BENCH_*.json` against a
+/// checked-in baseline (see [`crate::util::bench_check`]). Prints the
+/// per-leaf verdicts and exits 1 on regression so CI can gate on it.
+fn cmd_bench_check(args: &Args) -> anyhow::Result<i32> {
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("bench-check requires --baseline <file.json>"))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("bench-check requires --current <file.json>"))?;
+    let tolerance: f64 = match args.get("tolerance") {
+        None => 0.2,
+        Some(t) => t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--tolerance expects a number, got '{t}'"))?,
+    };
+    let load = |path: &str| -> anyhow::Result<crate::util::json::Value> {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        crate::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let report = crate::util::bench_check::compare(
+        &load(baseline_path)?,
+        &load(current_path)?,
+        tolerance,
+        args.has("strict-time"),
+    );
+    print!("{}", report.render());
+    println!(
+        "{current_path} vs {baseline_path}: {}",
+        if report.ok() { "OK" } else { "REGRESSION" }
+    );
+    Ok(if report.ok() { 0 } else { 1 })
+}
+
 fn cmd_energy(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let app = args
         .get("app")
@@ -484,7 +586,12 @@ fn cmd_energy(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         .collect::<anyhow::Result<_>>()?;
     let part = FpgaPart::xc7z045();
     let util = part.utilization(&resources);
-    let e = crate::power::PowerModel::default().energy(&res, &resources, util, board.fabric_freq_mhz);
+    let e = crate::power::PowerModel::default().energy(
+        &res,
+        &resources,
+        util,
+        board.fabric_freq_mhz,
+    );
     println!("== energy: {app} n={n}");
     println!("  makespan:        {:.3} ms", e.makespan_s * 1e3);
     println!("  static energy:   {:.3} J", e.static_j);
@@ -531,7 +638,11 @@ fn cmd_lint(args: &Args) -> anyhow::Result<i32> {
     let program = crate::trace::load(std::path::Path::new(path))?;
     let findings = crate::trace::validate::lint(&program);
     if findings.is_empty() {
-        println!("{path}: clean ({} tasks, {} kernels)", program.tasks.len(), program.kernels.len());
+        println!(
+            "{path}: clean ({} tasks, {} kernels)",
+            program.tasks.len(),
+            program.kernels.len()
+        );
         return Ok(0);
     }
     for f in &findings {
@@ -714,6 +825,52 @@ mod tests {
             run(&argv("dse --suite --n 256 --workers 2 --top 3 --exhaustive")).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn dse_boards_command_runs() {
+        assert_eq!(
+            run(&argv(
+                "dse --boards zynq702,zynq706 --n 256 --workers 2 --top 3 --pruned"
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv(
+                "dse --boards zynq702,zynq706 --n 256 --workers 2 --top 3 --global-cut"
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv(
+                "dse --boards zynq702,zynq706 --n 256 --workers 2 --top 3 --exhaustive"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&argv("dse --boards zynq9000")).is_err());
+    }
+
+    #[test]
+    fn bench_check_command_gates() {
+        let dir = std::env::temp_dir().join("zynq_cli_benchcheck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let cur = dir.join("cur.json");
+        std::fs::write(&base, r#"{"feasible_points": 100, "wall_s": 1.0}"#).unwrap();
+        std::fs::write(&cur, r#"{"feasible_points": 101, "wall_s": 99.0}"#).unwrap();
+        let cmd = format!(
+            "bench-check --baseline {} --current {}",
+            base.display(),
+            cur.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        std::fs::write(&cur, r#"{"feasible_points": 5, "wall_s": 1.0}"#).unwrap();
+        assert_eq!(run(&argv(&cmd)).unwrap(), 1);
+        assert!(run(&argv("bench-check --baseline missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -125,6 +125,20 @@ impl BoardConfig {
         }
     }
 
+    /// Entry-level preset: Zynq APSoC on the ZC702 board (XC7Z020: the
+    /// same dual Cortex-A9 PS as the ZC706, but an Artix-7-class fabric —
+    /// roughly a quarter of the DSP/LUT budget — that typically closes
+    /// timing at a lower HLS clock). DMA and runtime costs are PS-side and
+    /// match the ZC706; only the fabric differs. Pair with
+    /// `hls::FpgaPart::xc7z020()` in sweeps.
+    pub fn zynq702() -> Self {
+        Self {
+            name: "zynq702".into(),
+            fabric_freq_mhz: 100.0,
+            ..Self::zynq706()
+        }
+    }
+
     /// Next-generation preset: Zynq UltraScale+ MPSoC (ZU9EG-class), the
     /// platform the paper's intro points to ("also includes GPUs in the
     /// next generation Zynq UltraScale+ MPSoC"). Quad Cortex-A53 @ 1.2 GHz
@@ -366,6 +380,17 @@ pub struct ResolvedAccel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn zynq702_shares_ps_side_with_706() {
+        let b2 = BoardConfig::zynq702();
+        let b6 = BoardConfig::zynq706();
+        assert_eq!(b2.name, "zynq702");
+        assert_eq!(b2.smp_cores, b6.smp_cores);
+        assert_eq!(b2.smp_freq_mhz, b6.smp_freq_mhz);
+        assert_eq!(b2.dma_bw_mbps, b6.dma_bw_mbps);
+        assert!(b2.fabric_freq_mhz < b6.fabric_freq_mhz);
+    }
 
     #[test]
     fn zynq706_defaults_sane() {

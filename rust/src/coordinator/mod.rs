@@ -12,4 +12,6 @@ pub mod sched;
 pub mod task;
 
 pub use deps::DepGraph;
-pub use task::{Dep, Dir, KernelDecl, KernelId, KernelProfile, TaskId, TaskInstance, TaskProgram, Targets};
+pub use task::{
+    Dep, Dir, KernelDecl, KernelId, KernelProfile, TaskId, TaskInstance, TaskProgram, Targets,
+};

@@ -1,0 +1,404 @@
+//! Cross-board design-space exploration — the platform as a swept axis.
+//!
+//! The paper's cross-board observation (§I outlook; also Nunez-Yanez et
+//! al. and Véstias et al. in the related work) is that the best
+//! hardware/software split *shifts with the platform*: part selection is a
+//! first-class design decision, so the board belongs inside the sweep, not
+//! outside it. A [`CrossBoardSweep`] expands a board axis
+//! ([`crate::board::BoardSpace`]) times an application list into one
+//! per-(board, application) [`SweepContext`] each — its own HLS report
+//! cache (the cost model depends on the board's fabric clock), its own
+//! resource budget, its own bound frontier — and sweeps them all through
+//! **one** shared worker pool, exactly like [`SweepSuite`] does for a
+//! multi-application suite on a single board.
+//!
+//! Three sweep modes:
+//! * [`CrossBoardSweep::explore`] — exhaustive, per-entry output
+//!   bit-identical to [`SweepContext::explore`] on that entry alone;
+//! * [`CrossBoardSweep::explore_pruned`] — bound-guided with **per-board
+//!   frontiers only**: every entry keeps the full `dse::prune`
+//!   losslessness contract (best point and time-energy Pareto front equal
+//!   the exhaustive sweep's, per board);
+//! * [`CrossBoardSweep::explore_pruned_global`] — additionally shares a
+//!   **cross-board incumbent** between the boards of each application: a
+//!   candidate whose bounds are strictly dominated by a point already
+//!   evaluated on *any* board of the same application is skipped. The
+//!   per-application *global* best and global Pareto front stay exact;
+//!   per-board fronts may lose dominated points — use this mode when only
+//!   the "which board wins" answer matters.
+//!
+//! The [`board_winner_table`] digests the result into the decision the
+//! programmer actually needs: at every time budget, which board (and
+//! which co-design on it) reaches that budget with the least energy.
+
+use super::prune::PruneStats;
+use super::sweep::{SweepContext, SweepSuite};
+use super::{pareto_front, DsePoint, DseSpace, Objective};
+use crate::config::BoardConfig;
+use crate::coordinator::task::TaskProgram;
+use crate::hls::FpgaPart;
+
+/// Ranked sweep output of one (board, application) entry.
+#[derive(Clone, Debug)]
+pub struct CrossBoardResult {
+    /// Board (platform) name of the entry.
+    pub board: String,
+    /// Application name of the entry.
+    pub app: String,
+    /// Evaluated points, ranked by the sweep objective.
+    pub points: Vec<DsePoint>,
+    /// Cut statistics (counters zero for exhaustive sweeps).
+    pub stats: PruneStats,
+}
+
+/// A multi-board, multi-application sweep over one shared worker pool.
+///
+/// Internally a [`SweepSuite`] whose entries are the (board × application)
+/// product, plus the bookkeeping that groups entries of the same
+/// application for the cross-board incumbent and the winner table.
+#[derive(Default)]
+pub struct CrossBoardSweep<'p> {
+    suite: SweepSuite<'p>,
+    /// Parallel to the suite entries: (board name, app name, app group).
+    keys: Vec<(String, String, usize)>,
+}
+
+impl<'p> CrossBoardSweep<'p> {
+    /// An empty sweep; add entries with [`CrossBoardSweep::push`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one (board, application) entry. The program must have been
+    /// built against `board` (task cycle counts are board-dependent), and
+    /// `part` is the board's programmable-logic budget. Entries naming the
+    /// same application (on different boards) form one incumbent group for
+    /// [`CrossBoardSweep::explore_pruned_global`] and one table in
+    /// [`board_winner_table`].
+    pub fn push(
+        &mut self,
+        board_name: &str,
+        app_name: &str,
+        program: &'p TaskProgram,
+        board: &'p BoardConfig,
+        part: &FpgaPart,
+        space: DseSpace,
+    ) {
+        let group = match self.keys.iter().find(|(_, a, _)| a == app_name) {
+            Some(&(_, _, g)) => g,
+            None => self.keys.iter().map(|&(_, _, g)| g + 1).max().unwrap_or(0),
+        };
+        self.keys
+            .push((board_name.to_string(), app_name.to_string(), group));
+        self.suite.push(
+            &format!("{app_name}@{board_name}"),
+            program,
+            board,
+            part,
+            space,
+        );
+    }
+
+    /// Number of (board, application) entries.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Whether no entry has been pushed yet.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    fn wrap(&self, results: Vec<super::sweep::SuiteAppResult>) -> Vec<CrossBoardResult> {
+        results
+            .into_iter()
+            .zip(&self.keys)
+            .map(|(r, (board, app, _))| CrossBoardResult {
+                board: board.clone(),
+                app: app.clone(),
+                points: r.points,
+                stats: r.stats,
+            })
+            .collect()
+    }
+
+    /// Exhaustively sweep every entry through one shared pool. Per-entry
+    /// output is bit-identical to [`SweepContext::explore`] on that entry
+    /// alone, for any worker count.
+    pub fn explore(&self, objective: Objective, workers: usize) -> Vec<CrossBoardResult> {
+        self.wrap(self.suite.explore(objective, workers))
+    }
+
+    /// Bound-guided pruned sweep with per-board frontiers only: every
+    /// entry keeps the full per-board losslessness contract (best point
+    /// and time-energy Pareto front equal the exhaustive sweep's).
+    pub fn explore_pruned(&self, objective: Objective, workers: usize) -> Vec<CrossBoardResult> {
+        self.wrap(self.suite.explore_pruned(objective, workers))
+    }
+
+    /// Pruned sweep with the cross-board incumbent: boards of the same
+    /// application share a frontier, so a candidate provably dominated by
+    /// another board's evaluated point is never simulated
+    /// ([`PruneStats::global_cut`] counts them). Exact for each
+    /// application's *global* best point and global time-energy Pareto
+    /// front; per-board fronts may lose points. Bit-identical for any
+    /// worker count.
+    pub fn explore_pruned_global(
+        &self,
+        objective: Objective,
+        workers: usize,
+    ) -> Vec<CrossBoardResult> {
+        let inputs: Vec<(&SweepContext<'p>, &DseSpace)> =
+            self.suite.apps().iter().map(|a| (&a.ctx, &a.space)).collect();
+        let groups: Vec<Option<usize>> = self.keys.iter().map(|&(_, _, g)| Some(g)).collect();
+        let results = super::prune::explore_pruned_grouped(&inputs, &groups, objective, workers);
+        self.wrap(
+            results
+                .into_iter()
+                .zip(self.suite.apps())
+                .map(|((points, stats), app)| super::sweep::SuiteAppResult {
+                    name: app.name.clone(),
+                    points,
+                    stats,
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Build one program per (board, app) pair of the axis — board-major, the
+/// push order [`sweep_from_programs`] expects. Thin wrapper over
+/// [`crate::apps::build_app_program`] so the CLI, the experiment harness
+/// and the bench share one expansion instead of three copies.
+pub fn build_axis_programs(
+    axis: &crate::board::BoardSpace,
+    apps: &[&str],
+    n: u64,
+    bs: u64,
+) -> anyhow::Result<Vec<(usize, String, TaskProgram)>> {
+    let mut programs = Vec::new();
+    for (bi, target) in axis.targets.iter().enumerate() {
+        for app in apps {
+            let program = crate::apps::build_app_program(app, n, bs, &target.board)?;
+            programs.push((bi, app.to_string(), program));
+        }
+    }
+    Ok(programs)
+}
+
+/// Assemble a [`CrossBoardSweep`] over the program list of
+/// [`build_axis_programs`], using each program's default
+/// [`DseSpace::from_program`] space.
+pub fn sweep_from_programs<'p>(
+    axis: &'p crate::board::BoardSpace,
+    programs: &'p [(usize, String, TaskProgram)],
+) -> CrossBoardSweep<'p> {
+    let mut sweep = CrossBoardSweep::new();
+    for (bi, app, program) in programs {
+        let target = &axis.targets[*bi];
+        sweep.push(
+            &target.name,
+            app,
+            program,
+            &target.board,
+            &target.part,
+            DseSpace::from_program(program),
+        );
+    }
+    sweep
+}
+
+/// One row of the cross-board decision table: at `time_budget_ms`, `board`
+/// running `codesign` reaches the budget with the least energy any
+/// platform of the axis can offer.
+#[derive(Clone, Debug)]
+pub struct BudgetRow {
+    /// The time budget this row unlocks (the point's makespan).
+    pub time_budget_ms: f64,
+    /// Winning board at this budget.
+    pub board: String,
+    /// Winning co-design on that board.
+    pub codesign: String,
+    /// Energy of the winning point (the minimum achievable within budget).
+    pub energy_j: f64,
+}
+
+/// Digest per-(board, app) sweep results into one decision table per
+/// application: the merged cross-board time-energy Pareto front, sorted by
+/// ascending time (hence descending energy). Each row is the
+/// energy-optimal choice at exactly that row's time budget; for an
+/// arbitrary budget, the *last* row that still fits it wins — rows trade
+/// time for energy as you read down. Applications appear in first-push
+/// order; within a table, exact coordinate ties break by board then
+/// co-design name, so the output is deterministic.
+pub fn board_winner_table(results: &[CrossBoardResult]) -> Vec<(String, Vec<BudgetRow>)> {
+    let mut apps: Vec<&str> = Vec::new();
+    for r in results {
+        if !apps.contains(&r.app.as_str()) {
+            apps.push(&r.app);
+        }
+    }
+    apps.iter()
+        .map(|&app| {
+            // Merge every board's points for this application.
+            let mut merged: Vec<(usize, &DsePoint)> = Vec::new();
+            let mut points: Vec<DsePoint> = Vec::new();
+            for (ri, r) in results.iter().enumerate() {
+                if r.app == app {
+                    for p in &r.points {
+                        merged.push((ri, p));
+                        points.push(p.clone());
+                    }
+                }
+            }
+            let mut rows: Vec<BudgetRow> = pareto_front(&points)
+                .into_iter()
+                .map(|i| {
+                    let (ri, p) = merged[i];
+                    BudgetRow {
+                        time_budget_ms: p.est_ms,
+                        board: results[ri].board.clone(),
+                        codesign: p.codesign.name.clone(),
+                        energy_j: p.energy_j,
+                    }
+                })
+                .collect();
+            rows.sort_by(|a, b| {
+                a.time_budget_ms
+                    .total_cmp(&b.time_budget_ms)
+                    .then(a.energy_j.total_cmp(&b.energy_j))
+                    .then_with(|| a.board.cmp(&b.board))
+                    .then_with(|| a.codesign.cmp(&b.codesign))
+            });
+            rows.dedup_by(|a, b| {
+                a.time_budget_ms.to_bits() == b.time_budget_ms.to_bits()
+                    && a.energy_j.to_bits() == b.energy_j.to_bits()
+                    && a.board == b.board
+                    && a.codesign == b.codesign
+            });
+            (app.to_string(), rows)
+        })
+        .collect()
+}
+
+/// Render one application's winner table for the CLI.
+pub fn render_winner_table(app: &str, rows: &[BudgetRow]) -> String {
+    let mut out = format!("== {app}: which board wins at which time budget\n");
+    out.push_str(&format!(
+        "{:>12} {:>18} {:36} {:>10}\n",
+        "budget (ms)", "board", "co-design", "energy (J)"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>12.2} {:>18} {:36} {:>10.3}\n",
+            r.time_budget_ms, r.board, r.codesign, r.energy_j
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::board::BoardSpace;
+    use crate::dse::pareto_front_coords;
+
+    fn sweep_fixture<'p>(
+        programs: &'p [(String, TaskProgram)],
+        space: &'p BoardSpace,
+    ) -> CrossBoardSweep<'p> {
+        let mut sweep = CrossBoardSweep::new();
+        for (bi, target) in space.targets.iter().enumerate() {
+            let (_, program) = &programs[bi];
+            sweep.push(
+                &target.name,
+                "matmul",
+                program,
+                &target.board,
+                &target.part,
+                DseSpace::from_program(program),
+            );
+        }
+        sweep
+    }
+
+    fn fixture() -> (BoardSpace, Vec<(String, TaskProgram)>) {
+        let space = BoardSpace::resolve(&["zynq702", "zynq706"]).unwrap();
+        let programs: Vec<(String, TaskProgram)> = space
+            .targets
+            .iter()
+            .map(|t| (t.name.clone(), Matmul::new(256, 64).build_program(&t.board)))
+            .collect();
+        (space, programs)
+    }
+
+    #[test]
+    fn boards_get_distinct_feasible_sets_and_winners() {
+        let (space, programs) = fixture();
+        let sweep = sweep_fixture(&programs, &space);
+        assert_eq!(sweep.len(), 2);
+        let results = sweep.explore(Objective::Time, 2);
+        let z702 = &results[0];
+        let z706 = &results[1];
+        assert_eq!(z702.board, "zynq702");
+        assert_eq!(z706.board, "zynq706");
+        // The smaller part admits strictly fewer co-designs.
+        assert!(
+            z702.stats.feasible_points < z706.stats.feasible_points,
+            "{} vs {}",
+            z702.stats.feasible_points,
+            z706.stats.feasible_points
+        );
+        // Both still find a best point, and the bigger/faster fabric wins.
+        assert!(!z702.points.is_empty() && !z706.points.is_empty());
+        assert!(z706.points[0].est_ms < z702.points[0].est_ms);
+
+        let winners = board_winner_table(&results);
+        assert_eq!(winners.len(), 1);
+        let (app, rows) = &winners[0];
+        assert_eq!(app, "matmul");
+        assert!(!rows.is_empty());
+        // Sorted by ascending budget, and the tightest budget belongs to
+        // the board with the fastest point overall.
+        for w in rows.windows(2) {
+            assert!(w[0].time_budget_ms <= w[1].time_budget_ms);
+        }
+        assert_eq!(rows[0].board, "zynq706");
+        let s = render_winner_table(app, rows);
+        assert!(s.contains("zynq706"));
+    }
+
+    #[test]
+    fn global_cut_preserves_the_merged_front() {
+        let (space, programs) = fixture();
+        let sweep = sweep_fixture(&programs, &space);
+        let exhaustive = sweep.explore(Objective::Time, 2);
+        let global = sweep.explore_pruned_global(Objective::Time, 2);
+        // Merged per-app front and best point must match exactly.
+        let merge = |rs: &[CrossBoardResult]| {
+            let mut all: Vec<DsePoint> = Vec::new();
+            for r in rs {
+                all.extend(r.points.iter().cloned());
+            }
+            all.sort_by(|a, b| a.est_ms.total_cmp(&b.est_ms));
+            all
+        };
+        let (e, g) = (merge(&exhaustive), merge(&global));
+        assert_eq!(
+            e[0].est_ms.to_bits(),
+            g[0].est_ms.to_bits(),
+            "global best diverged"
+        );
+        assert_eq!(pareto_front_coords(&e), pareto_front_coords(&g));
+        // And the sweep is deterministic across worker counts.
+        let serial = sweep.explore_pruned_global(Objective::Time, 1);
+        for (a, b) in global.iter().zip(&serial) {
+            assert_eq!(a.stats, b.stats);
+            assert_eq!(a.points.len(), b.points.len());
+            for (x, y) in a.points.iter().zip(&b.points) {
+                assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits());
+            }
+        }
+    }
+}

@@ -11,11 +11,16 @@
 //! parallel, deterministic point evaluation. The [`prune`] module cuts the
 //! cartesian space *before* evaluation (resource, dominance and
 //! lower-bound cuts — lossless for the best point and the Pareto front),
-//! and [`SweepSuite`] batches several applications through one shared
-//! worker pool. The free functions here are thin wrappers kept for the
-//! CLI/tests; long-lived callers should build a `SweepContext` themselves
-//! and reuse it.
+//! [`SweepSuite`] batches several applications through one shared worker
+//! pool, and [`cross::CrossBoardSweep`] makes the *platform* a swept axis:
+//! a [`crate::board::BoardSpace`] of named (board, FPGA part) candidates
+//! expands into per-board contexts with per-board caches and bound
+//! frontiers, digested by [`cross::board_winner_table`] into "which board
+//! wins at which budget". The free functions here are thin wrappers kept
+//! for the CLI/tests; long-lived callers should build a `SweepContext`
+//! themselves and reuse it.
 
+pub mod cross;
 pub mod prune;
 pub mod sweep;
 
@@ -25,6 +30,7 @@ use crate::config::{BoardConfig, CoDesign};
 use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
 
+pub use cross::{board_winner_table, BudgetRow, CrossBoardResult, CrossBoardSweep};
 pub use prune::{enumerate_pruned, PruneStats};
 pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
 

@@ -69,6 +69,17 @@
 //! as the exhaustive sweep while simulating strictly fewer points (counts
 //! are reported in [`PruneStats`] and by `benches/dse_suite.rs`).
 //!
+//! # Grouped (cross-board) sweeps
+//!
+//! Multi-job sweeps may opt jobs into a shared **incumbent group**
+//! (`explore_pruned_grouped`): jobs of one group — e.g. the same
+//! application swept on several boards — additionally consult a frontier
+//! fed by every job in the group. The group-wide best point and Pareto
+//! front stay exact; per-job fronts of grouped jobs may lose points (a
+//! candidate dominated by another board's point is skipped), which is why
+//! the default cross-board path keeps every job ungrouped and the group
+//! mode is an explicit opt-in for "global answer only" queries.
+//!
 //! [`metrics::bounds`]: crate::metrics::bounds
 
 use crate::config::CoDesign;
@@ -122,6 +133,13 @@ pub struct PruneStats {
     pub resource_cut: u64,
     /// Enumerated candidates skipped by the lower-bound test.
     pub bound_cut: u64,
+    /// Enumerated candidates skipped by the **cross-job incumbent** of a
+    /// grouped sweep (see [`CrossBoardSweep`](super::CrossBoardSweep)):
+    /// their bounds were strictly dominated by a point evaluated by
+    /// *another* job of the same group. Always zero in ungrouped sweeps;
+    /// when non-zero, per-job Pareto fronts are no longer guaranteed
+    /// complete — only the group-wide front and best point are.
+    pub global_cut: u64,
     /// Candidates where some kernel had nowhere to run (also skipped by
     /// the exhaustive path).
     pub unrunnable: u64,
@@ -138,9 +156,14 @@ impl PruneStats {
 
     /// One-line human summary used by the CLI and benches.
     pub fn render(&self) -> String {
+        let global = if self.global_cut > 0 {
+            format!(", global {}", self.global_cut)
+        } else {
+            String::new()
+        };
         format!(
             "space {} -> feasible {} -> enumerated {} -> evaluated {} \
-             (cuts: resource {}, dominance {} [{} variants], bound {}, unrunnable {})",
+             (cuts: resource {}, dominance {} [{} variants], bound {}{global}, unrunnable {})",
             self.space_points,
             self.feasible_points,
             self.enumerated(),
@@ -342,7 +365,11 @@ fn count_feasible(options: &[Vec<Resources>], budget: &Resources) -> u64 {
 /// Pruned odometer: emits, in the exhaustive enumeration order, every
 /// feasible candidate built from the dominance-filtered options, skipping
 /// whole subtrees whose resource prefix already exceeds the budget.
-fn enumerate_options(table: &OptionTable<'_>, budget: &Resources, stats: &mut PruneStats) -> Vec<CoDesign> {
+fn enumerate_options(
+    table: &OptionTable<'_>,
+    budget: &Resources,
+    stats: &mut PruneStats,
+) -> Vec<CoDesign> {
     let n = table.pruned.len();
     let mut out = Vec::new();
     if n == 0 {
@@ -358,6 +385,7 @@ fn enumerate_options(table: &OptionTable<'_>, budget: &Resources, stats: &mut Pr
     }
     // Recursion from the last kernel down so kernel 0 varies fastest —
     // the same order as the serial odometer in `SweepContext::enumerate`.
+    #[allow(clippy::too_many_arguments)]
     fn rec(
         table: &OptionTable<'_>,
         budget: &Resources,
@@ -509,6 +537,10 @@ struct JobState<'a, 'p> {
     order: Vec<usize>,
     cursor: usize,
     frontier: Frontier,
+    /// Incumbent-sharing group (cross-board sweeps): jobs with the same
+    /// group id also consult — and feed — a shared group frontier. `None`
+    /// keeps the job fully self-contained (per-job losslessness).
+    group: Option<usize>,
     evaluated: Vec<(usize, DsePoint)>,
     stats: PruneStats,
 }
@@ -518,6 +550,18 @@ struct JobState<'a, 'p> {
 /// worker's simulator buffers are reused across every round *and* every
 /// application — one shared pool for the whole (suite) sweep.
 fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, workers: usize) {
+    // Shared incumbent frontiers of the groups (empty when no job is
+    // grouped). Like the per-job frontiers they are only thawed at round
+    // barriers, and a frontier's content is the unique Pareto set of the
+    // points evaluated so far by its group — independent of the merge
+    // order, hence of the worker count.
+    let n_groups = jobs
+        .iter()
+        .filter_map(|j| j.group)
+        .max()
+        .map_or(0, |g| g + 1);
+    let mut group_frontiers: Vec<Frontier> = (0..n_groups).map(|_| Frontier::default()).collect();
+
     // Deterministic processing order per job.
     for job in jobs.iter_mut() {
         let mut order: Vec<usize> = (0..job.cands.len())
@@ -550,6 +594,11 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, worke
                 let lb = job.bounds[ci].as_ref().unwrap();
                 if job.frontier.strictly_dominates(lb) {
                     job.stats.bound_cut += 1;
+                } else if job
+                    .group
+                    .is_some_and(|g| group_frontiers[g].strictly_dominates(lb))
+                {
+                    job.stats.global_cut += 1;
                 } else {
                     work.push((ji, ci));
                 }
@@ -575,9 +624,12 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, worke
             },
         );
 
-        // Barrier: merge results and thaw the frontier for the next round.
+        // Barrier: merge results and thaw the frontiers for the next round.
         for (ji, ci, p) in results {
             jobs[ji].frontier.insert(p.est_ms, p.energy_j);
+            if let Some(g) = jobs[ji].group {
+                group_frontiers[g].insert(p.est_ms, p.energy_j);
+            }
             jobs[ji].stats.evaluated += 1;
             jobs[ji].evaluated.push((ci, p));
         }
@@ -593,9 +645,30 @@ pub(crate) fn explore_pruned_multi<'p>(
     objective: Objective,
     workers: usize,
 ) -> Vec<(Vec<DsePoint>, PruneStats)> {
+    explore_pruned_grouped(inputs, &vec![None; inputs.len()], objective, workers)
+}
+
+/// Like [`explore_pruned_multi`], but jobs sharing a `Some(group)` id also
+/// share an incumbent frontier: a candidate whose lower bounds are
+/// strictly dominated by a point evaluated *anywhere in its group* is
+/// skipped. The group-wide best point and the group-wide time-energy
+/// Pareto front still equal the exhaustive sweep's (a group-dominated
+/// candidate can appear on neither); **per-job** fronts of grouped jobs
+/// are no longer guaranteed complete — use `None` groups (the
+/// `explore_pruned_multi` path) when per-job losslessness matters.
+/// Determinism for any worker count is preserved: group frontiers thaw at
+/// the same round barriers as per-job frontiers.
+pub(crate) fn explore_pruned_grouped<'p>(
+    inputs: &[(&SweepContext<'p>, &DseSpace)],
+    groups: &[Option<usize>],
+    objective: Objective,
+    workers: usize,
+) -> Vec<(Vec<DsePoint>, PruneStats)> {
+    assert_eq!(inputs.len(), groups.len(), "one group entry per input");
     let mut jobs: Vec<JobState<'_, 'p>> = inputs
         .iter()
-        .map(|&(ctx, space)| {
+        .zip(groups)
+        .map(|(&(ctx, space), &group)| {
             let (cands, stats) = enumerate_pruned(ctx, space);
             JobState {
                 ctx,
@@ -604,6 +677,7 @@ pub(crate) fn explore_pruned_multi<'p>(
                 order: Vec::new(),
                 cursor: 0,
                 frontier: Frontier::default(),
+                group,
                 evaluated: Vec::new(),
                 stats,
             }
@@ -618,7 +692,7 @@ pub(crate) fn explore_pruned_multi<'p>(
         .enumerate()
         .flat_map(|(ji, j)| (0..j.cands.len()).map(move |ci| (ji, ci)))
         .collect();
-    let n_workers = workers.max(1).min(flat.len().max(1));
+    let n_workers = workers.clamp(1, flat.len().max(1));
     let computed: Vec<(usize, usize, Option<CandBound>)> = if n_workers <= 1 {
         flat.iter()
             .map(|&(ji, ci)| (ji, ci, bound_for(jobs[ji].ctx, &jobs[ji].cands[ci])))
@@ -663,7 +737,11 @@ mod tests {
 
     use super::super::pareto_front_coords as front_coords;
 
-    fn assert_lossless(ctx: &SweepContext<'_>, space: &DseSpace, objective: Objective) -> PruneStats {
+    fn assert_lossless(
+        ctx: &SweepContext<'_>,
+        space: &DseSpace,
+        objective: Objective,
+    ) -> PruneStats {
         let exhaustive = ctx.explore(space, objective, 2);
         let (pruned, stats) = ctx.explore_pruned(space, objective, 2);
         assert_eq!(

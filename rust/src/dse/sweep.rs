@@ -348,7 +348,7 @@ impl<'p> SweepContext<'p> {
 
     /// A reusable evaluation worker: one simulator + one timing model,
     /// reset per point. Create one per thread.
-    pub fn worker<'c>(&'c self) -> SweepWorker<'c, 'p> {
+    pub fn worker(&self) -> SweepWorker<'_, 'p> {
         let mut sim = Simulator::new(
             self.program,
             &self.elab,
@@ -395,7 +395,7 @@ impl<'p> SweepContext<'p> {
     /// the serial path.
     pub fn evaluate_all(&self, cands: &[CoDesign], workers: usize) -> Vec<DsePoint> {
         let n = cands.len();
-        let workers = workers.max(1).min(n.max(1));
+        let workers = workers.clamp(1, n.max(1));
         if workers <= 1 {
             let mut w = self.worker();
             return cands.iter().filter_map(|cd| w.evaluate(cd)).collect();
@@ -573,7 +573,7 @@ impl<'p> SweepSuite<'p> {
             .enumerate()
             .flat_map(|(ai, cands)| (0..cands.len()).map(move |ci| (ai, ci)))
             .collect();
-        let workers = workers.max(1).min(flat.len().max(1));
+        let workers = workers.clamp(1, flat.len().max(1));
         // One lazily-built worker (simulator + model) per thread per
         // application, reused for every point that thread evaluates for
         // that application.

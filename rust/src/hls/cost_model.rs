@@ -164,9 +164,9 @@ mod tests {
         let m = model();
         let part = FpgaPart::xc7z045();
         let r128 = m.estimate("mxm128", &mxm_profile(128), 128);
-        assert!(part.fits(&[r128.resources.clone()]), "one mxm128 must fit");
+        assert!(part.fits(&[r128.resources]), "one mxm128 must fit");
         assert!(
-            !part.fits(&[r128.resources.clone(), r128.resources.clone()]),
+            !part.fits(&[r128.resources, r128.resources]),
             "two mxm128 must NOT fit"
         );
     }
@@ -176,7 +176,7 @@ mod tests {
         let m = model();
         let part = FpgaPart::xc7z045();
         let r64 = m.estimate("mxm64", &mxm_profile(64), 32);
-        assert!(part.fits(&[r64.resources.clone(), r64.resources.clone()]));
+        assert!(part.fits(&[r64.resources, r64.resources]));
     }
 
     #[test]

@@ -65,6 +65,18 @@ impl FpgaPart {
         }
     }
 
+    /// Look a built-in part up by name (`xc7z045` | `xc7z020` | `xczu9eg`).
+    /// Used by the board-space resolver so TOML board files can name their
+    /// part (`[fabric] part = "xc7z020"`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "xc7z045" => Some(Self::xc7z045()),
+            "xc7z020" => Some(Self::xc7z020()),
+            "xczu9eg" => Some(Self::xczu9eg()),
+            _ => None,
+        }
+    }
+
     /// The budget after routability derating — what co-designs must fit in.
     pub fn effective_budget(&self) -> Resources {
         Resources {

@@ -12,14 +12,16 @@
 //! * [`coordinator`] — OmpSs-equivalent task model, run-time dependence
 //!   tracking, trace elaboration (§IV) and scheduling policies.
 //! * [`sim`] — discrete-event engine + the coarse-grain estimator model.
-//! * [`board`] — detailed Zynq board emulator ("real execution" stand-in).
+//! * [`board`] — detailed Zynq board emulator ("real execution" stand-in)
+//!   and the board axis of the design space ([`board::BoardSpace`]).
 //! * [`hls`] — analytic Vivado-HLS latency/resource model + feasibility.
 //! * [`apps`] — the paper's applications (matmul, cholesky) + extras
 //!   (lu, stencil).
 //! * [`dse`] — co-design space enumeration and ranking: the shared-context
 //!   parallel sweep engine ([`dse::sweep`]), the bound-guided pruned
-//!   enumeration ([`dse::prune`]) and batched multi-program suites
-//!   ([`dse::SweepSuite`]).
+//!   enumeration ([`dse::prune`]), batched multi-program suites
+//!   ([`dse::SweepSuite`]) and the cross-board sweep that makes the
+//!   platform itself a swept axis ([`dse::CrossBoardSweep`]).
 //! * [`trace`] — basic-trace JSON-lines IO, DOT export, Paraver writer.
 //! * [`metrics`] — speedup tables, trend agreement, makespan lower bounds
 //!   ([`metrics::bounds`]), report rendering and figure-data export.
@@ -44,6 +46,7 @@
 //! | Fig. 8 (task graph) | [`experiments::fig8`] | `benches/fig8_graph.rs` |
 //! | Fig. 9 (cholesky sweep) | [`experiments::fig9`] | `benches/fig9_cholesky.rs` |
 //! | §VII DSE outlook | [`dse::SweepContext::explore`], [`dse::SweepContext::explore_pruned`] | `benches/dse_suite.rs`, `benches/engine_hotpath.rs` |
+//! | §I cross-board outlook | [`experiments::cross_board_dse`], [`dse::CrossBoardSweep`] | `benches/cross_board.rs` |
 //!
 //! ## Quick taste
 //!

@@ -42,8 +42,16 @@ pub struct Bounds {
 
 impl Bounds {
     /// The combined makespan lower bound: the max of the critical-path,
-    /// device-work and creation-chain bounds. Valid for any schedule the
-    /// engine can produce, so `makespan >= lower_bound()` always holds.
+    /// device-work, creation-chain and output-channel bounds. Valid for
+    /// any schedule the engine can produce, so `makespan >= lower_bound()`
+    /// always holds.
+    ///
+    /// The output-channel term covers platforms whose output transfers
+    /// serialize on one shared channel (`dma_out_scales == false`): every
+    /// write of a task that can only execute on an accelerator must cross
+    /// that channel, so their summed transfer time — at the full,
+    /// uncontended bandwidth — is a valid bound too. On full-duplex
+    /// platforms the term is zero.
     ///
     /// # Example
     ///
@@ -70,6 +78,7 @@ impl Bounds {
         self.critical_path
             .max(self.device_work)
             .max(self.creation_chain)
+            .max(self.output_channel)
     }
 }
 
@@ -110,7 +119,7 @@ pub fn bounds(
         };
         smp.min(acc)
     };
-    let critical_path = graph.critical_path(&|t| best_case(t));
+    let critical_path = graph.critical_path(&best_case);
 
     // Per-class work bounds. A kernel's tasks fall into three regimes:
     // * no accelerator  -> they must run on the SMP cores;

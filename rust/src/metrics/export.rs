@@ -2,6 +2,7 @@
 //! data, so the reproduction plots can be regenerated outside this binary
 //! (gnuplot / matplotlib) and diffed in CI.
 
+use crate::dse::{BudgetRow, CrossBoardResult};
 use crate::metrics::SpeedupTable;
 use crate::util::json::{arr, obj, Value};
 
@@ -50,6 +51,79 @@ pub fn speedup_table_json(table: &SpeedupTable, title: &str) -> String {
     .to_json()
 }
 
+/// CSV for the cross-board winner tables (one row per budget point).
+pub fn cross_board_winners_csv(tables: &[(String, Vec<BudgetRow>)]) -> String {
+    let mut out = String::from("app,time_budget_ms,board,codesign,energy_j\n");
+    for (app, rows) in tables {
+        for r in rows {
+            out.push_str(&format!(
+                "{},{:.6},{},{},{:.6}\n",
+                csv_escape(app),
+                r.time_budget_ms,
+                csv_escape(&r.board),
+                csv_escape(&r.codesign),
+                r.energy_j
+            ));
+        }
+    }
+    out
+}
+
+/// JSON document for a cross-board sweep: one record per (board, app)
+/// entry (best point + prune accounting) plus the per-application winner
+/// tables — the machine-readable form of the `dse --boards` output,
+/// emitted by `benches/cross_board.rs`.
+pub fn cross_board_json(
+    results: &[CrossBoardResult],
+    tables: &[(String, Vec<BudgetRow>)],
+) -> String {
+    let entries: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            let best = r.points.first();
+            obj(vec![
+                ("board", r.board.as_str().into()),
+                ("app", r.app.as_str().into()),
+                ("feasible_points", r.stats.feasible_points.into()),
+                ("evaluated_points", r.stats.evaluated.into()),
+                ("bound_cut", r.stats.bound_cut.into()),
+                ("global_cut", r.stats.global_cut.into()),
+                (
+                    "best",
+                    best.map(|p| p.codesign.name.as_str().into())
+                        .unwrap_or(Value::Null),
+                ),
+                (
+                    "best_ms",
+                    best.map(|p| p.est_ms.into()).unwrap_or(Value::Null),
+                ),
+                (
+                    "best_energy_j",
+                    best.map(|p| p.energy_j.into()).unwrap_or(Value::Null),
+                ),
+            ])
+        })
+        .collect();
+    let winners: Vec<Value> = tables
+        .iter()
+        .map(|(app, rows)| {
+            let rows: Vec<Value> = rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("time_budget_ms", r.time_budget_ms.into()),
+                        ("board", r.board.as_str().into()),
+                        ("codesign", r.codesign.as_str().into()),
+                        ("energy_j", r.energy_j.into()),
+                    ])
+                })
+                .collect();
+            obj(vec![("app", app.as_str().into()), ("rows", arr(rows))])
+        })
+        .collect();
+    obj(vec![("entries", arr(entries)), ("winners", arr(winners))]).to_json()
+}
+
 fn csv_escape(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
@@ -95,6 +169,43 @@ mod tests {
         assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(v.get("best_config").unwrap().as_str().unwrap(), "b");
         assert_eq!(v.get("best_agrees").unwrap().as_bool().unwrap(), true);
+    }
+
+    #[test]
+    fn cross_board_export_roundtrips() {
+        use crate::config::CoDesign;
+        use crate::dse::DsePoint;
+        let point = DsePoint {
+            codesign: CoDesign::new("1acc"),
+            est_ms: 12.5,
+            energy_j: 0.75,
+            edp: 0.009375,
+            fabric_util: 0.4,
+        };
+        let results = vec![CrossBoardResult {
+            board: "zynq706".into(),
+            app: "matmul".into(),
+            points: vec![point],
+            stats: Default::default(),
+        }];
+        let tables = vec![(
+            "matmul".to_string(),
+            vec![BudgetRow {
+                time_budget_ms: 12.5,
+                board: "zynq706".into(),
+                codesign: "1acc".into(),
+                energy_j: 0.75,
+            }],
+        )];
+        let csv = cross_board_winners_csv(&tables);
+        assert!(csv.lines().count() == 2 && csv.contains("zynq706"));
+        let j = cross_board_json(&results, &tables);
+        let v = crate::util::json::parse(&j).unwrap();
+        let entries = v.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries[0].get("board").unwrap().as_str().unwrap(), "zynq706");
+        assert_eq!(entries[0].get("best").unwrap().as_str().unwrap(), "1acc");
+        let winners = v.get("winners").unwrap().as_arr().unwrap();
+        assert_eq!(winners[0].get("app").unwrap().as_str().unwrap(), "matmul");
     }
 
     #[test]

@@ -91,7 +91,7 @@ mod tests {
         (p, BoardConfig::zynq706())
     }
 
-    fn ctx<'a>(p: &'a TaskProgram) -> TaskCtx<'a> {
+    fn ctx(p: &TaskProgram) -> TaskCtx<'_> {
         TaskCtx {
             task: 0,
             kernel: 0,

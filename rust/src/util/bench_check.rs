@@ -1,0 +1,222 @@
+//! Bench-regression gate: compare a current `BENCH_*.json` against a
+//! checked-in baseline under `bench_baselines/`.
+//!
+//! The baseline is the contract: every leaf it contains must exist in the
+//! current document (walked by object key / array index), and must match —
+//! numbers within a relative tolerance (a **zero** baseline means "exactly
+//! zero", since a relative band around zero is meaningless), strings and
+//! booleans exactly, `null` as a presence-only placeholder. Extra fields
+//! in the current document are ignored, so benches can grow without
+//! invalidating baselines.
+//!
+//! Wall-clock leaves — keys ending in `_s`, `_ms` or `_secs`, and the
+//! machine-shape keys `workers` / `iters` — are skipped by default: they
+//! track the runner, not the code. Ratio- and count-like leaves
+//! (`speedup`, `feasible_points`, `tasks`, ...) are machine-independent
+//! and are what the ±tolerance actually guards. Pass `strict_time` to
+//! check everything, e.g. on a dedicated, stable perf runner.
+
+use crate::util::json::Value;
+
+/// Outcome of one baseline comparison.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    /// Leaves that matched (path, note).
+    pub passed: Vec<String>,
+    /// Machine-dependent leaves present but not enforced.
+    pub skipped: Vec<String>,
+    /// Regressions / contract violations (path + reason).
+    pub failures: Vec<String>,
+}
+
+impl CheckReport {
+    /// Whether the current document honours the baseline.
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Human-readable summary for the CI log.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.failures {
+            out.push_str(&format!("FAIL  {f}\n"));
+        }
+        for s in &self.skipped {
+            out.push_str(&format!("skip  {s}\n"));
+        }
+        out.push_str(&format!(
+            "bench-check: {} checked, {} skipped, {} failed\n",
+            self.passed.len(),
+            self.skipped.len(),
+            self.failures.len()
+        ));
+        out
+    }
+}
+
+/// Does a leaf key name a wall-clock / machine-shape quantity?
+fn machine_dependent(key: &str) -> bool {
+    key.ends_with("_s")
+        || key.ends_with("_ms")
+        || key.ends_with("_secs")
+        || key == "workers"
+        || key == "iters"
+}
+
+/// Compare `current` against `baseline` (see module docs). `tolerance` is
+/// the allowed relative deviation for numeric leaves (0.2 = ±20%).
+pub fn compare(
+    baseline: &Value,
+    current: &Value,
+    tolerance: f64,
+    strict_time: bool,
+) -> CheckReport {
+    let mut report = CheckReport::default();
+    walk(baseline, current, "$", "", tolerance, strict_time, &mut report);
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+fn walk(
+    base: &Value,
+    cur: &Value,
+    path: &str,
+    key: &str,
+    tol: f64,
+    strict_time: bool,
+    report: &mut CheckReport,
+) {
+    match base {
+        Value::Null => report.passed.push(format!("{path} (present)")),
+        Value::Obj(map) => {
+            for (k, bv) in map {
+                let child = format!("{path}.{k}");
+                match cur.get(k) {
+                    Some(cv) => walk(bv, cv, &child, k, tol, strict_time, report),
+                    None => report.failures.push(format!("{child}: missing in current")),
+                }
+            }
+        }
+        Value::Arr(items) => {
+            let cur_items = cur.as_arr().unwrap_or(&[]);
+            for (i, bv) in items.iter().enumerate() {
+                let child = format!("{path}[{i}]");
+                match cur_items.get(i) {
+                    Some(cv) => walk(bv, cv, &child, key, tol, strict_time, report),
+                    None => report.failures.push(format!("{child}: missing in current")),
+                }
+            }
+        }
+        Value::Str(s) => match cur.as_str() {
+            Some(c) if c == s => report.passed.push(format!("{path} == \"{s}\"")),
+            other => report.failures.push(format!(
+                "{path}: expected \"{s}\", got {:?}",
+                other.unwrap_or("<non-string>")
+            )),
+        },
+        Value::Bool(b) => match cur.as_bool() {
+            Some(c) if c == *b => report.passed.push(format!("{path} == {b}")),
+            _ => report.failures.push(format!("{path}: expected {b}")),
+        },
+        Value::Int(_) | Value::Num(_) => {
+            let b = base.as_f64().unwrap();
+            if machine_dependent(key) && !strict_time {
+                report.skipped.push(format!("{path} (machine-dependent)"));
+                return;
+            }
+            match cur.as_f64() {
+                None => report
+                    .failures
+                    .push(format!("{path}: expected a number near {b}")),
+                // A relative tolerance is meaningless around zero: a zero
+                // baseline is an exact-match contract (and says so).
+                Some(c) if b == 0.0 => {
+                    if c == 0.0 {
+                        report.passed.push(format!("{path}: 0 (exact)"));
+                    } else {
+                        report.failures.push(format!(
+                            "{path}: expected exactly 0 (zero baselines are exact), got {c}"
+                        ));
+                    }
+                }
+                Some(c) => {
+                    let rel = (c - b).abs() / b.abs();
+                    if rel <= tol {
+                        report.passed.push(format!("{path}: {c} vs {b}"));
+                    } else {
+                        report.failures.push(format!(
+                            "{path}: {c} deviates {:.0}% from baseline {b} (tolerance {:.0}%)",
+                            rel * 100.0,
+                            tol * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn check(base: &str, cur: &str) -> CheckReport {
+        compare(&parse(base).unwrap(), &parse(cur).unwrap(), 0.2, false)
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let r = check(
+            r#"{"feasible_points": 100, "speedup": 2.0}"#,
+            r#"{"feasible_points": 110, "speedup": 1.7}"#,
+        );
+        assert!(r.ok(), "{}", r.render());
+        assert_eq!(r.passed.len(), 2);
+    }
+
+    #[test]
+    fn beyond_tolerance_fails() {
+        let r = check(r#"{"feasible_points": 100}"#, r#"{"feasible_points": 50}"#);
+        assert!(!r.ok());
+        assert!(r.render().contains("FAIL"));
+    }
+
+    #[test]
+    fn zero_baseline_is_exact() {
+        assert!(check(r#"{"dominance_cut": 0}"#, r#"{"dominance_cut": 0}"#).ok());
+        let r = check(r#"{"dominance_cut": 0}"#, r#"{"dominance_cut": 1}"#);
+        assert!(!r.ok());
+        assert!(r.render().contains("exactly 0"), "{}", r.render());
+    }
+
+    #[test]
+    fn missing_leaf_fails_and_extra_leaf_is_ignored() {
+        let r = check(r#"{"a": 1}"#, r#"{"b": 1}"#);
+        assert!(!r.ok());
+        let r = check(r#"{"a": 1}"#, r#"{"a": 1, "b": 999}"#);
+        assert!(r.ok());
+    }
+
+    #[test]
+    fn wall_clock_keys_skipped_unless_strict() {
+        let base = r#"{"exhaustive_s": 10.0, "mean_ms": 5.0, "workers": 8}"#;
+        let cur = r#"{"exhaustive_s": 99.0, "mean_ms": 55.0, "workers": 2}"#;
+        let r = check(base, cur);
+        assert!(r.ok(), "{}", r.render());
+        assert_eq!(r.skipped.len(), 3);
+        let strict = compare(&parse(base).unwrap(), &parse(cur).unwrap(), 0.2, true);
+        assert!(!strict.ok());
+    }
+
+    #[test]
+    fn strings_null_and_arrays() {
+        let base = r#"{"apps": [{"app": "matmul", "best": null}], "ok": true}"#;
+        let r = check(base, r#"{"apps": [{"app": "matmul", "best": "2x"}], "ok": true}"#);
+        assert!(r.ok(), "{}", r.render());
+        // Wrong string, short array, wrong bool all fail.
+        assert!(!check(base, r#"{"apps": [{"app": "lu", "best": 1}], "ok": true}"#).ok());
+        assert!(!check(base, r#"{"apps": [], "ok": true}"#).ok());
+        assert!(!check(base, r#"{"apps": [{"app": "matmul", "best": 0}], "ok": false}"#).ok());
+    }
+}

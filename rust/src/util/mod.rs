@@ -6,6 +6,7 @@
 //! implemented here as first-class substrates instead.
 
 pub mod bench;
+pub mod bench_check;
 pub mod fxhash;
 pub mod json;
 
@@ -273,7 +274,7 @@ mod tests {
     fn fmt_helpers() {
         assert_eq!(fmt_ps(500), "0.5 ns");
         assert!(fmt_ps(1_500_000).contains("us"));
-        assert!(fmt_secs(7200.0).contains("h"));
+        assert!(fmt_secs(7200.0).contains('h'));
         assert!(fmt_secs(200_000.0).contains("days"));
     }
 }

@@ -1,0 +1,260 @@
+//! Cross-board sweep guarantees: the board-axis sweep is bit-identical for
+//! any worker count in all three modes, the pruned modes keep their
+//! losslessness contracts (per-board fronts for `explore_pruned`, merged
+//! fronts for `explore_pruned_global`, property-tested over randomized
+//! small spaces), and the reimplemented `experiments::cross_board_matmul`
+//! reproduces the pre-refactor fixed-set decision rows bit for bit.
+
+use zynq_estimator::apps::{cholesky::Cholesky, matmul, matmul::Matmul};
+use zynq_estimator::board::BoardSpace;
+use zynq_estimator::config::{BoardConfig, CoDesign};
+use zynq_estimator::coordinator::sched::Policy;
+use zynq_estimator::coordinator::task::TaskProgram;
+use zynq_estimator::dse::{
+    pareto_front_coords, CrossBoardResult, CrossBoardSweep, DseSpace, KernelSpace, Objective,
+};
+use zynq_estimator::experiments;
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::sim::{simulate, EstimatorModel};
+use zynq_estimator::util::Rng;
+
+fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Build a two-board (zynq702, zynq706) sweep of matmul+cholesky default
+/// spaces. Returns the owned programs together with the axis so the sweep
+/// can borrow them.
+fn axis_programs() -> (BoardSpace, Vec<(usize, &'static str, TaskProgram)>) {
+    let axis = BoardSpace::resolve(&["zynq702", "zynq706"]).unwrap();
+    let mut programs = Vec::new();
+    for (bi, t) in axis.targets.iter().enumerate() {
+        programs.push((bi, "matmul", Matmul::new(256, 64).build_program(&t.board)));
+        programs.push((bi, "cholesky", Cholesky::new(256, 64).build_program(&t.board)));
+    }
+    (axis, programs)
+}
+
+fn build_sweep<'p>(
+    axis: &'p BoardSpace,
+    programs: &'p [(usize, &'static str, TaskProgram)],
+) -> CrossBoardSweep<'p> {
+    let mut sweep = CrossBoardSweep::new();
+    for (bi, app, program) in programs {
+        let t = &axis.targets[*bi];
+        sweep.push(
+            &t.name,
+            app,
+            program,
+            &t.board,
+            &t.part,
+            DseSpace::from_program(program),
+        );
+    }
+    sweep
+}
+
+fn assert_results_bit_identical(a: &[CrossBoardResult], b: &[CrossBoardResult], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: entry count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.board, y.board, "{what}");
+        assert_eq!(x.app, y.app, "{what}");
+        assert_eq!(x.stats, y.stats, "{what}: stats for {}@{}", x.app, x.board);
+        assert_eq!(
+            x.points.len(),
+            y.points.len(),
+            "{what}: point count for {}@{}",
+            x.app,
+            x.board
+        );
+        for (i, (p, q)) in x.points.iter().zip(&y.points).enumerate() {
+            assert_eq!(
+                p.codesign.name, q.codesign.name,
+                "{what}: name at rank {i} of {}@{}",
+                x.app, x.board
+            );
+            assert_eq!(
+                p.est_ms.to_bits(),
+                q.est_ms.to_bits(),
+                "{what}: est_ms at rank {i} of {}@{}",
+                x.app,
+                x.board
+            );
+            assert_eq!(
+                p.energy_j.to_bits(),
+                q.energy_j.to_bits(),
+                "{what}: energy at rank {i} of {}@{}",
+                x.app,
+                x.board
+            );
+        }
+    }
+}
+
+#[test]
+fn board_axis_sweeps_are_bit_identical_for_any_worker_count() {
+    let (axis, programs) = axis_programs();
+    let sweep = build_sweep(&axis, &programs);
+    let run = |mode: usize, w: usize| match mode {
+        0 => sweep.explore(Objective::Time, w),
+        1 => sweep.explore_pruned(Objective::Time, w),
+        _ => sweep.explore_pruned_global(Objective::Time, w),
+    };
+    for (mode, name) in [(0, "exhaustive"), (1, "pruned"), (2, "global-cut")] {
+        let serial = run(mode, 1);
+        for workers in [2, 4, 8] {
+            let parallel = run(mode, workers);
+            assert_results_bit_identical(&serial, &parallel, &format!("{name}/w={workers}"));
+        }
+    }
+}
+
+#[test]
+fn pruned_board_axis_is_lossless_per_board() {
+    let (axis, programs) = axis_programs();
+    let sweep = build_sweep(&axis, &programs);
+    let exhaustive = sweep.explore(Objective::Time, 4);
+    let pruned = sweep.explore_pruned(Objective::Time, 4);
+    for (e, p) in exhaustive.iter().zip(&pruned) {
+        assert!(!e.points.is_empty(), "{}@{}", e.app, e.board);
+        assert_eq!(
+            e.points[0].est_ms.to_bits(),
+            p.points[0].est_ms.to_bits(),
+            "best diverged for {}@{}",
+            e.app,
+            e.board
+        );
+        assert_eq!(
+            pareto_front_coords(&e.points),
+            pareto_front_coords(&p.points),
+            "front diverged for {}@{}",
+            e.app,
+            e.board
+        );
+        // No cross-board cut may fire in the per-board-lossless mode.
+        assert_eq!(p.stats.global_cut, 0, "{}@{}", e.app, e.board);
+    }
+}
+
+#[test]
+fn pruned_equals_exhaustive_per_board_on_random_spaces() {
+    let unroll_pool: [u32; 6] = [4, 8, 16, 32, 64, 128];
+    let axis = BoardSpace::resolve(&["zynq702", "zynq706"]).unwrap();
+    let programs: Vec<TaskProgram> = axis
+        .targets
+        .iter()
+        .map(|t| Matmul::new(256, 64).build_program(&t.board))
+        .collect();
+    forall(10, 0xB0A2D5, |seed, rng| {
+        // Random unroll subsets deliberately include saturated variants
+        // (the dominance cut) and part-busting ones (the resource cut).
+        let mut unrolls: Vec<u32> = Vec::new();
+        for _ in 0..rng.gen_range(1, 4) {
+            let u = unroll_pool[rng.gen_range(0, unroll_pool.len() as u64) as usize];
+            if !unrolls.contains(&u) {
+                unrolls.push(u);
+            }
+        }
+        let space = DseSpace {
+            kernels: vec![KernelSpace {
+                kernel: "mxm64".into(),
+                unrolls,
+                max_instances: rng.gen_range(1, 4) as u32,
+                try_smp: rng.next_f64() < 0.5,
+            }],
+        };
+        let mut sweep = CrossBoardSweep::new();
+        for (t, p) in axis.targets.iter().zip(&programs) {
+            sweep.push(&t.name, "matmul", p, &t.board, &t.part, space.clone());
+        }
+        let exhaustive = sweep.explore(Objective::Time, 3);
+        let pruned = sweep.explore_pruned(Objective::Time, 3);
+        let global = sweep.explore_pruned_global(Objective::Time, 3);
+        for (e, p) in exhaustive.iter().zip(&pruned) {
+            assert!(!e.points.is_empty(), "seed {seed}: empty sweep");
+            assert_eq!(
+                e.points[0].est_ms.to_bits(),
+                p.points[0].est_ms.to_bits(),
+                "seed {seed}: best diverged for {}@{}",
+                e.app,
+                e.board
+            );
+            assert_eq!(
+                pareto_front_coords(&e.points),
+                pareto_front_coords(&p.points),
+                "seed {seed}: front diverged for {}@{}",
+                e.app,
+                e.board
+            );
+        }
+        // The incumbent mode preserves the merged (cross-board) front.
+        let merge = |rs: &[CrossBoardResult]| {
+            let mut all = Vec::new();
+            for r in rs {
+                all.extend(r.points.iter().cloned());
+            }
+            all
+        };
+        assert_eq!(
+            pareto_front_coords(&merge(&exhaustive)),
+            pareto_front_coords(&merge(&global)),
+            "seed {seed}: merged front diverged under the global cut"
+        );
+    });
+}
+
+/// The pre-refactor `cross_board_matmul`: a fixed Fig. 5 loop over
+/// hard-coded (board, part) pairs calling `sim::simulate` per point —
+/// kept here verbatim as the regression oracle for the board-axis
+/// reimplementation.
+fn legacy_cross_board_matmul(n: u64) -> Vec<(String, String, f64)> {
+    let mut out = Vec::new();
+    for (board, part) in [
+        (BoardConfig::zynq706(), FpgaPart::xc7z045()),
+        (BoardConfig::zynq_ultrascale(), FpgaPart::xczu9eg()),
+    ] {
+        let mut best: Option<(String, f64)> = None;
+        for (cd, app) in matmul::fig5_cases(n) {
+            let program = app.build_program(&board);
+            let mut model = EstimatorModel::new(&board);
+            let Ok(res) = simulate(&program, &cd, &board, &part, Policy::Greedy, &mut model)
+            else {
+                continue;
+            };
+            let ms = res.makespan_ms();
+            if best.as_ref().map(|(_, b)| ms < *b).unwrap_or(true) {
+                best = Some((cd.name.clone(), ms));
+            }
+        }
+        let two128 = CoDesign::new("2acc 128")
+            .with_accel("mxm128", matmul::UNROLL_128)
+            .with_accel("mxm128", matmul::UNROLL_128);
+        let program = Matmul::new(n, 128).build_program(&board);
+        let mut model = EstimatorModel::new(&board);
+        if let Ok(res) = simulate(&program, &two128, &board, &part, Policy::Greedy, &mut model) {
+            let ms = res.makespan_ms();
+            if best.as_ref().map(|(_, b)| ms < *b).unwrap_or(true) {
+                best = Some((two128.name.clone(), ms));
+            }
+        }
+        let (name, ms) = best.unwrap();
+        out.push((board.name.clone(), name, ms));
+    }
+    out
+}
+
+#[test]
+fn cross_board_matmul_matches_the_prerefactor_fixed_set() {
+    let new = experiments::cross_board_matmul(512).unwrap();
+    let old = legacy_cross_board_matmul(512);
+    assert_eq!(new.len(), old.len());
+    for (a, b) in new.iter().zip(&old) {
+        assert_eq!(a.0, b.0, "board name");
+        assert_eq!(a.1, b.1, "decision row for {}", a.0);
+        assert_eq!(a.2.to_bits(), b.2.to_bits(), "best ms for {}", a.0);
+    }
+}
