@@ -9,9 +9,9 @@
 //! `bench-results` artifact and gates with `bench-check`.
 
 use zynq_estimator::board::BoardSpace;
-use zynq_estimator::dse::default_workers;
+use zynq_estimator::dse::{default_workers, BudgetAxis};
 use zynq_estimator::experiments;
-use zynq_estimator::metrics::export::cross_board_json;
+use zynq_estimator::metrics::export::{budget_tables_json, cross_board_json};
 use zynq_estimator::util::json::{obj, parse, Value};
 
 fn main() {
@@ -60,6 +60,20 @@ fn main() {
 
     let detail = parse(&cross_board_json(&r.results, &r.winners))
         .expect("own export must be valid JSON");
+    // The other two §I budget axes, embedded machine-readably next to the
+    // time-budget winner tables.
+    let budget_tables = obj(vec![
+        (
+            "energy",
+            parse(&budget_tables_json(BudgetAxis::Energy, &r.energy_winners))
+                .expect("energy budget export must be valid JSON"),
+        ),
+        (
+            "area",
+            parse(&budget_tables_json(BudgetAxis::Area, &r.area_winners))
+                .expect("area budget export must be valid JSON"),
+        ),
+    ]);
     let global_cut: u64 = r.global_results.iter().map(|x| x.stats.global_cut).sum();
     let out = obj(vec![
         ("n", n.into()),
@@ -80,6 +94,7 @@ fn main() {
         ("speedup", (r.exhaustive_s / r.pruned_s.max(1e-12)).into()),
         ("global_cut_total", global_cut.into()),
         ("cross_board", detail),
+        ("budget_tables", budget_tables),
     ])
     .to_json();
     match std::fs::write("BENCH_cross_board.json", &out) {

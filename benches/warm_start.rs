@@ -1,0 +1,117 @@
+//! Warm-start / ordered DSE benchmark — cold-vs-warm and ordered-vs-FIFO
+//! on **mixed-variant** spaces.
+//!
+//! Runs `experiments::warm_start_latency` (matmul + cholesky mixed-variant
+//! spaces through cold FIFO / bound-ascending / ranked pruned sweeps and a
+//! memo-warm second run) plus the perturbed-space robustness study, and
+//! emits `BENCH_warm.json`. The harness itself asserts the exactness
+//! contracts (identical best point and Pareto front across every mode;
+//! zero re-evaluations on the warm second run); the JSON records the point
+//! accounting so `bench-check` gates the headline claims against
+//! `bench_baselines/BENCH_warm.json`:
+//!
+//! * `warm_total_evaluated == 0` — a warm repeat simulates nothing;
+//! * `warm_lt_fifo` — the warm sweep simulates strictly fewer points than
+//!   the cold FIFO baseline;
+//! * `ranked_le_fifo` — best-first ranked ordering never simulates more
+//!   than FIFO on these spaces (the incumbent tightens earlier).
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::dse::default_workers;
+use zynq_estimator::experiments;
+use zynq_estimator::util::json::{arr, obj, Value};
+
+fn main() {
+    let board = BoardConfig::zynq706();
+    let workers = default_workers();
+    let n = 512;
+    let r = experiments::warm_start_latency(n, &board, workers)
+        .expect("warm-start sweeps must be exact");
+    let perturbed = experiments::warm_perturbed_study(n, &board, workers)
+        .expect("perturbed warm sweeps must be exact");
+
+    println!("== Warm-start DSE on mixed-variant spaces (n = {n}, {workers} workers)");
+    println!(
+        "{:>10} {:>9} {:>10} {:>8} {:>8} {:>8} {:>8} {:>9}  {}",
+        "app", "feasible", "enumerated", "fifo", "bound", "ranked", "warm", "memo hit", "best"
+    );
+    let mut fifo_total = 0u64;
+    let mut bound_total = 0u64;
+    let mut ranked_total = 0u64;
+    let mut warm_total = 0u64;
+    let mut records: Vec<Value> = Vec::new();
+    for a in &r.apps {
+        println!(
+            "{:>10} {:>9} {:>10} {:>8} {:>8} {:>8} {:>8} {:>9}  {}",
+            a.name,
+            a.feasible,
+            a.enumerated,
+            a.fifo_evaluated,
+            a.bound_evaluated,
+            a.ranked_evaluated,
+            a.warm_evaluated,
+            a.memo_hits,
+            a.best
+        );
+        fifo_total += a.fifo_evaluated;
+        bound_total += a.bound_evaluated;
+        ranked_total += a.ranked_evaluated;
+        warm_total += a.warm_evaluated;
+        records.push(obj(vec![
+            ("app", a.name.as_str().into()),
+            ("feasible_points", a.feasible.into()),
+            ("enumerated_points", a.enumerated.into()),
+            ("fifo_evaluated", a.fifo_evaluated.into()),
+            ("bound_evaluated", a.bound_evaluated.into()),
+            ("ranked_evaluated", a.ranked_evaluated.into()),
+            ("warm_evaluated", a.warm_evaluated.into()),
+            ("memo_hits", a.memo_hits.into()),
+            ("seeded_cut", a.seeded_cut.into()),
+            ("best", a.best.as_str().into()),
+        ]));
+    }
+    println!(
+        "totals: fifo {fifo_total}, bound {bound_total}, ranked {ranked_total}, warm {warm_total}; \
+         cold-fifo {:.3} s, cold-ranked {:.3} s, warm {:.3} s ({:.1}x vs fifo)",
+        r.fifo_s,
+        r.ranked_s,
+        r.warm_s,
+        r.fifo_s / r.warm_s.max(1e-12),
+    );
+
+    println!("-- perturbed-space robustness (matmul mixed base memo)");
+    let mut perturbed_records: Vec<Value> = Vec::new();
+    for p in &perturbed {
+        println!(
+            "{:>16}: cold {:>4}, warm {:>4}, memo hits {:>4}",
+            p.label, p.cold_evaluated, p.warm_evaluated, p.memo_hits
+        );
+        perturbed_records.push(obj(vec![
+            ("label", p.label.as_str().into()),
+            ("cold_evaluated", p.cold_evaluated.into()),
+            ("warm_evaluated", p.warm_evaluated.into()),
+            ("memo_hits", p.memo_hits.into()),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("n", n.into()),
+        ("workers", r.workers.into()),
+        ("fifo_s", r.fifo_s.into()),
+        ("ranked_s", r.ranked_s.into()),
+        ("warm_s", r.warm_s.into()),
+        ("fifo_total_evaluated", fifo_total.into()),
+        ("bound_total_evaluated", bound_total.into()),
+        ("ranked_total_evaluated", ranked_total.into()),
+        ("warm_total_evaluated", warm_total.into()),
+        ("warm_lt_fifo", (warm_total < fifo_total).into()),
+        ("ranked_le_fifo", (ranked_total <= fifo_total).into()),
+        ("apps", arr(records)),
+        ("perturbed", arr(perturbed_records)),
+    ])
+    .to_json();
+    match std::fs::write("BENCH_warm.json", &out) {
+        Ok(()) => println!("wrote BENCH_warm.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_warm.json: {e}"),
+    }
+}

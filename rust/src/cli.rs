@@ -120,11 +120,22 @@ COMMANDS (one per paper experiment, plus utilities):
                  [--n 512] [--bs 64] [--top 15] [--workers N]   (paper §VII future work;
                  [--pruned] [--suite [--exhaustive]]             N=0 -> one per core;
                  [--boards zynq702,zynq706 [--global-cut]]       --pruned: bound-guided cuts;
-                                                                 --suite: sweep matmul+cholesky
-                                                                 +lu+stencil in one shared pool;
-                                                                 --boards: platform as a swept
+                 [--memo m.json] [--mixed]                       --suite: sweep matmul+cholesky
+                 [--order fifo|bound|ranked]                     +lu+stencil in one shared pool;
+                 [--budget time|energy|area|all]                 --boards: platform as a swept
                                                                  axis + board-winner table,
-                                                                 pruned unless --exhaustive)
+                                                                 pruned unless --exhaustive;
+                                                                 --memo: warm-start from / record
+                                                                 into a persistent eval memo
+                                                                 (also with --boards: sibling-
+                                                                 board frontier seeding);
+                                                                 --mixed: heterogeneous unroll
+                                                                 variants per kernel instance;
+                                                                 --order: bound-round candidate
+                                                                 order (default ranked w/ --memo,
+                                                                 else bound);
+                                                                 --budget: winner-table axis for
+                                                                 --boards)
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
   robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
   analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
@@ -357,6 +368,33 @@ fn cmd_hls(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+/// `--memo <path>`: `Some(path)` when given with a value; an error when
+/// the flag is present but bare (silently ignoring it would drop the
+/// user's intent to persist evaluations).
+fn memo_path_from_args(args: &Args) -> anyhow::Result<Option<&str>> {
+    if !args.has("memo") {
+        return Ok(None);
+    }
+    args.get("memo")
+        .map(Some)
+        .ok_or_else(|| anyhow::anyhow!("--memo requires a file path (e.g. --memo memo.json)"))
+}
+
+/// `--order fifo|bound|ranked`; defaults to `ranked` when a memo is in
+/// play (the warm path exists to tighten the incumbent early) and to the
+/// historical `bound` otherwise.
+fn order_from_args(args: &Args) -> anyhow::Result<crate::dse::OrderMode> {
+    match args.get("order") {
+        None => Ok(if args.has("memo") {
+            crate::dse::OrderMode::Ranked
+        } else {
+            crate::dse::OrderMode::BoundAsc
+        }),
+        Some(o) => crate::dse::OrderMode::parse(o)
+            .ok_or_else(|| anyhow::anyhow!("unknown order '{o}' (fifo|bound|ranked)")),
+    }
+}
+
 fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let top = args.u64_or("top", 15)? as usize;
     let objective = match args.get("objective") {
@@ -368,6 +406,7 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         0 => crate::dse::default_workers(),
         w => w,
     };
+    let order = order_from_args(args)?;
     if args.has("boards") {
         return cmd_dse_boards(args, objective, top, workers);
     }
@@ -378,11 +417,40 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let n = args.u64_or("n", 512)?;
     let bs = args.u64_or("bs", 64)?;
     let program = build_app_program(app, n, bs, board)?;
-    let space = crate::dse::DseSpace::from_program(&program);
+    let mut space = crate::dse::DseSpace::from_program(&program);
+    space.mixed = args.has("mixed");
     let ctx = crate::dse::SweepContext::for_space(&program, board, &FpgaPart::xc7z045(), &space);
     let t0 = std::time::Instant::now();
+    if let Some(memo_path) = memo_path_from_args(args)? {
+        if !args.has("pruned") {
+            eprintln!("note: --memo implies the bound-guided pruned (warm) path");
+        }
+        let path = std::path::Path::new(memo_path);
+        let mut memo = crate::dse::EvalMemo::load_or_new(path)?;
+        let (points, stats) = ctx.explore_warm(&space, &mut memo, objective, workers, order);
+        let secs = t0.elapsed().as_secs_f64();
+        memo.save(path)?;
+        print!("{}", crate::dse::render(&points, top, objective));
+        println!("pruning: {}", stats.render());
+        println!(
+            "memo: {} hits, {} new points recorded -> {memo_path} ({} points, {} contexts)",
+            stats.memo_hits,
+            stats.evaluated,
+            memo.n_points(),
+            memo.n_contexts(),
+        );
+        println!(
+            "swept {} of {} feasible points in {:.3} s ({workers} workers, {:?} order, {} cached HLS reports)",
+            stats.evaluated,
+            stats.feasible_points,
+            secs,
+            order,
+            ctx.cached_reports(),
+        );
+        return Ok(0);
+    }
     if args.has("pruned") {
-        let (points, stats) = ctx.explore_pruned(&space, objective, workers);
+        let (points, stats) = ctx.explore_pruned_with(&space, objective, workers, order);
         let secs = t0.elapsed().as_secs_f64();
         print!("{}", crate::dse::render(&points, top, objective));
         println!("pruning: {}", stats.render());
@@ -394,6 +462,9 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             ctx.cached_reports(),
         );
         return Ok(0);
+    }
+    if args.has("order") {
+        eprintln!("note: --order applies to pruned sweeps; ignored for the exhaustive path");
     }
     let points = ctx.explore(&space, objective, workers);
     let secs = t0.elapsed().as_secs_f64();
@@ -422,6 +493,9 @@ fn cmd_dse_suite(
     let bs = args.u64_or("bs", 64)?;
     if let Some(app) = args.get("app") {
         eprintln!("note: --suite sweeps all four apps; --app {app} is ignored");
+    }
+    if args.has("mixed") || args.has("order") || args.has("memo") {
+        eprintln!("note: --mixed/--order/--memo are not wired for --suite; ignored");
     }
     let part = FpgaPart::xc7z045();
     let programs: Vec<(&str, crate::coordinator::task::TaskProgram)> = crate::apps::SUITE_APPS
@@ -480,6 +554,9 @@ fn cmd_dse_boards(
 ) -> anyhow::Result<i32> {
     let n = args.u64_or("n", 512)?;
     let bs = args.u64_or("bs", 64)?;
+    if args.has("mixed") || args.has("order") {
+        eprintln!("note: --mixed and --order apply to single-app sweeps; ignored with --boards");
+    }
     let axis = crate::board::BoardSpace::resolve(&args.get_all("boards"))?;
     let apps: Vec<&str> = if args.has("suite") {
         crate::apps::SUITE_APPS.to_vec()
@@ -488,8 +565,16 @@ fn cmd_dse_boards(
     };
     let programs = crate::dse::cross::build_axis_programs(&axis, &apps, n, bs)?;
     let sweep = crate::dse::cross::sweep_from_programs(&axis, &programs);
-    // Pruned by default (matching `dse --suite`); `--exhaustive` opts out.
-    let mode = if args.has("global-cut") {
+    // Pruned by default (matching `dse --suite`); `--exhaustive` opts out;
+    // `--memo` warm-starts from (and records into) a persistent eval memo
+    // with sibling-board frontier seeding.
+    let memo_arg = memo_path_from_args(args)?;
+    let mode = if memo_arg.is_some() {
+        if args.has("exhaustive") || args.has("global-cut") {
+            eprintln!("note: --memo (warm mode) takes precedence over --exhaustive/--global-cut");
+        }
+        "warm"
+    } else if args.has("global-cut") {
         "global-cut"
     } else if args.has("exhaustive") {
         "exhaustive"
@@ -498,6 +583,21 @@ fn cmd_dse_boards(
     };
     let t0 = std::time::Instant::now();
     let results = match mode {
+        "warm" => {
+            let path = std::path::PathBuf::from(memo_arg.unwrap());
+            let mut memo = crate::dse::EvalMemo::load_or_new(&path)?;
+            let results = sweep.explore_pruned_warm(&mut memo, objective, workers);
+            memo.save(&path)?;
+            let hits: u64 = results.iter().map(|r| r.stats.memo_hits).sum();
+            println!(
+                "memo: {} hits across the axis -> {} ({} points, {} contexts)",
+                hits,
+                path.display(),
+                memo.n_points(),
+                memo.n_contexts(),
+            );
+            results
+        }
         "global-cut" => sweep.explore_pruned_global(objective, workers),
         "pruned" => sweep.explore_pruned(objective, workers),
         _ => sweep.explore(objective, workers),
@@ -515,9 +615,25 @@ fn cmd_dse_boards(
         evaluated += r.stats.evaluated;
         feasible += r.stats.feasible_points;
     }
-    for (app, rows) in crate::dse::board_winner_table(&results) {
-        print!("{}", crate::dse::cross::render_winner_table(&app, &rows));
-        println!();
+    let axes: Vec<crate::dse::BudgetAxis> = match args.get("budget") {
+        None => vec![crate::dse::BudgetAxis::Time],
+        Some("all") => vec![
+            crate::dse::BudgetAxis::Time,
+            crate::dse::BudgetAxis::Energy,
+            crate::dse::BudgetAxis::Area,
+        ],
+        Some(a) => {
+            let axis = crate::dse::BudgetAxis::parse(a).ok_or_else(|| {
+                anyhow::anyhow!("unknown budget axis '{a}' (time|energy|area|all)")
+            })?;
+            vec![axis]
+        }
+    };
+    for axis_kind in axes {
+        for (app, rows) in crate::dse::board_winner_table_for(&results, axis_kind) {
+            print!("{}", crate::dse::cross::render_budget_table(&app, &rows, axis_kind));
+            println!();
+        }
     }
     println!(
         "board axis: {} boards x {} apps, {evaluated} of {feasible} feasible points \
@@ -851,6 +967,73 @@ mod tests {
             0
         );
         assert!(run(&argv("dse --boards zynq9000")).is_err());
+    }
+
+    #[test]
+    fn dse_memo_command_round_trips() {
+        let dir = std::env::temp_dir().join("zynq_cli_memo");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("memo.json");
+        std::fs::remove_file(&memo).ok();
+        let cmd = format!(
+            "dse --app matmul --n 256 --bs 64 --workers 2 --top 3 --mixed --memo {}",
+            memo.display()
+        );
+        // Cold run records the memo; the warm re-run must load it back.
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        assert!(memo.exists());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+        // A bare --memo is a usage error everywhere, never a panic or a
+        // silent no-op.
+        assert!(run(&argv("dse --app matmul --n 256 --memo")).is_err());
+        assert!(run(&argv("dse --boards zynq702 --n 256 --memo")).is_err());
+    }
+
+    #[test]
+    fn dse_order_and_budget_flags() {
+        assert_eq!(
+            run(&argv(
+                "dse --app matmul --n 256 --bs 64 --workers 2 --top 3 --pruned --order fifo"
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv(
+                "dse --app matmul --n 256 --bs 64 --workers 2 --top 3 --pruned --order ranked --mixed"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&argv(
+            "dse --app matmul --n 256 --pruned --order bogus"
+        ))
+        .is_err());
+        assert_eq!(
+            run(&argv(
+                "dse --boards zynq702,zynq706 --n 256 --workers 2 --top 3 --budget all"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&argv("dse --boards zynq702 --n 256 --budget bogus")).is_err());
+    }
+
+    #[test]
+    fn dse_boards_memo_warm_runs() {
+        let dir = std::env::temp_dir().join("zynq_cli_boards_memo");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("memo.json");
+        std::fs::remove_file(&memo).ok();
+        let cmd = format!(
+            "dse --boards zynq702,zynq706 --n 256 --workers 2 --top 3 --memo {}",
+            memo.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        assert!(memo.exists());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

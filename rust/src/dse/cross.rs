@@ -31,12 +31,14 @@
 //! programmer actually needs: at every time budget, which board (and
 //! which co-design on it) reaches that budget with the least energy.
 
-use super::prune::PruneStats;
+use super::prune::{OrderMode, PruneStats};
 use super::sweep::{SweepContext, SweepSuite};
+use super::warm::EvalMemo;
 use super::{pareto_front, DsePoint, DseSpace, Objective};
 use crate::config::BoardConfig;
 use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
+use crate::util::fxhash::FxHashMap;
 
 /// Ranked sweep output of one (board, application) entry.
 #[derive(Clone, Debug)]
@@ -164,6 +166,75 @@ impl<'p> CrossBoardSweep<'p> {
                 .collect(),
         )
     }
+
+    /// Warm-started pruned sweep against a persistent
+    /// [`EvalMemo`](super::EvalMemo), with **board-axis warm starts**:
+    /// entries run sequentially in push order (each still fanning out over
+    /// `workers` threads), and a board's candidate *ordering* is seeded
+    /// from sibling results of the same application — produced earlier in
+    /// the call, or persisted in the memo by an earlier run — each
+    /// sibling point's makespan scaled by the fabric-clock ratio as a
+    /// **prior only**. Priors never cut: every
+    /// candidate is still verified against its own real lower bounds and
+    /// really-evaluated (or memo-exact) incumbent points, so each entry
+    /// keeps the full per-board losslessness contract of
+    /// [`CrossBoardSweep::explore_pruned`] — identical best point and
+    /// time-energy Pareto front, per board, for any worker count. Memo
+    /// hits skip re-simulation exactly as in
+    /// [`SweepContext::explore_warm`]; second warm runs over an unchanged
+    /// axis evaluate zero new points.
+    ///
+    /// When several siblings predict the same co-design, the one with the
+    /// fabric clock closest to the current board's wins (ties: earlier
+    /// push order) — the scaling prior degrades with clock distance.
+    pub fn explore_pruned_warm(
+        &self,
+        memo: &mut EvalMemo,
+        objective: Objective,
+        workers: usize,
+    ) -> Vec<CrossBoardResult> {
+        let mut results = Vec::new();
+        for (entry, (board_name, app_name, _group)) in self.suite.apps().iter().zip(&self.keys) {
+            let my_mhz = entry.ctx.board.fabric_freq_mhz;
+            // Sibling source: the memo. Each entry's sweep records its
+            // full point set before the next entry starts, so earlier
+            // in-call siblings and siblings persisted by earlier runs
+            // come out of one place (matched on the recorded program
+            // metadata, own context excluded).
+            let fp = super::warm::context_fingerprint(&entry.ctx);
+            let mut sibs = memo.sibling_points_ms(&entry.ctx.program.app_name, fp);
+            // Closest fabric clock first; only missing keys are filled by
+            // farther siblings (ties: deterministic fingerprint order).
+            sibs.sort_by(|a, b| {
+                let da = (a.0 / my_mhz).ln().abs();
+                let db = (b.0 / my_mhz).ln().abs();
+                da.total_cmp(&db)
+            });
+            let mut priors: FxHashMap<String, f64> = FxHashMap::default();
+            for (sib_mhz, points) in &sibs {
+                let scale = sib_mhz / my_mhz;
+                for (key, ms) in points {
+                    priors.entry(key.clone()).or_insert(ms * scale);
+                }
+            }
+            let (points, stats) = super::prune::explore_pruned_warm(
+                &entry.ctx,
+                &entry.space,
+                Some(&mut *memo),
+                &priors,
+                OrderMode::Ranked,
+                objective,
+                workers,
+            );
+            results.push(CrossBoardResult {
+                board: board_name.clone(),
+                app: app_name.clone(),
+                points,
+                stats,
+            });
+        }
+        results
+    }
 }
 
 /// Build one program per (board, app) pair of the axis — board-major, the
@@ -208,30 +279,93 @@ pub fn sweep_from_programs<'p>(
     sweep
 }
 
-/// One row of the cross-board decision table: at `time_budget_ms`, `board`
-/// running `codesign` reaches the budget with the least energy any
-/// platform of the axis can offer.
+/// One row of a cross-board decision table. The interpretation of "the
+/// budget" depends on the [`BudgetAxis`] the table was built for; the row
+/// always carries the winning point's full coordinates (time, energy,
+/// fabric utilization) so every axis reads off the same struct.
 #[derive(Clone, Debug)]
 pub struct BudgetRow {
-    /// The time budget this row unlocks (the point's makespan).
+    /// The winning point's makespan. On the [`BudgetAxis::Time`] axis this
+    /// *is* the budget the row unlocks.
     pub time_budget_ms: f64,
     /// Winning board at this budget.
     pub board: String,
     /// Winning co-design on that board.
     pub codesign: String,
-    /// Energy of the winning point (the minimum achievable within budget).
+    /// Energy of the winning point. On the [`BudgetAxis::Energy`] axis
+    /// this is the budget the row unlocks.
     pub energy_j: f64,
+    /// Fabric utilization of the winning point, in [0, 1]. On the
+    /// [`BudgetAxis::Area`] axis this is the budget the row unlocks.
+    pub fabric_util: f64,
+}
+
+/// The budget axis a winner table answers — "within this budget, which
+/// board (and which co-design on it) is best on the other axis?" This is
+/// the §I part-selection story at its three decision knobs: a deadline
+/// (time), an energy envelope (battery / thermal), and a fabric-area cap
+/// (part cost — a point that fits in less fabric fits a cheaper part).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetAxis {
+    /// At every time budget: the least-energy (board, co-design).
+    Time,
+    /// At every energy budget: the fastest (board, co-design).
+    Energy,
+    /// At every fabric-utilization budget: the fastest (board, co-design).
+    Area,
+}
+
+impl BudgetAxis {
+    /// Parse a CLI axis name (`time` | `energy` | `area`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "time" => Some(BudgetAxis::Time),
+            "energy" => Some(BudgetAxis::Energy),
+            "area" => Some(BudgetAxis::Area),
+            _ => None,
+        }
+    }
+
+    /// The axis name used in exports and table headers.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BudgetAxis::Time => "time",
+            BudgetAxis::Energy => "energy",
+            BudgetAxis::Area => "area",
+        }
+    }
+}
+
+/// Indices of the (fabric_util, est_ms) Pareto-optimal points — the area
+/// axis trades fabric for speed the way the time-energy front trades time
+/// for energy.
+fn area_time_front(points: &[DsePoint]) -> Vec<usize> {
+    let coords: Vec<(f64, f64)> = points.iter().map(|p| (p.fabric_util, p.est_ms)).collect();
+    super::front_indices(&coords)
 }
 
 /// Digest per-(board, app) sweep results into one decision table per
-/// application: the merged cross-board time-energy Pareto front, sorted by
-/// ascending time (hence descending energy). Each row is the
-/// energy-optimal choice at exactly that row's time budget; for an
-/// arbitrary budget, the *last* row that still fits it wins — rows trade
-/// time for energy as you read down. Applications appear in first-push
-/// order; within a table, exact coordinate ties break by board then
-/// co-design name, so the output is deterministic.
-pub fn board_winner_table(results: &[CrossBoardResult]) -> Vec<(String, Vec<BudgetRow>)> {
+/// application along a [`BudgetAxis`]:
+///
+/// * [`BudgetAxis::Time`] — the merged cross-board time-energy Pareto
+///   front, sorted by ascending time (hence descending energy). Each row
+///   is the energy-optimal choice at exactly that row's time budget;
+/// * [`BudgetAxis::Energy`] — the same front read the other way: sorted by
+///   ascending energy, each row is the *fastest* choice at exactly that
+///   row's energy budget;
+/// * [`BudgetAxis::Area`] — the merged (fabric-utilization, time) front,
+///   sorted by ascending utilization: each row is the fastest choice that
+///   fits in that row's fabric budget (part-cost selection).
+///
+/// For an arbitrary budget on any axis, the *last* row whose budget
+/// coordinate still fits wins — rows trade the budgeted resource for the
+/// optimized one as you read down. Applications appear in first-push
+/// order; exact coordinate ties break by board then co-design name, so
+/// the output is deterministic.
+pub fn board_winner_table_for(
+    results: &[CrossBoardResult],
+    axis: BudgetAxis,
+) -> Vec<(String, Vec<BudgetRow>)> {
     let mut apps: Vec<&str> = Vec::new();
     for r in results {
         if !apps.contains(&r.app.as_str()) {
@@ -251,7 +385,11 @@ pub fn board_winner_table(results: &[CrossBoardResult]) -> Vec<(String, Vec<Budg
                     }
                 }
             }
-            let mut rows: Vec<BudgetRow> = pareto_front(&points)
+            let front = match axis {
+                BudgetAxis::Time | BudgetAxis::Energy => pareto_front(&points),
+                BudgetAxis::Area => area_time_front(&points),
+            };
+            let mut rows: Vec<BudgetRow> = front
                 .into_iter()
                 .map(|i| {
                     let (ri, p) = merged[i];
@@ -260,13 +398,26 @@ pub fn board_winner_table(results: &[CrossBoardResult]) -> Vec<(String, Vec<Budg
                         board: results[ri].board.clone(),
                         codesign: p.codesign.name.clone(),
                         energy_j: p.energy_j,
+                        fabric_util: p.fabric_util,
                     }
                 })
                 .collect();
             rows.sort_by(|a, b| {
-                a.time_budget_ms
-                    .total_cmp(&b.time_budget_ms)
-                    .then(a.energy_j.total_cmp(&b.energy_j))
+                let primary = match axis {
+                    BudgetAxis::Time => a
+                        .time_budget_ms
+                        .total_cmp(&b.time_budget_ms)
+                        .then(a.energy_j.total_cmp(&b.energy_j)),
+                    BudgetAxis::Energy => a
+                        .energy_j
+                        .total_cmp(&b.energy_j)
+                        .then(a.time_budget_ms.total_cmp(&b.time_budget_ms)),
+                    BudgetAxis::Area => a
+                        .fabric_util
+                        .total_cmp(&b.fabric_util)
+                        .then(a.time_budget_ms.total_cmp(&b.time_budget_ms)),
+                };
+                primary
                     .then_with(|| a.board.cmp(&b.board))
                     .then_with(|| a.codesign.cmp(&b.codesign))
             });
@@ -281,7 +432,15 @@ pub fn board_winner_table(results: &[CrossBoardResult]) -> Vec<(String, Vec<Budg
         .collect()
 }
 
-/// Render one application's winner table for the CLI.
+/// The time-budget decision table — see
+/// [`board_winner_table_for`]`(results, BudgetAxis::Time)`.
+pub fn board_winner_table(results: &[CrossBoardResult]) -> Vec<(String, Vec<BudgetRow>)> {
+    board_winner_table_for(results, BudgetAxis::Time)
+}
+
+/// Render one application's winner table for the CLI (time axis — kept
+/// byte-stable for the bench output; other axes use
+/// [`render_budget_table`]).
 pub fn render_winner_table(app: &str, rows: &[BudgetRow]) -> String {
     let mut out = format!("== {app}: which board wins at which time budget\n");
     out.push_str(&format!(
@@ -292,6 +451,33 @@ pub fn render_winner_table(app: &str, rows: &[BudgetRow]) -> String {
         out.push_str(&format!(
             "{:>12.2} {:>18} {:36} {:>10.3}\n",
             r.time_budget_ms, r.board, r.codesign, r.energy_j
+        ));
+    }
+    out
+}
+
+/// Render one application's winner table for any [`BudgetAxis`].
+pub fn render_budget_table(app: &str, rows: &[BudgetRow], axis: BudgetAxis) -> String {
+    if axis == BudgetAxis::Time {
+        return render_winner_table(app, rows);
+    }
+    let (what, unit) = match axis {
+        BudgetAxis::Energy => ("energy", "budget (J)"),
+        _ => ("fabric-area", "budget util"),
+    };
+    let mut out = format!("== {app}: which board wins at which {what} budget\n");
+    out.push_str(&format!(
+        "{:>12} {:>18} {:36} {:>10} {:>10}\n",
+        unit, "board", "co-design", "time (ms)", "energy (J)"
+    ));
+    for r in rows {
+        let budget = match axis {
+            BudgetAxis::Energy => format!("{:>12.3}", r.energy_j),
+            _ => format!("{:>11.0}%", r.fabric_util * 100.0),
+        };
+        out.push_str(&format!(
+            "{budget} {:>18} {:36} {:>10.2} {:>10.3}\n",
+            r.board, r.codesign, r.time_budget_ms, r.energy_j
         ));
     }
     out
@@ -400,5 +586,145 @@ mod tests {
                 assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn warm_cross_sweep_is_exact_and_second_run_hits_the_memo() {
+        let (space, programs) = fixture();
+        let sweep = sweep_fixture(&programs, &space);
+        let exhaustive = sweep.explore(Objective::Time, 2);
+        let mut memo = super::super::warm::EvalMemo::new();
+        let warm = sweep.explore_pruned_warm(&mut memo, Objective::Time, 2);
+        // Per-board losslessness: sibling priors only order, never cut.
+        for (e, w) in exhaustive.iter().zip(&warm) {
+            assert_eq!(e.board, w.board);
+            assert_eq!(
+                e.points[0].est_ms.to_bits(),
+                w.points[0].est_ms.to_bits(),
+                "warm best diverged on {}",
+                e.board
+            );
+            assert_eq!(pareto_front_coords(&e.points), pareto_front_coords(&w.points));
+        }
+        // The later board of the axis got sibling priors (zynq702 swept
+        // first); exactness held regardless.
+        assert!(warm.iter().map(|r| r.stats.evaluated).sum::<u64>() > 0);
+        // Second warm run over the unchanged axis: zero new evaluations,
+        // every point a memo hit, bit-identical output.
+        let again = sweep.explore_pruned_warm(&mut memo, Objective::Time, 2);
+        for (w, a) in warm.iter().zip(&again) {
+            assert_eq!(a.stats.evaluated, 0, "{:?}", a.stats);
+            assert_eq!(a.stats.memo_hits as usize, w.points.len());
+            assert_eq!(a.points.len(), w.points.len());
+            for (x, y) in a.points.iter().zip(&w.points) {
+                assert_eq!(x.codesign.name, y.codesign.name);
+                assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits());
+            }
+        }
+        // Determinism across worker counts (fresh memo per count so hits
+        // match the two-worker run).
+        let mut memo1 = super::super::warm::EvalMemo::new();
+        let serial = sweep.explore_pruned_warm(&mut memo1, Objective::Time, 1);
+        for (a, b) in warm.iter().zip(&serial) {
+            assert_eq!(a.stats, b.stats);
+            for (x, y) in a.points.iter().zip(&b.points) {
+                assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn memo_persisted_siblings_seed_cross_run_sweeps() {
+        let (space, programs) = fixture();
+        let mut memo = super::super::warm::EvalMemo::new();
+        // Run 1: only the first board of the axis.
+        let mut sweep_a = CrossBoardSweep::new();
+        let ta = &space.targets[0];
+        sweep_a.push(
+            &ta.name,
+            "matmul",
+            &programs[0].1,
+            &ta.board,
+            &ta.part,
+            DseSpace::from_program(&programs[0].1),
+        );
+        sweep_a.explore_pruned_warm(&mut memo, Objective::Time, 2);
+        // Run 2 (separate call, separate sweep): the second board alone —
+        // its ordering priors can only come from the memo-persisted run-1
+        // context. Results must still equal the cold exhaustive sweep.
+        let mut sweep_b = CrossBoardSweep::new();
+        let tb = &space.targets[1];
+        sweep_b.push(
+            &tb.name,
+            "matmul",
+            &programs[1].1,
+            &tb.board,
+            &tb.part,
+            DseSpace::from_program(&programs[1].1),
+        );
+        let warm = sweep_b.explore_pruned_warm(&mut memo, Objective::Time, 2);
+        let exhaustive = sweep_b.explore(Objective::Time, 2);
+        assert_eq!(
+            exhaustive[0].points[0].est_ms.to_bits(),
+            warm[0].points[0].est_ms.to_bits()
+        );
+        assert_eq!(
+            pareto_front_coords(&exhaustive[0].points),
+            pareto_front_coords(&warm[0].points)
+        );
+        // The run-1 context is visible as a memo-persisted sibling of the
+        // run-2 board (same app metadata, different fingerprint).
+        let fp_b = super::super::warm::context_fingerprint(&sweep_b.suite.apps()[0].ctx);
+        let sibs = memo.sibling_points_ms(&programs[1].1.app_name, fp_b);
+        assert_eq!(sibs.len(), 1);
+        assert!(!sibs[0].1.is_empty());
+        assert_eq!(sibs[0].0.to_bits(), ta.board.fabric_freq_mhz.to_bits());
+    }
+
+    #[test]
+    fn budget_axes_answer_the_three_part_selection_questions() {
+        let (space, programs) = fixture();
+        let sweep = sweep_fixture(&programs, &space);
+        let results = sweep.explore(Objective::Time, 2);
+
+        // Energy axis: same Pareto set as the time axis, read the other
+        // way — sorted by ascending energy, hence descending time.
+        let time_rows = &board_winner_table_for(&results, BudgetAxis::Time)[0].1;
+        let energy_rows = &board_winner_table_for(&results, BudgetAxis::Energy)[0].1;
+        assert_eq!(time_rows.len(), energy_rows.len());
+        for w in energy_rows.windows(2) {
+            assert!(w[0].energy_j <= w[1].energy_j);
+            assert!(w[0].time_budget_ms >= w[1].time_budget_ms);
+        }
+        let mut t: Vec<(u64, u64)> = time_rows
+            .iter()
+            .map(|r| (r.time_budget_ms.to_bits(), r.energy_j.to_bits()))
+            .collect();
+        let mut e: Vec<(u64, u64)> = energy_rows
+            .iter()
+            .map(|r| (r.time_budget_ms.to_bits(), r.energy_j.to_bits()))
+            .collect();
+        t.sort_unstable();
+        e.sort_unstable();
+        assert_eq!(t, e);
+
+        // Area axis: ascending fabric budget, nondominated in (util, time),
+        // time improving as the budget grows.
+        let area_rows = &board_winner_table_for(&results, BudgetAxis::Area)[0].1;
+        assert!(!area_rows.is_empty());
+        for w in area_rows.windows(2) {
+            assert!(w[0].fabric_util <= w[1].fabric_util);
+            assert!(w[0].time_budget_ms >= w[1].time_budget_ms);
+        }
+        // Rendering covers every axis.
+        assert!(render_budget_table("matmul", energy_rows, BudgetAxis::Energy)
+            .contains("energy budget"));
+        assert!(render_budget_table("matmul", area_rows, BudgetAxis::Area).contains('%'));
+        assert_eq!(
+            render_budget_table("matmul", time_rows, BudgetAxis::Time),
+            render_winner_table("matmul", time_rows)
+        );
+        assert_eq!(BudgetAxis::parse("area"), Some(BudgetAxis::Area));
+        assert_eq!(BudgetAxis::parse("bogus"), None);
     }
 }

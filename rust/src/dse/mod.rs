@@ -10,7 +10,10 @@
 //! (one-time dependence graph + elaboration + memoized HLS reports) and
 //! parallel, deterministic point evaluation. The [`prune`] module cuts the
 //! cartesian space *before* evaluation (resource, dominance and
-//! lower-bound cuts — lossless for the best point and the Pareto front),
+//! lower-bound cuts — lossless for the best point and the Pareto front —
+//! with selectable round ordering, [`OrderMode`]), the [`warm`] module
+//! carries evaluations *across* sweeps (a persistent [`EvalMemo`]: memo
+//! hits skip re-simulation bit-identically and seed the bound frontier),
 //! [`SweepSuite`] batches several applications through one shared worker
 //! pool, and [`cross::CrossBoardSweep`] makes the *platform* a swept axis:
 //! a [`crate::board::BoardSpace`] of named (board, FPGA part) candidates
@@ -23,6 +26,7 @@
 pub mod cross;
 pub mod prune;
 pub mod sweep;
+pub mod warm;
 
 use std::collections::BTreeMap;
 
@@ -30,9 +34,13 @@ use crate::config::{BoardConfig, CoDesign};
 use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
 
-pub use cross::{board_winner_table, BudgetRow, CrossBoardResult, CrossBoardSweep};
-pub use prune::{enumerate_pruned, PruneStats};
+pub use cross::{
+    board_winner_table, board_winner_table_for, BudgetAxis, BudgetRow, CrossBoardResult,
+    CrossBoardSweep,
+};
+pub use prune::{enumerate_pruned, OrderMode, PruneStats};
 pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
+pub use warm::EvalMemo;
 
 /// Exploration space for one kernel.
 #[derive(Clone, Debug)]
@@ -52,6 +60,14 @@ pub struct KernelSpace {
 pub struct DseSpace {
     /// Per-kernel sub-spaces; the full space is their cartesian product.
     pub kernels: Vec<KernelSpace>,
+    /// Mixed-variant enumeration: when set, a kernel's accelerator
+    /// instances may use *different* unroll variants (every multiset of
+    /// variants up to `max_instances`), instead of the homogeneous
+    /// `count × same-unroll` options. Grows the per-kernel option count
+    /// from `unrolls × max_instances` to `Σ_c C(unrolls+c-1, c)` — the
+    /// combinatorial regime the dominance/bound cuts and the warm-start
+    /// layer are stress-tested against.
+    pub mixed: bool,
 }
 
 impl DseSpace {
@@ -69,8 +85,78 @@ impl DseSpace {
                 try_smp: k.targets.smp,
             })
             .collect();
-        Self { kernels }
+        Self {
+            kernels,
+            mixed: false,
+        }
     }
+
+    /// Builder: switch the space to mixed-variant enumeration.
+    pub fn with_mixed(mut self) -> Self {
+        self.mixed = true;
+        self
+    }
+}
+
+/// Index multisets over `n_variants` per-kernel accelerator variants, in
+/// the canonical per-kernel option order shared by the exhaustive
+/// ([`SweepContext::enumerate`]) and pruned ([`prune`]) enumerations (the
+/// empty option is *not* included — callers prepend it):
+///
+/// * homogeneous (`mixed == false`): variant-major, count-minor —
+///   `[v]`, `[v, v]`, … for each variant `v` in order (the historical
+///   order, kept bit-compatible);
+/// * mixed: count-major, then lexicographic non-decreasing index
+///   sequences — `[0]`, `[1]`, …, `[0,0]`, `[0,1]`, …
+///
+/// Both paths map surviving (non-dominated, deduplicated) variants through
+/// the same function, so the pruned candidate list stays a subsequence of
+/// the exhaustive one in the same relative order.
+pub(crate) fn variant_multisets(
+    n_variants: usize,
+    max_instances: u32,
+    mixed: bool,
+) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    if n_variants == 0 {
+        return out;
+    }
+    if !mixed {
+        for v in 0..n_variants {
+            for count in 1..=max_instances {
+                out.push(vec![v; count as usize]);
+            }
+        }
+        return out;
+    }
+    for count in 1..=max_instances {
+        let mut cur = vec![0usize; count as usize];
+        loop {
+            out.push(cur.clone());
+            // Advance the non-decreasing odometer: bump the rightmost
+            // index that still can, and reset the tail to its new value.
+            let mut level = cur.len();
+            loop {
+                if level == 0 {
+                    break;
+                }
+                let i = level - 1;
+                if cur[i] + 1 < n_variants {
+                    cur[i] += 1;
+                    let v = cur[i];
+                    for slot in cur.iter_mut().skip(i + 1) {
+                        *slot = v;
+                    }
+                    break;
+                }
+                level -= 1;
+            }
+            if level == 0 {
+                break;
+            }
+        }
+    }
+    out
 }
 
 /// Ranking objective.
@@ -185,21 +271,28 @@ pub fn pareto_front_coords(points: &[DsePoint]) -> Vec<(u64, u64)> {
     f
 }
 
-/// Indices of the time-energy Pareto-optimal points.
-pub fn pareto_front(points: &[DsePoint]) -> Vec<usize> {
+/// Indices of the coordinates not strictly dominated in the
+/// minimize-both sense (no other point is `<=` in both axes and `<` in
+/// one) — the one dominance filter behind every front in the crate
+/// (time-energy, utilization-time, the memo's serialized frontiers).
+pub(crate) fn front_indices(coords: &[(f64, f64)]) -> Vec<usize> {
     let mut front = Vec::new();
-    for (i, p) in points.iter().enumerate() {
-        let dominated = points.iter().enumerate().any(|(j, q)| {
-            j != i
-                && q.est_ms <= p.est_ms
-                && q.energy_j <= p.energy_j
-                && (q.est_ms < p.est_ms || q.energy_j < p.energy_j)
-        });
+    for (i, &(x, y)) in coords.iter().enumerate() {
+        let dominated = coords
+            .iter()
+            .enumerate()
+            .any(|(j, &(x2, y2))| j != i && x2 <= x && y2 <= y && (x2 < x || y2 < y));
         if !dominated {
             front.push(i);
         }
     }
     front
+}
+
+/// Indices of the time-energy Pareto-optimal points.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<usize> {
+    let coords: Vec<(f64, f64)> = points.iter().map(|p| (p.est_ms, p.energy_j)).collect();
+    front_indices(&coords)
 }
 
 /// Render the exploration as a table.
@@ -245,6 +338,7 @@ mod tests {
                 max_instances: 2,
                 try_smp: true,
             }],
+            mixed: false,
         };
         let cds = enumerate(&p, &board, &FpgaPart::xc7z045(), &space);
         // 2x U128 must be pruned (paper feasibility); smp-only kept.
@@ -274,6 +368,7 @@ mod tests {
                 max_instances: 2,
                 try_smp: true,
             }],
+            mixed: false,
         };
         let pts = explore(&p, &board, &FpgaPart::xc7z045(), &space, Objective::Time).unwrap();
         assert!(!pts.is_empty());

@@ -86,9 +86,49 @@ use crate::config::CoDesign;
 use crate::hls::Resources;
 use crate::metrics::bounds::bounds;
 use crate::sim::time::{ps_to_ms, Ps};
+use crate::util::fxhash::FxHashMap;
 
 use super::sweep::SweepContext;
+use super::warm::EvalMemo;
 use super::{describe, DsePoint, DseSpace, KernelSpace, Objective};
+
+/// How the bound-guided rounds order their candidate stream. Ordering
+/// changes *when* a candidate is considered — hence how early the
+/// incumbent frontier tightens and how many candidates the (lossless)
+/// bound cut skips — never *what* the sweep returns as best point and
+/// Pareto front. Every mode is deterministic for any worker count: the
+/// order is a pure function of the candidates and their bounds, and the
+/// round-barrier semantics are unchanged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OrderMode {
+    /// Enumeration (FIFO) order — the baseline `benches/warm_start.rs`
+    /// compares the guided orders against.
+    Fifo,
+    /// Ascending lower bound under the sweep objective — the PR-2
+    /// behaviour, and still the default of [`SweepContext::explore_pruned`].
+    #[default]
+    BoundAsc,
+    /// Cheap-feature ranked order: ascending **predicted** score, where
+    /// the prediction inflates the lower bound by calibration-free
+    /// features already in hand — critical-path ratio, fabric utilization
+    /// and instance count from the cached HLS reports. Processing the
+    /// likely-best candidates first tightens the incumbent earlier, so
+    /// the bound cut fires sooner and cuts deeper on large
+    /// (mixed-variant) spaces.
+    Ranked,
+}
+
+impl OrderMode {
+    /// Parse a CLI order name (`fifo` | `bound` | `ranked`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(OrderMode::Fifo),
+            "bound" => Some(OrderMode::BoundAsc),
+            "ranked" => Some(OrderMode::Ranked),
+            _ => None,
+        }
+    }
+}
 
 /// Candidates evaluated per application per round of the bound-guided
 /// sweep. A *fixed* chunk size (rather than one derived from the worker
@@ -145,6 +185,15 @@ pub struct PruneStats {
     pub unrunnable: u64,
     /// Candidates actually simulated.
     pub evaluated: u64,
+    /// Warm-start hits: candidates served bit-identically from the
+    /// [`EvalMemo`](super::EvalMemo) without re-simulation. They appear in
+    /// the returned ranking but not in `evaluated`. Always zero in cold
+    /// sweeps.
+    pub memo_hits: u64,
+    /// Bound cuts that only the warm-seeded frontier could justify: the
+    /// candidate's bounds were strictly dominated by a memo-hit point and
+    /// by no point evaluated in *this* run. Always zero in cold sweeps.
+    pub seeded_cut: u64,
 }
 
 impl PruneStats {
@@ -154,16 +203,28 @@ impl PruneStats {
         self.feasible_points - self.dominance_cut
     }
 
-    /// One-line human summary used by the CLI and benches.
+    /// One-line human summary used by the CLI and benches. Warm-start
+    /// counters (memo hits, seeded-frontier cuts) appear only when they
+    /// fired, so cold-sweep output is unchanged.
     pub fn render(&self) -> String {
         let global = if self.global_cut > 0 {
             format!(", global {}", self.global_cut)
         } else {
             String::new()
         };
+        let seeded = if self.seeded_cut > 0 {
+            format!(", seeded {}", self.seeded_cut)
+        } else {
+            String::new()
+        };
+        let memo = if self.memo_hits > 0 {
+            format!(" + {} memo hits", self.memo_hits)
+        } else {
+            String::new()
+        };
         format!(
-            "space {} -> feasible {} -> enumerated {} -> evaluated {} \
-             (cuts: resource {}, dominance {} [{} variants], bound {}{global}, unrunnable {})",
+            "space {} -> feasible {} -> enumerated {} -> evaluated {}{memo} \
+             (cuts: resource {}, dominance {} [{} variants], bound {}{seeded}{global}, unrunnable {})",
             self.space_points,
             self.feasible_points,
             self.enumerated(),
@@ -231,6 +292,26 @@ struct OptionTable<'s> {
     space_points: u64,
 }
 
+/// Number of variant multisets of size `1..=max_instances` over `v`
+/// elements: `Σ_c C(v+c-1, c)` — the raw mixed-variant option count per
+/// kernel (the homogeneous count is simply `v × max_instances`).
+fn multiset_count(v: u64, max_instances: u32) -> u64 {
+    if v == 0 {
+        return 0;
+    }
+    let mut total = 0u64;
+    for c in 1..=max_instances as u64 {
+        // C(v - 1 + c, c), computed incrementally (each step is integral;
+        // saturation only distorts astronomically large stats).
+        let mut binom = 1u64;
+        for i in 1..=c {
+            binom = binom.saturating_mul(v - 1 + i) / i;
+        }
+        total = total.saturating_add(binom);
+    }
+    total
+}
+
 fn build_options<'s>(ctx: &SweepContext<'_>, space: &'s DseSpace) -> OptionTable<'s> {
     let mut kernels = Vec::new();
     let mut pruned = Vec::new();
@@ -241,29 +322,33 @@ fn build_options<'s>(ctx: &SweepContext<'_>, space: &'s DseSpace) -> OptionTable
         let Some(kid) = ctx.program.kernel_id(&ks.kernel) else {
             continue;
         };
-        // Raw cartesian: the empty option plus every (unroll, count, smp?)
-        // combination, whether or not it fits.
-        let per_variant = ks.max_instances as u64 * if ks.try_smp { 2 } else { 1 };
-        space_points = space_points.saturating_mul(1 + ks.unrolls.len() as u64 * per_variant);
+        // Raw cartesian: the empty option plus every (variant multiset,
+        // smp?) combination, whether or not it fits.
+        let raw_opts = if space.mixed {
+            multiset_count(ks.unrolls.len() as u64, ks.max_instances)
+        } else {
+            ks.unrolls.len() as u64 * ks.max_instances as u64
+        };
+        let smp_modes = if ks.try_smp { 2 } else { 1 };
+        space_points = space_points.saturating_mul(1 + raw_opts.saturating_mul(smp_modes));
 
         // Exhaustive option footprints, duplicates included — exactly the
         // per-kernel options the unpruned odometer (and the exhaustive
         // sweep) would enumerate, used only for the feasible-point count.
+        let feas_res: Vec<Resources> = ks
+            .unrolls
+            .iter()
+            .map(|&u| ctx.resources_for(kid, &ks.kernel, u))
+            .filter(|r| ctx.part.fits(&[*r]))
+            .collect();
         let mut all_res: Vec<Resources> = vec![Resources::ZERO];
-        for &u in &ks.unrolls {
-            let r = ctx.resources_for(kid, &ks.kernel, u);
-            if !ctx.part.fits(&[r]) {
-                continue;
-            }
-            for count in 1..=ks.max_instances {
-                let mut res = Resources::ZERO;
-                for _ in 0..count {
-                    res = res.add(&r);
-                }
+        for multiset in super::variant_multisets(feas_res.len(), ks.max_instances, space.mixed) {
+            let res = multiset
+                .iter()
+                .fold(Resources::ZERO, |acc, &vi| acc.add(&feas_res[vi]));
+            all_res.push(res);
+            if ks.try_smp {
                 all_res.push(res);
-                if ks.try_smp {
-                    all_res.push(res);
-                }
             }
         }
 
@@ -289,42 +374,42 @@ fn build_options<'s>(ctx: &SweepContext<'_>, space: &'s DseSpace) -> OptionTable
                 out_ps: r.out_ps(),
             });
         }
-        let keep: Vec<bool> = variants
+        let n_before = variants.len();
+        let kept: Vec<Variant> = variants
             .iter()
-            .map(|a| !variants.iter().any(|b| dominates(b, a)))
+            .filter(|a| !variants.iter().any(|b| dominates(b, a)))
+            .cloned()
             .collect();
-        dominated_variants += keep.iter().filter(|k| !**k).count() as u64;
+        dominated_variants += (n_before - kept.len()) as u64;
 
-        // Options in the exact order `SweepContext::enumerate` uses, so
-        // the surviving candidates keep their enumeration-order tie-break.
+        // Options via the shared multiset generator — the exact relative
+        // order `SweepContext::enumerate` uses (the kept variants are an
+        // order-preserving subsequence of the feasible ones), so the
+        // surviving candidates keep their enumeration-order tie-break.
         let mut opts: Vec<Opt> = vec![Opt {
             accels: Vec::new(),
             smp: false,
             res: Resources::ZERO,
         }];
-        for (vi, v) in variants.iter().enumerate() {
-            if !keep[vi] {
-                continue;
-            }
-            for count in 1..=ks.max_instances {
-                let mut res = Resources::ZERO;
-                for _ in 0..count {
-                    res = res.add(&v.res);
-                }
-                let accels: Vec<(String, u32)> =
-                    (0..count).map(|_| (ks.kernel.clone(), v.unroll)).collect();
+        for multiset in super::variant_multisets(kept.len(), ks.max_instances, space.mixed) {
+            let res = multiset
+                .iter()
+                .fold(Resources::ZERO, |acc, &vi| acc.add(&kept[vi].res));
+            let accels: Vec<(String, u32)> = multiset
+                .iter()
+                .map(|&vi| (ks.kernel.clone(), kept[vi].unroll))
+                .collect();
+            opts.push(Opt {
+                accels: accels.clone(),
+                smp: false,
+                res,
+            });
+            if ks.try_smp {
                 opts.push(Opt {
-                    accels: accels.clone(),
-                    smp: false,
+                    accels,
+                    smp: true,
                     res,
                 });
-                if ks.try_smp {
-                    opts.push(Opt {
-                        accels,
-                        smp: true,
-                        res,
-                    });
-                }
             }
         }
         kernels.push(ks);
@@ -457,10 +542,13 @@ pub fn enumerate_pruned(ctx: &SweepContext<'_>, space: &DseSpace) -> (Vec<CoDesi
 /// Lower bounds of one candidate in objective space. Both are *valid*
 /// lower bounds of the evaluated [`DsePoint`]: `lb_ms <= est_ms` and
 /// `lb_energy_j <= energy_j` for the point the simulator would produce.
+/// `rank_ms` is a cheap-feature *prediction* (not a bound) used only by
+/// [`OrderMode::Ranked`].
 #[derive(Clone, Copy, Debug)]
 struct CandBound {
     lb_ms: f64,
     lb_energy_j: f64,
+    rank_ms: f64,
 }
 
 impl CandBound {
@@ -470,6 +558,19 @@ impl CandBound {
             Objective::Energy => self.lb_energy_j,
             Objective::Edp => self.lb_ms * self.lb_energy_j,
         }
+    }
+
+    /// Predicted score under the ranked order: the lower-bound score
+    /// inflated by the ratio of the predicted to the bounded makespan.
+    /// Pure ordering heuristic — never used to cut.
+    fn rank_score(&self, objective: Objective) -> f64 {
+        self.score(objective) * (self.rank_ms / self.lb_ms.max(f64::MIN_POSITIVE))
+    }
+
+    /// Score under an externally supplied predicted makespan (a sibling
+    /// board's scaled result) — the warm cross-board ordering prior.
+    fn prior_score(&self, objective: Objective, prior_ms: f64) -> f64 {
+        self.score(objective) * (prior_ms / self.lb_ms.max(f64::MIN_POSITIVE))
     }
 }
 
@@ -491,39 +592,66 @@ fn bound_for(ctx: &SweepContext<'_>, cd: &CoDesign) -> Option<CandBound> {
     let lb_s = lb_ps as f64 / 1e12;
     let creation_s = b.creation_chain as f64 / 1e12;
     let lb_energy = (static_w * lb_s + pm.smp_dynamic_w * creation_s) * ENERGY_LB_MARGIN;
+    let lb_ms = ps_to_ms(lb_ps);
+    // Cheap-feature makespan prediction for OrderMode::Ranked, from data
+    // already in hand. The bound underestimates most when it is
+    // device-work-dominated (a low critical-path ratio means the greedy
+    // schedule pays dependence stalls the work bound ignores) and when
+    // DMA contention is high (proxied by fabric utilization and instance
+    // count on the shared output channel). Calibration-free and only ever
+    // used to *order* candidates, so a bad prediction costs evaluations,
+    // never correctness.
+    let cp_ratio = (b.critical_path as f64 / lb_ps.max(1) as f64).clamp(0.0, 1.0);
+    let rank_ms =
+        lb_ms * (1.0 + 0.35 * (1.0 - cp_ratio) + 0.15 * util + 0.02 * accels.len() as f64);
     Some(CandBound {
-        lb_ms: ps_to_ms(lb_ps),
+        lb_ms,
         lb_energy_j: lb_energy,
+        rank_ms,
     })
 }
 
-/// Frozen time-energy frontier of the points evaluated in earlier rounds.
-/// A candidate is skippable when some frontier point is *strictly* below
+/// Frozen time-energy frontier of the points evaluated in earlier rounds
+/// (plus, in warm sweeps, the memo-hit points — flagged `seeded`). A
+/// candidate is skippable when some frontier point is *strictly* below
 /// both of its lower bounds: the candidate is then strictly dominated in
 /// objective space, so it is neither Pareto-optimal nor best under any of
-/// the three objectives.
+/// the three objectives. Seeded points keep the cut lossless because they
+/// are always members of the current sweep's returned point set.
 #[derive(Default)]
 struct Frontier {
-    pts: Vec<(f64, f64)>,
+    /// (est_ms, energy_j, seeded-from-warm-state).
+    pts: Vec<(f64, f64, bool)>,
 }
 
 impl Frontier {
-    fn insert(&mut self, ms: f64, energy: f64) {
+    fn insert(&mut self, ms: f64, energy: f64, seeded: bool) {
         if self
             .pts
             .iter()
-            .any(|&(m, e)| m <= ms && e <= energy)
+            .any(|&(m, e, _)| m <= ms && e <= energy)
         {
             return;
         }
-        self.pts.retain(|&(m, e)| !(ms <= m && energy <= e));
-        self.pts.push((ms, energy));
+        self.pts.retain(|&(m, e, _)| !(ms <= m && energy <= e));
+        self.pts.push((ms, energy, seeded));
     }
 
-    fn strictly_dominates(&self, lb: &CandBound) -> bool {
-        self.pts
-            .iter()
-            .any(|&(m, e)| m < lb.lb_ms && e < lb.lb_energy_j)
+    /// `None` when no frontier point strictly dominates the bounds;
+    /// `Some(true)` when only *seeded* points do (a cut attributable to
+    /// the warm start), `Some(false)` when a point evaluated this run
+    /// does.
+    fn strictly_dominates(&self, lb: &CandBound) -> Option<bool> {
+        let mut seeded_only = None;
+        for &(m, e, seeded) in &self.pts {
+            if m < lb.lb_ms && e < lb.lb_energy_j {
+                if !seeded {
+                    return Some(false);
+                }
+                seeded_only = Some(true);
+            }
+        }
+        seeded_only
     }
 }
 
@@ -532,8 +660,7 @@ struct JobState<'a, 'p> {
     ctx: &'a SweepContext<'p>,
     cands: Vec<CoDesign>,
     bounds: Vec<Option<CandBound>>,
-    /// Candidate indices in ascending-lower-bound order (the processing
-    /// order of the rounds).
+    /// Candidate indices in processing order (see [`OrderMode`]).
     order: Vec<usize>,
     cursor: usize,
     frontier: Frontier,
@@ -543,13 +670,53 @@ struct JobState<'a, 'p> {
     group: Option<usize>,
     evaluated: Vec<(usize, DsePoint)>,
     stats: PruneStats,
+    /// Candidates already satisfied from the eval memo (warm sweeps):
+    /// excluded from bounds, ordering and evaluation.
+    done: Vec<bool>,
+    /// Per-candidate predicted-makespan ordering priors (warm cross-board
+    /// seeding); `None` falls back to the candidate's own rank features.
+    priors: Vec<Option<f64>>,
+}
+
+/// Fill `job.order` (and the unrunnable counter) for one job under an
+/// [`OrderMode`] — a pure function of the job's candidates, bounds and
+/// priors, hence identical for any worker count.
+fn build_order(job: &mut JobState<'_, '_>, objective: Objective, mode: OrderMode) {
+    let n = job.cands.len();
+    let mut order: Vec<usize> = (0..n)
+        .filter(|&i| !job.done[i] && job.bounds[i].is_some())
+        .collect();
+    job.stats.unrunnable = (0..n)
+        .filter(|&i| !job.done[i] && job.bounds[i].is_none())
+        .count() as u64;
+    let bounds = &job.bounds;
+    let priors = &job.priors;
+    match mode {
+        OrderMode::Fifo => {}
+        OrderMode::BoundAsc => order.sort_by(|&a, &b| {
+            let sa = bounds[a].as_ref().unwrap().score(objective);
+            let sb = bounds[b].as_ref().unwrap().score(objective);
+            sa.total_cmp(&sb).then(a.cmp(&b))
+        }),
+        OrderMode::Ranked => order.sort_by(|&a, &b| {
+            let key = |i: usize| {
+                let cb = bounds[i].as_ref().unwrap();
+                match priors[i] {
+                    Some(prior_ms) => cb.prior_score(objective, prior_ms),
+                    None => cb.rank_score(objective),
+                }
+            };
+            key(a).total_cmp(&key(b)).then(a.cmp(&b))
+        }),
+    }
+    job.order = order;
 }
 
 /// Evaluate `(job, candidate)` work items on a persistent pool of
 /// per-worker, per-job simulators. `slots` outlives the rounds, so each
 /// worker's simulator buffers are reused across every round *and* every
 /// application — one shared pool for the whole (suite) sweep.
-fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, workers: usize) {
+fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], workers: usize) {
     // Shared incumbent frontiers of the groups (empty when no job is
     // grouped). Like the per-job frontiers they are only thawed at round
     // barriers, and a frontier's content is the unique Pareto set of the
@@ -561,20 +728,6 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, worke
         .max()
         .map_or(0, |g| g + 1);
     let mut group_frontiers: Vec<Frontier> = (0..n_groups).map(|_| Frontier::default()).collect();
-
-    // Deterministic processing order per job.
-    for job in jobs.iter_mut() {
-        let mut order: Vec<usize> = (0..job.cands.len())
-            .filter(|&i| job.bounds[i].is_some())
-            .collect();
-        job.stats.unrunnable = (job.cands.len() - order.len()) as u64;
-        order.sort_by(|&a, &b| {
-            let sa = job.bounds[a].as_ref().unwrap().score(objective);
-            let sb = job.bounds[b].as_ref().unwrap().score(objective);
-            sa.partial_cmp(&sb).unwrap().then(a.cmp(&b))
-        });
-        job.order = order;
-    }
 
     let workers = workers.max(1);
     // One persistent simulator slot per worker per job.
@@ -592,15 +745,18 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, worke
             for oi in job.cursor..end {
                 let ci = job.order[oi];
                 let lb = job.bounds[ci].as_ref().unwrap();
-                if job.frontier.strictly_dominates(lb) {
-                    job.stats.bound_cut += 1;
-                } else if job
-                    .group
-                    .is_some_and(|g| group_frontiers[g].strictly_dominates(lb))
-                {
-                    job.stats.global_cut += 1;
-                } else {
-                    work.push((ji, ci));
+                match job.frontier.strictly_dominates(lb) {
+                    Some(false) => job.stats.bound_cut += 1,
+                    Some(true) => job.stats.seeded_cut += 1,
+                    None => {
+                        if job.group.is_some_and(|g| {
+                            group_frontiers[g].strictly_dominates(lb).is_some()
+                        }) {
+                            job.stats.global_cut += 1;
+                        } else {
+                            work.push((ji, ci));
+                        }
+                    }
                 }
             }
             job.cursor = end;
@@ -626,9 +782,9 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], objective: Objective, worke
 
         // Barrier: merge results and thaw the frontiers for the next round.
         for (ji, ci, p) in results {
-            jobs[ji].frontier.insert(p.est_ms, p.energy_j);
+            jobs[ji].frontier.insert(p.est_ms, p.energy_j, false);
             if let Some(g) = jobs[ji].group {
-                group_frontiers[g].insert(p.est_ms, p.energy_j);
+                group_frontiers[g].insert(p.est_ms, p.energy_j, false);
             }
             jobs[ji].stats.evaluated += 1;
             jobs[ji].evaluated.push((ci, p));
@@ -670,6 +826,7 @@ pub(crate) fn explore_pruned_grouped<'p>(
         .zip(groups)
         .map(|(&(ctx, space), &group)| {
             let (cands, stats) = enumerate_pruned(ctx, space);
+            let n = cands.len();
             JobState {
                 ctx,
                 cands,
@@ -680,6 +837,8 @@ pub(crate) fn explore_pruned_grouped<'p>(
                 group,
                 evaluated: Vec::new(),
                 stats,
+                done: vec![false; n],
+                priors: vec![None; n],
             }
         })
         .collect();
@@ -711,8 +870,11 @@ pub(crate) fn explore_pruned_grouped<'p>(
     for (ji, ci, b) in computed {
         jobs[ji].bounds[ci] = b;
     }
+    for job in jobs.iter_mut() {
+        build_order(job, objective, OrderMode::BoundAsc);
+    }
 
-    run_rounds(&mut jobs, objective, workers);
+    run_rounds(&mut jobs, workers);
 
     jobs.into_iter()
         .map(|mut job| {
@@ -724,6 +886,119 @@ pub(crate) fn explore_pruned_grouped<'p>(
             (points, job.stats)
         })
         .collect()
+}
+
+/// Warm-start / ordered single-job pruned exploration — the engine behind
+/// [`SweepContext::explore_warm`], [`SweepContext::explore_pruned_with`]
+/// and the warm cross-board sweep.
+///
+/// * `memo`: candidates whose exact `(context, co-design)` evaluation is
+///   recorded are returned without re-simulation (`PruneStats::memo_hits`)
+///   and pre-seed the bound frontier — a warm incumbent. Seeded frontier
+///   points are always members of *this* sweep's returned set, so the cut
+///   stays lossless. Newly evaluated points are recorded back.
+/// * `priors`: per-co-design predicted makespans (keyed by
+///   [`warm::codesign_key`](super::warm::codesign_key)) that refine the
+///   [`OrderMode::Ranked`] processing order — e.g. a sibling board's
+///   results scaled by the fabric-clock ratio. Ordering only: candidates
+///   are still cut exclusively by their own real bounds against really
+///   evaluated (or memo-exact) points, so results stay exact.
+///
+/// Guarantees, as everywhere in this module: best point and time-energy
+/// Pareto front equal the exhaustive sweep's; output and stats are
+/// bit-identical for any worker count.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn explore_pruned_warm<'p>(
+    ctx: &SweepContext<'p>,
+    space: &DseSpace,
+    memo: Option<&mut EvalMemo>,
+    priors: &FxHashMap<String, f64>,
+    order: OrderMode,
+    objective: Objective,
+    workers: usize,
+) -> (Vec<DsePoint>, PruneStats) {
+    let (cands, stats) = enumerate_pruned(ctx, space);
+    let n = cands.len();
+    let keys: Vec<String> = cands.iter().map(super::warm::codesign_key).collect();
+    let fingerprint = memo.as_ref().map(|_| super::warm::context_fingerprint(ctx));
+
+    let mut job = JobState {
+        ctx,
+        cands,
+        bounds: Vec::new(),
+        order: Vec::new(),
+        cursor: 0,
+        frontier: Frontier::default(),
+        group: None,
+        evaluated: Vec::new(),
+        stats,
+        done: vec![false; n],
+        priors: keys.iter().map(|k| priors.get(k).copied()).collect(),
+    };
+
+    // Memo hits: serve them up front (enumeration order — deterministic)
+    // and seed the frontier so round 0 already cuts against a warm
+    // incumbent.
+    let mut hits: Vec<(usize, DsePoint)> = Vec::new();
+    if let (Some(m), Some(fp)) = (memo.as_deref(), fingerprint) {
+        for (i, key) in keys.iter().enumerate() {
+            if let Some(v) = m.lookup(fp, key) {
+                job.done[i] = true;
+                job.stats.memo_hits += 1;
+                job.frontier.insert(v.est_ms, v.energy_j, true);
+                hits.push((
+                    i,
+                    DsePoint {
+                        codesign: job.cands[i].clone(),
+                        est_ms: v.est_ms,
+                        energy_j: v.energy_j,
+                        edp: v.edp,
+                        fabric_util: v.fabric_util,
+                    },
+                ));
+            }
+        }
+    }
+
+    // Bounds for the remaining candidates, keyed by candidate index so the
+    // result is independent of the worker count.
+    let todo: Vec<usize> = (0..n).filter(|&i| !job.done[i]).collect();
+    let n_workers = workers.clamp(1, todo.len().max(1));
+    let computed: Vec<(usize, Option<CandBound>)> = if n_workers <= 1 {
+        todo.iter()
+            .map(|&ci| (ci, bound_for(ctx, &job.cands[ci])))
+            .collect()
+    } else {
+        let cands_ref = &job.cands;
+        let mut slots = vec![(); n_workers];
+        super::sweep::parallel_for_indexed(&mut slots, todo.len(), |_, w| {
+            let ci = todo[w];
+            Some((ci, bound_for(ctx, &cands_ref[ci])))
+        })
+    };
+    job.bounds = vec![None; n];
+    for (ci, b) in computed {
+        job.bounds[ci] = b;
+    }
+    build_order(&mut job, objective, order);
+
+    run_rounds(std::slice::from_mut(&mut job), workers);
+
+    // Record the fresh evaluations for the next sweep.
+    if let (Some(m), Some(fp)) = (memo, fingerprint) {
+        for (ci, p) in &job.evaluated {
+            m.record(ctx, fp, &keys[*ci], p);
+        }
+    }
+
+    // Merge hits + evaluations in enumeration order, then the same stable
+    // score sort as everywhere else.
+    let mut all = hits;
+    all.extend(job.evaluated);
+    all.sort_unstable_by_key(|e| e.0);
+    let mut points: Vec<DsePoint> = all.into_iter().map(|(_, p)| p).collect();
+    points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+    (points, job.stats)
 }
 
 #[cfg(test)]
@@ -819,6 +1094,7 @@ mod tests {
                 max_instances: 2,
                 try_smp: false,
             }],
+            mixed: false,
         };
         let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
         // Past saturation (trip = 100): U128 takes ceil(100/128) = 1

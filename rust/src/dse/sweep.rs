@@ -270,7 +270,10 @@ impl<'p> SweepContext<'p> {
 
     /// Enumerate feasible co-designs over the space (resource-pruned),
     /// identical to the seed `dse::enumerate` but with every resource
-    /// vector served from the memoized reports.
+    /// vector served from the memoized reports. With `space.mixed`, a
+    /// kernel's per-option accelerator multiset may mix unroll variants
+    /// (see [`DseSpace::mixed`](super::DseSpace)); the homogeneous path is
+    /// byte-identical to the historical enumeration.
     pub fn enumerate(&self, space: &DseSpace) -> Vec<CoDesign> {
         // Per-kernel options: (accel list, smp flag), parallel to the
         // surviving KernelSpace entries.
@@ -280,20 +283,25 @@ impl<'p> SweepContext<'p> {
             let Some(kid) = self.program.kernel_id(&ks.kernel) else {
                 continue;
             };
+            // Variants that fit the part alone (a multiset containing an
+            // infeasible-alone variant cannot fit either).
+            let feasible: Vec<u32> = ks
+                .unrolls
+                .iter()
+                .copied()
+                .filter(|&u| self.part.fits(&[self.resources_for(kid, &ks.kernel, u)]))
+                .collect();
             let mut opts: Vec<(Vec<(String, u32)>, bool)> = vec![(Vec::new(), false)];
-            for &u in &ks.unrolls {
-                let res = self.resources_for(kid, &ks.kernel, u);
-                // Quick per-kernel prune: even alone it must fit.
-                if !self.part.fits(&[res]) {
-                    continue;
-                }
-                for count in 1..=ks.max_instances {
-                    let accels: Vec<(String, u32)> =
-                        (0..count).map(|_| (ks.kernel.clone(), u)).collect();
-                    opts.push((accels.clone(), false));
-                    if ks.try_smp {
-                        opts.push((accels, true));
-                    }
+            let multisets =
+                super::variant_multisets(feasible.len(), ks.max_instances, space.mixed);
+            for multiset in multisets {
+                let accels: Vec<(String, u32)> = multiset
+                    .iter()
+                    .map(|&vi| (ks.kernel.clone(), feasible[vi]))
+                    .collect();
+                opts.push((accels.clone(), false));
+                if ks.try_smp {
+                    opts.push((accels, true));
                 }
             }
             per_kernel.push(opts);
@@ -467,6 +475,62 @@ impl<'p> SweepContext<'p> {
         super::prune::explore_pruned_multi(&[(self, space)], objective, workers)
             .pop()
             .expect("one input yields one output")
+    }
+
+    /// [`SweepContext::explore_pruned`] with an explicit candidate
+    /// [`OrderMode`](super::OrderMode) for the bound-guided rounds.
+    /// Ordering only changes *when* candidates are considered (hence how
+    /// early the incumbent tightens and how many points get simulated);
+    /// every mode keeps the losslessness contract — identical best point
+    /// and time-energy Pareto front — and is bit-identical for any worker
+    /// count. `OrderMode::BoundAsc` reproduces `explore_pruned` exactly.
+    pub fn explore_pruned_with(
+        &self,
+        space: &DseSpace,
+        objective: Objective,
+        workers: usize,
+        order: super::prune::OrderMode,
+    ) -> (Vec<DsePoint>, super::prune::PruneStats) {
+        super::prune::explore_pruned_warm(
+            self,
+            space,
+            None,
+            &FxHashMap::default(),
+            order,
+            objective,
+            workers,
+        )
+    }
+
+    /// Warm-started pruned exploration against a persistent
+    /// [`EvalMemo`](super::EvalMemo): candidates whose exact
+    /// `(program, board, part, co-design)` evaluation is already memoized
+    /// are returned without re-simulation (bit-identical by construction —
+    /// the memo key fingerprints everything the evaluation depends on) and
+    /// seed the bound frontier, so the remaining candidates start cutting
+    /// against a warm incumbent. Newly evaluated points are recorded back
+    /// into the memo. Same losslessness and any-worker-count determinism
+    /// guarantees as [`SweepContext::explore_pruned`];
+    /// [`PruneStats::memo_hits`](super::PruneStats) and
+    /// [`PruneStats::seeded_cut`](super::PruneStats) account for the warm
+    /// state.
+    pub fn explore_warm(
+        &self,
+        space: &DseSpace,
+        memo: &mut super::warm::EvalMemo,
+        objective: Objective,
+        workers: usize,
+        order: super::prune::OrderMode,
+    ) -> (Vec<DsePoint>, super::prune::PruneStats) {
+        super::prune::explore_pruned_warm(
+            self,
+            space,
+            Some(memo),
+            &FxHashMap::default(),
+            order,
+            objective,
+            workers,
+        )
     }
 }
 
@@ -693,7 +757,29 @@ mod tests {
                 max_instances: 2,
                 try_smp: true,
             }],
+            mixed: false,
         }
+    }
+
+    #[test]
+    fn mixed_enumeration_is_a_superset_with_heterogeneous_pairs() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let part = FpgaPart::xc7z045();
+        let sp = space();
+        let mixed = sp.clone().with_mixed();
+        let ctx = SweepContext::for_space(&p, &board, &part, &mixed);
+        let homogeneous = ctx.enumerate(&sp);
+        let cds = ctx.enumerate(&mixed);
+        // Every homogeneous candidate appears in the mixed space.
+        for h in &homogeneous {
+            assert!(cds.contains(h), "missing homogeneous candidate {}", h.name);
+        }
+        assert!(cds.len() > homogeneous.len());
+        // And a genuinely heterogeneous pair exists (two different unrolls
+        // of the same kernel).
+        assert!(cds.iter().any(|c| c.accels.len() == 2
+            && c.accels[0].unroll != c.accels[1].unroll));
     }
 
     #[test]

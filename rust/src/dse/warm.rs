@@ -1,0 +1,612 @@
+//! Warm-start layer for the DSE engine — a persistent evaluation memo.
+//!
+//! The paper's promise is turning the co-design decision "from hours to
+//! minutes"; after the sweep/prune/cross layers, the remaining redundancy
+//! is *between* sweeps: a robustness study re-sweeps near-identical
+//! spaces, a cross-board study sweeps sibling platforms, and an analyst
+//! iterating on a space re-simulates points an earlier run already
+//! evaluated. CEDR (Mack et al., 2022) and the hardware-HEFT work both
+//! reuse prior schedule state across runs; the [`EvalMemo`] is that idea
+//! applied to the estimator:
+//!
+//! * every evaluated point is recorded under a key that fingerprints
+//!   **everything the evaluation depends on** — the task program (kernel
+//!   declarations, profiles, every task's cycles and dependences), the
+//!   board description, the FPGA part, and the estimator version — plus a
+//!   canonical form of the co-design. A memo hit is therefore
+//!   *bit-identical* to re-simulating by construction: two sweeps that
+//!   share a key evaluated the exact same deterministic function. Any
+//!   change to the program, board, part or estimator changes the
+//!   fingerprint and misses cleanly (asserted by the warm-start property
+//!   tests, which perturb each ingredient and check the memo refuses the
+//!   hit);
+//! * a warm sweep ([`SweepContext::explore_warm`]) returns hits without
+//!   re-simulation and seeds its bound frontier with them, so bound-guided
+//!   pruning starts from a warm incumbent. Seeded points are always
+//!   members of the current sweep's own candidate set, which is what keeps
+//!   the cut lossless — a frontier point that cuts a candidate is itself
+//!   part of the returned ranking;
+//! * the memo serializes through the repository's own JSON substrate
+//!   ([`crate::util::json`]), with `f64` values stored as exact bit
+//!   patterns so a save/load round-trip cannot perturb a single ULP. Each
+//!   context also carries its time-energy **frontier** (the Pareto set of
+//!   its recorded points) as a compact, report-friendly summary.
+//!   Board-axis warm starts read the recorded *points* of sibling
+//!   contexts ([`EvalMemo::sibling_points_ms`]) and scale them by the
+//!   fabric-clock ratio as ordering priors.
+//!
+//! Lifecycle: `load_or_new` → any number of warm sweeps (each records its
+//! new evaluations) → `save`. Memo files are versioned; a file written by
+//! a different estimator version or schema is rejected on load instead of
+//! silently serving stale numbers.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::CoDesign;
+use crate::util::json::{arr, obj, parse, Value};
+
+use super::sweep::SweepContext;
+use super::DsePoint;
+
+/// Memo file schema version (bumped on layout changes; also folded into
+/// the context fingerprint so schema bumps invalidate old entries).
+pub const MEMO_SCHEMA_VERSION: i64 = 1;
+
+/// FNV-1a, used for the stable context fingerprint (the repository's
+/// `FxHasher` is for hash *tables*; the memo needs a hash whose value is
+/// part of a serialized file format, so it is pinned here explicitly).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+    fn bool(&mut self, b: bool) {
+        self.bytes(&[b as u8]);
+    }
+}
+
+/// Fingerprint of everything a point evaluation depends on: the estimator
+/// version, the task program (kernels, profiles, tasks, dependences), the
+/// board description and the FPGA part. The swept [`DseSpace`] is
+/// deliberately **not** part of the key — the memo exists to be shared
+/// across spaces over the same (program, board, part) triple. The
+/// board-emulator-only `emu` block is excluded too: estimator results do
+/// not depend on it.
+///
+/// [`DseSpace`]: super::DseSpace
+pub fn context_fingerprint(ctx: &SweepContext<'_>) -> u64 {
+    let mut h = Fnv::new();
+    h.str(env!("CARGO_PKG_VERSION"));
+    h.u64(MEMO_SCHEMA_VERSION as u64);
+    let p = ctx.program;
+    h.str(&p.app_name);
+    h.u64(p.kernels.len() as u64);
+    for k in &p.kernels {
+        h.str(&k.name);
+        h.bool(k.targets.smp);
+        h.bool(k.targets.fpga);
+        h.u64(k.profile.flops);
+        h.u64(k.profile.inner_trip);
+        h.u64(k.profile.in_bytes);
+        h.u64(k.profile.out_bytes);
+        h.u64(k.profile.dtype_bytes as u64);
+        h.bool(k.profile.divsqrt);
+    }
+    h.u64(p.tasks.len() as u64);
+    for t in &p.tasks {
+        h.u64(t.kernel as u64);
+        h.u64(t.smp_cycles);
+        h.u64(t.creation_ns);
+        h.u64(t.deps.len() as u64);
+        for d in &t.deps {
+            h.u64(d.addr);
+            h.u64(d.len);
+            h.str(d.dir.as_str());
+        }
+    }
+    let b = ctx.board;
+    h.str(&b.name);
+    h.u64(b.smp_cores as u64);
+    h.f64(b.smp_freq_mhz);
+    h.f64(b.fabric_freq_mhz);
+    h.bool(b.dma_in_scales);
+    h.bool(b.dma_out_scales);
+    h.f64(b.dma_bw_mbps);
+    h.f64(b.dma_submit_us);
+    h.f64(b.task_creation_us);
+    h.f64(b.smp_flops_per_cycle);
+    h.f64(b.smp_divsqrt_penalty);
+    h.f64(b.smp_dp_penalty);
+    h.f64(b.smp_l1_kb);
+    h.f64(b.smp_cache_alpha);
+    let part = &ctx.part;
+    h.str(&part.name);
+    h.u64(part.budget.luts);
+    h.u64(part.budget.ffs);
+    h.u64(part.budget.dsps);
+    h.u64(part.budget.bram18);
+    h.f64(part.routable_fraction);
+    // Model constants that are code rather than config: the power model's
+    // watts feed every energy/EDP figure, so a same-version tweak to
+    // `PowerModel::default()` must miss instead of serving stale numbers.
+    // (Structural changes to the cost model or scheduler still require a
+    // MEMO_SCHEMA_VERSION bump — that is what the constant is for.)
+    let pm = ctx.power_model();
+    h.f64(pm.ps_static_w);
+    h.f64(pm.smp_dynamic_w);
+    h.f64(pm.pl_static_w);
+    h.f64(pm.pl_static_per_util_w);
+    h.f64(pm.w_per_dsp_100mhz);
+    h.f64(pm.w_per_bram_100mhz);
+    h.f64(pm.w_per_10kluts_100mhz);
+    h.f64(pm.dma_dynamic_w);
+    h.0
+}
+
+/// Canonical memo key of a co-design: sorted accelerator specs plus the
+/// sorted, deduplicated "+ smp" kernel list. Two co-designs that simulate
+/// identically (instance order is irrelevant to the engine) share one key.
+pub fn codesign_key(cd: &CoDesign) -> String {
+    let mut accels: Vec<String> = cd
+        .accels
+        .iter()
+        .map(|a| format!("{}:U{}", a.kernel, a.unroll))
+        .collect();
+    accels.sort();
+    let mut smp: Vec<&str> = cd.smp_kernels.iter().map(String::as_str).collect();
+    smp.sort_unstable();
+    smp.dedup();
+    format!("{}|smp:{}", accels.join("+"), smp.join(","))
+}
+
+/// Stored evaluation result — `f64`s as exact bit patterns so JSON
+/// round-trips are lossless.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct MemoPoint {
+    est_ms: u64,
+    energy_j: u64,
+    edp: u64,
+    fabric_util: u64,
+}
+
+/// A memo hit, decoded back to the evaluation's exact numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoValues {
+    /// Estimated makespan (ms) — bit-identical to the recorded evaluation.
+    pub est_ms: f64,
+    /// Total platform energy (J).
+    pub energy_j: f64,
+    /// Energy-delay product (J·s).
+    pub edp: f64,
+    /// Fabric utilization in [0, 1].
+    pub fabric_util: f64,
+}
+
+/// One (program, board, part) context of the memo: its recorded points
+/// plus human-readable metadata for reports.
+#[derive(Clone, Debug, Default)]
+struct MemoContext {
+    app: String,
+    board: String,
+    part: String,
+    fabric_mhz: f64,
+    points: BTreeMap<String, MemoPoint>,
+}
+
+impl MemoContext {
+    /// Time-energy Pareto frontier of the recorded points (exact bits),
+    /// sorted — the compact summary serialized next to the points.
+    fn frontier(&self) -> Vec<(u64, u64)> {
+        let pts: Vec<(f64, f64)> = self
+            .points
+            .values()
+            .map(|p| (f64::from_bits(p.est_ms), f64::from_bits(p.energy_j)))
+            .collect();
+        let mut front: Vec<(u64, u64)> = super::front_indices(&pts)
+            .into_iter()
+            .map(|i| (pts[i].0.to_bits(), pts[i].1.to_bits()))
+            .collect();
+        front.sort_unstable();
+        front.dedup();
+        front
+    }
+}
+
+/// Persistent `(context fingerprint, co-design) → evaluation` memo — see
+/// the module docs for the exactness contract and lifecycle.
+#[derive(Clone, Debug, Default)]
+pub struct EvalMemo {
+    contexts: BTreeMap<u64, MemoContext>,
+}
+
+impl EvalMemo {
+    /// An empty memo.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load a memo file, or start empty when the file does not exist yet.
+    /// A malformed file, or one written by a different estimator version /
+    /// schema, is an error (never silently served).
+    pub fn load_or_new(path: &Path) -> anyhow::Result<Self> {
+        if !path.exists() {
+            return Ok(Self::new());
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Save the memo (atomically enough for a CLI tool: write then rename
+    /// is overkill here; the file is small and regenerable).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Number of contexts recorded.
+    pub fn n_contexts(&self) -> usize {
+        self.contexts.len()
+    }
+
+    /// Total recorded points across every context.
+    pub fn n_points(&self) -> usize {
+        self.contexts.values().map(|c| c.points.len()).sum()
+    }
+
+    /// Exact-hit lookup.
+    pub fn lookup(&self, fingerprint: u64, key: &str) -> Option<MemoValues> {
+        let p = self.contexts.get(&fingerprint)?.points.get(key)?;
+        Some(MemoValues {
+            est_ms: f64::from_bits(p.est_ms),
+            energy_j: f64::from_bits(p.energy_j),
+            edp: f64::from_bits(p.edp),
+            fabric_util: f64::from_bits(p.fabric_util),
+        })
+    }
+
+    /// Record one evaluated point under its context. Idempotent: a key can
+    /// only ever map to one value (the evaluation is deterministic), so
+    /// re-recording overwrites with identical bits.
+    pub fn record(&mut self, ctx: &SweepContext<'_>, fingerprint: u64, key: &str, p: &DsePoint) {
+        let entry = self.contexts.entry(fingerprint).or_insert_with(|| MemoContext {
+            app: ctx.program.app_name.clone(),
+            board: ctx.board.name.clone(),
+            part: ctx.part.name.clone(),
+            fabric_mhz: ctx.board.fabric_freq_mhz,
+            points: BTreeMap::new(),
+        });
+        debug_assert_eq!(entry.fabric_mhz.to_bits(), ctx.board.fabric_freq_mhz.to_bits());
+        entry.points.insert(
+            key.to_string(),
+            MemoPoint {
+                est_ms: p.est_ms.to_bits(),
+                energy_j: p.energy_j.to_bits(),
+                edp: p.edp.to_bits(),
+                fabric_util: p.fabric_util.to_bits(),
+            },
+        );
+    }
+
+    /// The `(est_ms, energy_j)` frontier of one context (exact values),
+    /// sorted by ascending time — empty when the context is unknown.
+    pub fn frontier(&self, fingerprint: u64) -> Vec<(f64, f64)> {
+        self.contexts
+            .get(&fingerprint)
+            .map(|c| {
+                c.frontier()
+                    .into_iter()
+                    .map(|(m, e)| (f64::from_bits(m), f64::from_bits(e)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Per-context `(key → est_ms)` map (diagnostics / tests). Empty when
+    /// the context is unknown.
+    pub fn points_ms(&self, fingerprint: u64) -> Vec<(String, f64)> {
+        self.contexts
+            .get(&fingerprint)
+            .map(|c| {
+                c.points
+                    .iter()
+                    .map(|(k, p)| (k.clone(), f64::from_bits(p.est_ms)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Sibling contexts of an application persisted in the memo: every
+    /// context whose recorded `app` metadata matches `app`, except the
+    /// `exclude` fingerprint (the caller's own context), as
+    /// `(fabric_mhz, key → est_ms)` pairs in deterministic (fingerprint)
+    /// order. This is what board-axis warm starts scale by the
+    /// fabric-clock ratio when the sibling board was swept in an
+    /// *earlier run* rather than earlier in the same call.
+    pub fn sibling_points_ms(&self, app: &str, exclude: u64) -> Vec<(f64, Vec<(String, f64)>)> {
+        self.contexts
+            .iter()
+            .filter(|(fp, c)| **fp != exclude && c.app == app)
+            .map(|(_, c)| {
+                let pts: Vec<(String, f64)> = c
+                    .points
+                    .iter()
+                    .map(|(k, p)| (k.clone(), f64::from_bits(p.est_ms)))
+                    .collect();
+                (c.fabric_mhz, pts)
+            })
+            .collect()
+    }
+
+    /// Serialize to the memo JSON document.
+    pub fn to_json(&self) -> String {
+        let contexts: Vec<Value> = self
+            .contexts
+            .iter()
+            .map(|(fp, c)| {
+                let points: Vec<Value> = c
+                    .points
+                    .iter()
+                    .map(|(k, p)| {
+                        obj(vec![
+                            ("key", k.as_str().into()),
+                            ("est_ms", p.est_ms.into()),
+                            ("energy_j", p.energy_j.into()),
+                            ("edp", p.edp.into()),
+                            ("fabric_util", p.fabric_util.into()),
+                        ])
+                    })
+                    .collect();
+                let frontier: Vec<Value> = c
+                    .frontier()
+                    .into_iter()
+                    .map(|(m, e)| obj(vec![("est_ms", m.into()), ("energy_j", e.into())]))
+                    .collect();
+                obj(vec![
+                    ("fp", format!("{fp:016x}").into()),
+                    ("app", c.app.as_str().into()),
+                    ("board", c.board.as_str().into()),
+                    ("part", c.part.as_str().into()),
+                    ("fabric_mhz", c.fabric_mhz.into()),
+                    ("points", arr(points)),
+                    ("frontier", arr(frontier)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", MEMO_SCHEMA_VERSION.into()),
+            ("estimator", env!("CARGO_PKG_VERSION").into()),
+            ("contexts", arr(contexts)),
+        ])
+        .to_json()
+    }
+
+    /// Parse a memo JSON document (version- and estimator-checked).
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = parse(text).map_err(|e| anyhow::anyhow!("memo parse: {e}"))?;
+        let version = v
+            .get("version")
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("memo file has no version"))?;
+        anyhow::ensure!(
+            version == MEMO_SCHEMA_VERSION,
+            "memo schema v{version} != v{MEMO_SCHEMA_VERSION} — delete the memo file and re-sweep"
+        );
+        let estimator = v.get("estimator").and_then(Value::as_str).unwrap_or("");
+        anyhow::ensure!(
+            estimator == env!("CARGO_PKG_VERSION"),
+            "memo written by estimator v{estimator}, this is v{} — delete the memo file and \
+             re-sweep (results would not be comparable)",
+            env!("CARGO_PKG_VERSION")
+        );
+        let mut memo = EvalMemo::new();
+        let contexts = v
+            .get("contexts")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("memo file has no contexts array"))?;
+        for c in contexts {
+            let fp_str = c
+                .get("fp")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow::anyhow!("memo context has no fp"))?;
+            let fp = u64::from_str_radix(fp_str, 16)
+                .map_err(|_| anyhow::anyhow!("bad memo fingerprint '{fp_str}'"))?;
+            let mut mc = MemoContext {
+                app: c.get("app").and_then(Value::as_str).unwrap_or("").to_string(),
+                board: c.get("board").and_then(Value::as_str).unwrap_or("").to_string(),
+                part: c.get("part").and_then(Value::as_str).unwrap_or("").to_string(),
+                fabric_mhz: c.get("fabric_mhz").and_then(Value::as_f64).unwrap_or(0.0),
+                points: BTreeMap::new(),
+            };
+            for p in c.get("points").and_then(Value::as_arr).unwrap_or(&[]) {
+                let key = p
+                    .get("key")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("memo point has no key"))?;
+                let bits = |field: &str| -> anyhow::Result<u64> {
+                    p.get(field)
+                        .and_then(Value::as_i64)
+                        .map(|i| i as u64)
+                        .ok_or_else(|| anyhow::anyhow!("memo point '{key}' misses {field}"))
+                };
+                mc.points.insert(
+                    key.to_string(),
+                    MemoPoint {
+                        est_ms: bits("est_ms")?,
+                        energy_j: bits("energy_j")?,
+                        edp: bits("edp")?,
+                        fabric_util: bits("fabric_util")?,
+                    },
+                );
+            }
+            memo.contexts.insert(fp, mc);
+        }
+        Ok(memo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::matmul::Matmul;
+    use crate::config::BoardConfig;
+    use crate::dse::{DseSpace, Objective, OrderMode, SweepContext};
+    use crate::hls::FpgaPart;
+
+    fn fixture<'p>(
+        program: &'p crate::coordinator::task::TaskProgram,
+        board: &'p BoardConfig,
+        space: &DseSpace,
+    ) -> SweepContext<'p> {
+        SweepContext::for_space(program, board, &FpgaPart::xc7z045(), space)
+    }
+
+    #[test]
+    fn codesign_key_is_order_invariant() {
+        let a = CoDesign::new("a")
+            .with_accel("mxm64", 32)
+            .with_accel("mxm64", 64)
+            .with_smp("mxm64");
+        let b = CoDesign::new("b")
+            .with_accel("mxm64", 64)
+            .with_accel("mxm64", 32)
+            .with_smp("mxm64");
+        assert_eq!(codesign_key(&a), codesign_key(&b));
+        let c = CoDesign::new("c").with_accel("mxm64", 32).with_accel("mxm64", 32);
+        assert_ne!(codesign_key(&a), codesign_key(&c));
+    }
+
+    #[test]
+    fn fingerprint_separates_mismatchable_keys() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let base = context_fingerprint(&fixture(&p, &board, &space));
+        // Same inputs -> same fingerprint.
+        assert_eq!(base, context_fingerprint(&fixture(&p, &board, &space)));
+        // A different program (task cycle counts differ) must miss.
+        let p2 = Matmul::new(512, 64).build_program(&board);
+        assert_ne!(base, context_fingerprint(&fixture(&p2, &board, &space)));
+        // A perturbed board must miss.
+        let mut b2 = board.clone();
+        b2.fabric_freq_mhz += 1.0;
+        let p3 = Matmul::new(256, 64).build_program(&b2);
+        assert_ne!(base, context_fingerprint(&fixture(&p3, &b2, &space)));
+        // A different part must miss.
+        let ctx_small = SweepContext::for_space(&p, &board, &FpgaPart::xc7z020(), &space);
+        assert_ne!(base, context_fingerprint(&ctx_small));
+        // The emulator block is explicitly NOT part of the key.
+        let mut b3 = board.clone();
+        b3.emu.seed ^= 1;
+        let p4 = Matmul::new(256, 64).build_program(&b3);
+        assert_eq!(base, context_fingerprint(&fixture(&p4, &b3, &space)));
+    }
+
+    #[test]
+    fn memo_json_roundtrip_is_bit_exact() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = fixture(&p, &board, &space);
+        let fp = context_fingerprint(&ctx);
+        let mut memo = EvalMemo::new();
+        let (points, _) = ctx.explore_pruned(&space, Objective::Time, 2);
+        for pt in &points {
+            memo.record(&ctx, fp, &codesign_key(&pt.codesign), pt);
+        }
+        assert_eq!(memo.n_contexts(), 1);
+        assert_eq!(memo.n_points(), points.len());
+        let back = EvalMemo::from_json(&memo.to_json()).unwrap();
+        for pt in &points {
+            let hit = back.lookup(fp, &codesign_key(&pt.codesign)).unwrap();
+            assert_eq!(hit.est_ms.to_bits(), pt.est_ms.to_bits());
+            assert_eq!(hit.energy_j.to_bits(), pt.energy_j.to_bits());
+            assert_eq!(hit.edp.to_bits(), pt.edp.to_bits());
+            assert_eq!(hit.fabric_util.to_bits(), pt.fabric_util.to_bits());
+        }
+        assert!(back.lookup(fp ^ 1, "anything").is_none());
+        assert!(!back.frontier(fp).is_empty());
+        assert_eq!(back.points_ms(fp).len(), points.len());
+    }
+
+    #[test]
+    fn memo_rejects_foreign_versions() {
+        assert!(EvalMemo::from_json("{\"version\": 999, \"contexts\": []}").is_err());
+        assert!(EvalMemo::from_json("{\"contexts\": []}").is_err());
+        let wrong_estimator = format!(
+            "{{\"version\": {MEMO_SCHEMA_VERSION}, \"estimator\": \"0.0.0\", \"contexts\": []}}"
+        );
+        assert!(EvalMemo::from_json(&wrong_estimator).is_err());
+        assert!(EvalMemo::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn load_or_new_handles_missing_files() {
+        let dir = std::env::temp_dir().join("zynq_warm_memo_t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memo.json");
+        std::fs::remove_file(&path).ok();
+        let memo = EvalMemo::load_or_new(&path).unwrap();
+        assert_eq!(memo.n_points(), 0);
+        memo.save(&path).unwrap();
+        assert!(EvalMemo::load_or_new(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_sweep_skips_memo_hits_and_stays_exact() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p).with_mixed();
+        let ctx = fixture(&p, &board, &space);
+        let mut memo = EvalMemo::new();
+        let (cold, cold_stats) = ctx.explore_pruned(&space, Objective::Time, 2);
+        let (first, first_stats) =
+            ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        assert_eq!(first_stats.memo_hits, 0);
+        assert!(first_stats.evaluated > 0);
+        // Exactness vs the cold pruned sweep: best + Pareto front.
+        assert_eq!(
+            cold[0].est_ms.to_bits(),
+            first[0].est_ms.to_bits(),
+            "warm best diverged ({} vs {})",
+            cold[0].codesign.name,
+            first[0].codesign.name
+        );
+        assert_eq!(
+            super::super::pareto_front_coords(&cold),
+            super::super::pareto_front_coords(&first)
+        );
+        assert!(cold_stats.evaluated > 0);
+        // Second sweep over the identical space: zero evaluations, every
+        // point served from the memo, ranking bit-identical.
+        let (second, second_stats) =
+            ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        assert_eq!(second_stats.evaluated, 0, "{second_stats:?}");
+        assert_eq!(second_stats.memo_hits as usize, first.len());
+        assert_eq!(second.len(), first.len());
+        for (a, b) in second.iter().zip(&first) {
+            assert_eq!(a.codesign.name, b.codesign.name);
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+    }
+}

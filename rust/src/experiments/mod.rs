@@ -325,6 +325,241 @@ pub fn dse_suite_latency(
     })
 }
 
+/// Per-application record of one warm-start comparison run (see
+/// [`warm_start_latency`]). All counts refer to the same mixed-variant
+/// space; the four sweep modes return the identical best point and
+/// time-energy Pareto front (asserted by the harness) and differ only in
+/// how many candidates they had to simulate.
+#[derive(Clone, Debug)]
+pub struct WarmAppRow {
+    /// Application name.
+    pub name: String,
+    /// Feasible candidates of the mixed-variant space.
+    pub feasible: u64,
+    /// Candidates surviving enumeration (dominance + resource cuts).
+    pub enumerated: u64,
+    /// Simulated by the cold FIFO-ordered pruned sweep (the baseline).
+    pub fifo_evaluated: u64,
+    /// Simulated by the cold bound-ascending pruned sweep (PR-2 default).
+    pub bound_evaluated: u64,
+    /// Simulated by the cold cheap-feature ranked pruned sweep.
+    pub ranked_evaluated: u64,
+    /// Simulated by the *second* warm sweep over the identical space
+    /// (zero when the memo round-trips — asserted).
+    pub warm_evaluated: u64,
+    /// Memo hits of the second warm sweep.
+    pub memo_hits: u64,
+    /// Bound cuts of the second warm sweep attributable to the seeded
+    /// frontier.
+    pub seeded_cut: u64,
+    /// Best co-design (identical under every mode — asserted).
+    pub best: String,
+}
+
+/// Result of [`warm_start_latency`]: wall times of the cold-FIFO,
+/// cold-ranked and warm (second-run) sweeps plus per-app accounting.
+#[derive(Clone, Debug)]
+pub struct WarmStartLatency {
+    /// Worker-pool size used for every pass.
+    pub workers: usize,
+    /// Wall time of the cold FIFO-ordered pruned sweep (seconds).
+    pub fifo_s: f64,
+    /// Wall time of the cold ranked pruned sweep (seconds).
+    pub ranked_s: f64,
+    /// Wall time of the warm second sweep (seconds).
+    pub warm_s: f64,
+    /// Per-application accounting.
+    pub apps: Vec<WarmAppRow>,
+}
+
+/// Warm-start / ordered DSE latency on **mixed-variant** spaces — the
+/// combinatorial regime the ISSUE stresses the warm layer against.
+///
+/// Sweeps matmul (at `n`) and cholesky (at `n.min(256)` — the mixed
+/// cholesky space is cubic in the per-kernel option count) through four
+/// pruned modes: cold FIFO order, cold bound-ascending order, cold
+/// cheap-feature ranked order, and a warm second run against the
+/// [`EvalMemo`](crate::dse::EvalMemo) a first warm run populated.
+/// Asserts, per application, that every mode returns the bit-identical
+/// best point and time-energy Pareto front, and that the warm second run
+/// simulates **zero** points — the exactness and zero-re-evaluation
+/// contracts of `dse::warm`.
+pub fn warm_start_latency(
+    n: u64,
+    board: &BoardConfig,
+    workers: usize,
+) -> anyhow::Result<WarmStartLatency> {
+    use crate::dse::{pareto_front_coords, DseSpace, EvalMemo, Objective, OrderMode, SweepContext};
+    let part = FpgaPart::xc7z045();
+    let programs: Vec<(&str, TaskProgram)> = vec![
+        ("matmul", crate::apps::build_app_program("matmul", n, 64, board)?),
+        (
+            "cholesky",
+            crate::apps::build_app_program("cholesky", n.min(256), 64, board)?,
+        ),
+    ];
+    let mut apps = Vec::new();
+    let mut fifo_s = 0.0;
+    let mut ranked_s = 0.0;
+    let mut warm_s = 0.0;
+    for (name, program) in &programs {
+        let space = DseSpace::from_program(program).with_mixed();
+        let ctx = SweepContext::for_space(program, board, &part, &space);
+
+        let t0 = Instant::now();
+        let (fifo, fifo_stats) =
+            ctx.explore_pruned_with(&space, Objective::Time, workers, OrderMode::Fifo);
+        fifo_s += t0.elapsed().as_secs_f64();
+        let (bound, bound_stats) =
+            ctx.explore_pruned_with(&space, Objective::Time, workers, OrderMode::BoundAsc);
+        let t1 = Instant::now();
+        let (ranked, ranked_stats) =
+            ctx.explore_pruned_with(&space, Objective::Time, workers, OrderMode::Ranked);
+        ranked_s += t1.elapsed().as_secs_f64();
+
+        let mut memo = EvalMemo::new();
+        let (first, _) =
+            ctx.explore_warm(&space, &mut memo, Objective::Time, workers, OrderMode::Ranked);
+        let t2 = Instant::now();
+        let (warm, warm_stats) =
+            ctx.explore_warm(&space, &mut memo, Objective::Time, workers, OrderMode::Ranked);
+        warm_s += t2.elapsed().as_secs_f64();
+
+        // Exactness across every mode: identical best point + front.
+        for (label, pts) in [
+            ("bound", &bound),
+            ("ranked", &ranked),
+            ("warm-first", &first),
+            ("warm-second", &warm),
+        ] {
+            anyhow::ensure!(!pts.is_empty(), "{name}/{label}: empty sweep");
+            anyhow::ensure!(
+                pts[0].est_ms.to_bits() == fifo[0].est_ms.to_bits(),
+                "{name}/{label}: best diverged ({} vs {})",
+                pts[0].codesign.name,
+                fifo[0].codesign.name
+            );
+            anyhow::ensure!(
+                pareto_front_coords(pts) == pareto_front_coords(&fifo),
+                "{name}/{label}: Pareto front diverged"
+            );
+        }
+        // The zero-re-evaluation contract of the memo.
+        anyhow::ensure!(
+            warm_stats.evaluated == 0,
+            "{name}: warm second run simulated {} points",
+            warm_stats.evaluated
+        );
+        anyhow::ensure!(
+            fifo_stats.evaluated > 0 && warm_stats.memo_hits > 0,
+            "{name}: degenerate space"
+        );
+        apps.push(WarmAppRow {
+            name: name.to_string(),
+            feasible: fifo_stats.feasible_points,
+            enumerated: fifo_stats.enumerated(),
+            fifo_evaluated: fifo_stats.evaluated,
+            bound_evaluated: bound_stats.evaluated,
+            ranked_evaluated: ranked_stats.evaluated,
+            warm_evaluated: warm_stats.evaluated,
+            memo_hits: warm_stats.memo_hits,
+            seeded_cut: warm_stats.seeded_cut,
+            best: fifo[0].codesign.name.clone(),
+        });
+    }
+    Ok(WarmStartLatency {
+        workers,
+        fifo_s,
+        ranked_s,
+        warm_s,
+        apps,
+    })
+}
+
+/// One row of the perturbed-space warm-start robustness study.
+#[derive(Clone, Debug)]
+pub struct PerturbedWarmRow {
+    /// Perturbation label.
+    pub label: String,
+    /// Simulated by the cold pruned sweep of the perturbed space.
+    pub cold_evaluated: u64,
+    /// Simulated by the warm sweep (memo from the *base* space).
+    pub warm_evaluated: u64,
+    /// Points the warm sweep reused from the base-space memo.
+    pub memo_hits: u64,
+}
+
+/// Perturbed-space robustness of the warm-start layer: build a memo by
+/// sweeping matmul's mixed-variant base space, then re-sweep perturbed
+/// variants of the space (dropped / added unroll variants, a third
+/// instance slot, the homogeneous restriction, and the identical space)
+/// warm against a clone of that memo. Asserts, per perturbation, that the
+/// warm sweep returns the bit-identical best point and time-energy Pareto
+/// front to a cold pruned sweep of the same perturbed space — overlap is
+/// *reused*, never allowed to bias the result — and that the identical
+/// space re-evaluates nothing.
+pub fn warm_perturbed_study(
+    n: u64,
+    board: &BoardConfig,
+    workers: usize,
+) -> anyhow::Result<Vec<PerturbedWarmRow>> {
+    use crate::dse::{pareto_front_coords, DseSpace, EvalMemo, Objective, OrderMode, SweepContext};
+    let part = FpgaPart::xc7z045();
+    let program = crate::apps::build_app_program("matmul", n, 64, board)?;
+    let base = DseSpace::from_program(&program).with_mixed();
+    let base_ctx = SweepContext::for_space(&program, board, &part, &base);
+    let mut memo = EvalMemo::new();
+    base_ctx.explore_warm(&base, &mut memo, Objective::Time, workers, OrderMode::Ranked);
+
+    let mut spaces: Vec<(String, DseSpace)> = vec![("identical".into(), base.clone())];
+    let mut dropped = base.clone();
+    dropped.kernels[0].unrolls.retain(|&u| u != 8);
+    spaces.push(("drop-u8".into(), dropped));
+    let mut added = base.clone();
+    added.kernels[0].unrolls.push(128);
+    spaces.push(("add-u128".into(), added));
+    let mut wider = base.clone();
+    wider.kernels[0].max_instances += 1;
+    spaces.push(("third-instance".into(), wider));
+    let mut homogeneous = base.clone();
+    homogeneous.mixed = false;
+    spaces.push(("homogeneous".into(), homogeneous));
+
+    let mut rows = Vec::new();
+    for (label, space) in &spaces {
+        let ctx = SweepContext::for_space(&program, board, &part, space);
+        let (cold, cold_stats) = ctx.explore_pruned(space, Objective::Time, workers);
+        let mut trial = memo.clone();
+        let (warm, warm_stats) =
+            ctx.explore_warm(space, &mut trial, Objective::Time, workers, OrderMode::Ranked);
+        anyhow::ensure!(!cold.is_empty(), "{label}: empty sweep");
+        anyhow::ensure!(
+            cold[0].est_ms.to_bits() == warm[0].est_ms.to_bits(),
+            "{label}: warm best diverged ({} vs {})",
+            cold[0].codesign.name,
+            warm[0].codesign.name
+        );
+        anyhow::ensure!(
+            pareto_front_coords(&cold) == pareto_front_coords(&warm),
+            "{label}: warm Pareto front diverged"
+        );
+        if label == "identical" {
+            anyhow::ensure!(
+                warm_stats.evaluated == 0,
+                "identical space re-simulated {} points",
+                warm_stats.evaluated
+            );
+        }
+        rows.push(PerturbedWarmRow {
+            label: label.clone(),
+            cold_evaluated: cold_stats.evaluated,
+            warm_evaluated: warm_stats.evaluated,
+            memo_hits: warm_stats.memo_hits,
+        });
+    }
+    Ok(rows)
+}
+
 /// Result of [`cross_board_dse`]: wall times of the three cross-board
 /// sweep modes plus the pruned per-(board, app) results and the winner
 /// tables.
@@ -342,8 +577,14 @@ pub struct CrossBoardLatency {
     pub results: Vec<crate::dse::CrossBoardResult>,
     /// Per-(board, app) results of the incumbent (global-cut) mode.
     pub global_results: Vec<crate::dse::CrossBoardResult>,
-    /// Per-application "which board wins at which budget" tables.
+    /// Per-application "which board wins at which time budget" tables.
     pub winners: Vec<(String, Vec<crate::dse::BudgetRow>)>,
+    /// The same decision on the energy-budget axis (fastest point within
+    /// an energy envelope).
+    pub energy_winners: Vec<(String, Vec<crate::dse::BudgetRow>)>,
+    /// And on the fabric-area axis (fastest point within a utilization
+    /// cap — the part-cost question).
+    pub area_winners: Vec<(String, Vec<crate::dse::BudgetRow>)>,
 }
 
 /// Cross-board DSE harness: sweep `apps` (any of matmul|cholesky|lu|
@@ -411,6 +652,9 @@ pub fn cross_board_dse(
     }
 
     let winners = board_winner_table(&pruned);
+    let energy_winners =
+        crate::dse::board_winner_table_for(&pruned, crate::dse::BudgetAxis::Energy);
+    let area_winners = crate::dse::board_winner_table_for(&pruned, crate::dse::BudgetAxis::Area);
     Ok(CrossBoardLatency {
         workers,
         exhaustive_s,
@@ -419,6 +663,8 @@ pub fn cross_board_dse(
         results: pruned,
         global_results: global,
         winners,
+        energy_winners,
+        area_winners,
     })
 }
 
@@ -585,6 +831,48 @@ mod tests {
         let (base_s, sweep_s, points) = dse_sweep_latency(&program, &board, 2).unwrap();
         assert!(points > 0);
         assert!(base_s > 0.0 && sweep_s > 0.0);
+    }
+
+    #[test]
+    fn warm_start_latency_round_trips_the_memo() {
+        // The harness itself asserts best/front equality across all four
+        // orders and the zero-re-evaluation warm contract; here we check
+        // the accounting shape.
+        let board = BoardConfig::zynq706();
+        let r = warm_start_latency(256, &board, 2).unwrap();
+        assert_eq!(r.apps.len(), 2);
+        for a in &r.apps {
+            assert_eq!(a.warm_evaluated, 0, "{a:?}");
+            assert!(a.memo_hits > 0, "{a:?}");
+            assert!(a.fifo_evaluated > 0, "{a:?}");
+            assert!(a.enumerated <= a.feasible, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn warm_perturbed_study_reuses_overlap_exactly() {
+        let board = BoardConfig::zynq706();
+        let rows = warm_perturbed_study(256, &board, 2).unwrap();
+        assert_eq!(rows.len(), 5);
+        let identical = &rows[0];
+        assert_eq!(identical.label, "identical");
+        assert_eq!(identical.warm_evaluated, 0, "{identical:?}");
+        assert!(identical.memo_hits > 0);
+        // Every perturbed space overlaps the base space somewhere, so the
+        // memo must land hits in each of them.
+        for r in &rows {
+            assert!(r.memo_hits > 0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn cross_board_budget_tables_cover_all_axes() {
+        let boards = crate::board::BoardSpace::resolve(&["zynq702", "zynq706"]).unwrap();
+        let r = cross_board_dse(256, &boards, &["matmul"], 2).unwrap();
+        assert_eq!(r.energy_winners.len(), 1);
+        assert_eq!(r.area_winners.len(), 1);
+        assert!(!r.energy_winners[0].1.is_empty());
+        assert!(!r.area_winners[0].1.is_empty());
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //!   (lu, stencil).
 //! * [`dse`] — co-design space enumeration and ranking: the shared-context
 //!   parallel sweep engine ([`dse::sweep`]), the bound-guided pruned
-//!   enumeration ([`dse::prune`]), batched multi-program suites
-//!   ([`dse::SweepSuite`]) and the cross-board sweep that makes the
-//!   platform itself a swept axis ([`dse::CrossBoardSweep`]).
+//!   enumeration with selectable round ordering ([`dse::prune`]), the
+//!   persistent warm-start evaluation memo ([`dse::warm`]), batched
+//!   multi-program suites ([`dse::SweepSuite`]) and the cross-board sweep
+//!   that makes the platform itself a swept axis
+//!   ([`dse::CrossBoardSweep`]).
 //! * [`trace`] — basic-trace JSON-lines IO, DOT export, Paraver writer.
 //! * [`metrics`] — speedup tables, trend agreement, makespan lower bounds
 //!   ([`metrics::bounds`]), report rendering and figure-data export.

@@ -2,7 +2,7 @@
 //! data, so the reproduction plots can be regenerated outside this binary
 //! (gnuplot / matplotlib) and diffed in CI.
 
-use crate::dse::{BudgetRow, CrossBoardResult};
+use crate::dse::{BudgetAxis, BudgetRow, CrossBoardResult};
 use crate::metrics::SpeedupTable;
 use crate::util::json::{arr, obj, Value};
 
@@ -51,22 +51,81 @@ pub fn speedup_table_json(table: &SpeedupTable, title: &str) -> String {
     .to_json()
 }
 
-/// CSV for the cross-board winner tables (one row per budget point).
+/// CSV for the cross-board winner tables (one row per budget point,
+/// time-budget axis).
 pub fn cross_board_winners_csv(tables: &[(String, Vec<BudgetRow>)]) -> String {
-    let mut out = String::from("app,time_budget_ms,board,codesign,energy_j\n");
+    let mut out = String::from("app,time_budget_ms,board,codesign,energy_j,fabric_util\n");
     for (app, rows) in tables {
         for r in rows {
             out.push_str(&format!(
-                "{},{:.6},{},{},{:.6}\n",
+                "{},{:.6},{},{},{:.6},{:.6}\n",
                 csv_escape(app),
                 r.time_budget_ms,
                 csv_escape(&r.board),
                 csv_escape(&r.codesign),
-                r.energy_j
+                r.energy_j,
+                r.fabric_util
             ));
         }
     }
     out
+}
+
+/// CSV for winner tables on any [`BudgetAxis`]: one row per budget point
+/// with the axis and the budget coordinate made explicit, plus the
+/// winning point's full coordinates.
+pub fn budget_tables_csv(axis: BudgetAxis, tables: &[(String, Vec<BudgetRow>)]) -> String {
+    let mut out =
+        String::from("app,budget_axis,budget,board,codesign,time_ms,energy_j,fabric_util\n");
+    for (app, rows) in tables {
+        for r in rows {
+            let budget = match axis {
+                BudgetAxis::Time => r.time_budget_ms,
+                BudgetAxis::Energy => r.energy_j,
+                BudgetAxis::Area => r.fabric_util,
+            };
+            out.push_str(&format!(
+                "{},{},{:.6},{},{},{:.6},{:.6},{:.6}\n",
+                csv_escape(app),
+                axis.as_str(),
+                budget,
+                csv_escape(&r.board),
+                csv_escape(&r.codesign),
+                r.time_budget_ms,
+                r.energy_j,
+                r.fabric_util
+            ));
+        }
+    }
+    out
+}
+
+/// JSON for winner tables on any [`BudgetAxis`] — the machine-readable
+/// form of `dse --boards --budget <axis>`.
+pub fn budget_tables_json(axis: BudgetAxis, tables: &[(String, Vec<BudgetRow>)]) -> String {
+    let tables_json: Vec<Value> = tables
+        .iter()
+        .map(|(app, rows)| {
+            let rows: Vec<Value> = rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("time_ms", r.time_budget_ms.into()),
+                        ("board", r.board.as_str().into()),
+                        ("codesign", r.codesign.as_str().into()),
+                        ("energy_j", r.energy_j.into()),
+                        ("fabric_util", r.fabric_util.into()),
+                    ])
+                })
+                .collect();
+            obj(vec![("app", app.as_str().into()), ("rows", arr(rows))])
+        })
+        .collect();
+    obj(vec![
+        ("budget_axis", axis.as_str().into()),
+        ("tables", arr(tables_json)),
+    ])
+    .to_json()
 }
 
 /// JSON document for a cross-board sweep: one record per (board, app)
@@ -195,10 +254,20 @@ mod tests {
                 board: "zynq706".into(),
                 codesign: "1acc".into(),
                 energy_j: 0.75,
+                fabric_util: 0.4,
             }],
         )];
         let csv = cross_board_winners_csv(&tables);
         assert!(csv.lines().count() == 2 && csv.contains("zynq706"));
+        // Budget-axis exports carry the axis and the budget coordinate.
+        let ecsv = budget_tables_csv(BudgetAxis::Energy, &tables);
+        assert!(ecsv.lines().count() == 2 && ecsv.contains(",energy,0.75"));
+        let acsv = budget_tables_csv(BudgetAxis::Area, &tables);
+        assert!(acsv.contains(",area,0.4"));
+        let ej =
+            crate::util::json::parse(&budget_tables_json(BudgetAxis::Energy, &tables)).unwrap();
+        assert_eq!(ej.get("budget_axis").unwrap().as_str().unwrap(), "energy");
+        assert_eq!(ej.get("tables").unwrap().as_arr().unwrap().len(), 1);
         let j = cross_board_json(&results, &tables);
         let v = crate::util::json::parse(&j).unwrap();
         let entries = v.get("entries").unwrap().as_arr().unwrap();

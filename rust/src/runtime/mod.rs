@@ -10,11 +10,17 @@
 //! numerically validating the kernels while the simulator supplies the
 //! Zynq timing.
 //!
-//! The real backend needs the vendored `xla` crate and is gated behind the
-//! `pjrt` cargo feature. Without it this module exposes an API-compatible
-//! [`Runtime`] stub whose entry points report the missing backend at run
-//! time, so the CLI `measure` command, the e2e example and the integration
-//! tests degrade cleanly instead of failing to build.
+//! The backend is gated behind the `pjrt` cargo feature, wired as an
+//! optional path dependency on `vendor/xla`. That directory ships as an
+//! API-compatible **placeholder** crate, so `cargo build --features pjrt`
+//! resolves and compiles from a clean checkout: against the placeholder,
+//! [`Runtime::new`] fails at run time with a message pointing at the
+//! vendoring story (drop the real `xla_extension` bindings over
+//! `vendor/xla/` to enable actual execution — see README.md). Without the
+//! feature this module instead exposes its own API-compatible [`Runtime`]
+//! stub with the same clean degradation, so the CLI `measure` command,
+//! the e2e example and the integration tests never fail to build either
+//! way.
 
 pub mod executor;
 

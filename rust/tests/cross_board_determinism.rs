@@ -166,6 +166,7 @@ fn pruned_equals_exhaustive_per_board_on_random_spaces() {
                 max_instances: rng.gen_range(1, 4) as u32,
                 try_smp: rng.next_f64() < 0.5,
             }],
+            mixed: rng.next_f64() < 0.3,
         };
         let mut sweep = CrossBoardSweep::new();
         for (t, p) in axis.targets.iter().zip(&programs) {

@@ -28,7 +28,9 @@ fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
 /// Randomize a space over a program's FPGA-capable kernels: random unroll
 /// subsets (including factors past pipeline saturation for small trip
 /// counts, which is what arms the dominance cut), 1-2 instances, random
-/// "+ smp" consideration.
+/// "+ smp" consideration, and a random mixed-variant flag (heterogeneous
+/// per-instance unrolls — the combinatorial regime the cuts are
+/// stress-tested against).
 fn random_space(rng: &mut Rng, program: &TaskProgram) -> DseSpace {
     let pool = [4u32, 8, 16, 32, 64, 128];
     let kernels = program
@@ -52,7 +54,10 @@ fn random_space(rng: &mut Rng, program: &TaskProgram) -> DseSpace {
             }
         })
         .collect();
-    DseSpace { kernels }
+    DseSpace {
+        kernels,
+        mixed: rng.next_f64() < 0.4,
+    }
 }
 
 /// A synthetic program whose kernels have small pipelined trip counts, so

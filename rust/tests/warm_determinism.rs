@@ -1,0 +1,326 @@
+//! Warm-start soundness properties: memo reuse, perturbed-space and
+//! sibling-board warm sweeps, and the ordered bound-guided rounds must all
+//! return the bit-identical best point and time-energy Pareto front of the
+//! cold exhaustive sweep, for any worker count — on randomized and
+//! mixed-variant spaces. Uses the repository's seeded forall harness (no
+//! external proptest crate), same style as `prune_soundness.rs`.
+
+use zynq_estimator::apps::matmul::Matmul;
+use zynq_estimator::board::BoardSpace;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::coordinator::task::TaskProgram;
+use zynq_estimator::dse::{
+    pareto_front_coords as front_coords, warm, CrossBoardSweep, DseSpace, EvalMemo, KernelSpace,
+    Objective, OrderMode, SweepContext,
+};
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::util::Rng;
+
+fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Random matmul space: random unroll subsets (saturated variants
+/// included, arming the dominance cut), 1-2 instances, random smp and a
+/// random mixed-variant flag.
+fn random_space(rng: &mut Rng, program: &TaskProgram) -> DseSpace {
+    let pool = [4u32, 8, 16, 32, 64, 128];
+    let kernels = program
+        .kernels
+        .iter()
+        .filter(|k| k.targets.fpga)
+        .map(|k| {
+            let n_unrolls = rng.gen_range(2, 5) as usize;
+            let mut unrolls: Vec<u32> = Vec::new();
+            while unrolls.len() < n_unrolls {
+                let u = pool[rng.gen_range(0, pool.len() as u64) as usize];
+                if !unrolls.contains(&u) {
+                    unrolls.push(u);
+                }
+            }
+            KernelSpace {
+                kernel: k.name.clone(),
+                unrolls,
+                max_instances: rng.gen_range(1, 3) as u32,
+                try_smp: k.targets.smp && rng.next_f64() < 0.5,
+            }
+        })
+        .collect();
+    DseSpace {
+        kernels,
+        mixed: rng.next_f64() < 0.6,
+    }
+}
+
+fn assert_same_best_and_front(
+    seed: u64,
+    label: &str,
+    reference: &[zynq_estimator::dse::DsePoint],
+    candidate: &[zynq_estimator::dse::DsePoint],
+) {
+    assert_eq!(
+        reference.is_empty(),
+        candidate.is_empty(),
+        "seed {seed}: {label}: emptiness diverged"
+    );
+    if reference.is_empty() {
+        return;
+    }
+    assert_eq!(
+        reference[0].est_ms.to_bits(),
+        candidate[0].est_ms.to_bits(),
+        "seed {seed}: {label}: best diverged ({} vs {})",
+        reference[0].codesign.name,
+        candidate[0].codesign.name
+    );
+    assert_eq!(
+        front_coords(reference),
+        front_coords(candidate),
+        "seed {seed}: {label}: Pareto front diverged"
+    );
+}
+
+#[test]
+fn prop_memo_reuse_is_exact_and_complete() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(256, 64).build_program(&board);
+    forall(6, 0x3A9E, |seed, rng| {
+        let space = random_space(rng, &program);
+        let ctx = SweepContext::for_space(&program, &board, &part, &space);
+        let exhaustive = ctx.explore(&space, Objective::Time, 2);
+        let mut memo = EvalMemo::new();
+        let (first, first_stats) =
+            ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        assert_same_best_and_front(seed, "warm-first", &exhaustive, &first);
+        assert_eq!(first_stats.memo_hits, 0, "seed {seed}");
+        // Second sweep over the identical space: zero evaluations, every
+        // returned point a memo hit, full ranking bit-identical.
+        let (second, second_stats) =
+            ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        assert_eq!(second_stats.evaluated, 0, "seed {seed}: {second_stats:?}");
+        assert_eq!(
+            second_stats.memo_hits as usize,
+            first.len(),
+            "seed {seed}: {second_stats:?}"
+        );
+        assert_eq!(second.len(), first.len(), "seed {seed}");
+        for (a, b) in second.iter().zip(&first) {
+            assert_eq!(a.codesign.name, b.codesign.name, "seed {seed}");
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "seed {seed}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "seed {seed}");
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits(), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_memo_hits_are_bit_identical_to_fresh_evaluation() {
+    // The "verified on mismatch-able keys" clause: every recorded memo
+    // entry must reproduce a fresh simulation bit for bit, and a context
+    // with any ingredient changed must not hit at all.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(256, 64).build_program(&board);
+    forall(4, 0xBEEF, |seed, rng| {
+        let space = random_space(rng, &program);
+        let ctx = SweepContext::for_space(&program, &board, &part, &space);
+        let mut memo = EvalMemo::new();
+        ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        let fp = warm::context_fingerprint(&ctx);
+        let mut worker = ctx.worker();
+        let mut checked = 0u32;
+        for cd in ctx.enumerate(&space) {
+            let Some(hit) = memo.lookup(fp, &warm::codesign_key(&cd)) else {
+                continue;
+            };
+            let fresh = worker.evaluate(&cd).expect("memoized point must be runnable");
+            assert_eq!(hit.est_ms.to_bits(), fresh.est_ms.to_bits(), "seed {seed}: {}", cd.name);
+            assert_eq!(
+                hit.energy_j.to_bits(),
+                fresh.energy_j.to_bits(),
+                "seed {seed}: {}",
+                cd.name
+            );
+            assert_eq!(hit.edp.to_bits(), fresh.edp.to_bits(), "seed {seed}: {}", cd.name);
+            checked += 1;
+        }
+        assert!(checked > 0, "seed {seed}: no memo entries to verify");
+        // Mismatch-able keys: a perturbed board yields a different
+        // fingerprint, so the same co-design keys must all miss.
+        let mut other_board = board.clone();
+        other_board.dma_bw_mbps += 1.0;
+        let other_program = Matmul::new(256, 64).build_program(&other_board);
+        let other_ctx = SweepContext::for_space(&other_program, &other_board, &part, &space);
+        let other_fp = warm::context_fingerprint(&other_ctx);
+        assert_ne!(fp, other_fp, "seed {seed}");
+        for cd in other_ctx.enumerate(&space) {
+            assert!(
+                memo.lookup(other_fp, &warm::codesign_key(&cd)).is_none(),
+                "seed {seed}: stale hit for {} on a perturbed board",
+                cd.name
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_perturbed_space_warm_sweeps_stay_lossless() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(256, 64).build_program(&board);
+    forall(5, 0x7E27, |seed, rng| {
+        // Base space builds the memo; an independently random space (same
+        // program/board/part context) re-sweeps warm against it.
+        let base = random_space(rng, &program);
+        let base_ctx = SweepContext::for_space(&program, &board, &part, &base);
+        let mut memo = EvalMemo::new();
+        base_ctx.explore_warm(&base, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+
+        let perturbed = random_space(rng, &program);
+        let ctx = SweepContext::for_space(&program, &board, &part, &perturbed);
+        let exhaustive = ctx.explore(&perturbed, Objective::Time, 3);
+        let mut trial = memo.clone();
+        let (warm_pts, warm_stats) =
+            ctx.explore_warm(&perturbed, &mut trial, Objective::Time, 3, OrderMode::Ranked);
+        assert_same_best_and_front(seed, "perturbed-warm", &exhaustive, &warm_pts);
+        assert_eq!(
+            warm_stats.evaluated + warm_stats.memo_hits,
+            warm_pts.len() as u64,
+            "seed {seed}: {warm_stats:?}"
+        );
+        // Determinism: warm output and stats identical for any worker
+        // count (fresh memo clones so the hit set matches).
+        for workers in [1, 4] {
+            let mut again = memo.clone();
+            let (pts, stats) = ctx.explore_warm(
+                &perturbed,
+                &mut again,
+                Objective::Time,
+                workers,
+                OrderMode::Ranked,
+            );
+            assert_eq!(stats, warm_stats, "seed {seed}: workers={workers}");
+            assert_eq!(pts.len(), warm_pts.len(), "seed {seed}: workers={workers}");
+            for (a, b) in pts.iter().zip(&warm_pts) {
+                assert_eq!(a.codesign.name, b.codesign.name, "seed {seed}: workers={workers}");
+                assert_eq!(
+                    a.est_ms.to_bits(),
+                    b.est_ms.to_bits(),
+                    "seed {seed}: workers={workers}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ordered_rounds_stay_lossless_in_every_mode() {
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(256, 64).build_program(&board);
+    forall(5, 0x0D3A, |seed, rng| {
+        let space = random_space(rng, &program);
+        let ctx = SweepContext::for_space(&program, &board, &part, &space);
+        let exhaustive = ctx.explore(&space, Objective::Time, 2);
+        for order in [OrderMode::Fifo, OrderMode::BoundAsc, OrderMode::Ranked] {
+            let (pts, stats) = ctx.explore_pruned_with(&space, Objective::Time, 2, order);
+            assert_same_best_and_front(seed, &format!("{order:?}"), &exhaustive, &pts);
+            assert_eq!(
+                stats.evaluated as usize,
+                pts.len(),
+                "seed {seed}: {order:?}: {stats:?}"
+            );
+            assert_eq!(stats.memo_hits, 0, "seed {seed}: {order:?}");
+            // Worker-count determinism per mode.
+            let (serial, serial_stats) = ctx.explore_pruned_with(&space, Objective::Time, 1, order);
+            assert_eq!(serial_stats, stats, "seed {seed}: {order:?}");
+            for (a, b) in serial.iter().zip(&pts) {
+                assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "seed {seed}: {order:?}");
+            }
+        }
+        // BoundAsc through the ordered entry point must reproduce the
+        // historical explore_pruned exactly (points and stats).
+        let (via_order, order_stats) =
+            ctx.explore_pruned_with(&space, Objective::Time, 2, OrderMode::BoundAsc);
+        let (classic, classic_stats) = ctx.explore_pruned(&space, Objective::Time, 2);
+        assert_eq!(order_stats, classic_stats, "seed {seed}");
+        assert_eq!(via_order.len(), classic.len(), "seed {seed}");
+        for (a, b) in via_order.iter().zip(&classic) {
+            assert_eq!(a.codesign.name, b.codesign.name, "seed {seed}");
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_sibling_board_seeding_keeps_per_board_results_exact() {
+    let axis = BoardSpace::resolve(&["zynq702", "zynq706"]).unwrap();
+    let programs: Vec<TaskProgram> = axis
+        .targets
+        .iter()
+        .map(|t| Matmul::new(256, 64).build_program(&t.board))
+        .collect();
+    forall(5, 0x51B5, |seed, rng| {
+        let space = random_space(rng, &programs[0]);
+        let mut sweep = CrossBoardSweep::new();
+        for (t, p) in axis.targets.iter().zip(&programs) {
+            sweep.push(&t.name, "matmul", p, &t.board, &t.part, space.clone());
+        }
+        let exhaustive = sweep.explore(Objective::Time, 2);
+        let mut memo = EvalMemo::new();
+        let warm_results = sweep.explore_pruned_warm(&mut memo, Objective::Time, 2);
+        // Per-board exactness (the sibling prior only orders, never cuts)
+        // and, as a consequence, exactness of the merged front.
+        let mut merged_e = Vec::new();
+        let mut merged_w = Vec::new();
+        for (e, w) in exhaustive.iter().zip(&warm_results) {
+            assert_same_best_and_front(
+                seed,
+                &format!("sibling-{}", e.board),
+                &e.points,
+                &w.points,
+            );
+            merged_e.extend(e.points.iter().cloned());
+            merged_w.extend(w.points.iter().cloned());
+        }
+        assert_eq!(
+            front_coords(&merged_e),
+            front_coords(&merged_w),
+            "seed {seed}: merged front diverged"
+        );
+        // Unchanged axis, same memo: nothing re-simulates.
+        let again = sweep.explore_pruned_warm(&mut memo, Objective::Time, 2);
+        for (w, a) in warm_results.iter().zip(&again) {
+            assert_eq!(a.stats.evaluated, 0, "seed {seed}: {:?}", a.stats);
+            assert_eq!(a.stats.memo_hits as usize, w.points.len(), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn mixed_pruned_enumeration_matches_the_exhaustive_candidate_set() {
+    // On mixed spaces without dominated variants, the pruned candidate
+    // list must equal the exhaustive enumeration, element for element —
+    // the subsequence/order contract `enumerate_pruned` documents.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(256, 64).build_program(&board);
+    let space = DseSpace::from_program(&program).with_mixed();
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let (cands, stats) = zynq_estimator::dse::enumerate_pruned(&ctx, &space);
+    let exhaustive = ctx.enumerate(&space);
+    assert_eq!(stats.feasible_points as usize, exhaustive.len());
+    assert_eq!(stats.dominance_cut, 0, "{stats:?}");
+    assert_eq!(cands.len(), exhaustive.len());
+    for (a, b) in cands.iter().zip(&exhaustive) {
+        assert_eq!(a, b);
+    }
+    // And the space really is combinatorially larger than homogeneous.
+    let homogeneous = DseSpace::from_program(&program);
+    assert!(exhaustive.len() > ctx.enumerate(&homogeneous).len());
+}
