@@ -94,6 +94,27 @@ fn main() {
         ]));
     }
 
+    // Cross-size kernel-sub-memo warm start: the harness asserts exactness
+    // (warm best + front bit-identical to cold) and the two-level hit
+    // contract (level-2 misses, level-1 hits); the JSON pins the hit
+    // counts so bench-check gates the cross-size reuse claim.
+    let cross = experiments::warm_cross_size_study(&board, workers)
+        .expect("cross-size warm sweeps must be exact");
+    println!(
+        "-- cross-size kernel-memo warm start (matmul {} -> {})",
+        cross.small_n, cross.large_n
+    );
+    println!(
+        "   kernel hits {} (L1), memo hits {} (L2), prior-ordered {}, warm evaluated {}, \
+         cold evaluated {}, best {}",
+        cross.kernel_hits,
+        cross.memo_hits,
+        cross.prior_ordered,
+        cross.warm_evaluated,
+        cross.cold_evaluated,
+        cross.best
+    );
+
     let out = obj(vec![
         ("n", n.into()),
         ("workers", r.workers.into()),
@@ -108,6 +129,19 @@ fn main() {
         ("ranked_le_fifo", (ranked_total <= fifo_total).into()),
         ("apps", arr(records)),
         ("perturbed", arr(perturbed_records)),
+        (
+            "cross_size",
+            obj(vec![
+                ("small_n", cross.small_n.into()),
+                ("large_n", cross.large_n.into()),
+                ("kernel_hits", cross.kernel_hits.into()),
+                ("memo_hits", cross.memo_hits.into()),
+                ("prior_ordered", cross.prior_ordered.into()),
+                ("warm_evaluated", cross.warm_evaluated.into()),
+                ("cold_evaluated", cross.cold_evaluated.into()),
+                ("best", cross.best.as_str().into()),
+            ]),
+        ),
     ])
     .to_json();
     match std::fs::write("BENCH_warm.json", &out) {

@@ -126,9 +126,11 @@ COMMANDS (one per paper experiment, plus utilities):
                                                                  axis + board-winner table,
                                                                  pruned unless --exhaustive;
                                                                  --memo: warm-start from / record
-                                                                 into a persistent eval memo
-                                                                 (also with --boards: sibling-
-                                                                 board frontier seeding);
+                                                                 into a persistent two-level eval
+                                                                 memo (works with --suite and
+                                                                 --boards; kernel sub-memo shares
+                                                                 HLS reports + ordering priors
+                                                                 across sizes and boards);
                                                                  --mixed: heterogeneous unroll
                                                                  variants per kernel instance;
                                                                  --order: bound-round candidate
@@ -136,6 +138,11 @@ COMMANDS (one per paper experiment, plus utilities):
                                                                  else bound);
                                                                  --budget: winner-table axis for
                                                                  --boards)
+  dse memo <stats|gc|compact> --memo m.json                     memo hygiene: inspect the
+                 [--keep-contexts 16] [--keep-points N]          two-level layout, LRU-by-context
+                 [--keep-kernels 256]                            eviction (gc), versioned rewrite
+                                                                 (compact); retained entries stay
+                                                                 bit-exact
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
   robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
   analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
@@ -396,6 +403,9 @@ fn order_from_args(args: &Args) -> anyhow::Result<crate::dse::OrderMode> {
 }
 
 fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    if args.positional.first().map(String::as_str) == Some("memo") {
+        return cmd_dse_memo(args);
+    }
     let top = args.u64_or("top", 15)? as usize;
     let objective = match args.get("objective") {
         None => crate::dse::Objective::Time,
@@ -411,7 +421,7 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         return cmd_dse_boards(args, objective, top, workers);
     }
     if args.has("suite") {
-        return cmd_dse_suite(args, board, objective, top, workers);
+        return cmd_dse_suite(args, board, objective, top, workers, order);
     }
     let app = args.get("app").unwrap_or("matmul");
     let n = args.u64_or("n", 512)?;
@@ -419,25 +429,38 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let program = build_app_program(app, n, bs, board)?;
     let mut space = crate::dse::DseSpace::from_program(&program);
     space.mixed = args.has("mixed");
-    let ctx = crate::dse::SweepContext::for_space(&program, board, &FpgaPart::xc7z045(), &space);
-    let t0 = std::time::Instant::now();
     if let Some(memo_path) = memo_path_from_args(args)? {
         if !args.has("pruned") {
             eprintln!("note: --memo implies the bound-guided pruned (warm) path");
         }
         let path = std::path::Path::new(memo_path);
         let mut memo = crate::dse::EvalMemo::load_or_new(path)?;
+        // Prime the HLS cache from the level-1 kernel sub-memo first, so
+        // kernels characterized by any earlier run — any problem size,
+        // same board — skip the cost model.
+        let ctx = crate::dse::SweepContext::for_space_warm(
+            &program,
+            board,
+            &FpgaPart::xc7z045(),
+            &space,
+            &memo,
+        );
+        let t0 = std::time::Instant::now();
         let (points, stats) = ctx.explore_warm(&space, &mut memo, objective, workers, order);
         let secs = t0.elapsed().as_secs_f64();
         memo.save(path)?;
         print!("{}", crate::dse::render(&points, top, objective));
         println!("pruning: {}", stats.render());
         println!(
-            "memo: {} hits, {} new points recorded -> {memo_path} ({} points, {} contexts)",
+            "memo: {} hits ({} L2 point hits, {} L1 kernel hits), {} new points recorded \
+             -> {memo_path} ({} points, {} contexts, {} kernel entries)",
+            stats.memo_hits + stats.kernel_hits,
             stats.memo_hits,
+            stats.kernel_hits,
             stats.evaluated,
             memo.n_points(),
             memo.n_contexts(),
+            memo.n_kernel_entries(),
         );
         println!(
             "swept {} of {} feasible points in {:.3} s ({workers} workers, {:?} order, {} cached HLS reports)",
@@ -449,6 +472,8 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         );
         return Ok(0);
     }
+    let ctx = crate::dse::SweepContext::for_space(&program, board, &FpgaPart::xc7z045(), &space);
+    let t0 = std::time::Instant::now();
     if args.has("pruned") {
         let (points, stats) = ctx.explore_pruned_with(&space, objective, workers, order);
         let secs = t0.elapsed().as_secs_f64();
@@ -481,38 +506,60 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
 
 /// `dse --suite`: sweep the whole matmul/cholesky/lu/stencil suite through
 /// one shared worker pool, with bound-guided pruning unless
-/// `--exhaustive` is given.
+/// `--exhaustive` is given. With `--memo`, the suite runs warm — memo hits
+/// skip simulation, the kernel sub-memo primes every app's HLS cache, and
+/// a repeated run over an unchanged suite sweeps zero points.
 fn cmd_dse_suite(
     args: &Args,
     board: &BoardConfig,
     objective: crate::dse::Objective,
     top: usize,
     workers: usize,
+    order: crate::dse::OrderMode,
 ) -> anyhow::Result<i32> {
     let n = args.u64_or("n", 512)?;
     let bs = args.u64_or("bs", 64)?;
     if let Some(app) = args.get("app") {
         eprintln!("note: --suite sweeps all four apps; --app {app} is ignored");
     }
-    if args.has("mixed") || args.has("order") || args.has("memo") {
-        eprintln!("note: --mixed/--order/--memo are not wired for --suite; ignored");
+    if args.has("mixed") {
+        eprintln!("note: --mixed is not wired for --suite; ignored");
+    }
+    if args.has("order") && !args.has("memo") {
+        eprintln!("note: --order applies to warm (--memo) suite sweeps; ignored");
+    }
+    let memo_arg = memo_path_from_args(args)?;
+    if memo_arg.is_some() && args.has("exhaustive") {
+        eprintln!("note: --memo also serves the exhaustive suite (hits skip simulation)");
     }
     let part = FpgaPart::xc7z045();
     let programs: Vec<(&str, crate::coordinator::task::TaskProgram)> = crate::apps::SUITE_APPS
         .into_iter()
         .map(|app| Ok((app, build_app_program(app, n, bs, board)?)))
         .collect::<anyhow::Result<_>>()?;
+    let mut memo_state: Option<(std::path::PathBuf, crate::dse::EvalMemo)> = match memo_arg {
+        Some(p) => {
+            let path = std::path::PathBuf::from(p);
+            let memo = crate::dse::EvalMemo::load_or_new(&path)?;
+            Some((path, memo))
+        }
+        None => None,
+    };
     let mut suite = crate::dse::SweepSuite::new();
     for (name, program) in &programs {
         let space = crate::dse::DseSpace::from_program(program);
-        suite.push(name, program, board, &part, space);
+        match &memo_state {
+            Some((_, memo)) => suite.push_warm(name, program, board, &part, space, memo),
+            None => suite.push(name, program, board, &part, space),
+        }
     }
     let pruned = !args.has("exhaustive");
     let t0 = std::time::Instant::now();
-    let results = if pruned {
-        suite.explore_pruned(objective, workers)
-    } else {
-        suite.explore(objective, workers)
+    let results = match (&mut memo_state, pruned) {
+        (Some((_, memo)), true) => suite.explore_pruned_warm(memo, objective, workers, order),
+        (Some((_, memo)), false) => suite.explore_warm(memo, objective, workers),
+        (None, true) => suite.explore_pruned(objective, workers),
+        (None, false) => suite.explore(objective, workers),
     };
     let secs = t0.elapsed().as_secs_f64();
     let mut evaluated = 0u64;
@@ -520,12 +567,27 @@ fn cmd_dse_suite(
     for r in &results {
         println!("==== {} (n = {n})", r.name);
         print!("{}", crate::dse::render(&r.points, top, objective));
-        if pruned {
+        if pruned || memo_state.is_some() {
             println!("pruning: {}", r.stats.render());
         }
         println!();
         evaluated += r.stats.evaluated;
         feasible += r.stats.feasible_points;
+    }
+    if let Some((path, memo)) = &memo_state {
+        memo.save(path)?;
+        let hits: u64 = results.iter().map(|r| r.stats.memo_hits).sum();
+        let kernel_hits: u64 = results.iter().map(|r| r.stats.kernel_hits).sum();
+        println!(
+            "memo: {} hits ({hits} L2 point hits, {kernel_hits} L1 kernel hits) -> {} \
+             ({} points, {} contexts, {} kernel entries)",
+            hits + kernel_hits,
+            path.display(),
+            memo.n_points(),
+            memo.n_contexts(),
+            memo.n_kernel_entries(),
+        );
+        println!("swept {evaluated} of {feasible} feasible points across the suite");
     }
     println!(
         "suite: {} apps, {} of {} feasible points evaluated in {:.3} s ({} mode, {workers} workers, one shared pool)",
@@ -564,12 +626,24 @@ fn cmd_dse_boards(
         vec![args.get("app").unwrap_or("matmul")]
     };
     let programs = crate::dse::cross::build_axis_programs(&axis, &apps, n, bs)?;
-    let sweep = crate::dse::cross::sweep_from_programs(&axis, &programs);
     // Pruned by default (matching `dse --suite`); `--exhaustive` opts out;
-    // `--memo` warm-starts from (and records into) a persistent eval memo
-    // with sibling-board frontier seeding.
+    // `--memo` warm-starts from (and records into) a persistent two-level
+    // eval memo: level-2 hits skip simulation, the level-1 kernel sub-memo
+    // primes HLS caches and seeds sibling-board ordering priors.
     let memo_arg = memo_path_from_args(args)?;
-    let mode = if memo_arg.is_some() {
+    let mut memo_state: Option<(std::path::PathBuf, crate::dse::EvalMemo)> = match memo_arg {
+        Some(p) => {
+            let path = std::path::PathBuf::from(p);
+            let memo = crate::dse::EvalMemo::load_or_new(&path)?;
+            Some((path, memo))
+        }
+        None => None,
+    };
+    let sweep = match &memo_state {
+        Some((_, memo)) => crate::dse::cross::sweep_from_programs_warm(&axis, &programs, memo),
+        None => crate::dse::cross::sweep_from_programs(&axis, &programs),
+    };
+    let mode = if memo_state.is_some() {
         if args.has("exhaustive") || args.has("global-cut") {
             eprintln!("note: --memo (warm mode) takes precedence over --exhaustive/--global-cut");
         }
@@ -584,17 +658,21 @@ fn cmd_dse_boards(
     let t0 = std::time::Instant::now();
     let results = match mode {
         "warm" => {
-            let path = std::path::PathBuf::from(memo_arg.unwrap());
-            let mut memo = crate::dse::EvalMemo::load_or_new(&path)?;
-            let results = sweep.explore_pruned_warm(&mut memo, objective, workers);
-            memo.save(&path)?;
+            let (path, memo) = memo_state.as_mut().expect("warm mode implies a memo");
+            let results = sweep.explore_pruned_warm(memo, objective, workers);
+            memo.save(path)?;
             let hits: u64 = results.iter().map(|r| r.stats.memo_hits).sum();
+            let kernel_hits: u64 = results.iter().map(|r| r.stats.kernel_hits).sum();
             println!(
-                "memo: {} hits across the axis -> {} ({} points, {} contexts)",
+                "memo: {} hits across the axis ({} L2 point hits, {} L1 kernel hits) -> {} \
+                 ({} points, {} contexts, {} kernel entries)",
+                hits + kernel_hits,
                 hits,
+                kernel_hits,
                 path.display(),
                 memo.n_points(),
                 memo.n_contexts(),
+                memo.n_kernel_entries(),
             );
             results
         }
@@ -641,6 +719,72 @@ fn cmd_dse_boards(
         axis.targets.len(),
         apps.len(),
     );
+    Ok(0)
+}
+
+/// `dse memo stats|gc|compact`: first-class hygiene for the two-level
+/// evaluation memo. `stats` prints the layout (contexts, points, kernel
+/// entries, per-context recency), `gc` bounds the file with
+/// LRU-by-context eviction (`--keep-contexts`/`--keep-points`/
+/// `--keep-kernels`; retained entries stay bit-exact), and `compact`
+/// rewrites the file in the current schema version with empty contexts
+/// dropped. The memo path comes from `--memo <file>` or a bare positional
+/// (`dse memo stats m.json`).
+fn cmd_dse_memo(args: &Args) -> anyhow::Result<i32> {
+    let action = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("dse memo requires an action: stats|gc|compact"))?;
+    let path = match memo_path_from_args(args)? {
+        Some(p) => p.to_string(),
+        None => args.positional.get(2).cloned().ok_or_else(|| {
+            anyhow::anyhow!("dse memo {action} requires --memo <file> (or a path positional)")
+        })?,
+    };
+    for flag in ["order", "mixed", "pruned", "workers", "boards", "suite", "budget"] {
+        if args.has(flag) {
+            eprintln!("note: --{flag} applies to sweeps, not `dse memo` subcommands; ignored");
+        }
+    }
+    let path = std::path::PathBuf::from(path);
+    anyhow::ensure!(path.exists(), "{}: no such memo file", path.display());
+    let before = std::fs::metadata(&path)?.len();
+    let mut memo = crate::dse::EvalMemo::load_or_new(&path)?;
+    match action {
+        "stats" => {
+            print!("{}", memo.stats().render());
+        }
+        "gc" => {
+            let keep_contexts = args.u64_or("keep-contexts", 16)? as usize;
+            let keep_points = args.u64_or("keep-points", u64::MAX)?.min(usize::MAX as u64) as usize;
+            let keep_kernels = args.u64_or("keep-kernels", 256)? as usize;
+            let report = memo.gc(keep_contexts, keep_points, keep_kernels);
+            memo.save(&path)?;
+            let after = std::fs::metadata(&path)?.len();
+            println!(
+                "gc: evicted {} contexts ({} points) and {} kernel entries; {before} -> {after} bytes \
+                 ({} contexts, {} points, {} kernel entries retained, all bit-exact)",
+                report.evicted_contexts,
+                report.evicted_points,
+                report.evicted_kernels,
+                memo.n_contexts(),
+                memo.n_points(),
+                memo.n_kernel_entries(),
+            );
+        }
+        "compact" => {
+            let dropped = memo.compact();
+            memo.save(&path)?;
+            let after = std::fs::metadata(&path)?.len();
+            println!(
+                "compact: dropped {dropped} empty contexts; {before} -> {after} bytes \
+                 (schema v{})",
+                crate::dse::warm::MEMO_SCHEMA_VERSION,
+            );
+        }
+        other => anyhow::bail!("unknown memo action '{other}' (stats|gc|compact)"),
+    }
     Ok(0)
 }
 
@@ -988,6 +1132,60 @@ mod tests {
         // silent no-op.
         assert!(run(&argv("dse --app matmul --n 256 --memo")).is_err());
         assert!(run(&argv("dse --boards zynq702 --n 256 --memo")).is_err());
+    }
+
+    #[test]
+    fn dse_suite_memo_warm_round_trips() {
+        let dir = std::env::temp_dir().join("zynq_cli_suite_memo");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("memo.json");
+        std::fs::remove_file(&memo).ok();
+        let cmd = format!(
+            "dse --suite --n 256 --workers 2 --top 3 --memo {}",
+            memo.display()
+        );
+        // Cold suite records; the repeat must load and serve it (the
+        // "swept 0 of" contract is asserted end-to-end in CI by grepping
+        // this command's output).
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        assert!(memo.exists());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        // Exhaustive warm suite shares the same memo file.
+        assert_eq!(run(&argv(&format!("{cmd} --exhaustive"))).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dse_memo_subcommands_round_trip() {
+        let dir = std::env::temp_dir().join("zynq_cli_memo_hygiene");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("memo.json");
+        std::fs::remove_file(&memo).ok();
+        // Record two contexts (two problem sizes of one app).
+        for n in [128, 256] {
+            let cmd = format!(
+                "dse --app matmul --n {n} --bs 64 --workers 2 --top 3 --memo {}",
+                memo.display()
+            );
+            assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        }
+        let bytes_before = std::fs::metadata(&memo).unwrap().len();
+        // stats (path via --memo), gc with a tight cap (path positional),
+        // then compact — the file must shrink under gc and stay loadable.
+        let stats = format!("dse memo stats --memo {}", memo.display());
+        assert_eq!(run(&argv(&stats)).unwrap(), 0);
+        let gc = format!("dse memo gc {} --keep-contexts 1", memo.display());
+        assert_eq!(run(&argv(&gc)).unwrap(), 0);
+        assert!(std::fs::metadata(&memo).unwrap().len() < bytes_before);
+        let compact = format!("dse memo compact {}", memo.display());
+        assert_eq!(run(&argv(&compact)).unwrap(), 0);
+        assert_eq!(run(&argv(&stats)).unwrap(), 0);
+        // Usage errors: missing action, unknown action, missing path.
+        assert!(run(&argv("dse memo")).is_err());
+        let bogus = format!("dse memo defrag {}", memo.display());
+        assert!(run(&argv(&bogus)).is_err());
+        assert!(run(&argv("dse memo stats")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

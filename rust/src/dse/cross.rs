@@ -38,7 +38,6 @@ use super::{pareto_front, DsePoint, DseSpace, Objective};
 use crate::config::BoardConfig;
 use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
-use crate::util::fxhash::FxHashMap;
 
 /// Ranked sweep output of one (board, application) entry.
 #[derive(Clone, Debug)]
@@ -86,18 +85,56 @@ impl<'p> CrossBoardSweep<'p> {
         part: &FpgaPart,
         space: DseSpace,
     ) {
-        let group = match self.keys.iter().find(|(_, a, _)| a == app_name) {
-            Some(&(_, _, g)) => g,
-            None => self.keys.iter().map(|&(_, _, g)| g + 1).max().unwrap_or(0),
-        };
-        self.keys
-            .push((board_name.to_string(), app_name.to_string(), group));
+        self.push_key(board_name, app_name);
         self.suite.push(
             &format!("{app_name}@{board_name}"),
             program,
             board,
             part,
             space,
+        );
+    }
+
+    /// Record an entry's (board, app) key, assigning it to its
+    /// application's incumbent group (existing group, or a fresh id) —
+    /// shared by [`CrossBoardSweep::push`] and
+    /// [`CrossBoardSweep::push_warm`] so the two construction paths can
+    /// never diverge on grouping.
+    fn push_key(&mut self, board_name: &str, app_name: &str) {
+        let group = match self.keys.iter().find(|(_, a, _)| a == app_name) {
+            Some(&(_, _, g)) => g,
+            None => self.keys.iter().map(|&(_, _, g)| g + 1).max().unwrap_or(0),
+        };
+        self.keys
+            .push((board_name.to_string(), app_name.to_string(), group));
+    }
+
+    /// [`CrossBoardSweep::push`] with the entry's HLS cache primed from
+    /// the level-1 kernel sub-memo
+    /// ([`SweepContext::prime_with_memo`]). Cross-board entries only reuse
+    /// reports recorded at the *same* fabric clock and DMA bandwidth —
+    /// i.e. across runs over the same board — because the cost model
+    /// depends on both; sibling boards still share the occupancy
+    /// statistics as ordering priors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_warm(
+        &mut self,
+        board_name: &str,
+        app_name: &str,
+        program: &'p TaskProgram,
+        board: &'p BoardConfig,
+        part: &FpgaPart,
+        space: DseSpace,
+        memo: &EvalMemo,
+    ) {
+        self.push_key(board_name, app_name);
+        self.suite.push_warm(
+            &format!("{app_name}@{board_name}"),
+            program,
+            board,
+            part,
+            space,
+            memo,
         );
     }
 
@@ -171,10 +208,14 @@ impl<'p> CrossBoardSweep<'p> {
     /// [`EvalMemo`](super::EvalMemo), with **board-axis warm starts**:
     /// entries run sequentially in push order (each still fanning out over
     /// `workers` threads), and a board's candidate *ordering* is seeded
-    /// from sibling results of the same application — produced earlier in
-    /// the call, or persisted in the memo by an earlier run — each
-    /// sibling point's makespan scaled by the fabric-clock ratio as a
-    /// **prior only**. Priors never cut: every
+    /// from the memo's **level-1 kernel sub-memo** — per-kernel occupancy
+    /// statistics recorded by sibling entries earlier in the call, or by
+    /// earlier runs, scaled by the fabric-clock ratio
+    /// ([`EvalMemo::prior_ms_for`]; the entry whose recorded clock is
+    /// closest to the current board's wins). This replaces the old
+    /// O(contexts) full-memo sibling scan with indexed per-kernel lookups,
+    /// and it generalizes it: statistics transfer across *problem sizes*
+    /// of an application, not only across boards. Priors never cut: every
     /// candidate is still verified against its own real lower bounds and
     /// really-evaluated (or memo-exact) incumbent points, so each entry
     /// keeps the full per-board losslessness contract of
@@ -183,10 +224,6 @@ impl<'p> CrossBoardSweep<'p> {
     /// hits skip re-simulation exactly as in
     /// [`SweepContext::explore_warm`]; second warm runs over an unchanged
     /// axis evaluate zero new points.
-    ///
-    /// When several siblings predict the same co-design, the one with the
-    /// fabric clock closest to the current board's wins (ties: earlier
-    /// push order) — the scaling prior degrades with clock distance.
     pub fn explore_pruned_warm(
         &self,
         memo: &mut EvalMemo,
@@ -195,33 +232,15 @@ impl<'p> CrossBoardSweep<'p> {
     ) -> Vec<CrossBoardResult> {
         let mut results = Vec::new();
         for (entry, (board_name, app_name, _group)) in self.suite.apps().iter().zip(&self.keys) {
-            let my_mhz = entry.ctx.board.fabric_freq_mhz;
-            // Sibling source: the memo. Each entry's sweep records its
-            // full point set before the next entry starts, so earlier
-            // in-call siblings and siblings persisted by earlier runs
-            // come out of one place (matched on the recorded program
-            // metadata, own context excluded).
-            let fp = super::warm::context_fingerprint(&entry.ctx);
-            let mut sibs = memo.sibling_points_ms(&entry.ctx.program.app_name, fp);
-            // Closest fabric clock first; only missing keys are filled by
-            // farther siblings (ties: deterministic fingerprint order).
-            sibs.sort_by(|a, b| {
-                let da = (a.0 / my_mhz).ln().abs();
-                let db = (b.0 / my_mhz).ln().abs();
-                da.total_cmp(&db)
-            });
-            let mut priors: FxHashMap<String, f64> = FxHashMap::default();
-            for (sib_mhz, points) in &sibs {
-                let scale = sib_mhz / my_mhz;
-                for (key, ms) in points {
-                    priors.entry(key.clone()).or_insert(ms * scale);
-                }
-            }
+            // Sequential entries: each entry's sweep records its points
+            // and kernel statistics before the next entry starts, so
+            // earlier in-call siblings and siblings persisted by earlier
+            // runs feed the next entry's priors from one place — the
+            // kernel sub-memo.
             let (points, stats) = super::prune::explore_pruned_warm(
                 &entry.ctx,
                 &entry.space,
                 Some(&mut *memo),
-                &priors,
                 OrderMode::Ranked,
                 objective,
                 workers,
@@ -274,6 +293,30 @@ pub fn sweep_from_programs<'p>(
             &target.board,
             &target.part,
             DseSpace::from_program(program),
+        );
+    }
+    sweep
+}
+
+/// [`sweep_from_programs`] with every entry's HLS cache primed from the
+/// level-1 kernel sub-memo ([`CrossBoardSweep::push_warm`]) — the warm
+/// `dse --boards --memo` construction path.
+pub fn sweep_from_programs_warm<'p>(
+    axis: &'p crate::board::BoardSpace,
+    programs: &'p [(usize, String, TaskProgram)],
+    memo: &EvalMemo,
+) -> CrossBoardSweep<'p> {
+    let mut sweep = CrossBoardSweep::new();
+    for (bi, app, program) in programs {
+        let target = &axis.targets[*bi];
+        sweep.push_warm(
+            &target.name,
+            app,
+            program,
+            &target.board,
+            &target.part,
+            DseSpace::from_program(program),
+            memo,
         );
     }
     sweep

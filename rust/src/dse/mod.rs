@@ -12,10 +12,14 @@
 //! cartesian space *before* evaluation (resource, dominance and
 //! lower-bound cuts — lossless for the best point and the Pareto front —
 //! with selectable round ordering, [`OrderMode`]), the [`warm`] module
-//! carries evaluations *across* sweeps (a persistent [`EvalMemo`]: memo
-//! hits skip re-simulation bit-identically and seed the bound frontier),
-//! [`SweepSuite`] batches several applications through one shared worker
-//! pool, and [`cross::CrossBoardSweep`] makes the *platform* a swept axis:
+//! carries evaluations *across* sweeps (a persistent two-level
+//! [`EvalMemo`]: exact per-context memo hits skip re-simulation
+//! bit-identically and seed the bound frontier, while a per-kernel
+//! sub-memo shares HLS reports and occupancy priors across program sizes
+//! and sibling boards, with `stats`/`gc`/`compact` hygiene keeping
+//! long-lived files bounded), [`SweepSuite`] batches several applications
+//! through one shared worker pool — warm or cold — and
+//! [`cross::CrossBoardSweep`] makes the *platform* a swept axis:
 //! a [`crate::board::BoardSpace`] of named (board, FPGA part) candidates
 //! expands into per-board contexts with per-board caches and bound
 //! frontiers, digested by [`cross::board_winner_table`] into "which board
@@ -40,7 +44,7 @@ pub use cross::{
 };
 pub use prune::{enumerate_pruned, OrderMode, PruneStats};
 pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
-pub use warm::EvalMemo;
+pub use warm::{EvalMemo, GcReport, MemoContextStat, MemoStats};
 
 /// Exploration space for one kernel.
 #[derive(Clone, Debug)]

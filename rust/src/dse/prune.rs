@@ -86,7 +86,6 @@ use crate::config::CoDesign;
 use crate::hls::Resources;
 use crate::metrics::bounds::bounds;
 use crate::sim::time::{ps_to_ms, Ps};
-use crate::util::fxhash::FxHashMap;
 
 use super::sweep::SweepContext;
 use super::warm::EvalMemo;
@@ -194,6 +193,17 @@ pub struct PruneStats {
     /// candidate's bounds were strictly dominated by a memo-hit point and
     /// by no point evaluated in *this* run. Always zero in cold sweeps.
     pub seeded_cut: u64,
+    /// Level-1 warm-start hits: `(kernel, unroll)` HLS reports served from
+    /// the kernel sub-memo when the context was primed
+    /// ([`SweepContext::prime_with_memo`]) instead of re-running the cost
+    /// model — the cross-size/cross-run reuse counter. Always zero for
+    /// contexts primed cold.
+    pub kernel_hits: u64,
+    /// Candidates whose [`OrderMode::Ranked`] position came from a level-1
+    /// per-task occupancy prior (cross-size or sibling-board statistics)
+    /// rather than their own cheap rank features. Ordering only — never a
+    /// cut source. Always zero without a memo.
+    pub prior_ordered: u64,
 }
 
 impl PruneStats {
@@ -222,8 +232,13 @@ impl PruneStats {
         } else {
             String::new()
         };
+        let kernel = if self.kernel_hits > 0 {
+            format!(" + {} kernel hits", self.kernel_hits)
+        } else {
+            String::new()
+        };
         format!(
-            "space {} -> feasible {} -> enumerated {} -> evaluated {}{memo} \
+            "space {} -> feasible {} -> enumerated {} -> evaluated {}{memo}{kernel} \
              (cuts: resource {}, dominance {} [{} variants], bound {}{seeded}{global}, unrunnable {})",
             self.space_points,
             self.feasible_points,
@@ -698,16 +713,20 @@ fn build_order(job: &mut JobState<'_, '_>, objective: Objective, mode: OrderMode
             let sb = bounds[b].as_ref().unwrap().score(objective);
             sa.total_cmp(&sb).then(a.cmp(&b))
         }),
-        OrderMode::Ranked => order.sort_by(|&a, &b| {
-            let key = |i: usize| {
-                let cb = bounds[i].as_ref().unwrap();
-                match priors[i] {
-                    Some(prior_ms) => cb.prior_score(objective, prior_ms),
-                    None => cb.rank_score(objective),
-                }
-            };
-            key(a).total_cmp(&key(b)).then(a.cmp(&b))
-        }),
+        OrderMode::Ranked => {
+            job.stats.prior_ordered =
+                order.iter().filter(|&&i| priors[i].is_some()).count() as u64;
+            order.sort_by(|&a, &b| {
+                let key = |i: usize| {
+                    let cb = bounds[i].as_ref().unwrap();
+                    match priors[i] {
+                        Some(prior_ms) => cb.prior_score(objective, prior_ms),
+                        None => cb.rank_score(objective),
+                    }
+                };
+                key(a).total_cmp(&key(b)).then(a.cmp(&b))
+            });
+        }
     }
     job.order = order;
 }
@@ -889,116 +908,180 @@ pub(crate) fn explore_pruned_grouped<'p>(
 }
 
 /// Warm-start / ordered single-job pruned exploration — the engine behind
-/// [`SweepContext::explore_warm`], [`SweepContext::explore_pruned_with`]
-/// and the warm cross-board sweep.
-///
-/// * `memo`: candidates whose exact `(context, co-design)` evaluation is
-///   recorded are returned without re-simulation (`PruneStats::memo_hits`)
-///   and pre-seed the bound frontier — a warm incumbent. Seeded frontier
-///   points are always members of *this* sweep's returned set, so the cut
-///   stays lossless. Newly evaluated points are recorded back.
-/// * `priors`: per-co-design predicted makespans (keyed by
-///   [`warm::codesign_key`](super::warm::codesign_key)) that refine the
-///   [`OrderMode::Ranked`] processing order — e.g. a sibling board's
-///   results scaled by the fabric-clock ratio. Ordering only: candidates
-///   are still cut exclusively by their own real bounds against really
-///   evaluated (or memo-exact) points, so results stay exact.
-///
-/// Guarantees, as everywhere in this module: best point and time-energy
-/// Pareto front equal the exhaustive sweep's; output and stats are
-/// bit-identical for any worker count.
-#[allow(clippy::too_many_arguments)]
+/// [`SweepContext::explore_warm`] and [`SweepContext::explore_pruned_with`].
+/// One-input wrapper over [`explore_pruned_warm_multi`].
 pub(crate) fn explore_pruned_warm<'p>(
     ctx: &SweepContext<'p>,
     space: &DseSpace,
     memo: Option<&mut EvalMemo>,
-    priors: &FxHashMap<String, f64>,
     order: OrderMode,
     objective: Objective,
     workers: usize,
 ) -> (Vec<DsePoint>, PruneStats) {
-    let (cands, stats) = enumerate_pruned(ctx, space);
-    let n = cands.len();
-    let keys: Vec<String> = cands.iter().map(super::warm::codesign_key).collect();
-    let fingerprint = memo.as_ref().map(|_| super::warm::context_fingerprint(ctx));
+    explore_pruned_warm_multi(&[(ctx, space)], memo, order, objective, workers)
+        .pop()
+        .expect("one input yields one output")
+}
 
-    let mut job = JobState {
-        ctx,
-        cands,
-        bounds: Vec::new(),
-        order: Vec::new(),
-        cursor: 0,
-        frontier: Frontier::default(),
-        group: None,
-        evaluated: Vec::new(),
-        stats,
-        done: vec![false; n],
-        priors: keys.iter().map(|k| priors.get(k).copied()).collect(),
-    };
+/// Warm-start / ordered pruned exploration over one or more jobs sharing
+/// **one** worker pool — the engine behind [`SweepContext::explore_warm`],
+/// [`SweepSuite::explore_pruned_warm`](super::sweep::SweepSuite) and the
+/// warm cross-board sweep. All jobs share the `memo`:
+///
+/// * **Level 2**: candidates whose exact `(context, co-design)` evaluation
+///   is recorded are returned without re-simulation
+///   ([`PruneStats::memo_hits`]) and pre-seed the job's bound frontier — a
+///   warm incumbent. Seeded frontier points are always members of *that*
+///   job's returned set, so the cut stays lossless. Newly evaluated points
+///   are recorded back.
+/// * **Level 1**: under [`OrderMode::Ranked`], candidates draw ordering
+///   priors from the memo's per-kernel occupancy statistics
+///   ([`EvalMemo::prior_ms_for`]) — cross-size and sibling-board
+///   predictions, counted in [`PruneStats::prior_ordered`]. Ordering only:
+///   candidates are still cut exclusively by their own real bounds against
+///   really evaluated (or memo-exact) points, so results stay exact. After
+///   the sweep each job's kernel variants and fresh occupancy samples are
+///   recorded back ([`EvalMemo::record_kernels`] /
+///   [`EvalMemo::record_occupancy`]), and level-1 cache-prime hits are
+///   surfaced as [`PruneStats::kernel_hits`].
+///
+/// Guarantees, as everywhere in this module: per job, best point and
+/// time-energy Pareto front equal the exhaustive sweep's; output and stats
+/// are bit-identical for any worker count (level-1 statistics use
+/// order-independent aggregation, so the saved memo is too).
+pub(crate) fn explore_pruned_warm_multi<'p>(
+    inputs: &[(&SweepContext<'p>, &DseSpace)],
+    mut memo: Option<&mut EvalMemo>,
+    order: OrderMode,
+    objective: Objective,
+    workers: usize,
+) -> Vec<(Vec<DsePoint>, PruneStats)> {
+    let mut jobs: Vec<JobState<'_, 'p>> = Vec::new();
+    let mut fps: Vec<u64> = Vec::new();
+    let mut keys_per_job: Vec<Vec<String>> = Vec::new();
+    let mut hits_per_job: Vec<Vec<(usize, DsePoint)>> = Vec::new();
+    for &(ctx, space) in inputs {
+        let (cands, mut stats) = enumerate_pruned(ctx, space);
+        stats.kernel_hits = ctx.kernel_memo_hits() as u64;
+        let n = cands.len();
+        let keys: Vec<String> = cands.iter().map(super::warm::codesign_key).collect();
+        let fp = super::warm::context_fingerprint(ctx);
+        let mut job = JobState {
+            ctx,
+            cands,
+            bounds: Vec::new(),
+            order: Vec::new(),
+            cursor: 0,
+            frontier: Frontier::default(),
+            group: None,
+            evaluated: Vec::new(),
+            stats,
+            done: vec![false; n],
+            priors: vec![None; n],
+        };
+        // Memo hits: serve them up front (enumeration order —
+        // deterministic) and seed the frontier so round 0 already cuts
+        // against a warm incumbent.
+        let mut hits: Vec<(usize, DsePoint)> = Vec::new();
+        if let Some(m) = memo.as_deref_mut() {
+            m.touch(fp);
+            for (i, key) in keys.iter().enumerate() {
+                if let Some(v) = m.lookup(fp, key) {
+                    job.done[i] = true;
+                    job.stats.memo_hits += 1;
+                    job.frontier.insert(v.est_ms, v.energy_j, true);
+                    hits.push((
+                        i,
+                        DsePoint {
+                            codesign: job.cands[i].clone(),
+                            est_ms: v.est_ms,
+                            energy_j: v.energy_j,
+                            edp: v.edp,
+                            fabric_util: v.fabric_util,
+                        },
+                    ));
+                }
+            }
+        }
+        // Level-1 ordering priors for the misses (Ranked order only — the
+        // other modes never read them).
+        if order == OrderMode::Ranked {
+            if let Some(m) = memo.as_deref() {
+                let counts = super::warm::kernel_task_counts(job.ctx.program);
+                for i in 0..n {
+                    if !job.done[i] {
+                        job.priors[i] = m.prior_ms_for(job.ctx, &counts, &job.cands[i]);
+                    }
+                }
+            }
+        }
+        fps.push(fp);
+        keys_per_job.push(keys);
+        hits_per_job.push(hits);
+        jobs.push(job);
+    }
 
-    // Memo hits: serve them up front (enumeration order — deterministic)
-    // and seed the frontier so round 0 already cuts against a warm
-    // incumbent.
-    let mut hits: Vec<(usize, DsePoint)> = Vec::new();
-    if let (Some(m), Some(fp)) = (memo.as_deref(), fingerprint) {
-        for (i, key) in keys.iter().enumerate() {
-            if let Some(v) = m.lookup(fp, key) {
-                job.done[i] = true;
-                job.stats.memo_hits += 1;
-                job.frontier.insert(v.est_ms, v.energy_j, true);
-                hits.push((
-                    i,
-                    DsePoint {
-                        codesign: job.cands[i].clone(),
-                        est_ms: v.est_ms,
-                        energy_j: v.energy_j,
-                        edp: v.edp,
-                        fabric_util: v.fabric_util,
-                    },
-                ));
+    // Bounds for the remaining candidates across all jobs, keyed by
+    // (job, candidate) index so the result is independent of the worker
+    // count.
+    let mut flat: Vec<(usize, usize)> = Vec::new();
+    for (ji, job) in jobs.iter().enumerate() {
+        for (ci, &served) in job.done.iter().enumerate() {
+            if !served {
+                flat.push((ji, ci));
             }
         }
     }
-
-    // Bounds for the remaining candidates, keyed by candidate index so the
-    // result is independent of the worker count.
-    let todo: Vec<usize> = (0..n).filter(|&i| !job.done[i]).collect();
-    let n_workers = workers.clamp(1, todo.len().max(1));
-    let computed: Vec<(usize, Option<CandBound>)> = if n_workers <= 1 {
-        todo.iter()
-            .map(|&ci| (ci, bound_for(ctx, &job.cands[ci])))
+    let n_workers = workers.clamp(1, flat.len().max(1));
+    let computed: Vec<(usize, usize, Option<CandBound>)> = if n_workers <= 1 {
+        flat.iter()
+            .map(|&(ji, ci)| (ji, ci, bound_for(jobs[ji].ctx, &jobs[ji].cands[ci])))
             .collect()
     } else {
-        let cands_ref = &job.cands;
+        let jobs_ref: &[JobState<'_, 'p>] = &jobs;
         let mut slots = vec![(); n_workers];
-        super::sweep::parallel_for_indexed(&mut slots, todo.len(), |_, w| {
-            let ci = todo[w];
-            Some((ci, bound_for(ctx, &cands_ref[ci])))
+        super::sweep::parallel_for_indexed(&mut slots, flat.len(), |_, w| {
+            let (ji, ci) = flat[w];
+            Some((ji, ci, bound_for(jobs_ref[ji].ctx, &jobs_ref[ji].cands[ci])))
         })
     };
-    job.bounds = vec![None; n];
-    for (ci, b) in computed {
-        job.bounds[ci] = b;
+    for job in jobs.iter_mut() {
+        job.bounds = vec![None; job.cands.len()];
     }
-    build_order(&mut job, objective, order);
+    for (ji, ci, b) in computed {
+        jobs[ji].bounds[ci] = b;
+    }
+    for job in jobs.iter_mut() {
+        build_order(job, objective, order);
+    }
 
-    run_rounds(std::slice::from_mut(&mut job), workers);
+    run_rounds(&mut jobs, workers);
 
-    // Record the fresh evaluations for the next sweep.
-    if let (Some(m), Some(fp)) = (memo, fingerprint) {
-        for (ci, p) in &job.evaluated {
-            m.record(ctx, fp, &keys[*ci], p);
+    // Record the fresh evaluations (both levels) for the next sweep.
+    if let Some(m) = memo.as_deref_mut() {
+        for (ji, job) in jobs.iter().enumerate() {
+            m.record_kernels(job.ctx, inputs[ji].1);
+            for (ci, p) in &job.evaluated {
+                m.record(job.ctx, fps[ji], &keys_per_job[ji][*ci], p);
+            }
+            let fresh: Vec<DsePoint> = job.evaluated.iter().map(|(_, p)| p.clone()).collect();
+            m.record_occupancy(job.ctx, &fresh);
         }
     }
 
     // Merge hits + evaluations in enumeration order, then the same stable
     // score sort as everywhere else.
-    let mut all = hits;
-    all.extend(job.evaluated);
-    all.sort_unstable_by_key(|e| e.0);
-    let mut points: Vec<DsePoint> = all.into_iter().map(|(_, p)| p).collect();
-    points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
-    (points, job.stats)
+    jobs.into_iter()
+        .zip(hits_per_job)
+        .map(|(job, hits)| {
+            let mut all = hits;
+            all.extend(job.evaluated);
+            all.sort_unstable_by_key(|e| e.0);
+            let mut points: Vec<DsePoint> = all.into_iter().map(|(_, p)| p).collect();
+            points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+            (points, job.stats)
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -114,6 +114,11 @@ pub struct SweepContext<'p> {
     power: PowerModel,
     /// Memoized `(kernel, unroll) → HlsReport`.
     reports: FxHashMap<(KernelId, u32), HlsReport>,
+    /// Reports served from the level-1 kernel sub-memo by
+    /// [`SweepContext::prime_with_memo`] instead of the cost model
+    /// (surfaced as [`PruneStats::kernel_hits`](super::PruneStats) by the
+    /// warm sweeps).
+    kernel_memo_hits: usize,
 }
 
 impl<'p> SweepContext<'p> {
@@ -132,6 +137,7 @@ impl<'p> SweepContext<'p> {
             cost: CostModel::from_board(board),
             power: PowerModel::default(),
             reports: FxHashMap::default(),
+            kernel_memo_hits: 0,
         }
     }
 
@@ -144,6 +150,21 @@ impl<'p> SweepContext<'p> {
     ) -> Self {
         let mut ctx = Self::new(program, board, part.clone());
         ctx.prime(space);
+        ctx
+    }
+
+    /// [`SweepContext::for_space`] with the HLS cache primed from the
+    /// level-1 kernel sub-memo first (see
+    /// [`SweepContext::prime_with_memo`]).
+    pub fn for_space_warm(
+        program: &'p TaskProgram,
+        board: &'p BoardConfig,
+        part: &FpgaPart,
+        space: &DseSpace,
+        memo: &super::warm::EvalMemo,
+    ) -> Self {
+        let mut ctx = Self::new(program, board, part.clone());
+        ctx.prime_with_memo(space, memo);
         ctx
     }
 
@@ -166,9 +187,58 @@ impl<'p> SweepContext<'p> {
         }
     }
 
+    /// Like [`SweepContext::prime`], but every `(kernel, unroll)` pair is
+    /// first looked up in the level-1 kernel sub-memo of an
+    /// [`EvalMemo`](super::EvalMemo): on a hit the stored report — exact
+    /// by construction, since the level-1 key covers the kernel profile
+    /// and both board-derived cost-model constants — fills the cache
+    /// without a cost-model call, and only the misses run the model. This
+    /// is the cross-size (and cross-run) warm start: two problem sizes of
+    /// a blocked app share kernel profiles, so the second size primes
+    /// entirely from the memo recorded at the first. Returns the number of
+    /// memo-served reports (also surfaced as
+    /// [`PruneStats::kernel_hits`](super::PruneStats) by the warm sweeps).
+    pub fn prime_with_memo(&mut self, space: &DseSpace, memo: &super::warm::EvalMemo) -> usize {
+        let mut hits = 0usize;
+        for ks in &space.kernels {
+            let Some(kid) = self.program.kernel_id(&ks.kernel) else {
+                continue;
+            };
+            let kfp = crate::hls::kernel_fingerprint(&ks.kernel, &self.program.kernel(kid).profile);
+            for &u in &ks.unrolls {
+                if self.reports.contains_key(&(kid, u)) {
+                    continue;
+                }
+                let r = match memo.lookup_report(
+                    kfp,
+                    u,
+                    self.board.fabric_freq_mhz,
+                    self.board.dma_bw_mbps,
+                ) {
+                    Some(report) => {
+                        hits += 1;
+                        report.clone()
+                    }
+                    None => self
+                        .cost
+                        .estimate(&ks.kernel, &self.program.kernel(kid).profile, u),
+                };
+                self.reports.insert((kid, u), r);
+            }
+        }
+        self.kernel_memo_hits += hits;
+        hits
+    }
+
     /// Number of memoized HLS reports (bench/diagnostic).
     pub fn cached_reports(&self) -> usize {
         self.reports.len()
+    }
+
+    /// Reports served from the kernel sub-memo so far (see
+    /// [`SweepContext::prime_with_memo`]).
+    pub fn kernel_memo_hits(&self) -> usize {
+        self.kernel_memo_hits
     }
 
     /// The power model shared by every point evaluation (the energy lower
@@ -491,15 +561,7 @@ impl<'p> SweepContext<'p> {
         workers: usize,
         order: super::prune::OrderMode,
     ) -> (Vec<DsePoint>, super::prune::PruneStats) {
-        super::prune::explore_pruned_warm(
-            self,
-            space,
-            None,
-            &FxHashMap::default(),
-            order,
-            objective,
-            workers,
-        )
+        super::prune::explore_pruned_warm(self, space, None, order, objective, workers)
     }
 
     /// Warm-started pruned exploration against a persistent
@@ -522,15 +584,7 @@ impl<'p> SweepContext<'p> {
         workers: usize,
         order: super::prune::OrderMode,
     ) -> (Vec<DsePoint>, super::prune::PruneStats) {
-        super::prune::explore_pruned_warm(
-            self,
-            space,
-            Some(memo),
-            &FxHashMap::default(),
-            order,
-            objective,
-            workers,
-        )
+        super::prune::explore_pruned_warm(self, space, Some(memo), order, objective, workers)
     }
 }
 
@@ -617,9 +671,56 @@ impl<'p> SweepSuite<'p> {
         });
     }
 
+    /// [`SweepSuite::push`] with the application's HLS cache primed from
+    /// the level-1 kernel sub-memo ([`SweepContext::prime_with_memo`]), so
+    /// a warm suite re-runs zero cost-model calls for kernels any earlier
+    /// run — any app, any problem size — already characterized.
+    pub fn push_warm(
+        &mut self,
+        name: &str,
+        program: &'p TaskProgram,
+        board: &'p BoardConfig,
+        part: &FpgaPart,
+        space: DseSpace,
+        memo: &super::warm::EvalMemo,
+    ) {
+        let ctx = SweepContext::for_space_warm(program, board, part, &space, memo);
+        self.apps.push(SuiteApp {
+            name: name.to_string(),
+            ctx,
+            space,
+        });
+    }
+
     /// The registered applications.
     pub fn apps(&self) -> &[SuiteApp<'p>] {
         &self.apps
+    }
+
+    /// Evaluate a flattened `(application, candidate index)` work list
+    /// through one shared worker pool: one lazily-built worker (simulator
+    /// + model) per thread per application, reused for every point that
+    /// thread evaluates for that application. Results come back sorted by
+    /// `(application, enumeration index)` — the merge order every suite
+    /// sweep (cold, warm, exhaustive) shares, which is what makes them
+    /// all bit-identical for any worker count.
+    fn evaluate_flat(
+        &self,
+        per_app: &[Vec<CoDesign>],
+        flat: &[(usize, usize)],
+        workers: usize,
+    ) -> Vec<(usize, usize, DsePoint)> {
+        let workers = workers.clamp(1, flat.len().max(1));
+        let mut slots: Vec<Vec<Option<SweepWorker<'_, 'p>>>> = (0..workers)
+            .map(|_| (0..self.apps.len()).map(|_| None).collect())
+            .collect();
+        let mut indexed = parallel_for_indexed(&mut slots, flat.len(), |pool, i| {
+            let (ai, ci) = flat[i];
+            let w = pool[ai].get_or_insert_with(|| self.apps[ai].ctx.worker());
+            w.evaluate(&per_app[ai][ci]).map(|p| (ai, ci, p))
+        });
+        indexed.sort_unstable_by_key(|&(ai, ci, _)| (ai, ci));
+        indexed
     }
 
     /// Exhaustively sweep every application in a single pass over one
@@ -637,20 +738,7 @@ impl<'p> SweepSuite<'p> {
             .enumerate()
             .flat_map(|(ai, cands)| (0..cands.len()).map(move |ci| (ai, ci)))
             .collect();
-        let workers = workers.clamp(1, flat.len().max(1));
-        // One lazily-built worker (simulator + model) per thread per
-        // application, reused for every point that thread evaluates for
-        // that application.
-        let mut slots: Vec<Vec<Option<SweepWorker<'_, 'p>>>> = (0..workers)
-            .map(|_| (0..self.apps.len()).map(|_| None).collect())
-            .collect();
-        let mut indexed = parallel_for_indexed(&mut slots, flat.len(), |pool, i| {
-            let (ai, ci) = flat[i];
-            let w = pool[ai].get_or_insert_with(|| self.apps[ai].ctx.worker());
-            w.evaluate(&per_app[ai][ci]).map(|p| (ai, ci, p))
-        });
-        // Restore per-application enumeration order, then rank.
-        indexed.sort_unstable_by_key(|&(ai, ci, _)| (ai, ci));
+        let indexed = self.evaluate_flat(&per_app, &flat, workers);
         let mut results: Vec<SuiteAppResult> = self
             .apps
             .iter()
@@ -695,6 +783,137 @@ impl<'p> SweepSuite<'p> {
                 stats,
             })
             .collect()
+    }
+
+    /// Warm-started bound-guided pruned sweep of the whole suite — every
+    /// job's memo hits, warm incumbents and level-1 ordering priors, all
+    /// through **one** shared worker pool (the multi-job warm rounds of
+    /// [`dse::prune`](super::prune)). Per application the output is
+    /// bit-identical to [`SweepContext::explore_warm`] on that application
+    /// alone against the same memo, for any worker count; a second warm
+    /// run over an unchanged suite evaluates zero points. Fresh
+    /// evaluations and kernel statistics are recorded back into `memo`.
+    pub fn explore_pruned_warm(
+        &self,
+        memo: &mut super::warm::EvalMemo,
+        objective: Objective,
+        workers: usize,
+        order: super::prune::OrderMode,
+    ) -> Vec<SuiteAppResult> {
+        let inputs: Vec<(&SweepContext<'p>, &DseSpace)> =
+            self.apps.iter().map(|a| (&a.ctx, &a.space)).collect();
+        super::prune::explore_pruned_warm_multi(&inputs, Some(memo), order, objective, workers)
+            .into_iter()
+            .zip(&self.apps)
+            .map(|((points, stats), app)| SuiteAppResult {
+                name: app.name.clone(),
+                points,
+                stats,
+            })
+            .collect()
+    }
+
+    /// Warm-started **exhaustive** sweep of the whole suite: every
+    /// feasible candidate is returned, but candidates recorded in the memo
+    /// are served bit-identically without simulation and only the misses
+    /// run through the shared pool. Per-application output is
+    /// bit-identical to [`SweepSuite::explore`] on that application alone,
+    /// for any worker count. Fresh evaluations and kernel statistics are
+    /// recorded back into `memo`.
+    pub fn explore_warm(
+        &self,
+        memo: &mut super::warm::EvalMemo,
+        objective: Objective,
+        workers: usize,
+    ) -> Vec<SuiteAppResult> {
+        let per_app: Vec<Vec<CoDesign>> = self
+            .apps
+            .iter()
+            .map(|a| a.ctx.enumerate(&a.space))
+            .collect();
+        let keys: Vec<Vec<String>> = per_app
+            .iter()
+            .map(|cands| cands.iter().map(super::warm::codesign_key).collect())
+            .collect();
+        let fps: Vec<u64> = self
+            .apps
+            .iter()
+            .map(|a| super::warm::context_fingerprint(&a.ctx))
+            .collect();
+        // Level-2 hits per app, served without simulation.
+        let mut hits: Vec<Vec<(usize, DsePoint)>> = Vec::new();
+        let mut done: Vec<Vec<bool>> = Vec::new();
+        for (ai, cands) in per_app.iter().enumerate() {
+            memo.touch(fps[ai]);
+            let mut app_hits = Vec::new();
+            let mut app_done = vec![false; cands.len()];
+            for (ci, key) in keys[ai].iter().enumerate() {
+                if let Some(v) = memo.lookup(fps[ai], key) {
+                    app_done[ci] = true;
+                    app_hits.push((
+                        ci,
+                        DsePoint {
+                            codesign: cands[ci].clone(),
+                            est_ms: v.est_ms,
+                            energy_j: v.energy_j,
+                            edp: v.edp,
+                            fabric_util: v.fabric_util,
+                        },
+                    ));
+                }
+            }
+            hits.push(app_hits);
+            done.push(app_done);
+        }
+        // Evaluate the misses through one shared pool, merged by
+        // (application, enumeration index) as everywhere else.
+        let mut flat: Vec<(usize, usize)> = Vec::new();
+        for (ai, app_done) in done.iter().enumerate() {
+            for (ci, &served) in app_done.iter().enumerate() {
+                if !served {
+                    flat.push((ai, ci));
+                }
+            }
+        }
+        let indexed = self.evaluate_flat(&per_app, &flat, workers);
+        // Record both levels, then assemble per-app results.
+        let mut fresh: Vec<Vec<(usize, DsePoint)>> =
+            (0..self.apps.len()).map(|_| Vec::new()).collect();
+        for (ai, ci, p) in indexed {
+            fresh[ai].push((ci, p));
+        }
+        let mut results: Vec<SuiteAppResult> = Vec::new();
+        for (ai, app) in self.apps.iter().enumerate() {
+            memo.record_kernels(&app.ctx, &app.space);
+            for (ci, p) in &fresh[ai] {
+                memo.record(&app.ctx, fps[ai], &keys[ai][*ci], p);
+            }
+            let fresh_points: Vec<DsePoint> =
+                fresh[ai].iter().map(|(_, p)| p.clone()).collect();
+            memo.record_occupancy(&app.ctx, &fresh_points);
+
+            let mut all = hits[ai].clone();
+            all.extend(fresh[ai].iter().cloned());
+            all.sort_unstable_by_key(|e| e.0);
+            let mut points: Vec<DsePoint> = all.into_iter().map(|(_, p)| p).collect();
+            let stats = super::prune::PruneStats {
+                feasible_points: per_app[ai].len() as u64,
+                evaluated: fresh[ai].len() as u64,
+                memo_hits: hits[ai].len() as u64,
+                kernel_hits: app.ctx.kernel_memo_hits() as u64,
+                unrunnable: per_app[ai].len() as u64
+                    - fresh[ai].len() as u64
+                    - hits[ai].len() as u64,
+                ..Default::default()
+            };
+            points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
+            results.push(SuiteAppResult {
+                name: app.name.clone(),
+                points,
+                stats,
+            });
+        }
+        results
     }
 }
 

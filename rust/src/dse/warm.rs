@@ -1,87 +1,91 @@
-//! Warm-start layer for the DSE engine — a persistent evaluation memo.
+//! Warm-start layer for the DSE engine — a persistent **two-level**
+//! evaluation memo.
 //!
 //! The paper's promise is turning the co-design decision "from hours to
 //! minutes"; after the sweep/prune/cross layers, the remaining redundancy
 //! is *between* sweeps: a robustness study re-sweeps near-identical
-//! spaces, a cross-board study sweeps sibling platforms, and an analyst
+//! spaces, a cross-board study sweeps sibling platforms, an analyst
 //! iterating on a space re-simulates points an earlier run already
-//! evaluated. CEDR (Mack et al., 2022) and the hardware-HEFT work both
-//! reuse prior schedule state across runs; the [`EvalMemo`] is that idea
-//! applied to the estimator:
+//! evaluated — and a size study re-runs the HLS cost model on the exact
+//! same kernels. CEDR (Mack et al., 2022) observes that *kernel-level*
+//! characterization — not whole-application traces — is the reusable unit
+//! across workloads; the [`EvalMemo`] applies both granularities to the
+//! estimator:
 //!
-//! * every evaluated point is recorded under a key that fingerprints
-//!   **everything the evaluation depends on** — the task program (kernel
-//!   declarations, profiles, every task's cycles and dependences), the
-//!   board description, the FPGA part, and the estimator version — plus a
-//!   canonical form of the co-design. A memo hit is therefore
-//!   *bit-identical* to re-simulating by construction: two sweeps that
-//!   share a key evaluated the exact same deterministic function. Any
-//!   change to the program, board, part or estimator changes the
-//!   fingerprint and misses cleanly (asserted by the warm-start property
-//!   tests, which perturb each ingredient and check the memo refuses the
-//!   hit);
-//! * a warm sweep ([`SweepContext::explore_warm`]) returns hits without
-//!   re-simulation and seeds its bound frontier with them, so bound-guided
-//!   pruning starts from a warm incumbent. Seeded points are always
-//!   members of the current sweep's own candidate set, which is what keeps
-//!   the cut lossless — a frontier point that cuts a candidate is itself
-//!   part of the returned ranking;
-//! * the memo serializes through the repository's own JSON substrate
-//!   ([`crate::util::json`]), with `f64` values stored as exact bit
-//!   patterns so a save/load round-trip cannot perturb a single ULP. Each
-//!   context also carries its time-energy **frontier** (the Pareto set of
-//!   its recorded points) as a compact, report-friendly summary.
-//!   Board-axis warm starts read the recorded *points* of sibling
-//!   contexts ([`EvalMemo::sibling_points_ms`]) and scale them by the
-//!   fabric-clock ratio as ordering priors.
+//! * **Level 2 — exact per-context points.** Every evaluated point is
+//!   recorded under a key that fingerprints **everything the evaluation
+//!   depends on** — the task program (kernel declarations, profiles, every
+//!   task's cycles and dependences), the board description, the FPGA part,
+//!   and the estimator version — plus a canonical form of the co-design. A
+//!   memo hit is therefore *bit-identical* to re-simulating by
+//!   construction: two sweeps that share a key evaluated the exact same
+//!   deterministic function. Any change to the program, board, part or
+//!   estimator changes the fingerprint and misses cleanly (asserted by the
+//!   warm-start property tests, which perturb each ingredient and check
+//!   the memo refuses the hit).
+//! * **Level 1 — per-kernel sub-memo.** Keyed on
+//!   [`hls::kernel_fingerprint`](crate::hls::kernel_fingerprint) (kernel
+//!   name + workload profile + estimator version) × unroll × the two
+//!   board-derived cost-model constants, each entry stores the exact
+//!   [`HlsReport`] plus per-task occupancy statistics aggregated from
+//!   recorded points. Because a blocked application's kernel profile
+//!   depends on the *block* size, not the problem size, two problem sizes
+//!   of one app share level-1 entries even though their level-2 contexts
+//!   differ: a sweep of matmul-2048 warm-starts from matmul-1024 by
+//!   pre-filling the [`SweepContext`] HLS cache
+//!   ([`SweepContext::prime_with_memo`] — reports reused only on an exact
+//!   constants match, hence bit-identical) and by seeding *ordering
+//!   priors* from the occupancy statistics (priors only — candidates are
+//!   still cut exclusively by their own real bounds, so per-context
+//!   results stay exact). The same statistics serve sibling boards on the
+//!   cross-board axis, scaled by the fabric-clock ratio, replacing the old
+//!   full-memo sibling scan.
+//!
+//! A warm sweep ([`SweepContext::explore_warm`]) returns level-2 hits
+//! without re-simulation and seeds its bound frontier with them, so
+//! bound-guided pruning starts from a warm incumbent. Seeded points are
+//! always members of the current sweep's own candidate set, which is what
+//! keeps the cut lossless — a frontier point that cuts a candidate is
+//! itself part of the returned ranking.
+//!
+//! The memo serializes through the repository's own JSON substrate
+//! ([`crate::util::json`]), with every `f64` stored as its exact bit
+//! pattern so a save/load round-trip cannot perturb a single ULP. Each
+//! context also carries its time-energy **frontier** (the Pareto set of
+//! its recorded points) as a compact, report-friendly summary.
+//!
+//! **Hygiene.** Long-lived memo files are bounded rather than monotonic:
+//! [`EvalMemo::stats`] reports the layout, [`EvalMemo::gc`] evicts whole
+//! contexts least-recently-used first (recency is a persisted *logical*
+//! clock bumped per warm sweep — deterministic, no wall time), and
+//! [`EvalMemo::compact`] rewrites the file in the current schema with
+//! empty contexts dropped. Eviction never edits a surviving context, so
+//! every retained entry stays bit-exact. The `dse memo stats|gc|compact`
+//! CLI subcommands expose the three operations.
 //!
 //! Lifecycle: `load_or_new` → any number of warm sweeps (each records its
-//! new evaluations) → `save`. Memo files are versioned; a file written by
-//! a different estimator version or schema is rejected on load instead of
+//! new evaluations at both levels) → `save`. Memo files are versioned; a
+//! file written by a different estimator version or schema — or a
+//! truncated/corrupt one — is renamed to `<path>.bak` on load and the
+//! sweep starts fresh with a warning, instead of erroring the whole run or
 //! silently serving stale numbers.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::config::CoDesign;
+use crate::hls::{kernel_fingerprint, HlsReport};
+use crate::util::fnv::Fnv;
 use crate::util::json::{arr, obj, parse, Value};
 
 use super::sweep::SweepContext;
-use super::DsePoint;
+use super::{DsePoint, DseSpace};
 
 /// Memo file schema version (bumped on layout changes; also folded into
 /// the context fingerprint so schema bumps invalidate old entries).
-pub const MEMO_SCHEMA_VERSION: i64 = 1;
-
-/// FNV-1a, used for the stable context fingerprint (the repository's
-/// `FxHasher` is for hash *tables*; the memo needs a hash whose value is
-/// part of a serialized file format, so it is pinned here explicitly).
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-    fn bytes(&mut self, b: &[u8]) {
-        for &x in b {
-            self.0 ^= x as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-    fn u64(&mut self, v: u64) {
-        self.bytes(&v.to_le_bytes());
-    }
-    fn f64(&mut self, v: f64) {
-        self.u64(v.to_bits());
-    }
-    fn str(&mut self, s: &str) {
-        self.u64(s.len() as u64);
-        self.bytes(s.as_bytes());
-    }
-    fn bool(&mut self, b: bool) {
-        self.bytes(&[b as u8]);
-    }
-}
+/// v2 added the level-1 kernel sub-memo, per-context recency/task-count
+/// metadata and the persisted logical clock.
+pub const MEMO_SCHEMA_VERSION: i64 = 2;
 
 /// Fingerprint of everything a point evaluation depends on: the estimator
 /// version, the task program (kernels, profiles, tasks, dependences), the
@@ -90,8 +94,6 @@ impl Fnv {
 /// across spaces over the same (program, board, part) triple. The
 /// board-emulator-only `emu` block is excluded too: estimator results do
 /// not depend on it.
-///
-/// [`DseSpace`]: super::DseSpace
 pub fn context_fingerprint(ctx: &SweepContext<'_>) -> u64 {
     let mut h = Fnv::new();
     h.str(env!("CARGO_PKG_VERSION"));
@@ -158,7 +160,7 @@ pub fn context_fingerprint(ctx: &SweepContext<'_>) -> u64 {
     h.f64(pm.w_per_bram_100mhz);
     h.f64(pm.w_per_10kluts_100mhz);
     h.f64(pm.dma_dynamic_w);
-    h.0
+    h.finish()
 }
 
 /// Canonical memo key of a co-design: sorted accelerator specs plus the
@@ -175,6 +177,16 @@ pub fn codesign_key(cd: &CoDesign) -> String {
     smp.sort_unstable();
     smp.dedup();
     format!("{}|smp:{}", accels.join("+"), smp.join(","))
+}
+
+/// Per-kernel task counts of a program, indexed by `KernelId` — the
+/// denominator of the level-1 per-task occupancy statistics.
+pub(crate) fn kernel_task_counts(program: &crate::coordinator::task::TaskProgram) -> Vec<u64> {
+    let mut counts = vec![0u64; program.kernels.len()];
+    for t in &program.tasks {
+        counts[t.kernel as usize] += 1;
+    }
+    counts
 }
 
 /// Stored evaluation result — `f64`s as exact bit patterns so JSON
@@ -201,13 +213,16 @@ pub struct MemoValues {
 }
 
 /// One (program, board, part) context of the memo: its recorded points
-/// plus human-readable metadata for reports.
+/// plus human-readable metadata for reports and the recency/size metadata
+/// the hygiene layer needs.
 #[derive(Clone, Debug, Default)]
 struct MemoContext {
     app: String,
     board: String,
     part: String,
     fabric_mhz: f64,
+    n_tasks: u64,
+    last_used: u64,
     points: BTreeMap<String, MemoPoint>,
 }
 
@@ -230,11 +245,110 @@ impl MemoContext {
     }
 }
 
-/// Persistent `(context fingerprint, co-design) → evaluation` memo — see
-/// the module docs for the exactness contract and lifecycle.
+/// Level-1 key: kernel fingerprint, unroll factor and the exact bit
+/// patterns of the two board-derived cost-model constants (fabric clock,
+/// DMA bandwidth). Report reuse requires the full key to match; prior
+/// lookups range over the `(fingerprint, unroll)` prefix and scale by the
+/// clock ratio.
+type KernelKey = (u64, u32, u64, u64);
+
+/// One level-1 entry: the exact HLS report of a kernel variant plus the
+/// per-task occupancy statistics aggregated from recorded points.
+#[derive(Clone, Debug)]
+struct KernelEntry {
+    report: HlsReport,
+    /// Recorded points whose co-design used this variant.
+    samples: u64,
+    /// Bit pattern of the minimum observed `est_ms × instances / tasks`
+    /// over those points — "per-task, per-instance occupancy". `min` (not
+    /// a mean) keeps the statistic independent of recording order, hence
+    /// of the worker count. `f64::INFINITY` until the first sample.
+    min_task_ms: u64,
+    last_used: u64,
+}
+
+/// Memo layout summary — see [`EvalMemo::stats`].
+#[derive(Clone, Debug)]
+pub struct MemoStats {
+    /// Level-2 contexts recorded.
+    pub contexts: usize,
+    /// Total level-2 points across every context.
+    pub points: usize,
+    /// Level-1 kernel sub-memo entries.
+    pub kernel_entries: usize,
+    /// Serialized size of the memo document, in bytes.
+    pub bytes: usize,
+    /// Per-context rows, in fingerprint order.
+    pub rows: Vec<MemoContextStat>,
+}
+
+/// One context row of [`MemoStats`].
+#[derive(Clone, Debug)]
+pub struct MemoContextStat {
+    /// Context fingerprint.
+    pub fingerprint: u64,
+    /// Application name recorded with the context.
+    pub app: String,
+    /// Board name recorded with the context.
+    pub board: String,
+    /// FPGA part name recorded with the context.
+    pub part: String,
+    /// Points recorded under the context.
+    pub points: usize,
+    /// Task count of the recorded program — what distinguishes two
+    /// problem sizes of one app at a glance (their level-2 contexts never
+    /// share entries; only the kernel sub-memo transfers).
+    pub tasks: u64,
+    /// Logical-clock value of the context's last warm sweep (higher =
+    /// more recent; the LRU order [`EvalMemo::gc`] evicts by).
+    pub last_used: u64,
+}
+
+impl MemoStats {
+    /// Render the stats as the `dse memo stats` CLI table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== memo: {} contexts, {} points, {} kernel entries, {} bytes (schema v{})\n",
+            self.contexts, self.points, self.kernel_entries, self.bytes, MEMO_SCHEMA_VERSION
+        );
+        out.push_str(&format!(
+            "{:>16} {:24} {:>16} {:>12} {:>8} {:>8} {:>10}\n",
+            "fingerprint", "app", "board", "part", "tasks", "points", "last-used"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:016x} {:24} {:>16} {:>12} {:>8} {:>8} {:>10}\n",
+                r.fingerprint, r.app, r.board, r.part, r.tasks, r.points, r.last_used
+            ));
+        }
+        out
+    }
+}
+
+/// What [`EvalMemo::gc`] removed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Whole contexts evicted (least recently used first).
+    pub evicted_contexts: usize,
+    /// Points that went with the evicted contexts.
+    pub evicted_points: usize,
+    /// Level-1 kernel entries evicted.
+    pub evicted_kernels: usize,
+}
+
+/// Persistent two-level evaluation memo — see the module docs for the
+/// exactness contract and lifecycle.
 #[derive(Clone, Debug, Default)]
 pub struct EvalMemo {
     contexts: BTreeMap<u64, MemoContext>,
+    kernels: BTreeMap<KernelKey, KernelEntry>,
+    /// `app name → context fingerprints` (sorted), maintained on insert —
+    /// the index behind [`EvalMemo::sibling_points_ms`], replacing the
+    /// old O(contexts) full scan.
+    app_index: BTreeMap<String, Vec<u64>>,
+    /// Logical recency clock: bumped once per warm sweep per context
+    /// (never wall time, so files are deterministic).
+    clock: u64,
 }
 
 impl EvalMemo {
@@ -244,15 +358,31 @@ impl EvalMemo {
     }
 
     /// Load a memo file, or start empty when the file does not exist yet.
-    /// A malformed file, or one written by a different estimator version /
-    /// schema, is an error (never silently served).
+    /// A malformed file — truncated, corrupt, or written by a different
+    /// estimator version/schema — is renamed to `<path>.bak` and the memo
+    /// starts fresh with a warning: a stale side file must never error an
+    /// entire sweep (and must never be silently served either).
     pub fn load_or_new(path: &Path) -> anyhow::Result<Self> {
         if !path.exists() {
             return Ok(Self::new());
         }
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-        Self::from_json(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+        match Self::from_json(&text) {
+            Ok(memo) => Ok(memo),
+            Err(e) => {
+                let bak = std::path::PathBuf::from(format!("{}.bak", path.display()));
+                std::fs::rename(path, &bak).map_err(|re| {
+                    anyhow::anyhow!("{}: {re} (while quarantining: {e})", path.display())
+                })?;
+                eprintln!(
+                    "warning: {}: {e}; moved to {} and starting a fresh memo",
+                    path.display(),
+                    bak.display()
+                );
+                Ok(Self::new())
+            }
+        }
     }
 
     /// Save the memo (atomically enough for a CLI tool: write then rename
@@ -272,6 +402,23 @@ impl EvalMemo {
         self.contexts.values().map(|c| c.points.len()).sum()
     }
 
+    /// Number of level-1 kernel sub-memo entries.
+    pub fn n_kernel_entries(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Mark a context as used by the current warm sweep: bumps the logical
+    /// clock and refreshes the context's recency (a context not recorded
+    /// yet is refreshed when [`EvalMemo::record`] creates it). The warm
+    /// engine calls this once per `(sweep, context)`, so LRU order tracks
+    /// sweeps, not lookups.
+    pub fn touch(&mut self, fingerprint: u64) {
+        self.clock += 1;
+        if let Some(c) = self.contexts.get_mut(&fingerprint) {
+            c.last_used = self.clock;
+        }
+    }
+
     /// Exact-hit lookup.
     pub fn lookup(&self, fingerprint: u64, key: &str) -> Option<MemoValues> {
         let p = self.contexts.get(&fingerprint)?.points.get(key)?;
@@ -287,14 +434,27 @@ impl EvalMemo {
     /// only ever map to one value (the evaluation is deterministic), so
     /// re-recording overwrites with identical bits.
     pub fn record(&mut self, ctx: &SweepContext<'_>, fingerprint: u64, key: &str, p: &DsePoint) {
-        let entry = self.contexts.entry(fingerprint).or_insert_with(|| MemoContext {
-            app: ctx.program.app_name.clone(),
-            board: ctx.board.name.clone(),
-            part: ctx.part.name.clone(),
-            fabric_mhz: ctx.board.fabric_freq_mhz,
-            points: BTreeMap::new(),
-        });
+        let clock = self.clock;
+        let entry = match self.contexts.entry(fingerprint) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(e) => {
+                let fps = self.app_index.entry(ctx.program.app_name.clone()).or_default();
+                if let Err(i) = fps.binary_search(&fingerprint) {
+                    fps.insert(i, fingerprint);
+                }
+                e.insert(MemoContext {
+                    app: ctx.program.app_name.clone(),
+                    board: ctx.board.name.clone(),
+                    part: ctx.part.name.clone(),
+                    fabric_mhz: ctx.board.fabric_freq_mhz,
+                    n_tasks: ctx.program.tasks.len() as u64,
+                    last_used: clock,
+                    points: BTreeMap::new(),
+                })
+            }
+        };
         debug_assert_eq!(entry.fabric_mhz.to_bits(), ctx.board.fabric_freq_mhz.to_bits());
+        entry.last_used = entry.last_used.max(clock);
         entry.points.insert(
             key.to_string(),
             MemoPoint {
@@ -304,6 +464,162 @@ impl EvalMemo {
                 fabric_util: p.fabric_util.to_bits(),
             },
         );
+    }
+
+    /// Level-1 lookup: the exact HLS report of a kernel variant, served
+    /// only when *both* cost-model constants match bit for bit — the
+    /// report is then bit-identical to a fresh cost-model call by
+    /// construction (the model is a pure function of the fingerprinted
+    /// profile, the unroll and these two constants).
+    pub fn lookup_report(
+        &self,
+        kfp: u64,
+        unroll: u32,
+        fabric_mhz: f64,
+        dma_bw_mbps: f64,
+    ) -> Option<&HlsReport> {
+        self.kernels
+            .get(&(kfp, unroll, fabric_mhz.to_bits(), dma_bw_mbps.to_bits()))
+            .map(|e| &e.report)
+    }
+
+    /// Record the level-1 entry of every `(kernel, unroll)` variant a
+    /// space can touch, serving the reports from the context's memoized
+    /// cache. Idempotent (a key maps to one deterministic report);
+    /// refreshes the entries' recency.
+    pub fn record_kernels(&mut self, ctx: &SweepContext<'_>, space: &DseSpace) {
+        let fabric = ctx.board.fabric_freq_mhz.to_bits();
+        let dma = ctx.board.dma_bw_mbps.to_bits();
+        let clock = self.clock;
+        for ks in &space.kernels {
+            let Some(kid) = ctx.program.kernel_id(&ks.kernel) else {
+                continue;
+            };
+            let kfp = kernel_fingerprint(&ks.kernel, &ctx.program.kernel(kid).profile);
+            for &u in &ks.unrolls {
+                let entry = self
+                    .kernels
+                    .entry((kfp, u, fabric, dma))
+                    .or_insert_with(|| KernelEntry {
+                        report: ctx.report_for(kid, &ks.kernel, u),
+                        samples: 0,
+                        min_task_ms: f64::INFINITY.to_bits(),
+                        last_used: clock,
+                    });
+                entry.last_used = entry.last_used.max(clock);
+            }
+        }
+    }
+
+    /// Fold freshly evaluated points into the level-1 occupancy
+    /// statistics: for every accelerator variant a point uses, the
+    /// variant's `min_task_ms` absorbs `est_ms × instances / tasks`. The
+    /// `min` makes the statistic independent of the recording order, so
+    /// warm sweeps stay bit-deterministic for any worker count.
+    pub fn record_occupancy(&mut self, ctx: &SweepContext<'_>, points: &[DsePoint]) {
+        let fabric = ctx.board.fabric_freq_mhz.to_bits();
+        let dma = ctx.board.dma_bw_mbps.to_bits();
+        let counts = kernel_task_counts(ctx.program);
+        for p in points {
+            // Instances per kernel (a mixed co-design can split one
+            // kernel's tasks across variants; the kernel's instance count
+            // is the occupancy denominator either way).
+            let mut per_kernel: BTreeMap<&str, u64> = BTreeMap::new();
+            for a in &p.codesign.accels {
+                *per_kernel.entry(a.kernel.as_str()).or_insert(0) += 1;
+            }
+            for a in &p.codesign.accels {
+                let Some(kid) = ctx.program.kernel_id(&a.kernel) else {
+                    continue;
+                };
+                let tasks = counts[kid as usize];
+                if tasks == 0 {
+                    continue;
+                }
+                let instances = per_kernel[a.kernel.as_str()];
+                let kfp = kernel_fingerprint(&a.kernel, &ctx.program.kernel(kid).profile);
+                let Some(e) = self.kernels.get_mut(&(kfp, a.unroll, fabric, dma)) else {
+                    continue;
+                };
+                let task_ms = p.est_ms * instances as f64 / tasks as f64;
+                let cur = f64::from_bits(e.min_task_ms);
+                if task_ms < cur {
+                    e.min_task_ms = task_ms.to_bits();
+                }
+                e.samples += 1;
+            }
+        }
+    }
+
+    /// The level-1 entry of `(kfp, unroll)` whose recorded fabric clock is
+    /// closest (log-ratio) to `my_mhz`, skipping entries with no occupancy
+    /// samples yet. Ties break on the BTreeMap key order — deterministic.
+    fn best_kernel_entry(&self, kfp: u64, unroll: u32, my_mhz: f64) -> Option<(&KernelEntry, f64)> {
+        let lo = (kfp, unroll, u64::MIN, u64::MIN);
+        let hi = (kfp, unroll, u64::MAX, u64::MAX);
+        let mut best: Option<(&KernelEntry, f64, f64)> = None;
+        for (&(_, _, fab_bits, _), e) in self.kernels.range(lo..=hi) {
+            if e.samples == 0 {
+                continue;
+            }
+            let fab = f64::from_bits(fab_bits);
+            if fab <= 0.0 || !fab.is_finite() || my_mhz <= 0.0 {
+                continue;
+            }
+            let dist = (fab / my_mhz).ln().abs();
+            let better = match best {
+                Some((_, _, d)) => dist < d,
+                None => true,
+            };
+            if better {
+                best = Some((e, fab, dist));
+            }
+        }
+        best.map(|(e, fab, _)| (e, fab))
+    }
+
+    /// Predicted makespan of a candidate from the level-1 occupancy
+    /// statistics: per kernel, the mean scaled per-task occupancy of its
+    /// variants × the context's task count / the instance count, summed.
+    /// Sibling entries recorded at a different fabric clock scale by the
+    /// clock ratio. `None` when the candidate has no accelerators or some
+    /// variant has no statistics yet. **Ordering prior only** — never a
+    /// cut source, so a bad prediction costs evaluations, never
+    /// correctness.
+    pub fn prior_ms_for(
+        &self,
+        ctx: &SweepContext<'_>,
+        task_counts: &[u64],
+        cd: &CoDesign,
+    ) -> Option<f64> {
+        if cd.accels.is_empty() {
+            return None;
+        }
+        let my_mhz = ctx.board.fabric_freq_mhz;
+        // kernel name → (Σ scaled per-task ms over instances, instances).
+        let mut groups: BTreeMap<&str, (f64, u64)> = BTreeMap::new();
+        for a in &cd.accels {
+            let kid = ctx.program.kernel_id(&a.kernel)?;
+            if task_counts[kid as usize] == 0 {
+                continue;
+            }
+            let kfp = kernel_fingerprint(&a.kernel, &ctx.program.kernel(kid).profile);
+            let (e, fab) = self.best_kernel_entry(kfp, a.unroll, my_mhz)?;
+            let scaled = f64::from_bits(e.min_task_ms) * (fab / my_mhz);
+            let g = groups.entry(a.kernel.as_str()).or_insert((0.0, 0));
+            g.0 += scaled;
+            g.1 += 1;
+        }
+        if groups.is_empty() {
+            return None;
+        }
+        let mut pred = 0.0;
+        for (name, (sum, n)) in groups {
+            let kid = ctx.program.kernel_id(name)?;
+            let tasks = task_counts[kid as usize] as f64;
+            pred += (sum / n as f64) * tasks / n as f64;
+        }
+        Some(pred)
     }
 
     /// The `(est_ms, energy_j)` frontier of one context (exact values),
@@ -338,14 +654,16 @@ impl EvalMemo {
     /// context whose recorded `app` metadata matches `app`, except the
     /// `exclude` fingerprint (the caller's own context), as
     /// `(fabric_mhz, key → est_ms)` pairs in deterministic (fingerprint)
-    /// order. This is what board-axis warm starts scale by the
-    /// fabric-clock ratio when the sibling board was swept in an
-    /// *earlier run* rather than earlier in the same call.
+    /// order. Served from the maintained app index — O(siblings), not
+    /// O(contexts).
     pub fn sibling_points_ms(&self, app: &str, exclude: u64) -> Vec<(f64, Vec<(String, f64)>)> {
-        self.contexts
-            .iter()
-            .filter(|(fp, c)| **fp != exclude && c.app == app)
-            .map(|(_, c)| {
+        let Some(fps) = self.app_index.get(app) else {
+            return Vec::new();
+        };
+        fps.iter()
+            .filter(|&&fp| fp != exclude)
+            .filter_map(|fp| self.contexts.get(fp))
+            .map(|c| {
                 let pts: Vec<(String, f64)> = c
                     .points
                     .iter()
@@ -354,6 +672,123 @@ impl EvalMemo {
                 (c.fabric_mhz, pts)
             })
             .collect()
+    }
+
+    /// Layout summary: context/point/kernel-entry counts, the serialized
+    /// size, and one row per context in fingerprint order.
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            contexts: self.contexts.len(),
+            points: self.n_points(),
+            kernel_entries: self.kernels.len(),
+            bytes: self.to_json().len(),
+            rows: self
+                .contexts
+                .iter()
+                .map(|(&fp, c)| MemoContextStat {
+                    fingerprint: fp,
+                    app: c.app.clone(),
+                    board: c.board.clone(),
+                    part: c.part.clone(),
+                    points: c.points.len(),
+                    tasks: c.n_tasks,
+                    last_used: c.last_used,
+                })
+                .collect(),
+        }
+    }
+
+    /// Bound the memo: contexts are kept in strict most-recently-used
+    /// order (by the persisted logical clock) until either cap trips —
+    /// more than `keep_contexts` keepers, or a cumulative `keep_points`
+    /// budget exceeded — and everything less recent is evicted, so a
+    /// retained context is never older than an evicted one. Level-1
+    /// entries are capped at `keep_kernels` the same way. Eviction removes
+    /// whole contexts/entries and never edits a survivor, so every
+    /// retained lookup stays bit-exact. Deterministic: recency ties break
+    /// on the fingerprint order.
+    pub fn gc(
+        &mut self,
+        keep_contexts: usize,
+        keep_points: usize,
+        keep_kernels: usize,
+    ) -> GcReport {
+        let mut report = GcReport::default();
+        // Contexts, most recent first.
+        let mut order: Vec<(u64, u64)> = self
+            .contexts
+            .iter()
+            .map(|(&fp, c)| (c.last_used, fp))
+            .collect();
+        order.sort_by_key(|&(lu, fp)| (std::cmp::Reverse(lu), fp));
+        let mut keep: Vec<u64> = Vec::new();
+        let mut points = 0usize;
+        for &(_, fp) in &order {
+            let n = self.contexts[&fp].points.len();
+            if keep.len() >= keep_contexts || points + n > keep_points {
+                // LRU prefix only: once a cap trips, every less-recent
+                // context goes too (keeping an older context while a
+                // newer one is evicted would invert the LRU contract).
+                break;
+            }
+            points += n;
+            keep.push(fp);
+        }
+        keep.sort_unstable();
+        let before = self.contexts.len();
+        let evicted: Vec<u64> = self
+            .contexts
+            .keys()
+            .copied()
+            .filter(|fp| keep.binary_search(fp).is_err())
+            .collect();
+        for fp in &evicted {
+            if let Some(c) = self.contexts.remove(fp) {
+                report.evicted_points += c.points.len();
+            }
+        }
+        report.evicted_contexts = before - self.contexts.len();
+        // Kernel entries, most recent first.
+        if self.kernels.len() > keep_kernels {
+            let mut korder: Vec<(u64, KernelKey)> = self
+                .kernels
+                .iter()
+                .map(|(&k, e)| (e.last_used, k))
+                .collect();
+            korder.sort_by_key(|&(lu, k)| (std::cmp::Reverse(lu), k));
+            let drop: Vec<KernelKey> = korder
+                .into_iter()
+                .skip(keep_kernels)
+                .map(|(_, k)| k)
+                .collect();
+            for k in drop {
+                self.kernels.remove(&k);
+                report.evicted_kernels += 1;
+            }
+        }
+        self.rebuild_index();
+        report
+    }
+
+    /// Compact the memo in place: drop contexts with no points (gc'd or
+    /// never-recorded shells) and rebuild the app index. Saving afterwards
+    /// rewrites the file in the current schema version with normalized
+    /// encoding — the "versioned compaction" of long-lived memo files.
+    /// Returns the number of contexts dropped.
+    pub fn compact(&mut self) -> usize {
+        let before = self.contexts.len();
+        self.contexts.retain(|_, c| !c.points.is_empty());
+        self.rebuild_index();
+        before - self.contexts.len()
+    }
+
+    fn rebuild_index(&mut self) {
+        self.app_index.clear();
+        for (&fp, c) in &self.contexts {
+            self.app_index.entry(c.app.clone()).or_default().push(fp);
+        }
+        // BTreeMap iteration is fingerprint-ordered, so the per-app lists
+        // come out sorted.
     }
 
     /// Serialize to the memo JSON document.
@@ -386,20 +821,42 @@ impl EvalMemo {
                     ("board", c.board.as_str().into()),
                     ("part", c.part.as_str().into()),
                     ("fabric_mhz", c.fabric_mhz.into()),
+                    ("n_tasks", c.n_tasks.into()),
+                    ("last_used", c.last_used.into()),
                     ("points", arr(points)),
                     ("frontier", arr(frontier)),
+                ])
+            })
+            .collect();
+        let kernels: Vec<Value> = self
+            .kernels
+            .iter()
+            .map(|(&(kfp, unroll, fabric, dma), e)| {
+                obj(vec![
+                    ("kfp", format!("{kfp:016x}").into()),
+                    ("unroll", unroll.into()),
+                    ("fabric_mhz", fabric.into()),
+                    ("dma_bw_mbps", dma.into()),
+                    ("samples", e.samples.into()),
+                    ("min_task_ms", e.min_task_ms.into()),
+                    ("last_used", e.last_used.into()),
+                    ("report", e.report.to_json_value()),
                 ])
             })
             .collect();
         obj(vec![
             ("version", MEMO_SCHEMA_VERSION.into()),
             ("estimator", env!("CARGO_PKG_VERSION").into()),
+            ("clock", self.clock.into()),
             ("contexts", arr(contexts)),
+            ("kernels", arr(kernels)),
         ])
         .to_json()
     }
 
-    /// Parse a memo JSON document (version- and estimator-checked).
+    /// Parse a memo JSON document (version- and estimator-checked; any
+    /// structural defect is an error — [`EvalMemo::load_or_new`] turns
+    /// errors into a `.bak` quarantine instead of failing the sweep).
     pub fn from_json(text: &str) -> anyhow::Result<Self> {
         let v = parse(text).map_err(|e| anyhow::anyhow!("memo parse: {e}"))?;
         let version = v
@@ -408,16 +865,16 @@ impl EvalMemo {
             .ok_or_else(|| anyhow::anyhow!("memo file has no version"))?;
         anyhow::ensure!(
             version == MEMO_SCHEMA_VERSION,
-            "memo schema v{version} != v{MEMO_SCHEMA_VERSION} — delete the memo file and re-sweep"
+            "memo schema v{version} != v{MEMO_SCHEMA_VERSION}"
         );
         let estimator = v.get("estimator").and_then(Value::as_str).unwrap_or("");
         anyhow::ensure!(
             estimator == env!("CARGO_PKG_VERSION"),
-            "memo written by estimator v{estimator}, this is v{} — delete the memo file and \
-             re-sweep (results would not be comparable)",
+            "memo written by estimator v{estimator}, this is v{} (results would not be comparable)",
             env!("CARGO_PKG_VERSION")
         );
         let mut memo = EvalMemo::new();
+        memo.clock = v.get("clock").and_then(Value::as_u64).unwrap_or(0);
         let contexts = v
             .get("contexts")
             .and_then(Value::as_arr)
@@ -434,6 +891,8 @@ impl EvalMemo {
                 board: c.get("board").and_then(Value::as_str).unwrap_or("").to_string(),
                 part: c.get("part").and_then(Value::as_str).unwrap_or("").to_string(),
                 fabric_mhz: c.get("fabric_mhz").and_then(Value::as_f64).unwrap_or(0.0),
+                n_tasks: c.get("n_tasks").and_then(Value::as_u64).unwrap_or(0),
+                last_used: c.get("last_used").and_then(Value::as_u64).unwrap_or(0),
                 points: BTreeMap::new(),
             };
             for p in c.get("points").and_then(Value::as_arr).unwrap_or(&[]) {
@@ -459,6 +918,34 @@ impl EvalMemo {
             }
             memo.contexts.insert(fp, mc);
         }
+        for k in v.get("kernels").and_then(Value::as_arr).unwrap_or(&[]) {
+            let kfp_str = k
+                .get("kfp")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow::anyhow!("memo kernel entry has no kfp"))?;
+            let kfp = u64::from_str_radix(kfp_str, 16)
+                .map_err(|_| anyhow::anyhow!("bad kernel fingerprint '{kfp_str}'"))?;
+            let u = |field: &str| -> anyhow::Result<u64> {
+                k.get(field)
+                    .and_then(Value::as_i64)
+                    .map(|i| i as u64)
+                    .ok_or_else(|| anyhow::anyhow!("memo kernel '{kfp_str}' misses {field}"))
+            };
+            let report = HlsReport::from_json_value(
+                k.get("report")
+                    .ok_or_else(|| anyhow::anyhow!("memo kernel '{kfp_str}' misses report"))?,
+            )?;
+            memo.kernels.insert(
+                (kfp, u("unroll")? as u32, u("fabric_mhz")?, u("dma_bw_mbps")?),
+                KernelEntry {
+                    report,
+                    samples: u("samples")?,
+                    min_task_ms: u("min_task_ms")?,
+                    last_used: u("last_used")?,
+                },
+            );
+        }
+        memo.rebuild_index();
         Ok(memo)
     }
 }
@@ -529,11 +1016,15 @@ mod tests {
         let fp = context_fingerprint(&ctx);
         let mut memo = EvalMemo::new();
         let (points, _) = ctx.explore_pruned(&space, Objective::Time, 2);
+        memo.touch(fp);
         for pt in &points {
             memo.record(&ctx, fp, &codesign_key(&pt.codesign), pt);
         }
+        memo.record_kernels(&ctx, &space);
+        memo.record_occupancy(&ctx, &points);
         assert_eq!(memo.n_contexts(), 1);
         assert_eq!(memo.n_points(), points.len());
+        assert_eq!(memo.n_kernel_entries(), 4); // unrolls {8, 16, 32, 64}
         let back = EvalMemo::from_json(&memo.to_json()).unwrap();
         for pt in &points {
             let hit = back.lookup(fp, &codesign_key(&pt.codesign)).unwrap();
@@ -545,11 +1036,24 @@ mod tests {
         assert!(back.lookup(fp ^ 1, "anything").is_none());
         assert!(!back.frontier(fp).is_empty());
         assert_eq!(back.points_ms(fp).len(), points.len());
+        // Level-1 entries round-trip bit for bit too, including stats.
+        assert_eq!(back.n_kernel_entries(), memo.n_kernel_entries());
+        let kid = p.kernel_id("mxm64").unwrap();
+        let kfp = crate::hls::kernel_fingerprint("mxm64", &p.kernel(kid).profile);
+        let served = back
+            .lookup_report(kfp, 32, board.fabric_freq_mhz, board.dma_bw_mbps)
+            .expect("primed variant must be served");
+        assert_eq!(*served, ctx.report_for(kid, "mxm64", 32));
+        // A perturbed constant must miss (report validity domain).
+        assert!(back
+            .lookup_report(kfp, 32, board.fabric_freq_mhz + 1.0, board.dma_bw_mbps)
+            .is_none());
     }
 
     #[test]
     fn memo_rejects_foreign_versions() {
         assert!(EvalMemo::from_json("{\"version\": 999, \"contexts\": []}").is_err());
+        assert!(EvalMemo::from_json("{\"version\": 1, \"contexts\": []}").is_err());
         assert!(EvalMemo::from_json("{\"contexts\": []}").is_err());
         let wrong_estimator = format!(
             "{{\"version\": {MEMO_SCHEMA_VERSION}, \"estimator\": \"0.0.0\", \"contexts\": []}}"
@@ -568,6 +1072,27 @@ mod tests {
         assert_eq!(memo.n_points(), 0);
         memo.save(&path).unwrap();
         assert!(EvalMemo::load_or_new(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_new_quarantines_corrupt_files() {
+        let dir = std::env::temp_dir().join("zynq_warm_memo_bak");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memo.json");
+        let bak = dir.join("memo.json.bak");
+        std::fs::remove_file(&bak).ok();
+        // Truncated/corrupt file: the sweep must start fresh, and the bad
+        // file must be preserved as .bak instead of erroring the run.
+        std::fs::write(&path, "{\"version\": 2, \"estim").unwrap();
+        let memo = EvalMemo::load_or_new(&path).unwrap();
+        assert_eq!(memo.n_points(), 0);
+        assert!(!path.exists(), "corrupt file must be moved aside");
+        assert!(bak.exists(), "corrupt file must be preserved as .bak");
+        // A version-mismatched file takes the same path.
+        std::fs::write(&path, "{\"version\": 1, \"contexts\": []}").unwrap();
+        assert!(EvalMemo::load_or_new(&path).unwrap().n_points() == 0);
+        assert!(bak.exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -608,5 +1133,87 @@ mod tests {
             assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits());
             assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
         }
+    }
+
+    #[test]
+    fn gc_is_lru_by_context_and_survivors_stay_exact() {
+        let board = BoardConfig::zynq706();
+        let old_p = Matmul::new(128, 64).build_program(&board);
+        let new_p = Matmul::new(256, 64).build_program(&board);
+        let old_space = DseSpace::from_program(&old_p);
+        let new_space = DseSpace::from_program(&new_p);
+        let old_ctx = fixture(&old_p, &board, &old_space);
+        let new_ctx = fixture(&new_p, &board, &new_space);
+        let mut memo = EvalMemo::new();
+        let (old_pts, _) =
+            old_ctx.explore_warm(&old_space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        let (new_pts, _) =
+            new_ctx.explore_warm(&new_space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        assert_eq!(memo.n_contexts(), 2);
+        let bytes_before = memo.to_json().len();
+        let old_fp = context_fingerprint(&old_ctx);
+        let new_fp = context_fingerprint(&new_ctx);
+
+        let report = memo.gc(1, usize::MAX, usize::MAX);
+        assert_eq!(report.evicted_contexts, 1);
+        assert_eq!(report.evicted_points, old_pts.len());
+        // LRU: the earlier-swept context goes, the recent one survives
+        // with every point bit-exact.
+        assert!(memo.lookup(old_fp, &codesign_key(&old_pts[0].codesign)).is_none());
+        for pt in &new_pts {
+            let hit = memo.lookup(new_fp, &codesign_key(&pt.codesign)).unwrap();
+            assert_eq!(hit.est_ms.to_bits(), pt.est_ms.to_bits());
+            assert_eq!(hit.energy_j.to_bits(), pt.energy_j.to_bits());
+        }
+        // The file is strictly smaller, and the stats/compact paths agree.
+        assert!(memo.to_json().len() < bytes_before);
+        let stats = memo.stats();
+        assert_eq!(stats.contexts, 1);
+        assert_eq!(stats.points, new_pts.len());
+        assert_eq!(memo.compact(), 0);
+        // The evicted context is gone from the sibling index too.
+        assert!(memo.sibling_points_ms(&old_p.app_name, 0).is_empty());
+        // Kernel-entry cap: both programs share one kernel profile, so the
+        // sub-memo has 4 entries; cap to 2 and the survivors still serve.
+        assert_eq!(memo.n_kernel_entries(), 4);
+        let r2 = memo.gc(usize::MAX, usize::MAX, 2);
+        assert_eq!(r2.evicted_kernels, 2);
+        assert_eq!(memo.n_kernel_entries(), 2);
+    }
+
+    #[test]
+    fn kernel_priors_need_samples_and_scale_with_tasks() {
+        let board = BoardConfig::zynq706();
+        let small = Matmul::new(128, 64).build_program(&board);
+        let large = Matmul::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&small);
+        let small_ctx = fixture(&small, &board, &space);
+        let large_space = DseSpace::from_program(&large);
+        let large_ctx = fixture(&large, &board, &large_space);
+        let mut memo = EvalMemo::new();
+        let counts = kernel_task_counts(&large);
+        // No statistics yet: no prior.
+        let probe = CoDesign::new("x").with_accel("mxm64", 32);
+        assert!(memo.prior_ms_for(&large_ctx, &counts, &probe).is_none());
+        let (pts, _) =
+            small_ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+        // Any evaluated accelerated point has occupancy samples for every
+        // variant it used, so its co-design gets a prior at both sizes.
+        let cd = &pts
+            .iter()
+            .find(|p| !p.codesign.accels.is_empty())
+            .expect("space has accelerated points")
+            .codesign;
+        // Statistics from the small size predict the large size, scaled by
+        // the task-count ratio (8x the tasks here).
+        let small_counts = kernel_task_counts(&small);
+        let p_small = memo.prior_ms_for(&small_ctx, &small_counts, cd).unwrap();
+        let p_large = memo.prior_ms_for(&large_ctx, &counts, cd).unwrap();
+        assert!(p_small > 0.0);
+        assert!((p_large / p_small - 8.0).abs() < 1e-9, "{p_large} vs {p_small}");
+        // smp-only candidates have no kernel prior.
+        assert!(memo
+            .prior_ms_for(&large_ctx, &counts, &CoDesign::new("smp").with_smp("mxm64"))
+            .is_none());
     }
 }

@@ -560,6 +560,108 @@ pub fn warm_perturbed_study(
     Ok(rows)
 }
 
+/// Result of [`warm_cross_size_study`] — the kernel-sub-memo cross-size
+/// warm start, pinned by `bench_baselines/BENCH_warm.json`.
+#[derive(Clone, Debug)]
+pub struct CrossSizeWarmRow {
+    /// Problem size that recorded the memo.
+    pub small_n: u64,
+    /// Problem size swept warm from it.
+    pub large_n: u64,
+    /// Level-1 hits: HLS reports served from the kernel sub-memo while
+    /// priming the large-size context (one per `(kernel, unroll)` pair of
+    /// the space — the sizes share kernel profiles).
+    pub kernel_hits: u64,
+    /// Level-2 hits of the warm large-size sweep — **zero** by
+    /// construction (different task traces, different context), asserted.
+    pub memo_hits: u64,
+    /// Candidates the large-size warm sweep ordered by a level-1
+    /// occupancy prior.
+    pub prior_ordered: u64,
+    /// Points the warm large-size sweep simulated.
+    pub warm_evaluated: u64,
+    /// Points the cold pruned large-size sweep simulated.
+    pub cold_evaluated: u64,
+    /// Best co-design of the large size (identical warm and cold —
+    /// asserted).
+    pub best: String,
+}
+
+/// Cross-size warm start through the **kernel sub-memo**: sweep matmul at
+/// a small problem size to record the memo, then sweep a larger size warm
+/// against it. The two sizes share no level-2 context (their task traces
+/// differ), but their kernels fingerprint identically, so the large sweep
+/// primes its HLS cache entirely from the memo and draws ranked-ordering
+/// priors from the recorded occupancy statistics. Asserts the exactness
+/// contract — the warm large-size sweep returns the bit-identical best
+/// point and time-energy Pareto front of the cold pruned (and hence the
+/// exhaustive) sweep — plus `memo_hits == 0` and `kernel_hits` = the
+/// space's variant count.
+pub fn warm_cross_size_study(
+    board: &BoardConfig,
+    workers: usize,
+) -> anyhow::Result<CrossSizeWarmRow> {
+    use crate::dse::{
+        pareto_front_coords, DseSpace, EvalMemo, Objective, OrderMode, SweepContext,
+    };
+    let part = FpgaPart::xc7z045();
+    let (small_n, large_n) = (256u64, 512u64);
+    let small = crate::apps::build_app_program("matmul", small_n, 64, board)?;
+    let small_space = DseSpace::from_program(&small).with_mixed();
+    let small_ctx = SweepContext::for_space(&small, board, &part, &small_space);
+    let mut memo = EvalMemo::new();
+    small_ctx.explore_warm(&small_space, &mut memo, Objective::Time, workers, OrderMode::Ranked);
+
+    let large = crate::apps::build_app_program("matmul", large_n, 64, board)?;
+    let large_space = DseSpace::from_program(&large).with_mixed();
+    let cold_ctx = SweepContext::for_space(&large, board, &part, &large_space);
+    let (cold, cold_stats) = cold_ctx.explore_pruned(&large_space, Objective::Time, workers);
+
+    let warm_ctx = SweepContext::for_space_warm(&large, board, &part, &large_space, &memo);
+    let kernel_hits = warm_ctx.kernel_memo_hits() as u64;
+    let (warm, warm_stats) = warm_ctx.explore_warm(
+        &large_space,
+        &mut memo,
+        Objective::Time,
+        workers,
+        OrderMode::Ranked,
+    );
+
+    anyhow::ensure!(
+        kernel_hits > 0,
+        "cross-size prime must hit the kernel sub-memo"
+    );
+    anyhow::ensure!(
+        warm_stats.kernel_hits == kernel_hits,
+        "stats must surface the level-1 hits: {warm_stats:?}"
+    );
+    anyhow::ensure!(
+        warm_stats.memo_hits == 0,
+        "different problem sizes must not share level-2 entries: {warm_stats:?}"
+    );
+    anyhow::ensure!(!cold.is_empty() && !warm.is_empty(), "empty sweep");
+    anyhow::ensure!(
+        cold[0].est_ms.to_bits() == warm[0].est_ms.to_bits(),
+        "cross-size warm best diverged ({} vs {})",
+        cold[0].codesign.name,
+        warm[0].codesign.name
+    );
+    anyhow::ensure!(
+        pareto_front_coords(&cold) == pareto_front_coords(&warm),
+        "cross-size warm Pareto front diverged"
+    );
+    Ok(CrossSizeWarmRow {
+        small_n,
+        large_n,
+        kernel_hits,
+        memo_hits: warm_stats.memo_hits,
+        prior_ordered: warm_stats.prior_ordered,
+        warm_evaluated: warm_stats.evaluated,
+        cold_evaluated: cold_stats.evaluated,
+        best: cold[0].codesign.name.clone(),
+    })
+}
+
 /// Result of [`cross_board_dse`]: wall times of the three cross-board
 /// sweep modes plus the pruned per-(board, app) results and the winner
 /// tables.

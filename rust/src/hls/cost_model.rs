@@ -20,8 +20,34 @@
 use crate::config::BoardConfig;
 use crate::coordinator::task::KernelProfile;
 use crate::sim::time::transfer_ps;
+use crate::util::fnv::Fnv;
 
 use super::report::{HlsReport, Resources};
+
+/// Stable fingerprint of a kernel *as the cost model sees it*: the kernel
+/// name, its full workload profile, and the estimator version. Together
+/// with an unroll factor and the two board-derived model constants
+/// ([`CostModel::fabric_mhz`] and [`CostModel::dma_bw_mbps`]) this covers
+/// **everything** an [`HlsReport`] depends on, so two programs whose
+/// kernels fingerprint identically — e.g. two problem sizes of the same
+/// blocked application, which share the per-block profile — can share
+/// synthesis estimates bit for bit. This is the level-1 key of the
+/// [`dse::warm`](crate::dse::warm) evaluation memo; the FPGA part is
+/// deliberately *not* part of the key (reports are part-independent —
+/// feasibility is checked downstream), which is what lets sibling boards
+/// share kernel statistics.
+pub fn kernel_fingerprint(kernel: &str, profile: &KernelProfile) -> u64 {
+    let mut h = Fnv::new();
+    h.str(env!("CARGO_PKG_VERSION"));
+    h.str(kernel);
+    h.u64(profile.flops);
+    h.u64(profile.inner_trip);
+    h.u64(profile.in_bytes);
+    h.u64(profile.out_bytes);
+    h.u64(profile.dtype_bytes as u64);
+    h.bool(profile.divsqrt);
+    h.finish()
+}
 
 /// DSPs per fused multiply-add datapath lane.
 fn mac_dsps(dtype_bytes: u8) -> u64 {

@@ -9,7 +9,7 @@ pub mod report;
 pub mod resources;
 pub mod synthesis_time;
 
-pub use cost_model::CostModel;
+pub use cost_model::{kernel_fingerprint, CostModel};
 pub use report::{HlsReport, Resources};
 pub use resources::FpgaPart;
 pub use synthesis_time::SynthesisTimeModel;

@@ -4,6 +4,7 @@
 //! feasibility analysis needs.
 
 use crate::sim::time::{Clock, Ps};
+use crate::util::json::{obj, Value};
 
 /// Resource vector of one synthesized accelerator (7-series primitives).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -104,6 +105,59 @@ impl HlsReport {
         self.clock().cycles_to_ps(self.out_cycles)
     }
 
+    /// Serialize the report for the evaluation-memo file. Every cycle and
+    /// resource count is an integer and `fmax_mhz` is stored as its exact
+    /// bit pattern, so [`HlsReport::from_json_value`] reconstructs the
+    /// report bit for bit — the level-1 memo serves it in place of a
+    /// cost-model call.
+    pub fn to_json_value(&self) -> Value {
+        obj(vec![
+            ("kernel", self.kernel.as_str().into()),
+            ("unroll", self.unroll.into()),
+            ("ii", self.ii.into()),
+            ("depth", self.depth.into()),
+            ("compute_cycles", self.compute_cycles.into()),
+            ("fmax_mhz", self.fmax_mhz.to_bits().into()),
+            ("in_cycles", self.in_cycles.into()),
+            ("out_cycles", self.out_cycles.into()),
+            ("luts", self.resources.luts.into()),
+            ("ffs", self.resources.ffs.into()),
+            ("dsps", self.resources.dsps.into()),
+            ("bram18", self.resources.bram18.into()),
+        ])
+    }
+
+    /// Parse a report serialized by [`HlsReport::to_json_value`]
+    /// (round-trip exact; any missing or mistyped field is an error).
+    pub fn from_json_value(v: &Value) -> anyhow::Result<HlsReport> {
+        let u = |field: &str| -> anyhow::Result<u64> {
+            v.get(field)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("hls report misses {field}"))
+        };
+        let kernel = v
+            .get("kernel")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("hls report misses kernel"))?
+            .to_string();
+        Ok(HlsReport {
+            kernel,
+            unroll: u("unroll")? as u32,
+            ii: u("ii")? as u32,
+            depth: u("depth")? as u32,
+            compute_cycles: u("compute_cycles")?,
+            fmax_mhz: f64::from_bits(u("fmax_mhz")?),
+            in_cycles: u("in_cycles")?,
+            out_cycles: u("out_cycles")?,
+            resources: Resources {
+                luts: u("luts")?,
+                ffs: u("ffs")?,
+                dsps: u("dsps")?,
+                bram18: u("bram18")?,
+            },
+        })
+    }
+
     /// Render in the style of a Vivado HLS synthesis summary (human
     /// consumption; the `hls` CLI subcommand prints this).
     pub fn render(&self) -> String {
@@ -172,5 +226,31 @@ mod tests {
         assert_eq!(r.in_ps(), 100_000_000);
         assert_eq!(r.out_ps(), 10_000_000);
         assert!(r.render().contains("DSP48E"));
+    }
+
+    #[test]
+    fn report_json_roundtrip_is_bit_exact() {
+        let r = HlsReport {
+            kernel: "mxm64".into(),
+            unroll: 32,
+            ii: 1,
+            depth: 23,
+            compute_cycles: 8_215,
+            fmax_mhz: 125.0,
+            in_cycles: 15_360,
+            out_cycles: 5_120,
+            resources: Resources {
+                luts: 18_640,
+                ffs: 37_280,
+                dsps: 172,
+                bram18: 36,
+            },
+        };
+        let back = HlsReport::from_json_value(&r.to_json_value()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.fmax_mhz.to_bits(), r.fmax_mhz.to_bits());
+        // Missing fields are rejected, never defaulted.
+        let v = crate::util::json::parse("{\"kernel\":\"k\",\"unroll\":1}").unwrap();
+        assert!(HlsReport::from_json_value(&v).is_err());
     }
 }

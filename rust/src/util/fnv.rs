@@ -1,0 +1,88 @@
+//! FNV-1a 64-bit hashing for *serialized* fingerprints.
+//!
+//! The repository's `FxHasher` (`util::fxhash`) is for in-memory hash
+//! tables, where the exact hash values are an implementation detail. The
+//! evaluation-memo layer (`dse::warm`) and the HLS kernel fingerprints
+//! (`hls::kernel_fingerprint`) instead write hash values into a *file
+//! format*, so the function is pinned here explicitly: FNV-1a with the
+//! standard 64-bit offset basis and prime, fed length-prefixed strings and
+//! little-endian scalars. Changing this function invalidates every
+//! persisted fingerprint — bump `dse::warm::MEMO_SCHEMA_VERSION` if you
+//! ever must.
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    /// Start a hash at the FNV-1a 64-bit offset basis.
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold raw bytes into the hash.
+    pub fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Fold a `u64` (little-endian bytes).
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Fold an `f64` as its exact bit pattern.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Fold a length-prefixed string (prefixing makes `("ab","c")` and
+    /// `("a","bc")` hash differently).
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Fold a boolean as one byte.
+    pub fn bool(&mut self, b: bool) {
+        self.bytes(&[b as u8]);
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // FNV-1a 64 reference values (empty string = offset basis, "a").
+        assert_eq!(Fnv::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv::new();
+        h.bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn string_length_prefix_disambiguates() {
+        let mut a = Fnv::new();
+        a.str("ab");
+        a.str("c");
+        let mut b = Fnv::new();
+        b.str("a");
+        b.str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

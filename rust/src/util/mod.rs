@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod bench_check;
+pub mod fnv;
 pub mod fxhash;
 pub mod json;
 

@@ -303,6 +303,192 @@ fn prop_sibling_board_seeding_keeps_per_board_results_exact() {
 }
 
 #[test]
+fn prop_cross_size_kernel_memo_warm_is_exact_and_deterministic() {
+    // The kernel-sub-memo satellite contract: a sweep warm-started across
+    // problem sizes (level-1 hits only — the level-2 contexts differ)
+    // returns the bit-identical best point and time-energy Pareto front
+    // of the cold sweep, and its *full ranking* is bit-identical for any
+    // worker count.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let small = Matmul::new(128, 64).build_program(&board);
+    let large = Matmul::new(256, 64).build_program(&board);
+    forall(5, 0xC125, |seed, rng| {
+        let space = random_space(rng, &small);
+        let small_ctx = SweepContext::for_space(&small, &board, &part, &space);
+        let mut memo = EvalMemo::new();
+        small_ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+
+        // The large size primes its HLS cache entirely from the memo:
+        // both sizes share kernel profiles, so every space variant hits.
+        let large_ctx = SweepContext::for_space_warm(&large, &board, &part, &space, &memo);
+        assert!(
+            large_ctx.kernel_memo_hits() > 0,
+            "seed {seed}: cross-size prime must hit the kernel sub-memo"
+        );
+        let cold = large_ctx.explore(&space, Objective::Time, 2);
+        let mut trial = memo.clone();
+        let (warm, warm_stats) =
+            large_ctx.explore_warm(&space, &mut trial, Objective::Time, 2, OrderMode::Ranked);
+        assert_same_best_and_front(seed, "cross-size-warm", &cold, &warm);
+        assert_eq!(
+            warm_stats.memo_hits, 0,
+            "seed {seed}: sizes must not share level-2 entries"
+        );
+        assert_eq!(
+            warm_stats.kernel_hits,
+            large_ctx.kernel_memo_hits() as u64,
+            "seed {seed}: stats must surface the level-1 hits"
+        );
+        // Full-ranking bitwise determinism across worker counts (fresh
+        // memo clones so the hit/prior state matches).
+        for workers in [1, 4] {
+            let mut again = memo.clone();
+            let (pts, stats) = large_ctx.explore_warm(
+                &space,
+                &mut again,
+                Objective::Time,
+                workers,
+                OrderMode::Ranked,
+            );
+            assert_eq!(stats, warm_stats, "seed {seed}: workers={workers}");
+            assert_eq!(pts.len(), warm.len(), "seed {seed}: workers={workers}");
+            for (a, b) in pts.iter().zip(&warm) {
+                assert_eq!(a.codesign.name, b.codesign.name, "seed {seed}: workers={workers}");
+                assert_eq!(
+                    a.est_ms.to_bits(),
+                    b.est_ms.to_bits(),
+                    "seed {seed}: workers={workers}"
+                );
+                assert_eq!(
+                    a.energy_j.to_bits(),
+                    b.energy_j.to_bits(),
+                    "seed {seed}: workers={workers}"
+                );
+            }
+            // The saved memo is bit-deterministic too (level-1 statistics
+            // aggregate order-independently).
+            assert_eq!(again.to_json(), trial.to_json(), "seed {seed}: workers={workers}");
+        }
+    });
+}
+
+#[test]
+fn prop_from_json_rejects_truncated_and_tampered_payloads() {
+    // Build a real two-level memo document, then attack it: every strict
+    // prefix must fail to parse (never half-load), and targeted
+    // version/fingerprint tampering must be rejected.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(128, 64).build_program(&board);
+    let space = DseSpace::from_program(&program);
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let mut memo = EvalMemo::new();
+    ctx.explore_warm(&space, &mut memo, Objective::Time, 2, OrderMode::Ranked);
+    let text = memo.to_json();
+    assert!(EvalMemo::from_json(&text).is_ok());
+    // Truncations at pseudo-random byte offsets (the document is ASCII).
+    forall(1, 0x7000, |_seed, rng| {
+        for _ in 0..64 {
+            let cut = rng.gen_range(0, text.len() as u64) as usize;
+            assert!(
+                EvalMemo::from_json(&text[..cut]).is_err(),
+                "truncation at {cut} of {} must be rejected",
+                text.len()
+            );
+        }
+    });
+    // Version tampering: schema and estimator mismatches both refuse.
+    let v1 = text.replacen("\"version\":2", "\"version\":1", 1);
+    assert_ne!(v1, text, "fixture must contain the version field");
+    assert!(EvalMemo::from_json(&v1).is_err());
+    let v999 = text.replacen("\"version\":2", "\"version\":999", 1);
+    assert!(EvalMemo::from_json(&v999).is_err());
+    let foreign = text.replacen(
+        &format!("\"estimator\":\"{}\"", env!("CARGO_PKG_VERSION")),
+        "\"estimator\":\"0.0.0\"",
+        1,
+    );
+    assert_ne!(foreign, text, "fixture must contain the estimator field");
+    assert!(EvalMemo::from_json(&foreign).is_err());
+    // A non-hex fingerprint is structural corruption, not data.
+    let bad_fp = text.replacen("\"fp\":\"", "\"fp\":\"zz", 1);
+    assert!(EvalMemo::from_json(&bad_fp).is_err());
+}
+
+#[test]
+fn suite_warm_matches_standalone_and_second_run_hits() {
+    // The warm suite path: multi-job warm rounds in one shared pool must
+    // be bit-identical, per app, to standalone warm sweeps, and a second
+    // run over the unchanged suite must evaluate zero points.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let matmul = Matmul::new(256, 64).build_program(&board);
+    let cholesky = zynq_estimator::apps::cholesky::Cholesky::new(256, 64).build_program(&board);
+    let programs: Vec<(&str, &zynq_estimator::coordinator::task::TaskProgram)> =
+        vec![("matmul", &matmul), ("cholesky", &cholesky)];
+
+    let mut suite = zynq_estimator::dse::SweepSuite::new();
+    for (name, program) in &programs {
+        suite.push(name, program, &board, &part, DseSpace::from_program(program));
+    }
+    let mut memo = EvalMemo::new();
+    let first = suite.explore_pruned_warm(&mut memo, Objective::Time, 2, OrderMode::Ranked);
+    // Per-app bitwise identity to a standalone warm sweep from the same
+    // cold state (the first suite run has no priors — the memo was empty
+    // at setup — so standalone fresh-memo runs see identical state).
+    for (r, (name, program)) in first.iter().zip(&programs) {
+        let space = DseSpace::from_program(program);
+        let ctx = SweepContext::for_space(program, &board, &part, &space);
+        let mut solo_memo = EvalMemo::new();
+        let (solo, solo_stats) =
+            ctx.explore_warm(&space, &mut solo_memo, Objective::Time, 2, OrderMode::Ranked);
+        assert_eq!(r.stats.evaluated, solo_stats.evaluated, "{name}");
+        assert_eq!(r.points.len(), solo.len(), "{name}");
+        for (a, b) in r.points.iter().zip(&solo) {
+            assert_eq!(a.codesign.name, b.codesign.name, "{name}");
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "{name}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{name}");
+        }
+    }
+    // Second warm run: all level-2 hits, zero simulations, bit-identical.
+    let second = suite.explore_pruned_warm(&mut memo, Objective::Time, 2, OrderMode::Ranked);
+    for (f, s) in first.iter().zip(&second) {
+        assert_eq!(s.stats.evaluated, 0, "{}: {:?}", f.name, s.stats);
+        assert_eq!(s.stats.memo_hits as usize, f.points.len(), "{}", f.name);
+        for (a, b) in s.points.iter().zip(&f.points) {
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "{}", f.name);
+        }
+    }
+    // Worker-count determinism of the shared-pool warm rounds.
+    let mut memo1 = EvalMemo::new();
+    let serial = suite.explore_pruned_warm(&mut memo1, Objective::Time, 1, OrderMode::Ranked);
+    for (a, b) in first.iter().zip(&serial) {
+        assert_eq!(a.stats, b.stats, "{}", a.name);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits(), "{}", a.name);
+        }
+    }
+    // The exhaustive warm suite honours the same memo: every feasible
+    // runnable candidate is served or simulated, and a repeat serves all.
+    let mut ex_memo = EvalMemo::new();
+    let ex_cold = suite.explore(Objective::Time, 2);
+    let ex_first = suite.explore_warm(&mut ex_memo, Objective::Time, 2);
+    let ex_second = suite.explore_warm(&mut ex_memo, Objective::Time, 2);
+    for ((c, f), s) in ex_cold.iter().zip(&ex_first).zip(&ex_second) {
+        assert_eq!(c.points.len(), f.points.len(), "{}", c.name);
+        for (a, b) in c.points.iter().zip(&f.points) {
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "{}", c.name);
+        }
+        assert_eq!(s.stats.evaluated, 0, "{}: {:?}", c.name, s.stats);
+        assert_eq!(s.stats.memo_hits as usize, c.points.len(), "{}", c.name);
+        for (a, b) in s.points.iter().zip(&f.points) {
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits(), "{}", c.name);
+        }
+    }
+}
+
+#[test]
 fn mixed_pruned_enumeration_matches_the_exhaustive_candidate_set() {
     // On mixed spaces without dominated variants, the pruned candidate
     // list must equal the exhaustive enumeration, element for element —
