@@ -138,6 +138,12 @@ COMMANDS (one per paper experiment, plus utilities):
                                                                  else bound);
                                                                  --budget: winner-table axis for
                                                                  --boards)
+                 [--resume]                                      continue an interrupted warm
+                                                                 sweep from its <memo>.wal journal
+                                                                 and .ckpt order checkpoint
+                                                                 (requires --memo; final ranking
+                                                                 and memo are bit-identical to an
+                                                                 uninterrupted run)
   dse memo <stats|gc|compact> --memo m.json                     memo hygiene: inspect the
                  [--keep-contexts 16] [--keep-points N]          two-level layout, LRU-by-context
                  [--keep-kernels 256]                            eviction (gc), versioned rewrite
@@ -151,38 +157,104 @@ COMMANDS (one per paper experiment, plus utilities):
   cross-board    [--n 512]                                      ZC706 vs UltraScale+ decision
   bench-check    --baseline b.json --current c.json             gate BENCH_*.json against a
                  [--tolerance 0.2] [--strict-time]              checked-in baseline (CI)
+  fuzz           [memo-json|wal-replay|board-toml|all]          deterministic mutation fuzzing of
+                 [--iters 256] [--seed S] [--corpus dir]        the byte-ingesting parsers; exit 1
+                                                                 on any panic (graceful rejection
+                                                                 is a pass)
+  fault-recovery [--n 256] [--bs 64] [--workers N]              crash/resume study: interrupt a
+                                                                 journaled sweep at every round,
+                                                                 resume, verify bit-identity
   help                                                          this text
 
 COMMON OPTIONS:
-  --board <file.toml>   board description (default: built-in zynq706)
+  --board <file.toml>     board description (default: built-in zynq706)
+  --faults <spec[,spec]>  arm fault-injection sites for crash testing (also via the
+                          ZYNQ_FAULTS env var); spec: site[@N][#HEXTAG][!error|!panic|!abort],
+                          sites: memo.save memo.load wal.append wal.replay eval.point
+                          board.toml sweep.round
+
+EXIT CODES: 0 success; 1 usage or runtime error; 2 unknown command;
+            3 corrupt input file (bad board TOML / unreadable memo)
 ";
 
-/// Dispatch one CLI invocation; returns the process exit code.
+/// Marker wrapped around errors caused by a corrupt or invalid *input
+/// file* (board TOML, memo JSON), as opposed to a usage mistake. [`run`]
+/// maps these to exit code 3 so scripts and CI can tell "you typed it
+/// wrong" (exit 1) from "your file is bad" (exit 3) without parsing
+/// stderr.
+#[derive(Debug)]
+struct CorruptInput(anyhow::Error);
+
+impl std::fmt::Display for CorruptInput {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:#}", self.0)
+    }
+}
+
+impl std::error::Error for CorruptInput {}
+
+/// Tag an error as corrupt-input (exit code 3, see [`CorruptInput`]).
+fn corrupt_input(e: anyhow::Error) -> anyhow::Error {
+    anyhow::Error::new(CorruptInput(e))
+}
+
+/// Dispatch one CLI invocation; returns the process exit code: 0 on
+/// success, 2 for a missing/unknown command, 3 when an *input file* was
+/// rejected (corrupt board TOML or memo JSON), and `Err` — exit 1 via
+/// `main` — for usage and runtime errors.
 pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     let Some(cmd) = argv.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(2);
     };
     let args = Args::parse(&argv[1..]);
-    let board = board_from_args(&args)?;
+    // Fault injection (crash testing): `--faults` specs and the
+    // ZYNQ_FAULTS environment variable arm for the whole invocation; the
+    // guards disarm when the command returns.
+    anyhow::ensure!(
+        !args.has("faults") || !args.get_all("faults").is_empty(),
+        "--faults requires a spec (e.g. --faults sweep.round@2!error)"
+    );
+    let mut fault_guards: Vec<crate::util::faultpoint::Armed> = Vec::new();
+    for spec in args.get_all("faults") {
+        fault_guards.push(crate::util::faultpoint::arm(spec)?);
+    }
+    if let Some(guard) = crate::util::faultpoint::arm_from_env()? {
+        fault_guards.push(guard);
+    }
+    let code = run_cmd(cmd, &args);
+    drop(fault_guards);
+    match code {
+        Err(e) if e.is::<CorruptInput>() => {
+            eprintln!("error: {e:#}");
+            Ok(3)
+        }
+        other => other,
+    }
+}
+
+fn run_cmd(cmd: &str, args: &Args) -> anyhow::Result<i32> {
+    let board = board_from_args(args).map_err(corrupt_input)?;
     match cmd {
-        "sweep" => cmd_sweep(&args, &board),
+        "sweep" => cmd_sweep(args, &board),
         "dma" => cmd_dma(&board),
-        "analysis-time" => cmd_analysis_time(&args, &board),
-        "paraver" => cmd_paraver(&args, &board),
-        "graph" => cmd_graph(&args, &board),
-        "estimate" => cmd_estimate(&args, &board),
-        "trace" => cmd_trace(&args, &board),
-        "sim-trace" => cmd_sim_trace(&args, &board),
-        "hls" => cmd_hls(&args, &board),
-        "dse" => cmd_dse(&args, &board),
-        "energy" => cmd_energy(&args, &board),
-        "robustness" => cmd_robustness(&args, &board),
-        "analyze-prv" => cmd_analyze_prv(&args),
-        "lint" => cmd_lint(&args),
-        "measure" => cmd_measure(&args, &board),
-        "cross-board" => cmd_cross_board(&args),
-        "bench-check" => cmd_bench_check(&args),
+        "analysis-time" => cmd_analysis_time(args, &board),
+        "paraver" => cmd_paraver(args, &board),
+        "graph" => cmd_graph(args, &board),
+        "estimate" => cmd_estimate(args, &board),
+        "trace" => cmd_trace(args, &board),
+        "sim-trace" => cmd_sim_trace(args, &board),
+        "hls" => cmd_hls(args, &board),
+        "dse" => cmd_dse(args, &board),
+        "energy" => cmd_energy(args, &board),
+        "robustness" => cmd_robustness(args, &board),
+        "analyze-prv" => cmd_analyze_prv(args),
+        "lint" => cmd_lint(args),
+        "measure" => cmd_measure(args, &board),
+        "cross-board" => cmd_cross_board(args),
+        "bench-check" => cmd_bench_check(args),
+        "fuzz" => cmd_fuzz(args),
+        "fault-recovery" => cmd_fault_recovery(args, &board),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(0)
@@ -387,6 +459,21 @@ fn memo_path_from_args(args: &Args) -> anyhow::Result<Option<&str>> {
         .ok_or_else(|| anyhow::anyhow!("--memo requires a file path (e.g. --memo memo.json)"))
 }
 
+/// Print the journal-recovery report of
+/// [`EvalMemo::load_with_recovery`](crate::dse::EvalMemo::load_with_recovery),
+/// when an interrupted sweep left committed rounds behind.
+fn report_recovery(recovered: &Option<crate::dse::WalRecovery>, path: &std::path::Path) {
+    if let Some(rec) = recovered {
+        println!(
+            "recovered {} journaled points across {} contexts ({} committed rounds) from {}",
+            rec.n_points(),
+            rec.contexts.len(),
+            rec.rounds,
+            crate::dse::SweepJournal::wal_path(path).display(),
+        );
+    }
+}
+
 /// `--order fifo|bound|ranked`; defaults to `ranked` when a memo is in
 /// play (the warm path exists to tighten the incumbent early) and to the
 /// historical `bound` otherwise.
@@ -417,6 +504,10 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         w => w,
     };
     let order = order_from_args(args)?;
+    anyhow::ensure!(
+        !args.has("resume") || args.has("memo"),
+        "--resume requires --memo <file> (resume continues a journaled warm sweep)"
+    );
     if args.has("boards") {
         return cmd_dse_boards(args, objective, top, workers);
     }
@@ -434,7 +525,13 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             eprintln!("note: --memo implies the bound-guided pruned (warm) path");
         }
         let path = std::path::Path::new(memo_path);
-        let mut memo = crate::dse::EvalMemo::load_or_new(path)?;
+        let (mut memo, recovered) =
+            crate::dse::EvalMemo::load_with_recovery(path).map_err(corrupt_input)?;
+        report_recovery(&recovered, path);
+        // The session journals every evaluation round to `<memo>.wal` and
+        // checkpoints the candidate order, so a crash loses at most the
+        // in-flight round and `--resume` continues bit-identically.
+        let mut recovery = crate::dse::RecoverySession::open(path, recovered, args.has("resume"))?;
         // Prime the HLS cache from the level-1 kernel sub-memo first, so
         // kernels characterized by any earlier run — any problem size,
         // same board — skip the cost model.
@@ -446,7 +543,14 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             &memo,
         );
         let t0 = std::time::Instant::now();
-        let (points, stats) = ctx.explore_warm(&space, &mut memo, objective, workers, order);
+        let (points, stats) = ctx.explore_warm_recoverable(
+            &space,
+            &mut memo,
+            objective,
+            workers,
+            order,
+            &mut recovery,
+        )?;
         let secs = t0.elapsed().as_secs_f64();
         memo.save(path)?;
         print!("{}", crate::dse::render(&points, top, objective));
@@ -537,10 +641,20 @@ fn cmd_dse_suite(
         .into_iter()
         .map(|app| Ok((app, build_app_program(app, n, bs, board)?)))
         .collect::<anyhow::Result<_>>()?;
+    if args.has("resume") {
+        eprintln!(
+            "note: --suite replays any journal on load but sweeps without checkpoints; \
+             --resume has no further effect"
+        );
+    }
     let mut memo_state: Option<(std::path::PathBuf, crate::dse::EvalMemo)> = match memo_arg {
         Some(p) => {
             let path = std::path::PathBuf::from(p);
-            let memo = crate::dse::EvalMemo::load_or_new(&path)?;
+            // Journal replay only: salvage points committed by an
+            // interrupted recoverable sweep over the same memo file.
+            let (memo, recovered) =
+                crate::dse::EvalMemo::load_with_recovery(&path).map_err(corrupt_input)?;
+            report_recovery(&recovered, &path);
             Some((path, memo))
         }
         None => None,
@@ -631,10 +745,14 @@ fn cmd_dse_boards(
     // eval memo: level-2 hits skip simulation, the level-1 kernel sub-memo
     // primes HLS caches and seeds sibling-board ordering priors.
     let memo_arg = memo_path_from_args(args)?;
+    let mut recovered: Option<crate::dse::WalRecovery> = None;
     let mut memo_state: Option<(std::path::PathBuf, crate::dse::EvalMemo)> = match memo_arg {
         Some(p) => {
             let path = std::path::PathBuf::from(p);
-            let memo = crate::dse::EvalMemo::load_or_new(&path)?;
+            let (memo, rec) =
+                crate::dse::EvalMemo::load_with_recovery(&path).map_err(corrupt_input)?;
+            report_recovery(&rec, &path);
+            recovered = rec;
             Some((path, memo))
         }
         None => None,
@@ -659,7 +777,13 @@ fn cmd_dse_boards(
     let results = match mode {
         "warm" => {
             let (path, memo) = memo_state.as_mut().expect("warm mode implies a memo");
-            let results = sweep.explore_pruned_warm(memo, objective, workers);
+            // Entries journal their rounds to `<memo>.wal`; `--resume`
+            // restores the interrupted entry's checkpointed order so the
+            // finished axis is bit-identical to an uninterrupted run.
+            let mut recovery =
+                crate::dse::RecoverySession::open(path, recovered.take(), args.has("resume"))?;
+            let results =
+                sweep.explore_pruned_warm_recoverable(memo, objective, workers, &mut recovery)?;
             memo.save(path)?;
             let hits: u64 = results.iter().map(|r| r.stats.memo_hits).sum();
             let kernel_hits: u64 = results.iter().map(|r| r.stats.kernel_hits).sum();
@@ -750,7 +874,7 @@ fn cmd_dse_memo(args: &Args) -> anyhow::Result<i32> {
     let path = std::path::PathBuf::from(path);
     anyhow::ensure!(path.exists(), "{}: no such memo file", path.display());
     let before = std::fs::metadata(&path)?.len();
-    let mut memo = crate::dse::EvalMemo::load_or_new(&path)?;
+    let mut memo = crate::dse::EvalMemo::load_or_new(&path).map_err(corrupt_input)?;
     match action {
         "stats" => {
             print!("{}", memo.stats().render());
@@ -820,6 +944,57 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<i32> {
         if report.ok() { "OK" } else { "REGRESSION" }
     );
     Ok(if report.ok() { 0 } else { 1 })
+}
+
+/// `fuzz [target]`: deterministic in-process mutation fuzzing of the
+/// parsers that ingest external bytes — memo JSON, WAL journals, board
+/// TOML (see [`crate::fuzz`]). Every mutated input must be either
+/// accepted or rejected with an error; a panic is a bug and exits 1 with
+/// the reproducing seed printed.
+fn cmd_fuzz(args: &Args) -> anyhow::Result<i32> {
+    let target = args.positional.first().map(String::as_str).unwrap_or("all");
+    let iters = args.u64_or("iters", 256)?;
+    let seed = args.u64_or("seed", 0xF0CC)?;
+    let corpus = args.get("corpus").map(std::path::PathBuf::from);
+    let targets: Vec<crate::fuzz::FuzzTarget> = if target == "all" {
+        crate::fuzz::FuzzTarget::ALL.to_vec()
+    } else {
+        vec![crate::fuzz::FuzzTarget::parse(target).ok_or_else(|| {
+            anyhow::anyhow!("unknown fuzz target '{target}' (memo-json|wal-replay|board-toml|all)")
+        })?]
+    };
+    let mut failures = 0usize;
+    for t in targets {
+        let report = crate::fuzz::run_target(t, corpus.as_deref(), iters, seed)?;
+        print!("{}", report.render());
+        failures += report.failures.len();
+    }
+    Ok(if failures == 0 { 0 } else { 1 })
+}
+
+/// `fault-recovery`: the crash/recovery acceptance study — interrupt a
+/// journaled warm sweep at every round with an injected fault, resume
+/// it, and verify the final ranking and saved memo are bit-identical to
+/// the uninterrupted run (see [`crate::experiments::fault_recovery`]).
+fn cmd_fault_recovery(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let n = args.u64_or("n", 256)?;
+    let bs = args.u64_or("bs", 64)?;
+    let workers = match args.u64_or("workers", 0)? as usize {
+        0 => crate::dse::default_workers(),
+        w => w,
+    };
+    let rows = crate::experiments::fault_recovery::study(n, bs, board, workers)?;
+    print!("{}", crate::experiments::fault_recovery::render(&rows));
+    let ok = rows.iter().all(|r| r.identical);
+    println!(
+        "fault-recovery: {}",
+        if ok {
+            "all interrupted sweeps recovered bit-identically"
+        } else {
+            "MISMATCH — an interrupted sweep diverged after resume"
+        }
+    );
+    Ok(if ok { 0 } else { 1 })
 }
 
 fn cmd_energy(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
@@ -1252,6 +1427,62 @@ mod tests {
         assert_eq!(run(&argv(&cmd)).unwrap(), 1);
         assert!(run(&argv("bench-check --baseline missing.json")).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dse_resume_requires_memo() {
+        assert!(run(&argv("dse --app matmul --n 256 --resume")).is_err());
+        assert!(run(&argv("dse --boards zynq702 --n 256 --resume")).is_err());
+    }
+
+    #[test]
+    fn dse_resume_flag_runs_clean_without_a_journal() {
+        let dir = std::env::temp_dir().join("zynq_cli_resume_clean");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("memo.json");
+        std::fs::remove_file(&memo).ok();
+        let cmd = format!(
+            "dse --app matmul --n 256 --bs 64 --workers 2 --top 3 --resume --memo {}",
+            memo.display()
+        );
+        // No journal or checkpoint exists: --resume degrades to a plain
+        // warm run, twice (the second is all memo hits).
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        assert!(memo.exists());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        // A successful save cleans up both sidecars.
+        assert!(!dir.join("memo.json.wal").exists());
+        assert!(!dir.join("memo.json.ckpt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_board_toml_exits_3() {
+        let dir = std::env::temp_dir().join("zynq_cli_badboard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("board.toml");
+        std::fs::write(&path, "this is { not [ toml").unwrap();
+        let cmd = format!("dma --board {}", path.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faults_flag_usage_errors() {
+        // Bare --faults and malformed specs are usage errors (exit 1 via
+        // Err), not silent no-ops.
+        assert!(run(&argv("dma --faults")).is_err());
+        assert!(run(&argv("dma --faults site@x")).is_err());
+        // A well-formed spec for a site that is never hit is harmless.
+        assert_eq!(run(&argv("dma --faults cli.fictional.site!error")).unwrap(), 0);
+    }
+
+    #[test]
+    fn fuzz_command_smoke() {
+        assert_eq!(run(&argv("fuzz memo-json --iters 16 --seed 7")).unwrap(), 0);
+        assert_eq!(run(&argv("fuzz wal-replay --iters 16 --seed 7")).unwrap(), 0);
+        assert_eq!(run(&argv("fuzz board-toml --iters 16 --seed 7")).unwrap(), 0);
+        assert!(run(&argv("fuzz bogus-target")).is_err());
     }
 
     #[test]

@@ -182,12 +182,23 @@ impl BoardConfig {
     }
 
     /// Parse from TOML text; unspecified keys keep the zynq706 defaults.
+    /// Every numeric field is validated ([`BoardConfig::validate`]) so a
+    /// bad board file is rejected here with the offending field named,
+    /// not discovered as nonsense estimates deep inside a sweep.
     pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        crate::util::faultpoint::hit("board.toml")?;
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let d = Self::zynq706();
-        Ok(Self {
+        // `smp.cores` is range-checked on the raw integer: a plain
+        // `as u32` cast would wrap a negative count into a huge one.
+        let smp_cores = doc.i64_or("smp.cores", d.smp_cores as i64);
+        anyhow::ensure!(
+            (1..=1024).contains(&smp_cores),
+            "board config field 'smp.cores': must be in 1..=1024, got {smp_cores}"
+        );
+        let cfg = Self {
             name: doc.str_or("name", &d.name),
-            smp_cores: doc.i64_or("smp.cores", d.smp_cores as i64) as u32,
+            smp_cores: smp_cores as u32,
             smp_freq_mhz: doc.f64_or("smp.freq_mhz", d.smp_freq_mhz),
             fabric_freq_mhz: doc.f64_or("fabric.freq_mhz", d.fabric_freq_mhz),
             dma_in_scales: doc.bool_or("dma.in_scales", d.dma_in_scales),
@@ -208,7 +219,53 @@ impl BoardConfig {
                 jitter_cv: doc.f64_or("emu.jitter_cv", d.emu.jitter_cv),
                 seed: doc.i64_or("emu.seed", d.emu.seed as i64) as u64,
             },
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate every numeric field. The cost models divide by
+    /// frequencies, bandwidths and cache sizes, so a NaN, negative or
+    /// zero value would surface as nonsense estimates (or a panic) far
+    /// from its source; rejecting at ingestion names the offending field
+    /// instead. The built-in presets all pass.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        fn positive(field: &str, v: f64) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "board config field '{field}': must be finite and > 0, got {v}"
+            );
+            Ok(())
+        }
+        fn non_negative(field: &str, v: f64) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "board config field '{field}': must be finite and >= 0, got {v}"
+            );
+            Ok(())
+        }
+        anyhow::ensure!(!self.name.is_empty(), "board config field 'name': must not be empty");
+        anyhow::ensure!(
+            (1..=1024).contains(&self.smp_cores),
+            "board config field 'smp_cores': must be in 1..=1024, got {}",
+            self.smp_cores
+        );
+        positive("smp_freq_mhz", self.smp_freq_mhz)?;
+        positive("fabric_freq_mhz", self.fabric_freq_mhz)?;
+        positive("dma_bw_mbps", self.dma_bw_mbps)?;
+        positive("smp_flops_per_cycle", self.smp_flops_per_cycle)?;
+        positive("smp_divsqrt_penalty", self.smp_divsqrt_penalty)?;
+        positive("smp_dp_penalty", self.smp_dp_penalty)?;
+        positive("smp_l1_kb", self.smp_l1_kb)?;
+        non_negative("dma_submit_us", self.dma_submit_us)?;
+        non_negative("task_creation_us", self.task_creation_us)?;
+        non_negative("smp_cache_alpha", self.smp_cache_alpha)?;
+        non_negative("emu.contention_alpha", self.emu.contention_alpha)?;
+        non_negative("emu.coherence_us", self.emu.coherence_us)?;
+        non_negative("emu.pinning_us_per_kb", self.emu.pinning_us_per_kb)?;
+        non_negative("emu.smp_mem_factor", self.emu.smp_mem_factor)?;
+        non_negative("emu.jitter_cv", self.emu.jitter_cv)?;
+        Ok(())
     }
 
     /// Serialize to TOML (round-trips through `from_toml`).
@@ -412,6 +469,38 @@ mod tests {
         let b = BoardConfig::from_toml("[dma]\nbw_mbps = 600.0\n").unwrap();
         assert_eq!(b.dma_bw_mbps, 600.0);
         assert_eq!(b.smp_cores, 2); // default retained
+    }
+
+    #[test]
+    fn board_validation_names_the_offending_field() {
+        for (toml, field) in [
+            ("[fabric]\nfreq_mhz = -125.0\n", "fabric_freq_mhz"),
+            ("[fabric]\nfreq_mhz = 0.0\n", "fabric_freq_mhz"),
+            ("[dma]\nbw_mbps = 0.0\n", "dma_bw_mbps"),
+            ("[smp]\ncores = -2\n", "smp.cores"),
+            ("[smp]\ncores = 0\n", "smp.cores"),
+            ("[smp]\nl1_kb = -32.0\n", "smp_l1_kb"),
+            ("[runtime]\ntask_creation_us = -1.0\n", "task_creation_us"),
+            ("[emu]\njitter_cv = -0.5\n", "emu.jitter_cv"),
+            ("name = \"\"\n", "name"),
+        ] {
+            let err = BoardConfig::from_toml(toml).unwrap_err();
+            assert!(err.to_string().contains(field), "{toml:?}: {err}");
+        }
+        // Non-finite values injected past the parser are still caught.
+        let mut b = BoardConfig::zynq706();
+        b.smp_freq_mhz = f64::NAN;
+        assert!(b.validate().unwrap_err().to_string().contains("smp_freq_mhz"));
+        let mut b = BoardConfig::zynq706();
+        b.dma_submit_us = f64::INFINITY;
+        assert!(b.validate().unwrap_err().to_string().contains("dma_submit_us"));
+    }
+
+    #[test]
+    fn builtin_presets_validate() {
+        BoardConfig::zynq706().validate().unwrap();
+        BoardConfig::zynq702().validate().unwrap();
+        BoardConfig::zynq_ultrascale().validate().unwrap();
     }
 
     #[test]

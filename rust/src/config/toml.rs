@@ -347,6 +347,27 @@ weights = [1, 2.5]
     }
 
     #[test]
+    fn hostile_inputs_error_instead_of_panicking() {
+        // Fuzz-derived shapes: every one must parse or error, never panic.
+        for s in [
+            "=",
+            "[",
+            "]",
+            "x =",
+            "x = [1,",
+            "x = \"",
+            "x = \"\\q\"",
+            "é = ☃",
+            "x = [\"a\", 1]",
+            "\u{0}\u{0}",
+            "x = \"unterminated",
+            "[s]\n= 1",
+        ] {
+            let _ = parse(s);
+        }
+    }
+
+    #[test]
     fn ints_vs_floats() {
         let doc = parse("i = 42\nf = 42.0\nn = -3").unwrap();
         assert_eq!(doc.get("i"), Some(&Item::Int(42)));

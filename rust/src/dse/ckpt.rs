@@ -1,0 +1,368 @@
+//! Sweep checkpoint/resume — the `.ckpt` sidecar of a recoverable sweep.
+//!
+//! A recoverable warm sweep (`prune::explore_pruned_warm_recoverable` via
+//! [`RecoverySession`]) persists two sidecars next to the memo file: the
+//! append-only `.wal` journal of evaluated points
+//! ([`SweepJournal`](super::SweepJournal)) and this module's `.ckpt`
+//! checkpoint, written atomically once per sweep — after candidate
+//! ordering, before the first evaluation round. The checkpoint pins the
+//! one piece of sweep state a resume cannot re-derive: the **candidate
+//! processing order**. A resumed run serves the journal-restored points as
+//! memo hits, so a freshly built order would exclude them and shift every
+//! round boundary — and with it which candidates the frozen-frontier bound
+//! cut skips, i.e. the returned ranking. Replaying the checkpointed order
+//! (done candidates skip their slot without evaluating) keeps the resumed
+//! run's final ranking and saved memo bit-identical to an uninterrupted
+//! one.
+//!
+//! Each checkpointed job carries a [`space_fingerprint`] of everything the
+//! order was derived from; a resume whose fingerprint differs (changed
+//! space, objective, order mode, board, …) silently falls back to a fresh
+//! order instead of replaying a stale one. Both sidecars are deleted by
+//! the atomic [`EvalMemo::save`](super::EvalMemo::save) that makes their
+//! contents durable in the memo proper.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::fnv::Fnv;
+use crate::util::json::{obj, Value};
+use crate::util::persist;
+
+use super::warm::{SweepJournal, WalRecovery};
+use super::{DseSpace, Objective, OrderMode};
+
+/// Schema version of the `.ckpt` sidecar.
+pub const CKPT_SCHEMA_VERSION: i64 = 1;
+
+/// Fingerprint of one sweep job's *shape*: everything that determines the
+/// candidate list and its processing order — the memo context fingerprint
+/// (program + board + part + cost-model constants,
+/// [`context_fingerprint`](super::warm::context_fingerprint)), the DSE
+/// space, the objective and the order mode. A resumed sweep only replays a
+/// checkpointed order when this fingerprint matches, so a checkpoint left
+/// by a different query can never silently reorder (or truncate) a sweep.
+pub fn space_fingerprint(
+    ctx_fp: u64,
+    space: &DseSpace,
+    objective: Objective,
+    order: OrderMode,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(CKPT_SCHEMA_VERSION as u64);
+    h.u64(ctx_fp);
+    h.bool(space.mixed);
+    h.u64(space.kernels.len() as u64);
+    for ks in &space.kernels {
+        h.str(&ks.kernel);
+        h.u64(ks.unrolls.len() as u64);
+        for &u in &ks.unrolls {
+            h.u64(u as u64);
+        }
+        h.u64(ks.max_instances as u64);
+        h.bool(ks.try_smp);
+    }
+    h.u64(match objective {
+        Objective::Time => 0,
+        Objective::Energy => 1,
+        Objective::Edp => 2,
+    });
+    h.u64(match order {
+        OrderMode::Fifo => 0,
+        OrderMode::BoundAsc => 1,
+        OrderMode::Ranked => 2,
+    });
+    h.finish()
+}
+
+/// One job's checkpointed processing order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CheckpointJob {
+    /// [`space_fingerprint`] of the job at checkpoint time.
+    pub space_fp: u64,
+    /// Candidate indices in processing order (see
+    /// [`OrderMode`](super::OrderMode)): exactly `JobState::order` of the
+    /// interrupted run, including candidates that have since been
+    /// journal-restored (they are skipped, not re-evaluated, on resume).
+    pub order: Vec<usize>,
+}
+
+/// The parsed `.ckpt` document: per-job candidate orders of an in-flight
+/// recoverable sweep, in sweep input order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SweepCheckpoint {
+    /// Checkpointed jobs, in sweep input order.
+    pub jobs: Vec<CheckpointJob>,
+}
+
+impl SweepCheckpoint {
+    /// Path of the checkpoint sidecar of a memo file.
+    pub fn ckpt_path(memo_path: &Path) -> PathBuf {
+        PathBuf::from(format!("{}.ckpt", memo_path.display()))
+    }
+
+    /// Serialize to the on-disk JSON document.
+    pub fn to_json(&self) -> String {
+        let jobs: Vec<Value> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                obj(vec![
+                    ("space_fp", format!("{:016x}", j.space_fp).into()),
+                    (
+                        "order",
+                        Value::Arr(j.order.iter().map(|&i| Value::Int(i as i64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", CKPT_SCHEMA_VERSION.into()),
+            ("estimator", env!("CARGO_PKG_VERSION").into()),
+            ("jobs", Value::Arr(jobs)),
+        ])
+        .to_json()
+    }
+
+    /// Parse a checkpoint document; errors name the offending field.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = crate::util::json::parse(text)
+            .map_err(|e| anyhow::anyhow!("checkpoint: {e}"))?;
+        let ver = v.get("version").and_then(Value::as_i64).unwrap_or(-1);
+        anyhow::ensure!(
+            ver == CKPT_SCHEMA_VERSION,
+            "checkpoint schema v{ver} != v{CKPT_SCHEMA_VERSION}"
+        );
+        let est = v.get("estimator").and_then(Value::as_str).unwrap_or("");
+        anyhow::ensure!(
+            est == env!("CARGO_PKG_VERSION"),
+            "checkpoint written by estimator v{est}, this is v{}",
+            env!("CARGO_PKG_VERSION")
+        );
+        let jobs_v = v
+            .get("jobs")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint misses 'jobs'"))?;
+        let mut jobs = Vec::with_capacity(jobs_v.len());
+        for (ji, j) in jobs_v.iter().enumerate() {
+            let fp_s = j
+                .get("space_fp")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint job {ji} misses 'space_fp'"))?;
+            let space_fp = u64::from_str_radix(fp_s, 16)
+                .map_err(|_| anyhow::anyhow!("checkpoint job {ji}: bad space_fp '{fp_s}'"))?;
+            let order_v = j
+                .get("order")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint job {ji} misses 'order'"))?;
+            let mut order = Vec::with_capacity(order_v.len());
+            for o in order_v {
+                let i = o
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint job {ji}: bad order entry"))?;
+                order.push(i as usize);
+            }
+            jobs.push(CheckpointJob { space_fp, order });
+        }
+        Ok(Self { jobs })
+    }
+}
+
+/// The IO half of a recoverable sweep: the append-only
+/// [`SweepJournal`](super::SweepJournal), what a previous journal replay
+/// restored into the loaded memo, and — on resume — the interrupted run's
+/// [`SweepCheckpoint`].
+pub struct RecoverySession {
+    journal: SweepJournal,
+    ckpt_path: PathBuf,
+    recovered: WalRecovery,
+    checkpoint: Option<SweepCheckpoint>,
+}
+
+impl RecoverySession {
+    /// Open a recovery session next to `memo_path`. `recovered` is what
+    /// [`EvalMemo::load_with_recovery`](super::EvalMemo::load_with_recovery)
+    /// replayed from the journal (if anything); with `resume` the `.ckpt`
+    /// sidecar is additionally loaded so the sweep replays the interrupted
+    /// run's candidate orders. A missing checkpoint is not an error (a
+    /// crash may predate the first checkpoint write); a corrupt one is
+    /// quarantined and ignored.
+    pub fn open(
+        memo_path: &Path,
+        recovered: Option<WalRecovery>,
+        resume: bool,
+    ) -> anyhow::Result<Self> {
+        let ckpt_path = SweepCheckpoint::ckpt_path(memo_path);
+        let mut checkpoint = None;
+        if resume {
+            if let Ok(text) = std::fs::read_to_string(&ckpt_path) {
+                match SweepCheckpoint::from_json(&text) {
+                    Ok(c) => checkpoint = Some(c),
+                    Err(e) => {
+                        let note = match persist::quarantine(&ckpt_path) {
+                            Ok(bak) => format!("quarantined to {}", bak.display()),
+                            Err(qe) => format!("quarantine failed: {qe}"),
+                        };
+                        eprintln!(
+                            "warning: corrupt sweep checkpoint {}: {e:#}; {note}; \
+                             resuming without order replay",
+                            ckpt_path.display()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(Self {
+            journal: SweepJournal::open(memo_path)?,
+            ckpt_path,
+            recovered: recovered.unwrap_or_default(),
+            checkpoint,
+        })
+    }
+
+    /// What the journal replay restored into the loaded memo.
+    pub fn recovered(&self) -> &WalRecovery {
+        &self.recovered
+    }
+
+    /// The journal to log context snapshots, points and round commits to.
+    pub fn journal(&mut self) -> &mut SweepJournal {
+        &mut self.journal
+    }
+
+    /// The checkpointed candidate order of job `ji` — only when a resume
+    /// checkpoint is loaded *and* its job fingerprint matches (a changed
+    /// space, objective or order mode falls back to a fresh order).
+    pub fn checkpoint_order(&self, ji: usize, space_fp: u64) -> Option<&[usize]> {
+        let job = self.checkpoint.as_ref()?.jobs.get(ji)?;
+        (job.space_fp == space_fp).then_some(job.order.as_slice())
+    }
+
+    /// Atomically persist the per-job `(space fingerprint, order)` pairs as
+    /// the sweep's checkpoint. Called once per sweep — after ordering,
+    /// before the first round — so a crash at any later point can replay
+    /// the exact round boundaries.
+    pub fn save_orders(&mut self, orders: &[(u64, &[usize])]) -> anyhow::Result<()> {
+        let ckpt = SweepCheckpoint {
+            jobs: orders
+                .iter()
+                .map(|&(space_fp, order)| CheckpointJob {
+                    space_fp,
+                    order: order.to_vec(),
+                })
+                .collect(),
+        };
+        persist::write_atomic(&self.ckpt_path, ckpt.to_json().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::KernelSpace;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("zynq_ckpt_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn small_space() -> DseSpace {
+        DseSpace {
+            kernels: vec![KernelSpace {
+                kernel: "mm".into(),
+                unrolls: vec![8, 16],
+                max_instances: 2,
+                try_smp: true,
+            }],
+            mixed: false,
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_json() {
+        let ckpt = SweepCheckpoint {
+            jobs: vec![
+                CheckpointJob {
+                    space_fp: 0xdead_beef_0123_4567,
+                    order: vec![3, 0, 2, 1],
+                },
+                CheckpointJob {
+                    space_fp: 7,
+                    order: vec![],
+                },
+            ],
+        };
+        let back = SweepCheckpoint::from_json(&ckpt.to_json()).unwrap();
+        assert_eq!(back, ckpt);
+    }
+
+    #[test]
+    fn checkpoint_rejects_schema_and_field_corruption() {
+        assert!(SweepCheckpoint::from_json("not json").is_err());
+        assert!(SweepCheckpoint::from_json("{\"version\": 999}").is_err());
+        let doc = format!(
+            "{{\"version\": {CKPT_SCHEMA_VERSION}, \"estimator\": \"{}\", \
+             \"jobs\": [{{\"space_fp\": \"xyz\", \"order\": []}}]}}",
+            env!("CARGO_PKG_VERSION")
+        );
+        let err = SweepCheckpoint::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("space_fp"), "{err}");
+    }
+
+    #[test]
+    fn space_fingerprint_separates_queries() {
+        let space = small_space();
+        let base = space_fingerprint(1, &space, Objective::Time, OrderMode::BoundAsc);
+        assert_eq!(
+            base,
+            space_fingerprint(1, &space, Objective::Time, OrderMode::BoundAsc),
+            "fingerprint must be stable"
+        );
+        assert_ne!(base, space_fingerprint(2, &space, Objective::Time, OrderMode::BoundAsc));
+        assert_ne!(base, space_fingerprint(1, &space, Objective::Edp, OrderMode::BoundAsc));
+        assert_ne!(base, space_fingerprint(1, &space, Objective::Time, OrderMode::Ranked));
+        let mut wider = small_space();
+        wider.kernels[0].unrolls.push(32);
+        assert_ne!(base, space_fingerprint(1, &wider, Objective::Time, OrderMode::BoundAsc));
+    }
+
+    #[test]
+    fn session_replays_orders_only_on_fingerprint_match() {
+        let d = tmpdir("session");
+        let memo_path = d.join("memo.json");
+        let mut s = RecoverySession::open(&memo_path, None, false).unwrap();
+        s.save_orders(&[(11, &[2usize, 0, 1][..]), (22, &[0usize][..])])
+            .unwrap();
+        drop(s);
+
+        let resumed = RecoverySession::open(&memo_path, None, true).unwrap();
+        assert_eq!(resumed.checkpoint_order(0, 11), Some(&[2usize, 0, 1][..]));
+        assert_eq!(resumed.checkpoint_order(1, 22), Some(&[0usize][..]));
+        assert_eq!(resumed.checkpoint_order(0, 99), None, "fingerprint mismatch");
+        assert_eq!(resumed.checkpoint_order(2, 11), None, "no such job");
+        drop(resumed);
+
+        let fresh = RecoverySession::open(&memo_path, None, false).unwrap();
+        assert_eq!(
+            fresh.checkpoint_order(0, 11),
+            None,
+            "checkpoints replay only on explicit resume"
+        );
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn session_quarantines_corrupt_checkpoint_on_resume() {
+        let d = tmpdir("corrupt");
+        let memo_path = d.join("memo.json");
+        let ckpt_path = SweepCheckpoint::ckpt_path(&memo_path);
+        std::fs::write(&ckpt_path, "torn{garbage").unwrap();
+        let s = RecoverySession::open(&memo_path, None, true).unwrap();
+        assert_eq!(s.checkpoint_order(0, 0), None);
+        assert!(!ckpt_path.exists(), "corrupt checkpoint moved aside");
+        let bak = PathBuf::from(format!("{}.bak.1", ckpt_path.display()));
+        assert_eq!(std::fs::read(&bak).unwrap(), b"torn{garbage");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -254,6 +254,45 @@ impl<'p> CrossBoardSweep<'p> {
         }
         results
     }
+
+    /// [`CrossBoardSweep::explore_pruned_warm`] with crash recovery:
+    /// entries run sequentially through one shared
+    /// [`RecoverySession`](super::RecoverySession), each journaling its
+    /// rounds to the memo's `.wal` sidecar and checkpointing its candidate
+    /// order before its first round. After an interruption, entries that
+    /// had completed re-run as pure journal-restored memo hits, the
+    /// in-flight entry resumes with its checkpointed order, and untouched
+    /// entries run fresh — the per-entry rankings and the subsequently
+    /// saved memo are bit-identical to an uninterrupted axis sweep (see
+    /// `dse::ckpt`).
+    pub fn explore_pruned_warm_recoverable(
+        &self,
+        memo: &mut EvalMemo,
+        objective: Objective,
+        workers: usize,
+        recovery: &mut super::ckpt::RecoverySession,
+    ) -> anyhow::Result<Vec<CrossBoardResult>> {
+        let mut results = Vec::new();
+        for (entry, (board_name, app_name, _group)) in self.suite.apps().iter().zip(&self.keys) {
+            let (points, stats) = super::prune::explore_pruned_warm_recoverable(
+                &[(&entry.ctx, &entry.space)],
+                Some(&mut *memo),
+                OrderMode::Ranked,
+                objective,
+                workers,
+                Some(&mut *recovery),
+            )?
+            .pop()
+            .expect("one input yields one output");
+            results.push(CrossBoardResult {
+                board: board_name.clone(),
+                app: app_name.clone(),
+                points,
+                stats,
+            });
+        }
+        Ok(results)
+    }
 }
 
 /// Build one program per (board, app) pair of the axis — board-major, the

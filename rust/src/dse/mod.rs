@@ -27,6 +27,7 @@
 //! for the CLI/tests; long-lived callers should build a `SweepContext`
 //! themselves and reuse it.
 
+pub mod ckpt;
 pub mod cross;
 pub mod prune;
 pub mod sweep;
@@ -38,13 +39,14 @@ use crate::config::{BoardConfig, CoDesign};
 use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
 
+pub use ckpt::{CheckpointJob, RecoverySession, SweepCheckpoint};
 pub use cross::{
     board_winner_table, board_winner_table_for, BudgetAxis, BudgetRow, CrossBoardResult,
     CrossBoardSweep,
 };
 pub use prune::{enumerate_pruned, OrderMode, PruneStats};
 pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
-pub use warm::{EvalMemo, GcReport, MemoContextStat, MemoStats};
+pub use warm::{EvalMemo, GcReport, MemoContextStat, MemoStats, SweepJournal, WalRecovery};
 
 /// Exploration space for one kernel.
 #[derive(Clone, Debug)]
@@ -208,6 +210,41 @@ impl DsePoint {
             Objective::Time => self.est_ms,
             Objective::Energy => self.energy_j,
             Objective::Edp => self.edp,
+        }
+    }
+}
+
+/// Outcome of one candidate evaluation in a pruned sweep round.
+///
+/// The sweep engine evaluates every point under `catch_unwind`: a
+/// panicking candidate is recorded as [`PointOutcome::Poisoned`] — counted
+/// in [`PruneStats::poisoned`], excluded from bound frontiers, rankings
+/// and the persistent memo — instead of aborting the whole sweep. Whether
+/// a candidate poisons is a deterministic property of the point itself
+/// (never of thread scheduling), so the poisoned set is identical for any
+/// worker count.
+#[derive(Clone, Debug)]
+pub enum PointOutcome {
+    /// The point evaluated normally.
+    Evaluated(DsePoint),
+    /// The evaluation panicked and was quarantined.
+    Poisoned,
+}
+
+impl PointOutcome {
+    /// The evaluated point, if the evaluation did not panic.
+    pub fn point(&self) -> Option<&DsePoint> {
+        match self {
+            PointOutcome::Evaluated(p) => Some(p),
+            PointOutcome::Poisoned => None,
+        }
+    }
+
+    /// Consume the outcome into its evaluated point, if any.
+    pub fn into_point(self) -> Option<DsePoint> {
+        match self {
+            PointOutcome::Evaluated(p) => Some(p),
+            PointOutcome::Poisoned => None,
         }
     }
 }

@@ -87,9 +87,10 @@ use crate::hls::Resources;
 use crate::metrics::bounds::bounds;
 use crate::sim::time::{ps_to_ms, Ps};
 
+use super::ckpt::RecoverySession;
 use super::sweep::SweepContext;
 use super::warm::EvalMemo;
-use super::{describe, DsePoint, DseSpace, KernelSpace, Objective};
+use super::{describe, DsePoint, DseSpace, KernelSpace, Objective, PointOutcome};
 
 /// How the bound-guided rounds order their candidate stream. Ordering
 /// changes *when* a candidate is considered — hence how early the
@@ -204,6 +205,13 @@ pub struct PruneStats {
     /// rather than their own cheap rank features. Ordering only — never a
     /// cut source. Always zero without a memo.
     pub prior_ordered: u64,
+    /// Candidates whose evaluation **panicked** and was quarantined by the
+    /// worker-isolation layer ([`PointOutcome::Poisoned`]): they enter no
+    /// frontier, no ranking and no memo, and — because a panic is a
+    /// deterministic property of the point, not of scheduling — the
+    /// poisoned set is identical for any worker count. Non-zero only under
+    /// injected faults (`eval.point`) or genuine model bugs.
+    pub poisoned: u64,
 }
 
 impl PruneStats {
@@ -237,9 +245,15 @@ impl PruneStats {
         } else {
             String::new()
         };
+        let poisoned = if self.poisoned > 0 {
+            format!(", poisoned {}", self.poisoned)
+        } else {
+            String::new()
+        };
         format!(
             "space {} -> feasible {} -> enumerated {} -> evaluated {}{memo}{kernel} \
-             (cuts: resource {}, dominance {} [{} variants], bound {}{seeded}{global}, unrunnable {})",
+             (cuts: resource {}, dominance {} [{} variants], bound {}{seeded}{global}, \
+             unrunnable {}{poisoned})",
             self.space_points,
             self.feasible_points,
             self.enumerated(),
@@ -683,7 +697,7 @@ struct JobState<'a, 'p> {
     /// group id also consult — and feed — a shared group frontier. `None`
     /// keeps the job fully self-contained (per-job losslessness).
     group: Option<usize>,
-    evaluated: Vec<(usize, DsePoint)>,
+    evaluated: Vec<(usize, PointOutcome)>,
     stats: PruneStats,
     /// Candidates already satisfied from the eval memo (warm sweeps):
     /// excluded from bounds, ordering and evaluation.
@@ -735,7 +749,21 @@ fn build_order(job: &mut JobState<'_, '_>, objective: Objective, mode: OrderMode
 /// per-worker, per-job simulators. `slots` outlives the rounds, so each
 /// worker's simulator buffers are reused across every round *and* every
 /// application — one shared pool for the whole (suite) sweep.
-fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], workers: usize) {
+///
+/// Every evaluation runs panic-isolated: a panicking candidate poisons
+/// only itself — the worker's simulator pool is discarded (a panic can
+/// leave a simulator mid-run) and rebuilt lazily, the candidate is
+/// recorded as [`PointOutcome::Poisoned`] and the round goes on.
+/// `on_round`, when present, is called once per non-empty round with the
+/// merged results sorted by `(job, candidate)` index — deterministic for
+/// any worker count — after the frontiers thawed; an error from the
+/// callback aborts the sweep (the recoverable path surfaces
+/// journal-commit failures here).
+fn run_rounds<'a, 'p>(
+    jobs: &mut [JobState<'a, 'p>],
+    workers: usize,
+    mut on_round: Option<&mut dyn FnMut(&[(usize, usize, DsePoint)]) -> anyhow::Result<()>>,
+) -> anyhow::Result<()> {
     // Shared incumbent frontiers of the groups (empty when no job is
     // grouped). Like the per-job frontiers they are only thawed at round
     // barriers, and a frontier's content is the unique Pareto set of the
@@ -763,6 +791,15 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], workers: usize) {
             let end = (job.cursor + ROUND_CHUNK).min(job.order.len());
             for oi in job.cursor..end {
                 let ci = job.order[oi];
+                // A resumed sweep replays the interrupted run's
+                // checkpointed order, in which journal-restored candidates
+                // still occupy their original slots: they are done (served
+                // as memo hits, no bounds computed), so they consume their
+                // position — keeping every round boundary where it was —
+                // without being re-evaluated.
+                if job.done[ci] {
+                    continue;
+                }
                 let lb = job.bounds[ci].as_ref().unwrap();
                 match job.frontier.strictly_dominates(lb) {
                     Some(false) => job.stats.bound_cut += 1,
@@ -789,7 +826,7 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], workers: usize) {
 
         let jobs_ref: &[JobState<'a, 'p>] = &*jobs;
         let n_slots = slots.len().min(work.len());
-        let results = super::sweep::parallel_for_indexed(
+        let (mut results, poisoned) = super::sweep::parallel_for_indexed_isolated(
             &mut slots[..n_slots],
             work.len(),
             |slot, w| {
@@ -797,18 +834,37 @@ fn run_rounds<'a, 'p>(jobs: &mut [JobState<'a, 'p>], workers: usize) {
                 let worker = slot[ji].get_or_insert_with(|| jobs_ref[ji].ctx.worker());
                 worker.evaluate(&jobs_ref[ji].cands[ci]).map(|p| (ji, ci, p))
             },
+            // A panic can leave any simulator of the pool mid-run; drop
+            // them all — the next item rebuilds its job's worker lazily.
+            |slot| slot.iter_mut().for_each(|w| *w = None),
         );
+        // Deterministic merge (and journal) order regardless of which
+        // thread produced which result.
+        results.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
 
         // Barrier: merge results and thaw the frontiers for the next round.
-        for (ji, ci, p) in results {
-            jobs[ji].frontier.insert(p.est_ms, p.energy_j, false);
-            if let Some(g) = jobs[ji].group {
+        for &w in &poisoned {
+            let (ji, ci) = work[w];
+            jobs[ji].stats.poisoned += 1;
+            jobs[ji].evaluated.push((ci, PointOutcome::Poisoned));
+        }
+        for (ji, _, p) in &results {
+            jobs[*ji].frontier.insert(p.est_ms, p.energy_j, false);
+            if let Some(g) = jobs[*ji].group {
                 group_frontiers[g].insert(p.est_ms, p.energy_j, false);
             }
-            jobs[ji].stats.evaluated += 1;
-            jobs[ji].evaluated.push((ci, p));
+            jobs[*ji].stats.evaluated += 1;
+        }
+        if let Some(cb) = on_round.as_mut() {
+            if !results.is_empty() {
+                cb(&results)?;
+            }
+        }
+        for (ji, ci, p) in results {
+            jobs[ji].evaluated.push((ci, PointOutcome::Evaluated(p)));
         }
     }
+    Ok(())
 }
 
 /// Bound-guided pruned exploration over one or more applications sharing
@@ -893,14 +949,20 @@ pub(crate) fn explore_pruned_grouped<'p>(
         build_order(job, objective, OrderMode::BoundAsc);
     }
 
-    run_rounds(&mut jobs, workers);
+    run_rounds(&mut jobs, workers, None)
+        .expect("a sweep without recovery IO performs no fallible IO");
 
     jobs.into_iter()
         .map(|mut job| {
             // Enumeration order first, then the same stable score sort as
             // the exhaustive path, so ranking ties break identically.
+            // Poisoned candidates are quarantined out of the ranking.
             job.evaluated.sort_unstable_by_key(|e| e.0);
-            let mut points: Vec<DsePoint> = job.evaluated.into_iter().map(|(_, p)| p).collect();
+            let mut points: Vec<DsePoint> = job
+                .evaluated
+                .into_iter()
+                .filter_map(|(_, o)| o.into_point())
+                .collect();
             points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
             (points, job.stats)
         })
@@ -951,15 +1013,48 @@ pub(crate) fn explore_pruned_warm<'p>(
 /// order-independent aggregation, so the saved memo is too).
 pub(crate) fn explore_pruned_warm_multi<'p>(
     inputs: &[(&SweepContext<'p>, &DseSpace)],
-    mut memo: Option<&mut EvalMemo>,
+    memo: Option<&mut EvalMemo>,
     order: OrderMode,
     objective: Objective,
     workers: usize,
 ) -> Vec<(Vec<DsePoint>, PruneStats)> {
+    explore_pruned_warm_recoverable(inputs, memo, order, objective, workers, None)
+        .expect("a warm sweep without recovery IO performs no fallible IO")
+}
+
+/// [`explore_pruned_warm_multi`] with crash recovery: given a
+/// [`RecoverySession`], the sweep journals every committed round of fresh
+/// evaluations to the memo's `.wal` sidecar (one fsync per round) and
+/// checkpoints the per-job candidate orders to the `.ckpt` sidecar before
+/// the first round. On resume — after
+/// [`EvalMemo::load_with_recovery`](super::warm::EvalMemo::load_with_recovery)
+/// replayed the journal into the memo — the restored state is folded back
+/// so the finished ranking and the subsequently saved memo are
+/// **bit-identical** to an uninterrupted run: journal-restored points
+/// re-enter the occupancy recording as the fresh evaluations they were,
+/// their contexts skip the per-sweep `touch` (the journal already restored
+/// that recency), and the checkpointed order — not a freshly built one —
+/// fixes the round boundaries. Only the cut *attribution* may differ
+/// (restored points count as `memo_hits`/`seeded_cut` rather than
+/// `evaluated`/`bound_cut`); the returned point sets do not.
+pub(crate) fn explore_pruned_warm_recoverable<'p>(
+    inputs: &[(&SweepContext<'p>, &DseSpace)],
+    mut memo: Option<&mut EvalMemo>,
+    order: OrderMode,
+    objective: Objective,
+    workers: usize,
+    mut recovery: Option<&mut RecoverySession>,
+) -> anyhow::Result<Vec<(Vec<DsePoint>, PruneStats)>> {
+    // Recovery journals and restores *memo* state; without a memo there is
+    // nothing to persist or resume.
+    if memo.is_none() {
+        recovery = None;
+    }
     let mut jobs: Vec<JobState<'_, 'p>> = Vec::new();
     let mut fps: Vec<u64> = Vec::new();
     let mut keys_per_job: Vec<Vec<String>> = Vec::new();
     let mut hits_per_job: Vec<Vec<(usize, DsePoint)>> = Vec::new();
+    let mut wal_hits_per_job: Vec<Vec<DsePoint>> = Vec::new();
     for &(ctx, space) in inputs {
         let (cands, mut stats) = enumerate_pruned(ctx, space);
         stats.kernel_hits = ctx.kernel_memo_hits() as u64;
@@ -983,23 +1078,44 @@ pub(crate) fn explore_pruned_warm_multi<'p>(
         // deterministic) and seed the frontier so round 0 already cuts
         // against a warm incumbent.
         let mut hits: Vec<(usize, DsePoint)> = Vec::new();
+        let mut wal_hits: Vec<DsePoint> = Vec::new();
+        let restored_ctx = recovery
+            .as_deref()
+            .is_some_and(|r| r.recovered().contexts.contains(&fp));
         if let Some(m) = memo.as_deref_mut() {
-            m.touch(fp);
+            // A context restored by the journal replay already carries the
+            // interrupted sweep's per-sweep touch in its restored recency
+            // and clock; touching again would diverge the saved memo from
+            // the uninterrupted run's.
+            if !restored_ctx {
+                let recency = m.touch(fp);
+                if let Some(r) = recovery.as_deref_mut() {
+                    r.journal().log_context(fp, ctx, recency);
+                }
+            }
             for (i, key) in keys.iter().enumerate() {
                 if let Some(v) = m.lookup(fp, key) {
                     job.done[i] = true;
                     job.stats.memo_hits += 1;
                     job.frontier.insert(v.est_ms, v.energy_j, true);
-                    hits.push((
-                        i,
-                        DsePoint {
-                            codesign: job.cands[i].clone(),
-                            est_ms: v.est_ms,
-                            energy_j: v.energy_j,
-                            edp: v.edp,
-                            fabric_util: v.fabric_util,
-                        },
-                    ));
+                    let p = DsePoint {
+                        codesign: job.cands[i].clone(),
+                        est_ms: v.est_ms,
+                        energy_j: v.energy_j,
+                        edp: v.edp,
+                        fabric_util: v.fabric_util,
+                    };
+                    // Hits restored from the journal were *fresh*
+                    // evaluations of the interrupted sweep — remembered so
+                    // the occupancy recording below folds them in exactly
+                    // like the uninterrupted run would have.
+                    if recovery
+                        .as_deref()
+                        .is_some_and(|r| r.recovered().contains(fp, key))
+                    {
+                        wal_hits.push(p.clone());
+                    }
+                    hits.push((i, p));
                 }
             }
         }
@@ -1018,6 +1134,7 @@ pub(crate) fn explore_pruned_warm_multi<'p>(
         fps.push(fp);
         keys_per_job.push(keys);
         hits_per_job.push(hits);
+        wal_hits_per_job.push(wal_hits);
         jobs.push(job);
     }
 
@@ -1055,33 +1172,88 @@ pub(crate) fn explore_pruned_warm_multi<'p>(
         build_order(job, objective, order);
     }
 
-    run_rounds(&mut jobs, workers);
+    if let Some(r) = recovery.as_deref_mut() {
+        // Pin the round boundaries across interruptions: a resumed run
+        // replays the checkpointed candidate order of the interrupted one
+        // (a freshly built order would exclude the journal-restored hits
+        // and shift every round boundary — and with it which candidates
+        // the frozen-frontier bound cut skips), and a fresh run
+        // checkpoints its orders before the first round.
+        let sfps: Vec<u64> = (0..jobs.len())
+            .map(|ji| super::ckpt::space_fingerprint(fps[ji], inputs[ji].1, objective, order))
+            .collect();
+        for (ji, job) in jobs.iter_mut().enumerate() {
+            if let Some(saved) = r.checkpoint_order(ji, sfps[ji]) {
+                job.order = saved.to_vec();
+            }
+        }
+        let orders: Vec<(u64, &[usize])> = sfps
+            .iter()
+            .zip(jobs.iter())
+            .map(|(&sfp, j)| (sfp, j.order.as_slice()))
+            .collect();
+        r.save_orders(&orders)?;
+    }
+
+    // Journal each committed round: every fresh point of the round plus a
+    // commit marker reach disk in one fsynced append, so a crash loses at
+    // most the in-flight round. The `sweep.round` faultpoint sits *after*
+    // the commit — the recovery tests interrupt sweeps at a point where
+    // the round is already durable.
+    let mut journal_round = |round: &[(usize, usize, DsePoint)]| -> anyhow::Result<()> {
+        if let Some(r) = recovery.as_deref_mut() {
+            for (ji, ci, p) in round {
+                r.journal().log_point(fps[*ji], &keys_per_job[*ji][*ci], p);
+            }
+            r.journal().commit_round()?;
+            crate::util::faultpoint::hit("sweep.round")?;
+        }
+        Ok(())
+    };
+    run_rounds(&mut jobs, workers, Some(&mut journal_round))?;
 
     // Record the fresh evaluations (both levels) for the next sweep.
+    // Poisoned candidates are quarantined: never recorded, never ranked.
     if let Some(m) = memo.as_deref_mut() {
         for (ji, job) in jobs.iter().enumerate() {
             m.record_kernels(job.ctx, inputs[ji].1);
-            for (ci, p) in &job.evaluated {
-                m.record(job.ctx, fps[ji], &keys_per_job[ji][*ci], p);
+            for (ci, outcome) in &job.evaluated {
+                if let Some(p) = outcome.point() {
+                    m.record(job.ctx, fps[ji], &keys_per_job[ji][*ci], p);
+                }
             }
-            let fresh: Vec<DsePoint> = job.evaluated.iter().map(|(_, p)| p.clone()).collect();
+            // Journal-restored hits were fresh evaluations of the
+            // interrupted run: fold them back into the occupancy
+            // statistics so the saved memo matches an uninterrupted run's
+            // bit for bit (the aggregation is order-independent).
+            let mut fresh: Vec<DsePoint> = job
+                .evaluated
+                .iter()
+                .filter_map(|(_, o)| o.point().cloned())
+                .collect();
+            fresh.append(&mut wal_hits_per_job[ji]);
             m.record_occupancy(job.ctx, &fresh);
         }
     }
 
     // Merge hits + evaluations in enumeration order, then the same stable
     // score sort as everywhere else.
-    jobs.into_iter()
+    Ok(jobs
+        .into_iter()
         .zip(hits_per_job)
         .map(|(job, hits)| {
             let mut all = hits;
-            all.extend(job.evaluated);
+            all.extend(
+                job.evaluated
+                    .into_iter()
+                    .filter_map(|(ci, o)| o.into_point().map(|p| (ci, p))),
+            );
             all.sort_unstable_by_key(|e| e.0);
             let mut points: Vec<DsePoint> = all.into_iter().map(|(_, p)| p).collect();
             points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
             (points, job.stats)
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]

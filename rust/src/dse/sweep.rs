@@ -95,6 +95,74 @@ where
     out
 }
 
+/// [`parallel_for_indexed`] with **panic isolation**: every call to `f`
+/// runs under `catch_unwind`, so one poisoned item can never tear down the
+/// worker pool or lose the results of its siblings. On a panic the
+/// worker's slot is passed through `reset` (worker state that unwound
+/// mid-simulation must be rebuilt, not reused) and the item's index is
+/// recorded. Returns the unordered results plus the poisoned indices in
+/// ascending order — which items poison depends only on the items
+/// themselves, never on worker scheduling, so callers stay bit-identical
+/// for any worker count. (The default panic hook still prints each
+/// poisoned point's message to stderr — deliberate: a poisoned point is a
+/// bug report, not something to swallow silently.)
+pub(crate) fn parallel_for_indexed_isolated<S, R, F, G>(
+    slots: &mut [S],
+    n_items: usize,
+    f: F,
+    reset: G,
+) -> (Vec<R>, Vec<usize>)
+where
+    S: Send,
+    R: Send,
+    F: Fn(&mut S, usize) -> Option<R> + Sync,
+    G: Fn(&mut S) + Sync,
+{
+    debug_assert!(!slots.is_empty() || n_items == 0);
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<R> = Vec::with_capacity(n_items);
+    let mut poisoned: Vec<usize> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = slots
+            .iter_mut()
+            .map(|slot| {
+                let f = &f;
+                let reset = &reset;
+                let cursor = &cursor;
+                s.spawn(move || {
+                    let mut acc: Vec<R> = Vec::new();
+                    let mut poison: Vec<usize> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_items {
+                            break;
+                        }
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || f(&mut *slot, i),
+                        ));
+                        match run {
+                            Ok(Some(r)) => acc.push(r),
+                            Ok(None) => {}
+                            Err(_) => {
+                                reset(&mut *slot);
+                                poison.push(i);
+                            }
+                        }
+                    }
+                    (acc, poison)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (acc, poison) = h.join().expect("isolated worker cannot itself panic");
+            out.extend(acc);
+            poisoned.extend(poison);
+        }
+    });
+    poisoned.sort_unstable();
+    (out, poisoned)
+}
+
 /// Shared, immutable evaluation context for one (program, board, part)
 /// triple: dependence graph, elaborated program and memoized HLS reports.
 /// Build it once, then run any number of enumerations / explorations /
@@ -470,20 +538,24 @@ impl<'p> SweepContext<'p> {
     /// Evaluate a candidate list across `workers` threads with
     /// deterministic (enumeration-order) output. Points whose co-design
     /// cannot run (some kernel has nowhere to execute) are skipped, as in
-    /// the serial path.
+    /// the serial path; a point whose evaluation *panics* is poisoned and
+    /// skipped too (isolation — one bad point never tears down the pool),
+    /// identically for any worker count.
     pub fn evaluate_all(&self, cands: &[CoDesign], workers: usize) -> Vec<DsePoint> {
         let n = cands.len();
         let workers = workers.clamp(1, n.max(1));
-        if workers <= 1 {
-            let mut w = self.worker();
-            return cands.iter().filter_map(|cd| w.evaluate(cd)).collect();
-        }
-        // One lazily-built worker (simulator + model) per thread.
+        // One lazily-built worker (simulator + model) per thread; a
+        // poisoned worker is dropped and lazily rebuilt.
         let mut slots: Vec<Option<SweepWorker<'_, 'p>>> = (0..workers).map(|_| None).collect();
-        let mut indexed = parallel_for_indexed(&mut slots, n, |slot, i| {
-            let w = slot.get_or_insert_with(|| self.worker());
-            w.evaluate(&cands[i]).map(|p| (i, p))
-        });
+        let (mut indexed, _poisoned) = parallel_for_indexed_isolated(
+            &mut slots,
+            n,
+            |slot, i| {
+                let w = slot.get_or_insert_with(|| self.worker());
+                w.evaluate(&cands[i]).map(|p| (i, p))
+            },
+            |slot| *slot = None,
+        );
         // Restore enumeration order so ranking ties break exactly like the
         // serial path (the score sort below is stable).
         indexed.sort_unstable_by_key(|e| e.0);
@@ -586,6 +658,35 @@ impl<'p> SweepContext<'p> {
     ) -> (Vec<DsePoint>, super::prune::PruneStats) {
         super::prune::explore_pruned_warm(self, space, Some(memo), order, objective, workers)
     }
+
+    /// [`SweepContext::explore_warm`] with crash recovery through a
+    /// [`RecoverySession`](super::RecoverySession): every committed round
+    /// of fresh evaluations is journaled to the memo's `.wal` sidecar and
+    /// the candidate order is checkpointed to `.ckpt`, so an interrupted
+    /// sweep resumed from
+    /// [`EvalMemo::load_with_recovery`](super::warm::EvalMemo::load_with_recovery)
+    /// finishes with a ranking and saved memo bit-identical to an
+    /// uninterrupted run (see `dse::ckpt`).
+    pub fn explore_warm_recoverable(
+        &self,
+        space: &DseSpace,
+        memo: &mut super::warm::EvalMemo,
+        objective: Objective,
+        workers: usize,
+        order: super::prune::OrderMode,
+        recovery: &mut super::ckpt::RecoverySession,
+    ) -> anyhow::Result<(Vec<DsePoint>, super::prune::PruneStats)> {
+        Ok(super::prune::explore_pruned_warm_recoverable(
+            &[(self, space)],
+            Some(memo),
+            order,
+            objective,
+            workers,
+            Some(recovery),
+        )?
+        .pop()
+        .expect("one input yields one output"))
+    }
 }
 
 /// Worker-local evaluation state: a [`Simulator`] whose buffers persist
@@ -598,7 +699,22 @@ pub struct SweepWorker<'c, 'p> {
 
 impl<'c, 'p> SweepWorker<'c, 'p> {
     /// Evaluate one co-design; `None` if it cannot run (skipped point).
+    ///
+    /// Carries the `eval.point` faultpoint, tagged by the FNV hash of the
+    /// co-design name: an armed spec always manifests as a **panic** here
+    /// (evaluation has no error channel), exercising the poison-isolation
+    /// path of [`parallel_for_indexed_isolated`]. The tag selects points
+    /// by identity, never by schedule, so the poisoned set is identical
+    /// for any worker count.
     pub fn evaluate(&mut self, codesign: &CoDesign) -> Option<DsePoint> {
+        if crate::util::faultpoint::armed() {
+            if let Err(e) = crate::util::faultpoint::hit_tagged(
+                "eval.point",
+                crate::util::faultpoint::str_tag(&codesign.name),
+            ) {
+                panic!("{e}");
+            }
+        }
         let (accels, smp) = self.ctx.resolve(codesign).ok()?;
         // `resolve` already built owned instances: hand them to the
         // simulator instead of copying them a second time.
@@ -703,24 +819,35 @@ impl<'p> SweepSuite<'p> {
     /// thread evaluates for that application. Results come back sorted by
     /// `(application, enumeration index)` — the merge order every suite
     /// sweep (cold, warm, exhaustive) shares, which is what makes them
-    /// all bit-identical for any worker count.
+    /// all bit-identical for any worker count. Points whose evaluation
+    /// panicked come back separately as sorted `(application, candidate)`
+    /// poison records; the pool survives them.
     fn evaluate_flat(
         &self,
         per_app: &[Vec<CoDesign>],
         flat: &[(usize, usize)],
         workers: usize,
-    ) -> Vec<(usize, usize, DsePoint)> {
+    ) -> (Vec<(usize, usize, DsePoint)>, Vec<(usize, usize)>) {
         let workers = workers.clamp(1, flat.len().max(1));
         let mut slots: Vec<Vec<Option<SweepWorker<'_, 'p>>>> = (0..workers)
             .map(|_| (0..self.apps.len()).map(|_| None).collect())
             .collect();
-        let mut indexed = parallel_for_indexed(&mut slots, flat.len(), |pool, i| {
-            let (ai, ci) = flat[i];
-            let w = pool[ai].get_or_insert_with(|| self.apps[ai].ctx.worker());
-            w.evaluate(&per_app[ai][ci]).map(|p| (ai, ci, p))
-        });
+        let (mut indexed, poisoned) = parallel_for_indexed_isolated(
+            &mut slots,
+            flat.len(),
+            |pool, i| {
+                let (ai, ci) = flat[i];
+                let w = pool[ai].get_or_insert_with(|| self.apps[ai].ctx.worker());
+                w.evaluate(&per_app[ai][ci]).map(|p| (ai, ci, p))
+            },
+            // A panic can unwind mid-simulation, so every worker in the
+            // poisoned slot is rebuilt rather than trusted.
+            |pool| pool.iter_mut().for_each(|w| *w = None),
+        );
         indexed.sort_unstable_by_key(|&(ai, ci, _)| (ai, ci));
-        indexed
+        let mut poisoned: Vec<(usize, usize)> = poisoned.into_iter().map(|i| flat[i]).collect();
+        poisoned.sort_unstable();
+        (indexed, poisoned)
     }
 
     /// Exhaustively sweep every application in a single pass over one
@@ -738,7 +865,7 @@ impl<'p> SweepSuite<'p> {
             .enumerate()
             .flat_map(|(ai, cands)| (0..cands.len()).map(move |ci| (ai, ci)))
             .collect();
-        let indexed = self.evaluate_flat(&per_app, &flat, workers);
+        let (indexed, poisoned) = self.evaluate_flat(&per_app, &flat, workers);
         let mut results: Vec<SuiteAppResult> = self
             .apps
             .iter()
@@ -755,12 +882,17 @@ impl<'p> SweepSuite<'p> {
         for (ai, _, p) in indexed {
             results[ai].points.push(p);
         }
+        for &(ai, _) in &poisoned {
+            results[ai].stats.poisoned += 1;
+        }
         for r in &mut results {
             r.stats.evaluated = r.points.len() as u64;
             // Candidates the evaluation skipped (some kernel had nowhere
             // to run) — account for them so `evaluated < feasible_points`
-            // can never read as pruning in an exhaustive sweep.
-            r.stats.unrunnable = r.stats.feasible_points - r.stats.evaluated;
+            // can never read as pruning in an exhaustive sweep. Poisoned
+            // points are quarantined in their own counter.
+            r.stats.unrunnable =
+                r.stats.feasible_points - r.stats.evaluated - r.stats.poisoned;
             r.points
                 .sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
         }
@@ -875,12 +1007,16 @@ impl<'p> SweepSuite<'p> {
                 }
             }
         }
-        let indexed = self.evaluate_flat(&per_app, &flat, workers);
+        let (indexed, poisoned) = self.evaluate_flat(&per_app, &flat, workers);
         // Record both levels, then assemble per-app results.
         let mut fresh: Vec<Vec<(usize, DsePoint)>> =
             (0..self.apps.len()).map(|_| Vec::new()).collect();
         for (ai, ci, p) in indexed {
             fresh[ai].push((ci, p));
+        }
+        let mut poisoned_per_app = vec![0u64; self.apps.len()];
+        for &(ai, _) in &poisoned {
+            poisoned_per_app[ai] += 1;
         }
         let mut results: Vec<SuiteAppResult> = Vec::new();
         for (ai, app) in self.apps.iter().enumerate() {
@@ -901,9 +1037,11 @@ impl<'p> SweepSuite<'p> {
                 evaluated: fresh[ai].len() as u64,
                 memo_hits: hits[ai].len() as u64,
                 kernel_hits: app.ctx.kernel_memo_hits() as u64,
+                poisoned: poisoned_per_app[ai],
                 unrunnable: per_app[ai].len() as u64
                     - fresh[ai].len() as u64
-                    - hits[ai].len() as u64,
+                    - hits[ai].len() as u64
+                    - poisoned_per_app[ai],
                 ..Default::default()
             };
             points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());

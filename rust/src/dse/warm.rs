@@ -66,12 +66,27 @@
 //! Lifecycle: `load_or_new` → any number of warm sweeps (each records its
 //! new evaluations at both levels) → `save`. Memo files are versioned; a
 //! file written by a different estimator version or schema — or a
-//! truncated/corrupt one — is renamed to `<path>.bak` on load and the
-//! sweep starts fresh with a warning, instead of erroring the whole run or
+//! truncated/corrupt one — is quarantined to a numbered `<path>.bak.N`
+//! sibling on load ([`crate::util::persist::quarantine`]) and the sweep
+//! starts fresh with a warning, instead of erroring the whole run or
 //! silently serving stale numbers.
+//!
+//! **Crash safety.** [`EvalMemo::save`] is atomic (write-to-temp → fsync →
+//! rename, via [`crate::util::persist::write_atomic`]): a crash mid-save
+//! leaves the previous good file on disk, never a torn one. During a
+//! recoverable sweep a [`SweepJournal`] additionally appends every freshly
+//! evaluated point to an append-only side journal (`<path>.wal`) in
+//! deterministic chunk-round order — each round is flushed as a single
+//! fsynced write ending in a `commit` marker, so the on-disk journal is
+//! always a whole number of committed rounds plus at most one torn tail
+//! line (which replay drops). On load, [`EvalMemo::load_with_recovery`]
+//! replays the committed rounds over the base file, so a kill -9 mid-sweep
+//! loses at most the in-flight round. A successful save deletes the
+//! journal (and any sweep checkpoint): the sidecars only ever carry the
+//! delta since the last good save.
 
-use std::collections::BTreeMap;
-use std::path::Path;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
 
 use crate::config::CoDesign;
 use crate::hls::{kernel_fingerprint, HlsReport};
@@ -359,37 +374,167 @@ impl EvalMemo {
 
     /// Load a memo file, or start empty when the file does not exist yet.
     /// A malformed file — truncated, corrupt, or written by a different
-    /// estimator version/schema — is renamed to `<path>.bak` and the memo
-    /// starts fresh with a warning: a stale side file must never error an
-    /// entire sweep (and must never be silently served either).
+    /// estimator version/schema — is quarantined to the next numbered
+    /// `<path>.bak.N` sibling and the memo starts fresh with a warning: a
+    /// stale side file must never error an entire sweep (and must never be
+    /// silently served either). Any committed journal rounds next to the
+    /// file are replayed; use [`EvalMemo::load_with_recovery`] to learn
+    /// *what* was replayed.
     pub fn load_or_new(path: &Path) -> anyhow::Result<Self> {
-        if !path.exists() {
-            return Ok(Self::new());
+        Ok(Self::load_with_recovery(path)?.0)
+    }
+
+    /// [`EvalMemo::load_or_new`] plus the journal-recovery report: when a
+    /// `<path>.wal` sibling with committed rounds exists (a recoverable
+    /// sweep was interrupted after its last save), the committed points
+    /// and context-recency snapshots are replayed into the returned memo
+    /// and described by the [`WalRecovery`]. A corrupt journal is
+    /// quarantined like a corrupt memo and ignored — recovery is
+    /// best-effort, never a new failure mode.
+    pub fn load_with_recovery(path: &Path) -> anyhow::Result<(Self, Option<WalRecovery>)> {
+        crate::util::faultpoint::hit("memo.load")?;
+        let mut memo = if !path.exists() {
+            Self::new()
+        } else {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+            match Self::from_json(&text) {
+                Ok(memo) => memo,
+                Err(e) => {
+                    let bak = crate::util::persist::quarantine(path)
+                        .map_err(|re| anyhow::anyhow!("{re} (while quarantining: {e})"))?;
+                    eprintln!(
+                        "warning: {}: {e}; moved to {} and starting a fresh memo",
+                        path.display(),
+                        bak.display()
+                    );
+                    Self::new()
+                }
+            }
+        };
+        let wal = SweepJournal::wal_path(path);
+        if !wal.exists() {
+            return Ok((memo, None));
         }
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-        match Self::from_json(&text) {
-            Ok(memo) => Ok(memo),
-            Err(e) => {
-                let bak = std::path::PathBuf::from(format!("{}.bak", path.display()));
-                std::fs::rename(path, &bak).map_err(|re| {
-                    anyhow::anyhow!("{}: {re} (while quarantining: {e})", path.display())
-                })?;
+        let text = std::fs::read_to_string(&wal)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", wal.display()))?;
+        match memo.replay_wal_text(&text) {
+            Ok(rec) if rec.is_empty() => Ok((memo, None)),
+            Ok(rec) => {
                 eprintln!(
-                    "warning: {}: {e}; moved to {} and starting a fresh memo",
-                    path.display(),
-                    bak.display()
+                    "note: {}: replayed {} points over {} committed rounds from the journal",
+                    wal.display(),
+                    rec.n_points(),
+                    rec.rounds
                 );
-                Ok(Self::new())
+                Ok((memo, Some(rec)))
+            }
+            Err(e) => {
+                match crate::util::persist::quarantine(&wal) {
+                    Ok(bak) => eprintln!(
+                        "warning: {}: {e}; journal moved to {} and ignored",
+                        wal.display(),
+                        bak.display()
+                    ),
+                    Err(re) => eprintln!(
+                        "warning: {}: {e}; journal could not be quarantined ({re}), ignored",
+                        wal.display()
+                    ),
+                }
+                Ok((memo, None))
             }
         }
     }
 
-    /// Save the memo (atomically enough for a CLI tool: write then rename
-    /// is overkill here; the file is small and regenerable).
+    /// Save the memo atomically (write-to-temp → fsync → rename): a crash
+    /// mid-save leaves the previous good file, never a torn one. A
+    /// successful save supersedes the side journal and any sweep
+    /// checkpoint, so both sidecars are deleted.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_json())
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+        crate::util::faultpoint::hit("memo.save")?;
+        crate::util::persist::write_atomic(path, self.to_json().as_bytes())?;
+        let _ = std::fs::remove_file(SweepJournal::wal_path(path));
+        let _ = std::fs::remove_file(PathBuf::from(format!("{}.ckpt", path.display())));
+        Ok(())
+    }
+
+    /// Replay a journal document (the text of a `<memo>.wal` sibling) over
+    /// this memo: apply every context-recency snapshot and every point of
+    /// every *committed* round, and report what was restored. Points after
+    /// the last `commit` marker — the in-flight round of a crash — are
+    /// dropped, as is at most one torn tail line. All-or-nothing: a
+    /// structurally corrupt journal returns `Err` without mutating the
+    /// memo (the caller quarantines it). Public so the fuzz harness can
+    /// drive it with arbitrary bytes.
+    pub fn replay_wal_text(&mut self, text: &str) -> anyhow::Result<WalRecovery> {
+        crate::util::faultpoint::hit("wal.replay")?;
+        let mut ctxs: BTreeMap<u64, StagedWalCtx> = BTreeMap::new();
+        let mut committed: Vec<(u64, String, MemoPoint)> = Vec::new();
+        let mut pending: Vec<(u64, String, MemoPoint)> = Vec::new();
+        let mut rounds = 0u64;
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, raw) in lines.iter().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = match parse(line) {
+                Ok(v) => v,
+                Err(e) => {
+                    // An unparseable *final* line is the expected torn-tail
+                    // signature of the crash itself; anything earlier is
+                    // corruption. Lines that parse but fail validation are
+                    // always corruption — a torn write cannot produce
+                    // valid JSON with bad semantics.
+                    let is_tail = lines[i + 1..].iter().all(|l| l.trim().is_empty());
+                    if is_tail {
+                        break;
+                    }
+                    anyhow::bail!("journal line {}: parse: {e}", i + 1);
+                }
+            };
+            let kind = stage_wal_line(&v, &mut ctxs, &mut pending)
+                .map_err(|e| anyhow::anyhow!("journal line {}: {e}", i + 1))?;
+            if let WalLine::Commit = kind {
+                committed.append(&mut pending);
+                rounds += 1;
+            }
+        }
+        // Every committed point must belong to a journaled or already
+        // known context (the writer always journals a context before any
+        // of its points).
+        for (fp, key, _) in &committed {
+            anyhow::ensure!(
+                ctxs.contains_key(fp) || self.contexts.contains_key(fp),
+                "journal point '{key}' references unknown context {fp:016x}"
+            );
+        }
+        // Stage accepted: apply.
+        let mut rec = WalRecovery {
+            rounds,
+            ..WalRecovery::default()
+        };
+        for (fp, sc) in &ctxs {
+            let entry = self.contexts.entry(*fp).or_insert_with(|| MemoContext {
+                app: sc.app.clone(),
+                board: sc.board.clone(),
+                part: sc.part.clone(),
+                fabric_mhz: sc.fabric_mhz,
+                n_tasks: sc.n_tasks,
+                last_used: 0,
+                points: BTreeMap::new(),
+            });
+            entry.last_used = entry.last_used.max(sc.last_used);
+            self.clock = self.clock.max(sc.last_used);
+            rec.contexts.insert(*fp);
+        }
+        for (fp, key, pt) in committed {
+            let entry = self.contexts.get_mut(&fp).expect("context staged above");
+            entry.points.insert(key.clone(), pt);
+            rec.points.entry(fp).or_default().insert(key);
+        }
+        self.rebuild_index();
+        Ok(rec)
     }
 
     /// Number of contexts recorded.
@@ -411,12 +556,15 @@ impl EvalMemo {
     /// clock and refreshes the context's recency (a context not recorded
     /// yet is refreshed when [`EvalMemo::record`] creates it). The warm
     /// engine calls this once per `(sweep, context)`, so LRU order tracks
-    /// sweeps, not lookups.
-    pub fn touch(&mut self, fingerprint: u64) {
+    /// sweeps, not lookups. Returns the new clock value — the recency the
+    /// context carries for this sweep, which the recoverable sweep
+    /// snapshots into the journal.
+    pub fn touch(&mut self, fingerprint: u64) -> u64 {
         self.clock += 1;
         if let Some(c) = self.contexts.get_mut(&fingerprint) {
             c.last_used = self.clock;
         }
+        self.clock
     }
 
     /// Exact-hit lookup.
@@ -886,11 +1034,17 @@ impl EvalMemo {
                 .ok_or_else(|| anyhow::anyhow!("memo context has no fp"))?;
             let fp = u64::from_str_radix(fp_str, 16)
                 .map_err(|_| anyhow::anyhow!("bad memo fingerprint '{fp_str}'"))?;
+            let fabric_mhz = c.get("fabric_mhz").and_then(Value::as_f64).unwrap_or(0.0);
+            anyhow::ensure!(
+                fabric_mhz.is_finite() && fabric_mhz >= 0.0,
+                "memo context {fp_str} field 'fabric_mhz': {fabric_mhz} is not a finite \
+                 non-negative number"
+            );
             let mut mc = MemoContext {
                 app: c.get("app").and_then(Value::as_str).unwrap_or("").to_string(),
                 board: c.get("board").and_then(Value::as_str).unwrap_or("").to_string(),
                 part: c.get("part").and_then(Value::as_str).unwrap_or("").to_string(),
-                fabric_mhz: c.get("fabric_mhz").and_then(Value::as_f64).unwrap_or(0.0),
+                fabric_mhz,
                 n_tasks: c.get("n_tasks").and_then(Value::as_u64).unwrap_or(0),
                 last_used: c.get("last_used").and_then(Value::as_u64).unwrap_or(0),
                 points: BTreeMap::new(),
@@ -900,11 +1054,21 @@ impl EvalMemo {
                     .get("key")
                     .and_then(Value::as_str)
                     .ok_or_else(|| anyhow::anyhow!("memo point has no key"))?;
+                // Named-field validation: every point metric must decode
+                // to a finite, non-negative number — a NaN in the memo
+                // would poison every comparison it touches downstream.
                 let bits = |field: &str| -> anyhow::Result<u64> {
-                    p.get(field)
+                    let b = p
+                        .get(field)
                         .and_then(Value::as_i64)
                         .map(|i| i as u64)
-                        .ok_or_else(|| anyhow::anyhow!("memo point '{key}' misses {field}"))
+                        .ok_or_else(|| anyhow::anyhow!("memo point '{key}' misses {field}"))?;
+                    let x = f64::from_bits(b);
+                    anyhow::ensure!(
+                        x.is_finite() && x >= 0.0,
+                        "memo point '{key}' field '{field}': not a finite non-negative number"
+                    );
+                    Ok(b)
                 };
                 mc.points.insert(
                     key.to_string(),
@@ -947,6 +1111,281 @@ impl EvalMemo {
         }
         memo.rebuild_index();
         Ok(memo)
+    }
+}
+
+/// What a journal replay restored — the recoverable sweep uses it to
+/// treat restored points exactly like the fresh evaluations they were
+/// (occupancy recording) and to skip re-touching contexts whose recency
+/// the journal already restored, so a resumed sweep reproduces the
+/// uninterrupted run bit for bit.
+#[derive(Clone, Debug, Default)]
+pub struct WalRecovery {
+    /// Contexts whose recency snapshot was restored (their `touch` already
+    /// happened in the interrupted sweep and is part of the restored
+    /// clock).
+    pub contexts: BTreeSet<u64>,
+    /// Restored point keys, per context fingerprint.
+    pub points: BTreeMap<u64, BTreeSet<String>>,
+    /// Committed rounds replayed.
+    pub rounds: u64,
+}
+
+impl WalRecovery {
+    /// True when the journal restored nothing.
+    pub fn is_empty(&self) -> bool {
+        self.contexts.is_empty() && self.points.is_empty()
+    }
+
+    /// Total restored points across every context.
+    pub fn n_points(&self) -> usize {
+        self.points.values().map(BTreeSet::len).sum()
+    }
+
+    /// Whether `(fingerprint, key)` was restored from the journal.
+    pub fn contains(&self, fingerprint: u64, key: &str) -> bool {
+        self.points.get(&fingerprint).is_some_and(|s| s.contains(key))
+    }
+}
+
+/// Staged `ctx` journal record (not yet applied to the memo).
+struct StagedWalCtx {
+    app: String,
+    board: String,
+    part: String,
+    fabric_mhz: f64,
+    n_tasks: u64,
+    last_used: u64,
+}
+
+/// Kind of one parsed journal line.
+enum WalLine {
+    Hdr,
+    Ctx,
+    Pt,
+    Commit,
+}
+
+/// Stage one parsed journal line (see [`SweepJournal`] for the format).
+fn stage_wal_line(
+    v: &Value,
+    ctxs: &mut BTreeMap<u64, StagedWalCtx>,
+    pending: &mut Vec<(u64, String, MemoPoint)>,
+) -> anyhow::Result<WalLine> {
+    let t = v
+        .get("t")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow::anyhow!("record has no 't'"))?;
+    let fp_of = |v: &Value| -> anyhow::Result<u64> {
+        let s = v
+            .get("fp")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("record has no fp"))?;
+        u64::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("bad fingerprint '{s}'"))
+    };
+    match t {
+        "hdr" => {
+            let ver = v.get("version").and_then(Value::as_i64).unwrap_or(-1);
+            anyhow::ensure!(
+                ver == MEMO_SCHEMA_VERSION,
+                "journal schema v{ver} != v{MEMO_SCHEMA_VERSION}"
+            );
+            let est = v.get("estimator").and_then(Value::as_str).unwrap_or("");
+            anyhow::ensure!(
+                est == env!("CARGO_PKG_VERSION"),
+                "journal written by estimator v{est}, this is v{}",
+                env!("CARGO_PKG_VERSION")
+            );
+            Ok(WalLine::Hdr)
+        }
+        "ctx" => {
+            let fp = fp_of(v)?;
+            let fabric_bits = v
+                .get("fabric_mhz")
+                .and_then(Value::as_i64)
+                .ok_or_else(|| anyhow::anyhow!("ctx record misses fabric_mhz"))?
+                as u64;
+            let sc = StagedWalCtx {
+                app: v.get("app").and_then(Value::as_str).unwrap_or("").to_string(),
+                board: v.get("board").and_then(Value::as_str).unwrap_or("").to_string(),
+                part: v.get("part").and_then(Value::as_str).unwrap_or("").to_string(),
+                fabric_mhz: f64::from_bits(fabric_bits),
+                n_tasks: v.get("n_tasks").and_then(Value::as_u64).unwrap_or(0),
+                last_used: v.get("last_used").and_then(Value::as_u64).unwrap_or(0),
+            };
+            match ctxs.entry(fp) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(sc);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    // Later snapshots carry newer metadata; recency is
+                    // the max over all snapshots.
+                    let lu = e.get().last_used.max(sc.last_used);
+                    let slot = e.get_mut();
+                    *slot = sc;
+                    slot.last_used = lu;
+                }
+            }
+            Ok(WalLine::Ctx)
+        }
+        "pt" => {
+            let fp = fp_of(v)?;
+            let key = v
+                .get("key")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow::anyhow!("pt record has no key"))?;
+            let bits = |field: &str| -> anyhow::Result<u64> {
+                let b = v
+                    .get(field)
+                    .and_then(Value::as_i64)
+                    .ok_or_else(|| anyhow::anyhow!("pt record '{key}' misses {field}"))?
+                    as u64;
+                let x = f64::from_bits(b);
+                anyhow::ensure!(
+                    x.is_finite() && x >= 0.0,
+                    "pt record '{key}' field '{field}': not a finite non-negative number"
+                );
+                Ok(b)
+            };
+            pending.push((
+                fp,
+                key.to_string(),
+                MemoPoint {
+                    est_ms: bits("est_ms")?,
+                    energy_j: bits("energy_j")?,
+                    edp: bits("edp")?,
+                    fabric_util: bits("fabric_util")?,
+                },
+            ));
+            Ok(WalLine::Pt)
+        }
+        "commit" => Ok(WalLine::Commit),
+        other => anyhow::bail!("unknown journal record '{other}'"),
+    }
+}
+
+/// Append-only side journal of a recoverable sweep, written next to the
+/// memo file as `<memo>.wal`.
+///
+/// Records are JSON lines: one `hdr` line per journal session (schema +
+/// estimator version, checked on replay), `ctx` lines snapshotting the
+/// recency metadata of every context the sweep touched, `pt` lines for
+/// every freshly evaluated point, and a `commit` marker closing each
+/// round. All lines of a round are buffered in memory and appended with a
+/// **single** write + fsync in [`SweepJournal::commit_round`], so the
+/// on-disk journal always holds a whole number of committed rounds plus at
+/// most one torn tail line — replay applies committed rounds only and
+/// drops the rest, which is exactly the "lose at most the in-flight
+/// chunk" contract.
+pub struct SweepJournal {
+    file: std::fs::File,
+    path: PathBuf,
+    buf: String,
+    rounds: u64,
+}
+
+impl SweepJournal {
+    /// Path of the journal sibling of a memo file.
+    pub fn wal_path(memo_path: &Path) -> PathBuf {
+        PathBuf::from(format!("{}.wal", memo_path.display()))
+    }
+
+    /// Open the journal next to `memo_path` in append mode (a journal left
+    /// by an interrupted sweep is extended, never truncated past its last
+    /// complete line — its committed rounds were already replayed into the
+    /// memo the caller loaded) and buffer the session header.
+    ///
+    /// If the existing journal ends in a torn line (a crash mid-append:
+    /// records never contain literal newlines, so "complete" is exactly
+    /// "newline-terminated"), that tail is cut off first — appending after
+    /// it would glue the new session's first record onto the garbage and
+    /// corrupt the whole journal on the next replay.
+    pub fn open(memo_path: &Path) -> anyhow::Result<Self> {
+        let path = Self::wal_path(memo_path);
+        if let Ok(bytes) = std::fs::read(&path) {
+            if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
+                let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1);
+                let f = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                f.set_len(keep as u64)
+                    .map_err(|e| anyhow::anyhow!("{}: truncating torn tail: {e}", path.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut j = Self {
+            file,
+            path,
+            buf: String::new(),
+            rounds: 0,
+        };
+        j.push_line(obj(vec![
+            ("t", "hdr".into()),
+            ("version", MEMO_SCHEMA_VERSION.into()),
+            ("estimator", env!("CARGO_PKG_VERSION").into()),
+        ]));
+        Ok(j)
+    }
+
+    fn push_line(&mut self, v: Value) {
+        self.buf.push_str(&v.to_json());
+        self.buf.push('\n');
+    }
+
+    /// Buffer a context-recency snapshot (flushed with the next commit).
+    pub fn log_context(&mut self, fp: u64, ctx: &SweepContext<'_>, last_used: u64) {
+        self.push_line(obj(vec![
+            ("t", "ctx".into()),
+            ("fp", format!("{fp:016x}").into()),
+            ("app", ctx.program.app_name.as_str().into()),
+            ("board", ctx.board.name.as_str().into()),
+            ("part", ctx.part.name.as_str().into()),
+            ("fabric_mhz", ctx.board.fabric_freq_mhz.to_bits().into()),
+            ("n_tasks", (ctx.program.tasks.len() as u64).into()),
+            ("last_used", last_used.into()),
+        ]));
+    }
+
+    /// Buffer one freshly evaluated point (flushed with the next commit).
+    pub fn log_point(&mut self, fp: u64, key: &str, p: &DsePoint) {
+        self.push_line(obj(vec![
+            ("t", "pt".into()),
+            ("fp", format!("{fp:016x}").into()),
+            ("key", key.into()),
+            ("est_ms", p.est_ms.to_bits().into()),
+            ("energy_j", p.energy_j.to_bits().into()),
+            ("edp", p.edp.to_bits().into()),
+            ("fabric_util", p.fabric_util.to_bits().into()),
+        ]));
+    }
+
+    /// Rounds committed through this journal instance.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Append every buffered record plus a round-commit marker in one
+    /// write, then fsync: the round reaches disk entirely or — modulo a
+    /// torn tail the replay drops — not at all.
+    pub fn commit_round(&mut self) -> anyhow::Result<()> {
+        use std::io::Write;
+        crate::util::faultpoint::hit("wal.append")?;
+        self.rounds += 1;
+        self.push_line(obj(vec![
+            ("t", "commit".into()),
+            ("round", self.rounds.into()),
+        ]));
+        let res = self
+            .file
+            .write_all(self.buf.as_bytes())
+            .and_then(|()| self.file.sync_all());
+        self.buf.clear();
+        res.map_err(|e| anyhow::anyhow!("{}: {e}", self.path.display()))
     }
 }
 
@@ -1078,22 +1517,160 @@ mod tests {
     #[test]
     fn load_or_new_quarantines_corrupt_files() {
         let dir = std::env::temp_dir().join("zynq_warm_memo_bak");
+        let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("memo.json");
-        let bak = dir.join("memo.json.bak");
-        std::fs::remove_file(&bak).ok();
         // Truncated/corrupt file: the sweep must start fresh, and the bad
-        // file must be preserved as .bak instead of erroring the run.
+        // file must be preserved as a numbered .bak sibling instead of
+        // erroring the run.
         std::fs::write(&path, "{\"version\": 2, \"estim").unwrap();
         let memo = EvalMemo::load_or_new(&path).unwrap();
         assert_eq!(memo.n_points(), 0);
         assert!(!path.exists(), "corrupt file must be moved aside");
-        assert!(bak.exists(), "corrupt file must be preserved as .bak");
-        // A version-mismatched file takes the same path.
+        assert!(dir.join("memo.json.bak.1").exists(), "first quarantine is .bak.1");
+        // A second corrupt load must not clobber the first quarantine.
         std::fs::write(&path, "{\"version\": 1, \"contexts\": []}").unwrap();
         assert!(EvalMemo::load_or_new(&path).unwrap().n_points() == 0);
-        assert!(bak.exists());
+        assert!(dir.join("memo.json.bak.1").exists(), "first generation retained");
+        assert!(dir.join("memo.json.bak.2").exists(), "second generation is .bak.2");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("memo.json.bak.1")).unwrap(),
+            "{\"version\": 2, \"estim"
+        );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A populated memo for the journal tests, together with its context
+    /// fingerprint and the sweep context/space that produced it.
+    fn journal_fixture() -> (
+        crate::coordinator::task::TaskProgram,
+        BoardConfig,
+        DseSpace,
+    ) {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        (p, board, space)
+    }
+
+    #[test]
+    fn journal_roundtrip_restores_committed_rounds_only() {
+        let dir = std::env::temp_dir().join("zynq_warm_wal_rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memo.json");
+        let (p, board, space) = journal_fixture();
+        let ctx = fixture(&p, &board, &space);
+        let fp = context_fingerprint(&ctx);
+        let (points, _) = ctx.explore_pruned(&space, Objective::Time, 2);
+        assert!(points.len() >= 2, "fixture needs at least two points");
+
+        // Journal one committed round plus one uncommitted point.
+        let mut j = SweepJournal::open(&path).unwrap();
+        j.log_context(fp, &ctx, 7);
+        j.log_point(fp, &codesign_key(&points[0].codesign), &points[0]);
+        j.commit_round().unwrap();
+        j.log_point(fp, &codesign_key(&points[1].codesign), &points[1]);
+        drop(j); // crash before the second commit
+        let (memo, rec) = EvalMemo::load_with_recovery(&path).unwrap();
+        let rec = rec.expect("journal must be reported");
+        assert_eq!(rec.rounds, 1);
+        assert_eq!(rec.n_points(), 1);
+        assert!(rec.contexts.contains(&fp));
+        assert!(rec.contains(fp, &codesign_key(&points[0].codesign)));
+        assert!(
+            !rec.contains(fp, &codesign_key(&points[1].codesign)),
+            "uncommitted in-flight point must be dropped"
+        );
+        // The restored point is bit-identical, the recency snapshot and
+        // clock were applied, and the uncommitted point is absent.
+        let hit = memo.lookup(fp, &codesign_key(&points[0].codesign)).unwrap();
+        assert_eq!(hit.est_ms.to_bits(), points[0].est_ms.to_bits());
+        assert!(memo.lookup(fp, &codesign_key(&points[1].codesign)).is_none());
+        assert_eq!(memo.stats().rows[0].last_used, 7);
+        // Saving deletes the journal: the sidecar only carries the delta
+        // since the last good save.
+        memo.save(&path).unwrap();
+        assert!(!SweepJournal::wal_path(&path).exists());
+        let (_, rec2) = EvalMemo::load_with_recovery(&path).unwrap();
+        assert!(rec2.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_replay_drops_torn_tail_and_quarantines_corruption() {
+        let dir = std::env::temp_dir().join("zynq_warm_wal_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memo.json");
+        let (p, board, space) = journal_fixture();
+        let ctx = fixture(&p, &board, &space);
+        let fp = context_fingerprint(&ctx);
+        let (points, _) = ctx.explore_pruned(&space, Objective::Time, 2);
+        let mut j = SweepJournal::open(&path).unwrap();
+        j.log_context(fp, &ctx, 3);
+        j.log_point(fp, &codesign_key(&points[0].codesign), &points[0]);
+        j.commit_round().unwrap();
+        drop(j);
+        let wal = SweepJournal::wal_path(&path);
+        let good = std::fs::read_to_string(&wal).unwrap();
+
+        // A torn tail (half a line, as a kill mid-write leaves) is
+        // dropped; the committed round still replays.
+        std::fs::write(&wal, format!("{good}{{\"t\":\"pt\",\"fp\"")).unwrap();
+        let (memo, rec) = EvalMemo::load_with_recovery(&path).unwrap();
+        assert_eq!(rec.expect("committed round survives").n_points(), 1);
+        assert!(memo.lookup(fp, &codesign_key(&points[0].codesign)).is_some());
+        assert!(wal.exists(), "a merely-torn journal is not quarantined");
+
+        // Mid-file corruption is all-or-nothing: nothing replays and the
+        // journal is quarantined as evidence.
+        std::fs::write(&wal, format!("not json\n{good}")).unwrap();
+        let (memo, rec) = EvalMemo::load_with_recovery(&path).unwrap();
+        assert!(rec.is_none());
+        assert_eq!(memo.n_points(), 0);
+        assert!(!wal.exists(), "corrupt journal must be moved aside");
+        assert!(
+            PathBuf::from(format!("{}.bak.1", wal.display())).exists(),
+            "corrupt journal must be preserved"
+        );
+
+        // A journal from a different schema/estimator is refused too.
+        std::fs::write(&wal, "{\"t\":\"hdr\",\"version\":1,\"estimator\":\"0.0.0\"}\n").unwrap();
+        let (_, rec) = EvalMemo::load_with_recovery(&path).unwrap();
+        assert!(rec.is_none());
+        assert!(!wal.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_points_reject_non_finite_fields() {
+        let mut memo = EvalMemo::new();
+        let hdr = format!(
+            "{{\"t\":\"hdr\",\"version\":{MEMO_SCHEMA_VERSION},\"estimator\":\"{}\"}}",
+            env!("CARGO_PKG_VERSION")
+        );
+        let ctx = "{\"t\":\"ctx\",\"fp\":\"00000000000000aa\",\"app\":\"a\",\"board\":\"b\",\
+                   \"part\":\"p\",\"fabric_mhz\":0,\"n_tasks\":1,\"last_used\":1}";
+        let nan = f64::NAN.to_bits() as i64;
+        let pt = format!(
+            "{{\"t\":\"pt\",\"fp\":\"00000000000000aa\",\"key\":\"k\",\"est_ms\":{nan},\
+             \"energy_j\":0,\"edp\":0,\"fabric_util\":0}}"
+        );
+        let text = format!("{hdr}\n{ctx}\n{pt}\n{{\"t\":\"commit\",\"round\":1}}\nx");
+        let err = memo.replay_wal_text(&text).unwrap_err().to_string();
+        assert!(err.contains("est_ms"), "{err}");
+        // And the same validation guards the memo document itself.
+        let doc = format!(
+            "{{\"version\":{MEMO_SCHEMA_VERSION},\"estimator\":\"{}\",\"clock\":0,\
+             \"contexts\":[{{\"fp\":\"00000000000000aa\",\"app\":\"a\",\"board\":\"b\",\
+             \"part\":\"p\",\"fabric_mhz\":0,\"n_tasks\":1,\"last_used\":1,\"points\":\
+             [{{\"key\":\"k\",\"est_ms\":{nan},\"energy_j\":0,\"edp\":0,\"fabric_util\":0}}],\
+             \"frontier\":[]}}],\"kernels\":[]}}",
+            env!("CARGO_PKG_VERSION")
+        );
+        let err = EvalMemo::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("est_ms"), "{err}");
     }
 
     #[test]

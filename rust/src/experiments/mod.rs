@@ -2,6 +2,7 @@
 //! benches and examples all call through here so the numbers in
 //! EXPERIMENTS.md regenerate from a single implementation.
 
+pub mod fault_recovery;
 pub mod robustness;
 
 use std::time::Instant;

@@ -34,6 +34,8 @@
 //!   examples all call through here.
 //! * [`config`] — board/co-design TOML configs.
 //! * [`cli`] — the `zynq-estimator` command-line tool.
+//! * [`fuzz`] — deterministic mutation fuzzing of the byte-ingesting
+//!   parsers (memo JSON, sweep journals, board TOML).
 //! * [`util`] — PRNG, stats, bench harness, JSON substrate (the build is
 //!   fully offline; no external general-purpose dependencies).
 //!
@@ -69,6 +71,7 @@ pub mod config;
 pub mod experiments;
 pub mod coordinator;
 pub mod dse;
+pub mod fuzz;
 pub mod hls;
 pub mod metrics;
 pub mod power;

@@ -1,0 +1,318 @@
+//! Deterministic fault injection for the crash-safety tests and the CLI.
+//!
+//! A *faultpoint* is a named site in the code (the registered sites:
+//! `memo.save`, `memo.load`, `wal.append`, `wal.replay`, `eval.point`,
+//! `board.toml`, `sweep.round`) that normally does nothing and costs one
+//! relaxed atomic load. Arming a spec — from a test, `--faults` on the
+//! CLI, or the `ZYNQ_FAULTS` environment variable — makes the matching
+//! site fail deterministically: by hit count for serial sites, or by a
+//! site-specific *tag* for parallel sites (a tag is derived from the work
+//! item, e.g. the FNV hash of a co-design key, so which points fail never
+//! depends on worker scheduling). There is deliberately no randomness:
+//! every fault a test provokes is reproducible bit-for-bit.
+//!
+//! Spec grammar (comma-separated list):
+//!
+//! ```text
+//! site[@N][#HEXTAG][!error|!panic|!abort]
+//! ```
+//!
+//! * `site` — the faultpoint name (exact match).
+//! * `@N` — fire on the N-th matching hit only (default: the first).
+//!   Counting is per spec, under a lock; meaningful for sites hit from a
+//!   single thread (saves, WAL appends, round commits).
+//! * `#HEXTAG` — fire on every hit whose tag equals the hex value;
+//!   schedule-independent, the right selector for parallel sites.
+//! * `!error` (default) — the site returns an error; `!panic` — the site
+//!   panics (exercises the poison-isolation path); `!abort` — the process
+//!   aborts (exercises kill -9 recovery from a child process).
+//!
+//! The registered sites are listed in ARCHITECTURE.md ("Failure model &
+//! recovery").
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::fnv::Fnv;
+
+/// How an armed faultpoint manifests when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The site returns `Err` (default) — exercises error propagation.
+    Error,
+    /// The site panics — exercises worker poison isolation.
+    Panic,
+    /// The process aborts — a stand-in for kill -9 in subprocess tests.
+    Abort,
+}
+
+#[derive(Debug)]
+struct FaultSpec {
+    id: u64,
+    site: String,
+    /// Fire on the n-th matching hit (1-based); `None` = first.
+    nth: Option<u64>,
+    /// Fire only on hits carrying this tag; tagged specs fire on *every*
+    /// matching hit unless `nth` narrows them.
+    tag: Option<u64>,
+    mode: FaultMode,
+    hits: u64,
+    spent: bool,
+}
+
+/// Fast path: a single relaxed load when nothing is armed.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static SPECS: Mutex<Vec<FaultSpec>> = Mutex::new(Vec::new());
+
+/// RAII guard for faults armed by [`arm`]; dropping it disarms exactly the
+/// specs it armed (tests stack guards safely).
+pub struct Armed {
+    ids: Vec<u64>,
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        let mut specs = SPECS.lock().unwrap();
+        specs.retain(|s| !self.ids.contains(&s.id));
+        ANY_ARMED.store(!specs.is_empty(), Ordering::Relaxed);
+    }
+}
+
+fn parse_one(spec: &str) -> anyhow::Result<(String, Option<u64>, Option<u64>, FaultMode)> {
+    let mut rest = spec.trim();
+    anyhow::ensure!(!rest.is_empty(), "empty fault spec");
+    let mut mode = FaultMode::Error;
+    if let Some((head, m)) = rest.rsplit_once('!') {
+        mode = match m {
+            "error" => FaultMode::Error,
+            "panic" => FaultMode::Panic,
+            "abort" => FaultMode::Abort,
+            other => {
+                anyhow::bail!("fault spec '{spec}': unknown mode '!{other}' (error|panic|abort)")
+            }
+        };
+        rest = head;
+    }
+    let mut tag = None;
+    if let Some((head, t)) = rest.rsplit_once('#') {
+        let v = u64::from_str_radix(t, 16)
+            .map_err(|_| anyhow::anyhow!("fault spec '{spec}': bad hex tag '#{t}'"))?;
+        tag = Some(v);
+        rest = head;
+    }
+    let mut nth = None;
+    if let Some((head, n)) = rest.rsplit_once('@') {
+        let v: u64 = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault spec '{spec}': bad hit count '@{n}'"))?;
+        anyhow::ensure!(v >= 1, "fault spec '{spec}': hit count must be >= 1");
+        nth = Some(v);
+        rest = head;
+    }
+    anyhow::ensure!(!rest.is_empty(), "fault spec '{spec}': missing site name");
+    Ok((rest.to_string(), nth, tag, mode))
+}
+
+/// Arm one or more comma-separated fault specs; returns a guard that
+/// disarms them on drop.
+pub fn arm(specs: &str) -> anyhow::Result<Armed> {
+    let mut parsed = Vec::new();
+    for one in specs.split(',').filter(|s| !s.trim().is_empty()) {
+        parsed.push(parse_one(one)?);
+    }
+    anyhow::ensure!(!parsed.is_empty(), "no fault specs in '{specs}'");
+    let mut ids = Vec::new();
+    let mut table = SPECS.lock().unwrap();
+    for (site, nth, tag, mode) in parsed {
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        ids.push(id);
+        table.push(FaultSpec {
+            id,
+            site,
+            nth,
+            tag,
+            mode,
+            hits: 0,
+            spent: false,
+        });
+    }
+    ANY_ARMED.store(true, Ordering::Relaxed);
+    Ok(Armed { ids })
+}
+
+/// Arm from the `ZYNQ_FAULTS` environment variable, if set. Returns the
+/// guard when something was armed (callers keep it alive for the process);
+/// `Ok(None)` when the variable is unset or empty.
+pub fn arm_from_env() -> anyhow::Result<Option<Armed>> {
+    match std::env::var("ZYNQ_FAULTS") {
+        Ok(v) if !v.trim().is_empty() => arm(&v).map(Some),
+        _ => Ok(None),
+    }
+}
+
+/// Disarm every registered fault (test hygiene).
+pub fn disarm_all() {
+    let mut specs = SPECS.lock().unwrap();
+    specs.clear();
+    ANY_ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Whether any fault spec is currently armed (one relaxed load) — lets
+/// hot paths skip computing a tag when nothing can fire.
+pub fn armed() -> bool {
+    ANY_ARMED.load(Ordering::Relaxed)
+}
+
+/// The canonical tag of a string work-item key: its FNV-1a 64 hash (print
+/// it with `{:x}` to build a `site#HEXTAG` spec).
+pub fn str_tag(s: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.str(s);
+    h.finish()
+}
+
+fn fire(site: &str, tag: Option<u64>) -> Option<FaultMode> {
+    let mut specs = SPECS.lock().unwrap();
+    for s in specs.iter_mut() {
+        if s.site != site {
+            continue;
+        }
+        match (s.tag, tag) {
+            (Some(want), Some(got)) if want != got => continue,
+            (Some(_), None) => continue,
+            _ => {}
+        }
+        s.hits += 1;
+        let due = match s.nth {
+            Some(n) => s.hits == n,
+            // Untagged specs default to one-shot (the first hit); tagged
+            // specs fire on every matching hit — the tag already selects
+            // a deterministic subset.
+            None => s.tag.is_some() || !s.spent,
+        };
+        if due {
+            s.spent = true;
+            return Some(s.mode);
+        }
+    }
+    None
+}
+
+/// A faultpoint without a tag. Returns `Err` when an armed `!error` spec
+/// fires; panics or aborts for the other modes.
+pub fn hit(site: &str) -> anyhow::Result<()> {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    hit_tagged_inner(site, None)
+}
+
+/// A faultpoint carrying a work-item tag (see [`str_tag`]).
+pub fn hit_tagged(site: &str, tag: u64) -> anyhow::Result<()> {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    hit_tagged_inner(site, Some(tag))
+}
+
+fn hit_tagged_inner(site: &str, tag: Option<u64>) -> anyhow::Result<()> {
+    match fire(site, tag) {
+        None => Ok(()),
+        Some(FaultMode::Error) => Err(anyhow::anyhow!("injected fault at '{site}'")),
+        Some(FaultMode::Panic) => panic!("injected fault (panic) at '{site}'"),
+        Some(FaultMode::Abort) => {
+            eprintln!("injected fault (abort) at '{site}'");
+            std::process::abort();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Faultpoint state is process-global; serialize the tests that arm it.
+    // Sites here use fictional `t.*` names only — arming a *real* site
+    // name (wal.append, sweep.round, ...) would fire inside unrelated lib
+    // tests running on other threads. Real-site arming lives in the
+    // `crash_recovery` integration suite (its own process).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn unarmed_sites_are_free() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm_all();
+        for _ in 0..1000 {
+            assert!(hit("t.serial").is_ok());
+            assert!(hit_tagged("t.tagged", 42).is_ok());
+        }
+    }
+
+    #[test]
+    fn untagged_spec_fires_once_on_first_hit() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm_all();
+        let guard = arm("t.append").unwrap();
+        assert!(hit("t.append").is_err());
+        assert!(hit("t.append").is_ok(), "one-shot spec must stay spent");
+        assert!(hit("t.load").is_ok(), "other sites unaffected");
+        drop(guard);
+        assert!(hit("t.append").is_ok(), "drop disarms");
+    }
+
+    #[test]
+    fn nth_spec_counts_hits() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm_all();
+        let _guard = arm("t.round@3").unwrap();
+        assert!(hit("t.round").is_ok());
+        assert!(hit("t.round").is_ok());
+        assert!(hit("t.round").is_err());
+        assert!(hit("t.round").is_ok());
+    }
+
+    #[test]
+    fn tagged_spec_selects_by_tag_every_time() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm_all();
+        let tag = str_tag("1xmxm64:U32");
+        let _guard = arm(&format!("t.point#{tag:x}")).unwrap();
+        assert!(hit_tagged("t.point", tag).is_err());
+        assert!(hit_tagged("t.point", tag).is_err(), "tagged specs re-fire");
+        assert!(hit_tagged("t.point", tag ^ 1).is_ok());
+        assert!(hit("t.point").is_ok(), "untagged hit never matches a tagged spec");
+    }
+
+    #[test]
+    fn spec_parser_accepts_the_grammar_and_rejects_garbage() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm_all();
+        for ok in [
+            "t.save.temp",
+            "t.save.rename!panic",
+            "t.replay@2",
+            "t.point#abc123!panic",
+            "t.a,t.b@2,t.c!abort",
+        ] {
+            assert!(arm(ok).is_ok(), "{ok}");
+            disarm_all();
+        }
+        for bad in ["", " , ", "site!frobnicate", "site@zero", "site@0", "site#xyz", "@1"] {
+            assert!(arm(bad).is_err(), "{bad}");
+        }
+        disarm_all();
+    }
+
+    #[test]
+    fn guards_stack_independently() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disarm_all();
+        let g1 = arm("t.a.site").unwrap();
+        let g2 = arm("t.b.site").unwrap();
+        drop(g1);
+        assert!(hit("t.b.site").is_err(), "g2 outlives g1");
+        drop(g2);
+        assert!(hit("t.b.site").is_ok());
+    }
+}

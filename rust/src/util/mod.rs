@@ -7,9 +7,11 @@
 
 pub mod bench;
 pub mod bench_check;
+pub mod faultpoint;
 pub mod fnv;
 pub mod fxhash;
 pub mod json;
+pub mod persist;
 
 /// SplitMix64 — used to seed the main generator and as a cheap standalone
 /// stream. Reference: Steele, Lea, Flood. "Fast splittable pseudorandom

@@ -1,0 +1,166 @@
+//! Crash-safe file persistence: atomic replace-on-save and numbered
+//! quarantine of corrupt files.
+//!
+//! The persistent artifacts of the DSE layer (the evaluation memo, sweep
+//! checkpoints) are the accumulated value of hours of estimation, so a
+//! save must never be able to destroy the previous good copy: a torn
+//! write during `std::fs::write` leaves a half-file that fails to parse
+//! and costs the whole cache. [`write_atomic`] closes that hole with the
+//! classic write-to-temp → fsync → rename sequence (rename is atomic on
+//! POSIX filesystems), and [`quarantine`] preserves *every* corrupt file
+//! under numbered `.bak.N` suffixes — a second corrupt load must not
+//! clobber the evidence of the first — with a retention cap so repeated
+//! corruption cannot grow the directory without bound.
+
+use std::path::{Path, PathBuf};
+
+/// How many quarantined `.bak.N` siblings [`quarantine`] retains per file
+/// before evicting the oldest.
+pub const QUARANTINE_CAP: usize = 8;
+
+/// Atomically replace `path` with `bytes`: write a `<path>.tmp` sibling,
+/// fsync it, then rename over the destination (and best-effort fsync the
+/// directory so the rename itself is durable). A crash at any step leaves
+/// either the old file or the new file, never a torn mix.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    use std::io::Write;
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    let write_temp = || -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    };
+    if let Err(e) = write_temp() {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("{}: {e}", tmp.display());
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("{}: rename to {}: {e}", tmp.display(), path.display());
+    }
+    // Durability of the rename needs the directory entry flushed too;
+    // best-effort (not all platforms allow fsync on a directory handle).
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Numbered `.bak.N` siblings of `path` that already exist, as
+/// `(N, full path)` pairs sorted ascending by `N`. Found by scanning the
+/// directory (suffix numbers grow without bound across evictions, so a
+/// fixed probe range would eventually miss — and then clobber — the
+/// newest generations).
+fn existing_quarantines(path: &Path) -> Vec<(u64, PathBuf)> {
+    let Some(file_name) = path.file_name().and_then(|n| n.to_str()) else {
+        return Vec::new();
+    };
+    let prefix = format!("{file_name}.bak.");
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let mut found = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(suffix) = name.strip_prefix(&prefix) {
+                if let Ok(n) = suffix.parse::<u64>() {
+                    found.push((n, dir.join(name)));
+                }
+            }
+        }
+    }
+    found.sort_unstable_by_key(|(n, _)| *n);
+    found
+}
+
+/// Move a corrupt `path` aside to the next free `<path>.bak.N` (N starts
+/// at 1 and always increases past the highest retained suffix, so a second
+/// quarantine never clobbers the first), evicting the lowest-numbered
+/// quarantine when more than [`QUARANTINE_CAP`] would be retained.
+/// Returns the quarantine path.
+pub fn quarantine(path: &Path) -> anyhow::Result<PathBuf> {
+    let existing = existing_quarantines(path);
+    let next = existing.iter().map(|(n, _)| *n).max().unwrap_or(0) + 1;
+    let bak = PathBuf::from(format!("{}.bak.{next}", path.display()));
+    std::fs::rename(path, &bak)
+        .map_err(|e| anyhow::anyhow!("{}: rename to {}: {e}", path.display(), bak.display()))?;
+    if existing.len() + 1 > QUARANTINE_CAP {
+        for (_, old) in existing
+            .iter()
+            .take(existing.len() + 1 - QUARANTINE_CAP)
+        {
+            let _ = std::fs::remove_file(old);
+        }
+    }
+    Ok(bak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("zynq_persist_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_temp() {
+        let d = tmpdir("atomic");
+        let p = d.join("memo.json");
+        write_atomic(&p, b"v1").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"v1");
+        write_atomic(&p, b"v2-longer-content").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"v2-longer-content");
+        assert!(!PathBuf::from(format!("{}.tmp", p.display())).exists());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn quarantine_numbers_do_not_clobber() {
+        let d = tmpdir("numbered");
+        let p = d.join("memo.json");
+        std::fs::write(&p, b"corrupt-1").unwrap();
+        let b1 = quarantine(&p).unwrap();
+        assert!(b1.display().to_string().ends_with(".bak.1"));
+        std::fs::write(&p, b"corrupt-2").unwrap();
+        let b2 = quarantine(&p).unwrap();
+        assert!(b2.display().to_string().ends_with(".bak.2"));
+        // Both generations retained, original gone.
+        assert_eq!(std::fs::read(&b1).unwrap(), b"corrupt-1");
+        assert_eq!(std::fs::read(&b2).unwrap(), b"corrupt-2");
+        assert!(!p.exists());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn quarantine_caps_retained_generations() {
+        let d = tmpdir("capped");
+        let p = d.join("memo.json");
+        for i in 0..(QUARANTINE_CAP + 3) {
+            std::fs::write(&p, format!("corrupt-{i}")).unwrap();
+            quarantine(&p).unwrap();
+        }
+        let retained = existing_quarantines(&p);
+        assert!(retained.len() <= QUARANTINE_CAP, "{} retained", retained.len());
+        // The newest generation is always among the survivors.
+        assert!(retained
+            .iter()
+            .any(|(n, _)| *n == (QUARANTINE_CAP + 3) as u64));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn quarantine_of_missing_file_errors() {
+        let d = tmpdir("missing");
+        assert!(quarantine(&d.join("nope.json")).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,524 @@
+//! Crash-safety integration suite: interrupted journaled sweeps must
+//! resume bit-identically, poisoned points must quarantine independently
+//! of worker scheduling, corrupt persistent artifacts must be moved aside
+//! (never half-loaded), and a genuinely killed process must recover via
+//! `dse --resume`.
+//!
+//! This suite is the one place that arms **real** faultpoint sites
+//! (`sweep.round`, `eval.point`, `memo.save`, `memo.load`, `board.toml`):
+//! faultpoint state is process-global, so real-site arming lives here, in
+//! its own test process, never in lib unit tests. Tests serialize on a
+//! local mutex because the harness runs them on concurrent threads.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use zynq_estimator::apps::matmul::Matmul;
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::dse::{
+    enumerate_pruned, DsePoint, DseSpace, EvalMemo, KernelSpace, Objective, OrderMode, PruneStats,
+    RecoverySession, SweepCheckpoint, SweepContext, SweepJournal,
+};
+use zynq_estimator::hls::FpgaPart;
+use zynq_estimator::util::faultpoint;
+use zynq_estimator::util::Rng;
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking fault test (that is the point of some of them) must not
+    // wedge the rest of the suite.
+    FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("zynq_crashrec_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn assert_bitwise_ranking(label: &str, a: &[DsePoint], b: &[DsePoint]) {
+    assert_eq!(a.len(), b.len(), "{label}: ranking length diverged");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.codesign.name, y.codesign.name, "{label}: rank {i}");
+        assert_eq!(x.est_ms.to_bits(), y.est_ms.to_bits(), "{label}: rank {i}");
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label}: rank {i}");
+        assert_eq!(x.edp.to_bits(), y.edp.to_bits(), "{label}: rank {i}");
+        assert_eq!(x.fabric_util.to_bits(), y.fabric_util.to_bits(), "{label}: rank {i}");
+    }
+}
+
+/// Run a journaled recoverable sweep to completion and save the memo;
+/// returns the ranking, the stats and the saved file's bytes.
+fn recoverable_run(
+    ctx: &SweepContext<'_>,
+    space: &DseSpace,
+    path: &Path,
+    workers: usize,
+    resume: bool,
+) -> (Vec<DsePoint>, PruneStats, Vec<u8>) {
+    let (mut memo, recovered) = EvalMemo::load_with_recovery(path).unwrap();
+    let mut session = RecoverySession::open(path, recovered, resume).unwrap();
+    let (points, stats) = ctx
+        .explore_warm_recoverable(
+            space,
+            &mut memo,
+            Objective::Time,
+            workers,
+            OrderMode::Ranked,
+            &mut session,
+        )
+        .unwrap();
+    drop(session);
+    memo.save(path).unwrap();
+    (points, stats, std::fs::read(path).unwrap())
+}
+
+/// Run a journaled sweep with `sweep.round@k!error` armed. Returns `true`
+/// when the injected fault fired (the sweep was interrupted after round
+/// `k` committed); `false` when the sweep outran the fault and completed
+/// (in which case the memo is saved, exactly like an uninterrupted run).
+fn interrupted_run(
+    ctx: &SweepContext<'_>,
+    space: &DseSpace,
+    path: &Path,
+    workers: usize,
+    k: u64,
+) -> bool {
+    let guard = faultpoint::arm(&format!("sweep.round@{k}!error")).unwrap();
+    let (mut memo, recovered) = EvalMemo::load_with_recovery(path).unwrap();
+    let mut session = RecoverySession::open(path, recovered, false).unwrap();
+    let res = ctx.explore_warm_recoverable(
+        space,
+        &mut memo,
+        Objective::Time,
+        workers,
+        OrderMode::Ranked,
+        &mut session,
+    );
+    drop(guard);
+    drop(session);
+    match res {
+        Err(e) => {
+            assert!(
+                format!("{e:#}").contains("sweep.round"),
+                "unexpected failure (not the injected fault): {e:#}"
+            );
+            true
+        }
+        Ok(_) => {
+            memo.save(path).unwrap();
+            false
+        }
+    }
+}
+
+#[test]
+fn interrupted_sweep_resumes_bit_identical_for_any_worker_count() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(128, 64).build_program(&board);
+    let space = DseSpace::from_program(&program).with_mixed();
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+
+    let ref_dir = tmpdir("resume_ref");
+    let ref_path = ref_dir.join("memo.json");
+    let (ref_pts, _, ref_bytes) = recoverable_run(&ctx, &space, &ref_path, 2, false);
+    assert!(!ref_pts.is_empty());
+    assert!(
+        !SweepJournal::wal_path(&ref_path).exists(),
+        "a successful save must delete the journal"
+    );
+    assert!(
+        !SweepCheckpoint::ckpt_path(&ref_path).exists(),
+        "a successful save must delete the checkpoint"
+    );
+
+    for k in [1u64, 2] {
+        for workers in [1usize, 2, 4] {
+            let d = tmpdir(&format!("resume_k{k}_w{workers}"));
+            let path = d.join("memo.json");
+            let fired = interrupted_run(&ctx, &space, &path, workers, k);
+            if k == 1 {
+                assert!(fired, "any non-empty sweep commits a first round");
+            }
+            if fired {
+                assert!(!path.exists(), "the crash predates the first save");
+                assert!(SweepJournal::wal_path(&path).exists());
+                assert!(SweepCheckpoint::ckpt_path(&path).exists());
+                let (pts, _, bytes) = recoverable_run(&ctx, &space, &path, workers, true);
+                assert_bitwise_ranking(&format!("k={k} workers={workers}"), &ref_pts, &pts);
+                assert_eq!(
+                    bytes, ref_bytes,
+                    "k={k} workers={workers}: resumed memo is not bit-identical"
+                );
+            } else {
+                assert_eq!(std::fs::read(&path).unwrap(), ref_bytes);
+            }
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+
+    // A second crash *during the resume* must still recover: interrupt at
+    // round 1, resume with round 1 armed again (it fires in the resumed
+    // run), then resume once more to completion.
+    let d = tmpdir("resume_twice");
+    let path = d.join("memo.json");
+    assert!(interrupted_run(&ctx, &space, &path, 2, 1));
+    {
+        let guard = faultpoint::arm("sweep.round@1!error").unwrap();
+        let (mut memo, recovered) = EvalMemo::load_with_recovery(&path).unwrap();
+        let mut session = RecoverySession::open(&path, recovered, true).unwrap();
+        let res = ctx.explore_warm_recoverable(
+            &space,
+            &mut memo,
+            Objective::Time,
+            2,
+            OrderMode::Ranked,
+            &mut session,
+        );
+        drop(guard);
+        assert!(res.is_err(), "the re-armed fault must interrupt the resume too");
+    }
+    let (pts, _, bytes) = recoverable_run(&ctx, &space, &path, 2, true);
+    assert_bitwise_ranking("second-crash resume", &ref_pts, &pts);
+    assert_eq!(bytes, ref_bytes, "second-crash resume memo diverged");
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn prop_resume_identity_on_random_spaces() {
+    // The acceptance proptest: on randomized mixed/homogeneous spaces and
+    // across worker counts, crash-at-round-1 + resume must reproduce the
+    // uninterrupted ranking and memo file bit for bit.
+    let _g = lock();
+    faultpoint::disarm_all();
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(128, 64).build_program(&board);
+    let pool = [4u32, 8, 16, 32, 64];
+    for i in 0..3u64 {
+        let seed = 0xC4A5_0000u64 + i;
+        let mut rng = Rng::new(seed);
+        let kernels = program
+            .kernels
+            .iter()
+            .filter(|kern| kern.targets.fpga)
+            .map(|kern| {
+                let n_unrolls = rng.gen_range(2, 5) as usize;
+                let mut unrolls: Vec<u32> = Vec::new();
+                while unrolls.len() < n_unrolls {
+                    let u = pool[rng.gen_range(0, pool.len() as u64) as usize];
+                    if !unrolls.contains(&u) {
+                        unrolls.push(u);
+                    }
+                }
+                KernelSpace {
+                    kernel: kern.name.clone(),
+                    unrolls,
+                    max_instances: rng.gen_range(1, 3) as u32,
+                    try_smp: kern.targets.smp && rng.next_f64() < 0.5,
+                }
+            })
+            .collect();
+        let space = DseSpace {
+            kernels,
+            mixed: rng.next_f64() < 0.6,
+        };
+        let ctx = SweepContext::for_space(&program, &board, &part, &space);
+        let ref_dir = tmpdir(&format!("prop_ref_{i}"));
+        let (ref_pts, _, ref_bytes) =
+            recoverable_run(&ctx, &space, &ref_dir.join("memo.json"), 2, false);
+        for workers in [1usize, 3] {
+            let d = tmpdir(&format!("prop_{i}_w{workers}"));
+            let path = d.join("memo.json");
+            if interrupted_run(&ctx, &space, &path, workers, 1) {
+                let (pts, _, bytes) = recoverable_run(&ctx, &space, &path, workers, true);
+                assert_bitwise_ranking(&format!("seed {seed} workers={workers}"), &ref_pts, &pts);
+                assert_eq!(bytes, ref_bytes, "seed {seed} workers={workers}: memo diverged");
+            } else {
+                // Degenerate space (no evaluations, no rounds): the run
+                // completed; it must still match the reference.
+                assert_eq!(
+                    std::fs::read(&path).unwrap(),
+                    ref_bytes,
+                    "seed {seed} workers={workers}: memo diverged"
+                );
+            }
+            std::fs::remove_dir_all(&d).ok();
+        }
+        std::fs::remove_dir_all(&ref_dir).ok();
+    }
+}
+
+#[test]
+fn torn_wal_tail_is_dropped_on_recovery() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(128, 64).build_program(&board);
+    let space = DseSpace::from_program(&program).with_mixed();
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+
+    let ref_dir = tmpdir("torn_ref");
+    let (ref_pts, _, ref_bytes) =
+        recoverable_run(&ctx, &space, &ref_dir.join("memo.json"), 2, false);
+
+    let d = tmpdir("torn");
+    let path = d.join("memo.json");
+    assert!(interrupted_run(&ctx, &space, &path, 2, 1));
+    // Simulate the torn write of the crash itself: a partial JSON line
+    // with no trailing newline appended to the journal.
+    let wal = SweepJournal::wal_path(&path);
+    let mut text = std::fs::read_to_string(&wal).unwrap();
+    text.push_str("{\"t\":\"pt\",\"fp\":\"00000000dead");
+    std::fs::write(&wal, &text).unwrap();
+
+    let (memo, recovered) = EvalMemo::load_with_recovery(&path).unwrap();
+    let rec = recovered.expect("committed rounds must be recovered despite the torn tail");
+    assert!(rec.rounds >= 1 && rec.n_points() > 0);
+    drop(memo);
+
+    let (pts, _, bytes) = recoverable_run(&ctx, &space, &path, 2, true);
+    assert_bitwise_ranking("torn-tail resume", &ref_pts, &pts);
+    assert_eq!(bytes, ref_bytes, "torn-tail resume memo diverged");
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn memo_save_fault_preserves_the_previous_file() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let d = tmpdir("savefault");
+    let path = d.join("memo.json");
+    let memo = EvalMemo::new();
+    memo.save(&path).unwrap();
+    let v1 = std::fs::read(&path).unwrap();
+    // A journal sibling left by an in-flight sweep must survive a failed
+    // save too (save only deletes the sidecars after the atomic rename).
+    let wal = SweepJournal::wal_path(&path);
+    std::fs::write(&wal, "{\"t\":\"hdr\"}\n").unwrap();
+
+    let guard = faultpoint::arm("memo.save!error").unwrap();
+    let err = memo.save(&path).unwrap_err();
+    drop(guard);
+    assert!(format!("{err:#}").contains("memo.save"), "{err:#}");
+    assert_eq!(std::fs::read(&path).unwrap(), v1, "previous memo clobbered");
+    assert!(wal.exists(), "failed save must not delete the journal");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupt_memo_generations_are_quarantined_with_a_cap() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let d = tmpdir("quarantine");
+    let path = d.join("memo.json");
+    for i in 0..10u32 {
+        std::fs::write(&path, format!("corrupt generation {i}")).unwrap();
+        let memo = EvalMemo::load_or_new(&path).unwrap();
+        drop(memo);
+        assert!(!path.exists(), "corrupt memo must be moved aside");
+    }
+    let baks: Vec<String> = std::fs::read_dir(&d)
+        .unwrap()
+        .flatten()
+        .filter_map(|e| e.file_name().to_str().map(String::from))
+        .filter(|n| n.contains(".bak."))
+        .collect();
+    assert!(baks.len() <= zynq_estimator::util::persist::QUARANTINE_CAP, "{baks:?}");
+    assert!(
+        baks.iter().any(|n| n.ends_with(".bak.10")),
+        "the newest generation must be retained: {baks:?}"
+    );
+    assert!(
+        !baks.iter().any(|n| n.ends_with(".bak.1")),
+        "the oldest generations must be evicted: {baks:?}"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn poisoned_point_is_quarantined_identically_for_any_worker_count() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(128, 64).build_program(&board);
+    let space = DseSpace::from_program(&program).with_mixed();
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let (cands, _) = enumerate_pruned(&ctx, &space);
+    assert!(cands.len() > 1, "space too small for the poison test");
+    // Candidate 0 is always in the first FIFO round, so it is evaluated
+    // (never bound-cut) regardless of worker count.
+    let target = cands[0].name.clone();
+    let tag = faultpoint::str_tag(&target);
+
+    let mut reference: Option<(Vec<DsePoint>, PruneStats)> = None;
+    for workers in [1usize, 2, 4] {
+        let guard = faultpoint::arm(&format!("eval.point#{tag:x}!panic")).unwrap();
+        let (pts, stats) =
+            ctx.explore_pruned_with(&space, Objective::Time, workers, OrderMode::Fifo);
+        drop(guard);
+        assert_eq!(stats.poisoned, 1, "workers={workers}: {stats:?}");
+        assert!(
+            pts.iter().all(|p| p.codesign.name != target),
+            "workers={workers}: poisoned point must be excluded from the ranking"
+        );
+        match &reference {
+            None => reference = Some((pts, stats)),
+            Some((ref_pts, ref_stats)) => {
+                assert_eq!(&stats, ref_stats, "workers={workers}");
+                assert_bitwise_ranking(&format!("poison workers={workers}"), ref_pts, &pts);
+            }
+        }
+    }
+    // Disarmed, the same point evaluates normally again.
+    let (clean, clean_stats) = ctx.explore_pruned_with(&space, Objective::Time, 2, OrderMode::Fifo);
+    assert_eq!(clean_stats.poisoned, 0, "{clean_stats:?}");
+    assert!(clean.iter().any(|p| p.codesign.name == target));
+}
+
+#[test]
+fn worker_reuse_after_a_poisoned_evaluation_is_bit_identical() {
+    // The simulator-reuse contract behind poison isolation: a worker whose
+    // evaluation panicked is reset (or rebuilt) before its next point, and
+    // every later result must be bit-identical to a fresh worker's.
+    let _g = lock();
+    faultpoint::disarm_all();
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(128, 64).build_program(&board);
+    let space = DseSpace::from_program(&program).with_mixed();
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let (cands, _) = enumerate_pruned(&ctx, &space);
+    assert!(cands.len() > 1);
+
+    let fresh = ctx.worker().evaluate(&cands[1]);
+    let fresh0 = ctx.worker().evaluate(&cands[0]);
+
+    let mut w = ctx.worker();
+    assert!(
+        w.evaluate(&cands[0]).map(|p| p.est_ms.to_bits())
+            == fresh0.as_ref().map(|p| p.est_ms.to_bits()),
+        "pre-poison evaluation diverged from fresh"
+    );
+    let tag = faultpoint::str_tag(&cands[1].name);
+    let guard = faultpoint::arm(&format!("eval.point#{tag:x}!panic")).unwrap();
+    let poisoned = catch_unwind(AssertUnwindSafe(|| w.evaluate(&cands[1])));
+    drop(guard);
+    assert!(poisoned.is_err(), "the armed point must panic");
+
+    // The same worker, reused after the panic, reproduces the fresh
+    // results bit for bit — `Simulator::reset_owned` rewinds everything.
+    match (w.evaluate(&cands[1]), fresh) {
+        (Some(a), Some(b)) => assert_bitwise_ranking("reuse cands[1]", &[b], &[a]),
+        (a, b) => assert_eq!(a.is_none(), b.is_none(), "runnability diverged"),
+    }
+    match (w.evaluate(&cands[0]), fresh0) {
+        (Some(a), Some(b)) => assert_bitwise_ranking("reuse cands[0]", &[b], &[a]),
+        (a, b) => assert_eq!(a.is_none(), b.is_none(), "runnability diverged"),
+    }
+}
+
+#[test]
+fn board_toml_faultpoint_gates_ingestion() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let guard = faultpoint::arm("board.toml!error").unwrap();
+    let err = BoardConfig::from_toml("name = \"x\"").unwrap_err();
+    assert!(format!("{err:#}").contains("board.toml"), "{err:#}");
+    drop(guard);
+    assert!(BoardConfig::from_toml("name = \"x\"").is_ok());
+}
+
+#[test]
+fn cli_fault_recovery_study_and_exit_codes() {
+    let _g = lock();
+    faultpoint::disarm_all();
+    let argv = |parts: &[&str]| -> Vec<String> { parts.iter().map(|s| s.to_string()).collect() };
+    // The CLI fault-recovery study: every interrupted sweep must recover
+    // bit-identically (exit 0).
+    let study = argv(&["fault-recovery", "--n", "128", "--workers", "2"]);
+    let code = zynq_estimator::cli::run(&study).unwrap();
+    assert_eq!(code, 0, "fault-recovery study reported a divergence");
+    // An injected memo-load fault surfaces as corrupt input: exit code 3.
+    let d = tmpdir("cli_exit3");
+    let memo = d.join("memo.json").display().to_string();
+    let faulty = argv(&[
+        "dse", "--app", "matmul", "--n", "64", "--memo", &memo, "--faults", "memo.load!error",
+    ]);
+    let code = zynq_estimator::cli::run(&faulty).unwrap();
+    assert_eq!(code, 3, "injected load fault must map to the corrupt-input exit code");
+    std::fs::remove_dir_all(&d).ok();
+    faultpoint::disarm_all();
+}
+
+#[test]
+fn aborted_process_resumes_bit_identical_through_the_cli() {
+    // The real thing: a child process killed mid-sweep (process abort —
+    // the stand-in for kill -9), then `dse --resume` in a new process.
+    // The final memo file and the rendered ranking table must be bitwise
+    // identical to a never-killed control run.
+    let _g = lock();
+    let exe = env!("CARGO_BIN_EXE_zynq-estimator");
+    let d = tmpdir("abort_cli");
+    let control = d.join("control.json");
+    let crashed = d.join("crashed.json");
+    let base = [
+        "dse", "--app", "matmul", "--n", "128", "--mixed", "--order", "ranked", "--workers", "2",
+    ];
+
+    let run = |memo: &Path, extra: &[&str], faults: Option<&str>| {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.args(base);
+        cmd.arg("--memo");
+        cmd.arg(memo);
+        cmd.args(extra);
+        match faults {
+            Some(f) => cmd.env("ZYNQ_FAULTS", f),
+            None => cmd.env_remove("ZYNQ_FAULTS"),
+        };
+        cmd.output().unwrap()
+    };
+
+    let ctrl = run(&control, &[], None);
+    assert!(ctrl.status.success(), "{}", String::from_utf8_lossy(&ctrl.stderr));
+
+    let killed = run(&crashed, &[], Some("sweep.round@1!abort"));
+    assert!(!killed.status.success(), "the armed abort must kill the child");
+    assert!(
+        SweepJournal::wal_path(&crashed).exists(),
+        "the killed sweep must leave its journal behind"
+    );
+    assert!(!crashed.exists(), "the crash predates the first save");
+
+    let resumed = run(&crashed, &["--resume"], None);
+    assert!(resumed.status.success(), "{}", String::from_utf8_lossy(&resumed.stderr));
+    assert_eq!(
+        std::fs::read(&control).unwrap(),
+        std::fs::read(&crashed).unwrap(),
+        "resumed memo is not bit-identical to the control run"
+    );
+    // The ranked table (between the '== DSE:' banner and the stats line)
+    // must match exactly; timing lines outside it are nondeterministic.
+    let table = |out: &[u8]| -> String {
+        String::from_utf8_lossy(out)
+            .lines()
+            .skip_while(|l| !l.starts_with("== DSE:"))
+            .take_while(|l| !l.starts_with("pruning:"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let (t1, t2) = (table(&ctrl.stdout), table(&resumed.stdout));
+    assert!(t1.starts_with("== DSE:"), "control output missing the table");
+    assert_eq!(t1, t2, "resumed ranking table diverged");
+    std::fs::remove_dir_all(&d).ok();
+}
