@@ -112,7 +112,8 @@ COMMANDS (one per paper experiment, plus utilities):
   paraver        --app matmul [--n 512] [--out out/]            Fig. 7 (.prv bundles)
   graph          --app cholesky [--nb 4] [--out fig8.dot]       Fig. 8 (DOT)
   estimate       --app <app> [--n N] [--bs BS] --accel k:U<u>... [--smp k]...
-                 [--policy greedy|lookahead] [--real]           one co-design
+                 [--policy greedy|lookahead] [--real]           one co-design, served from /
+                 [--memo m.json]                                 recorded into the eval memo
   trace          --app <app> [--n N] [--bs BS] --out t.jsonl    dump basic trace (§IV)
   sim-trace      --trace t.jsonl --accel k:U<u>... [--smp k]... simulate a trace file
   hls            --kernel <name> [--bs 64] [--unroll 32]        Vivado-HLS-style report
@@ -147,9 +148,23 @@ COMMANDS (one per paper experiment, plus utilities):
   dse memo <stats|gc|compact> --memo m.json                     memo hygiene: inspect the
                  [--keep-contexts 16] [--keep-points N]          two-level layout, LRU-by-context
                  [--keep-kernels 256]                            eviction (gc), versioned rewrite
-                                                                 (compact); retained entries stay
-                                                                 bit-exact
-  energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report
+                 [--max-bytes B [--app-floor 1]]                 (compact); retained entries stay
+                                                                 bit-exact; --max-bytes switches
+                                                                 gc to a serialized-size budget
+                                                                 that never evicts each app's
+                                                                 --app-floor most recent contexts
+  serve          [--memo m.json] [--listen host:port]           estimator-as-a-service daemon:
+                 [--workers N] [--save-every 8]                  NDJSON requests (estimate|energy|
+                 [--max-bytes B [--app-floor 1]]                 dse|memo|ping|shutdown), one per
+                                                                 line on stdin and on each TCP
+                                                                 connection; answers from one
+                                                                 shared eval memo with in-flight
+                                                                 query coalescing and periodic
+                                                                 WAL-journaled saves (protocol
+                                                                 reference in README)
+  energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report through the
+                 [--memo m.json] [--breakdown]                   eval memo (--breakdown: per-rail
+                                                                 split via detailed simulation)
   robustness     [--n 512] [--trials 25]                        decision vs HLS-error study
   analyze-prv    --prv trace.prv [--row trace.row]              bottlenecks from a Paraver trace
   lint           --trace t.jsonl                                validate a basic trace (§IV)
@@ -246,6 +261,7 @@ fn run_cmd(cmd: &str, args: &Args) -> anyhow::Result<i32> {
         "sim-trace" => cmd_sim_trace(args, &board),
         "hls" => cmd_hls(args, &board),
         "dse" => cmd_dse(args, &board),
+        "serve" => cmd_serve(args, &board),
         "energy" => cmd_energy(args, &board),
         "robustness" => cmd_robustness(args, &board),
         "analyze-prv" => cmd_analyze_prv(args),
@@ -354,6 +370,83 @@ fn codesign_from_args(args: &Args) -> anyhow::Result<CoDesign> {
     Ok(cd)
 }
 
+/// Shared memo-backed path of the one-shot `estimate`/`energy` commands.
+///
+/// Both serve from — and record into — the same [`EvalMemo`] the warm
+/// sweeps and the daemon use: the memo is the single evaluation cache.
+/// With `--memo <file>` the hit/recorded status goes to **stderr** (so
+/// stdout stays byte-identical between a fresh evaluation and a memo
+/// hit — and identical to the daemon's `text` field for the same query);
+/// without it the query runs against a transient in-memory memo.
+///
+/// [`EvalMemo`]: crate::dse::EvalMemo
+fn run_point_query(
+    args: &Args,
+    board: &BoardConfig,
+    program: &TaskProgram,
+    app: &str,
+    n: u64,
+    bs: u64,
+    cd: &CoDesign,
+    energy_view: bool,
+) -> anyhow::Result<()> {
+    let part = FpgaPart::xc7z045();
+    match memo_path_from_args(args)? {
+        Some(memo_path) => {
+            let path = std::path::Path::new(memo_path);
+            let (mut memo, recovered) =
+                crate::dse::EvalMemo::load_with_recovery(path).map_err(corrupt_input)?;
+            if let Some(rec) = &recovered {
+                eprintln!(
+                    "recovered {} journaled points across {} contexts ({} committed rounds) from {}",
+                    rec.n_points(),
+                    rec.contexts.len(),
+                    rec.rounds,
+                    crate::dse::SweepJournal::wal_path(path).display(),
+                );
+            }
+            // Journal the fresh evaluation (if any) as one committed WAL
+            // round before saving, so even a crash between answer and
+            // save cannot lose it — the same contract warm sweeps have.
+            let mut journal = crate::dse::SweepJournal::open(path)?;
+            let out = crate::service::point_query(
+                program,
+                board,
+                &part,
+                app,
+                n,
+                bs,
+                cd,
+                energy_view,
+                &mut memo,
+                Some(&mut journal),
+            )?;
+            drop(journal);
+            memo.save(path)?;
+            print!("{}", out.reply.text);
+            eprintln!(
+                "memo: {} -> {memo_path} ({} points, {} contexts, {} kernel entries)",
+                if out.hit {
+                    "L2 hit, 0 points evaluated"
+                } else {
+                    "miss, 1 point evaluated and recorded"
+                },
+                memo.n_points(),
+                memo.n_contexts(),
+                memo.n_kernel_entries(),
+            );
+        }
+        None => {
+            let mut memo = crate::dse::EvalMemo::new();
+            let out = crate::service::point_query(
+                program, board, &part, app, n, bs, cd, energy_view, &mut memo, None,
+            )?;
+            print!("{}", out.reply.text);
+        }
+    }
+    Ok(())
+}
+
 fn cmd_estimate(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let app = args
         .get("app")
@@ -367,14 +460,26 @@ fn cmd_estimate(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         Some(p) => Policy::parse(p)
             .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}' (greedy|lookahead)"))?,
     };
-    let mut model = sim::EstimatorModel::new(board);
-    let res = sim::simulate(&program, &cd, board, &FpgaPart::xc7z045(), policy, &mut model)?;
-    println!(
-        "== estimator: {app} n={n} bs={bs} accels={:?} policy={}",
-        cd.accels.iter().map(|a| a.to_spec_string()).collect::<Vec<_>>(),
-        policy.as_str()
-    );
-    print!("{}", utilization_report(&res));
+    if matches!(policy, Policy::Greedy) {
+        // Default-policy estimates route through the shared evaluation
+        // memo (the key space the warm sweeps and the daemon use).
+        run_point_query(args, board, &program, app, n, bs, &cd, false)?;
+    } else {
+        // Non-default policies are outside the memo contract (the memo
+        // caches the sweep engine's default-policy evaluation): run the
+        // detailed simulation directly.
+        if args.has("memo") {
+            eprintln!("note: --memo caches the default (greedy) policy only; ignored");
+        }
+        let mut model = sim::EstimatorModel::new(board);
+        let res = sim::simulate(&program, &cd, board, &FpgaPart::xc7z045(), policy, &mut model)?;
+        println!(
+            "== estimator: {app} n={n} bs={bs} accels={:?} policy={}",
+            cd.accels.iter().map(|a| a.to_spec_string()).collect::<Vec<_>>(),
+            policy.as_str()
+        );
+        print!("{}", utilization_report(&res));
+    }
     if args.has("real") {
         let mean = sim::emulate_mean_ms(&program, &cd, board, experiments::BOARD_REPS)?;
         println!("board emulator mean of {} runs: {mean:.3} ms", experiments::BOARD_REPS);
@@ -880,10 +985,29 @@ fn cmd_dse_memo(args: &Args) -> anyhow::Result<i32> {
             print!("{}", memo.stats().render());
         }
         "gc" => {
-            let keep_contexts = args.u64_or("keep-contexts", 16)? as usize;
-            let keep_points = args.u64_or("keep-points", u64::MAX)?.min(usize::MAX as u64) as usize;
-            let keep_kernels = args.u64_or("keep-kernels", 256)? as usize;
-            let report = memo.gc(keep_contexts, keep_points, keep_kernels);
+            let report = if args.has("max-bytes") {
+                // Byte-budget policy: evict LRU contexts (then kernel
+                // entries) until the serialized memo fits, but never the
+                // `--app-floor` most recent contexts of any app.
+                let max_bytes = args
+                    .get("max-bytes")
+                    .ok_or_else(|| anyhow::anyhow!("--max-bytes requires a byte count"))?
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("--max-bytes expects an integer byte count"))?
+                    .min(usize::MAX as u64) as usize;
+                let app_floor = args.u64_or("app-floor", 1)? as usize;
+                memo.gc_bytes(max_bytes, app_floor)
+            } else {
+                anyhow::ensure!(
+                    !args.has("app-floor"),
+                    "--app-floor applies to the --max-bytes byte-budget policy"
+                );
+                let keep_contexts = args.u64_or("keep-contexts", 16)? as usize;
+                let keep_points =
+                    args.u64_or("keep-points", u64::MAX)?.min(usize::MAX as u64) as usize;
+                let keep_kernels = args.u64_or("keep-kernels", 256)? as usize;
+                memo.gc(keep_contexts, keep_points, keep_kernels)
+            };
             memo.save(&path)?;
             let after = std::fs::metadata(&path)?.len();
             println!(
@@ -910,6 +1034,40 @@ fn cmd_dse_memo(args: &Args) -> anyhow::Result<i32> {
         other => anyhow::bail!("unknown memo action '{other}' (stats|gc|compact)"),
     }
     Ok(0)
+}
+
+/// `serve`: the estimator as a resident NDJSON daemon over one shared
+/// evaluation memo (see [`crate::service`]). Requests arrive one JSON
+/// object per line on stdin (and each TCP connection with `--listen`);
+/// responses leave the same way on stdout. Diagnostics go to stderr
+/// only. Exit code 0 on clean shutdown, 1 when a memo save failed
+/// (degraded — the WAL retains the unsaved delta), 3 when the memo file
+/// could not be loaded.
+fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
+    let listen = match (args.has("listen"), args.get("listen")) {
+        (false, _) => None,
+        (true, Some(addr)) => Some(addr.to_string()),
+        (true, None) => anyhow::bail!("--listen requires an address (e.g. --listen 127.0.0.1:7070)"),
+    };
+    let max_bytes = match (args.has("max-bytes"), args.get("max-bytes")) {
+        (false, _) => None,
+        (true, Some(v)) => Some(
+            v.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--max-bytes expects an integer byte count"))?
+                .min(usize::MAX as u64) as usize,
+        ),
+        (true, None) => anyhow::bail!("--max-bytes requires a byte count"),
+    };
+    let cfg = crate::service::ServeConfig {
+        memo_path: memo_path_from_args(args)?.map(PathBuf::from),
+        listen,
+        workers: args.u64_or("workers", 0)? as usize,
+        save_every: args.u64_or("save-every", 8)?.max(1),
+        max_bytes,
+        app_floor: args.u64_or("app-floor", 1)? as usize,
+    };
+    let svc = crate::service::Service::new(board.clone(), cfg).map_err(corrupt_input)?;
+    crate::service::daemon::run(svc)
 }
 
 /// `bench-check`: compare a bench run's `BENCH_*.json` against a
@@ -1005,36 +1163,44 @@ fn cmd_energy(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let bs = args.u64_or("bs", 64)?;
     let program = build_app_program(app, n, bs, board)?;
     let cd = codesign_from_args(args)?;
-    let res = sim::estimate(&program, &cd, board)?;
-    let cm = CostModel::from_board(board);
-    let resources: Vec<crate::hls::Resources> = cd
-        .accels
-        .iter()
-        .map(|a| {
-            let kid = program
-                .kernel_id(&a.kernel)
-                .ok_or_else(|| anyhow::anyhow!("unknown kernel '{}'", a.kernel))?;
-            Ok(cm
-                .estimate(&a.kernel, &program.kernel(kid).profile, a.unroll)
-                .resources)
-        })
-        .collect::<anyhow::Result<_>>()?;
-    let part = FpgaPart::xc7z045();
-    let util = part.utilization(&resources);
-    let e = crate::power::PowerModel::default().energy(
-        &res,
-        &resources,
-        util,
-        board.fabric_freq_mhz,
-    );
-    println!("== energy: {app} n={n}");
-    println!("  makespan:        {:.3} ms", e.makespan_s * 1e3);
-    println!("  static energy:   {:.3} J", e.static_j);
-    println!("  SMP dynamic:     {:.3} J", e.smp_dynamic_j);
-    println!("  accel dynamic:   {:.3} J", e.accel_dynamic_j);
-    println!("  DMA dynamic:     {:.3} J", e.dma_dynamic_j);
-    println!("  total:           {:.3} J  (mean {:.2} W)", e.total_j(), e.mean_power_w());
-    println!("  EDP:             {:.4} mJ*s", e.edp() * 1e3);
+    if args.has("breakdown") {
+        // Detailed per-rail energy split: derived from a fresh detailed
+        // simulation, not the memo (the memo records totals only).
+        let res = sim::estimate(&program, &cd, board)?;
+        let cm = CostModel::from_board(board);
+        let resources: Vec<crate::hls::Resources> = cd
+            .accels
+            .iter()
+            .map(|a| {
+                let kid = program
+                    .kernel_id(&a.kernel)
+                    .ok_or_else(|| anyhow::anyhow!("unknown kernel '{}'", a.kernel))?;
+                Ok(cm
+                    .estimate(&a.kernel, &program.kernel(kid).profile, a.unroll)
+                    .resources)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let part = FpgaPart::xc7z045();
+        let util = part.utilization(&resources);
+        let e = crate::power::PowerModel::default().energy(
+            &res,
+            &resources,
+            util,
+            board.fabric_freq_mhz,
+        );
+        println!("== energy: {app} n={n}");
+        println!("  makespan:        {:.3} ms", e.makespan_s * 1e3);
+        println!("  static energy:   {:.3} J", e.static_j);
+        println!("  SMP dynamic:     {:.3} J", e.smp_dynamic_j);
+        println!("  accel dynamic:   {:.3} J", e.accel_dynamic_j);
+        println!("  DMA dynamic:     {:.3} J", e.dma_dynamic_j);
+        println!("  total:           {:.3} J  (mean {:.2} W)", e.total_j(), e.mean_power_w());
+        println!("  EDP:             {:.4} mJ*s", e.edp() * 1e3);
+        return Ok(0);
+    }
+    // Default: totals view through the shared evaluation memo, identical
+    // to the daemon's `energy` response.
+    run_point_query(args, board, &program, app, n, bs, &cd, true)?;
     Ok(0)
 }
 
@@ -1361,6 +1527,74 @@ mod tests {
         assert!(run(&argv(&bogus)).is_err());
         assert!(run(&argv("dse memo stats")).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn point_queries_share_one_memo_entry() {
+        let dir = std::env::temp_dir().join("zynq_cli_point_memo");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("m.json");
+        std::fs::remove_file(&memo).ok();
+        let est = format!(
+            "estimate --app matmul --n 256 --bs 64 --accel mxm64:U32 --memo {}",
+            memo.display()
+        );
+        assert_eq!(run(&argv(&est)).unwrap(), 0);
+        assert!(memo.exists());
+        let loaded = crate::dse::EvalMemo::load_or_new(&memo).unwrap();
+        assert_eq!(loaded.n_points(), 1, "one evaluation recorded");
+        // The repeat and the energy view must both hit the same entry,
+        // not record a second one (bit-identity of the served numbers is
+        // asserted by the service conformance suite over the binary).
+        assert_eq!(run(&argv(&est)).unwrap(), 0);
+        let energy = format!(
+            "energy --app matmul --n 256 --bs 64 --accel mxm64:U32 --memo {}",
+            memo.display()
+        );
+        assert_eq!(run(&argv(&energy)).unwrap(), 0);
+        let loaded = crate::dse::EvalMemo::load_or_new(&memo).unwrap();
+        assert_eq!(loaded.n_points(), 1, "hits must not re-record");
+        // The detailed breakdown view still renders (off-memo path).
+        let breakdown = format!("{energy} --breakdown");
+        assert_eq!(run(&argv(&breakdown)).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn memo_gc_byte_budget_flags() {
+        let dir = std::env::temp_dir().join("zynq_cli_memo_bytes");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("m.json");
+        std::fs::remove_file(&memo).ok();
+        for n in [128, 256] {
+            let cmd = format!(
+                "dse --app matmul --n {n} --bs 64 --workers 2 --top 3 --memo {}",
+                memo.display()
+            );
+            assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        }
+        // A zero budget with the default per-app floor keeps exactly the
+        // most recent matmul context.
+        let gc = format!("dse memo gc {} --max-bytes 0", memo.display());
+        assert_eq!(run(&argv(&gc)).unwrap(), 0);
+        let loaded = crate::dse::EvalMemo::load_or_new(&memo).unwrap();
+        assert_eq!(loaded.n_contexts(), 1, "per-app floor survives a zero budget");
+        // Bare --max-bytes and misplaced --app-floor are usage errors.
+        let bare = format!("dse memo gc {} --max-bytes", memo.display());
+        assert!(run(&argv(&bare)).is_err());
+        let misplaced = format!("dse memo gc {} --app-floor 2", memo.display());
+        assert!(run(&argv(&misplaced)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_flag_validation() {
+        // Bad flag shapes must fail before the daemon enters its stdin
+        // loop (a full daemon session is driven by the conformance suite
+        // over the real binary).
+        assert!(run(&argv("serve --listen")).is_err());
+        assert!(run(&argv("serve --max-bytes")).is_err());
+        assert!(run(&argv("serve --memo")).is_err());
     }
 
     #[test]

@@ -186,6 +186,16 @@ impl Objective {
             _ => None,
         }
     }
+
+    /// The CLI/protocol name this objective parses back from —
+    /// `Objective::parse(o.as_str()) == Some(o)` for every variant.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::Time => "time",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
 }
 
 /// One evaluated design point.

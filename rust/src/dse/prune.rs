@@ -128,6 +128,16 @@ impl OrderMode {
             _ => None,
         }
     }
+
+    /// The CLI/protocol name this mode parses back from —
+    /// `OrderMode::parse(m.as_str()) == Some(m)` for every variant.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OrderMode::Fifo => "fifo",
+            OrderMode::BoundAsc => "bound",
+            OrderMode::Ranked => "ranked",
+        }
+    }
 }
 
 /// Candidates evaluated per application per round of the bound-guided

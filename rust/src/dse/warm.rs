@@ -918,6 +918,84 @@ impl EvalMemo {
         report
     }
 
+    /// Bound the **serialized size** of the memo to a byte budget —
+    /// the gc policy of a resident memo (the `serve` daemon and
+    /// `dse memo gc --max-bytes`). Whole contexts are evicted least
+    /// recently used first (ties on fingerprint — deterministic) until
+    /// the serialized document fits `max_bytes`, with one guarantee the
+    /// plain LRU [`EvalMemo::gc`] does not give: the `per_app_floor`
+    /// most-recent contexts of **every** application are never evicted,
+    /// even when the floors alone exceed the budget (floors win over the
+    /// budget — a service must not forget the context a client is
+    /// actively querying just because another app flooded the memo).
+    /// If evicting every unprotected context still leaves the document
+    /// over budget, level-1 kernel entries are trimmed LRU-first too.
+    /// Like every hygiene operation, eviction removes whole
+    /// contexts/entries and never edits a survivor, so retained lookups
+    /// stay bit-exact.
+    pub fn gc_bytes(&mut self, max_bytes: usize, per_app_floor: usize) -> GcReport {
+        let mut report = GcReport::default();
+        if self.to_json().len() <= max_bytes {
+            return report;
+        }
+        // Per-app floors: the most recent `per_app_floor` contexts of each
+        // app (recency ties break on fingerprint, like `gc`).
+        let mut protected: BTreeSet<u64> = BTreeSet::new();
+        for fps in self.app_index.values() {
+            let mut by_recency: Vec<(std::cmp::Reverse<u64>, u64)> = fps
+                .iter()
+                .filter_map(|&fp| {
+                    self.contexts
+                        .get(&fp)
+                        .map(|c| (std::cmp::Reverse(c.last_used), fp))
+                })
+                .collect();
+            by_recency.sort_unstable();
+            protected.extend(by_recency.iter().take(per_app_floor).map(|&(_, fp)| fp));
+        }
+        // Evict unprotected contexts, least recent first.
+        let mut order: Vec<(u64, u64)> = self
+            .contexts
+            .iter()
+            .filter(|(fp, _)| !protected.contains(fp))
+            .map(|(&fp, c)| (c.last_used, fp))
+            .collect();
+        order.sort_unstable();
+        for (_, fp) in order {
+            if self.to_json().len() <= max_bytes {
+                break;
+            }
+            if let Some(c) = self.contexts.remove(&fp) {
+                report.evicted_contexts += 1;
+                report.evicted_points += c.points.len();
+            }
+        }
+        // Still over budget (only floors remain): trim kernel entries.
+        if self.to_json().len() > max_bytes {
+            let mut korder: Vec<(u64, KernelKey)> = self
+                .kernels
+                .iter()
+                .map(|(&k, e)| (e.last_used, k))
+                .collect();
+            korder.sort_unstable();
+            for (_, k) in korder {
+                if self.to_json().len() <= max_bytes {
+                    break;
+                }
+                self.kernels.remove(&k);
+                report.evicted_kernels += 1;
+            }
+        }
+        self.rebuild_index();
+        report
+    }
+
+    /// Recency (logical-clock value) of one context, `None` when unknown —
+    /// what the service journal snapshots after a warm query.
+    pub fn last_used(&self, fingerprint: u64) -> Option<u64> {
+        self.contexts.get(&fingerprint).map(|c| c.last_used)
+    }
+
     /// Compact the memo in place: drop contexts with no points (gc'd or
     /// never-recorded shells) and rebuild the app index. Saving afterwards
     /// rewrites the file in the current schema version with normalized
@@ -1756,6 +1834,115 @@ mod tests {
         let r2 = memo.gc(usize::MAX, usize::MAX, 2);
         assert_eq!(r2.evicted_kernels, 2);
         assert_eq!(memo.n_kernel_entries(), 2);
+    }
+
+    /// A synthetic point for the gc-policy tests — recording does not
+    /// care where the numbers came from, only that they round-trip.
+    fn synthetic_point(ms: f64) -> DsePoint {
+        DsePoint {
+            codesign: CoDesign::new("synthetic"),
+            est_ms: ms,
+            energy_j: ms * 2.0,
+            edp: ms * ms * 1e-3,
+            fabric_util: 0.25,
+        }
+    }
+
+    /// Record one synthetic point into `memo` under a fresh context built
+    /// from `program`, returning its fingerprint.
+    fn record_context(
+        memo: &mut EvalMemo,
+        program: &crate::coordinator::task::TaskProgram,
+        board: &BoardConfig,
+        ms: f64,
+    ) -> u64 {
+        let space = DseSpace::from_program(program);
+        let ctx = fixture(program, board, &space);
+        let fp = context_fingerprint(&ctx);
+        memo.touch(fp);
+        memo.record(&ctx, fp, "synthetic", &synthetic_point(ms));
+        fp
+    }
+
+    #[test]
+    fn gc_bytes_respects_per_app_floors_even_under_zero_budget() {
+        let board = BoardConfig::zynq706();
+        let m128 = Matmul::new(128, 64).build_program(&board);
+        let m256 = Matmul::new(256, 64).build_program(&board);
+        let c128 = crate::apps::cholesky::Cholesky::new(128, 64).build_program(&board);
+        let c256 = crate::apps::cholesky::Cholesky::new(256, 64).build_program(&board);
+        let mut memo = EvalMemo::new();
+        // Recency order: matmul-128, matmul-256, cholesky-128, cholesky-256.
+        let fp_m128 = record_context(&mut memo, &m128, &board, 1.0);
+        let fp_m256 = record_context(&mut memo, &m256, &board, 2.0);
+        let fp_c128 = record_context(&mut memo, &c128, &board, 3.0);
+        let fp_c256 = record_context(&mut memo, &c256, &board, 4.0);
+        assert_eq!(memo.n_contexts(), 4);
+        // Impossible budget: everything evictable goes — but the floor
+        // keeps the most-recent context of *every* app, so a full gc under
+        // the byte budget can never forget matmul-256 or cholesky-256.
+        let report = memo.gc_bytes(0, 1);
+        assert_eq!(report.evicted_contexts, 2);
+        assert_eq!(report.evicted_points, 2);
+        assert!(memo.lookup(fp_m128, "synthetic").is_none());
+        assert!(memo.lookup(fp_c128, "synthetic").is_none());
+        // Survivors stay bit-exact.
+        let m = memo.lookup(fp_m256, "synthetic").expect("matmul floor survives");
+        assert_eq!(m.est_ms.to_bits(), 2.0f64.to_bits());
+        assert_eq!(m.energy_j.to_bits(), 4.0f64.to_bits());
+        let c = memo.lookup(fp_c256, "synthetic").expect("cholesky floor survives");
+        assert_eq!(c.est_ms.to_bits(), 4.0f64.to_bits());
+        // Idempotent once only floors remain.
+        assert_eq!(memo.gc_bytes(0, 1), GcReport::default());
+        assert_eq!(memo.n_contexts(), 2);
+    }
+
+    #[test]
+    fn gc_bytes_evicts_lru_until_the_budget_is_met() {
+        let board = BoardConfig::zynq706();
+        let a = Matmul::new(128, 64).build_program(&board);
+        let b = Matmul::new(256, 64).build_program(&board);
+        let c = Matmul::new(512, 64).build_program(&board);
+        let mut memo = EvalMemo::new();
+        let fp_a = record_context(&mut memo, &a, &board, 1.0);
+        let fp_b = record_context(&mut memo, &b, &board, 2.0);
+        let fp_c = record_context(&mut memo, &c, &board, 3.0);
+        let full = memo.to_json().len();
+        // A budget one byte short of the full document: evicting the
+        // single least-recent unprotected context must suffice.
+        let report = memo.gc_bytes(full - 1, 1);
+        assert_eq!(report.evicted_contexts, 1);
+        assert!(memo.to_json().len() <= full - 1);
+        assert!(memo.lookup(fp_a, "synthetic").is_none(), "LRU context evicted");
+        assert!(memo.lookup(fp_b, "synthetic").is_some());
+        assert!(memo.lookup(fp_c, "synthetic").is_some());
+        // A generous budget is a no-op.
+        assert_eq!(memo.gc_bytes(usize::MAX, 1), GcReport::default());
+        // The sibling index follows the eviction.
+        assert_eq!(memo.sibling_points_ms(&a.app_name, fp_c).len(), 1);
+    }
+
+    #[test]
+    fn gc_bytes_trims_kernel_entries_when_floors_exceed_the_budget() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(256, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = fixture(&p, &board, &space);
+        let fp = context_fingerprint(&ctx);
+        let mut memo = EvalMemo::new();
+        memo.touch(fp);
+        memo.record(&ctx, fp, "synthetic", &synthetic_point(1.0));
+        memo.record_kernels(&ctx, &space);
+        assert_eq!(memo.n_kernel_entries(), 4);
+        // The only context is floored; the budget is impossible, so the
+        // level-1 entries are trimmed instead — and the floored context's
+        // points still serve bit-exactly.
+        let report = memo.gc_bytes(1, 1);
+        assert_eq!(report.evicted_contexts, 0);
+        assert_eq!(report.evicted_kernels, 4);
+        assert_eq!(memo.n_kernel_entries(), 0);
+        let hit = memo.lookup(fp, "synthetic").expect("floored context survives");
+        assert_eq!(hit.est_ms.to_bits(), 1.0f64.to_bits());
     }
 
     #[test]

@@ -32,6 +32,10 @@
 //!   (behind the `pjrt` feature; an API-compatible stub otherwise).
 //! * [`experiments`] — one harness per paper figure; the CLI, benches and
 //!   examples all call through here.
+//! * [`service`] — the estimator as a resident daemon: NDJSON
+//!   request/response protocol, a memo-backed query core shared with the
+//!   one-shot CLI (byte-identical answers by construction), in-flight
+//!   query coalescing and WAL-journaled persistence (`serve` command).
 //! * [`config`] — board/co-design TOML configs.
 //! * [`cli`] — the `zynq-estimator` command-line tool.
 //! * [`fuzz`] — deterministic mutation fuzzing of the byte-ingesting
@@ -76,6 +80,7 @@ pub mod hls;
 pub mod metrics;
 pub mod power;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod trace;
 pub mod util;

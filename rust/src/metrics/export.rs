@@ -183,6 +183,35 @@ pub fn cross_board_json(
     obj(vec![("entries", arr(entries)), ("winners", arr(winners))]).to_json()
 }
 
+/// Machine-readable fields of the daemon's `{"req":"memo","action":"stats"}`
+/// response: the memo layout plus the cumulative service counters. Kept in
+/// the export module so the stats schema lives next to the other
+/// machine-readable schemas (`total_evaluated` is the lifetime counter —
+/// named apart from the per-response `evaluated` field).
+#[allow(clippy::too_many_arguments)]
+pub fn service_stats_fields(
+    stats: &crate::dse::MemoStats,
+    requests: u64,
+    coalesced: u64,
+    total_evaluated: u64,
+    errors: u64,
+    saves: u64,
+    degraded: bool,
+) -> Vec<(String, Value)> {
+    vec![
+        ("contexts".into(), (stats.contexts as u64).into()),
+        ("points".into(), (stats.points as u64).into()),
+        ("kernel_entries".into(), (stats.kernel_entries as u64).into()),
+        ("bytes".into(), (stats.bytes as u64).into()),
+        ("requests".into(), requests.into()),
+        ("coalesced".into(), coalesced.into()),
+        ("total_evaluated".into(), total_evaluated.into()),
+        ("errors".into(), errors.into()),
+        ("saves".into(), saves.into()),
+        ("degraded".into(), degraded.into()),
+    ]
+}
+
 fn csv_escape(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))

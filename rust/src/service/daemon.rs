@@ -1,0 +1,668 @@
+//! The resident estimator daemon behind `zynq-estimator serve`.
+//!
+//! One [`Service`] owns one shared [`EvalMemo`] and answers NDJSON
+//! requests from any number of transports concurrently: the process's
+//! stdin/stdout pair and (with `--listen`) a TCP listener where every
+//! connection speaks the same one-line-per-message protocol. All
+//! transports funnel into [`Service::handle_line`], so the daemon's
+//! semantics are transport-independent and the conformance suite can
+//! drive the cheap pipe transport and trust the TCP one.
+//!
+//! **Coalescing.** Identical in-flight queries (same canonical
+//! [`Envelope::coalesce_key`]) share one evaluation: the first arrival
+//! becomes the *leader* and computes; later arrivals park on a condvar
+//! and receive a clone of the leader's reply, so all N responses are
+//! bitwise identical and the memo sees one recording. Coalescing is
+//! observable only through the cumulative `coalesced` counter of
+//! `{"req":"memo","action":"stats"}` — deliberately not in per-response
+//! fields, which would break response bit-identity.
+//!
+//! **Persistence.** With `--memo <file>` the memo loads with WAL
+//! recovery at startup, journals every fresh evaluation as a committed
+//! WAL round *before* its response is written, and saves atomically
+//! every `--save-every` fresh evaluations, at `memo gc`, and at
+//! shutdown/EOF. A `kill -9` therefore loses at most the in-flight
+//! round — the same contract the recoverable sweeps have. A failed save
+//! degrades cleanly: the daemon keeps answering, the WAL keeps the
+//! delta, and the final exit code turns non-zero so supervisors notice.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::config::BoardConfig;
+use crate::coordinator::task::TaskProgram;
+use crate::dse::{EvalMemo, SweepJournal};
+use crate::hls::FpgaPart;
+use crate::util::json::Value;
+
+use super::proto::{
+    err_line, ok_line, parse_request, Envelope, QueryReply, RequestKind, ServiceError,
+};
+use super::query::{dse_query, point_query};
+
+/// Daemon configuration (the `serve` CLI flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Persistent memo file; `None` serves from a process-local memo.
+    pub memo_path: Option<PathBuf>,
+    /// TCP listen address (e.g. `127.0.0.1:7070`); `None` is stdio-only.
+    pub listen: Option<String>,
+    /// Sweep worker threads (0 → one per core).
+    pub workers: usize,
+    /// Save the memo after this many fresh evaluations.
+    pub save_every: u64,
+    /// Byte budget enforced (via `EvalMemo::gc_bytes`) before each save.
+    pub max_bytes: Option<usize>,
+    /// Per-app most-recent context floor of the byte-budget gc.
+    pub app_floor: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            memo_path: None,
+            listen: None,
+            workers: 0,
+            save_every: 8,
+            max_bytes: None,
+            app_floor: 1,
+        }
+    }
+}
+
+/// The memo plus everything that must stay mutually consistent with it
+/// (journal handle, save bookkeeping) — one lock, one owner at a time.
+struct MemoLane {
+    memo: EvalMemo,
+    journal: Option<SweepJournal>,
+    fresh_since_save: u64,
+    save_failed: bool,
+}
+
+/// A query in flight: the leader publishes into `slot` and wakes waiters.
+struct InFlight {
+    slot: Mutex<Option<Result<QueryReply, ServiceError>>>,
+    done: Condvar,
+}
+
+/// Cumulative service counters (all monotonic, relaxed ordering — they
+/// are observability, not synchronization).
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    coalesced: AtomicU64,
+    evaluated: AtomicU64,
+    l1_hits: AtomicU64,
+    l2_hits: AtomicU64,
+    errors: AtomicU64,
+    saves: AtomicU64,
+}
+
+/// The resident estimator service: shared memo, program cache, in-flight
+/// coalescing table and counters. Wrap in an [`Arc`] and call
+/// [`Service::handle_line`] from any number of threads.
+pub struct Service {
+    board: BoardConfig,
+    part: FpgaPart,
+    cfg: ServeConfig,
+    programs: Mutex<BTreeMap<(String, u64, u64), Arc<TaskProgram>>>,
+    lane: Mutex<MemoLane>,
+    inflight: Mutex<HashMap<String, Arc<InFlight>>>,
+    counters: Counters,
+    shutdown: AtomicBool,
+    exit_code: Mutex<Option<i32>>,
+}
+
+/// Lock that survives a poisoned-by-panic peer: a leader panicking
+/// mid-query (fault injection does this on purpose) must not wedge the
+/// daemon — worst case the memo lane lost one partial recording, which
+/// the next save rewrites consistently.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Service {
+    /// Build the service: load the memo (with WAL recovery) and open its
+    /// journal. Startup diagnostics go to stderr — stdout carries only
+    /// NDJSON responses.
+    pub fn new(board: BoardConfig, cfg: ServeConfig) -> anyhow::Result<Self> {
+        let (memo, journal) = match &cfg.memo_path {
+            Some(path) => {
+                let (memo, recovered) = EvalMemo::load_with_recovery(path)?;
+                if let Some(rec) = &recovered {
+                    eprintln!(
+                        "serve: recovered {} journaled points across {} contexts \
+                         ({} committed rounds) from {}",
+                        rec.n_points(),
+                        rec.contexts.len(),
+                        rec.rounds,
+                        SweepJournal::wal_path(path).display(),
+                    );
+                }
+                eprintln!(
+                    "serve: memo {} ({} contexts, {} points, {} kernel entries)",
+                    path.display(),
+                    memo.n_contexts(),
+                    memo.n_points(),
+                    memo.n_kernel_entries(),
+                );
+                let journal = SweepJournal::open(path)?;
+                (memo, Some(journal))
+            }
+            None => (EvalMemo::new(), None),
+        };
+        Ok(Service {
+            board,
+            part: FpgaPart::xc7z045(),
+            cfg,
+            programs: Mutex::new(BTreeMap::new()),
+            lane: Mutex::new(MemoLane {
+                memo,
+                journal,
+                fresh_since_save: 0,
+                save_failed: false,
+            }),
+            inflight: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+            shutdown: AtomicBool::new(false),
+            exit_code: Mutex::new(None),
+        })
+    }
+
+    /// Total requests parsed (well-formed or not).
+    pub fn requests(&self) -> u64 {
+        self.counters.requests.load(Ordering::Relaxed)
+    }
+
+    /// Requests that joined another request's in-flight evaluation.
+    pub fn coalesced(&self) -> u64 {
+        self.counters.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Points freshly simulated across all queries.
+    pub fn evaluated(&self) -> u64 {
+        self.counters.evaluated.load(Ordering::Relaxed)
+    }
+
+    /// Error responses sent.
+    pub fn errors(&self) -> u64 {
+        self.counters.errors.load(Ordering::Relaxed)
+    }
+
+    fn workers(&self) -> usize {
+        match self.cfg.workers {
+            0 => crate::dse::default_workers(),
+            w => w,
+        }
+    }
+
+    fn program(&self, app: &str, n: u64, bs: u64) -> Result<Arc<TaskProgram>, ServiceError> {
+        let key = (app.to_string(), n, bs);
+        if let Some(p) = lock_unpoisoned(&self.programs).get(&key) {
+            return Ok(Arc::clone(p));
+        }
+        // Built outside the cache lock: program construction is pure.
+        let program = crate::apps::build_app_program(app, n, bs, &self.board)
+            .map_err(|e| ServiceError::usage(format!("{e:#}")))?;
+        let program = Arc::new(program);
+        lock_unpoisoned(&self.programs)
+            .entry(key)
+            .or_insert_with(|| Arc::clone(&program));
+        Ok(program)
+    }
+
+    /// Save the memo under the lane lock: enforce the byte budget, close
+    /// the journal (a successful save deletes the `.wal` file — keeping
+    /// the handle would journal into a deleted inode), save atomically,
+    /// reopen the journal. On failure the daemon degrades instead of
+    /// dying: the WAL still carries the delta, `save_failed` turns the
+    /// final exit code non-zero.
+    fn save_lane(&self, lane: &mut MemoLane) {
+        let Some(path) = &self.cfg.memo_path else {
+            lane.fresh_since_save = 0;
+            return;
+        };
+        if let Some(max) = self.cfg.max_bytes {
+            let gc = lane.memo.gc_bytes(max, self.cfg.app_floor);
+            if gc.evicted_contexts > 0 || gc.evicted_kernels > 0 {
+                eprintln!(
+                    "serve: byte-budget gc evicted {} contexts ({} points), {} kernel entries",
+                    gc.evicted_contexts, gc.evicted_points, gc.evicted_kernels
+                );
+            }
+        }
+        lane.journal = None;
+        match lane.memo.save(path) {
+            Ok(()) => {
+                lane.fresh_since_save = 0;
+                self.counters.saves.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                lane.save_failed = true;
+                eprintln!(
+                    "serve: memo save failed ({e:#}) — continuing degraded; \
+                     the WAL retains unsaved rounds"
+                );
+            }
+        }
+        match SweepJournal::open(path) {
+            Ok(j) => lane.journal = Some(j),
+            Err(e) => eprintln!("serve: journal reopen failed ({e:#}); journaling disabled"),
+        }
+    }
+
+    fn run_query(&self, env: &Envelope) -> Result<QueryReply, ServiceError> {
+        let map_err = |e: anyhow::Error| ServiceError::usage(format!("{e:#}"));
+        match &env.kind {
+            RequestKind::Estimate(q) | RequestKind::Energy(q) => {
+                let energy_view = matches!(env.kind, RequestKind::Energy(_));
+                let program = self.program(&q.app, q.n, q.bs)?;
+                let cd = q.codesign();
+                let mut lane = lock_unpoisoned(&self.lane);
+                let MemoLane { memo, journal, .. } = &mut *lane;
+                let out = point_query(
+                    &program,
+                    &self.board,
+                    &self.part,
+                    &q.app,
+                    q.n,
+                    q.bs,
+                    &cd,
+                    energy_view,
+                    memo,
+                    journal.as_mut(),
+                )
+                .map_err(map_err)?;
+                self.after_query(&mut lane, &out.reply);
+                Ok(out.reply)
+            }
+            RequestKind::Dse(q) => {
+                let program = self.program(&q.app, q.n, q.bs)?;
+                let workers = self.workers();
+                let mut lane = lock_unpoisoned(&self.lane);
+                let MemoLane { memo, journal, .. } = &mut *lane;
+                let reply = dse_query(
+                    &program,
+                    &self.board,
+                    &self.part,
+                    q,
+                    workers,
+                    memo,
+                    journal.as_mut(),
+                )
+                .map_err(map_err)?;
+                self.after_query(&mut lane, &reply);
+                Ok(reply)
+            }
+            RequestKind::MemoStats => {
+                let lane = lock_unpoisoned(&self.lane);
+                let stats = lane.memo.stats();
+                let mut text = stats.render();
+                text.push_str(&format!(
+                    "service: {} requests, {} coalesced, {} evaluated, {} errors, {} saves{}\n",
+                    self.requests(),
+                    self.coalesced(),
+                    self.evaluated(),
+                    self.errors(),
+                    self.counters.saves.load(Ordering::Relaxed),
+                    if lane.save_failed { ", DEGRADED" } else { "" },
+                ));
+                let extra = crate::metrics::export::service_stats_fields(
+                    &stats,
+                    self.requests(),
+                    self.coalesced(),
+                    self.evaluated(),
+                    self.errors(),
+                    self.counters.saves.load(Ordering::Relaxed),
+                    lane.save_failed,
+                );
+                Ok(QueryReply {
+                    text,
+                    l1_hits: self.counters.l1_hits.load(Ordering::Relaxed),
+                    l2_hits: self.counters.l2_hits.load(Ordering::Relaxed),
+                    evaluated: 0,
+                    extra,
+                })
+            }
+            RequestKind::MemoGc(spec) => {
+                let mut lane = lock_unpoisoned(&self.lane);
+                let report = match spec.max_bytes {
+                    Some(max) => lane.memo.gc_bytes(max, spec.app_floor),
+                    None => lane
+                        .memo
+                        .gc(spec.keep_contexts, spec.keep_points, spec.keep_kernels),
+                };
+                // Persist immediately: the WAL may reference evicted
+                // contexts, so the post-gc truth must reach disk before
+                // any replay could resurrect them.
+                self.save_lane(&mut lane);
+                let text = format!(
+                    "gc: evicted {} contexts ({} points) and {} kernel entries \
+                     ({} contexts, {} points, {} kernel entries retained, all bit-exact)\n",
+                    report.evicted_contexts,
+                    report.evicted_points,
+                    report.evicted_kernels,
+                    lane.memo.n_contexts(),
+                    lane.memo.n_points(),
+                    lane.memo.n_kernel_entries(),
+                );
+                Ok(QueryReply {
+                    text,
+                    extra: vec![
+                        (
+                            "evicted_contexts".into(),
+                            (report.evicted_contexts as u64).into(),
+                        ),
+                        (
+                            "evicted_points".into(),
+                            (report.evicted_points as u64).into(),
+                        ),
+                        (
+                            "evicted_kernels".into(),
+                            (report.evicted_kernels as u64).into(),
+                        ),
+                    ],
+                    ..QueryReply::default()
+                })
+            }
+            RequestKind::Ping => Ok(QueryReply {
+                text: "pong\n".into(),
+                ..QueryReply::default()
+            }),
+            RequestKind::Shutdown => unreachable!("shutdown handled in handle_line"),
+        }
+    }
+
+    /// Post-query bookkeeping under the lane lock: counters and the
+    /// periodic save cadence.
+    fn after_query(&self, lane: &mut MemoLane, reply: &QueryReply) {
+        self.counters
+            .evaluated
+            .fetch_add(reply.evaluated, Ordering::Relaxed);
+        self.counters
+            .l1_hits
+            .fetch_add(reply.l1_hits, Ordering::Relaxed);
+        self.counters
+            .l2_hits
+            .fetch_add(reply.l2_hits, Ordering::Relaxed);
+        lane.fresh_since_save += reply.evaluated;
+        if self.cfg.memo_path.is_some() && lane.fresh_since_save >= self.cfg.save_every.max(1) {
+            self.save_lane(lane);
+        }
+    }
+
+    /// Run one coalescable query. The leader (first arrival for the key)
+    /// evaluates under panic isolation and fans the result out; followers
+    /// wait and clone it, so all coalesced responses are bitwise
+    /// identical and exactly one evaluation happened.
+    fn coalesced_query(&self, key: String, env: &Envelope) -> Result<QueryReply, ServiceError> {
+        let cell = {
+            let mut inflight = lock_unpoisoned(&self.inflight);
+            match inflight.get(&key) {
+                Some(cell) => {
+                    self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                    let cell = Arc::clone(cell);
+                    drop(inflight);
+                    let mut slot = lock_unpoisoned(&cell.slot);
+                    while slot.is_none() {
+                        slot = cell
+                            .done
+                            .wait(slot)
+                            .unwrap_or_else(|p| p.into_inner());
+                    }
+                    return slot.clone().expect("slot published before notify");
+                }
+                None => {
+                    let cell = Arc::new(InFlight {
+                        slot: Mutex::new(None),
+                        done: Condvar::new(),
+                    });
+                    inflight.insert(key.clone(), Arc::clone(&cell));
+                    cell
+                }
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.run_query(env)))
+            .unwrap_or_else(|_| {
+                Err(ServiceError::usage(
+                    "evaluation panicked (see stderr); request dropped",
+                ))
+            });
+        lock_unpoisoned(&self.inflight).remove(&key);
+        *lock_unpoisoned(&cell.slot) = Some(result.clone());
+        cell.done.notify_all();
+        result
+    }
+
+    /// Process one NDJSON line. Returns the response line (None for
+    /// blank input) and whether the daemon should shut down.
+    pub fn handle_line(&self, line: &str) -> (Option<String>, bool) {
+        let line = line.trim();
+        if line.is_empty() {
+            return (None, false);
+        }
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let env = match parse_request(line) {
+            Ok(env) => env,
+            Err((id, err)) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                return (Some(err_line(&id, &err)), false);
+            }
+        };
+        if matches!(env.kind, RequestKind::Shutdown) {
+            let code = self.finalize();
+            let reply = QueryReply {
+                text: if code == 0 {
+                    "shutdown: memo saved\n".into()
+                } else {
+                    "shutdown: DEGRADED (memo save failed; WAL retained)\n".into()
+                },
+                extra: vec![("exit_code".into(), Value::Int(code as i64))],
+                ..QueryReply::default()
+            };
+            return (Some(ok_line(&env.id, env.req_name(), &reply)), true);
+        }
+        let result = match env.coalesce_key() {
+            Some(key) => self.coalesced_query(key, &env),
+            None => self.run_query(&env),
+        };
+        match result {
+            Ok(reply) => (Some(ok_line(&env.id, env.req_name(), &reply)), false),
+            Err(err) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                (Some(err_line(&env.id, &err)), false)
+            }
+        }
+    }
+
+    /// Final save + exit code; idempotent (a TCP shutdown racing stdin
+    /// EOF performs one save). `0` clean, `1` when any save failed.
+    pub fn finalize(&self) -> i32 {
+        let mut code_slot = lock_unpoisoned(&self.exit_code);
+        if let Some(code) = *code_slot {
+            return code;
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        let mut lane = lock_unpoisoned(&self.lane);
+        self.save_lane(&mut lane);
+        let code = i32::from(lane.save_failed);
+        *code_slot = Some(code);
+        code
+    }
+
+    /// Whether a shutdown request has been processed.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// One NDJSON connection loop over any buffered reader/writer pair.
+/// Returns `true` when the peer asked for shutdown.
+fn serve_connection<R: BufRead, W: Write>(svc: &Service, reader: R, mut writer: W) -> bool {
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let (response, quit) = svc.handle_line(&line);
+        if let Some(r) = response {
+            if writeln!(writer, "{r}").and_then(|_| writer.flush()).is_err() {
+                break;
+            }
+        }
+        if quit {
+            return true;
+        }
+        if svc.is_shutdown() {
+            break;
+        }
+    }
+    false
+}
+
+/// Accept loop of the TCP transport: non-blocking accept polled against
+/// the shutdown flag, one thread per connection. A `shutdown` request on
+/// a TCP connection finalizes and exits the whole process (stdin cannot
+/// be unblocked portably).
+fn serve_tcp(svc: Arc<Service>, listener: std::net::TcpListener) {
+    listener
+        .set_nonblocking(true)
+        .expect("set_nonblocking on listener");
+    loop {
+        if svc.is_shutdown() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let svc = Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    let reader = std::io::BufReader::new(match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(_) => return,
+                    });
+                    if serve_connection(&svc, reader, &stream) {
+                        let code = svc.finalize();
+                        std::process::exit(code);
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Run the daemon to completion on the current thread: bind the optional
+/// TCP listener, then serve stdin/stdout until a `shutdown` request or
+/// EOF. Returns the process exit code.
+pub fn serve(board: BoardConfig, cfg: ServeConfig) -> anyhow::Result<i32> {
+    run(Service::new(board, cfg)?)
+}
+
+/// [`serve`] with a prebuilt service — lets callers distinguish
+/// construction failures (memo load) from runtime ones (bind).
+pub fn run(svc: Service) -> anyhow::Result<i32> {
+    let listen = svc.cfg.listen.clone();
+    let svc = Arc::new(svc);
+    if let Some(addr) = listen {
+        let listener = std::net::TcpListener::bind(&addr)
+            .map_err(|e| anyhow::anyhow!("serve: cannot listen on {addr}: {e}"))?;
+        // Tests parse this line to discover an OS-assigned port.
+        eprintln!("serve: listening on {}", listener.local_addr()?);
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || serve_tcp(svc, listener));
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    if serve_connection(&svc, stdin.lock(), stdout.lock()) {
+        return Ok(svc.finalize());
+    }
+    // stdin closed without a shutdown request: if a TCP shutdown already
+    // ran, report its code; otherwise treat EOF as a graceful shutdown.
+    Ok(svc.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn service() -> Service {
+        Service::new(BoardConfig::zynq706(), ServeConfig::default()).unwrap()
+    }
+
+    fn get_u64(v: &crate::util::json::Value, key: &str) -> u64 {
+        v.get(key).and_then(|x| x.as_u64()).unwrap()
+    }
+
+    #[test]
+    fn estimate_then_repeat_hits_the_memo_with_identical_response() {
+        let svc = service();
+        let req = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#;
+        let (first, quit) = svc.handle_line(req);
+        assert!(!quit);
+        let first = first.unwrap();
+        let (second, _) = svc.handle_line(req);
+        let second = second.unwrap();
+        assert_eq!(first, second, "hit must be bitwise identical to the evaluation");
+        let v = parse(&second).unwrap();
+        assert_eq!(get_u64(&v, "evaluated"), 0);
+        assert_eq!(get_u64(&v, "l2_hits"), 1);
+        assert_eq!(svc.evaluated(), 1, "one evaluation total across both");
+    }
+
+    #[test]
+    fn malformed_lines_answer_with_the_cli_error_taxonomy_and_keep_serving() {
+        let svc = service();
+        let (bad, quit) = svc.handle_line("this is not json");
+        assert!(!quit);
+        let bad = parse(&bad.unwrap()).unwrap();
+        assert_eq!(bad.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(get_u64(&bad, "code"), 1);
+        let (unknown, _) = svc.handle_line(r#"{"id":7,"req":"frobnicate"}"#);
+        let unknown = parse(&unknown.unwrap()).unwrap();
+        assert_eq!(get_u64(&unknown, "code"), 2);
+        assert_eq!(
+            unknown.get("id").and_then(|v| v.as_i64()),
+            Some(7),
+            "errors still correlate by id"
+        );
+        let (ping, _) = svc.handle_line(r#"{"req":"ping"}"#);
+        let ping = parse(&ping.unwrap()).unwrap();
+        assert_eq!(ping.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(svc.errors(), 2);
+    }
+
+    #[test]
+    fn stats_reports_cumulative_counters_and_gc_runs_in_place() {
+        let svc = service();
+        svc.handle_line(r#"{"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U8"]}"#);
+        svc.handle_line(r#"{"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U8"]}"#);
+        let (stats, _) = svc.handle_line(r#"{"req":"memo","action":"stats"}"#);
+        let stats = parse(&stats.unwrap()).unwrap();
+        assert_eq!(get_u64(&stats, "contexts"), 1);
+        assert_eq!(get_u64(&stats, "total_evaluated"), 1);
+        assert_eq!(get_u64(&stats, "requests"), 3);
+        let (gc, _) = svc.handle_line(r#"{"req":"memo","action":"gc","max_bytes":0,"app_floor":1}"#);
+        let gc = parse(&gc.unwrap()).unwrap();
+        assert_eq!(
+            get_u64(&gc, "evicted_contexts"),
+            0,
+            "the per-app floor protects the only context even under a zero budget"
+        );
+    }
+
+    #[test]
+    fn shutdown_line_finalizes_and_requests_exit() {
+        let svc = service();
+        let (resp, quit) = svc.handle_line(r#"{"id":9,"req":"shutdown"}"#);
+        assert!(quit);
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(v.get("exit_code").and_then(|x| x.as_i64()), Some(0));
+        assert!(svc.is_shutdown());
+        assert_eq!(svc.finalize(), 0, "finalize is idempotent");
+    }
+}

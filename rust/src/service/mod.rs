@@ -1,0 +1,30 @@
+//! Service layer: the estimator as a resident queryable daemon.
+//!
+//! Everything below the CLI already separated one-time analysis from
+//! per-query work (sweep contexts, the two-level [`EvalMemo`]); this
+//! module adds the missing top: a long-running process that keeps that
+//! state warm across queries instead of rebuilding it per invocation —
+//! the CEDR-style resident runtime applied to estimation. Three small
+//! modules, strictly layered:
+//!
+//! * [`proto`] — the NDJSON wire protocol: request parsing into a typed
+//!   [`RequestKind`], response serialization, the canonical coalescing
+//!   key, and the error taxonomy (mirroring the CLI exit codes).
+//! * [`query`] — the memo-backed query core shared verbatim by the
+//!   one-shot CLI and the daemon, which is what makes daemon responses
+//!   byte-identical to CLI stdout by construction.
+//! * [`daemon`] — the [`Service`] runtime: shared memo behind one lock,
+//!   in-flight coalescing, periodic WAL-journaled persistence, stdio and
+//!   TCP transports.
+//!
+//! [`EvalMemo`]: crate::dse::EvalMemo
+
+pub mod daemon;
+pub mod proto;
+pub mod query;
+
+pub use daemon::{serve, ServeConfig, Service};
+pub use proto::{
+    parse_request, DseQuery, Envelope, GcSpec, PointQuery, QueryReply, RequestKind, ServiceError,
+};
+pub use query::{dse_query, point_query, space_for_codesign, PointOutcome};

@@ -1,0 +1,481 @@
+//! Wire protocol of the estimator service: newline-delimited JSON
+//! requests and responses (NDJSON), one object per line, over stdin/stdout
+//! or a TCP connection.
+//!
+//! Every request is an object with a `"req"` discriminator and an
+//! optional `"id"` (any JSON value, echoed verbatim in the response so
+//! clients can correlate out-of-order traffic):
+//!
+//! ```text
+//! {"id": 1, "req": "estimate", "app": "matmul", "n": 256, "bs": 64,
+//!  "accel": ["mxm64:U32"], "smp": []}
+//! {"id": 2, "req": "energy",   "app": "matmul", "accel": ["mxm64:U32"]}
+//! {"id": 3, "req": "dse",      "app": "matmul", "n": 256,
+//!  "objective": "time", "top": 5, "mixed": false, "order": "ranked"}
+//! {"id": 4, "req": "memo", "action": "stats"}
+//! {"id": 5, "req": "memo", "action": "gc", "max_bytes": 65536, "app_floor": 1}
+//! {"id": 6, "req": "ping"}
+//! {"id": 7, "req": "shutdown"}
+//! ```
+//!
+//! Successful responses carry `"ok": true`, the echoed `"id"`/`"req"`, a
+//! `"text"` field whose bytes equal the one-shot CLI stdout for the same
+//! query, the memo warmth counters (`"l1_hits"`, `"l2_hits"`,
+//! `"evaluated"`), and query-specific numeric fields encoded as exact
+//! `f64` bit patterns (the memo convention — lossless round-trips).
+//! Failures carry `"ok": false` plus a `"code"` that mirrors the CLI exit
+//! code taxonomy: `1` for malformed/unsatisfiable requests, `2` for an
+//! unknown `"req"`, `3` for corrupt input files.
+
+use crate::config::{AccelSpec, CoDesign};
+use crate::dse::{Objective, OrderMode};
+use crate::util::json::{obj, parse, Value};
+
+/// A structured service failure: the `code` mirrors the CLI exit-code
+/// taxonomy (1 usage/runtime, 2 unknown request, 3 corrupt input), so a
+/// client scripting against the daemon sees the same classification a
+/// shell script sees from the one-shot CLI.
+#[derive(Clone, Debug)]
+pub struct ServiceError {
+    /// CLI-taxonomy error class.
+    pub code: i64,
+    /// Human-readable message.
+    pub message: String,
+}
+
+impl ServiceError {
+    /// A usage/runtime error (CLI exit code 1).
+    pub fn usage(msg: impl Into<String>) -> Self {
+        Self {
+            code: 1,
+            message: msg.into(),
+        }
+    }
+
+    /// An unknown-request error (CLI exit code 2).
+    pub fn unknown(msg: impl Into<String>) -> Self {
+        Self {
+            code: 2,
+            message: msg.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (code {})", self.message, self.code)
+    }
+}
+
+/// A point query (`estimate` / `energy`): one application configuration
+/// and one co-design.
+#[derive(Clone, Debug)]
+pub struct PointQuery {
+    /// Application name (`matmul`, `cholesky`, `lu`, `stencil`).
+    pub app: String,
+    /// Problem size.
+    pub n: u64,
+    /// Block size.
+    pub bs: u64,
+    /// Accelerator instances.
+    pub accels: Vec<AccelSpec>,
+    /// Kernels additionally allowed on the SMP cores.
+    pub smp: Vec<String>,
+}
+
+impl PointQuery {
+    /// The co-design this query describes.
+    pub fn codesign(&self) -> CoDesign {
+        let mut cd = CoDesign::new("service");
+        cd.accels = self.accels.clone();
+        cd.smp_kernels = self.smp.clone();
+        cd
+    }
+}
+
+/// A `dse` sweep query over one application's co-design space.
+#[derive(Clone, Debug)]
+pub struct DseQuery {
+    /// Application name.
+    pub app: String,
+    /// Problem size.
+    pub n: u64,
+    /// Block size.
+    pub bs: u64,
+    /// Ranking objective.
+    pub objective: Objective,
+    /// Rows of the ranking table to render.
+    pub top: usize,
+    /// Allow heterogeneous unroll variants per kernel.
+    pub mixed: bool,
+    /// Bound-round candidate order.
+    pub order: OrderMode,
+}
+
+/// Knobs of a `memo gc` request — mirrors `dse memo gc` on the CLI.
+#[derive(Clone, Debug)]
+pub struct GcSpec {
+    /// Serialized-size budget; `Some` selects the byte-budget policy.
+    pub max_bytes: Option<usize>,
+    /// Most-recent contexts per app that are never evicted.
+    pub app_floor: usize,
+    /// LRU context cap of the legacy count-based policy.
+    pub keep_contexts: usize,
+    /// Cumulative point budget of the count-based policy.
+    pub keep_points: usize,
+    /// Level-1 kernel entry cap.
+    pub keep_kernels: usize,
+}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub enum RequestKind {
+    /// Memo-backed single-point estimate.
+    Estimate(PointQuery),
+    /// Memo-backed single-point energy report.
+    Energy(PointQuery),
+    /// Warm design-space exploration.
+    Dse(DseQuery),
+    /// Memo layout + service counters.
+    MemoStats,
+    /// Memo garbage collection.
+    MemoGc(GcSpec),
+    /// Liveness probe.
+    Ping,
+    /// Save the memo and stop the daemon.
+    Shutdown,
+}
+
+/// A request envelope: the echoed correlation id plus the parsed kind.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    /// Client correlation id (echoed verbatim; `null` when absent).
+    pub id: Value,
+    /// The parsed request.
+    pub kind: RequestKind,
+}
+
+impl Envelope {
+    /// Canonical coalescing key of the request, excluding the id: two
+    /// requests with equal keys are the same query and may share one
+    /// evaluation. Uses [`crate::dse::warm::codesign_key`] for point
+    /// queries so instance order cannot split a key.
+    pub fn coalesce_key(&self) -> Option<String> {
+        match &self.kind {
+            RequestKind::Estimate(q) => Some(format!(
+                "estimate|{}|{}|{}|{}",
+                q.app,
+                q.n,
+                q.bs,
+                crate::dse::warm::codesign_key(&q.codesign())
+            )),
+            RequestKind::Energy(q) => Some(format!(
+                "energy|{}|{}|{}|{}",
+                q.app,
+                q.n,
+                q.bs,
+                crate::dse::warm::codesign_key(&q.codesign())
+            )),
+            RequestKind::Dse(q) => Some(format!(
+                "dse|{}|{}|{}|{}|{}|{}|{}",
+                q.app,
+                q.n,
+                q.bs,
+                q.objective.as_str(),
+                q.top,
+                q.mixed,
+                q.order.as_str()
+            )),
+            _ => None,
+        }
+    }
+
+    /// The request name echoed in responses.
+    pub fn req_name(&self) -> &'static str {
+        match &self.kind {
+            RequestKind::Estimate(_) => "estimate",
+            RequestKind::Energy(_) => "energy",
+            RequestKind::Dse(_) => "dse",
+            RequestKind::MemoStats | RequestKind::MemoGc(_) => "memo",
+            RequestKind::Ping => "ping",
+            RequestKind::Shutdown => "shutdown",
+        }
+    }
+}
+
+fn u64_field(v: &Value, key: &str, default: u64) -> Result<u64, ServiceError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(default),
+        Some(x) => x
+            .as_u64()
+            .ok_or_else(|| ServiceError::usage(format!("'{key}' expects a non-negative integer"))),
+    }
+}
+
+fn str_field<'v>(v: &'v Value, key: &str) -> Result<Option<&'v str>, ServiceError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| ServiceError::usage(format!("'{key}' expects a string"))),
+    }
+}
+
+fn bool_field(v: &Value, key: &str) -> Result<bool, ServiceError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(false),
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| ServiceError::usage(format!("'{key}' expects a boolean"))),
+    }
+}
+
+fn str_list(v: &Value, key: &str) -> Result<Vec<String>, ServiceError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(Vec::new()),
+        Some(Value::Str(s)) => Ok(vec![s.clone()]),
+        Some(Value::Arr(items)) => items
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| ServiceError::usage(format!("'{key}' expects strings")))
+            })
+            .collect(),
+        Some(_) => Err(ServiceError::usage(format!(
+            "'{key}' expects a string or an array of strings"
+        ))),
+    }
+}
+
+fn point_query(v: &Value) -> Result<PointQuery, ServiceError> {
+    let app = str_field(v, "app")?
+        .ok_or_else(|| ServiceError::usage("request requires 'app'"))?
+        .to_string();
+    let accels = str_list(v, "accel")?
+        .iter()
+        .map(|s| AccelSpec::parse(s).map_err(|e| ServiceError::usage(format!("{e:#}"))))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(PointQuery {
+        app,
+        n: u64_field(v, "n", 512)?,
+        bs: u64_field(v, "bs", 64)?,
+        accels,
+        smp: str_list(v, "smp")?,
+    })
+}
+
+/// Parse one NDJSON request line. On failure, returns the best-effort
+/// correlation id alongside the error so the caller can still address its
+/// error response.
+pub fn parse_request(line: &str) -> Result<Envelope, (Value, ServiceError)> {
+    let v = parse(line)
+        .map_err(|e| (Value::Null, ServiceError::usage(format!("malformed request line: {e}"))))?;
+    if v.as_obj().is_none() {
+        return Err((
+            Value::Null,
+            ServiceError::usage("request must be a JSON object"),
+        ));
+    }
+    let id = v.get("id").cloned().unwrap_or(Value::Null);
+    let fail = |e: ServiceError| (id.clone(), e);
+    let req = match str_field(&v, "req").map_err(fail)? {
+        Some(r) => r.to_string(),
+        None => return Err(fail(ServiceError::usage("request requires 'req'"))),
+    };
+    let kind = match req.as_str() {
+        "estimate" => RequestKind::Estimate(point_query(&v).map_err(fail)?),
+        "energy" => RequestKind::Energy(point_query(&v).map_err(fail)?),
+        "dse" => {
+            let objective = match str_field(&v, "objective").map_err(fail)? {
+                None => Objective::Time,
+                Some(o) => Objective::parse(o).ok_or_else(|| {
+                    fail(ServiceError::usage(format!(
+                        "unknown objective '{o}' (time|energy|edp)"
+                    )))
+                })?,
+            };
+            let order = match str_field(&v, "order").map_err(fail)? {
+                None => OrderMode::Ranked,
+                Some(o) => OrderMode::parse(o).ok_or_else(|| {
+                    fail(ServiceError::usage(format!(
+                        "unknown order '{o}' (fifo|bound|ranked)"
+                    )))
+                })?,
+            };
+            RequestKind::Dse(DseQuery {
+                app: str_field(&v, "app")
+                    .map_err(fail)?
+                    .unwrap_or("matmul")
+                    .to_string(),
+                n: u64_field(&v, "n", 512).map_err(fail)?,
+                bs: u64_field(&v, "bs", 64).map_err(fail)?,
+                objective,
+                top: u64_field(&v, "top", 15).map_err(fail)? as usize,
+                mixed: bool_field(&v, "mixed").map_err(fail)?,
+                order,
+            })
+        }
+        "memo" => match str_field(&v, "action").map_err(fail)?.unwrap_or("stats") {
+            "stats" => RequestKind::MemoStats,
+            "gc" => {
+                let max_bytes = match v.get("max_bytes") {
+                    None | Some(Value::Null) => None,
+                    Some(x) => Some(x.as_u64().ok_or_else(|| {
+                        fail(ServiceError::usage(
+                            "'max_bytes' expects a non-negative integer",
+                        ))
+                    })? as usize),
+                };
+                RequestKind::MemoGc(GcSpec {
+                    max_bytes,
+                    app_floor: u64_field(&v, "app_floor", 1).map_err(fail)? as usize,
+                    keep_contexts: u64_field(&v, "keep_contexts", 16).map_err(fail)? as usize,
+                    keep_points: u64_field(&v, "keep_points", u64::MAX)
+                        .map_err(fail)?
+                        .min(usize::MAX as u64) as usize,
+                    keep_kernels: u64_field(&v, "keep_kernels", 256).map_err(fail)? as usize,
+                })
+            }
+            other => {
+                return Err(fail(ServiceError::usage(format!(
+                    "unknown memo action '{other}' (stats|gc)"
+                ))))
+            }
+        },
+        "ping" => RequestKind::Ping,
+        "shutdown" => RequestKind::Shutdown,
+        other => {
+            return Err(fail(ServiceError::unknown(format!(
+                "unknown request '{other}' (estimate|energy|dse|memo|ping|shutdown)"
+            ))))
+        }
+    };
+    Ok(Envelope { id, kind })
+}
+
+/// What a successful query produced: the CLI-identical text plus the
+/// warmth counters and query-specific exact-bits fields.
+#[derive(Clone, Debug, Default)]
+pub struct QueryReply {
+    /// Byte-identical to the one-shot CLI stdout for the same query.
+    pub text: String,
+    /// Level-1 kernel sub-memo hits while priming the HLS cache.
+    pub l1_hits: u64,
+    /// Level-2 exact point hits.
+    pub l2_hits: u64,
+    /// Points freshly simulated to answer this query.
+    pub evaluated: u64,
+    /// Query-specific extra fields (numbers as exact `f64` bit patterns).
+    pub extra: Vec<(String, Value)>,
+}
+
+/// Serialize a success response line (no trailing newline).
+pub fn ok_line(id: &Value, req: &str, reply: &QueryReply) -> String {
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("id", id.clone()),
+        ("ok", true.into()),
+        ("req", req.into()),
+        ("text", reply.text.as_str().into()),
+        ("l1_hits", reply.l1_hits.into()),
+        ("l2_hits", reply.l2_hits.into()),
+        ("evaluated", reply.evaluated.into()),
+    ];
+    for (k, v) in &reply.extra {
+        fields.push((k.as_str(), v.clone()));
+    }
+    obj(fields).to_json()
+}
+
+/// Serialize an error response line (no trailing newline).
+pub fn err_line(id: &Value, err: &ServiceError) -> String {
+    obj(vec![
+        ("id", id.clone()),
+        ("ok", false.into()),
+        ("code", err.code.into()),
+        ("error", err.message.as_str().into()),
+    ])
+    .to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_request_shapes() {
+        let e = parse_request(
+            r#"{"id":1,"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#,
+        )
+        .unwrap();
+        assert_eq!(e.id.as_i64(), Some(1));
+        match &e.kind {
+            RequestKind::Estimate(q) => {
+                assert_eq!(q.app, "matmul");
+                assert_eq!(q.n, 256);
+                assert_eq!(q.bs, 64);
+                assert_eq!(q.accels.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        let d = parse_request(r#"{"req":"dse","app":"matmul","top":3,"mixed":true}"#).unwrap();
+        match &d.kind {
+            RequestKind::Dse(q) => {
+                assert_eq!(q.top, 3);
+                assert!(q.mixed);
+                assert_eq!(q.order, OrderMode::Ranked);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(r#"{"req":"memo","action":"gc","max_bytes":4096}"#)
+                .unwrap()
+                .kind,
+            RequestKind::MemoGc(GcSpec {
+                max_bytes: Some(4096),
+                app_floor: 1,
+                ..
+            })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"req":"shutdown"}"#).unwrap().kind,
+            RequestKind::Shutdown
+        ));
+    }
+
+    #[test]
+    fn error_codes_mirror_the_cli_taxonomy() {
+        // Malformed line and bad fields: usage class (1).
+        assert_eq!(parse_request("not json").unwrap_err().1.code, 1);
+        assert_eq!(parse_request("[1,2]").unwrap_err().1.code, 1);
+        assert_eq!(
+            parse_request(r#"{"req":"estimate"}"#).unwrap_err().1.code,
+            1,
+            "estimate requires app"
+        );
+        assert_eq!(
+            parse_request(r#"{"req":"dse","n":"many"}"#).unwrap_err().1.code,
+            1
+        );
+        // Unknown request: 2, like an unknown CLI command.
+        let (id, err) = parse_request(r#"{"id":9,"req":"frobnicate"}"#).unwrap_err();
+        assert_eq!(err.code, 2);
+        assert_eq!(id.as_i64(), Some(9), "id still echoed on errors");
+    }
+
+    #[test]
+    fn coalesce_keys_ignore_instance_order_and_id() {
+        let a = parse_request(
+            r#"{"id":1,"req":"estimate","app":"matmul","accel":["mxm64:U32","mxm64:U16"]}"#,
+        )
+        .unwrap();
+        let b = parse_request(
+            r#"{"id":2,"req":"estimate","app":"matmul","accel":["mxm64:U16","mxm64:U32"]}"#,
+        )
+        .unwrap();
+        assert_eq!(a.coalesce_key(), b.coalesce_key());
+        let c = parse_request(r#"{"req":"ping"}"#).unwrap();
+        assert!(c.coalesce_key().is_none());
+    }
+}

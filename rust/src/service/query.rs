@@ -1,0 +1,347 @@
+//! Memo-backed query core shared by the one-shot CLI and the daemon.
+//!
+//! Byte-identity between `zynq-estimator estimate ...` and the daemon's
+//! `{"req":"estimate",...}` response is not asserted after the fact — it
+//! is guaranteed by construction: both entry points call the same
+//! functions here, and the rendered report is derived **only** from the
+//! [`MemoValues`] bit patterns, never from transient simulation state. A
+//! level-2 memo hit therefore prints the exact bytes the original
+//! evaluation printed, whether it happened in this process, a previous
+//! CLI invocation, or a daemon three restarts ago.
+
+use crate::config::{BoardConfig, CoDesign};
+use crate::coordinator::task::TaskProgram;
+use crate::dse::warm::{codesign_key, context_fingerprint, MemoValues};
+use crate::dse::{DseSpace, EvalMemo, KernelSpace, SweepContext, SweepJournal};
+use crate::hls::FpgaPart;
+use crate::util::json::Value;
+
+use super::proto::{DseQuery, QueryReply};
+
+/// The minimal [`DseSpace`] covering exactly one co-design: per distinct
+/// kernel, the sorted deduplicated unroll set, an instance cap equal to
+/// the requested instance count, and SMP enablement from the `+ smp`
+/// list. Priming a [`SweepContext`] for this space runs the cost model
+/// (or level-1 sub-memo) for precisely the reports the point needs.
+pub fn space_for_codesign(cd: &CoDesign) -> DseSpace {
+    let mut kernels: Vec<KernelSpace> = Vec::new();
+    for a in &cd.accels {
+        match kernels.iter_mut().find(|k| k.kernel == a.kernel) {
+            Some(k) => {
+                k.unrolls.push(a.unroll);
+                k.max_instances += 1;
+            }
+            None => kernels.push(KernelSpace {
+                kernel: a.kernel.clone(),
+                unrolls: vec![a.unroll],
+                max_instances: 1,
+                try_smp: cd.smp_kernels.contains(&a.kernel),
+            }),
+        }
+    }
+    for k in &mut kernels {
+        k.unrolls.sort_unstable();
+        k.unrolls.dedup();
+    }
+    // SMP-only kernels (no accelerator instance) still matter to the key
+    // space, but they need no HLS report; `resolve` handles them.
+    DseSpace {
+        kernels,
+        mixed: false,
+    }
+}
+
+/// Outcome of a point query: the reply plus whether it was a level-2 hit.
+pub struct PointOutcome {
+    /// The rendered reply (CLI stdout bytes + counters + exact bits).
+    pub reply: QueryReply,
+    /// Exact recorded numbers the reply was rendered from.
+    pub values: MemoValues,
+    /// `true` when the memo answered without re-simulation.
+    pub hit: bool,
+}
+
+fn bits_extra(values: &MemoValues) -> Vec<(String, Value)> {
+    vec![
+        ("est_ms_bits".into(), values.est_ms.to_bits().into()),
+        ("energy_j_bits".into(), values.energy_j.to_bits().into()),
+        ("edp_bits".into(), values.edp.to_bits().into()),
+        (
+            "fabric_util_bits".into(),
+            values.fabric_util.to_bits().into(),
+        ),
+    ]
+}
+
+/// Render the `estimate` report from exact memo values. The header names
+/// the canonical co-design key, so the report itself documents which memo
+/// entry served it.
+fn render_estimate(app: &str, n: u64, bs: u64, key: &str, v: &MemoValues) -> String {
+    format!(
+        "== estimate: {app} n={n} bs={bs} [{key}]\n  \
+         est makespan:  {:.3} ms\n  \
+         energy:        {:.3} J\n  \
+         EDP:           {:.4} mJ*s\n  \
+         fabric util:   {:.1}%\n",
+        v.est_ms,
+        v.energy_j,
+        v.edp * 1e3,
+        v.fabric_util * 100.0,
+    )
+}
+
+/// Render the `energy` report from exact memo values (totals view — the
+/// memo records the evaluation's energy total, not the per-rail split; the
+/// split is derivable by re-running `estimate --policy` paths but is not
+/// part of the cached contract).
+fn render_energy(app: &str, n: u64, bs: u64, key: &str, v: &MemoValues) -> String {
+    let mean_w = v.energy_j / (v.est_ms / 1e3).max(1e-12);
+    format!(
+        "== energy: {app} n={n} bs={bs} [{key}]\n  \
+         est makespan:  {:.3} ms\n  \
+         total energy:  {:.3} J  (mean {:.2} W)\n  \
+         EDP:           {:.4} mJ*s\n  \
+         fabric util:   {:.1}%\n",
+        v.est_ms,
+        v.energy_j,
+        mean_w,
+        v.edp * 1e3,
+        v.fabric_util * 100.0,
+    )
+}
+
+/// Answer one `estimate`/`energy` query through the memo: level-2 hit →
+/// exact recorded numbers, miss → one evaluation recorded back at both
+/// memo levels (and journaled as one committed WAL round when a journal
+/// is given, so a crash after the response cannot lose the evaluation).
+#[allow(clippy::too_many_arguments)]
+pub fn point_query(
+    program: &TaskProgram,
+    board: &BoardConfig,
+    part: &FpgaPart,
+    app: &str,
+    n: u64,
+    bs: u64,
+    cd: &CoDesign,
+    energy_view: bool,
+    memo: &mut EvalMemo,
+    journal: Option<&mut SweepJournal>,
+) -> anyhow::Result<PointOutcome> {
+    let space = space_for_codesign(cd);
+    let ctx = SweepContext::for_space_warm(program, board, part, &space, memo);
+    let fingerprint = context_fingerprint(&ctx);
+    let key = codesign_key(cd);
+    let clock = memo.touch(fingerprint);
+    let (values, hit) = match memo.lookup(fingerprint, &key) {
+        Some(v) => (v, true),
+        None => {
+            // Surface unsatisfiable co-designs (unknown kernel, kernel
+            // with no device) as errors before paying for a worker.
+            ctx.resolve(cd)?;
+            let point = ctx
+                .worker()
+                .evaluate(cd)
+                .ok_or_else(|| anyhow::anyhow!("co-design '{key}' cannot be evaluated"))?;
+            memo.record(&ctx, fingerprint, &key, &point);
+            memo.record_kernels(&ctx, &space);
+            memo.record_occupancy(&ctx, std::slice::from_ref(&point));
+            if let Some(j) = journal {
+                j.log_context(fingerprint, &ctx, clock);
+                j.log_point(fingerprint, &key, &point);
+                j.commit_round()?;
+            }
+            (
+                MemoValues {
+                    est_ms: point.est_ms,
+                    energy_j: point.energy_j,
+                    edp: point.edp,
+                    fabric_util: point.fabric_util,
+                },
+                false,
+            )
+        }
+    };
+    let text = if energy_view {
+        render_energy(app, n, bs, &key, &values)
+    } else {
+        render_estimate(app, n, bs, &key, &values)
+    };
+    Ok(PointOutcome {
+        reply: QueryReply {
+            text,
+            l1_hits: ctx.kernel_memo_hits() as u64,
+            l2_hits: hit as u64,
+            evaluated: (!hit) as u64,
+            extra: bits_extra(&values),
+        },
+        values,
+        hit,
+    })
+}
+
+/// Answer one `dse` query as a warm sweep over the shared memo. The reply
+/// text is the ranked table plus the pruning line — the deterministic
+/// prefix of the one-shot `dse --memo` stdout (the CLI follows it with
+/// wall-clock timing lines, which are inherently not part of the
+/// byte-identity contract). Freshly evaluated points are journaled as one
+/// committed WAL round.
+pub fn dse_query(
+    program: &TaskProgram,
+    board: &BoardConfig,
+    part: &FpgaPart,
+    q: &DseQuery,
+    workers: usize,
+    memo: &mut EvalMemo,
+    journal: Option<&mut SweepJournal>,
+) -> anyhow::Result<QueryReply> {
+    let mut space = DseSpace::from_program(program);
+    space.mixed = q.mixed;
+    let ctx = SweepContext::for_space_warm(program, board, part, &space, memo);
+    let fingerprint = context_fingerprint(&ctx);
+    let before: std::collections::BTreeSet<String> = memo
+        .points_ms(fingerprint)
+        .into_iter()
+        .map(|(k, _)| k)
+        .collect();
+    let (points, stats) = ctx.explore_warm(&space, memo, q.objective, workers, q.order);
+    if let Some(j) = journal {
+        // Journal exactly the delta this sweep added, as one round.
+        let mut fresh = 0usize;
+        for p in &points {
+            let key = codesign_key(&p.codesign);
+            if !before.contains(&key) && memo.lookup(fingerprint, &key).is_some() {
+                if fresh == 0 {
+                    j.log_context(fingerprint, &ctx, memo.last_used(fingerprint).unwrap_or(0));
+                }
+                j.log_point(fingerprint, &key, p);
+                fresh += 1;
+            }
+        }
+        if fresh > 0 {
+            j.commit_round()?;
+        }
+    }
+    let mut text = crate::dse::render(&points, q.top, q.objective);
+    text.push_str(&format!("pruning: {}\n", stats.render()));
+    let best = points.first();
+    let mut extra: Vec<(String, Value)> = vec![
+        ("feasible".into(), stats.feasible_points.into()),
+        ("points".into(), (points.len() as u64).into()),
+    ];
+    if let Some(b) = best {
+        extra.push(("best".into(), codesign_key(&b.codesign).into()));
+        extra.push(("best_est_ms_bits".into(), b.est_ms.to_bits().into()));
+        extra.push(("best_energy_j_bits".into(), b.energy_j.to_bits().into()));
+    }
+    Ok(QueryReply {
+        text,
+        l1_hits: stats.kernel_hits,
+        l2_hits: stats.memo_hits,
+        evaluated: stats.evaluated,
+        extra,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AccelSpec;
+    use crate::dse::Objective;
+    use crate::dse::OrderMode;
+
+    fn fixture() -> (TaskProgram, BoardConfig, FpgaPart) {
+        let board = BoardConfig::zynq706();
+        let program = crate::apps::build_app_program("matmul", 256, 64, &board).unwrap();
+        (program, board, FpgaPart::xc7z045())
+    }
+
+    fn codesign() -> CoDesign {
+        let mut cd = CoDesign::new("cli");
+        cd.accels.push(AccelSpec::parse("mxm64:U32").unwrap());
+        cd
+    }
+
+    #[test]
+    fn second_identical_point_query_is_a_hit_with_identical_bytes() {
+        let (program, board, part) = fixture();
+        let cd = codesign();
+        let mut memo = EvalMemo::new();
+        let first = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo, None,
+        )
+        .unwrap();
+        assert!(!first.hit);
+        assert_eq!(first.reply.evaluated, 1);
+        let second = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo, None,
+        )
+        .unwrap();
+        assert!(second.hit, "second identical query must be a level-2 hit");
+        assert_eq!(second.reply.evaluated, 0);
+        assert_eq!(second.reply.l2_hits, 1);
+        assert_eq!(
+            first.reply.text, second.reply.text,
+            "hit must render the exact bytes of the original evaluation"
+        );
+        assert_eq!(first.values.est_ms.to_bits(), second.values.est_ms.to_bits());
+    }
+
+    #[test]
+    fn point_query_matches_the_full_sweep_memo_entry() {
+        // A point recorded by `dse` must serve `estimate` for the same
+        // co-design bit-identically: the two paths share one key space.
+        let (program, board, part) = fixture();
+        let mut memo = EvalMemo::new();
+        let q = DseQuery {
+            app: "matmul".into(),
+            n: 256,
+            bs: 64,
+            objective: Objective::Time,
+            top: 5,
+            mixed: false,
+            order: OrderMode::Ranked,
+        };
+        let reply = dse_query(&program, &board, &part, &q, 2, &mut memo, None).unwrap();
+        assert!(reply.evaluated > 0);
+        let cd = codesign();
+        let out = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo, None,
+        )
+        .unwrap();
+        assert!(
+            out.hit,
+            "estimate of a swept co-design must hit the dse-recorded entry"
+        );
+    }
+
+    #[test]
+    fn energy_view_renders_from_the_same_entry() {
+        let (program, board, part) = fixture();
+        let cd = codesign();
+        let mut memo = EvalMemo::new();
+        let est = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo, None,
+        )
+        .unwrap();
+        let en = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, true, &mut memo, None,
+        )
+        .unwrap();
+        assert!(en.hit, "energy shares the estimate's memo entry");
+        assert_eq!(est.values.energy_j.to_bits(), en.values.energy_j.to_bits());
+        assert!(en.reply.text.starts_with("== energy: matmul n=256 bs=64"));
+    }
+
+    #[test]
+    fn unsatisfiable_codesigns_error_instead_of_recording() {
+        let (program, board, part) = fixture();
+        let mut cd = CoDesign::new("cli");
+        cd.accels.push(AccelSpec::parse("nosuch:U8").unwrap());
+        let mut memo = EvalMemo::new();
+        let err = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo, None,
+        );
+        assert!(err.is_err());
+        assert_eq!(memo.n_points(), 0, "failed queries must not pollute the memo");
+    }
+}

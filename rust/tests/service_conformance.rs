@@ -1,0 +1,373 @@
+//! Black-box conformance suite for `zynq-estimator serve`: spawn the
+//! real binary, drive NDJSON over its stdin/stdout (and a TCP
+//! connection), and pin the protocol contracts down from the outside —
+//! responses byte-identical to the one-shot CLI for the same queries,
+//! structured errors mirroring the CLI exit-code taxonomy, round two of
+//! a persisted session answered entirely from the memo, and a process
+//! killed mid-query (injected `eval.point!abort`) losing at most the
+//! in-flight round.
+//!
+//! Everything here goes through child processes, so the suite exercises
+//! the same faultpoint env plumbing (`ZYNQ_FAULTS`) real deployments
+//! use; no in-process faultpoint arming.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+use zynq_estimator::dse::SweepJournal;
+use zynq_estimator::util::json::{parse, Value};
+
+const EXE: &str = env!("CARGO_BIN_EXE_zynq-estimator");
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("zynq_serve_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One daemon child with its NDJSON pipe pair.
+struct Daemon {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl Daemon {
+    fn spawn(args: &[&str], faults: Option<&str>) -> Daemon {
+        let mut cmd = Command::new(EXE);
+        cmd.arg("serve").args(args);
+        cmd.stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        match faults {
+            Some(f) => cmd.env("ZYNQ_FAULTS", f),
+            None => cmd.env_remove("ZYNQ_FAULTS"),
+        };
+        let mut child = cmd.spawn().expect("spawn serve daemon");
+        let stdin = child.stdin.take().unwrap();
+        let stdout = BufReader::new(child.stdout.take().unwrap());
+        Daemon {
+            child,
+            stdin: Some(stdin),
+            stdout,
+        }
+    }
+
+    /// Send one request line, read one response line. `None` when the
+    /// daemon died instead of answering (the injected-abort leg).
+    fn request(&mut self, line: &str) -> Option<Value> {
+        let stdin = self.stdin.as_mut().expect("stdin already closed");
+        if writeln!(stdin, "{line}").and_then(|_| stdin.flush()).is_err() {
+            return None;
+        }
+        let mut buf = String::new();
+        match self.stdout.read_line(&mut buf) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(parse(buf.trim_end()).expect("response must be one JSON object")),
+        }
+    }
+
+    /// Close stdin and reap the child.
+    fn wait(mut self) -> std::process::ExitStatus {
+        drop(self.stdin.take());
+        self.child.wait().expect("wait on daemon")
+    }
+}
+
+/// Send `shutdown`, assert the acknowledged exit code, reap the child.
+fn shutdown_clean(mut daemon: Daemon) {
+    let resp = daemon.request(r#"{"req":"shutdown"}"#).expect("shutdown ack");
+    assert!(is_ok(&resp), "{resp:?}");
+    assert_eq!(resp.get("exit_code").and_then(|v| v.as_i64()), Some(0));
+    let status = daemon.wait();
+    assert!(status.success(), "clean shutdown must exit 0: {status:?}");
+}
+
+fn one_shot(args: &[&str]) -> std::process::Output {
+    let mut cmd = Command::new(EXE);
+    cmd.args(args);
+    cmd.env_remove("ZYNQ_FAULTS");
+    cmd.output().expect("run one-shot CLI")
+}
+
+fn is_ok(v: &Value) -> bool {
+    v.get("ok").and_then(|x| x.as_bool()) == Some(true)
+}
+
+fn text(v: &Value) -> &str {
+    v.get("text").and_then(|x| x.as_str()).expect("text field")
+}
+
+fn u(v: &Value, key: &str) -> u64 {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .unwrap_or_else(|| panic!("missing u64 field '{key}' in {v:?}"))
+}
+
+const EST_A: &str = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"]}"#;
+const EST_B: &str = r#"{"id":2,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U16"]}"#;
+const ENERGY_A: &str = r#"{"id":3,"req":"energy","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"]}"#;
+
+#[test]
+fn daemon_point_responses_are_byte_identical_to_the_one_shot_cli() {
+    let mut daemon = Daemon::spawn(&[], None);
+    let est = daemon.request(EST_A).unwrap();
+    assert!(is_ok(&est), "{est:?}");
+    assert_eq!(u(&est, "evaluated"), 1, "cold daemon must evaluate");
+    let energy = daemon.request(ENERGY_A).unwrap();
+    assert!(is_ok(&energy), "{energy:?}");
+    assert_eq!(u(&energy, "evaluated"), 0, "energy view reuses the estimate's entry");
+    shutdown_clean(daemon);
+
+    // The same queries through the one-shot CLI: stdout must equal the
+    // daemon's `text` field byte for byte (shared query core).
+    let cli_est = one_shot(&[
+        "estimate", "--app", "matmul", "--n", "256", "--bs", "64", "--accel", "mxm64:U32",
+    ]);
+    assert!(cli_est.status.success(), "{}", String::from_utf8_lossy(&cli_est.stderr));
+    assert_eq!(
+        String::from_utf8(cli_est.stdout).unwrap(),
+        text(&est),
+        "daemon estimate text diverged from the one-shot CLI"
+    );
+    let cli_energy = one_shot(&[
+        "energy", "--app", "matmul", "--n", "256", "--bs", "64", "--accel", "mxm64:U32",
+    ]);
+    assert!(cli_energy.status.success());
+    assert_eq!(
+        String::from_utf8(cli_energy.stdout).unwrap(),
+        text(&energy),
+        "daemon energy text diverged from the one-shot CLI"
+    );
+    assert!(text(&est).starts_with("== estimate: matmul n=256 bs=64"));
+    assert!(text(&energy).contains("total energy:"));
+}
+
+#[test]
+fn one_shot_estimate_and_energy_share_one_memo_entry_across_invocations() {
+    // The regression the service work fixed: a second identical one-shot
+    // invocation must be answered from the persistent memo, with
+    // bit-identical stdout.
+    let d = tmpdir("oneshot_memo");
+    let memo = d.join("memo.json").display().to_string();
+    let args = [
+        "estimate", "--app", "matmul", "--n", "192", "--bs", "64", "--accel", "mxm64:U16",
+        "--memo", &memo,
+    ];
+    let first = one_shot(&args);
+    assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
+    assert!(
+        String::from_utf8_lossy(&first.stderr).contains("miss, 1 point evaluated and recorded"),
+        "first run must record"
+    );
+    let second = one_shot(&args);
+    assert!(second.status.success());
+    assert_eq!(first.stdout, second.stdout, "memo hit changed the reported numbers");
+    assert!(
+        String::from_utf8_lossy(&second.stderr).contains("L2 hit, 0 points evaluated"),
+        "second run must be a pure memo hit: {}",
+        String::from_utf8_lossy(&second.stderr)
+    );
+    // `energy` on the same co-design reads the same entry (one cache).
+    let energy = one_shot(&[
+        "energy", "--app", "matmul", "--n", "192", "--bs", "64", "--accel", "mxm64:U16",
+        "--memo", &memo,
+    ]);
+    assert!(energy.status.success());
+    assert!(
+        String::from_utf8_lossy(&energy.stderr).contains("L2 hit, 0 points evaluated"),
+        "energy must hit the entry estimate recorded"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn malformed_requests_answer_structured_errors_and_the_daemon_survives() {
+    let mut daemon = Daemon::spawn(&[], None);
+    let bad = daemon.request("this is not json").unwrap();
+    assert!(!is_ok(&bad));
+    assert_eq!(u(&bad, "code"), 1, "malformed line is the usage class");
+    let unknown = daemon.request(r#"{"id":5,"req":"frobnicate"}"#).unwrap();
+    assert_eq!(u(&unknown, "code"), 2, "unknown request mirrors CLI exit 2");
+    assert_eq!(unknown.get("id").and_then(|v| v.as_i64()), Some(5));
+    let missing = daemon.request(r#"{"req":"estimate"}"#).unwrap();
+    assert_eq!(u(&missing, "code"), 1, "missing 'app' is a usage error");
+    let unsat = daemon
+        .request(r#"{"req":"estimate","app":"nosuchapp"}"#)
+        .unwrap();
+    assert_eq!(u(&unsat, "code"), 1);
+    // The daemon still serves after every error class.
+    let ping = daemon.request(r#"{"req":"ping"}"#).unwrap();
+    assert!(is_ok(&ping), "{ping:?}");
+    assert_eq!(text(&ping), "pong\n");
+    shutdown_clean(daemon);
+}
+
+#[test]
+fn round_two_is_answered_entirely_from_the_persistent_memo() {
+    let d = tmpdir("two_rounds");
+    let memo = d.join("serve-memo.json").display().to_string();
+    let dse = r#"{"id":4,"req":"dse","app":"matmul","n":128,"top":5}"#;
+    let batch = [EST_A, EST_B, ENERGY_A, dse];
+
+    let mut round1 = Vec::new();
+    let mut daemon = Daemon::spawn(&["--memo", &memo, "--workers", "2"], None);
+    for req in batch {
+        let resp = daemon.request(req).unwrap();
+        assert!(is_ok(&resp), "{resp:?}");
+        round1.push(resp);
+    }
+    shutdown_clean(daemon);
+    assert!(
+        round1.iter().map(|r| u(r, "evaluated")).sum::<u64>() > 0,
+        "round 1 must evaluate something"
+    );
+    assert!(
+        !SweepJournal::wal_path(d.join("serve-memo.json").as_path()).exists(),
+        "a clean shutdown save must delete the WAL"
+    );
+
+    let mut daemon = Daemon::spawn(&["--memo", &memo, "--workers", "2"], None);
+    for (req, first) in batch.iter().zip(&round1) {
+        let resp = daemon.request(req).unwrap();
+        assert!(is_ok(&resp), "{resp:?}");
+        assert_eq!(
+            u(&resp, "evaluated"),
+            0,
+            "round 2 must be answered entirely from the memo: {req}"
+        );
+        if *req != dse {
+            assert_eq!(u(&resp, "l2_hits"), 1, "{req}");
+            assert_eq!(
+                text(&resp),
+                text(first),
+                "round 2 text diverged from round 1: {req}"
+            );
+        }
+    }
+    shutdown_clean(daemon);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn daemon_dse_text_is_a_prefix_of_the_one_shot_cli_output() {
+    // Same query, same worker count, both starting cold: the daemon's
+    // `text` (ranking table + pruning line) must be a byte-exact prefix
+    // of `dse --memo` stdout, which only appends memo/timing lines.
+    let mut daemon = Daemon::spawn(&["--workers", "2"], None);
+    let resp = daemon
+        .request(r#"{"id":1,"req":"dse","app":"matmul","n":128}"#)
+        .unwrap();
+    assert!(is_ok(&resp), "{resp:?}");
+    shutdown_clean(daemon);
+    let dse_text = text(&resp);
+    assert!(dse_text.contains("pruning: "), "{dse_text}");
+
+    let d = tmpdir("dse_prefix");
+    let memo = d.join("fresh.json").display().to_string();
+    let cli = one_shot(&[
+        "dse", "--app", "matmul", "--n", "128", "--memo", &memo, "--workers", "2",
+    ]);
+    assert!(cli.status.success(), "{}", String::from_utf8_lossy(&cli.stderr));
+    let stdout = String::from_utf8(cli.stdout).unwrap();
+    assert!(
+        stdout.starts_with(dse_text),
+        "daemon dse text is not a prefix of the CLI output:\n--- daemon\n{dse_text}\n--- cli\n{stdout}"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn kill_mid_query_loses_at_most_the_in_flight_round() {
+    let d = tmpdir("abort");
+    let memo_path = d.join("serve-memo.json");
+    let memo = memo_path.display().to_string();
+
+    // Session 1: evaluate A, shut down cleanly (memo saved).
+    let mut daemon = Daemon::spawn(&["--memo", &memo], None);
+    let first = daemon.request(EST_A).unwrap();
+    assert_eq!(u(&first, "evaluated"), 1);
+    shutdown_clean(daemon);
+    let snapshot = std::fs::read(&memo_path).unwrap();
+
+    // Session 2, with `eval.point!abort` armed through the environment:
+    // the memo hit for A needs no evaluation (the fault stays cold), the
+    // fresh point B aborts the process mid-evaluation — the stand-in for
+    // kill -9 while a query is in flight.
+    let mut daemon = Daemon::spawn(&["--memo", &memo], Some("eval.point!abort"));
+    let hit = daemon.request(EST_A).expect("memo hit must not evaluate");
+    assert_eq!(u(&hit, "evaluated"), 0);
+    assert_eq!(text(&hit), text(&first), "hit text diverged after restart");
+    let dead = daemon.request(EST_B);
+    assert!(dead.is_none(), "the armed abort must kill the daemon mid-query");
+    let status = daemon.wait();
+    assert!(!status.success(), "aborted daemon must not exit cleanly");
+    assert_eq!(
+        std::fs::read(&memo_path).unwrap(),
+        snapshot,
+        "the crash must not touch the saved memo"
+    );
+    assert!(
+        !SweepJournal::wal_path(&memo_path).exists(),
+        "the aborted evaluation never committed a WAL round"
+    );
+
+    // Session 3: only the in-flight query was lost — A still answers
+    // bit-identically from the memo, B evaluates fresh.
+    let mut daemon = Daemon::spawn(&["--memo", &memo], None);
+    let again = daemon.request(EST_A).unwrap();
+    assert_eq!(u(&again, "evaluated"), 0);
+    assert_eq!(text(&again), text(&first));
+    let fresh = daemon.request(EST_B).unwrap();
+    assert!(is_ok(&fresh), "{fresh:?}");
+    assert_eq!(u(&fresh, "evaluated"), 1, "the lost point re-evaluates");
+    let stats = daemon.request(r#"{"req":"memo","action":"stats"}"#).unwrap();
+    assert_eq!(u(&stats, "points"), 2, "both points recorded after recovery");
+    shutdown_clean(daemon);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn tcp_transport_speaks_the_same_protocol() {
+    let mut cmd = Command::new(EXE);
+    cmd.args(["serve", "--listen", "127.0.0.1:0"]);
+    cmd.stdin(Stdio::piped())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped());
+    cmd.env_remove("ZYNQ_FAULTS");
+    let mut child = cmd.spawn().unwrap();
+    // Keep stdin open: EOF on stdin is a graceful shutdown.
+    let stdin = child.stdin.take().unwrap();
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        assert!(
+            stderr.read_line(&mut line).unwrap() > 0,
+            "daemon exited before announcing its listener"
+        );
+        if let Some(rest) = line.trim().strip_prefix("serve: listening on ") {
+            break rest.to_string();
+        }
+    };
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = &stream;
+    writeln!(writer, "{}", r#"{"id":1,"req":"ping"}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let pong = parse(line.trim()).unwrap();
+    assert!(is_ok(&pong), "{pong:?}");
+    assert_eq!(text(&pong), "pong\n");
+    // A TCP shutdown acknowledges, then exits the whole process.
+    writeln!(writer, "{}", r#"{"req":"shutdown"}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let ack = parse(line.trim()).unwrap();
+    assert!(is_ok(&ack), "{ack:?}");
+    assert_eq!(ack.get("exit_code").and_then(|v| v.as_i64()), Some(0));
+    let status = child.wait().unwrap();
+    assert!(status.success(), "TCP shutdown must exit 0: {status:?}");
+    drop(stdin);
+}

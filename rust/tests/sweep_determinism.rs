@@ -204,6 +204,64 @@ fn prop_cached_estimation_equals_fresh_estimate() {
 }
 
 #[test]
+fn prop_concurrent_identical_dse_requests_coalesce_to_one_evaluation() {
+    // Service-layer determinism: N clients firing the same `dse` request
+    // at one daemon must cost exactly one evaluation pass in total, for
+    // any worker count. Clients that arrive while the leader is in
+    // flight park and receive a clone of its reply (bitwise identical);
+    // a client that arrives after completion re-runs warm and evaluates
+    // nothing — either way the memo sees one evaluation.
+    use std::sync::{Arc, Barrier};
+    use zynq_estimator::service::{ServeConfig, Service};
+    forall(6, 0xC0A1E5CE, |seed, rng| {
+        let workers = 1 + rng.gen_range(0, 4) as usize;
+        let n_clients = 2 + rng.gen_range(0, 6) as usize;
+        let n = if rng.next_f64() < 0.5 { 128 } else { 256 };
+        let cfg = ServeConfig {
+            workers,
+            ..ServeConfig::default()
+        };
+        let svc = Arc::new(Service::new(BoardConfig::zynq706(), cfg).unwrap());
+        let req = format!(r#"{{"req":"dse","app":"matmul","n":{n},"top":5}}"#);
+        let barrier = Arc::new(Barrier::new(n_clients));
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| {
+                let svc = Arc::clone(&svc);
+                let req = req.clone();
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    svc.handle_line(&req).0.expect("dse must answer")
+                })
+            })
+            .collect();
+        let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let evaluated = |r: &str| {
+            zynq_estimator::util::json::parse(r)
+                .unwrap()
+                .get("evaluated")
+                .and_then(|v| v.as_u64())
+                .unwrap()
+        };
+        let cold: Vec<&String> = responses.iter().filter(|r| evaluated(r) > 0).collect();
+        assert!(!cold.is_empty(), "seed {seed}: someone must have evaluated");
+        for r in &cold[1..] {
+            assert_eq!(
+                **r, *cold[0],
+                "seed {seed} workers={workers}: coalesced responses diverged"
+            );
+        }
+        assert_eq!(
+            svc.evaluated(),
+            evaluated(cold[0]),
+            "seed {seed} workers={workers}: more than one evaluation pass for {n_clients} clients"
+        );
+        assert_eq!(svc.requests(), n_clients as u64, "seed {seed}");
+        assert_eq!(svc.errors(), 0, "seed {seed}");
+    });
+}
+
+#[test]
 fn prop_worker_reuse_is_stateless_across_points() {
     // Evaluating A, then B, then A again through one reused worker must
     // reproduce A exactly — i.e. `Simulator::reset` leaks nothing.
