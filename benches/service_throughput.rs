@@ -1,0 +1,194 @@
+//! Service-throughput benchmark: sharded lanes and cross-request batch
+//! evaluation against the sequential single-lane daemon.
+//!
+//! Four clients (one per suite app — apps are kernel-disjoint, so each
+//! client's memo state lives in one lane) fire the same mixed hot/cold
+//! request sequences three ways:
+//!
+//! 1. **sequential** — single-lane service, clients one after another
+//!    (the pre-sharding daemon's cost model);
+//! 2. **sharded** — `lanes = 4`, four concurrent clients;
+//! 3. **batch** — `lanes = 4`, each client's whole sequence as one
+//!    `batch` envelope (one worker-pool round per context).
+//!
+//! The harness itself asserts the exactness contracts — every sharded
+//! and batch response byte-identical to the sequential one, and every
+//! run evaluating exactly the distinct cold points — and emits
+//! `BENCH_service.json` so `bench-check` gates them against
+//! `bench_baselines/BENCH_service.json` in CI (timings recorded,
+//! machine-dependent, skipped by the gate).
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::service::{ServeConfig, Service};
+use zynq_estimator::util::json::{obj, parse, Value};
+
+/// One FPGA kernel per suite app (bs 64 everywhere).
+const APPS: [(&str, &str); 4] = [
+    ("matmul", "mxm64"),
+    ("cholesky", "dgemm"),
+    ("lu", "trsm_row"),
+    ("stencil", "jacobi64"),
+];
+
+fn service(lanes: usize) -> Service {
+    Service::new(
+        BoardConfig::zynq706(),
+        ServeConfig {
+            lanes,
+            workers: 2,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// One client's request sequence: 8 distinct cold points (2 sizes × 4
+/// unrolls), then two hot repeats of each — 24 requests, 1/3 cold.
+fn client_sequence(client: usize, app: &str, kernel: &str) -> Vec<String> {
+    let mut cold = Vec::new();
+    for n in [128u64, 256] {
+        for unroll in [4u64, 8, 16, 32] {
+            let id = client * 100 + cold.len();
+            cold.push(format!(
+                r#"{{"id":{id},"req":"estimate","app":"{app}","n":{n},"accel":["{kernel}:U{unroll}"]}}"#
+            ));
+        }
+    }
+    let mut reqs = cold.clone();
+    for _ in 0..2 {
+        reqs.extend(cold.iter().cloned());
+    }
+    reqs
+}
+
+fn run_sequential(svc: &Service, schedule: &[Vec<String>]) -> Vec<Vec<String>> {
+    schedule
+        .iter()
+        .map(|reqs| {
+            reqs.iter()
+                .map(|r| svc.handle_line(r).0.expect("request must answer"))
+                .collect()
+        })
+        .collect()
+}
+
+fn run_concurrent(svc: &Arc<Service>, schedule: &[Vec<String>]) -> Vec<Vec<String>> {
+    let barrier = Arc::new(Barrier::new(schedule.len()));
+    let handles: Vec<_> = schedule
+        .iter()
+        .cloned()
+        .map(|reqs| {
+            let svc = Arc::clone(svc);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                reqs.iter()
+                    .map(|r| svc.handle_line(r).0.expect("request must answer"))
+                    .collect::<Vec<String>>()
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn main() {
+    let schedule: Vec<Vec<String>> = APPS
+        .iter()
+        .enumerate()
+        .map(|(c, (app, kernel))| client_sequence(c, app, kernel))
+        .collect();
+    let total_requests: usize = schedule.iter().map(|s| s.len()).sum();
+
+    // 1. Sequential single lane — the reference for bytes and counts.
+    let sequential = service(1);
+    let t = Instant::now();
+    let expect = run_sequential(&sequential, &schedule);
+    let sequential_s = t.elapsed().as_secs_f64();
+    let evaluated = sequential.evaluated();
+
+    // 2. Sharded lanes, concurrent clients.
+    let sharded = Arc::new(service(4));
+    let t = Instant::now();
+    let got = run_concurrent(&sharded, &schedule);
+    let sharded_s = t.elapsed().as_secs_f64();
+    let responses_identical = got == expect;
+    assert!(
+        responses_identical,
+        "sharded responses diverged from the sequential reference"
+    );
+    assert_eq!(sharded.evaluated(), evaluated, "sharded run re-evaluated");
+
+    // 3. Batch envelopes on sharded lanes: each client sends its whole
+    // sequence as one envelope; every item must equal its standalone
+    // response line.
+    let batcher = Arc::new(service(4));
+    let envelopes: Vec<Vec<String>> = schedule
+        .iter()
+        .enumerate()
+        .map(|(c, reqs)| {
+            vec![format!(
+                r#"{{"id":{c},"req":"batch","items":[{}]}}"#,
+                reqs.join(",")
+            )]
+        })
+        .collect();
+    let t = Instant::now();
+    let batch_lines = run_concurrent(&batcher, &envelopes);
+    let batch_s = t.elapsed().as_secs_f64();
+    let mut batch_identical = true;
+    for (client, lines) in batch_lines.iter().enumerate() {
+        let v = parse(&lines[0]).expect("batch response parses");
+        let Some(Value::Arr(items)) = v.get("items") else {
+            panic!("batch response without items: {}", lines[0]);
+        };
+        assert_eq!(items.len(), expect[client].len());
+        for (item, exp) in items.iter().zip(&expect[client]) {
+            if item.to_json() != parse(exp).unwrap().to_json() {
+                batch_identical = false;
+            }
+        }
+    }
+    assert!(
+        batch_identical,
+        "batch items diverged from the standalone response lines"
+    );
+    assert_eq!(batcher.evaluated(), evaluated, "batch run re-evaluated");
+    let no_duplicate_evaluation =
+        sharded.evaluated() == evaluated && batcher.evaluated() == evaluated;
+
+    println!("== service throughput ({} clients, {total_requests} requests, {evaluated} cold points)", APPS.len());
+    println!("   sequential 1 lane : {sequential_s:.3} s");
+    println!(
+        "   sharded 4 lanes   : {sharded_s:.3} s ({:.2}x)",
+        sequential_s / sharded_s.max(1e-12)
+    );
+    println!(
+        "   batch envelopes   : {batch_s:.3} s ({:.2}x)",
+        sequential_s / batch_s.max(1e-12)
+    );
+
+    let out = obj(vec![
+        ("clients", APPS.len().into()),
+        ("requests", total_requests.into()),
+        ("evaluated", evaluated.into()),
+        ("sequential_s", sequential_s.into()),
+        ("sharded_s", sharded_s.into()),
+        ("batch_s", batch_s.into()),
+        (
+            "sharded_speedup",
+            (sequential_s / sharded_s.max(1e-12)).into(),
+        ),
+        ("batch_speedup", (sequential_s / batch_s.max(1e-12)).into()),
+        ("responses_identical", responses_identical.into()),
+        ("batch_identical", batch_identical.into()),
+        ("no_duplicate_evaluation", no_duplicate_evaluation.into()),
+    ])
+    .to_json();
+    match std::fs::write("BENCH_service.json", &out) {
+        Ok(()) => println!("wrote BENCH_service.json ({} bytes)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_service.json: {e}"),
+    }
+}

@@ -155,13 +155,15 @@ COMMANDS (one per paper experiment, plus utilities):
                                                                  --app-floor most recent contexts
   serve          [--memo m.json] [--listen host:port]           estimator-as-a-service daemon:
                  [--workers N] [--save-every 8]                  NDJSON requests (estimate|energy|
-                 [--max-bytes B [--app-floor 1]]                 dse|memo|ping|shutdown), one per
-                                                                 line on stdin and on each TCP
-                                                                 connection; answers from one
+                 [--max-bytes B [--app-floor 1]]                 batch|dse|memo|ping|shutdown),
+                 [--lanes 1] [--batch-window-ms 0]               one per line on stdin and on each
+                                                                 TCP connection; answers from one
                                                                  shared eval memo with in-flight
-                                                                 query coalescing and periodic
-                                                                 WAL-journaled saves (protocol
-                                                                 reference in README)
+                                                                 query coalescing, app-sharded
+                                                                 memo lanes (--lanes), cross-
+                                                                 request batch evaluation, and
+                                                                 periodic WAL-journaled saves
+                                                                 (protocol reference in README)
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report through the
                  [--memo m.json] [--breakdown]                   eval memo (--breakdown: per-rail
                                                                  split via detailed simulation)
@@ -1039,10 +1041,13 @@ fn cmd_dse_memo(args: &Args) -> anyhow::Result<i32> {
 /// `serve`: the estimator as a resident NDJSON daemon over one shared
 /// evaluation memo (see [`crate::service`]). Requests arrive one JSON
 /// object per line on stdin (and each TCP connection with `--listen`);
-/// responses leave the same way on stdout. Diagnostics go to stderr
-/// only. Exit code 0 on clean shutdown, 1 when a memo save failed
-/// (degraded — the WAL retains the unsaved delta), 3 when the memo file
-/// could not be loaded.
+/// responses leave the same way on stdout. `--lanes N` shards the memo
+/// lane by application so distinct apps evaluate concurrently;
+/// `--batch-window-ms W` batches point queries arriving within W ms into
+/// one worker-pool round (responses stay byte-identical either way).
+/// Diagnostics go to stderr only. Exit code 0 on clean shutdown, 1 when
+/// a memo save failed (degraded — the WAL retains the unsaved delta),
+/// 3 when the memo file could not be loaded.
 fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let listen = match (args.has("listen"), args.get("listen")) {
         (false, _) => None,
@@ -1058,6 +1063,10 @@ fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         ),
         (true, None) => anyhow::bail!("--max-bytes requires a byte count"),
     };
+    let lanes = args.u64_or("lanes", 1)?;
+    if lanes == 0 || lanes > 64 {
+        anyhow::bail!("--lanes expects 1..=64, got {lanes}");
+    }
     let cfg = crate::service::ServeConfig {
         memo_path: memo_path_from_args(args)?.map(PathBuf::from),
         listen,
@@ -1065,6 +1074,8 @@ fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         save_every: args.u64_or("save-every", 8)?.max(1),
         max_bytes,
         app_floor: args.u64_or("app-floor", 1)? as usize,
+        lanes: lanes as usize,
+        batch_window_ms: args.u64_or("batch-window-ms", 0)?,
     };
     let svc = crate::service::Service::new(board.clone(), cfg).map_err(corrupt_input)?;
     crate::service::daemon::run(svc)
@@ -1595,6 +1606,10 @@ mod tests {
         assert!(run(&argv("serve --listen")).is_err());
         assert!(run(&argv("serve --max-bytes")).is_err());
         assert!(run(&argv("serve --memo")).is_err());
+        assert!(run(&argv("serve --lanes 0")).is_err());
+        assert!(run(&argv("serve --lanes 65")).is_err());
+        assert!(run(&argv("serve --lanes nope")).is_err());
+        assert!(run(&argv("serve --batch-window-ms nope")).is_err());
     }
 
     #[test]

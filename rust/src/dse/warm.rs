@@ -385,12 +385,14 @@ impl EvalMemo {
     }
 
     /// [`EvalMemo::load_or_new`] plus the journal-recovery report: when a
-    /// `<path>.wal` sibling with committed rounds exists (a recoverable
-    /// sweep was interrupted after its last save), the committed points
-    /// and context-recency snapshots are replayed into the returned memo
-    /// and described by the [`WalRecovery`]. A corrupt journal is
-    /// quarantined like a corrupt memo and ignored — recovery is
-    /// best-effort, never a new failure mode.
+    /// `<path>.wal` sibling (or any numbered `<path>.wal.<k>` shard
+    /// journal of a multi-lane daemon) with committed rounds exists, the
+    /// committed points and context-recency snapshots of every journal
+    /// are replayed into the returned memo and described by one merged
+    /// [`WalRecovery`]. A corrupt journal is quarantined like a corrupt
+    /// memo and ignored — recovery is best-effort, never a new failure
+    /// mode — and corruption in one shard never blocks replay of the
+    /// others.
     pub fn load_with_recovery(path: &Path) -> anyhow::Result<(Self, Option<WalRecovery>)> {
         crate::util::faultpoint::hit("memo.load")?;
         let mut memo = if !path.exists() {
@@ -412,25 +414,22 @@ impl EvalMemo {
                 }
             }
         };
-        let wal = SweepJournal::wal_path(path);
-        if !wal.exists() {
-            return Ok((memo, None));
-        }
-        let text = std::fs::read_to_string(&wal)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", wal.display()))?;
-        match memo.replay_wal_text(&text) {
-            Ok(rec) if rec.is_empty() => Ok((memo, None)),
-            Ok(rec) => {
-                eprintln!(
-                    "note: {}: replayed {} points over {} committed rounds from the journal",
-                    wal.display(),
-                    rec.n_points(),
-                    rec.rounds
-                );
-                Ok((memo, Some(rec)))
-            }
-            Err(e) => {
-                match crate::util::persist::quarantine(&wal) {
+        let mut combined = WalRecovery::default();
+        for wal in SweepJournal::shard_wal_paths(path) {
+            let text = std::fs::read_to_string(&wal)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", wal.display()))?;
+            match memo.replay_wal_text(&text) {
+                Ok(rec) if rec.is_empty() => {}
+                Ok(rec) => {
+                    eprintln!(
+                        "note: {}: replayed {} points over {} committed rounds from the journal",
+                        wal.display(),
+                        rec.n_points(),
+                        rec.rounds
+                    );
+                    combined.merge(rec);
+                }
+                Err(e) => match crate::util::persist::quarantine(&wal) {
                     Ok(bak) => eprintln!(
                         "warning: {}: {e}; journal moved to {} and ignored",
                         wal.display(),
@@ -440,9 +439,13 @@ impl EvalMemo {
                         "warning: {}: {e}; journal could not be quarantined ({re}), ignored",
                         wal.display()
                     ),
-                }
-                Ok((memo, None))
+                },
             }
+        }
+        if combined.is_empty() {
+            Ok((memo, None))
+        } else {
+            Ok((memo, Some(combined)))
         }
     }
 
@@ -453,7 +456,9 @@ impl EvalMemo {
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         crate::util::faultpoint::hit("memo.save")?;
         crate::util::persist::write_atomic(path, self.to_json().as_bytes())?;
-        let _ = std::fs::remove_file(SweepJournal::wal_path(path));
+        for wal in SweepJournal::shard_wal_paths(path) {
+            let _ = std::fs::remove_file(wal);
+        }
         let _ = std::fs::remove_file(PathBuf::from(format!("{}.ckpt", path.display())));
         Ok(())
     }
@@ -1224,6 +1229,17 @@ impl WalRecovery {
     pub fn contains(&self, fingerprint: u64, key: &str) -> bool {
         self.points.get(&fingerprint).is_some_and(|s| s.contains(key))
     }
+
+    /// Fold another journal's recovery report into this one — multi-shard
+    /// service journals (`<memo>.wal`, `<memo>.wal.1`, ...) replay as one
+    /// combined report.
+    pub fn merge(&mut self, other: WalRecovery) {
+        self.contexts.extend(other.contexts);
+        for (fp, keys) in other.points {
+            self.points.entry(fp).or_default().extend(keys);
+        }
+        self.rounds += other.rounds;
+    }
 }
 
 /// Staged `ctx` journal record (not yet applied to the memo).
@@ -1368,6 +1384,57 @@ impl SweepJournal {
         PathBuf::from(format!("{}.wal", memo_path.display()))
     }
 
+    /// Journal path of one service lane: shard 0 keeps the plain
+    /// `<memo>.wal` name (single-lane daemons and recoverable sweeps are
+    /// byte-for-byte unchanged), shard `k > 0` journals to
+    /// `<memo>.wal.<k>`.
+    pub fn shard_wal_path(memo_path: &Path, shard: usize) -> PathBuf {
+        if shard == 0 {
+            Self::wal_path(memo_path)
+        } else {
+            PathBuf::from(format!("{}.wal.{shard}", memo_path.display()))
+        }
+    }
+
+    /// Every journal sibling of `memo_path` that exists on disk: the base
+    /// `<memo>.wal` first, then numbered `<memo>.wal.<k>` shard journals
+    /// in ascending shard order. Replay and post-save cleanup both walk
+    /// this list, so the "lose at most the in-flight round" contract
+    /// holds independently per shard.
+    pub fn shard_wal_paths(memo_path: &Path) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        let base = Self::wal_path(memo_path);
+        if base.exists() {
+            out.push(base);
+        }
+        let Some(name) = memo_path.file_name() else {
+            return out;
+        };
+        let prefix = format!("{}.wal.", name.to_string_lossy());
+        let dir = match memo_path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let mut numbered: Vec<(u64, PathBuf)> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                let fname = entry.file_name();
+                let fname = fname.to_string_lossy();
+                let Some(rest) = fname.strip_prefix(&prefix) else {
+                    continue;
+                };
+                if !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()) {
+                    if let Ok(shard) = rest.parse::<u64>() {
+                        numbered.push((shard, entry.path()));
+                    }
+                }
+            }
+        }
+        numbered.sort_unstable_by_key(|(shard, _)| *shard);
+        out.extend(numbered.into_iter().map(|(_, p)| p));
+        out
+    }
+
     /// Open the journal next to `memo_path` in append mode (a journal left
     /// by an interrupted sweep is extended, never truncated past its last
     /// complete line — its committed rounds were already replayed into the
@@ -1379,7 +1446,17 @@ impl SweepJournal {
     /// it would glue the new session's first record onto the garbage and
     /// corrupt the whole journal on the next replay.
     pub fn open(memo_path: &Path) -> anyhow::Result<Self> {
-        let path = Self::wal_path(memo_path);
+        Self::open_at(Self::wal_path(memo_path))
+    }
+
+    /// Open the shard-`k` journal of `memo_path` (see
+    /// [`SweepJournal::shard_wal_path`]) — one per service lane, so
+    /// concurrent lanes never interleave records inside one file.
+    pub fn open_shard(memo_path: &Path, shard: usize) -> anyhow::Result<Self> {
+        Self::open_at(Self::shard_wal_path(memo_path, shard))
+    }
+
+    fn open_at(path: PathBuf) -> anyhow::Result<Self> {
         if let Ok(bytes) = std::fs::read(&path) {
             if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
                 let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1);

@@ -193,9 +193,11 @@ pub fn service_stats_fields(
     stats: &crate::dse::MemoStats,
     requests: u64,
     coalesced: u64,
+    batched: u64,
     total_evaluated: u64,
     errors: u64,
     saves: u64,
+    lanes: u64,
     degraded: bool,
 ) -> Vec<(String, Value)> {
     vec![
@@ -205,9 +207,11 @@ pub fn service_stats_fields(
         ("bytes".into(), (stats.bytes as u64).into()),
         ("requests".into(), requests.into()),
         ("coalesced".into(), coalesced.into()),
+        ("batched".into(), batched.into()),
         ("total_evaluated".into(), total_evaluated.into()),
         ("errors".into(), errors.into()),
         ("saves".into(), saves.into()),
+        ("lanes".into(), lanes.into()),
         ("degraded".into(), degraded.into()),
     ]
 }

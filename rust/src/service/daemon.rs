@@ -8,6 +8,30 @@
 //! semantics are transport-independent and the conformance suite can
 //! drive the cheap pipe transport and trust the TCP one.
 //!
+//! **Lane sharding.** With `--lanes N` the single memo lane of the
+//! original daemon splits into N lanes keyed by application name:
+//! requests for distinct apps acquire independent lane locks and run
+//! their program analysis and cold evaluations concurrently under a
+//! shared memo *read* lock, taking the write lock only for the brief
+//! per-point bookkeeping. Apps are kernel-disjoint, so contexts that
+//! share level-1 kernel state (the same app at several problem sizes)
+//! always land in one lane and see exactly the sequential warmth
+//! counters — which is what keeps every response byte-identical to the
+//! single-lane daemon for any interleaving. Each lane journals to its
+//! own WAL shard (`<memo>.wal`, `<memo>.wal.1`, ...), so the
+//! crash-safety contract — lose at most the in-flight round — holds
+//! independently per lane.
+//!
+//! **Batch evaluation.** The cold points of a `batch` envelope (and of a
+//! `--batch-window-ms` accumulation window) are evaluated together as
+//! one chunk-synchronous worker-pool round per context
+//! ([`super::query::pre_evaluate`]), then each item's memo bookkeeping
+//! and response rendering runs in original arrival order
+//! ([`super::query::point_query_prepared`]). Evaluation is a pure
+//! function of (context, co-design), so batching changes throughput and
+//! never bytes; the conformance suite proves the responses equal the
+//! sequential ones.
+//!
 //! **Coalescing.** Identical in-flight queries (same canonical
 //! [`Envelope::coalesce_key`]) share one evaluation: the first arrival
 //! becomes the *leader* and computes; later arrivals park on a condvar
@@ -18,37 +42,45 @@
 //! fields, which would break response bit-identity.
 //!
 //! **Persistence.** With `--memo <file>` the memo loads with WAL
-//! recovery at startup, journals every fresh evaluation as a committed
-//! WAL round *before* its response is written, and saves atomically
-//! every `--save-every` fresh evaluations, at `memo gc`, and at
-//! shutdown/EOF. A `kill -9` therefore loses at most the in-flight
-//! round — the same contract the recoverable sweeps have. A failed save
-//! degrades cleanly: the daemon keeps answering, the WAL keeps the
-//! delta, and the final exit code turns non-zero so supervisors notice.
+//! recovery (all shards) at startup, journals every fresh evaluation as
+//! a committed WAL round *before* its response is written, and saves
+//! atomically every `--save-every` fresh evaluations, at `memo gc`, and
+//! at shutdown/EOF. A `kill -9` therefore loses at most the in-flight
+//! round per lane — the same contract the recoverable sweeps have. A
+//! failed save degrades cleanly: the daemon keeps answering, the shard
+//! WALs keep the delta, and the final exit code turns non-zero so
+//! supervisors notice.
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
 
 use crate::config::BoardConfig;
 use crate::coordinator::task::TaskProgram;
-use crate::dse::{EvalMemo, SweepJournal};
+use crate::dse::warm::context_fingerprint;
+use crate::dse::{EvalMemo, SweepContext, SweepJournal};
 use crate::hls::FpgaPart;
+use crate::util::fnv::Fnv;
 use crate::util::json::Value;
 
 use super::proto::{
-    err_line, ok_line, parse_request, Envelope, QueryReply, RequestKind, ServiceError,
+    err_line, err_obj, ok_line, ok_obj, parse_request, BatchItem, Envelope, PointQuery,
+    QueryReply, RequestKind, ServiceError,
 };
-use super::query::{dse_query, point_query};
+use super::query::{
+    dse_query, point_query_prepared, pre_evaluate, space_for_codesign, PreEvaluated,
+};
 
 /// Daemon configuration (the `serve` CLI flags).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Persistent memo file; `None` serves from a process-local memo.
     pub memo_path: Option<PathBuf>,
-    /// TCP listen address (e.g. `127.0.0.1:7070`); `None` is stdio-only.
+    /// TCP listen address (e.g. `127.0.0.1:0`); `None` is stdio-only.
     pub listen: Option<String>,
     /// Sweep worker threads (0 → one per core).
     pub workers: usize,
@@ -58,6 +90,14 @@ pub struct ServeConfig {
     pub max_bytes: Option<usize>,
     /// Per-app most-recent context floor of the byte-budget gc.
     pub app_floor: usize,
+    /// Memo lanes (`--lanes`): point/dse requests shard by app name and
+    /// distinct lanes evaluate concurrently. `1` is the original
+    /// single-lane daemon, bit for bit.
+    pub lanes: usize,
+    /// Accumulation window (`--batch-window-ms`) for cross-request batch
+    /// evaluation of point queries; `0` disables the window (explicit
+    /// `batch` envelopes always batch).
+    pub batch_window_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -69,17 +109,33 @@ impl Default for ServeConfig {
             save_every: 8,
             max_bytes: None,
             app_floor: 1,
+            lanes: 1,
+            batch_window_ms: 0,
         }
     }
 }
 
-/// The memo plus everything that must stay mutually consistent with it
-/// (journal handle, save bookkeeping) — one lock, one owner at a time.
-struct MemoLane {
-    memo: EvalMemo,
+/// Per-lane mutable state: the lane's shard journal. The lane lock is
+/// what serializes requests that share memo state (same app), so holding
+/// it across one request's evaluate-then-record sequence is exactly the
+/// sequential semantics the byte-identity contract needs.
+struct LaneState {
     journal: Option<SweepJournal>,
-    fresh_since_save: u64,
-    save_failed: bool,
+}
+
+/// The accumulation window of one lane: point queries parked here are
+/// drained by the window leader into one batch round.
+#[derive(Default)]
+struct Window {
+    pending: Vec<PendingPoint>,
+    collecting: bool,
+}
+
+/// One window-parked point query and the cell its reply is fanned into.
+struct PendingPoint {
+    query: PointQuery,
+    energy: bool,
+    cell: Arc<InFlight>,
 }
 
 /// A query in flight: the leader publishes into `slot` and wakes waiters.
@@ -88,12 +144,22 @@ struct InFlight {
     done: Condvar,
 }
 
+impl InFlight {
+    fn new() -> Self {
+        InFlight {
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+        }
+    }
+}
+
 /// Cumulative service counters (all monotonic, relaxed ordering — they
 /// are observability, not synchronization).
 #[derive(Default)]
 struct Counters {
     requests: AtomicU64,
     coalesced: AtomicU64,
+    batched: AtomicU64,
     evaluated: AtomicU64,
     l1_hits: AtomicU64,
     l2_hits: AtomicU64,
@@ -101,16 +167,30 @@ struct Counters {
     saves: AtomicU64,
 }
 
-/// The resident estimator service: shared memo, program cache, in-flight
-/// coalescing table and counters. Wrap in an [`Arc`] and call
-/// [`Service::handle_line`] from any number of threads.
+/// The resident estimator service: shared memo behind a read/write lock,
+/// app-sharded lanes with per-shard journals, program and fingerprint
+/// caches, in-flight coalescing table and counters. Wrap in an [`Arc`]
+/// and call [`Service::handle_line`] from any number of threads.
 pub struct Service {
     board: BoardConfig,
     part: FpgaPart,
     cfg: ServeConfig,
     programs: Mutex<BTreeMap<(String, u64, u64), Arc<TaskProgram>>>,
-    lane: Mutex<MemoLane>,
+    /// The shared two-level memo. Evaluation and program analysis run
+    /// under the *read* lock (so distinct lanes overlap); only the brief
+    /// per-point bookkeeping and gc take the write lock.
+    memo: RwLock<EvalMemo>,
+    /// Cached context fingerprints per (app, n, bs) — the fingerprint
+    /// covers program/board/part only, so it is computed once per context
+    /// lifetime with a probe analysis and reused ever after.
+    fingerprints: Mutex<BTreeMap<(String, u64, u64), u64>>,
+    lanes: Vec<Mutex<LaneState>>,
+    windows: Vec<Mutex<Window>>,
     inflight: Mutex<HashMap<String, Arc<InFlight>>>,
+    /// Serializes savers; lane locks are only held *inside* a save.
+    save_lock: Mutex<()>,
+    fresh_since_save: AtomicU64,
+    save_failed: AtomicBool,
     counters: Counters,
     shutdown: AtomicBool,
     exit_code: Mutex<Option<i32>>,
@@ -118,28 +198,40 @@ pub struct Service {
 
 /// Lock that survives a poisoned-by-panic peer: a leader panicking
 /// mid-query (fault injection does this on purpose) must not wedge the
-/// daemon — worst case the memo lane lost one partial recording, which
-/// the next save rewrites consistently.
+/// daemon — worst case the memo lost one partial recording, which the
+/// next save rewrites consistently.
 fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// [`lock_unpoisoned`] for the memo read lock.
+fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+/// [`lock_unpoisoned`] for the memo write lock.
+fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
 impl Service {
-    /// Build the service: load the memo (with WAL recovery) and open its
-    /// journal. Startup diagnostics go to stderr — stdout carries only
-    /// NDJSON responses.
+    /// Build the service: load the memo (with WAL recovery across every
+    /// shard journal) and open one shard journal per lane. Startup
+    /// diagnostics go to stderr — stdout carries only NDJSON responses.
     pub fn new(board: BoardConfig, cfg: ServeConfig) -> anyhow::Result<Self> {
-        let (memo, journal) = match &cfg.memo_path {
+        let n_lanes = cfg.lanes.max(1);
+        let mut journals: Vec<Option<SweepJournal>> = (0..n_lanes).map(|_| None).collect();
+        let memo = match &cfg.memo_path {
             Some(path) => {
                 let (memo, recovered) = EvalMemo::load_with_recovery(path)?;
                 if let Some(rec) = &recovered {
                     eprintln!(
                         "serve: recovered {} journaled points across {} contexts \
-                         ({} committed rounds) from {}",
+                         ({} committed rounds) from the journal(s) of {}",
                         rec.n_points(),
                         rec.contexts.len(),
                         rec.rounds,
-                        SweepJournal::wal_path(path).display(),
+                        path.display(),
                     );
                 }
                 eprintln!(
@@ -149,23 +241,29 @@ impl Service {
                     memo.n_points(),
                     memo.n_kernel_entries(),
                 );
-                let journal = SweepJournal::open(path)?;
-                (memo, Some(journal))
+                for (shard, slot) in journals.iter_mut().enumerate() {
+                    *slot = Some(SweepJournal::open_shard(path, shard)?);
+                }
+                memo
             }
-            None => (EvalMemo::new(), None),
+            None => EvalMemo::new(),
         };
         Ok(Service {
             board,
             part: FpgaPart::xc7z045(),
             cfg,
             programs: Mutex::new(BTreeMap::new()),
-            lane: Mutex::new(MemoLane {
-                memo,
-                journal,
-                fresh_since_save: 0,
-                save_failed: false,
-            }),
+            memo: RwLock::new(memo),
+            fingerprints: Mutex::new(BTreeMap::new()),
+            lanes: journals
+                .into_iter()
+                .map(|journal| Mutex::new(LaneState { journal }))
+                .collect(),
+            windows: (0..n_lanes).map(|_| Mutex::new(Window::default())).collect(),
             inflight: Mutex::new(HashMap::new()),
+            save_lock: Mutex::new(()),
+            fresh_since_save: AtomicU64::new(0),
+            save_failed: AtomicBool::new(false),
             counters: Counters::default(),
             shutdown: AtomicBool::new(false),
             exit_code: Mutex::new(None),
@@ -182,14 +280,25 @@ impl Service {
         self.counters.coalesced.load(Ordering::Relaxed)
     }
 
+    /// Point queries answered through a batch round (explicit `batch`
+    /// envelopes plus accumulation-window batches).
+    pub fn batched(&self) -> u64 {
+        self.counters.batched.load(Ordering::Relaxed)
+    }
+
     /// Points freshly simulated across all queries.
     pub fn evaluated(&self) -> u64 {
         self.counters.evaluated.load(Ordering::Relaxed)
     }
 
-    /// Error responses sent.
+    /// Error responses sent (including failed batch items).
     pub fn errors(&self) -> u64 {
         self.counters.errors.load(Ordering::Relaxed)
+    }
+
+    /// Number of memo lanes the service shards across.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
     }
 
     fn workers(&self) -> usize {
@@ -197,6 +306,17 @@ impl Service {
             0 => crate::dse::default_workers(),
             w => w,
         }
+    }
+
+    /// Lane of an app. Apps are kernel-disjoint, so hashing the app name
+    /// keeps every context that shares level-1 kernel state (one app at
+    /// several problem sizes) in one lane — which is what makes the
+    /// per-response warmth counters deterministic under concurrency —
+    /// while distinct apps spread across lanes and evaluate concurrently.
+    fn lane_of(&self, app: &str) -> usize {
+        let mut h = Fnv::new();
+        h.str(app);
+        (h.finish() % self.lanes.len() as u64) as usize
     }
 
     fn program(&self, app: &str, n: u64, bs: u64) -> Result<Arc<TaskProgram>, ServiceError> {
@@ -214,19 +334,41 @@ impl Service {
         Ok(program)
     }
 
-    /// Save the memo under the lane lock: enforce the byte budget, close
-    /// the journal (a successful save deletes the `.wal` file — keeping
-    /// the handle would journal into a deleted inode), save atomically,
-    /// reopen the journal. On failure the daemon degrades instead of
-    /// dying: the WAL still carries the delta, `save_failed` turns the
-    /// final exit code non-zero.
-    fn save_lane(&self, lane: &mut MemoLane) {
-        let Some(path) = &self.cfg.memo_path else {
-            lane.fresh_since_save = 0;
+    /// Context fingerprint of one (app, n, bs) context, cached. The
+    /// fingerprint covers program/board/part only — never the swept
+    /// space — so one probe analysis computes it and every later request
+    /// (the hot path) reuses it without touching the program again.
+    fn fingerprint(&self, program: &TaskProgram, key: &(String, u64, u64)) -> u64 {
+        if let Some(fp) = lock_unpoisoned(&self.fingerprints).get(key) {
+            return *fp;
+        }
+        let ctx = SweepContext::new(program, &self.board, self.part.clone());
+        let fp = context_fingerprint(&ctx);
+        lock_unpoisoned(&self.fingerprints).insert(key.clone(), fp);
+        fp
+    }
+
+    /// Save the memo: serialize savers, quiesce every lane (all lane
+    /// locks, ascending index order), close the shard journals (a
+    /// successful save deletes the WAL files — keeping the handles would
+    /// journal into deleted inodes), enforce the byte budget, save
+    /// atomically, reopen the shard journals. On failure the daemon
+    /// degrades instead of dying: the shard WALs still carry the delta
+    /// and `save_failed` turns the final exit code non-zero.
+    ///
+    /// Callers must not hold any lane lock or memo guard.
+    fn save_all(&self) {
+        let Some(path) = self.cfg.memo_path.clone() else {
+            self.fresh_since_save.store(0, Ordering::Relaxed);
             return;
         };
+        let _saver = lock_unpoisoned(&self.save_lock);
+        let mut lanes: Vec<_> = self.lanes.iter().map(lock_unpoisoned).collect();
+        for lane in &mut lanes {
+            lane.journal = None;
+        }
         if let Some(max) = self.cfg.max_bytes {
-            let gc = lane.memo.gc_bytes(max, self.cfg.app_floor);
+            let gc = write_unpoisoned(&self.memo).gc_bytes(max, self.cfg.app_floor);
             if gc.evicted_contexts > 0 || gc.evicted_kernels > 0 {
                 eprintln!(
                     "serve: byte-budget gc evicted {} contexts ({} points), {} kernel entries",
@@ -234,23 +376,263 @@ impl Service {
                 );
             }
         }
-        lane.journal = None;
-        match lane.memo.save(path) {
+        match read_unpoisoned(&self.memo).save(&path) {
             Ok(()) => {
-                lane.fresh_since_save = 0;
+                self.fresh_since_save.store(0, Ordering::Relaxed);
                 self.counters.saves.fetch_add(1, Ordering::Relaxed);
             }
             Err(e) => {
-                lane.save_failed = true;
+                self.save_failed.store(true, Ordering::Relaxed);
                 eprintln!(
                     "serve: memo save failed ({e:#}) — continuing degraded; \
                      the WAL retains unsaved rounds"
                 );
             }
         }
-        match SweepJournal::open(path) {
-            Ok(j) => lane.journal = Some(j),
-            Err(e) => eprintln!("serve: journal reopen failed ({e:#}); journaling disabled"),
+        if self.shutdown.load(Ordering::SeqCst) {
+            // Final save on shutdown: leave the journals closed so a clean
+            // exit leaves no WAL siblings behind (opening a shard journal
+            // creates its file eagerly).
+            return;
+        }
+        for (shard, lane) in lanes.iter_mut().enumerate() {
+            match SweepJournal::open_shard(&path, shard) {
+                Ok(j) => lane.journal = Some(j),
+                Err(e) => eprintln!(
+                    "serve: journal reopen failed for lane {shard} ({e:#}); \
+                     journaling disabled"
+                ),
+            }
+        }
+    }
+
+    /// Save when the fresh-evaluation cadence is due. Callers must not
+    /// hold any lane lock or memo guard.
+    fn maybe_save(&self) {
+        if self.cfg.memo_path.is_some()
+            && self.fresh_since_save.load(Ordering::Relaxed) >= self.cfg.save_every.max(1)
+        {
+            self.save_all();
+        }
+    }
+
+    /// Warmth counters + save cadence for one answered query.
+    fn bump_warmth(&self, reply: &QueryReply) {
+        self.counters
+            .evaluated
+            .fetch_add(reply.evaluated, Ordering::Relaxed);
+        self.counters
+            .l1_hits
+            .fetch_add(reply.l1_hits, Ordering::Relaxed);
+        self.counters
+            .l2_hits
+            .fetch_add(reply.l2_hits, Ordering::Relaxed);
+        self.fresh_since_save
+            .fetch_add(reply.evaluated, Ordering::Relaxed);
+    }
+
+    /// Answer one point item against its lane: the context analysis runs
+    /// under the shared memo read lock (concurrent across lanes), the
+    /// bookkeeping under a brief write lock. A panicking evaluation
+    /// (fault injection) answers an error instead of tearing the lane
+    /// down.
+    fn point_item(
+        &self,
+        program: &TaskProgram,
+        q: &PointQuery,
+        energy: bool,
+        pre: &PreEvaluated,
+        lane: &mut LaneState,
+    ) -> Result<QueryReply, ServiceError> {
+        let cd = q.codesign();
+        let space = space_for_codesign(&cd);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let ctx = {
+                let memo = read_unpoisoned(&self.memo);
+                SweepContext::for_space_warm(program, &self.board, &self.part, &space, &memo)
+            };
+            let mut memo = write_unpoisoned(&self.memo);
+            point_query_prepared(
+                &ctx,
+                &space,
+                &q.app,
+                q.n,
+                q.bs,
+                &cd,
+                energy,
+                &mut memo,
+                lane.journal.as_mut(),
+                Some(pre),
+            )
+        }));
+        match outcome {
+            Ok(res) => res
+                .map(|o| o.reply)
+                .map_err(|e| ServiceError::usage(format!("{e:#}"))),
+            Err(_) => Err(ServiceError::usage(
+                "evaluation panicked (see stderr); request dropped",
+            )),
+        }
+    }
+
+    /// Answer the subset of `items` (by index) that belongs to one lane.
+    /// Phase 1 runs one chunk-synchronous worker-pool round per context
+    /// over its cold points, under the shared read lock; phase 2 performs
+    /// each item's bookkeeping and rendering in original arrival order,
+    /// which reproduces the sequential responses byte for byte.
+    fn run_lane_items(
+        &self,
+        lane: &mut LaneState,
+        items: &[(PointQuery, bool)],
+        programs: &[Option<Arc<TaskProgram>>],
+        idxs: &[usize],
+        out: &mut [Option<Result<QueryReply, ServiceError>>],
+    ) {
+        let mut groups: Vec<((String, u64, u64), Vec<usize>)> = Vec::new();
+        for &i in idxs {
+            let q = &items[i].0;
+            let key = (q.app.clone(), q.n, q.bs);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, members)) => members.push(i),
+                None => groups.push((key, vec![i])),
+            }
+        }
+        let workers = self.workers();
+        let mut pres: Vec<PreEvaluated> = Vec::with_capacity(groups.len());
+        for (key, members) in &groups {
+            let program = programs[members[0]]
+                .as_ref()
+                .expect("grouped items resolved their program");
+            let fp = self.fingerprint(program, key);
+            let cds: Vec<_> = members.iter().map(|&i| items[i].0.codesign()).collect();
+            let memo = read_unpoisoned(&self.memo);
+            pres.push(pre_evaluate(
+                program,
+                &self.board,
+                &self.part,
+                fp,
+                &cds,
+                &memo,
+                workers,
+            ));
+        }
+        let mut group_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (g, (_, members)) in groups.iter().enumerate() {
+            for &i in members {
+                group_of.insert(i, g);
+            }
+        }
+        for &i in idxs {
+            let (q, energy) = &items[i];
+            let program = programs[i].as_ref().expect("lane items have programs");
+            let res = self.point_item(program, q, *energy, &pres[group_of[&i]], lane);
+            if let Ok(reply) = &res {
+                self.bump_warmth(reply);
+            }
+            out[i] = Some(res);
+        }
+    }
+
+    /// Answer a slice of point queries with cross-request batch
+    /// evaluation. Items shard per lane (lanes are state-disjoint, so
+    /// processing lanes in ascending index order is cosmetic); within a
+    /// lane, each context's cold points run as one worker-pool round and
+    /// every response is byte-identical to handling the items one
+    /// request at a time in the same order.
+    fn run_point_items(
+        &self,
+        items: &[(PointQuery, bool)],
+    ) -> Vec<Result<QueryReply, ServiceError>> {
+        let mut out: Vec<Option<Result<QueryReply, ServiceError>>> =
+            items.iter().map(|_| None).collect();
+        let mut programs: Vec<Option<Arc<TaskProgram>>> = Vec::with_capacity(items.len());
+        for (i, (q, _)) in items.iter().enumerate() {
+            match self.program(&q.app, q.n, q.bs) {
+                Ok(p) => programs.push(Some(p)),
+                Err(e) => {
+                    out[i] = Some(Err(e));
+                    programs.push(None);
+                }
+            }
+        }
+        let mut by_lane: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, (q, _)) in items.iter().enumerate() {
+            if programs[i].is_some() {
+                by_lane.entry(self.lane_of(&q.app)).or_default().push(i);
+            }
+        }
+        for (lane_idx, idxs) in by_lane {
+            let mut lane = lock_unpoisoned(&self.lanes[lane_idx]);
+            self.run_lane_items(&mut lane, items, &programs, &idxs, &mut out);
+        }
+        self.maybe_save();
+        out.into_iter()
+            .map(|r| r.expect("every item answered"))
+            .collect()
+    }
+
+    /// Answer a `batch` envelope: parse-failed items answer their error
+    /// in place, valid items run through the batch evaluator, and every
+    /// item's response object is exactly what the standalone request
+    /// line would have produced (same [`ok_obj`]/[`err_obj`] builders,
+    /// same replies).
+    fn run_batch(&self, batch: &[BatchItem]) -> QueryReply {
+        let mut queries: Vec<(PointQuery, bool)> = Vec::new();
+        let mut slots: Vec<Result<usize, ServiceError>> = Vec::with_capacity(batch.len());
+        for item in batch {
+            match &item.query {
+                Ok(q) => {
+                    slots.push(Ok(queries.len()));
+                    queries.push((q.clone(), item.energy));
+                }
+                Err(e) => slots.push(Err(e.clone())),
+            }
+        }
+        self.counters
+            .batched
+            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        let replies = self.run_point_items(&queries);
+        let mut objs: Vec<Value> = Vec::with_capacity(batch.len());
+        let (mut l1, mut l2, mut evaluated, mut failed) = (0u64, 0u64, 0u64, 0u64);
+        for (item, slot) in batch.iter().zip(&slots) {
+            let req = if item.energy { "energy" } else { "estimate" };
+            let obj = match slot {
+                Ok(j) => match &replies[*j] {
+                    Ok(reply) => {
+                        l1 += reply.l1_hits;
+                        l2 += reply.l2_hits;
+                        evaluated += reply.evaluated;
+                        ok_obj(&item.id, req, reply)
+                    }
+                    Err(e) => {
+                        failed += 1;
+                        err_obj(&item.id, e)
+                    }
+                },
+                Err(e) => {
+                    failed += 1;
+                    err_obj(&item.id, e)
+                }
+            };
+            objs.push(obj);
+        }
+        self.counters.errors.fetch_add(failed, Ordering::Relaxed);
+        QueryReply {
+            text: format!(
+                "batch: {} items ({} evaluated, {} l2 hits, {} failed)\n",
+                batch.len(),
+                evaluated,
+                l2,
+                failed
+            ),
+            l1_hits: l1,
+            l2_hits: l2,
+            evaluated,
+            extra: vec![
+                ("items".into(), Value::Arr(objs)),
+                ("items_total".into(), (batch.len() as u64).into()),
+                ("items_failed".into(), failed.into()),
+            ],
         }
     }
 
@@ -258,66 +640,63 @@ impl Service {
         let map_err = |e: anyhow::Error| ServiceError::usage(format!("{e:#}"));
         match &env.kind {
             RequestKind::Estimate(q) | RequestKind::Energy(q) => {
-                let energy_view = matches!(env.kind, RequestKind::Energy(_));
-                let program = self.program(&q.app, q.n, q.bs)?;
-                let cd = q.codesign();
-                let mut lane = lock_unpoisoned(&self.lane);
-                let MemoLane { memo, journal, .. } = &mut *lane;
-                let out = point_query(
-                    &program,
-                    &self.board,
-                    &self.part,
-                    &q.app,
-                    q.n,
-                    q.bs,
-                    &cd,
-                    energy_view,
-                    memo,
-                    journal.as_mut(),
-                )
-                .map_err(map_err)?;
-                self.after_query(&mut lane, &out.reply);
-                Ok(out.reply)
+                let energy = matches!(env.kind, RequestKind::Energy(_));
+                let mut replies = self.run_point_items(&[(q.clone(), energy)]);
+                replies.pop().expect("one item, one reply")
             }
+            RequestKind::Batch(items) => Ok(self.run_batch(items)),
             RequestKind::Dse(q) => {
                 let program = self.program(&q.app, q.n, q.bs)?;
                 let workers = self.workers();
-                let mut lane = lock_unpoisoned(&self.lane);
-                let MemoLane { memo, journal, .. } = &mut *lane;
-                let reply = dse_query(
-                    &program,
-                    &self.board,
-                    &self.part,
-                    q,
-                    workers,
-                    memo,
-                    journal.as_mut(),
-                )
-                .map_err(map_err)?;
-                self.after_query(&mut lane, &reply);
+                let lane_idx = self.lane_of(&q.app);
+                let reply = {
+                    let mut lane = lock_unpoisoned(&self.lanes[lane_idx]);
+                    // Sweeps mutate the memo throughout (bound seeding +
+                    // recording), so they run under the write lock; lanes
+                    // still overlap on their point-query evaluations.
+                    let mut memo = write_unpoisoned(&self.memo);
+                    dse_query(
+                        &program,
+                        &self.board,
+                        &self.part,
+                        q,
+                        workers,
+                        &mut memo,
+                        lane.journal.as_mut(),
+                    )
+                    .map_err(map_err)?
+                };
+                self.bump_warmth(&reply);
+                self.maybe_save();
                 Ok(reply)
             }
             RequestKind::MemoStats => {
-                let lane = lock_unpoisoned(&self.lane);
-                let stats = lane.memo.stats();
+                let stats = read_unpoisoned(&self.memo).stats();
+                let degraded = self.save_failed.load(Ordering::Relaxed);
+                let saves = self.counters.saves.load(Ordering::Relaxed);
                 let mut text = stats.render();
                 text.push_str(&format!(
-                    "service: {} requests, {} coalesced, {} evaluated, {} errors, {} saves{}\n",
+                    "service: {} requests, {} coalesced, {} batched, {} evaluated, \
+                     {} errors, {} saves, {} lanes{}\n",
                     self.requests(),
                     self.coalesced(),
+                    self.batched(),
                     self.evaluated(),
                     self.errors(),
-                    self.counters.saves.load(Ordering::Relaxed),
-                    if lane.save_failed { ", DEGRADED" } else { "" },
+                    saves,
+                    self.lanes.len(),
+                    if degraded { ", DEGRADED" } else { "" },
                 ));
                 let extra = crate::metrics::export::service_stats_fields(
                     &stats,
                     self.requests(),
                     self.coalesced(),
+                    self.batched(),
                     self.evaluated(),
                     self.errors(),
-                    self.counters.saves.load(Ordering::Relaxed),
-                    lane.save_failed,
+                    saves,
+                    self.lanes.len() as u64,
+                    degraded,
                 );
                 Ok(QueryReply {
                     text,
@@ -328,26 +707,32 @@ impl Service {
                 })
             }
             RequestKind::MemoGc(spec) => {
-                let mut lane = lock_unpoisoned(&self.lane);
-                let report = match spec.max_bytes {
-                    Some(max) => lane.memo.gc_bytes(max, spec.app_floor),
-                    None => lane
-                        .memo
-                        .gc(spec.keep_contexts, spec.keep_points, spec.keep_kernels),
+                let (report, n_contexts, n_points, n_kernels) = {
+                    let mut memo = write_unpoisoned(&self.memo);
+                    let report = match spec.max_bytes {
+                        Some(max) => memo.gc_bytes(max, spec.app_floor),
+                        None => memo.gc(spec.keep_contexts, spec.keep_points, spec.keep_kernels),
+                    };
+                    (
+                        report,
+                        memo.n_contexts(),
+                        memo.n_points(),
+                        memo.n_kernel_entries(),
+                    )
                 };
-                // Persist immediately: the WAL may reference evicted
+                // Persist immediately: the WALs may reference evicted
                 // contexts, so the post-gc truth must reach disk before
                 // any replay could resurrect them.
-                self.save_lane(&mut lane);
+                self.save_all();
                 let text = format!(
                     "gc: evicted {} contexts ({} points) and {} kernel entries \
                      ({} contexts, {} points, {} kernel entries retained, all bit-exact)\n",
                     report.evicted_contexts,
                     report.evicted_points,
                     report.evicted_kernels,
-                    lane.memo.n_contexts(),
-                    lane.memo.n_points(),
-                    lane.memo.n_kernel_entries(),
+                    n_contexts,
+                    n_points,
+                    n_kernels,
                 );
                 Ok(QueryReply {
                     text,
@@ -376,24 +761,6 @@ impl Service {
         }
     }
 
-    /// Post-query bookkeeping under the lane lock: counters and the
-    /// periodic save cadence.
-    fn after_query(&self, lane: &mut MemoLane, reply: &QueryReply) {
-        self.counters
-            .evaluated
-            .fetch_add(reply.evaluated, Ordering::Relaxed);
-        self.counters
-            .l1_hits
-            .fetch_add(reply.l1_hits, Ordering::Relaxed);
-        self.counters
-            .l2_hits
-            .fetch_add(reply.l2_hits, Ordering::Relaxed);
-        lane.fresh_since_save += reply.evaluated;
-        if self.cfg.memo_path.is_some() && lane.fresh_since_save >= self.cfg.save_every.max(1) {
-            self.save_lane(lane);
-        }
-    }
-
     /// Run one coalescable query. The leader (first arrival for the key)
     /// evaluates under panic isolation and fans the result out; followers
     /// wait and clone it, so all coalesced responses are bitwise
@@ -416,10 +783,7 @@ impl Service {
                     return slot.clone().expect("slot published before notify");
                 }
                 None => {
-                    let cell = Arc::new(InFlight {
-                        slot: Mutex::new(None),
-                        done: Condvar::new(),
-                    });
+                    let cell = Arc::new(InFlight::new());
                     inflight.insert(key.clone(), Arc::clone(&cell));
                     cell
                 }
@@ -435,6 +799,68 @@ impl Service {
         *lock_unpoisoned(&cell.slot) = Some(result.clone());
         cell.done.notify_all();
         result
+    }
+
+    /// The window-batched point path (`--batch-window-ms > 0`): the first
+    /// arrival of a lane becomes the window leader, sleeps out the
+    /// accumulation window while later arrivals enqueue, then runs the
+    /// whole window as one batch round and fans the per-request replies
+    /// back out — each byte-identical to handling the same arrivals
+    /// sequentially. Windowed queries skip the coalescing table: within a
+    /// batch, a duplicate item is a level-2 hit of its predecessor, which
+    /// is the sequential answer.
+    fn windowed_point(&self, q: &PointQuery, energy: bool) -> Result<QueryReply, ServiceError> {
+        let lane_idx = self.lane_of(&q.app);
+        let cell = Arc::new(InFlight::new());
+        let leader = {
+            let mut w = lock_unpoisoned(&self.windows[lane_idx]);
+            w.pending.push(PendingPoint {
+                query: q.clone(),
+                energy,
+                cell: Arc::clone(&cell),
+            });
+            !std::mem::replace(&mut w.collecting, true)
+        };
+        if leader {
+            std::thread::sleep(std::time::Duration::from_millis(self.cfg.batch_window_ms));
+            let pending = {
+                let mut w = lock_unpoisoned(&self.windows[lane_idx]);
+                w.collecting = false;
+                std::mem::take(&mut w.pending)
+            };
+            let items: Vec<(PointQuery, bool)> = pending
+                .iter()
+                .map(|p| (p.query.clone(), p.energy))
+                .collect();
+            self.counters
+                .batched
+                .fetch_add(items.len() as u64, Ordering::Relaxed);
+            let replies =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.run_point_items(&items)
+                }))
+                .unwrap_or_else(|_| {
+                    items
+                        .iter()
+                        .map(|_| {
+                            Err(ServiceError::usage(
+                                "evaluation panicked (see stderr); request dropped",
+                            ))
+                        })
+                        .collect()
+                });
+            for (p, reply) in pending.iter().zip(replies) {
+                *lock_unpoisoned(&p.cell.slot) = Some(reply);
+                p.cell.done.notify_all();
+            }
+        }
+        let mut slot = lock_unpoisoned(&cell.slot);
+        loop {
+            match slot.take() {
+                Some(res) => return res,
+                None => slot = cell.done.wait(slot).unwrap_or_else(|p| p.into_inner()),
+            }
+        }
     }
 
     /// Process one NDJSON line. Returns the response line (None for
@@ -465,9 +891,16 @@ impl Service {
             };
             return (Some(ok_line(&env.id, env.req_name(), &reply)), true);
         }
-        let result = match env.coalesce_key() {
-            Some(key) => self.coalesced_query(key, &env),
-            None => self.run_query(&env),
+        let result = match &env.kind {
+            RequestKind::Estimate(q) | RequestKind::Energy(q)
+                if self.cfg.batch_window_ms > 0 =>
+            {
+                self.windowed_point(q, matches!(env.kind, RequestKind::Energy(_)))
+            }
+            _ => match env.coalesce_key() {
+                Some(key) => self.coalesced_query(key, &env),
+                None => self.run_query(&env),
+            },
         };
         match result {
             Ok(reply) => (Some(ok_line(&env.id, env.req_name(), &reply)), false),
@@ -486,9 +919,8 @@ impl Service {
             return code;
         }
         self.shutdown.store(true, Ordering::SeqCst);
-        let mut lane = lock_unpoisoned(&self.lane);
-        self.save_lane(&mut lane);
-        let code = i32::from(lane.save_failed);
+        self.save_all();
+        let code = i32::from(self.save_failed.load(Ordering::Relaxed));
         *code_slot = Some(code);
         code
     }
@@ -565,11 +997,19 @@ pub fn serve(board: BoardConfig, cfg: ServeConfig) -> anyhow::Result<i32> {
 /// construction failures (memo load) from runtime ones (bind).
 pub fn run(svc: Service) -> anyhow::Result<i32> {
     let listen = svc.cfg.listen.clone();
+    if svc.lanes() > 1 || svc.cfg.batch_window_ms > 0 {
+        eprintln!(
+            "serve: {} lanes, batch window {} ms",
+            svc.lanes(),
+            svc.cfg.batch_window_ms
+        );
+    }
     let svc = Arc::new(svc);
     if let Some(addr) = listen {
         let listener = std::net::TcpListener::bind(&addr)
             .map_err(|e| anyhow::anyhow!("serve: cannot listen on {addr}: {e}"))?;
-        // Tests parse this line to discover an OS-assigned port.
+        // Tests and CI parse this line to discover an OS-assigned port
+        // (always bind port 0 in scripts — fixed ports collide).
         eprintln!("serve: listening on {}", listener.local_addr()?);
         let svc = Arc::clone(&svc);
         std::thread::spawn(move || serve_tcp(svc, listener));
@@ -591,6 +1031,18 @@ mod tests {
 
     fn service() -> Service {
         Service::new(BoardConfig::zynq706(), ServeConfig::default()).unwrap()
+    }
+
+    fn service_with(lanes: usize, batch_window_ms: u64) -> Service {
+        Service::new(
+            BoardConfig::zynq706(),
+            ServeConfig {
+                lanes,
+                batch_window_ms,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap()
     }
 
     fn get_u64(v: &crate::util::json::Value, key: &str) -> u64 {
@@ -645,6 +1097,7 @@ mod tests {
         assert_eq!(get_u64(&stats, "contexts"), 1);
         assert_eq!(get_u64(&stats, "total_evaluated"), 1);
         assert_eq!(get_u64(&stats, "requests"), 3);
+        assert_eq!(get_u64(&stats, "lanes"), 1);
         let (gc, _) = svc.handle_line(r#"{"req":"memo","action":"gc","max_bytes":0,"app_floor":1}"#);
         let gc = parse(&gc.unwrap()).unwrap();
         assert_eq!(
@@ -664,5 +1117,65 @@ mod tests {
         assert_eq!(v.get("exit_code").and_then(|x| x.as_i64()), Some(0));
         assert!(svc.is_shutdown());
         assert_eq!(svc.finalize(), 0, "finalize is idempotent");
+    }
+
+    #[test]
+    fn batch_envelope_items_equal_the_standalone_response_lines() {
+        // Reference: two standalone requests on a fresh service.
+        let seq = service();
+        let est = r#"{"id":"a","req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#;
+        let en = r#"{"id":"b","req":"energy","app":"matmul","n":256,"accel":["mxm64:U32"]}"#;
+        let (est_line, _) = seq.handle_line(est);
+        let (en_line, _) = seq.handle_line(en);
+        // Batch: the same two queries in one envelope on a fresh service.
+        let svc = service_with(4, 0);
+        let (resp, _) = svc.handle_line(
+            r#"{"id":8,"req":"batch","items":[
+                {"id":"a","req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]},
+                {"id":"b","req":"energy","app":"matmul","n":256,"accel":["mxm64:U32"]},
+                {"id":"c","req":"estimate"}]}"#,
+        );
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(get_u64(&v, "evaluated"), 1, "energy reuses the estimate's point");
+        assert_eq!(get_u64(&v, "items_failed"), 1);
+        let Some(Value::Arr(items)) = v.get("items") else {
+            panic!("batch response carries items");
+        };
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0].to_json(), parse(&est_line.unwrap()).unwrap().to_json());
+        assert_eq!(items[1].to_json(), parse(&en_line.unwrap()).unwrap().to_json());
+        assert_eq!(items[2].get("ok").and_then(|x| x.as_bool()), Some(false));
+        assert_eq!(svc.batched(), 2, "only valid items enter the batch round");
+        assert_eq!(svc.errors(), 1, "the failed item counts as an error");
+    }
+
+    #[test]
+    fn multi_lane_service_shards_apps_and_answers_like_single_lane() {
+        let multi = service_with(4, 0);
+        let single = service();
+        assert_eq!(multi.lanes(), 4);
+        let reqs = [
+            r#"{"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#,
+            r#"{"req":"estimate","app":"lu","n":256,"accel":["trsm_row:U16"]}"#,
+            r#"{"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#,
+        ];
+        for req in reqs {
+            let (a, _) = multi.handle_line(req);
+            let (b, _) = single.handle_line(req);
+            assert_eq!(a, b, "lane count must never change a response byte");
+        }
+        assert_eq!(multi.evaluated(), single.evaluated());
+    }
+
+    #[test]
+    fn windowed_point_queries_batch_and_answer_identically() {
+        let windowed = service_with(2, 5);
+        let plain = service();
+        let req = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#;
+        let (a, _) = windowed.handle_line(req);
+        let (b, _) = plain.handle_line(req);
+        assert_eq!(a, b, "the window changes latency, never bytes");
+        assert_eq!(windowed.batched(), 1);
     }
 }

@@ -8,14 +8,20 @@
 //! modules, strictly layered:
 //!
 //! * [`proto`] — the NDJSON wire protocol: request parsing into a typed
-//!   [`RequestKind`], response serialization, the canonical coalescing
-//!   key, and the error taxonomy (mirroring the CLI exit codes).
+//!   [`RequestKind`] (including the `batch` envelope), response
+//!   serialization, the canonical coalescing key, and the error taxonomy
+//!   (mirroring the CLI exit codes).
 //! * [`query`] — the memo-backed query core shared verbatim by the
 //!   one-shot CLI and the daemon, which is what makes daemon responses
-//!   byte-identical to CLI stdout by construction.
-//! * [`daemon`] — the [`Service`] runtime: shared memo behind one lock,
-//!   in-flight coalescing, periodic WAL-journaled persistence, stdio and
-//!   TCP transports.
+//!   byte-identical to CLI stdout by construction. Its batch half
+//!   ([`pre_evaluate`] + [`point_query_prepared`]) evaluates many cold
+//!   points in one worker-pool round without changing a response byte.
+//! * [`daemon`] — the [`Service`] runtime: shared memo behind a
+//!   read/write lock, app-sharded memo lanes with per-shard WAL
+//!   journals (`--lanes`), cross-request batch evaluation (explicit
+//!   envelopes and the `--batch-window-ms` accumulation window),
+//!   in-flight coalescing, periodic persistence, stdio and TCP
+//!   transports.
 //!
 //! [`EvalMemo`]: crate::dse::EvalMemo
 
@@ -25,6 +31,10 @@ pub mod query;
 
 pub use daemon::{serve, ServeConfig, Service};
 pub use proto::{
-    parse_request, DseQuery, Envelope, GcSpec, PointQuery, QueryReply, RequestKind, ServiceError,
+    parse_request, BatchItem, DseQuery, Envelope, GcSpec, PointQuery, QueryReply, RequestKind,
+    ServiceError, MAX_BATCH_ITEMS,
 };
-pub use query::{dse_query, point_query, space_for_codesign, PointOutcome};
+pub use query::{
+    dse_query, point_query, point_query_prepared, pre_evaluate, space_for_codesign,
+    space_for_codesigns, PointOutcome, PreEvaluated,
+};

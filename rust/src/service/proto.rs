@@ -16,7 +16,18 @@
 //! {"id": 5, "req": "memo", "action": "gc", "max_bytes": 65536, "app_floor": 1}
 //! {"id": 6, "req": "ping"}
 //! {"id": 7, "req": "shutdown"}
+//! {"id": 8, "req": "batch", "items": [
+//!    {"id": "a", "req": "estimate", "app": "matmul", "accel": ["mxm64:U32"]},
+//!    {"id": "b", "req": "energy",   "app": "lu",     "accel": ["trsm_row:U16"]}]}
 //! ```
+//!
+//! A `batch` envelope carries any number of `estimate`/`energy` items
+//! (up to [`MAX_BATCH_ITEMS`]); its response embeds one object per item
+//! under `"items"`, each byte-identical to the response line the same
+//! request would have received standalone — cold items are evaluated
+//! together in one worker-pool round, which changes throughput, never
+//! bytes. Item parse failures are isolated: one malformed item yields
+//! one error object in place, the rest of the batch still runs.
 //!
 //! Successful responses carry `"ok": true`, the echoed `"id"`/`"req"`, a
 //! `"text"` field whose bytes equal the one-shot CLI stdout for the same
@@ -127,6 +138,24 @@ pub struct GcSpec {
     pub keep_kernels: usize,
 }
 
+/// Largest accepted `batch` envelope — one NDJSON request line must stay
+/// bounded, and a single worker-pool round has no use for more points.
+pub const MAX_BATCH_ITEMS: usize = 1024;
+
+/// One item of a `batch` envelope: an `estimate`/`energy` point query
+/// with its own correlation id. Parsing is per-item lenient — a
+/// malformed item carries its error here and answers with one error
+/// object in the batch response instead of failing the whole envelope.
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    /// Item correlation id (echoed in the item's response object).
+    pub id: Value,
+    /// `true` renders the energy view (item `"req":"energy"`).
+    pub energy: bool,
+    /// The parsed point query, or the item's own parse error.
+    pub query: Result<PointQuery, ServiceError>,
+}
+
 /// One parsed request.
 #[derive(Clone, Debug)]
 pub enum RequestKind {
@@ -134,6 +163,8 @@ pub enum RequestKind {
     Estimate(PointQuery),
     /// Memo-backed single-point energy report.
     Energy(PointQuery),
+    /// Several point queries answered as one batch-evaluated response.
+    Batch(Vec<BatchItem>),
     /// Warm design-space exploration.
     Dse(DseQuery),
     /// Memo layout + service counters.
@@ -195,6 +226,7 @@ impl Envelope {
         match &self.kind {
             RequestKind::Estimate(_) => "estimate",
             RequestKind::Energy(_) => "energy",
+            RequestKind::Batch(_) => "batch",
             RequestKind::Dse(_) => "dse",
             RequestKind::MemoStats | RequestKind::MemoGc(_) => "memo",
             RequestKind::Ping => "ping",
@@ -266,6 +298,36 @@ fn point_query(v: &Value) -> Result<PointQuery, ServiceError> {
     })
 }
 
+fn parse_batch_item(item: &Value) -> BatchItem {
+    let id = item.get("id").cloned().unwrap_or(Value::Null);
+    let err = |id: Value, e: ServiceError| BatchItem {
+        id,
+        energy: false,
+        query: Err(e),
+    };
+    if item.as_obj().is_none() {
+        return err(id, ServiceError::usage("batch items must be JSON objects"));
+    }
+    let energy = match str_field(item, "req") {
+        Ok(None) | Ok(Some("estimate")) => false,
+        Ok(Some("energy")) => true,
+        Ok(Some(other)) => {
+            return err(
+                id,
+                ServiceError::usage(format!(
+                    "batch items accept req estimate|energy, got '{other}'"
+                )),
+            )
+        }
+        Err(e) => return err(id, e),
+    };
+    BatchItem {
+        id,
+        energy,
+        query: point_query(item),
+    }
+}
+
 /// Parse one NDJSON request line. On failure, returns the best-effort
 /// correlation id alongside the error so the caller can still address its
 /// error response.
@@ -287,6 +349,19 @@ pub fn parse_request(line: &str) -> Result<Envelope, (Value, ServiceError)> {
     let kind = match req.as_str() {
         "estimate" => RequestKind::Estimate(point_query(&v).map_err(fail)?),
         "energy" => RequestKind::Energy(point_query(&v).map_err(fail)?),
+        "batch" => {
+            let items = match v.get("items") {
+                Some(Value::Arr(items)) => items,
+                Some(_) => return Err(fail(ServiceError::usage("'items' expects an array"))),
+                None => return Err(fail(ServiceError::usage("'batch' requires 'items'"))),
+            };
+            if items.len() > MAX_BATCH_ITEMS {
+                return Err(fail(ServiceError::usage(format!(
+                    "batch exceeds {MAX_BATCH_ITEMS} items"
+                ))));
+            }
+            RequestKind::Batch(items.iter().map(parse_batch_item).collect())
+        }
         "dse" => {
             let objective = match str_field(&v, "objective").map_err(fail)? {
                 None => Objective::Time,
@@ -348,7 +423,7 @@ pub fn parse_request(line: &str) -> Result<Envelope, (Value, ServiceError)> {
         "shutdown" => RequestKind::Shutdown,
         other => {
             return Err(fail(ServiceError::unknown(format!(
-                "unknown request '{other}' (estimate|energy|dse|memo|ping|shutdown)"
+                "unknown request '{other}' (estimate|energy|batch|dse|memo|ping|shutdown)"
             ))))
         }
     };
@@ -371,8 +446,11 @@ pub struct QueryReply {
     pub extra: Vec<(String, Value)>,
 }
 
-/// Serialize a success response line (no trailing newline).
-pub fn ok_line(id: &Value, req: &str, reply: &QueryReply) -> String {
+/// Build a success response object. Shared by top-level response lines
+/// and the per-item objects of a `batch` response — one builder is what
+/// makes a batch item byte-identical to the standalone response line for
+/// the same query.
+pub fn ok_obj(id: &Value, req: &str, reply: &QueryReply) -> Value {
     let mut fields: Vec<(&str, Value)> = vec![
         ("id", id.clone()),
         ("ok", true.into()),
@@ -385,18 +463,27 @@ pub fn ok_line(id: &Value, req: &str, reply: &QueryReply) -> String {
     for (k, v) in &reply.extra {
         fields.push((k.as_str(), v.clone()));
     }
-    obj(fields).to_json()
+    obj(fields)
 }
 
-/// Serialize an error response line (no trailing newline).
-pub fn err_line(id: &Value, err: &ServiceError) -> String {
+/// Serialize a success response line (no trailing newline).
+pub fn ok_line(id: &Value, req: &str, reply: &QueryReply) -> String {
+    ok_obj(id, req, reply).to_json()
+}
+
+/// Build an error response object (top-level lines and batch items alike).
+pub fn err_obj(id: &Value, err: &ServiceError) -> Value {
     obj(vec![
         ("id", id.clone()),
         ("ok", false.into()),
         ("code", err.code.into()),
         ("error", err.message.as_str().into()),
     ])
-    .to_json()
+}
+
+/// Serialize an error response line (no trailing newline).
+pub fn err_line(id: &Value, err: &ServiceError) -> String {
+    err_obj(id, err).to_json()
 }
 
 #[cfg(test)]
@@ -462,6 +549,55 @@ mod tests {
         let (id, err) = parse_request(r#"{"id":9,"req":"frobnicate"}"#).unwrap_err();
         assert_eq!(err.code, 2);
         assert_eq!(id.as_i64(), Some(9), "id still echoed on errors");
+    }
+
+    #[test]
+    fn batch_envelopes_parse_per_item_and_isolate_item_failures() {
+        let e = parse_request(
+            r#"{"id":8,"req":"batch","items":[
+                {"id":"a","req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]},
+                {"id":"b","req":"energy","app":"lu","accel":["trsm_row:U16"]},
+                {"id":"c","req":"dse","app":"matmul"},
+                {"id":"d"}]}"#,
+        )
+        .unwrap();
+        let RequestKind::Batch(items) = &e.kind else {
+            panic!("{:?}", e.kind);
+        };
+        assert_eq!(items.len(), 4);
+        assert!(!items[0].energy);
+        assert!(items[0].query.is_ok());
+        assert!(items[1].energy);
+        assert!(items[1].query.is_ok());
+        assert!(
+            items[2].query.is_err(),
+            "dse is not batchable; the item fails alone"
+        );
+        assert_eq!(items[2].id.as_str(), Some("c"), "failed items keep their id");
+        assert!(
+            items[3].query.is_err(),
+            "item without 'app' fails alone (req defaults to estimate)"
+        );
+        assert!(e.coalesce_key().is_none(), "batches never coalesce");
+        assert_eq!(e.req_name(), "batch");
+        // Envelope-level failures: missing/NaN items, oversized batches.
+        assert_eq!(
+            parse_request(r#"{"req":"batch"}"#).unwrap_err().1.code,
+            1,
+            "batch requires items"
+        );
+        assert_eq!(
+            parse_request(r#"{"req":"batch","items":7}"#)
+                .unwrap_err()
+                .1
+                .code,
+            1
+        );
+        let oversized = format!(
+            r#"{{"req":"batch","items":[{}]}}"#,
+            vec!["{}"; MAX_BATCH_ITEMS + 1].join(",")
+        );
+        assert_eq!(parse_request(&oversized).unwrap_err().1.code, 1);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use crate::config::{BoardConfig, CoDesign};
 use crate::coordinator::task::TaskProgram;
 use crate::dse::warm::{codesign_key, context_fingerprint, MemoValues};
-use crate::dse::{DseSpace, EvalMemo, KernelSpace, SweepContext, SweepJournal};
+use crate::dse::{DsePoint, DseSpace, EvalMemo, KernelSpace, SweepContext, SweepJournal};
 use crate::hls::FpgaPart;
 use crate::util::json::Value;
 
@@ -48,6 +48,92 @@ pub fn space_for_codesign(cd: &CoDesign) -> DseSpace {
     DseSpace {
         kernels,
         mixed: false,
+    }
+}
+
+/// The union [`DseSpace`] covering several co-designs at once: per
+/// distinct kernel across all of them, the merged sorted unroll set, the
+/// largest instance count any one co-design requests, and SMP enablement
+/// when any co-design asks for it. The daemon's batch path primes one
+/// evaluation context for a whole group of cold points from this space —
+/// the space only governs which HLS reports get primed, so a superset
+/// space cannot change any individual evaluation.
+pub fn space_for_codesigns(cds: &[CoDesign]) -> DseSpace {
+    let mut kernels: Vec<KernelSpace> = Vec::new();
+    for cd in cds {
+        for ks in space_for_codesign(cd).kernels {
+            match kernels.iter_mut().find(|k| k.kernel == ks.kernel) {
+                Some(k) => {
+                    k.unrolls.extend(ks.unrolls);
+                    k.max_instances = k.max_instances.max(ks.max_instances);
+                    k.try_smp = k.try_smp || ks.try_smp;
+                }
+                None => kernels.push(ks),
+            }
+        }
+    }
+    for k in &mut kernels {
+        k.unrolls.sort_unstable();
+        k.unrolls.dedup();
+    }
+    DseSpace {
+        kernels,
+        mixed: false,
+    }
+}
+
+/// Points evaluated ahead of the memo bookkeeping. The daemon's batch
+/// path runs one chunk-synchronous worker-pool round over every cold
+/// point of a batch (under a shared memo read lock, so distinct lanes
+/// evaluate concurrently), then feeds each result to
+/// [`point_query_prepared`] in request order. An evaluation is a pure
+/// function of (context, co-design) — bit-identical whether it runs here
+/// or inline — so consuming a pre-evaluated point cannot change a single
+/// response byte; it only changes where and when the simulation ran.
+#[derive(Default)]
+pub struct PreEvaluated {
+    /// Evaluated points keyed by canonical co-design key.
+    pub points: std::collections::BTreeMap<String, DsePoint>,
+}
+
+/// Evaluate every *cold* co-design of `cds` — deduplicated by canonical
+/// key, first arrival wins — in one chunk-synchronous worker-pool round.
+/// `fingerprint` must be the context fingerprint of `(program, board,
+/// part)` (the daemon caches it per context). Co-designs that do not
+/// resolve (unknown kernel, kernel with no device) are skipped here; the
+/// inline path of [`point_query_prepared`] reports their error.
+pub fn pre_evaluate(
+    program: &TaskProgram,
+    board: &BoardConfig,
+    part: &FpgaPart,
+    fingerprint: u64,
+    cds: &[CoDesign],
+    memo: &EvalMemo,
+    workers: usize,
+) -> PreEvaluated {
+    let mut cold: Vec<CoDesign> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for cd in cds {
+        let key = codesign_key(cd);
+        if memo.lookup(fingerprint, &key).is_none() && seen.insert(key) {
+            cold.push(cd.clone());
+        }
+    }
+    if cold.is_empty() {
+        return PreEvaluated::default();
+    }
+    let space = space_for_codesigns(&cold);
+    let ctx = SweepContext::for_space_warm(program, board, part, &space, memo);
+    let evaluable: Vec<CoDesign> = cold
+        .into_iter()
+        .filter(|cd| ctx.resolve(cd).is_ok())
+        .collect();
+    let points = ctx.evaluate_all(&evaluable, workers);
+    PreEvaluated {
+        points: points
+            .into_iter()
+            .map(|p| (codesign_key(&p.codesign), p))
+            .collect(),
     }
 }
 
@@ -129,7 +215,32 @@ pub fn point_query(
 ) -> anyhow::Result<PointOutcome> {
     let space = space_for_codesign(cd);
     let ctx = SweepContext::for_space_warm(program, board, part, &space, memo);
-    let fingerprint = context_fingerprint(&ctx);
+    point_query_prepared(&ctx, &space, app, n, bs, cd, energy_view, memo, journal, None)
+}
+
+/// [`point_query`] against a caller-built context. The daemon builds the
+/// context under a shared memo *read* lock (so per-request program
+/// analysis does not serialize across lanes) and performs the memo
+/// bookkeeping here under a brief write lock. `ctx` must be primed for
+/// `space ==` [`space_for_codesign`]`(cd)` against the memo state after
+/// any earlier request of the same lane — exactly what the sequential
+/// path sees. When `pre` carries the point's key, the recorded point is
+/// taken from the batch's worker-pool round instead of simulating
+/// inline — bit-identical by construction, see [`PreEvaluated`].
+#[allow(clippy::too_many_arguments)]
+pub fn point_query_prepared(
+    ctx: &SweepContext<'_>,
+    space: &DseSpace,
+    app: &str,
+    n: u64,
+    bs: u64,
+    cd: &CoDesign,
+    energy_view: bool,
+    memo: &mut EvalMemo,
+    journal: Option<&mut SweepJournal>,
+    pre: Option<&PreEvaluated>,
+) -> anyhow::Result<PointOutcome> {
+    let fingerprint = context_fingerprint(ctx);
     let key = codesign_key(cd);
     let clock = memo.touch(fingerprint);
     let (values, hit) = match memo.lookup(fingerprint, &key) {
@@ -138,15 +249,18 @@ pub fn point_query(
             // Surface unsatisfiable co-designs (unknown kernel, kernel
             // with no device) as errors before paying for a worker.
             ctx.resolve(cd)?;
-            let point = ctx
-                .worker()
-                .evaluate(cd)
-                .ok_or_else(|| anyhow::anyhow!("co-design '{key}' cannot be evaluated"))?;
-            memo.record(&ctx, fingerprint, &key, &point);
-            memo.record_kernels(&ctx, &space);
-            memo.record_occupancy(&ctx, std::slice::from_ref(&point));
+            let point = match pre.and_then(|pe| pe.points.get(&key)) {
+                Some(p) => p.clone(),
+                None => ctx
+                    .worker()
+                    .evaluate(cd)
+                    .ok_or_else(|| anyhow::anyhow!("co-design '{key}' cannot be evaluated"))?,
+            };
+            memo.record(ctx, fingerprint, &key, &point);
+            memo.record_kernels(ctx, space);
+            memo.record_occupancy(ctx, std::slice::from_ref(&point));
             if let Some(j) = journal {
-                j.log_context(fingerprint, &ctx, clock);
+                j.log_context(fingerprint, ctx, clock);
                 j.log_point(fingerprint, &key, &point);
                 j.commit_round()?;
             }
@@ -330,6 +444,82 @@ mod tests {
         assert!(en.hit, "energy shares the estimate's memo entry");
         assert_eq!(est.values.energy_j.to_bits(), en.values.energy_j.to_bits());
         assert!(en.reply.text.starts_with("== energy: matmul n=256 bs=64"));
+    }
+
+    #[test]
+    fn pre_evaluated_points_answer_bit_identically_to_inline_evaluation() {
+        let (program, board, part) = fixture();
+        let cd = codesign();
+        // Inline reference path.
+        let mut memo_a = EvalMemo::new();
+        let inline = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo_a, None,
+        )
+        .unwrap();
+        // Batch path: one pool round up front, then the same bookkeeping.
+        let mut memo_b = EvalMemo::new();
+        let space = space_for_codesign(&cd);
+        let ctx = SweepContext::for_space_warm(&program, &board, &part, &space, &memo_b);
+        let fingerprint = context_fingerprint(&ctx);
+        let pre = pre_evaluate(
+            &program,
+            &board,
+            &part,
+            fingerprint,
+            std::slice::from_ref(&cd),
+            &memo_b,
+            2,
+        );
+        assert_eq!(pre.points.len(), 1, "one cold point, one pre-evaluation");
+        let batched = point_query_prepared(
+            &ctx,
+            &space,
+            "matmul",
+            256,
+            64,
+            &cd,
+            false,
+            &mut memo_b,
+            None,
+            Some(&pre),
+        )
+        .unwrap();
+        assert_eq!(inline.reply.text, batched.reply.text);
+        assert_eq!(
+            inline.values.est_ms.to_bits(),
+            batched.values.est_ms.to_bits()
+        );
+        assert_eq!(
+            batched.reply.evaluated, 1,
+            "a consumed pre-evaluation still counts as freshly evaluated"
+        );
+        // The memo is equally warm afterwards: a repeat is a pure hit.
+        let again = point_query(
+            &program, &board, &part, "matmul", 256, 64, &cd, false, &mut memo_b, None,
+        )
+        .unwrap();
+        assert!(again.hit);
+        assert_eq!(again.reply.text, inline.reply.text);
+    }
+
+    #[test]
+    fn union_space_merges_kernels_without_changing_per_codesign_coverage() {
+        let a = codesign();
+        let mut b = CoDesign::new("cli");
+        b.accels.push(AccelSpec::parse("mxm64:U16").unwrap());
+        b.accels.push(AccelSpec::parse("mxm64:U16").unwrap());
+        let union = space_for_codesigns(&[a.clone(), b]);
+        assert_eq!(union.kernels.len(), 1);
+        let k = &union.kernels[0];
+        assert_eq!(k.kernel, "mxm64");
+        assert_eq!(k.unrolls, vec![16, 32], "merged, sorted, deduplicated");
+        assert_eq!(k.max_instances, 2, "largest single-co-design demand");
+        // The union primes a superset of what each single space primes.
+        let single = space_for_codesign(&a);
+        assert!(single.kernels[0]
+            .unrolls
+            .iter()
+            .all(|u| k.unrolls.contains(u)));
     }
 
     #[test]

@@ -109,6 +109,44 @@ fn u(v: &Value, key: &str) -> u64 {
 const EST_A: &str = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"]}"#;
 const EST_B: &str = r#"{"id":2,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U16"]}"#;
 const ENERGY_A: &str = r#"{"id":3,"req":"energy","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"]}"#;
+const LU_A: &str = r#"{"id":21,"req":"estimate","app":"lu","n":256,"bs":64,"accel":["trsm_row:U16"]}"#;
+const LU_B: &str = r#"{"id":22,"req":"estimate","app":"lu","n":256,"bs":64,"accel":["lugemm:U8"]}"#;
+const CH_A: &str = r#"{"id":31,"req":"estimate","app":"cholesky","n":128,"bs":64,"accel":["dgemm:U16"]}"#;
+const CH_B: &str = r#"{"id":32,"req":"estimate","app":"cholesky","n":128,"bs":64,"accel":["dsyrk:U8"]}"#;
+
+/// Spawn `serve --listen 127.0.0.1:0 <args>` and parse the bound address
+/// off stderr. Always port 0: a fixed port collides the moment two CI
+/// jobs (or two test binaries) run in parallel. The stderr reader is
+/// returned alive so the child never sees a closed pipe.
+fn spawn_tcp(
+    args: &[&str],
+) -> (
+    Child,
+    ChildStdin,
+    String,
+    BufReader<std::process::ChildStderr>,
+) {
+    let mut cmd = Command::new(EXE);
+    cmd.arg("serve").args(args).args(["--listen", "127.0.0.1:0"]);
+    cmd.stdin(Stdio::piped())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped());
+    cmd.env_remove("ZYNQ_FAULTS");
+    let mut child = cmd.spawn().expect("spawn TCP daemon");
+    let stdin = child.stdin.take().unwrap();
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        assert!(
+            stderr.read_line(&mut line).unwrap() > 0,
+            "daemon exited before announcing its listener"
+        );
+        if let Some(rest) = line.trim().strip_prefix("serve: listening on ") {
+            break rest.to_string();
+        }
+    };
+    (child, stdin, addr, stderr)
+}
 
 #[test]
 fn daemon_point_responses_are_byte_identical_to_the_one_shot_cli() {
@@ -325,6 +363,203 @@ fn kill_mid_query_loses_at_most_the_in_flight_round() {
     assert_eq!(u(&fresh, "evaluated"), 1, "the lost point re-evaluates");
     let stats = daemon.request(r#"{"req":"memo","action":"stats"}"#).unwrap();
     assert_eq!(u(&stats, "points"), 2, "both points recorded after recovery");
+    shutdown_clean(daemon);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn sharded_daemon_answers_concurrent_tcp_clients_with_sequential_bytes() {
+    // Three clients, each owning one app (apps are kernel-disjoint, so
+    // each client's context state lives in one lane): any interleaving
+    // against `--lanes 4` must reproduce, byte for byte, the responses a
+    // single-lane daemon gives the same per-client sequences run one
+    // after another — and cost exactly the distinct cold points.
+    let sequences: [&[&str]; 3] = [
+        &[EST_A, EST_B, EST_A],
+        &[LU_A, LU_B, LU_A],
+        &[CH_A, CH_B, CH_A],
+    ];
+    let mut reference = Daemon::spawn(&["--workers", "2"], None);
+    let mut expect: Vec<Vec<String>> = Vec::new();
+    for seq in sequences {
+        expect.push(
+            seq.iter()
+                .map(|r| reference.request(r).unwrap().to_json())
+                .collect(),
+        );
+    }
+    shutdown_clean(reference);
+
+    let (mut child, stdin, addr, _stderr) = spawn_tcp(&["--lanes", "4", "--workers", "2"]);
+    let handles: Vec<_> = sequences
+        .iter()
+        .map(|seq| {
+            let addr = addr.clone();
+            let seq: Vec<String> = seq.iter().map(|s| s.to_string()).collect();
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(&addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut out = Vec::new();
+                for req in &seq {
+                    writeln!(&stream, "{req}").unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    out.push(parse(line.trim()).unwrap().to_json());
+                }
+                out
+            })
+        })
+        .collect();
+    let got: Vec<Vec<String>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(
+        got, expect,
+        "sharded concurrent responses diverged from the single-lane sequential run"
+    );
+
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(&stream, "{}", r#"{"req":"memo","action":"stats"}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let stats = parse(line.trim()).unwrap();
+    assert_eq!(
+        u(&stats, "total_evaluated"),
+        6,
+        "aggregate evaluations must equal the distinct cold points"
+    );
+    assert_eq!(u(&stats, "lanes"), 4);
+    writeln!(&stream, "{}", r#"{"req":"shutdown"}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let ack = parse(line.trim()).unwrap();
+    assert!(is_ok(&ack), "{ack:?}");
+    let status = child.wait().unwrap();
+    assert!(status.success(), "clean TCP shutdown must exit 0: {status:?}");
+    drop(stdin);
+}
+
+#[test]
+fn batch_envelope_answers_equal_the_standalone_lines_black_box() {
+    // The same three queries as standalone lines on one fresh daemon and
+    // as one `batch` envelope on another: each item object must equal
+    // the standalone response line, and the envelope's aggregate must
+    // count one evaluation (estimate A) + one (estimate B) with the
+    // energy view riding A's entry.
+    let mut seq = Daemon::spawn(&[], None);
+    let expect: Vec<String> = [EST_A, EST_B, ENERGY_A]
+        .iter()
+        .map(|r| seq.request(r).unwrap().to_json())
+        .collect();
+    shutdown_clean(seq);
+
+    let mut daemon = Daemon::spawn(&["--lanes", "2"], None);
+    let envelope = format!(r#"{{"id":10,"req":"batch","items":[{EST_A},{EST_B},{ENERGY_A}]}}"#);
+    let resp = daemon.request(&envelope).unwrap();
+    assert!(is_ok(&resp), "{resp:?}");
+    assert_eq!(u(&resp, "evaluated"), 2, "two cold points, one energy hit");
+    assert_eq!(u(&resp, "items_failed"), 0);
+    let Some(Value::Arr(items)) = resp.get("items") else {
+        panic!("batch response must carry items: {resp:?}");
+    };
+    assert_eq!(items.len(), 3);
+    for (i, (item, exp)) in items.iter().zip(&expect).enumerate() {
+        assert_eq!(
+            item.to_json(),
+            *exp,
+            "batch item {i} diverged from its standalone response line"
+        );
+    }
+    shutdown_clean(daemon);
+}
+
+#[test]
+fn kill_mid_batch_loses_at_most_the_in_flight_round_per_shard() {
+    let d = tmpdir("abort_batch");
+    let memo_path = d.join("serve-memo.json");
+    let memo = memo_path.display().to_string();
+    let args = ["--lanes", "4", "--memo", memo.as_str()];
+    let warm_batch = format!(r#"{{"id":1,"req":"batch","items":[{EST_A},{LU_A}]}}"#);
+    let cold_batch = format!(r#"{{"id":2,"req":"batch","items":[{EST_B},{LU_B}]}}"#);
+
+    // Session 1: two cold points (two lanes) in one batch, clean shutdown.
+    let mut daemon = Daemon::spawn(&args, None);
+    let warm = daemon.request(&warm_batch).unwrap();
+    assert!(is_ok(&warm), "{warm:?}");
+    assert_eq!(u(&warm, "evaluated"), 2);
+    shutdown_clean(daemon);
+    let snapshot = std::fs::read(&memo_path).unwrap();
+
+    // Session 2, `eval.point!abort` armed: the all-hit batch answers
+    // without evaluating (the fault stays cold), the cold batch aborts
+    // the process mid-round — kill -9 while a batch round is in flight.
+    let mut daemon = Daemon::spawn(&args, Some("eval.point!abort"));
+    let hits = daemon.request(&warm_batch).expect("all-hit batch must answer");
+    assert_eq!(u(&hits, "evaluated"), 0);
+    let dead = daemon.request(&cold_batch);
+    assert!(dead.is_none(), "the armed abort must kill the daemon mid-batch");
+    let status = daemon.wait();
+    assert!(!status.success());
+    assert_eq!(
+        std::fs::read(&memo_path).unwrap(),
+        snapshot,
+        "the crash must not touch the saved memo"
+    );
+    for wal in SweepJournal::shard_wal_paths(&memo_path) {
+        let wal_text = std::fs::read_to_string(&wal).unwrap();
+        assert!(
+            !wal_text.contains(r#""t":"commit""#),
+            "{}: the aborted round must not have committed to any shard WAL",
+            wal.display()
+        );
+    }
+
+    // Session 3: only the in-flight round was lost, on every shard.
+    let mut daemon = Daemon::spawn(&args, None);
+    let again = daemon.request(&warm_batch).unwrap();
+    assert_eq!(u(&again, "evaluated"), 0, "saved points answer from the memo");
+    let fresh = daemon.request(&cold_batch).unwrap();
+    assert_eq!(u(&fresh, "evaluated"), 2, "the lost points re-evaluate");
+    let stats = daemon.request(r#"{"req":"memo","action":"stats"}"#).unwrap();
+    assert_eq!(u(&stats, "points"), 4, "all four points recorded after recovery");
+    shutdown_clean(daemon);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn degraded_multi_lane_daemon_recovers_from_shard_wals() {
+    let d = tmpdir("degraded_lanes");
+    let memo_path = d.join("m.json");
+    let memo = memo_path.display().to_string();
+
+    // The only save attempt (at shutdown — the default cadence never
+    // fires for two evaluations) fails: the shard WALs are the only
+    // persistence. The daemon acknowledges the degraded shutdown, exits
+    // 1, and a faultless restart replays every shard's committed rounds.
+    let mut daemon = Daemon::spawn(&["--lanes", "4", "--memo", &memo], Some("memo.save!error"));
+    assert_eq!(u(&daemon.request(EST_A).unwrap(), "evaluated"), 1);
+    assert_eq!(u(&daemon.request(LU_A).unwrap(), "evaluated"), 1);
+    let ack = daemon.request(r#"{"req":"shutdown"}"#).unwrap();
+    assert_eq!(ack.get("exit_code").and_then(|v| v.as_i64()), Some(1));
+    assert!(text(&ack).contains("DEGRADED"), "{}", text(&ack));
+    let status = daemon.wait();
+    assert!(!status.success(), "degraded daemon must exit non-zero");
+    assert!(!memo_path.exists(), "no save ever succeeded");
+    assert!(
+        !SweepJournal::shard_wal_paths(&memo_path).is_empty(),
+        "the shard WALs must retain the unsaved rounds"
+    );
+
+    let mut daemon = Daemon::spawn(&["--lanes", "4", "--memo", &memo], None);
+    assert_eq!(
+        u(&daemon.request(EST_A).unwrap(), "evaluated"),
+        0,
+        "point A must recover from its shard WAL"
+    );
+    assert_eq!(
+        u(&daemon.request(LU_A).unwrap(), "evaluated"),
+        0,
+        "point B must recover from its shard WAL"
+    );
     shutdown_clean(daemon);
     std::fs::remove_dir_all(&d).ok();
 }

@@ -1,0 +1,218 @@
+//! Sharded-lane and batch-evaluation determinism (seeded forall harness,
+//! same style as `sweep_determinism.rs`): for any lane count, worker
+//! count and client interleaving, the daemon's responses are
+//! byte-identical to the single-lane daemon handling the same per-client
+//! request sequences one at a time — and a `batch` envelope answers
+//! exactly what the standalone request lines would have.
+//!
+//! Each concurrent client owns a distinct application: apps are
+//! kernel-disjoint, so every context that shares memo state stays inside
+//! one client's (hence one lane's) program order, which is precisely the
+//! interleaving class the lane-sharding contract promises determinism
+//! for.
+
+use std::sync::{Arc, Barrier};
+
+use zynq_estimator::config::BoardConfig;
+use zynq_estimator::service::{ServeConfig, Service};
+use zynq_estimator::util::json::{parse, Value};
+use zynq_estimator::util::Rng;
+
+fn forall(iters: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// The suite apps with their FPGA-capable kernels (bs 64 everywhere).
+const APPS: [(&str, &[&str]); 4] = [
+    ("matmul", &["mxm64"]),
+    ("cholesky", &["dgemm", "dsyrk", "dtrsm"]),
+    ("lu", &["lugemm", "trsm_row", "trsm_col"]),
+    ("stencil", &["jacobi64"]),
+];
+
+fn service(lanes: usize, batch_window_ms: u64, workers: usize) -> Service {
+    Service::new(
+        BoardConfig::zynq706(),
+        ServeConfig {
+            lanes,
+            batch_window_ms,
+            workers,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn random_request(rng: &mut Rng, app: &str, kernels: &[&str], id: u64) -> String {
+    let n = [128u64, 192, 256][rng.gen_range(0, 3) as usize];
+    let kernel = kernels[rng.gen_range(0, kernels.len() as u64) as usize];
+    let unroll = [8u64, 16, 32][rng.gen_range(0, 3) as usize];
+    let req = if rng.next_f64() < 0.3 { "energy" } else { "estimate" };
+    format!(
+        r#"{{"id":{id},"req":"{req}","app":"{app}","n":{n},"accel":["{kernel}:U{unroll}"]}}"#
+    )
+}
+
+/// Per-client request sequences: each of the first `n_clients` apps gets
+/// 2–5 requests with a healthy repeat rate (repeats are what exercise
+/// the memo-hit rendering path).
+fn random_schedule(rng: &mut Rng, n_clients: usize) -> Vec<Vec<String>> {
+    let mut schedule = Vec::new();
+    for (c, (app, kernels)) in APPS.iter().take(n_clients).enumerate() {
+        let mut reqs: Vec<String> = Vec::new();
+        let n_reqs = 2 + rng.gen_range(0, 4);
+        for r in 0..n_reqs {
+            if !reqs.is_empty() && rng.next_f64() < 0.35 {
+                let prev = reqs[rng.gen_range(0, reqs.len() as u64) as usize].clone();
+                reqs.push(prev);
+            } else {
+                reqs.push(random_request(rng, app, kernels, (c * 100) as u64 + r));
+            }
+        }
+        schedule.push(reqs);
+    }
+    schedule
+}
+
+fn run_sequentially(svc: &Service, schedule: &[Vec<String>]) -> Vec<Vec<String>> {
+    schedule
+        .iter()
+        .map(|reqs| {
+            reqs.iter()
+                .map(|r| svc.handle_line(r).0.expect("request must answer"))
+                .collect()
+        })
+        .collect()
+}
+
+fn run_concurrently(svc: &Arc<Service>, schedule: &[Vec<String>]) -> Vec<Vec<String>> {
+    let barrier = Arc::new(Barrier::new(schedule.len()));
+    let handles: Vec<_> = schedule
+        .iter()
+        .cloned()
+        .map(|reqs| {
+            let svc = Arc::clone(svc);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                reqs.iter()
+                    .map(|r| svc.handle_line(r).0.expect("request must answer"))
+                    .collect::<Vec<String>>()
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn prop_sharded_lanes_answer_byte_identically_to_single_lane() {
+    forall(6, 0x1A4E5, |seed, rng| {
+        let lanes = [1usize, 2, 4, 8][rng.gen_range(0, 4) as usize];
+        let workers = 1 + rng.gen_range(0, 4) as usize;
+        let n_clients = 2 + rng.gen_range(0, 3) as usize;
+        let schedule = random_schedule(rng, n_clients);
+        let single = service(1, 0, workers);
+        let expect = run_sequentially(&single, &schedule);
+        let multi = Arc::new(service(lanes, 0, workers));
+        let got = run_concurrently(&multi, &schedule);
+        assert_eq!(
+            got, expect,
+            "seed {seed} lanes={lanes} workers={workers}: sharded responses diverged"
+        );
+        assert_eq!(
+            multi.evaluated(),
+            single.evaluated(),
+            "seed {seed} lanes={lanes}: aggregate evaluations diverged"
+        );
+        assert_eq!(
+            multi.errors(),
+            single.errors(),
+            "seed {seed}: error counts diverged (infeasible points must fail identically)"
+        );
+    });
+}
+
+#[test]
+fn prop_batch_envelope_answers_equal_sequential_lines() {
+    forall(8, 0xBA7C4, |seed, rng| {
+        let lanes = [1usize, 2, 4][rng.gen_range(0, 3) as usize];
+        let workers = 1 + rng.gen_range(0, 4) as usize;
+        let n_items = 1 + rng.gen_range(0, 6) as usize;
+        let mut items: Vec<String> = Vec::new();
+        for i in 0..n_items {
+            if !items.is_empty() && rng.next_f64() < 0.3 {
+                // Duplicate an earlier item verbatim: inside one batch the
+                // second occurrence must render as a level-2 hit, exactly
+                // like the sequential repeat does.
+                items.push(items[rng.gen_range(0, items.len() as u64) as usize].clone());
+            } else {
+                let (app, kernels) = APPS[rng.gen_range(0, 4) as usize];
+                items.push(random_request(rng, app, kernels, i as u64));
+            }
+        }
+        let seq = service(1, 0, workers);
+        let expect: Vec<String> = items
+            .iter()
+            .map(|r| seq.handle_line(r).0.expect("request must answer"))
+            .collect();
+        let svc = service(lanes, 0, workers);
+        let envelope = format!(r#"{{"id":99,"req":"batch","items":[{}]}}"#, items.join(","));
+        let (resp, _) = svc.handle_line(&envelope);
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(|x| x.as_bool()), Some(true), "seed {seed}");
+        let Some(Value::Arr(got)) = v.get("items") else {
+            panic!("seed {seed}: batch response must carry items");
+        };
+        assert_eq!(got.len(), n_items, "seed {seed}");
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            assert_eq!(
+                g.to_json(),
+                parse(e).unwrap().to_json(),
+                "seed {seed} item {i}: batch answer diverged from the standalone line"
+            );
+        }
+        assert_eq!(
+            svc.evaluated(),
+            seq.evaluated(),
+            "seed {seed} lanes={lanes}: the batch must evaluate exactly the distinct cold points"
+        );
+        assert_eq!(
+            svc.errors(),
+            seq.errors(),
+            "seed {seed}: failed batch items must mirror the standalone failures"
+        );
+    });
+}
+
+#[test]
+fn prop_windowed_batching_preserves_bytes_and_total_evaluations() {
+    forall(4, 0x3172D0, |seed, rng| {
+        let lanes = [1usize, 2, 4][rng.gen_range(0, 3) as usize];
+        let workers = 1 + rng.gen_range(0, 3) as usize;
+        let window_ms = 1 + rng.gen_range(0, 5);
+        let n_clients = 2 + rng.gen_range(0, 3) as usize;
+        let schedule = random_schedule(rng, n_clients);
+        let plain = service(1, 0, workers);
+        let expect = run_sequentially(&plain, &schedule);
+        let windowed = Arc::new(service(lanes, window_ms, workers));
+        let got = run_concurrently(&windowed, &schedule);
+        assert_eq!(
+            got, expect,
+            "seed {seed} lanes={lanes} window={window_ms}ms: windowed responses diverged"
+        );
+        assert_eq!(
+            windowed.evaluated(),
+            plain.evaluated(),
+            "seed {seed}: the window must not change the number of evaluations"
+        );
+        assert!(
+            windowed.batched() >= windowed.evaluated(),
+            "seed {seed}: every windowed point query counts as batched"
+        );
+        assert_eq!(windowed.errors(), plain.errors(), "seed {seed}");
+    });
+}
