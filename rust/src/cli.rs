@@ -155,14 +155,21 @@ COMMANDS (one per paper experiment, plus utilities):
                                                                  --app-floor most recent contexts
   serve          [--memo m.json] [--listen host:port]           estimator-as-a-service daemon:
                  [--workers N] [--save-every 8]                  NDJSON requests (estimate|energy|
-                 [--max-bytes B [--app-floor 1]]                 batch|dse|memo|ping|shutdown),
-                 [--lanes 1] [--batch-window-ms 0]               one per line on stdin and on each
-                                                                 TCP connection; answers from one
-                                                                 shared eval memo with in-flight
-                                                                 query coalescing, app-sharded
-                                                                 memo lanes (--lanes), cross-
-                                                                 request batch evaluation, and
-                                                                 periodic WAL-journaled saves
+                 [--max-bytes B [--app-floor 1]]                 batch|dse|memo|ping|health|
+                 [--lanes 1] [--batch-window-ms 0]               shutdown), one per line on stdin
+                 [--default-deadline-ms D]                       and on each TCP connection;
+                 [--max-queue 64] [--max-inflight 256]           answers from one shared eval memo
+                 [--max-conns 64] [--max-line-bytes 1048576]     with coalescing, kernel-group
+                 [--write-timeout-ms 10000]                      memo lanes (--lanes), batch
+                 [--breaker-threshold 3]                         evaluation, periodic WAL-
+                                                                 journaled saves, and overload
+                                                                 control: per-request deadlines
+                                                                 ("deadline_ms" / the default),
+                                                                 queue/in-flight/connection/line
+                                                                 caps answering OVERLOADED, and a
+                                                                 save circuit breaker that turns
+                                                                 the daemon read-only (DEGRADED)
+                                                                 after repeated save failures
                                                                  (protocol reference in README)
   energy         --app <app> --accel k:U<u>... [--smp k]...     power/energy report through the
                  [--memo m.json] [--breakdown]                   eval memo (--breakdown: per-rail
@@ -174,10 +181,11 @@ COMMANDS (one per paper experiment, plus utilities):
   cross-board    [--n 512]                                      ZC706 vs UltraScale+ decision
   bench-check    --baseline b.json --current c.json             gate BENCH_*.json against a
                  [--tolerance 0.2] [--strict-time]              checked-in baseline (CI)
-  fuzz           [memo-json|wal-replay|board-toml|all]          deterministic mutation fuzzing of
-                 [--iters 256] [--seed S] [--corpus dir]        the byte-ingesting parsers; exit 1
-                                                                 on any panic (graceful rejection
-                                                                 is a pass)
+  fuzz           [memo-json|wal-replay|board-toml|              deterministic mutation fuzzing of
+                  proto-ndjson|all]                             the byte-ingesting parsers (incl.
+                 [--iters 256] [--seed S] [--corpus dir]        the serve NDJSON envelopes); exit
+                                                                 1 on any panic (graceful
+                                                                 rejection is a pass)
   fault-recovery [--n 256] [--bs 64] [--workers N]              crash/resume study: interrupt a
                                                                  journaled sweep at every round,
                                                                  resume, verify bit-identity
@@ -188,7 +196,8 @@ COMMON OPTIONS:
   --faults <spec[,spec]>  arm fault-injection sites for crash testing (also via the
                           ZYNQ_FAULTS env var); spec: site[@N][#HEXTAG][!error|!panic|!abort],
                           sites: memo.save memo.load wal.append wal.replay eval.point
-                          board.toml sweep.round
+                          board.toml sweep.round conn.read conn.write queue.admit
+                          save.breaker
 
 EXIT CODES: 0 success; 1 usage or runtime error; 2 unknown command;
             3 corrupt input file (bad board TOML / unreadable memo)
@@ -1045,9 +1054,15 @@ fn cmd_dse_memo(args: &Args) -> anyhow::Result<i32> {
 /// lane by application so distinct apps evaluate concurrently;
 /// `--batch-window-ms W` batches point queries arriving within W ms into
 /// one worker-pool round (responses stay byte-identical either way).
-/// Diagnostics go to stderr only. Exit code 0 on clean shutdown, 1 when
-/// a memo save failed (degraded — the WAL retains the unsaved delta),
-/// 3 when the memo file could not be loaded.
+/// The overload flags bound every client-exhaustible resource:
+/// `--default-deadline-ms` applies a deadline to requests without their
+/// own `"deadline_ms"`, `--max-queue`/`--max-inflight`/`--max-conns`/
+/// `--max-line-bytes` shed excess load with structured `OVERLOADED`
+/// responses, `--write-timeout-ms` bounds slow readers, and
+/// `--breaker-threshold` consecutive save failures switch the daemon to
+/// read-only degraded mode. Diagnostics go to stderr only. Exit code 0
+/// on clean shutdown, 1 when a memo save failed (degraded — the WAL
+/// retains the unsaved delta), 3 when the memo file could not be loaded.
 fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     let listen = match (args.has("listen"), args.get("listen")) {
         (false, _) => None,
@@ -1067,6 +1082,21 @@ fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     if lanes == 0 || lanes > 64 {
         anyhow::bail!("--lanes expects 1..=64, got {lanes}");
     }
+    let default_deadline_ms = match (args.has("default-deadline-ms"), args.get("default-deadline-ms")) {
+        (false, _) => None,
+        (true, Some(v)) => Some(v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--default-deadline-ms expects an integer millisecond count")
+        })?),
+        (true, None) => anyhow::bail!("--default-deadline-ms requires a millisecond count"),
+    };
+    let max_line_bytes = args.u64_or("max-line-bytes", 1 << 20)?;
+    if max_line_bytes == 0 {
+        anyhow::bail!("--max-line-bytes expects a positive byte count");
+    }
+    let breaker_threshold = args.u64_or("breaker-threshold", 3)?;
+    if breaker_threshold == 0 || breaker_threshold > u64::from(u32::MAX) {
+        anyhow::bail!("--breaker-threshold expects 1..=4294967295, got {breaker_threshold}");
+    }
     let cfg = crate::service::ServeConfig {
         memo_path: memo_path_from_args(args)?.map(PathBuf::from),
         listen,
@@ -1076,6 +1106,13 @@ fn cmd_serve(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         app_floor: args.u64_or("app-floor", 1)? as usize,
         lanes: lanes as usize,
         batch_window_ms: args.u64_or("batch-window-ms", 0)?,
+        default_deadline_ms,
+        max_queue: args.u64_or("max-queue", 64)?.max(1) as usize,
+        max_conns: args.u64_or("max-conns", 64)?.max(1) as usize,
+        max_inflight: args.u64_or("max-inflight", 256)?.max(1) as usize,
+        max_line_bytes: max_line_bytes.min(usize::MAX as u64) as usize,
+        write_timeout_ms: args.u64_or("write-timeout-ms", 10_000)?,
+        breaker_threshold: breaker_threshold as u32,
     };
     let svc = crate::service::Service::new(board.clone(), cfg).map_err(corrupt_input)?;
     crate::service::daemon::run(svc)
@@ -1129,7 +1166,9 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<i32> {
         crate::fuzz::FuzzTarget::ALL.to_vec()
     } else {
         vec![crate::fuzz::FuzzTarget::parse(target).ok_or_else(|| {
-            anyhow::anyhow!("unknown fuzz target '{target}' (memo-json|wal-replay|board-toml|all)")
+            anyhow::anyhow!(
+                "unknown fuzz target '{target}' (memo-json|wal-replay|board-toml|proto-ndjson|all)"
+            )
         })?]
     };
     let mut failures = 0usize;
@@ -1610,6 +1649,19 @@ mod tests {
         assert!(run(&argv("serve --lanes 65")).is_err());
         assert!(run(&argv("serve --lanes nope")).is_err());
         assert!(run(&argv("serve --batch-window-ms nope")).is_err());
+        // Overload-control flags: each must reject non-numeric or
+        // out-of-range values, and --default-deadline-ms must reject a
+        // bare flag (a deadline needs a millisecond count).
+        assert!(run(&argv("serve --default-deadline-ms")).is_err());
+        assert!(run(&argv("serve --default-deadline-ms nope")).is_err());
+        assert!(run(&argv("serve --max-queue nope")).is_err());
+        assert!(run(&argv("serve --max-inflight nope")).is_err());
+        assert!(run(&argv("serve --max-conns nope")).is_err());
+        assert!(run(&argv("serve --max-line-bytes 0")).is_err());
+        assert!(run(&argv("serve --max-line-bytes nope")).is_err());
+        assert!(run(&argv("serve --write-timeout-ms nope")).is_err());
+        assert!(run(&argv("serve --breaker-threshold 0")).is_err());
+        assert!(run(&argv("serve --breaker-threshold nope")).is_err());
     }
 
     #[test]
@@ -1731,6 +1783,7 @@ mod tests {
         assert_eq!(run(&argv("fuzz memo-json --iters 16 --seed 7")).unwrap(), 0);
         assert_eq!(run(&argv("fuzz wal-replay --iters 16 --seed 7")).unwrap(), 0);
         assert_eq!(run(&argv("fuzz board-toml --iters 16 --seed 7")).unwrap(), 0);
+        assert_eq!(run(&argv("fuzz proto-ndjson --iters 16 --seed 7")).unwrap(), 0);
         assert!(run(&argv("fuzz bogus-target")).is_err());
     }
 

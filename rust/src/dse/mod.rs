@@ -44,7 +44,7 @@ pub use cross::{
     board_winner_table, board_winner_table_for, BudgetAxis, BudgetRow, CrossBoardResult,
     CrossBoardSweep,
 };
-pub use prune::{enumerate_pruned, OrderMode, PruneStats};
+pub use prune::{enumerate_pruned, OrderMode, PruneStats, SweepCancelled};
 pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
 pub use warm::{EvalMemo, GcReport, MemoContextStat, MemoStats, SweepJournal, WalRecovery};
 

@@ -150,6 +150,24 @@ impl OrderMode {
 /// pool still sees wide rounds.
 const ROUND_CHUNK: usize = 8;
 
+/// Marker error returned when a sweep was cancelled at a round barrier
+/// (see [`run_rounds`]'s `cancel` hook). In-flight rounds always complete
+/// before the check fires, so a cancelled sweep has evaluated a
+/// deterministic prefix of its rounds — and, because memo recording
+/// happens only after a sweep finishes, a cancelled sweep leaves the memo
+/// untouched. Callers (the service daemon's deadline path) downcast to
+/// this type to classify the abort as `TIMEOUT` rather than a failure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepCancelled;
+
+impl std::fmt::Display for SweepCancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sweep cancelled at a round barrier")
+    }
+}
+
+impl std::error::Error for SweepCancelled {}
+
 /// Relative safety margin applied to the energy lower bound so that
 /// floating-point summation-order differences between the bound and the
 /// integrated energy report can never flip a strict comparison. The real
@@ -769,10 +787,17 @@ fn build_order(job: &mut JobState<'_, '_>, objective: Objective, mode: OrderMode
 /// any worker count — after the frontiers thawed; an error from the
 /// callback aborts the sweep (the recoverable path surfaces
 /// journal-commit failures here).
+///
+/// `cancel`, when present, is polled at every round **barrier** (before
+/// the next round's work list is assembled): a `true` aborts the sweep
+/// with [`SweepCancelled`]. The in-flight round always completes first —
+/// cancellation can shorten a sweep, never change the bytes of any round
+/// that did run.
 fn run_rounds<'a, 'p>(
     jobs: &mut [JobState<'a, 'p>],
     workers: usize,
     mut on_round: Option<&mut dyn FnMut(&[(usize, usize, DsePoint)]) -> anyhow::Result<()>>,
+    cancel: Option<&(dyn Fn() -> bool + Sync)>,
 ) -> anyhow::Result<()> {
     // Shared incumbent frontiers of the groups (empty when no job is
     // grouped). Like the per-job frontiers they are only thawed at round
@@ -794,6 +819,11 @@ fn run_rounds<'a, 'p>(
     }
 
     loop {
+        // Deadline/cancellation check at the barrier only: the previous
+        // round is fully merged, no evaluation is in flight.
+        if cancel.is_some_and(|c| c()) {
+            return Err(anyhow::Error::new(SweepCancelled));
+        }
         // Assemble this round's work list at the barrier: fixed chunk per
         // job, bound cut against each job's frozen frontier.
         let mut work: Vec<(usize, usize)> = Vec::new();
@@ -959,7 +989,7 @@ pub(crate) fn explore_pruned_grouped<'p>(
         build_order(job, objective, OrderMode::BoundAsc);
     }
 
-    run_rounds(&mut jobs, workers, None)
+    run_rounds(&mut jobs, workers, None, None)
         .expect("a sweep without recovery IO performs no fallible IO");
 
     jobs.into_iter()
@@ -1028,8 +1058,35 @@ pub(crate) fn explore_pruned_warm_multi<'p>(
     objective: Objective,
     workers: usize,
 ) -> Vec<(Vec<DsePoint>, PruneStats)> {
-    explore_pruned_warm_recoverable(inputs, memo, order, objective, workers, None)
+    explore_pruned_warm_driver(inputs, memo, order, objective, workers, None, None)
         .expect("a warm sweep without recovery IO performs no fallible IO")
+}
+
+/// Single-job warm exploration with a cooperative cancellation hook —
+/// the engine behind [`SweepContext::explore_warm_cancellable`] and the
+/// service daemon's per-request deadlines. `cancel` is polled at round
+/// barriers only (see [`run_rounds`]); a cancelled sweep returns
+/// [`SweepCancelled`] (downcastable) and leaves the memo **unmodified** —
+/// recording happens strictly after a sweep completes.
+pub(crate) fn explore_pruned_warm_cancellable<'p>(
+    ctx: &SweepContext<'p>,
+    space: &DseSpace,
+    memo: Option<&mut EvalMemo>,
+    order: OrderMode,
+    objective: Objective,
+    workers: usize,
+    cancel: Option<&(dyn Fn() -> bool + Sync)>,
+) -> anyhow::Result<(Vec<DsePoint>, PruneStats)> {
+    let mut out = explore_pruned_warm_driver(
+        &[(ctx, space)],
+        memo,
+        order,
+        objective,
+        workers,
+        None,
+        cancel,
+    )?;
+    Ok(out.pop().expect("one input yields one output"))
 }
 
 /// [`explore_pruned_warm_multi`] with crash recovery: given a
@@ -1049,12 +1106,33 @@ pub(crate) fn explore_pruned_warm_multi<'p>(
 /// `evaluated`/`bound_cut`); the returned point sets do not.
 pub(crate) fn explore_pruned_warm_recoverable<'p>(
     inputs: &[(&SweepContext<'p>, &DseSpace)],
+    memo: Option<&mut EvalMemo>,
+    order: OrderMode,
+    objective: Objective,
+    workers: usize,
+    recovery: Option<&mut RecoverySession>,
+) -> anyhow::Result<Vec<(Vec<DsePoint>, PruneStats)>> {
+    explore_pruned_warm_driver(inputs, memo, order, objective, workers, recovery, None)
+}
+
+/// The shared driver behind the warm exploration entry points, adding the
+/// round-barrier `cancel` hook to the recoverable path's journaling.
+#[allow(clippy::too_many_arguments)]
+fn explore_pruned_warm_driver<'p>(
+    inputs: &[(&SweepContext<'p>, &DseSpace)],
     mut memo: Option<&mut EvalMemo>,
     order: OrderMode,
     objective: Objective,
     workers: usize,
     mut recovery: Option<&mut RecoverySession>,
+    cancel: Option<&(dyn Fn() -> bool + Sync)>,
 ) -> anyhow::Result<Vec<(Vec<DsePoint>, PruneStats)>> {
+    // A deadline that already expired must leave the memo byte-identical:
+    // the per-sweep `touch` below bumps the persisted recency clock, so
+    // the first barrier check happens *before* job setup.
+    if cancel.is_some_and(|c| c()) {
+        return Err(anyhow::Error::new(SweepCancelled));
+    }
     // Recovery journals and restores *memo* state; without a memo there is
     // nothing to persist or resume.
     if memo.is_none() {
@@ -1220,7 +1298,7 @@ pub(crate) fn explore_pruned_warm_recoverable<'p>(
         }
         Ok(())
     };
-    run_rounds(&mut jobs, workers, Some(&mut journal_round))?;
+    run_rounds(&mut jobs, workers, Some(&mut journal_round), cancel)?;
 
     // Record the fresh evaluations (both levels) for the next sweep.
     // Poisoned candidates are quarantined: never recorded, never ranked.
@@ -1432,6 +1510,59 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cancellation_aborts_at_the_barrier_and_leaves_the_memo_untouched() {
+        let board = BoardConfig::zynq706();
+        let p = Matmul::new(512, 64).build_program(&board);
+        let space = DseSpace::from_program(&p);
+        let ctx = SweepContext::for_space(&p, &board, &FpgaPart::xc7z045(), &space);
+        // Cancel immediately: the very first barrier check fires, no round
+        // runs, the memo records nothing.
+        let mut memo = EvalMemo::new();
+        let before = memo.to_json();
+        let err = explore_pruned_warm_cancellable(
+            &ctx,
+            &space,
+            Some(&mut memo),
+            OrderMode::BoundAsc,
+            Objective::Time,
+            2,
+            Some(&(|| true)),
+        )
+        .unwrap_err();
+        assert!(
+            err.downcast_ref::<SweepCancelled>().is_some(),
+            "cancellation must surface as SweepCancelled: {err:#}"
+        );
+        assert_eq!(memo.to_json(), before, "cancelled sweep touched the memo");
+        // A hook that never fires is byte-identical to the plain warm path.
+        let (cancellable, _) = explore_pruned_warm_cancellable(
+            &ctx,
+            &space,
+            Some(&mut memo),
+            OrderMode::BoundAsc,
+            Objective::Time,
+            2,
+            Some(&(|| false)),
+        )
+        .unwrap();
+        let mut memo2 = EvalMemo::new();
+        let (plain, _) = explore_pruned_warm(
+            &ctx,
+            &space,
+            Some(&mut memo2),
+            OrderMode::BoundAsc,
+            Objective::Time,
+            2,
+        );
+        assert_eq!(cancellable.len(), plain.len());
+        for (a, b) in cancellable.iter().zip(&plain) {
+            assert_eq!(a.codesign.name, b.codesign.name);
+            assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits());
+        }
+        assert_eq!(memo.to_json(), memo2.to_json());
     }
 
     #[test]

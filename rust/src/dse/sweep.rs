@@ -687,6 +687,34 @@ impl<'p> SweepContext<'p> {
         .pop()
         .expect("one input yields one output"))
     }
+
+    /// [`SweepContext::explore_warm`] with a cooperative cancellation
+    /// hook, polled at chunk-synchronous round **barriers** only: the
+    /// in-flight round always completes, so every round that did run is
+    /// bit-identical to the uncancelled sweep's. A fired hook aborts with
+    /// a [`SweepCancelled`](super::SweepCancelled)-carrying error
+    /// *before* any memo recording — a cancelled sweep leaves `memo`
+    /// unmodified. This is the engine behind the service daemon's
+    /// per-request deadlines.
+    pub fn explore_warm_cancellable(
+        &self,
+        space: &DseSpace,
+        memo: &mut super::warm::EvalMemo,
+        objective: Objective,
+        workers: usize,
+        order: super::prune::OrderMode,
+        cancel: &(dyn Fn() -> bool + Sync),
+    ) -> anyhow::Result<(Vec<DsePoint>, super::prune::PruneStats)> {
+        super::prune::explore_pruned_warm_cancellable(
+            self,
+            space,
+            Some(memo),
+            order,
+            objective,
+            workers,
+            Some(cancel),
+        )
+    }
 }
 
 /// Worker-local evaluation state: a [`Simulator`] whose buffers persist

@@ -1,12 +1,14 @@
 //! Deterministic in-process fuzzing of the byte-ingesting parsers.
 //!
-//! The estimator swallows three kinds of external bytes: memo JSON
+//! The estimator swallows four kinds of external bytes: memo JSON
 //! documents ([`EvalMemo::from_json`]), sweep journals
-//! ([`EvalMemo::replay_wal_text`]) and board TOML files
-//! ([`BoardConfig::from_toml`]). Each must *reject* hostile input with an
-//! error — never panic, hang or accept garbage silently — because a
-//! corrupt file is quarantined and the sweep continues; a panic would
-//! abort it.
+//! ([`EvalMemo::replay_wal_text`]), board TOML files
+//! ([`BoardConfig::from_toml`]) and the service daemon's NDJSON request
+//! envelopes ([`parse_request`], including nested `batch` items). Each
+//! must *reject* hostile input with an error — never panic, hang or
+//! accept garbage silently — because a corrupt file is quarantined and
+//! the sweep continues (and a daemon answers every malformed line with
+//! a structured error); a panic would abort the process.
 //!
 //! The build is fully offline with no nightly toolchain, so instead of
 //! `cargo-fuzz`/libFuzzer this is a seeded mutation fuzzer on the repo's
@@ -23,6 +25,7 @@ use std::path::Path;
 
 use crate::config::BoardConfig;
 use crate::dse::EvalMemo;
+use crate::service::parse_request;
 use crate::util::Rng;
 
 /// Which byte-ingesting parser to fuzz.
@@ -34,12 +37,21 @@ pub enum FuzzTarget {
     WalReplay,
     /// [`BoardConfig::from_toml`] — board description files.
     BoardToml,
+    /// [`parse_request`] — the service daemon's NDJSON wire envelopes
+    /// (every request shape, including nested `batch` items). Each line
+    /// of the input document is parsed independently, exactly as the
+    /// daemon's read loop would feed it.
+    Proto,
 }
 
 impl FuzzTarget {
     /// Every target, in a stable order.
-    pub const ALL: [FuzzTarget; 3] =
-        [FuzzTarget::MemoJson, FuzzTarget::WalReplay, FuzzTarget::BoardToml];
+    pub const ALL: [FuzzTarget; 4] = [
+        FuzzTarget::MemoJson,
+        FuzzTarget::WalReplay,
+        FuzzTarget::BoardToml,
+        FuzzTarget::Proto,
+    ];
 
     /// Parse a CLI/corpus-directory name.
     pub fn parse(s: &str) -> Option<Self> {
@@ -47,6 +59,7 @@ impl FuzzTarget {
             "memo-json" => Some(FuzzTarget::MemoJson),
             "wal-replay" => Some(FuzzTarget::WalReplay),
             "board-toml" => Some(FuzzTarget::BoardToml),
+            "proto-ndjson" => Some(FuzzTarget::Proto),
             _ => None,
         }
     }
@@ -58,6 +71,7 @@ impl FuzzTarget {
             FuzzTarget::MemoJson => "memo-json",
             FuzzTarget::WalReplay => "wal-replay",
             FuzzTarget::BoardToml => "board-toml",
+            FuzzTarget::Proto => "proto-ndjson",
         }
     }
 }
@@ -128,6 +142,34 @@ pub fn builtin_seeds(target: FuzzTarget) -> Vec<Vec<u8>> {
             BoardConfig::zynq706().to_toml().into_bytes(),
             BoardConfig::zynq_ultrascale().to_toml().into_bytes(),
         ],
+        FuzzTarget::Proto => {
+            // One format-true line per request shape (the daemon's read
+            // loop feeds lines independently, so a multi-line document
+            // seeds every shape at once).
+            let doc = concat!(
+                r#"{"id":1,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"],"smp":[]}"#,
+                "\n",
+                r#"{"id":2,"req":"energy","app":"lu","n":256,"bs":64,"accel":["trsm_row:U16"]}"#,
+                "\n",
+                r#"{"id":3,"req":"dse","app":"matmul","n":128,"objective":"time","top":5,"mixed":false,"order":"ranked"}"#,
+                "\n",
+                r#"{"id":4,"req":"memo","action":"stats"}"#,
+                "\n",
+                r#"{"id":5,"req":"memo","action":"gc","max_bytes":65536,"app_floor":1}"#,
+                "\n",
+                r#"{"id":6,"req":"ping"}"#,
+                "\n",
+                r#"{"id":7,"req":"health"}"#,
+                "\n",
+                r#"{"id":8,"req":"estimate","app":"matmul","accel":["mxm64:U32"],"deadline_ms":250}"#,
+                "\n",
+                r#"{"id":9,"req":"batch","items":[{"id":"a","req":"estimate","app":"matmul","accel":["mxm64:U32"]},{"id":"b","req":"energy","app":"lu","accel":["trsm_row:U16"]}]}"#,
+                "\n",
+                r#"{"id":10,"req":"shutdown"}"#,
+                "\n",
+            );
+            vec![doc.as_bytes().to_vec()]
+        }
     }
 }
 
@@ -198,6 +240,16 @@ fn exercise(target: FuzzTarget, text: &str) -> bool {
         FuzzTarget::MemoJson => EvalMemo::from_json(text).is_ok(),
         FuzzTarget::WalReplay => EvalMemo::new().replay_wal_text(text).is_ok(),
         FuzzTarget::BoardToml => BoardConfig::from_toml(text).is_ok(),
+        FuzzTarget::Proto => {
+            // Line-at-a-time, like the daemon; "accepted" means every
+            // non-blank line parsed. Either way each line must yield a
+            // typed envelope or a structured error — never a panic.
+            let mut all_ok = true;
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                all_ok &= parse_request(line).is_ok();
+            }
+            all_ok
+        }
     }
 }
 

@@ -9,18 +9,20 @@
 //! drive the cheap pipe transport and trust the TCP one.
 //!
 //! **Lane sharding.** With `--lanes N` the single memo lane of the
-//! original daemon splits into N lanes keyed by application name:
-//! requests for distinct apps acquire independent lane locks and run
-//! their program analysis and cold evaluations concurrently under a
-//! shared memo *read* lock, taking the write lock only for the brief
-//! per-point bookkeeping. Apps are kernel-disjoint, so contexts that
-//! share level-1 kernel state (the same app at several problem sizes)
-//! always land in one lane and see exactly the sequential warmth
-//! counters — which is what keeps every response byte-identical to the
-//! single-lane daemon for any interleaving. Each lane journals to its
-//! own WAL shard (`<memo>.wal`, `<memo>.wal.1`, ...), so the
-//! crash-safety contract — lose at most the in-flight round — holds
-//! independently per lane.
+//! original daemon splits into N lanes routed by *kernel group*: the
+//! first context to use a kernel fingerprint claims a lane for it, and
+//! every later context locks the union of the lanes owned by its
+//! kernels (ascending index order, so lock acquisition is globally
+//! deadlock-free). Contexts that share level-1 kernel state therefore
+//! always hold intersecting lock sets and see exactly the sequential
+//! warmth counters — which is what keeps every response byte-identical
+//! to the single-lane daemon for any interleaving — while
+//! kernel-disjoint contexts run their program analysis and cold
+//! evaluations concurrently under a shared memo *read* lock, taking the
+//! write lock only for the brief per-point bookkeeping. Each lane
+//! journals to its own WAL shard (`<memo>.wal`, `<memo>.wal.1`, ...),
+//! so the crash-safety contract — lose at most the in-flight round —
+//! holds independently per lane.
 //!
 //! **Batch evaluation.** The cold points of a `batch` envelope (and of a
 //! `--batch-window-ms` accumulation window) are evaluated together as
@@ -39,7 +41,36 @@
 //! bitwise identical and the memo sees one recording. Coalescing is
 //! observable only through the cumulative `coalesced` counter of
 //! `{"req":"memo","action":"stats"}` — deliberately not in per-response
-//! fields, which would break response bit-identity.
+//! fields, which would break response bit-identity. Requests carrying a
+//! deadline bypass the coalescing table: a follower must never inherit
+//! a leader's (possibly longer) deadline.
+//!
+//! **Overload control.** The daemon bounds every resource a hostile or
+//! merely enthusiastic client could exhaust, and sheds load with
+//! structured errors instead of stalling or dying:
+//!
+//! * *Deadlines* — `"deadline_ms"` on any work request (or
+//!   `--default-deadline-ms` for all of them) starts a budget at
+//!   admission. A point query whose budget expired before its cold
+//!   evaluation started answers code 4 (`kind:"TIMEOUT"`); memo hits
+//!   are always served. A `dse` sweep polls its deadline at
+//!   chunk-synchronous round barriers only — in-flight rounds always
+//!   complete, so cancellation never tears a round and the memo stays
+//!   byte-identical to never having asked.
+//! * *Admission* — per-lane queue depths (`--max-queue`), a global
+//!   in-flight cap (`--max-inflight`), a TCP connection cap
+//!   (`--max-conns`) and a request-line size limit (`--max-line-bytes`)
+//!   refuse excess work with code 5 (`kind:"OVERLOADED"`) and a
+//!   `retry_after_ms` backoff hint. Slow readers are bounded by
+//!   `--write-timeout-ms`; a disconnected client's queued (never
+//!   in-flight) requests are dropped.
+//! * *Degradation* — `--breaker-threshold` consecutive memo save
+//!   failures open a circuit breaker: the daemon turns read-only,
+//!   serving memo hits normally and refusing cold evaluations with
+//!   code 6 (`kind:"DEGRADED"`) until a save succeeds again.
+//!   `{"req":"health"}` probes readiness (never queued behind work),
+//!   and SIGTERM drains: stop admitting, finish in-flight work, save,
+//!   exit.
 //!
 //! **Persistence.** With `--memo <file>` the memo loads with WAL
 //! recovery (all shards) at startup, journals every fresh evaluation as
@@ -58,12 +89,14 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{
     Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
 };
+use std::time::{Duration, Instant};
 
 use crate::config::BoardConfig;
 use crate::coordinator::task::TaskProgram;
-use crate::dse::warm::context_fingerprint;
-use crate::dse::{EvalMemo, SweepContext, SweepJournal};
-use crate::hls::FpgaPart;
+use crate::dse::warm::{codesign_key, context_fingerprint};
+use crate::dse::{EvalMemo, SweepCancelled, SweepContext, SweepJournal};
+use crate::hls::{kernel_fingerprint, FpgaPart};
+use crate::util::faultpoint;
 use crate::util::fnv::Fnv;
 use crate::util::json::Value;
 
@@ -90,14 +123,37 @@ pub struct ServeConfig {
     pub max_bytes: Option<usize>,
     /// Per-app most-recent context floor of the byte-budget gc.
     pub app_floor: usize,
-    /// Memo lanes (`--lanes`): point/dse requests shard by app name and
-    /// distinct lanes evaluate concurrently. `1` is the original
+    /// Memo lanes (`--lanes`): requests shard by kernel group and
+    /// disjoint groups evaluate concurrently. `1` is the original
     /// single-lane daemon, bit for bit.
     pub lanes: usize,
     /// Accumulation window (`--batch-window-ms`) for cross-request batch
     /// evaluation of point queries; `0` disables the window (explicit
     /// `batch` envelopes always batch).
     pub batch_window_ms: u64,
+    /// Deadline applied to every work request that does not carry its
+    /// own `"deadline_ms"` (`--default-deadline-ms`); `None` means no
+    /// implicit deadline. Deadlined requests skip coalescing.
+    pub default_deadline_ms: Option<u64>,
+    /// Maximum admitted-but-unfinished requests per admission shard
+    /// (`--max-queue`); excess answers `OVERLOADED`.
+    pub max_queue: usize,
+    /// Maximum concurrent TCP connections (`--max-conns`); excess
+    /// connections receive one `OVERLOADED` line and are closed.
+    pub max_conns: usize,
+    /// Maximum requests in flight across all transports
+    /// (`--max-inflight`); excess answers `OVERLOADED`.
+    pub max_inflight: usize,
+    /// Maximum request line length in bytes (`--max-line-bytes`); longer
+    /// lines are consumed (the stream stays in sync) and answered with
+    /// one `OVERLOADED` line without ever being buffered whole.
+    pub max_line_bytes: usize,
+    /// TCP write timeout (`--write-timeout-ms`, 0 disables): a client
+    /// that stops reading cannot wedge its connection thread forever.
+    pub write_timeout_ms: u64,
+    /// Consecutive memo-save failures that open the read-only circuit
+    /// breaker (`--breaker-threshold`).
+    pub breaker_threshold: u32,
 }
 
 impl Default for ServeConfig {
@@ -111,19 +167,105 @@ impl Default for ServeConfig {
             app_floor: 1,
             lanes: 1,
             batch_window_ms: 0,
+            default_deadline_ms: None,
+            max_queue: 64,
+            max_conns: 64,
+            max_inflight: 256,
+            max_line_bytes: 1 << 20,
+            write_timeout_ms: 10_000,
+            breaker_threshold: 3,
         }
     }
 }
 
-/// Per-lane mutable state: the lane's shard journal. The lane lock is
-/// what serializes requests that share memo state (same app), so holding
-/// it across one request's evaluate-then-record sequence is exactly the
-/// sequential semantics the byte-identity contract needs.
+/// Per-lane mutable state: the lane's shard journal. The lane locks are
+/// what serialize requests that share memo state (overlapping kernel
+/// groups), so holding them across one request's evaluate-then-record
+/// sequence is exactly the sequential semantics the byte-identity
+/// contract needs.
 struct LaneState {
     journal: Option<SweepJournal>,
 }
 
-/// The accumulation window of one lane: point queries parked here are
+/// The lock set of one context: every lane owned by one of its kernel
+/// fingerprints plus the `primary` lane (which keeps its shard journal).
+/// `locks` is ascending and deduplicated — all acquisition happens in
+/// ascending lane order, which makes the multi-lock scheme deadlock-free
+/// against both other routes and the all-lane quiesce of a save.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Route {
+    locks: Vec<usize>,
+    primary: usize,
+}
+
+/// Kernel-group lane router. The first context to use a kernel
+/// fingerprint claims the context's primary lane for it; later contexts
+/// that share the kernel must lock that lane too. Routes are computed
+/// once per (app, n, bs) context and immutable afterwards — two contexts
+/// sharing a kernel always have intersecting lock sets, so their warmth
+/// bookkeeping is serialized exactly as in the single-lane daemon.
+struct LaneRouter {
+    lanes: usize,
+    /// kernel fingerprint → lane that owns its level-1 memo state.
+    kernel_owner: HashMap<u64, usize>,
+    /// (app, n, bs) → computed route (immutable once inserted).
+    routes: HashMap<(String, u64, u64), Route>,
+}
+
+impl LaneRouter {
+    fn new(lanes: usize) -> Self {
+        LaneRouter {
+            lanes: lanes.max(1),
+            kernel_owner: HashMap::new(),
+            routes: HashMap::new(),
+        }
+    }
+
+    fn cached(&self, key: &(String, u64, u64)) -> Option<Route> {
+        self.routes.get(key).cloned()
+    }
+
+    /// Compute (or fetch) the route of one context given its sorted,
+    /// deduplicated kernel fingerprints. A context whose kernels are all
+    /// unowned hashes to a fresh primary lane and claims them; a context
+    /// overlapping existing groups locks every owner lane and adopts the
+    /// lowest as primary, claiming only its still-unowned kernels.
+    fn assign(&mut self, key: &(String, u64, u64), fps: &[u64]) -> Route {
+        if let Some(r) = self.routes.get(key) {
+            return r.clone();
+        }
+        let mut owners: Vec<usize> = fps
+            .iter()
+            .filter_map(|fp| self.kernel_owner.get(fp).copied())
+            .collect();
+        owners.sort_unstable();
+        owners.dedup();
+        let primary = match owners.first() {
+            Some(&o) => o,
+            None => {
+                let mut h = Fnv::new();
+                for &fp in fps {
+                    h.u64(fp);
+                }
+                h.str(&key.0);
+                (h.finish() % self.lanes as u64) as usize
+            }
+        };
+        for &fp in fps {
+            self.kernel_owner.entry(fp).or_insert(primary);
+        }
+        let mut locks = owners;
+        if !locks.contains(&primary) {
+            locks.push(primary);
+        }
+        locks.sort_unstable();
+        let route = Route { locks, primary };
+        self.routes.insert(key.clone(), route.clone());
+        route
+    }
+}
+
+/// The accumulation window of one shard: point queries parked here are
 /// drained by the window leader into one batch round.
 #[derive(Default)]
 struct Window {
@@ -135,7 +277,17 @@ struct Window {
 struct PendingPoint {
     query: PointQuery,
     energy: bool,
+    deadline: Option<Instant>,
     cell: Arc<InFlight>,
+}
+
+/// One point query flowing through the batch evaluator, with the
+/// admission-time deadline it must honor.
+#[derive(Clone)]
+struct PointItem {
+    query: PointQuery,
+    energy: bool,
+    deadline: Option<Instant>,
 }
 
 /// A query in flight: the leader publishes into `slot` and wakes waiters.
@@ -165,12 +317,22 @@ struct Counters {
     l2_hits: AtomicU64,
     errors: AtomicU64,
     saves: AtomicU64,
+    timeouts: AtomicU64,
+    overloaded: AtomicU64,
+    degraded_rejects: AtomicU64,
+}
+
+/// Backoff hint for an `OVERLOADED` response, scaled by how deep the
+/// contended resource already is (capped at one second).
+fn retry_hint(pressure: u64) -> u64 {
+    (25 * (pressure + 1)).min(1000)
 }
 
 /// The resident estimator service: shared memo behind a read/write lock,
-/// app-sharded lanes with per-shard journals, program and fingerprint
-/// caches, in-flight coalescing table and counters. Wrap in an [`Arc`]
-/// and call [`Service::handle_line`] from any number of threads.
+/// kernel-group lanes with per-shard journals, program and fingerprint
+/// caches, in-flight coalescing table, admission accounting and
+/// counters. Wrap in an [`Arc`] and call [`Service::handle_line`] from
+/// any number of threads.
 pub struct Service {
     board: BoardConfig,
     part: FpgaPart,
@@ -185,12 +347,29 @@ pub struct Service {
     /// lifetime with a probe analysis and reused ever after.
     fingerprints: Mutex<BTreeMap<(String, u64, u64), u64>>,
     lanes: Vec<Mutex<LaneState>>,
+    /// Kernel-group route table. Never held while a lane lock is taken.
+    router: Mutex<LaneRouter>,
     windows: Vec<Mutex<Window>>,
     inflight: Mutex<HashMap<String, Arc<InFlight>>>,
     /// Serializes savers; lane locks are only held *inside* a save.
     save_lock: Mutex<()>,
     fresh_since_save: AtomicU64,
     save_failed: AtomicBool,
+    /// Consecutive save failures (reset by any success) — the breaker
+    /// input.
+    save_fail_streak: AtomicU64,
+    /// Circuit breaker: open (true) after `breaker_threshold`
+    /// consecutive save failures; the daemon serves read-only until a
+    /// save succeeds.
+    breaker_tripped: AtomicBool,
+    /// Admitted-but-unfinished requests per admission shard.
+    lane_depth: Vec<AtomicU64>,
+    /// Admitted-but-unfinished requests across all shards.
+    inflight_total: AtomicU64,
+    /// Live TCP connections (stdio is not counted).
+    conns: AtomicU64,
+    /// Draining (SIGTERM received): admission refuses all new work.
+    draining: AtomicBool,
     counters: Counters,
     shutdown: AtomicBool,
     exit_code: Mutex<Option<i32>>,
@@ -212,6 +391,23 @@ fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
 /// [`lock_unpoisoned`] for the memo write lock.
 fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
     l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+/// RAII admission token: decrements the shard depth and the global
+/// in-flight count however the request ends (answered, panicked, or the
+/// connection died while it ran).
+struct AdmitGuard<'a> {
+    svc: &'a Service,
+    shard: Option<usize>,
+}
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.shard {
+            self.svc.lane_depth[s].fetch_sub(1, Ordering::SeqCst);
+        }
+        self.svc.inflight_total.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Service {
@@ -259,11 +455,18 @@ impl Service {
                 .into_iter()
                 .map(|journal| Mutex::new(LaneState { journal }))
                 .collect(),
+            router: Mutex::new(LaneRouter::new(n_lanes)),
             windows: (0..n_lanes).map(|_| Mutex::new(Window::default())).collect(),
             inflight: Mutex::new(HashMap::new()),
             save_lock: Mutex::new(()),
             fresh_since_save: AtomicU64::new(0),
             save_failed: AtomicBool::new(false),
+            save_fail_streak: AtomicU64::new(0),
+            breaker_tripped: AtomicBool::new(false),
+            lane_depth: (0..n_lanes).map(|_| AtomicU64::new(0)).collect(),
+            inflight_total: AtomicU64::new(0),
+            conns: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
             counters: Counters::default(),
             shutdown: AtomicBool::new(false),
             exit_code: Mutex::new(None),
@@ -296,6 +499,26 @@ impl Service {
         self.counters.errors.load(Ordering::Relaxed)
     }
 
+    /// Requests whose deadline expired before (or during) evaluation.
+    pub fn timeouts(&self) -> u64 {
+        self.counters.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Requests, lines or connections refused by admission control.
+    pub fn overloaded(&self) -> u64 {
+        self.counters.overloaded.load(Ordering::Relaxed)
+    }
+
+    /// Cold evaluations refused while the save breaker was open.
+    pub fn degraded_rejects(&self) -> u64 {
+        self.counters.degraded_rejects.load(Ordering::Relaxed)
+    }
+
+    /// Whether the save circuit breaker is open (read-only mode).
+    pub fn degraded(&self) -> bool {
+        self.breaker_tripped.load(Ordering::SeqCst)
+    }
+
     /// Number of memo lanes the service shards across.
     pub fn lanes(&self) -> usize {
         self.lanes.len()
@@ -308,44 +531,93 @@ impl Service {
         }
     }
 
-    /// Lane of an app. Apps are kernel-disjoint, so hashing the app name
-    /// keeps every context that shares level-1 kernel state (one app at
-    /// several problem sizes) in one lane — which is what makes the
-    /// per-response warmth counters deterministic under concurrency —
-    /// while distinct apps spread across lanes and evaluate concurrently.
-    fn lane_of(&self, app: &str) -> usize {
+    /// Admission/window shard of an app (FNV of the name). This is the
+    /// cheap hash the queue-depth accounting and the accumulation
+    /// windows bucket by; the *evaluation* lock set is the kernel-group
+    /// route, which needs the program and is computed after admission.
+    fn queue_shard(&self, app: &str) -> usize {
         let mut h = Fnv::new();
         h.str(app);
         (h.finish() % self.lanes.len() as u64) as usize
     }
 
-    fn program(&self, app: &str, n: u64, bs: u64) -> Result<Arc<TaskProgram>, ServiceError> {
-        let key = (app.to_string(), n, bs);
-        if let Some(p) = lock_unpoisoned(&self.programs).get(&key) {
-            return Ok(Arc::clone(p));
+    /// The kernel-group route of one context (cached after the first
+    /// computation). The router mutex is never held while lane locks are
+    /// taken, and routes are immutable once assigned.
+    fn route_of(&self, program: &TaskProgram, key: &(String, u64, u64)) -> Route {
+        if let Some(r) = lock_unpoisoned(&self.router).cached(key) {
+            return r;
         }
-        // Built outside the cache lock: program construction is pure.
-        let program = crate::apps::build_app_program(app, n, bs, &self.board)
-            .map_err(|e| ServiceError::usage(format!("{e:#}")))?;
-        let program = Arc::new(program);
-        lock_unpoisoned(&self.programs)
-            .entry(key)
-            .or_insert_with(|| Arc::clone(&program));
-        Ok(program)
+        let mut fps: Vec<u64> = program
+            .kernels
+            .iter()
+            .map(|k| kernel_fingerprint(&k.name, &k.profile))
+            .collect();
+        fps.sort_unstable();
+        fps.dedup();
+        lock_unpoisoned(&self.router).assign(key, &fps)
     }
 
-    /// Context fingerprint of one (app, n, bs) context, cached. The
-    /// fingerprint covers program/board/part only — never the swept
-    /// space — so one probe analysis computes it and every later request
-    /// (the hot path) reuses it without touching the program again.
-    fn fingerprint(&self, program: &TaskProgram, key: &(String, u64, u64)) -> u64 {
-        if let Some(fp) = lock_unpoisoned(&self.fingerprints).get(key) {
-            return *fp;
+    /// Acquire a route's lane locks in ascending index order (the global
+    /// acquisition order — see [`Route`]).
+    fn lock_route(&self, route: &Route) -> Vec<MutexGuard<'_, LaneState>> {
+        route
+            .locks
+            .iter()
+            .map(|&l| lock_unpoisoned(&self.lanes[l]))
+            .collect()
+    }
+
+    /// Admission control for work requests (probes and memo maintenance
+    /// bypass it). Returns an RAII token whose drop releases the
+    /// capacity. The depth checks are check-then-increment over two
+    /// atomics — deliberately approximate under races by at most the
+    /// number of racing threads, which is bounded by the connection cap;
+    /// the limits are load-shedding thresholds, not exact semaphores.
+    fn admit(&self, env: &Envelope) -> Result<AdmitGuard<'_>, ServiceError> {
+        if let Err(e) = faultpoint::hit("queue.admit") {
+            self.counters.overloaded.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::overloaded(format!("{e:#}"), retry_hint(0)));
         }
-        let ctx = SweepContext::new(program, &self.board, self.part.clone());
-        let fp = context_fingerprint(&ctx);
-        lock_unpoisoned(&self.fingerprints).insert(key.clone(), fp);
-        fp
+        if self.draining.load(Ordering::SeqCst) {
+            self.counters.overloaded.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::overloaded(
+                "draining: the daemon is shutting down and admits no new work",
+                1000,
+            ));
+        }
+        let inflight = self.inflight_total.load(Ordering::SeqCst);
+        if inflight >= self.cfg.max_inflight as u64 {
+            self.counters.overloaded.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::overloaded(
+                format!(
+                    "at capacity: {inflight} requests in flight (--max-inflight {})",
+                    self.cfg.max_inflight
+                ),
+                retry_hint(inflight),
+            ));
+        }
+        let shard = match &env.kind {
+            RequestKind::Estimate(q) | RequestKind::Energy(q) => Some(self.queue_shard(&q.app)),
+            RequestKind::Dse(q) => Some(self.queue_shard(&q.app)),
+            _ => None,
+        };
+        if let Some(s) = shard {
+            let depth = self.lane_depth[s].load(Ordering::SeqCst);
+            if depth >= self.cfg.max_queue as u64 {
+                self.counters.overloaded.fetch_add(1, Ordering::Relaxed);
+                return Err(ServiceError::overloaded(
+                    format!(
+                        "lane queue full: {depth} requests deep on shard {s} (--max-queue {})",
+                        self.cfg.max_queue
+                    ),
+                    retry_hint(depth),
+                ));
+            }
+            self.lane_depth[s].fetch_add(1, Ordering::SeqCst);
+        }
+        self.inflight_total.fetch_add(1, Ordering::SeqCst);
+        Ok(AdmitGuard { svc: self, shard })
     }
 
     /// Save the memo: serialize savers, quiesce every lane (all lane
@@ -353,8 +625,10 @@ impl Service {
     /// successful save deletes the WAL files — keeping the handles would
     /// journal into deleted inodes), enforce the byte budget, save
     /// atomically, reopen the shard journals. On failure the daemon
-    /// degrades instead of dying: the shard WALs still carry the delta
-    /// and `save_failed` turns the final exit code non-zero.
+    /// degrades instead of dying: the shard WALs still carry the delta,
+    /// `save_failed` turns the final exit code non-zero, and
+    /// `--breaker-threshold` consecutive failures open the read-only
+    /// circuit breaker (closed again by the next successful save).
     ///
     /// Callers must not hold any lane lock or memo guard.
     fn save_all(&self) {
@@ -376,17 +650,32 @@ impl Service {
                 );
             }
         }
-        match read_unpoisoned(&self.memo).save(&path) {
+        let saved = faultpoint::hit("save.breaker")
+            .and_then(|()| read_unpoisoned(&self.memo).save(&path));
+        match saved {
             Ok(()) => {
                 self.fresh_since_save.store(0, Ordering::Relaxed);
                 self.counters.saves.fetch_add(1, Ordering::Relaxed);
+                self.save_fail_streak.store(0, Ordering::SeqCst);
+                if self.breaker_tripped.swap(false, Ordering::SeqCst) {
+                    eprintln!("serve: memo save recovered — breaker closed, leaving read-only mode");
+                }
             }
             Err(e) => {
                 self.save_failed.store(true, Ordering::Relaxed);
+                let streak = self.save_fail_streak.fetch_add(1, Ordering::SeqCst) + 1;
                 eprintln!(
                     "serve: memo save failed ({e:#}) — continuing degraded; \
                      the WAL retains unsaved rounds"
                 );
+                if streak >= u64::from(self.cfg.breaker_threshold.max(1))
+                    && !self.breaker_tripped.swap(true, Ordering::SeqCst)
+                {
+                    eprintln!(
+                        "serve: save breaker OPEN after {streak} consecutive failures — \
+                         read-only mode (memo hits served, cold evaluations rejected)"
+                    );
+                }
             }
         }
         if self.shutdown.load(Ordering::SeqCst) {
@@ -431,11 +720,11 @@ impl Service {
             .fetch_add(reply.evaluated, Ordering::Relaxed);
     }
 
-    /// Answer one point item against its lane: the context analysis runs
-    /// under the shared memo read lock (concurrent across lanes), the
-    /// bookkeeping under a brief write lock. A panicking evaluation
-    /// (fault injection) answers an error instead of tearing the lane
-    /// down.
+    /// Answer one point item against its primary lane: the context
+    /// analysis runs under the shared memo read lock (concurrent across
+    /// lanes), the bookkeeping under a brief write lock. A panicking
+    /// evaluation (fault injection) answers an error instead of tearing
+    /// the lane down.
     fn point_item(
         &self,
         program: &TaskProgram,
@@ -475,22 +764,26 @@ impl Service {
         }
     }
 
-    /// Answer the subset of `items` (by index) that belongs to one lane.
-    /// Phase 1 runs one chunk-synchronous worker-pool round per context
-    /// over its cold points, under the shared read lock; phase 2 performs
-    /// each item's bookkeeping and rendering in original arrival order,
-    /// which reproduces the sequential responses byte for byte.
+    /// Answer the subset of `items` (by index) that belongs to one
+    /// route, with its lane locks held and `lane` its primary lane.
+    /// Phase 1 triages each item under the memo read lock — memo hits
+    /// always proceed; cold items whose deadline already expired answer
+    /// `TIMEOUT`, cold items under an open save breaker answer
+    /// `DEGRADED` — then runs one chunk-synchronous worker-pool round
+    /// per context over the surviving cold points. Phase 2 performs each
+    /// item's bookkeeping and rendering in original arrival order, which
+    /// reproduces the sequential responses byte for byte.
     fn run_lane_items(
         &self,
         lane: &mut LaneState,
-        items: &[(PointQuery, bool)],
+        items: &[PointItem],
         programs: &[Option<Arc<TaskProgram>>],
         idxs: &[usize],
         out: &mut [Option<Result<QueryReply, ServiceError>>],
     ) {
         let mut groups: Vec<((String, u64, u64), Vec<usize>)> = Vec::new();
         for &i in idxs {
-            let q = &items[i].0;
+            let q = &items[i].query;
             let key = (q.app.clone(), q.n, q.bs);
             match groups.iter_mut().find(|(k, _)| *k == key) {
                 Some((_, members)) => members.push(i),
@@ -498,23 +791,50 @@ impl Service {
             }
         }
         let workers = self.workers();
+        let degraded = self.degraded();
         let mut pres: Vec<PreEvaluated> = Vec::with_capacity(groups.len());
-        for (key, members) in &groups {
+        for (key, members) in &mut groups {
             let program = programs[members[0]]
                 .as_ref()
                 .expect("grouped items resolved their program");
             let fp = self.fingerprint(program, key);
-            let cds: Vec<_> = members.iter().map(|&i| items[i].0.codesign()).collect();
-            let memo = read_unpoisoned(&self.memo);
-            pres.push(pre_evaluate(
-                program,
-                &self.board,
-                &self.part,
-                fp,
-                &cds,
-                &memo,
-                workers,
-            ));
+            let mut live: Vec<usize> = Vec::with_capacity(members.len());
+            let mut cds = Vec::with_capacity(members.len());
+            {
+                let memo = read_unpoisoned(&self.memo);
+                for &i in members.iter() {
+                    let it = &items[i];
+                    let cd = it.query.codesign();
+                    let cold = memo.lookup(fp, &codesign_key(&cd)).is_none();
+                    if cold && it.deadline.is_some_and(|d| Instant::now() >= d) {
+                        self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                        out[i] = Some(Err(ServiceError::timeout(
+                            "deadline exceeded before evaluation (memo miss left cold)",
+                        )));
+                        continue;
+                    }
+                    if cold && degraded {
+                        self.counters.degraded_rejects.fetch_add(1, Ordering::Relaxed);
+                        out[i] = Some(Err(ServiceError::degraded(
+                            "read-only degraded mode (save breaker open): cold \
+                             evaluation rejected, memo hits still served",
+                        )));
+                        continue;
+                    }
+                    live.push(i);
+                    cds.push(cd);
+                }
+                pres.push(pre_evaluate(
+                    program,
+                    &self.board,
+                    &self.part,
+                    fp,
+                    &cds,
+                    &memo,
+                    workers,
+                ));
+            }
+            *members = live;
         }
         let mut group_of: BTreeMap<usize, usize> = BTreeMap::new();
         for (g, (_, members)) in groups.iter().enumerate() {
@@ -523,9 +843,13 @@ impl Service {
             }
         }
         for &i in idxs {
-            let (q, energy) = &items[i];
+            if out[i].is_some() {
+                // Triaged in phase 1 (timeout or degraded rejection).
+                continue;
+            }
+            let it = &items[i];
             let program = programs[i].as_ref().expect("lane items have programs");
-            let res = self.point_item(program, q, *energy, &pres[group_of[&i]], lane);
+            let res = self.point_item(program, &it.query, it.energy, &pres[group_of[&i]], lane);
             if let Ok(reply) = &res {
                 self.bump_warmth(reply);
             }
@@ -534,20 +858,18 @@ impl Service {
     }
 
     /// Answer a slice of point queries with cross-request batch
-    /// evaluation. Items shard per lane (lanes are state-disjoint, so
-    /// processing lanes in ascending index order is cosmetic); within a
-    /// lane, each context's cold points run as one worker-pool round and
-    /// every response is byte-identical to handling the items one
-    /// request at a time in the same order.
-    fn run_point_items(
-        &self,
-        items: &[(PointQuery, bool)],
-    ) -> Vec<Result<QueryReply, ServiceError>> {
+    /// evaluation. Items group per kernel-group route; routes are
+    /// processed in ascending lock-set order (cosmetic — routes either
+    /// share all their serialization or none of it) with their lane
+    /// locks held, and within a route each context's cold points run as
+    /// one worker-pool round. Every response is byte-identical to
+    /// handling the items one request at a time in the same order.
+    fn run_point_items(&self, items: &[PointItem]) -> Vec<Result<QueryReply, ServiceError>> {
         let mut out: Vec<Option<Result<QueryReply, ServiceError>>> =
             items.iter().map(|_| None).collect();
         let mut programs: Vec<Option<Arc<TaskProgram>>> = Vec::with_capacity(items.len());
-        for (i, (q, _)) in items.iter().enumerate() {
-            match self.program(&q.app, q.n, q.bs) {
+        for (i, it) in items.iter().enumerate() {
+            match self.program(&it.query.app, it.query.n, it.query.bs) {
                 Ok(p) => programs.push(Some(p)),
                 Err(e) => {
                     out[i] = Some(Err(e));
@@ -555,15 +877,25 @@ impl Service {
                 }
             }
         }
-        let mut by_lane: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for (i, (q, _)) in items.iter().enumerate() {
-            if programs[i].is_some() {
-                by_lane.entry(self.lane_of(&q.app)).or_default().push(i);
+        let mut by_route: Vec<(Route, Vec<usize>)> = Vec::new();
+        for (i, it) in items.iter().enumerate() {
+            let Some(program) = &programs[i] else { continue };
+            let key = (it.query.app.clone(), it.query.n, it.query.bs);
+            let route = self.route_of(program, &key);
+            match by_route.iter_mut().find(|(r, _)| *r == route) {
+                Some((_, members)) => members.push(i),
+                None => by_route.push((route, vec![i])),
             }
         }
-        for (lane_idx, idxs) in by_lane {
-            let mut lane = lock_unpoisoned(&self.lanes[lane_idx]);
-            self.run_lane_items(&mut lane, items, &programs, &idxs, &mut out);
+        by_route.sort_by(|a, b| (&a.0.locks, a.0.primary).cmp(&(&b.0.locks, b.0.primary)));
+        for (route, idxs) in &by_route {
+            let mut guards = self.lock_route(route);
+            let p = route
+                .locks
+                .iter()
+                .position(|&l| l == route.primary)
+                .expect("primary lane is always in the lock set");
+            self.run_lane_items(&mut guards[p], items, &programs, idxs, &mut out);
         }
         self.maybe_save();
         out.into_iter()
@@ -572,18 +904,22 @@ impl Service {
     }
 
     /// Answer a `batch` envelope: parse-failed items answer their error
-    /// in place, valid items run through the batch evaluator, and every
-    /// item's response object is exactly what the standalone request
-    /// line would have produced (same [`ok_obj`]/[`err_obj`] builders,
-    /// same replies).
-    fn run_batch(&self, batch: &[BatchItem]) -> QueryReply {
-        let mut queries: Vec<(PointQuery, bool)> = Vec::new();
+    /// in place, valid items run through the batch evaluator (inheriting
+    /// the envelope's deadline), and every item's response object is
+    /// exactly what the standalone request line would have produced
+    /// (same [`ok_obj`]/[`err_obj`] builders, same replies).
+    fn run_batch(&self, batch: &[BatchItem], deadline: Option<Instant>) -> QueryReply {
+        let mut queries: Vec<PointItem> = Vec::new();
         let mut slots: Vec<Result<usize, ServiceError>> = Vec::with_capacity(batch.len());
         for item in batch {
             match &item.query {
                 Ok(q) => {
                     slots.push(Ok(queries.len()));
-                    queries.push((q.clone(), item.energy));
+                    queries.push(PointItem {
+                        query: q.clone(),
+                        energy: item.energy,
+                        deadline,
+                    });
                 }
                 Err(e) => slots.push(Err(e.clone())),
             }
@@ -636,35 +972,110 @@ impl Service {
         }
     }
 
-    fn run_query(&self, env: &Envelope) -> Result<QueryReply, ServiceError> {
-        let map_err = |e: anyhow::Error| ServiceError::usage(format!("{e:#}"));
+    fn program(&self, app: &str, n: u64, bs: u64) -> Result<Arc<TaskProgram>, ServiceError> {
+        let key = (app.to_string(), n, bs);
+        if let Some(p) = lock_unpoisoned(&self.programs).get(&key) {
+            return Ok(Arc::clone(p));
+        }
+        // Built outside the cache lock: program construction is pure.
+        let program = crate::apps::build_app_program(app, n, bs, &self.board)
+            .map_err(|e| ServiceError::usage(format!("{e:#}")))?;
+        let program = Arc::new(program);
+        lock_unpoisoned(&self.programs)
+            .entry(key)
+            .or_insert_with(|| Arc::clone(&program));
+        Ok(program)
+    }
+
+    /// Context fingerprint of one (app, n, bs) context, cached. The
+    /// fingerprint covers program/board/part only — never the swept
+    /// space — so one probe analysis computes it and every later request
+    /// (the hot path) reuses it without touching the program again.
+    fn fingerprint(&self, program: &TaskProgram, key: &(String, u64, u64)) -> u64 {
+        if let Some(fp) = lock_unpoisoned(&self.fingerprints).get(key) {
+            return *fp;
+        }
+        let ctx = SweepContext::new(program, &self.board, self.part.clone());
+        let fp = context_fingerprint(&ctx);
+        lock_unpoisoned(&self.fingerprints).insert(key.clone(), fp);
+        fp
+    }
+
+    fn run_query(
+        &self,
+        env: &Envelope,
+        deadline: Option<Instant>,
+    ) -> Result<QueryReply, ServiceError> {
         match &env.kind {
             RequestKind::Estimate(q) | RequestKind::Energy(q) => {
                 let energy = matches!(env.kind, RequestKind::Energy(_));
-                let mut replies = self.run_point_items(&[(q.clone(), energy)]);
+                let mut replies = self.run_point_items(&[PointItem {
+                    query: q.clone(),
+                    energy,
+                    deadline,
+                }]);
                 replies.pop().expect("one item, one reply")
             }
-            RequestKind::Batch(items) => Ok(self.run_batch(items)),
+            RequestKind::Batch(items) => Ok(self.run_batch(items, deadline)),
             RequestKind::Dse(q) => {
+                if self.degraded() {
+                    self.counters.degraded_rejects.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServiceError::degraded(
+                        "read-only degraded mode (save breaker open): dse sweeps \
+                         evaluate cold points and are rejected",
+                    ));
+                }
                 let program = self.program(&q.app, q.n, q.bs)?;
                 let workers = self.workers();
-                let lane_idx = self.lane_of(&q.app);
+                let key = (q.app.clone(), q.n, q.bs);
+                let route = self.route_of(&program, &key);
                 let reply = {
-                    let mut lane = lock_unpoisoned(&self.lanes[lane_idx]);
+                    let mut guards = self.lock_route(&route);
+                    let p = route
+                        .locks
+                        .iter()
+                        .position(|&l| l == route.primary)
+                        .expect("primary lane is always in the lock set");
                     // Sweeps mutate the memo throughout (bound seeding +
                     // recording), so they run under the write lock; lanes
                     // still overlap on their point-query evaluations.
                     let mut memo = write_unpoisoned(&self.memo);
-                    dse_query(
-                        &program,
-                        &self.board,
-                        &self.part,
-                        q,
-                        workers,
-                        &mut memo,
-                        lane.journal.as_mut(),
-                    )
-                    .map_err(map_err)?
+                    let res = match deadline {
+                        Some(d) => {
+                            let cancel = move || Instant::now() >= d;
+                            dse_query(
+                                &program,
+                                &self.board,
+                                &self.part,
+                                q,
+                                workers,
+                                &mut memo,
+                                guards[p].journal.as_mut(),
+                                Some(&cancel),
+                            )
+                        }
+                        None => dse_query(
+                            &program,
+                            &self.board,
+                            &self.part,
+                            q,
+                            workers,
+                            &mut memo,
+                            guards[p].journal.as_mut(),
+                            None,
+                        ),
+                    };
+                    res.map_err(|e| {
+                        if e.downcast_ref::<SweepCancelled>().is_some() {
+                            self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                            ServiceError::timeout(
+                                "deadline exceeded: sweep cancelled at a round \
+                                 barrier (memo untouched)",
+                            )
+                        } else {
+                            ServiceError::usage(format!("{e:#}"))
+                        }
+                    })?
                 };
                 self.bump_warmth(&reply);
                 self.maybe_save();
@@ -687,7 +1098,7 @@ impl Service {
                     self.lanes.len(),
                     if degraded { ", DEGRADED" } else { "" },
                 ));
-                let extra = crate::metrics::export::service_stats_fields(
+                let mut extra = crate::metrics::export::service_stats_fields(
                     &stats,
                     self.requests(),
                     self.coalesced(),
@@ -698,6 +1109,9 @@ impl Service {
                     self.lanes.len() as u64,
                     degraded,
                 );
+                extra.push(("timeouts".into(), self.timeouts().into()));
+                extra.push(("overloaded".into(), self.overloaded().into()));
+                extra.push(("degraded_rejects".into(), self.degraded_rejects().into()));
                 Ok(QueryReply {
                     text,
                     l1_hits: self.counters.l1_hits.load(Ordering::Relaxed),
@@ -707,6 +1121,13 @@ impl Service {
                 })
             }
             RequestKind::MemoGc(spec) => {
+                if self.degraded() {
+                    self.counters.degraded_rejects.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServiceError::degraded(
+                        "read-only degraded mode (save breaker open): gc rewrites \
+                         the memo file and is rejected",
+                    ));
+                }
                 let (report, n_contexts, n_points, n_kernels) = {
                     let mut memo = write_unpoisoned(&self.memo);
                     let report = match spec.max_bytes {
@@ -753,6 +1174,66 @@ impl Service {
                     ..QueryReply::default()
                 })
             }
+            RequestKind::Health => {
+                let degraded = self.degraded();
+                let draining = self.draining.load(Ordering::SeqCst);
+                let ready = !degraded && !draining;
+                let state = if draining {
+                    "draining"
+                } else if degraded {
+                    "degraded"
+                } else {
+                    "ready"
+                };
+                let inflight = self.inflight_total.load(Ordering::SeqCst);
+                let conns = self.conns.load(Ordering::SeqCst);
+                let memo_bytes = read_unpoisoned(&self.memo).stats().bytes as u64;
+                let depths: Vec<Value> = self
+                    .lane_depth
+                    .iter()
+                    .map(|d| Value::Int(d.load(Ordering::SeqCst) as i64))
+                    .collect();
+                let text = format!(
+                    "health: {state} ({} lanes, {inflight} in flight, {conns} conns, \
+                     memo {memo_bytes} bytes)\n",
+                    self.lanes.len(),
+                );
+                Ok(QueryReply {
+                    text,
+                    extra: vec![
+                        ("ready".into(), Value::Bool(ready)),
+                        ("degraded".into(), Value::Bool(degraded)),
+                        ("draining".into(), Value::Bool(draining)),
+                        ("lanes".into(), (self.lanes.len() as u64).into()),
+                        ("lane_depths".into(), Value::Arr(depths)),
+                        ("inflight".into(), inflight.into()),
+                        ("conns".into(), conns.into()),
+                        ("memo_bytes".into(), memo_bytes.into()),
+                        ("timeouts".into(), self.timeouts().into()),
+                        ("overloaded".into(), self.overloaded().into()),
+                        ("degraded_rejects".into(), self.degraded_rejects().into()),
+                        ("max_queue".into(), (self.cfg.max_queue as u64).into()),
+                        ("max_inflight".into(), (self.cfg.max_inflight as u64).into()),
+                        ("max_conns".into(), (self.cfg.max_conns as u64).into()),
+                        (
+                            "max_line_bytes".into(),
+                            (self.cfg.max_line_bytes as u64).into(),
+                        ),
+                        (
+                            "default_deadline_ms".into(),
+                            match self.cfg.default_deadline_ms {
+                                Some(ms) => ms.into(),
+                                None => Value::Null,
+                            },
+                        ),
+                        (
+                            "breaker_threshold".into(),
+                            u64::from(self.cfg.breaker_threshold).into(),
+                        ),
+                    ],
+                    ..QueryReply::default()
+                })
+            }
             RequestKind::Ping => Ok(QueryReply {
                 text: "pong\n".into(),
                 ..QueryReply::default()
@@ -764,7 +1245,9 @@ impl Service {
     /// Run one coalescable query. The leader (first arrival for the key)
     /// evaluates under panic isolation and fans the result out; followers
     /// wait and clone it, so all coalesced responses are bitwise
-    /// identical and exactly one evaluation happened.
+    /// identical and exactly one evaluation happened. Only deadline-free
+    /// requests enter (see [`Service::handle_line`]), so a leader's
+    /// reply is always valid for its followers.
     fn coalesced_query(&self, key: String, env: &Envelope) -> Result<QueryReply, ServiceError> {
         let cell = {
             let mut inflight = lock_unpoisoned(&self.inflight);
@@ -789,12 +1272,14 @@ impl Service {
                 }
             }
         };
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.run_query(env)))
-            .unwrap_or_else(|_| {
-                Err(ServiceError::usage(
-                    "evaluation panicked (see stderr); request dropped",
-                ))
-            });
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.run_query(env, None)
+        }))
+        .unwrap_or_else(|_| {
+            Err(ServiceError::usage(
+                "evaluation panicked (see stderr); request dropped",
+            ))
+        });
         lock_unpoisoned(&self.inflight).remove(&key);
         *lock_unpoisoned(&cell.slot) = Some(result.clone());
         cell.done.notify_all();
@@ -802,35 +1287,46 @@ impl Service {
     }
 
     /// The window-batched point path (`--batch-window-ms > 0`): the first
-    /// arrival of a lane becomes the window leader, sleeps out the
+    /// arrival of a shard becomes the window leader, sleeps out the
     /// accumulation window while later arrivals enqueue, then runs the
     /// whole window as one batch round and fans the per-request replies
     /// back out — each byte-identical to handling the same arrivals
-    /// sequentially. Windowed queries skip the coalescing table: within a
-    /// batch, a duplicate item is a level-2 hit of its predecessor, which
-    /// is the sequential answer.
-    fn windowed_point(&self, q: &PointQuery, energy: bool) -> Result<QueryReply, ServiceError> {
-        let lane_idx = self.lane_of(&q.app);
+    /// sequentially (including per-item deadline triage). Windowed
+    /// queries skip the coalescing table: within a batch, a duplicate
+    /// item is a level-2 hit of its predecessor, which is the sequential
+    /// answer.
+    fn windowed_point(
+        &self,
+        q: &PointQuery,
+        energy: bool,
+        deadline: Option<Instant>,
+    ) -> Result<QueryReply, ServiceError> {
+        let shard = self.queue_shard(&q.app);
         let cell = Arc::new(InFlight::new());
         let leader = {
-            let mut w = lock_unpoisoned(&self.windows[lane_idx]);
+            let mut w = lock_unpoisoned(&self.windows[shard]);
             w.pending.push(PendingPoint {
                 query: q.clone(),
                 energy,
+                deadline,
                 cell: Arc::clone(&cell),
             });
             !std::mem::replace(&mut w.collecting, true)
         };
         if leader {
-            std::thread::sleep(std::time::Duration::from_millis(self.cfg.batch_window_ms));
+            std::thread::sleep(Duration::from_millis(self.cfg.batch_window_ms));
             let pending = {
-                let mut w = lock_unpoisoned(&self.windows[lane_idx]);
+                let mut w = lock_unpoisoned(&self.windows[shard]);
                 w.collecting = false;
                 std::mem::take(&mut w.pending)
             };
-            let items: Vec<(PointQuery, bool)> = pending
+            let items: Vec<PointItem> = pending
                 .iter()
-                .map(|p| (p.query.clone(), p.energy))
+                .map(|p| PointItem {
+                    query: p.query.clone(),
+                    energy: p.energy,
+                    deadline: p.deadline,
+                })
                 .collect();
             self.counters
                 .batched
@@ -863,8 +1359,31 @@ impl Service {
         }
     }
 
+    /// One `OVERLOADED` response line for a request line that exceeded
+    /// `--max-line-bytes` (the reader consumed it without buffering it,
+    /// so the stream stays in sync and the next line parses normally).
+    fn oversized_line(&self, total: usize) -> String {
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.counters.errors.fetch_add(1, Ordering::Relaxed);
+        self.counters.overloaded.fetch_add(1, Ordering::Relaxed);
+        err_line(
+            &Value::Null,
+            &ServiceError::overloaded(
+                format!(
+                    "request line of {total} bytes exceeds --max-line-bytes {}",
+                    self.cfg.max_line_bytes
+                ),
+                100,
+            ),
+        )
+    }
+
     /// Process one NDJSON line. Returns the response line (None for
-    /// blank input) and whether the daemon should shut down.
+    /// blank input) and whether the daemon should shut down. Work
+    /// requests (`estimate`/`energy`/`batch`/`dse`) pass admission
+    /// control first and hold their admission token until answered;
+    /// probes (`ping`/`health`) and memo maintenance always bypass it so
+    /// an overloaded daemon stays observable.
     pub fn handle_line(&self, line: &str) -> (Option<String>, bool) {
         let line = line.trim();
         if line.is_empty() {
@@ -891,15 +1410,34 @@ impl Service {
             };
             return (Some(ok_line(&env.id, env.req_name(), &reply)), true);
         }
+        let _admit = match &env.kind {
+            RequestKind::Estimate(_)
+            | RequestKind::Energy(_)
+            | RequestKind::Batch(_)
+            | RequestKind::Dse(_) => match self.admit(&env) {
+                Ok(guard) => Some(guard),
+                Err(err) => {
+                    self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    return (Some(err_line(&env.id, &err)), false);
+                }
+            },
+            _ => None,
+        };
+        let deadline = env
+            .deadline_ms
+            .or(self.cfg.default_deadline_ms)
+            .map(|ms| Instant::now() + Duration::from_millis(ms));
         let result = match &env.kind {
             RequestKind::Estimate(q) | RequestKind::Energy(q)
                 if self.cfg.batch_window_ms > 0 =>
             {
-                self.windowed_point(q, matches!(env.kind, RequestKind::Energy(_)))
+                self.windowed_point(q, matches!(env.kind, RequestKind::Energy(_)), deadline)
             }
             _ => match env.coalesce_key() {
-                Some(key) => self.coalesced_query(key, &env),
-                None => self.run_query(&env),
+                // A deadlined request must not join (or lead) a shared
+                // evaluation — followers would inherit the wrong budget.
+                Some(key) if deadline.is_none() => self.coalesced_query(key, &env),
+                _ => self.run_query(&env, deadline),
             },
         };
         match result {
@@ -931,31 +1469,121 @@ impl Service {
     }
 }
 
+/// Outcome of one bounded line read.
+enum LineRead {
+    /// Clean end of stream (no bytes pending).
+    Eof,
+    /// A complete line (or an unterminated final line) is in the buffer.
+    Line,
+    /// The line exceeded the byte limit; it was consumed but never
+    /// buffered whole. Carries the total line length seen.
+    Oversized(usize),
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes into `buf`.
+/// Longer lines are drained from the stream (so the connection stays in
+/// sync for the next request) while the buffer stays bounded at `max` —
+/// a client cannot make the daemon allocate an unbounded line.
+fn read_bounded_line<R: BufRead>(
+    reader: &mut R,
+    max: usize,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut total = 0usize;
+    let mut over = false;
+    loop {
+        let (consumed, found_nl) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(if over {
+                    LineRead::Oversized(total)
+                } else if total == 0 {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line
+                });
+            }
+            let (part, found_nl) = match chunk.iter().position(|&b| b == b'\n') {
+                Some(p) => (&chunk[..p], true),
+                None => (chunk, false),
+            };
+            total += part.len();
+            if !over && total > max {
+                over = true;
+                buf.clear();
+            }
+            if !over {
+                buf.extend_from_slice(part);
+            }
+            (part.len() + usize::from(found_nl), found_nl)
+        };
+        reader.consume(consumed);
+        if found_nl {
+            return Ok(if over {
+                LineRead::Oversized(total)
+            } else {
+                LineRead::Line
+            });
+        }
+    }
+}
+
 /// One NDJSON connection loop over any buffered reader/writer pair.
-/// Returns `true` when the peer asked for shutdown.
-fn serve_connection<R: BufRead, W: Write>(svc: &Service, reader: R, mut writer: W) -> bool {
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        let (response, quit) = svc.handle_line(&line);
+/// Returns `true` when the peer asked for shutdown. A read error, write
+/// error or injected `conn.read`/`conn.write` fault ends the connection
+/// exactly like a client disconnect: requests not yet admitted die
+/// unanswered, the request in flight (if any) completed before its
+/// response write failed, and the shared service state stays consistent.
+fn serve_connection<R: BufRead, W: Write>(svc: &Service, mut reader: R, mut writer: W) -> bool {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if faultpoint::hit("conn.read").is_err() {
+            return false;
+        }
+        let read = match read_bounded_line(&mut reader, svc.cfg.max_line_bytes, &mut buf) {
+            Ok(r) => r,
+            Err(_) => return false,
+        };
+        let (response, quit) = match read {
+            LineRead::Eof => return false,
+            LineRead::Oversized(total) => (Some(svc.oversized_line(total)), false),
+            LineRead::Line => svc.handle_line(&String::from_utf8_lossy(&buf)),
+        };
         if let Some(r) = response {
-            if writeln!(writer, "{r}").and_then(|_| writer.flush()).is_err() {
-                break;
+            let wrote = faultpoint::hit("conn.write")
+                .map_err(|e| std::io::Error::other(format!("{e:#}")))
+                .and_then(|()| writeln!(writer, "{r}"))
+                .and_then(|()| writer.flush());
+            if wrote.is_err() {
+                return false;
             }
         }
         if quit {
             return true;
         }
         if svc.is_shutdown() {
-            break;
+            return false;
         }
     }
-    false
+}
+
+/// Decrements the live-connection count when a TCP connection thread
+/// ends, however it ends.
+struct ConnGuard(Arc<Service>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Accept loop of the TCP transport: non-blocking accept polled against
-/// the shutdown flag, one thread per connection. A `shutdown` request on
-/// a TCP connection finalizes and exits the whole process (stdin cannot
-/// be unblocked portably).
+/// the shutdown flag, one thread per connection, `--max-conns` enforced
+/// at accept (excess connections get one `OVERLOADED` line and are
+/// closed without a thread). A `shutdown` request on a TCP connection
+/// finalizes and exits the whole process (stdin cannot be unblocked
+/// portably).
 fn serve_tcp(svc: Arc<Service>, listener: std::net::TcpListener) {
     listener
         .set_nonblocking(true)
@@ -966,8 +1594,27 @@ fn serve_tcp(svc: Arc<Service>, listener: std::net::TcpListener) {
         }
         match listener.accept() {
             Ok((stream, _)) => {
+                if svc.conns.load(Ordering::SeqCst) >= svc.cfg.max_conns as u64 {
+                    svc.counters.overloaded.fetch_add(1, Ordering::Relaxed);
+                    let err = ServiceError::overloaded(
+                        format!("connection limit reached (--max-conns {})", svc.cfg.max_conns),
+                        1000,
+                    );
+                    let _ = writeln!(&mut &stream, "{}", err_line(&Value::Null, &err));
+                    continue;
+                }
+                svc.conns.fetch_add(1, Ordering::SeqCst);
+                if svc.cfg.write_timeout_ms > 0 {
+                    // A peer that stops reading blocks our writes; the
+                    // timeout turns that into a write error, which ends
+                    // the connection like a disconnect.
+                    let _ = stream.set_write_timeout(Some(Duration::from_millis(
+                        svc.cfg.write_timeout_ms,
+                    )));
+                }
                 let svc = Arc::clone(&svc);
                 std::thread::spawn(move || {
+                    let _guard = ConnGuard(Arc::clone(&svc));
                     let reader = std::io::BufReader::new(match stream.try_clone() {
                         Ok(s) => s,
                         Err(_) => return,
@@ -979,10 +1626,49 @@ fn serve_tcp(svc: Arc<Service>, listener: std::net::TcpListener) {
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(25));
+                std::thread::sleep(Duration::from_millis(25));
             }
             Err(_) => return,
         }
+    }
+}
+
+/// SIGTERM latch. The handler is a single atomic store (async-signal-
+/// safe); the drain monitor thread polls [`term::pending`] and performs
+/// the actual drain outside signal context.
+#[cfg(unix)]
+mod term {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the SIGTERM handler (libc `signal`, declared here to keep
+    /// the build dependency-free).
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+        }
+    }
+
+    pub fn pending() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod term {
+    pub fn install() {}
+
+    pub fn pending() -> bool {
+        false
     }
 }
 
@@ -994,7 +1680,10 @@ pub fn serve(board: BoardConfig, cfg: ServeConfig) -> anyhow::Result<i32> {
 }
 
 /// [`serve`] with a prebuilt service — lets callers distinguish
-/// construction failures (memo load) from runtime ones (bind).
+/// construction failures (memo load) from runtime ones (bind). Installs
+/// the SIGTERM drain: on the first SIGTERM the daemon stops admitting
+/// work, waits for the in-flight requests to finish, saves the memo and
+/// exits with the usual clean/degraded code.
 pub fn run(svc: Service) -> anyhow::Result<i32> {
     let listen = svc.cfg.listen.clone();
     if svc.lanes() > 1 || svc.cfg.batch_window_ms > 0 {
@@ -1005,6 +1694,33 @@ pub fn run(svc: Service) -> anyhow::Result<i32> {
         );
     }
     let svc = Arc::new(svc);
+    term::install();
+    {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || loop {
+            if svc.is_shutdown() {
+                return;
+            }
+            if term::pending() {
+                svc.draining.store(true, Ordering::SeqCst);
+                eprintln!(
+                    "serve: SIGTERM — draining ({} in flight)",
+                    svc.inflight_total.load(Ordering::SeqCst)
+                );
+                while svc.inflight_total.load(Ordering::SeqCst) > 0 {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                let code = svc.finalize();
+                if code == 0 {
+                    eprintln!("serve: drained and saved (SIGTERM)");
+                } else {
+                    eprintln!("serve: drained, DEGRADED (SIGTERM; memo save failed, WAL retained)");
+                }
+                std::process::exit(code);
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        });
+    }
     if let Some(addr) = listen {
         let listener = std::net::TcpListener::bind(&addr)
             .map_err(|e| anyhow::anyhow!("serve: cannot listen on {addr}: {e}"))?;
@@ -1098,6 +1814,9 @@ mod tests {
         assert_eq!(get_u64(&stats, "total_evaluated"), 1);
         assert_eq!(get_u64(&stats, "requests"), 3);
         assert_eq!(get_u64(&stats, "lanes"), 1);
+        assert_eq!(get_u64(&stats, "timeouts"), 0);
+        assert_eq!(get_u64(&stats, "overloaded"), 0);
+        assert_eq!(get_u64(&stats, "degraded_rejects"), 0);
         let (gc, _) = svc.handle_line(r#"{"req":"memo","action":"gc","max_bytes":0,"app_floor":1}"#);
         let gc = parse(&gc.unwrap()).unwrap();
         assert_eq!(
@@ -1177,5 +1896,210 @@ mod tests {
         let (b, _) = plain.handle_line(req);
         assert_eq!(a, b, "the window changes latency, never bytes");
         assert_eq!(windowed.batched(), 1);
+    }
+
+    #[test]
+    fn deadline_zero_times_out_cold_points_but_serves_memo_hits() {
+        let svc = service();
+        let warm = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"]}"#;
+        svc.handle_line(warm).0.unwrap();
+        let (plain, _) = svc.handle_line(warm);
+        let with_deadline =
+            r#"{"id":1,"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U32"],"deadline_ms":0}"#;
+        let (hit, _) = svc.handle_line(with_deadline);
+        assert_eq!(
+            plain.unwrap(),
+            hit.unwrap(),
+            "an expired deadline never blocks a memo hit, and bytes match the plain hit"
+        );
+        let cold =
+            r#"{"id":2,"req":"estimate","app":"matmul","n":256,"accel":["mxm64:U8"],"deadline_ms":0}"#;
+        let (t, _) = svc.handle_line(cold);
+        let t = parse(&t.unwrap()).unwrap();
+        assert_eq!(get_u64(&t, "code"), 4);
+        assert_eq!(t.get("kind").and_then(|x| x.as_str()), Some("TIMEOUT"));
+        assert_eq!(svc.timeouts(), 1);
+        assert_eq!(svc.evaluated(), 1, "the timed-out point never evaluated");
+    }
+
+    #[test]
+    fn dse_deadline_cancels_at_the_barrier_and_leaves_the_memo_cold() {
+        let svc = service();
+        let (resp, _) =
+            svc.handle_line(r#"{"id":3,"req":"dse","app":"matmul","n":128,"top":3,"deadline_ms":0}"#);
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(get_u64(&v, "code"), 4);
+        assert_eq!(v.get("kind").and_then(|x| x.as_str()), Some("TIMEOUT"));
+        assert_eq!(svc.timeouts(), 1);
+        assert_eq!(svc.evaluated(), 0, "a cancelled sweep records nothing");
+        let (ok, _) = svc.handle_line(r#"{"id":4,"req":"dse","app":"matmul","n":128,"top":3}"#);
+        let ok = parse(&ok.unwrap()).unwrap();
+        assert_eq!(
+            ok.get("ok").and_then(|x| x.as_bool()),
+            Some(true),
+            "the same sweep without a deadline still runs"
+        );
+    }
+
+    #[test]
+    fn admission_rejects_work_over_capacity_but_serves_probes() {
+        let svc = Service::new(
+            BoardConfig::zynq706(),
+            ServeConfig {
+                max_inflight: 0,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let (resp, _) =
+            svc.handle_line(r#"{"id":5,"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U8"]}"#);
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(get_u64(&v, "code"), 5);
+        assert_eq!(v.get("kind").and_then(|x| x.as_str()), Some("OVERLOADED"));
+        assert!(get_u64(&v, "retry_after_ms") >= 1, "backoff hint present");
+        let (ping, _) = svc.handle_line(r#"{"req":"ping"}"#);
+        let ping = parse(&ping.unwrap()).unwrap();
+        assert_eq!(ping.get("ok").and_then(|x| x.as_bool()), Some(true));
+        let (health, _) = svc.handle_line(r#"{"req":"health"}"#);
+        let health = parse(&health.unwrap()).unwrap();
+        assert_eq!(health.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(svc.overloaded(), 1);
+        assert_eq!(svc.evaluated(), 0);
+    }
+
+    #[test]
+    fn health_probe_reports_readiness_and_limits() {
+        let svc = service();
+        let (resp, quit) = svc.handle_line(r#"{"id":6,"req":"health"}"#);
+        assert!(!quit);
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(v.get("ready").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(v.get("degraded").and_then(|x| x.as_bool()), Some(false));
+        assert_eq!(v.get("draining").and_then(|x| x.as_bool()), Some(false));
+        assert_eq!(get_u64(&v, "lanes"), 1);
+        assert_eq!(get_u64(&v, "inflight"), 0);
+        assert_eq!(get_u64(&v, "max_queue"), 64);
+        let Some(Value::Arr(depths)) = v.get("lane_depths") else {
+            panic!("health carries per-lane queue depths");
+        };
+        assert_eq!(depths.len(), 1);
+    }
+
+    #[test]
+    fn draining_service_rejects_new_work_but_probes_still_answer() {
+        let svc = service();
+        svc.draining.store(true, Ordering::SeqCst);
+        let (resp, _) =
+            svc.handle_line(r#"{"id":7,"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U8"]}"#);
+        let v = parse(&resp.unwrap()).unwrap();
+        assert_eq!(get_u64(&v, "code"), 5);
+        assert_eq!(v.get("kind").and_then(|x| x.as_str()), Some("OVERLOADED"));
+        let (health, _) = svc.handle_line(r#"{"req":"health"}"#);
+        let health = parse(&health.unwrap()).unwrap();
+        assert_eq!(health.get("ready").and_then(|x| x.as_bool()), Some(false));
+        assert_eq!(health.get("draining").and_then(|x| x.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn kernel_group_router_keeps_overlapping_contexts_on_intersecting_lanes() {
+        let mut r = LaneRouter::new(4);
+        let ka = ("a".to_string(), 128u64, 32u64);
+        let kb = ("b".to_string(), 128, 32);
+        let kc = ("c".to_string(), 128, 32);
+        let ra = r.assign(&ka, &[1, 2]);
+        let rb = r.assign(&kb, &[3]);
+        let rc = r.assign(&kc, &[2, 3]);
+        assert_eq!(ra.locks, vec![ra.primary], "fresh kernels take one lane");
+        assert_eq!(rb.locks, vec![rb.primary]);
+        assert!(
+            rc.locks.contains(&ra.primary),
+            "sharing kernel 2 pulls in a's lane"
+        );
+        assert!(
+            rc.locks.contains(&rb.primary),
+            "sharing kernel 3 pulls in b's lane"
+        );
+        let mut sorted = rc.locks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(rc.locks, sorted, "lock sets are ascending and deduplicated");
+        assert!(rc.locks.contains(&rc.primary));
+        assert_eq!(r.cached(&kc), Some(rc), "routes are immutable once assigned");
+        assert_eq!(
+            r.assign(&ka, &[1, 2]),
+            ra,
+            "re-assigning an existing context returns its cached route"
+        );
+        let mut single = LaneRouter::new(1);
+        assert_eq!(single.assign(&ka, &[1, 2]).locks, vec![0]);
+    }
+
+    #[test]
+    fn bounded_reader_rejects_oversized_lines_and_keeps_the_stream_in_sync() {
+        let svc = Service::new(
+            BoardConfig::zynq706(),
+            ServeConfig {
+                max_line_bytes: 64,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let input = format!("{}\n{}\n", "x".repeat(200), r#"{"req":"ping"}"#);
+        let mut out: Vec<u8> = Vec::new();
+        let quit = serve_connection(&svc, std::io::Cursor::new(input.into_bytes()), &mut out);
+        assert!(!quit);
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+        assert_eq!(lines.len(), 2, "one response per line, oversized included");
+        let first = parse(lines[0]).unwrap();
+        assert_eq!(get_u64(&first, "code"), 5);
+        assert_eq!(first.get("kind").and_then(|x| x.as_str()), Some("OVERLOADED"));
+        let second = parse(lines[1]).unwrap();
+        assert_eq!(second.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(svc.overloaded(), 1);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn repeated_save_failures_trip_the_breaker_into_read_only_mode() {
+        // Deleting the memo's directory makes every subsequent save fail
+        // for real (no faultpoints here — arming a real site would leak
+        // into unrelated lib tests; see util::faultpoint's test notes).
+        // The open WAL handles survive the unlink on unix.
+        let dir = std::env::temp_dir().join(format!("zynq-breaker-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let svc = Service::new(
+            BoardConfig::zynq706(),
+            ServeConfig {
+                memo_path: Some(dir.join("m.memo")),
+                breaker_threshold: 2,
+                save_every: 1_000_000,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        svc.handle_line(r#"{"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U8"]}"#);
+        std::fs::remove_dir_all(&dir).unwrap();
+        svc.handle_line(r#"{"req":"memo","action":"gc","max_bytes":1000000,"app_floor":1}"#);
+        assert!(!svc.degraded(), "one failure stays under the threshold");
+        svc.handle_line(r#"{"req":"memo","action":"gc","max_bytes":1000000,"app_floor":1}"#);
+        assert!(svc.degraded(), "two consecutive failures trip the breaker");
+        let (hit, _) =
+            svc.handle_line(r#"{"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U8"]}"#);
+        let hit = parse(&hit.unwrap()).unwrap();
+        assert_eq!(
+            hit.get("ok").and_then(|x| x.as_bool()),
+            Some(true),
+            "memo hits still serve read-only"
+        );
+        let (cold, _) =
+            svc.handle_line(r#"{"req":"estimate","app":"matmul","n":128,"accel":["mxm64:U16"]}"#);
+        let cold = parse(&cold.unwrap()).unwrap();
+        assert_eq!(get_u64(&cold, "code"), 6);
+        assert_eq!(cold.get("kind").and_then(|x| x.as_str()), Some("DEGRADED"));
+        let (dse, _) = svc.handle_line(r#"{"req":"dse","app":"matmul","n":128,"top":2}"#);
+        assert_eq!(get_u64(&parse(&dse.unwrap()).unwrap(), "code"), 6);
+        assert!(svc.degraded_rejects() >= 2);
+        assert_eq!(svc.finalize(), 1, "a degraded daemon exits non-zero");
     }
 }

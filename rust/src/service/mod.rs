@@ -17,11 +17,15 @@
 //!   ([`pre_evaluate`] + [`point_query_prepared`]) evaluates many cold
 //!   points in one worker-pool round without changing a response byte.
 //! * [`daemon`] — the [`Service`] runtime: shared memo behind a
-//!   read/write lock, app-sharded memo lanes with per-shard WAL
+//!   read/write lock, kernel-group memo lanes with per-shard WAL
 //!   journals (`--lanes`), cross-request batch evaluation (explicit
 //!   envelopes and the `--batch-window-ms` accumulation window),
 //!   in-flight coalescing, periodic persistence, stdio and TCP
-//!   transports.
+//!   transports — plus the overload controls: per-request deadlines
+//!   with round-barrier sweep cancellation, admission control and
+//!   backpressure (`--max-queue`/`--max-inflight`/`--max-conns`/
+//!   `--max-line-bytes`), the save circuit breaker's read-only degraded
+//!   mode, the `{"req":"health"}` probe, and SIGTERM draining.
 //!
 //! [`EvalMemo`]: crate::dse::EvalMemo
 

@@ -16,6 +16,9 @@
 //! {"id": 5, "req": "memo", "action": "gc", "max_bytes": 65536, "app_floor": 1}
 //! {"id": 6, "req": "ping"}
 //! {"id": 7, "req": "shutdown"}
+//! {"id": 9, "req": "health"}
+//! {"id": 10, "req": "estimate", "app": "matmul", "accel": ["mxm64:U32"],
+//!  "deadline_ms": 250}
 //! {"id": 8, "req": "batch", "items": [
 //!    {"id": "a", "req": "estimate", "app": "matmul", "accel": ["mxm64:U32"]},
 //!    {"id": "b", "req": "energy",   "app": "lu",     "accel": ["trsm_row:U16"]}]}
@@ -36,7 +39,15 @@
 //! `f64` bit patterns (the memo convention — lossless round-trips).
 //! Failures carry `"ok": false` plus a `"code"` that mirrors the CLI exit
 //! code taxonomy: `1` for malformed/unsatisfiable requests, `2` for an
-//! unknown `"req"`, `3` for corrupt input files.
+//! unknown `"req"`, `3` for corrupt input files. Overload-control
+//! failures extend the taxonomy with `4` (`"kind":"TIMEOUT"` — the
+//! request's `deadline_ms` expired before evaluation could start or
+//! between sweep rounds), `5` (`"kind":"OVERLOADED"` — admission was
+//! refused, with a `"retry_after_ms"` backoff hint) and `6`
+//! (`"kind":"DEGRADED"` — persistence is broken and the daemon answers
+//! memo hits only). Any query request accepts an optional
+//! `"deadline_ms"` budget; `{"req":"health"}` probes readiness without
+//! consuming admission capacity.
 
 use crate::config::{AccelSpec, CoDesign};
 use crate::dse::{Objective, OrderMode};
@@ -45,29 +56,69 @@ use crate::util::json::{obj, parse, Value};
 /// A structured service failure: the `code` mirrors the CLI exit-code
 /// taxonomy (1 usage/runtime, 2 unknown request, 3 corrupt input), so a
 /// client scripting against the daemon sees the same classification a
-/// shell script sees from the one-shot CLI.
+/// shell script sees from the one-shot CLI. Overload-control failures
+/// (codes 4–6) additionally carry a machine-readable `kind` tag and, for
+/// `OVERLOADED`, a `retry_after_ms` backoff hint.
 #[derive(Clone, Debug)]
 pub struct ServiceError {
     /// CLI-taxonomy error class.
     pub code: i64,
     /// Human-readable message.
     pub message: String,
+    /// Machine-readable class tag for overload-control errors
+    /// (`TIMEOUT` / `OVERLOADED` / `DEGRADED`); absent on the classic
+    /// codes 1–3.
+    pub kind: Option<&'static str>,
+    /// Suggested client backoff before retrying (OVERLOADED only).
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ServiceError {
+    fn new(code: i64, msg: impl Into<String>) -> Self {
+        Self {
+            code,
+            message: msg.into(),
+            kind: None,
+            retry_after_ms: None,
+        }
+    }
+
     /// A usage/runtime error (CLI exit code 1).
     pub fn usage(msg: impl Into<String>) -> Self {
-        Self {
-            code: 1,
-            message: msg.into(),
-        }
+        Self::new(1, msg)
     }
 
     /// An unknown-request error (CLI exit code 2).
     pub fn unknown(msg: impl Into<String>) -> Self {
+        Self::new(2, msg)
+    }
+
+    /// A deadline-exceeded error (code 4, `kind:"TIMEOUT"`): the
+    /// request's budget expired before evaluation could start or at a
+    /// sweep round boundary.
+    pub fn timeout(msg: impl Into<String>) -> Self {
         Self {
-            code: 2,
-            message: msg.into(),
+            kind: Some("TIMEOUT"),
+            ..Self::new(4, msg)
+        }
+    }
+
+    /// An admission-refused error (code 5, `kind:"OVERLOADED"`) with a
+    /// client backoff hint in milliseconds.
+    pub fn overloaded(msg: impl Into<String>, retry_after_ms: u64) -> Self {
+        Self {
+            kind: Some("OVERLOADED"),
+            retry_after_ms: Some(retry_after_ms),
+            ..Self::new(5, msg)
+        }
+    }
+
+    /// A read-only-mode error (code 6, `kind:"DEGRADED"`): persistence is
+    /// broken, the daemon answers memo hits but refuses cold evaluations.
+    pub fn degraded(msg: impl Into<String>) -> Self {
+        Self {
+            kind: Some("DEGRADED"),
+            ..Self::new(6, msg)
         }
     }
 }
@@ -173,6 +224,9 @@ pub enum RequestKind {
     MemoGc(GcSpec),
     /// Liveness probe.
     Ping,
+    /// Readiness/overload probe: lane depths, memo bytes, limit and
+    /// degraded/draining flags. Never consumes admission capacity.
+    Health,
     /// Save the memo and stop the daemon.
     Shutdown,
 }
@@ -184,6 +238,9 @@ pub struct Envelope {
     pub id: Value,
     /// The parsed request.
     pub kind: RequestKind,
+    /// Per-request deadline budget in milliseconds (`"deadline_ms"`);
+    /// `None` falls back to the daemon's `--default-deadline-ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Envelope {
@@ -230,6 +287,7 @@ impl Envelope {
             RequestKind::Dse(_) => "dse",
             RequestKind::MemoStats | RequestKind::MemoGc(_) => "memo",
             RequestKind::Ping => "ping",
+            RequestKind::Health => "health",
             RequestKind::Shutdown => "shutdown",
         }
     }
@@ -420,14 +478,27 @@ pub fn parse_request(line: &str) -> Result<Envelope, (Value, ServiceError)> {
             }
         },
         "ping" => RequestKind::Ping,
+        "health" => RequestKind::Health,
         "shutdown" => RequestKind::Shutdown,
         other => {
             return Err(fail(ServiceError::unknown(format!(
-                "unknown request '{other}' (estimate|energy|batch|dse|memo|ping|shutdown)"
+                "unknown request '{other}' (estimate|energy|batch|dse|memo|ping|health|shutdown)"
             ))))
         }
     };
-    Ok(Envelope { id, kind })
+    let deadline_ms = match v.get("deadline_ms") {
+        None | Some(Value::Null) => None,
+        Some(x) => Some(x.as_u64().ok_or_else(|| {
+            fail(ServiceError::usage(
+                "'deadline_ms' expects a non-negative integer",
+            ))
+        })?),
+    };
+    Ok(Envelope {
+        id,
+        kind,
+        deadline_ms,
+    })
 }
 
 /// What a successful query produced: the CLI-identical text plus the
@@ -472,13 +543,22 @@ pub fn ok_line(id: &Value, req: &str, reply: &QueryReply) -> String {
 }
 
 /// Build an error response object (top-level lines and batch items alike).
+/// Overload-control errors additionally carry their `kind` tag and, when
+/// present, the `retry_after_ms` backoff hint.
 pub fn err_obj(id: &Value, err: &ServiceError) -> Value {
-    obj(vec![
+    let mut fields: Vec<(&str, Value)> = vec![
         ("id", id.clone()),
         ("ok", false.into()),
         ("code", err.code.into()),
         ("error", err.message.as_str().into()),
-    ])
+    ];
+    if let Some(kind) = err.kind {
+        fields.push(("kind", kind.into()));
+    }
+    if let Some(ms) = err.retry_after_ms {
+        fields.push(("retry_after_ms", ms.into()));
+    }
+    obj(fields)
 }
 
 /// Serialize an error response line (no trailing newline).
@@ -598,6 +678,48 @@ mod tests {
             vec!["{}"; MAX_BATCH_ITEMS + 1].join(",")
         );
         assert_eq!(parse_request(&oversized).unwrap_err().1.code, 1);
+    }
+
+    #[test]
+    fn deadline_health_and_overload_errors_round_trip() {
+        // deadline_ms is optional on every request and must be an integer.
+        let e = parse_request(
+            r#"{"id":1,"req":"estimate","app":"matmul","accel":[],"deadline_ms":250}"#,
+        )
+        .unwrap();
+        assert_eq!(e.deadline_ms, Some(250));
+        assert_eq!(
+            parse_request(r#"{"req":"ping"}"#).unwrap().deadline_ms,
+            None
+        );
+        assert_eq!(
+            parse_request(r#"{"req":"ping","deadline_ms":"soon"}"#)
+                .unwrap_err()
+                .1
+                .code,
+            1
+        );
+        // health parses and never coalesces.
+        let h = parse_request(r#"{"id":2,"req":"health"}"#).unwrap();
+        assert!(matches!(h.kind, RequestKind::Health));
+        assert_eq!(h.req_name(), "health");
+        assert!(h.coalesce_key().is_none());
+        // Overload-control errors serialize their kind (and backoff hint).
+        let t = err_obj(&Value::Null, &ServiceError::timeout("deadline exceeded"));
+        assert_eq!(t.get("code").and_then(Value::as_i64), Some(4));
+        assert_eq!(t.get("kind").and_then(Value::as_str), Some("TIMEOUT"));
+        assert!(t.get("retry_after_ms").is_none());
+        let o = err_obj(&Value::Null, &ServiceError::overloaded("lane queue full", 40));
+        assert_eq!(o.get("code").and_then(Value::as_i64), Some(5));
+        assert_eq!(o.get("kind").and_then(Value::as_str), Some("OVERLOADED"));
+        assert_eq!(o.get("retry_after_ms").and_then(Value::as_u64), Some(40));
+        let d = err_obj(&Value::Null, &ServiceError::degraded("memo save failing"));
+        assert_eq!(d.get("code").and_then(Value::as_i64), Some(6));
+        assert_eq!(d.get("kind").and_then(Value::as_str), Some("DEGRADED"));
+        // Classic codes stay untagged — batch-item bytes are unchanged.
+        let u = err_obj(&Value::Null, &ServiceError::usage("nope"));
+        assert!(u.get("kind").is_none());
+        assert!(u.get("retry_after_ms").is_none());
     }
 
     #[test]

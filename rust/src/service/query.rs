@@ -299,6 +299,14 @@ pub fn point_query_prepared(
 /// wall-clock timing lines, which are inherently not part of the
 /// byte-identity contract). Freshly evaluated points are journaled as one
 /// committed WAL round.
+///
+/// `cancel`, when present, is the daemon's per-request deadline hook,
+/// polled at chunk-synchronous round barriers only (see
+/// [`SweepContext::explore_warm_cancellable`]): a cancelled sweep
+/// surfaces [`crate::dse::SweepCancelled`] (downcastable from the
+/// returned error) and leaves the memo **byte-identical** — nothing is
+/// recorded or journaled.
+#[allow(clippy::too_many_arguments)]
 pub fn dse_query(
     program: &TaskProgram,
     board: &BoardConfig,
@@ -307,6 +315,7 @@ pub fn dse_query(
     workers: usize,
     memo: &mut EvalMemo,
     journal: Option<&mut SweepJournal>,
+    cancel: Option<&(dyn Fn() -> bool + Sync)>,
 ) -> anyhow::Result<QueryReply> {
     let mut space = DseSpace::from_program(program);
     space.mixed = q.mixed;
@@ -317,7 +326,10 @@ pub fn dse_query(
         .into_iter()
         .map(|(k, _)| k)
         .collect();
-    let (points, stats) = ctx.explore_warm(&space, memo, q.objective, workers, q.order);
+    let (points, stats) = match cancel {
+        Some(c) => ctx.explore_warm_cancellable(&space, memo, q.objective, workers, q.order, c)?,
+        None => ctx.explore_warm(&space, memo, q.objective, workers, q.order),
+    };
     if let Some(j) = journal {
         // Journal exactly the delta this sweep added, as one round.
         let mut fresh = 0usize;
@@ -415,7 +427,7 @@ mod tests {
             mixed: false,
             order: OrderMode::Ranked,
         };
-        let reply = dse_query(&program, &board, &part, &q, 2, &mut memo, None).unwrap();
+        let reply = dse_query(&program, &board, &part, &q, 2, &mut memo, None, None).unwrap();
         assert!(reply.evaluated > 0);
         let cd = codesign();
         let out = point_query(
@@ -426,6 +438,54 @@ mod tests {
             out.hit,
             "estimate of a swept co-design must hit the dse-recorded entry"
         );
+    }
+
+    #[test]
+    fn cancelled_dse_query_surfaces_sweep_cancelled_and_spares_the_memo() {
+        let (program, board, part) = fixture();
+        let mut memo = EvalMemo::new();
+        let before = memo.to_json();
+        let q = DseQuery {
+            app: "matmul".into(),
+            n: 256,
+            bs: 64,
+            objective: Objective::Time,
+            top: 5,
+            mixed: false,
+            order: OrderMode::Ranked,
+        };
+        let err = dse_query(
+            &program,
+            &board,
+            &part,
+            &q,
+            2,
+            &mut memo,
+            None,
+            Some(&(|| true)),
+        )
+        .unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::dse::SweepCancelled>().is_some(),
+            "{err:#}"
+        );
+        assert_eq!(memo.to_json(), before, "cancelled dse touched the memo");
+        // A hook that never fires answers byte-identically to the plain path.
+        let cancellable = dse_query(
+            &program,
+            &board,
+            &part,
+            &q,
+            2,
+            &mut memo,
+            None,
+            Some(&(|| false)),
+        )
+        .unwrap();
+        let mut memo2 = EvalMemo::new();
+        let plain = dse_query(&program, &board, &part, &q, 2, &mut memo2, None, None).unwrap();
+        assert_eq!(cancellable.text, plain.text);
+        assert_eq!(memo.to_json(), memo2.to_json());
     }
 
     #[test]

@@ -1,0 +1,629 @@
+//! Chaos conformance suite for `zynq-estimator serve` under load and
+//! failure: floods past the admission limits, hostile and oversized
+//! request lines, abrupt client disconnects, injected connection and
+//! save faults, SIGTERM mid-session. The invariants pinned here are the
+//! overload contract's:
+//!
+//! * every request a transport accepts is answered by exactly one
+//!   response line — structured error or result, never silence, never a
+//!   desynced stream;
+//! * shedding load (`OVERLOADED`), expiring deadlines (`TIMEOUT`) and
+//!   read-only degradation (`DEGRADED`) are structured responses, not
+//!   process deaths;
+//! * no chaos run ever corrupts the memo: whatever was saved stays
+//!   loadable and byte-identical to an unfaulted session's save.
+//!
+//! Like `service_conformance`, everything runs black-box against the
+//! real binary; faults arrive through `ZYNQ_FAULTS`, exactly as a
+//! deployment would inject them.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+use zynq_estimator::util::json::{parse, Value};
+use zynq_estimator::util::Rng;
+
+const EXE: &str = env!("CARGO_BIN_EXE_zynq-estimator");
+
+const EST_A: &str = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"]}"#;
+const EST_B: &str = r#"{"id":2,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U16"]}"#;
+const LU_A: &str = r#"{"id":3,"req":"estimate","app":"lu","n":256,"bs":64,"accel":["trsm_row:U16"]}"#;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("zynq_chaos_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One daemon child with its NDJSON pipe pair (stdio transport).
+struct Daemon {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl Daemon {
+    fn spawn(args: &[&str], faults: Option<&str>) -> Daemon {
+        let mut cmd = Command::new(EXE);
+        cmd.arg("serve").args(args);
+        cmd.stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        match faults {
+            Some(f) => cmd.env("ZYNQ_FAULTS", f),
+            None => cmd.env_remove("ZYNQ_FAULTS"),
+        };
+        let mut child = cmd.spawn().expect("spawn serve daemon");
+        let stdin = child.stdin.take().unwrap();
+        let stdout = BufReader::new(child.stdout.take().unwrap());
+        Daemon {
+            child,
+            stdin: Some(stdin),
+            stdout,
+        }
+    }
+
+    /// Send one request line, read one response line. `None` when the
+    /// daemon died instead of answering.
+    fn request(&mut self, line: &str) -> Option<Value> {
+        let stdin = self.stdin.as_mut().expect("stdin already closed");
+        if writeln!(stdin, "{line}").and_then(|_| stdin.flush()).is_err() {
+            return None;
+        }
+        let mut buf = String::new();
+        match self.stdout.read_line(&mut buf) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(parse(buf.trim_end()).expect("response must be one JSON object")),
+        }
+    }
+
+    fn wait(mut self) -> std::process::ExitStatus {
+        drop(self.stdin.take());
+        self.child.wait().expect("wait on daemon")
+    }
+}
+
+fn shutdown_clean(mut daemon: Daemon) {
+    let resp = daemon.request(r#"{"req":"shutdown"}"#).expect("shutdown ack");
+    assert!(is_ok(&resp), "{resp:?}");
+    assert_eq!(resp.get("exit_code").and_then(|v| v.as_i64()), Some(0));
+    let status = daemon.wait();
+    assert!(status.success(), "clean shutdown must exit 0: {status:?}");
+}
+
+fn is_ok(v: &Value) -> bool {
+    v.get("ok").and_then(|x| x.as_bool()) == Some(true)
+}
+
+fn u(v: &Value, key: &str) -> u64 {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .unwrap_or_else(|| panic!("missing u64 field '{key}' in {v:?}"))
+}
+
+fn kind(v: &Value) -> Option<&str> {
+    v.get("kind").and_then(|x| x.as_str())
+}
+
+/// Spawn `serve --listen 127.0.0.1:0 <args>` and parse the bound
+/// address off stderr (port 0 always — fixed ports collide across
+/// parallel CI jobs). stdin and the stderr reader stay alive with the
+/// caller so the child never sees a closed pipe.
+fn spawn_tcp(
+    args: &[&str],
+    faults: Option<&str>,
+) -> (
+    Child,
+    ChildStdin,
+    String,
+    BufReader<std::process::ChildStderr>,
+) {
+    let mut cmd = Command::new(EXE);
+    cmd.arg("serve").args(args).args(["--listen", "127.0.0.1:0"]);
+    cmd.stdin(Stdio::piped())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped());
+    match faults {
+        Some(f) => cmd.env("ZYNQ_FAULTS", f),
+        None => cmd.env_remove("ZYNQ_FAULTS"),
+    };
+    let mut child = cmd.spawn().expect("spawn TCP daemon");
+    let stdin = child.stdin.take().unwrap();
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        assert!(
+            stderr.read_line(&mut line).unwrap() > 0,
+            "daemon exited before announcing its listener"
+        );
+        if let Some(rest) = line.trim().strip_prefix("serve: listening on ") {
+            break rest.to_string();
+        }
+    };
+    (child, stdin, addr, stderr)
+}
+
+/// One TCP client: send a line, read a line.
+struct TcpClient {
+    stream: std::net::TcpStream,
+    reader: BufReader<std::net::TcpStream>,
+}
+
+impl TcpClient {
+    fn connect(addr: &str) -> TcpClient {
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        TcpClient { stream, reader }
+    }
+
+    /// `None` when the connection died instead of answering.
+    fn request(&mut self, line: &str) -> Option<Value> {
+        if writeln!(&mut self.stream, "{line}").is_err() {
+            return None;
+        }
+        let mut buf = String::new();
+        match self.reader.read_line(&mut buf) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(parse(buf.trim_end()).expect("response must be one JSON object")),
+        }
+    }
+}
+
+/// Request templates the garbage generator mutates — every daemon
+/// request shape except `shutdown` (a mutation that survived as a valid
+/// shutdown would end the session mid-property).
+const TEMPLATES: [&str; 6] = [
+    EST_A,
+    r#"{"id":4,"req":"energy","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"]}"#,
+    r#"{"id":5,"req":"memo","action":"stats"}"#,
+    r#"{"id":6,"req":"ping"}"#,
+    r#"{"id":7,"req":"health"}"#,
+    r#"{"id":8,"req":"batch","items":[{"id":"a","req":"estimate","app":"matmul","accel":["mxm64:U32"]}]}"#,
+];
+
+/// Structural junk spliced into lines (no `\n` — a newline would split
+/// the line into two requests and void the one-in/one-out accounting).
+const TOKENS: [&str; 10] = [
+    "{", "}", "[", "]", "\"", "\\", ",", "null", "1e308", "\u{0}",
+];
+
+/// Mutate one template into a line: byte flips, truncation, token
+/// splices, or replacement with pure printable garbage. Deterministic
+/// per (seed, case).
+fn garbage_line(rng: &mut Rng) -> String {
+    if rng.next_u64() % 4 == 0 {
+        // Pure garbage: random printable ASCII, never valid JSON.
+        let len = 1 + (rng.next_u64() % 120) as usize;
+        return (0..len)
+            .map(|_| (b' ' + (rng.next_u64() % 94) as u8) as char)
+            .filter(|&c| c != '\n')
+            .collect();
+    }
+    let mut line: Vec<u8> = TEMPLATES[(rng.next_u64() % TEMPLATES.len() as u64) as usize]
+        .as_bytes()
+        .to_vec();
+    for _ in 0..1 + rng.next_u64() % 3 {
+        match rng.next_u64() % 3 {
+            0 if !line.is_empty() => {
+                let i = (rng.next_u64() % line.len() as u64) as usize;
+                line[i] = b' ' + (rng.next_u64() % 94) as u8;
+            }
+            1 if !line.is_empty() => {
+                let i = (rng.next_u64() % line.len() as u64) as usize;
+                line.truncate(i);
+            }
+            _ => {
+                let tok = TOKENS[(rng.next_u64() % TOKENS.len() as u64) as usize];
+                let at = (rng.next_u64() % (line.len() as u64 + 1)) as usize;
+                line.splice(at..at, tok.bytes());
+            }
+        }
+    }
+    String::from_utf8_lossy(&line).into_owned()
+}
+
+#[test]
+fn garbage_lines_each_get_exactly_one_structured_response_and_never_desync() {
+    // The property (seeded forall, black-box): ANY garbage line — JSON
+    // or not, truncated or spliced — gets exactly one response object;
+    // error responses carry a code in the documented taxonomy; and a
+    // correlated ping between cases proves the stream never skewed by
+    // even one line.
+    let mut daemon = Daemon::spawn(&[], None);
+    let mut rng = Rng::new(0xC4A0_5EED);
+    for case in 0..150u64 {
+        let line = garbage_line(&mut rng);
+        if line.trim().is_empty() {
+            continue; // blank lines are legitimately ignored, not answered
+        }
+        let resp = daemon
+            .request(&line)
+            .unwrap_or_else(|| panic!("case {case}: daemon died on {line:?}"));
+        if !is_ok(&resp) {
+            let code = u(&resp, "code");
+            assert!(
+                (1..=6).contains(&code),
+                "case {case}: code {code} outside the taxonomy for {line:?}"
+            );
+        }
+        if case % 10 == 9 {
+            let probe = format!(r#"{{"id":{case},"req":"ping"}}"#);
+            let pong = daemon.request(&probe).expect("ping after garbage");
+            assert!(is_ok(&pong), "case {case}: {pong:?}");
+            assert_eq!(
+                pong.get("id").and_then(|v| v.as_u64()),
+                Some(case),
+                "case {case}: stream desynced (wrong id echoed)"
+            );
+        }
+    }
+    shutdown_clean(daemon);
+}
+
+#[test]
+fn oversized_lines_are_shed_without_desyncing_the_stream() {
+    let mut daemon = Daemon::spawn(&["--max-line-bytes", "4096"], None);
+    // 64 KiB of junk on one line: one OVERLOADED response, bounded
+    // memory, and the very next request parses normally.
+    let huge = "x".repeat(64 * 1024);
+    let resp = daemon.request(&huge).expect("oversized must be answered");
+    assert!(!is_ok(&resp));
+    assert_eq!(u(&resp, "code"), 5);
+    assert_eq!(kind(&resp), Some("OVERLOADED"));
+    assert!(u(&resp, "retry_after_ms") >= 1);
+    // A line over the limit that *would* have been valid JSON is shed
+    // the same way — the parser never sees it.
+    let padded = format!("{EST_A}{}", " ".repeat(8 * 1024));
+    let resp = daemon.request(&padded).expect("padded line answered");
+    assert_eq!(u(&resp, "code"), 5);
+    // Stream still in sync: a real request works.
+    let est = daemon.request(EST_A).expect("estimate after oversized");
+    assert!(is_ok(&est), "{est:?}");
+    shutdown_clean(daemon);
+}
+
+#[test]
+fn deadline_timeouts_are_structured_and_leave_warm_answers_served() {
+    let mut daemon = Daemon::spawn(&[], None);
+    // Cold + impossible deadline: structured TIMEOUT, nothing evaluated.
+    let cold = r#"{"id":1,"req":"estimate","app":"matmul","n":256,"bs":64,"accel":["mxm64:U32"],"deadline_ms":0}"#;
+    let resp = daemon.request(cold).unwrap();
+    assert!(!is_ok(&resp));
+    assert_eq!(u(&resp, "code"), 4);
+    assert_eq!(kind(&resp), Some("TIMEOUT"));
+    // Warm the point without a deadline, then the same impossible
+    // deadline succeeds — memo hits need no evaluation budget.
+    let warm = daemon.request(EST_A).unwrap();
+    assert!(is_ok(&warm), "{warm:?}");
+    let hit = daemon.request(cold).unwrap();
+    assert!(is_ok(&hit), "warm point must beat a zero deadline: {hit:?}");
+    assert_eq!(u(&hit, "evaluated"), 0);
+    // A dse sweep under a zero deadline cancels at the first round
+    // barrier instead of running to completion.
+    let dse = r#"{"id":2,"req":"dse","app":"matmul","n":128,"top":3,"deadline_ms":0}"#;
+    let resp = daemon.request(dse).unwrap();
+    assert_eq!(u(&resp, "code"), 4, "{resp:?}");
+    assert_eq!(kind(&resp), Some("TIMEOUT"));
+    shutdown_clean(daemon);
+}
+
+#[test]
+fn flooded_daemon_sheds_load_with_structured_overloads_and_stays_up() {
+    // Tiny limits + six concurrent clients hammering cold estimates:
+    // every request gets exactly one response; each is either a result
+    // or OVERLOADED-with-backoff; the daemon then serves normally.
+    let (mut child, stdin, addr, _stderr) = spawn_tcp(
+        &["--max-inflight", "1", "--max-queue", "1", "--workers", "2"],
+        None,
+    );
+    let handles: Vec<_> = (0..6u64)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = TcpClient::connect(&addr);
+                let mut answered = 0u64;
+                let mut shed = 0u64;
+                for i in 0..10u64 {
+                    let n = 64 + 64 * ((c * 10 + i) % 8); // a few distinct points
+                    let req = format!(
+                        r#"{{"id":{i},"req":"estimate","app":"matmul","n":{n},"bs":64,"accel":["mxm64:U32"]}}"#
+                    );
+                    let resp = client
+                        .request(&req)
+                        .unwrap_or_else(|| panic!("client {c}: no response to request {i}"));
+                    assert_eq!(
+                        resp.get("id").and_then(|v| v.as_u64()),
+                        Some(i),
+                        "client {c}: stream desynced"
+                    );
+                    if is_ok(&resp) {
+                        answered += 1;
+                    } else {
+                        assert_eq!(u(&resp, "code"), 5, "client {c}: {resp:?}");
+                        assert_eq!(kind(&resp), Some("OVERLOADED"));
+                        assert!(u(&resp, "retry_after_ms") >= 1);
+                        shed += 1;
+                    }
+                }
+                (answered, shed)
+            })
+        })
+        .collect();
+    let totals: Vec<(u64, u64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let answered: u64 = totals.iter().map(|t| t.0).sum();
+    let shed: u64 = totals.iter().map(|t| t.1).sum();
+    assert_eq!(answered + shed, 60, "every request must be accounted for");
+
+    // Probes bypass admission even under pressure, and after the flood a
+    // bounded retry loop must land a real answer.
+    let mut client = TcpClient::connect(&addr);
+    let health = client.request(r#"{"req":"health"}"#).unwrap();
+    assert!(is_ok(&health), "{health:?}");
+    if shed > 0 {
+        assert!(u(&health, "overloaded") >= shed, "{health:?}");
+    }
+    let mut landed = false;
+    for _ in 0..100 {
+        let resp = client.request(EST_A).unwrap();
+        if is_ok(&resp) {
+            landed = true;
+            break;
+        }
+        assert_eq!(u(&resp, "code"), 5);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(landed, "a lone client must eventually be admitted");
+    let ack = client.request(r#"{"req":"shutdown"}"#).unwrap();
+    assert!(is_ok(&ack), "{ack:?}");
+    let status = child.wait().unwrap();
+    assert!(status.success(), "flood must not dirty the exit: {status:?}");
+    drop(stdin);
+}
+
+#[test]
+fn abrupt_disconnects_never_kill_the_daemon_or_poison_its_state() {
+    let (mut child, stdin, addr, _stderr) = spawn_tcp(&["--workers", "2"], None);
+    // Eight clients fire one request each and slam the connection shut
+    // without reading the response — the write side sees a dead peer.
+    let handles: Vec<_> = (0..8)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(&addr).unwrap();
+                let req = if c % 2 == 0 { EST_A } else { LU_A };
+                let _ = writeln!(&mut &stream, "{req}");
+                drop(stream); // disconnect before the response
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // The daemon survives and serves a well-behaved client: the
+    // disconnected requests either never ran (queued work dropped) or
+    // completed into the memo — both observable states are consistent.
+    let mut client = TcpClient::connect(&addr);
+    let est = client.request(EST_A).expect("daemon must survive disconnects");
+    assert!(is_ok(&est), "{est:?}");
+    let lu = client.request(LU_A).unwrap();
+    assert!(is_ok(&lu), "{lu:?}");
+    let health = client.request(r#"{"req":"health"}"#).unwrap();
+    assert!(is_ok(&health), "{health:?}");
+    assert_eq!(u(&health, "inflight"), 0, "no request may leak its admission token");
+    let ack = client.request(r#"{"req":"shutdown"}"#).unwrap();
+    assert!(is_ok(&ack), "{ack:?}");
+    assert!(child.wait().unwrap().success());
+    drop(stdin);
+}
+
+#[test]
+fn injected_connection_faults_end_one_connection_not_the_daemon() {
+    // `conn.read` hit #1 is consumed by the stdio loop the moment the
+    // daemon starts (its read loop runs the same faultpoint), so the
+    // specs target hit #2 for reads; `conn.write` is only ever hit when
+    // a response is written, and stdin stays silent here, so hit #1 of
+    // it belongs to the first TCP response.
+    let (mut child, stdin, addr, _stderr) =
+        spawn_tcp(&[], Some("conn.read@2!error,conn.write@1!error"));
+    // Give the stdio loop time to burn conn.read hit #1.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    // Connection A dies on the injected read fault before answering.
+    let mut a = TcpClient::connect(&addr);
+    assert!(
+        a.request(r#"{"id":1,"req":"ping"}"#).is_none(),
+        "connection A must be dropped by the read fault"
+    );
+    // Connection B processes its request, then the injected write fault
+    // eats the response: the request ran, the connection died, the
+    // daemon did not.
+    let mut b = TcpClient::connect(&addr);
+    assert!(
+        b.request(r#"{"id":2,"req":"ping"}"#).is_none(),
+        "connection B must be dropped by the write fault"
+    );
+    // Connection C sees a perfectly healthy daemon.
+    let mut c = TcpClient::connect(&addr);
+    let pong = c.request(r#"{"id":3,"req":"ping"}"#).expect("daemon survived");
+    assert!(is_ok(&pong), "{pong:?}");
+    let est = c.request(EST_A).unwrap();
+    assert!(is_ok(&est), "{est:?}");
+    let health = c.request(r#"{"req":"health"}"#).unwrap();
+    assert_eq!(u(&health, "inflight"), 0, "dead connections must release their tokens");
+    let ack = c.request(r#"{"req":"shutdown"}"#).unwrap();
+    assert!(is_ok(&ack), "{ack:?}");
+    assert!(child.wait().unwrap().success());
+    drop(stdin);
+}
+
+#[test]
+fn admission_faultpoint_rejects_one_request_with_overloaded() {
+    // `queue.admit` is the hook CI's chaos job uses to force shedding
+    // deterministically; the response must be indistinguishable from a
+    // real capacity rejection.
+    let mut daemon = Daemon::spawn(&[], Some("queue.admit!error"));
+    let resp = daemon.request(EST_A).unwrap();
+    assert!(!is_ok(&resp));
+    assert_eq!(u(&resp, "code"), 5);
+    assert_eq!(kind(&resp), Some("OVERLOADED"));
+    // One-shot spec: the retry goes through and evaluates normally.
+    let resp = daemon.request(EST_A).unwrap();
+    assert!(is_ok(&resp), "{resp:?}");
+    assert_eq!(u(&resp, "evaluated"), 1);
+    shutdown_clean(daemon);
+}
+
+#[test]
+fn tripped_save_breaker_serves_hits_read_only_and_recovers_on_restart() {
+    let d = tmpdir("breaker");
+    let memo_path = d.join("m.json");
+    let memo = memo_path.display().to_string();
+    // --breaker-threshold 1 + an injected one-shot save failure: the
+    // first save (cadence 1 — right after the first evaluation) trips
+    // the breaker into read-only mode.
+    let mut daemon = Daemon::spawn(
+        &[
+            "--memo", &memo, "--save-every", "1", "--breaker-threshold", "1",
+        ],
+        Some("save.breaker!error"),
+    );
+    let cold = daemon.request(EST_A).unwrap();
+    assert!(is_ok(&cold), "the evaluation itself must succeed: {cold:?}");
+    assert_eq!(u(&cold, "evaluated"), 1);
+
+    // Degraded mode: hits served, cold work and sweeps rejected.
+    let health = daemon.request(r#"{"req":"health"}"#).unwrap();
+    assert_eq!(
+        health.get("degraded").and_then(|v| v.as_bool()),
+        Some(true),
+        "{health:?}"
+    );
+    let hit = daemon.request(EST_A).unwrap();
+    assert!(is_ok(&hit), "memo hits must survive the breaker: {hit:?}");
+    assert_eq!(u(&hit, "evaluated"), 0);
+    let rejected = daemon.request(EST_B).unwrap();
+    assert_eq!(u(&rejected, "code"), 6, "{rejected:?}");
+    assert_eq!(kind(&rejected), Some("DEGRADED"));
+    let sweep = daemon
+        .request(r#"{"req":"dse","app":"matmul","n":128,"top":3}"#)
+        .unwrap();
+    assert_eq!(u(&sweep, "code"), 6, "sweeps evaluate cold points: {sweep:?}");
+
+    // Shutdown: the injected fault is spent, so the final save lands —
+    // but the session still reports its degraded history via exit 1.
+    let ack = daemon.request(r#"{"req":"shutdown"}"#).unwrap();
+    assert_eq!(ack.get("exit_code").and_then(|v| v.as_i64()), Some(1));
+    let status = daemon.wait();
+    assert!(!status.success(), "a session with failed saves exits 1");
+    assert!(memo_path.exists(), "the recovered final save must land");
+
+    // A faultless restart serves the saved point and evaluates the one
+    // the breaker rejected; nothing was corrupted.
+    let mut daemon = Daemon::spawn(&["--memo", &memo], None);
+    assert_eq!(u(&daemon.request(EST_A).unwrap(), "evaluated"), 0);
+    assert_eq!(u(&daemon.request(EST_B).unwrap(), "evaluated"), 1);
+    let stats = daemon.request(r#"{"req":"memo","action":"stats"}"#).unwrap();
+    assert_eq!(u(&stats, "points"), 2);
+    shutdown_clean(daemon);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn chaos_session_save_is_byte_identical_to_an_unfaulted_one() {
+    // The memo-integrity pin: a session that weathered connection
+    // faults and oversized lines must save byte-for-byte what a calm
+    // session saves for the same admitted work. The faulted connection
+    // dies before its request is read (conn.read fires at the top of
+    // the loop), so the admitted work is identical by construction.
+    let run_session = |dir: &str, faults: Option<&str>| -> Vec<u8> {
+        let d = tmpdir(dir);
+        let memo_path = d.join("m.json");
+        let memo = memo_path.display().to_string();
+        let (mut child, stdin, addr, _stderr) =
+            spawn_tcp(&["--memo", &memo, "--max-line-bytes", "4096"], faults);
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if faults.is_some() {
+            // A casualty connection (read fault) and an oversized line:
+            // neither may perturb what the memo records.
+            let mut dead = TcpClient::connect(&addr);
+            assert!(dead.request(r#"{"req":"ping"}"#).is_none());
+            let mut noisy = TcpClient::connect(&addr);
+            let huge = "y".repeat(16 * 1024);
+            assert_eq!(u(&noisy.request(&huge).unwrap(), "code"), 5);
+        }
+        let mut client = TcpClient::connect(&addr);
+        for req in [EST_A, EST_B, LU_A] {
+            let resp = client.request(req).unwrap();
+            assert!(is_ok(&resp), "{resp:?}");
+        }
+        let ack = client.request(r#"{"req":"shutdown"}"#).unwrap();
+        assert!(is_ok(&ack), "{ack:?}");
+        assert!(child.wait().unwrap().success());
+        drop(stdin);
+        let bytes = std::fs::read(&memo_path).expect("memo saved");
+        std::fs::remove_dir_all(&d).ok();
+        bytes
+    };
+    let calm = run_session("integrity_calm", None);
+    let chaotic = run_session("integrity_chaos", Some("conn.read@2!error"));
+    assert_eq!(
+        calm, chaotic,
+        "connection chaos must never leak into the persisted memo"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_saves_and_exits_clean() {
+    let d = tmpdir("sigterm");
+    let memo_path = d.join("m.json");
+    let memo = memo_path.display().to_string();
+    let mut cmd = Command::new(EXE);
+    cmd.args(["serve", "--memo", &memo]);
+    cmd.stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    cmd.env_remove("ZYNQ_FAULTS");
+    let mut child = cmd.spawn().unwrap();
+    let mut stdin = child.stdin.take().unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+
+    writeln!(stdin, "{EST_A}").unwrap();
+    stdin.flush().unwrap();
+    let mut line = String::new();
+    stdout.read_line(&mut line).unwrap();
+    let resp = parse(line.trim()).unwrap();
+    assert!(is_ok(&resp), "{resp:?}");
+
+    // SIGTERM with no work in flight: drain, save, exit 0. stdin stays
+    // open — the signal, not EOF, must end the process.
+    let status = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("run kill");
+    assert!(status.success(), "kill -TERM failed");
+    let status = child.wait().unwrap();
+    assert!(status.success(), "drained daemon must exit 0: {status:?}");
+    let mut err_text = String::new();
+    child
+        .stderr
+        .take()
+        .unwrap()
+        .read_to_string(&mut err_text)
+        .unwrap();
+    assert!(
+        err_text.contains("drained and saved (SIGTERM)"),
+        "missing drain trace in stderr:\n{err_text}"
+    );
+    assert!(memo_path.exists(), "the drain must save the memo");
+    drop(stdin);
+
+    // The saved memo answers the point without re-evaluating.
+    let mut daemon = Daemon::spawn(&["--memo", &memo], None);
+    let warm = daemon.request(EST_A).unwrap();
+    assert_eq!(u(&warm, "evaluated"), 0, "{warm:?}");
+    shutdown_clean(daemon);
+    std::fs::remove_dir_all(&d).ok();
+}

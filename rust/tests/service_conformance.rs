@@ -244,6 +244,30 @@ fn malformed_requests_answer_structured_errors_and_the_daemon_survives() {
 }
 
 #[test]
+fn health_probe_reports_readiness_without_consuming_admission_capacity() {
+    // `health` must answer on a daemon whose admission would reject all
+    // work (--max-inflight floor of 1 still admits; use the probe both
+    // before and after real traffic to pin its shape).
+    let mut daemon = Daemon::spawn(&["--lanes", "2"], None);
+    let before = daemon.request(r#"{"id":1,"req":"health"}"#).unwrap();
+    assert!(is_ok(&before), "{before:?}");
+    assert_eq!(before.get("ready").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(before.get("degraded").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(before.get("draining").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(u(&before, "lanes"), 2);
+    assert_eq!(u(&before, "inflight"), 0);
+    assert!(text(&before).starts_with("health: ready"), "{}", text(&before));
+    let est = daemon.request(EST_A).unwrap();
+    assert!(is_ok(&est), "{est:?}");
+    let after = daemon.request(r#"{"id":2,"req":"health"}"#).unwrap();
+    assert_eq!(u(&after, "inflight"), 0, "finished work must release its token");
+    assert_eq!(u(&after, "timeouts"), 0);
+    assert_eq!(u(&after, "overloaded"), 0);
+    assert_eq!(u(&after, "degraded_rejects"), 0);
+    shutdown_clean(daemon);
+}
+
+#[test]
 fn round_two_is_answered_entirely_from_the_persistent_memo() {
     let d = tmpdir("two_rounds");
     let memo = d.join("serve-memo.json").display().to_string();

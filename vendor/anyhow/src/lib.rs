@@ -13,7 +13,9 @@
 //!   `fn main() -> anyhow::Result<()>` shows on exit.
 //!
 //! Intentionally not implemented (unused in this repository): `Context`,
-//! downcasting, and backtrace capture.
+//! owning downcasts (`downcast`/`downcast_mut`), and backtrace capture.
+//! `downcast_ref` *is* provided — the service daemon classifies sweep
+//! cancellation by downcasting to a marker error type.
 
 use std::fmt;
 
@@ -42,6 +44,17 @@ impl Error {
         Error {
             inner: Box::new(MessageError(message)),
         }
+    }
+
+    /// Attempt to view the wrapped error as a concrete type. Matches
+    /// upstream semantics for errors wrapped via [`Error::new`] / the
+    /// blanket `From`; message-only errors (`anyhow!`) never match a
+    /// concrete type (their payload is private), exactly as upstream.
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        self.inner.downcast_ref::<E>()
     }
 
     /// The lowest-level source in the chain (self if there is none).
