@@ -16,7 +16,7 @@ use zynq_estimator::config::{BoardConfig, CoDesign};
 use zynq_estimator::coordinator::deps::DepGraph;
 use zynq_estimator::coordinator::elaborate::ElabProgram;
 use zynq_estimator::coordinator::sched::Policy;
-use zynq_estimator::dse::default_workers;
+use zynq_estimator::dse::{default_workers, DseSpace, SweepContext};
 use zynq_estimator::experiments;
 use zynq_estimator::hls::FpgaPart;
 use zynq_estimator::sim::engine::{resolve_codesign, Simulator};
@@ -133,6 +133,66 @@ fn main() {
         ("serial_rebuild_s", base_s.into()),
         ("parallel_s", sweep_s.into()),
         ("speedup", (base_s / sweep_s.max(1e-12)).into()),
+    ]));
+
+    // Incremental re-simulation: the exhaustive cholesky sweep evaluated
+    // point-by-point from scratch vs through the neighbor-chain delta path
+    // (serial on both sides, so the comparison isolates the reuse). The
+    // counters and the `*_ok` gates are deterministic — chains are a pure
+    // function of the candidate list — only the `_s` keys track the runner.
+    let space = DseSpace::from_program(&chol);
+    let ctx = SweepContext::for_space(&chol, &board, &FpgaPart::xc7z045(), &space);
+    let cands = ctx.enumerate(&space);
+    let t0 = std::time::Instant::now();
+    let mut w = ctx.worker();
+    let mut scratch = Vec::new();
+    for cd in &cands {
+        if let Some(p) = w.evaluate(cd) {
+            scratch.push(p);
+        }
+    }
+    let scratch_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let (delta_pts, stats) = ctx.evaluate_all_with_stats(&cands, 1);
+    let delta_s = t0.elapsed().as_secs_f64();
+    let bit_identical = scratch.len() == delta_pts.len()
+        && scratch
+            .iter()
+            .zip(&delta_pts)
+            .all(|(a, b)| a.est_ms.to_bits() == b.est_ms.to_bits());
+    let rate = stats.reuse_rate();
+    let suffix = stats.suffix_fraction();
+    println!(
+        "incremental cholesky n=512: {} points, scratch {scratch_s:.3} s, delta {delta_s:.3} s \
+         ({:.2}x), reuse {}/{} ({:.1}%), suffix fraction {suffix:.3}",
+        cands.len(),
+        scratch_s / delta_s.max(1e-12),
+        stats.hits,
+        stats.hits + stats.fallbacks,
+        100.0 * rate,
+    );
+    assert!(bit_identical, "delta sweep diverged from the scratch oracle");
+    assert!(
+        rate >= 0.30,
+        "delta reuse rate {rate:.3} below the 30% floor ({stats:?})"
+    );
+    assert!(
+        suffix < 1.0,
+        "reused prefixes must shrink the replayed suffix ({stats:?})"
+    );
+    records.push(obj(vec![
+        ("name", "incremental dse cholesky n=512".into()),
+        ("points", cands.len().into()),
+        ("delta_hits", stats.hits.into()),
+        ("delta_fallbacks", stats.fallbacks.into()),
+        ("delta_rate", rate.into()),
+        ("suffix_fraction", suffix.into()),
+        ("delta_rate_ok", (rate >= 0.30).into()),
+        ("suffix_lt_1", (suffix < 1.0).into()),
+        ("bit_identical", bit_identical.into()),
+        ("scratch_s", scratch_s.into()),
+        ("delta_s", delta_s.into()),
+        ("speedup", (scratch_s / delta_s.max(1e-12)).into()),
     ]));
 
     let out = arr(records).to_json();

@@ -145,6 +145,10 @@ COMMANDS (one per paper experiment, plus utilities):
                                                                  (requires --memo; final ranking
                                                                  and memo are bit-identical to an
                                                                  uninterrupted run)
+                 [--profile]                                     per-phase timing breakdown
+                                                                 (enumerate/prune/simulate/
+                                                                 memo-io) + delta-reuse rate on
+                                                                 stderr; stdout is unchanged
   dse memo <stats|gc|compact> --memo m.json                     memo hygiene: inspect the
                  [--keep-contexts 16] [--keep-points N]          two-level layout, LRU-by-context
                  [--keep-kernels 256]                            eviction (gc), versioned rewrite
@@ -605,6 +609,28 @@ fn order_from_args(args: &Args) -> anyhow::Result<crate::dse::OrderMode> {
     }
 }
 
+/// `--profile` epilogue: per-phase wall-clock breakdown plus the
+/// deterministic delta-reuse counters, on **stderr** so the ranking table
+/// (stdout) stays machine-consumable. No-op unless `--profile` enabled
+/// the profiler.
+fn emit_profile(delta: crate::dse::DeltaStats) {
+    if !crate::util::profile::enabled() {
+        return;
+    }
+    let mut extra = Vec::new();
+    let n = delta.hits + delta.fallbacks;
+    if n > 0 {
+        extra.push(format!(
+            "delta-reuse: {}/{} neighbor evals ({:.1}%), evaluated-suffix fraction {:.3}",
+            delta.hits,
+            n,
+            100.0 * delta.reuse_rate(),
+            delta.suffix_fraction(),
+        ));
+    }
+    let _ = crate::util::profile::report(&mut std::io::stderr(), &extra);
+}
+
 fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     if args.positional.first().map(String::as_str) == Some("memo") {
         return cmd_dse_memo(args);
@@ -630,6 +656,9 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
     if args.has("suite") {
         return cmd_dse_suite(args, board, objective, top, workers, order);
     }
+    if args.has("profile") {
+        crate::util::profile::enable();
+    }
     let app = args.get("app").unwrap_or("matmul");
     let n = args.u64_or("n", 512)?;
     let bs = args.u64_or("bs", 64)?;
@@ -641,8 +670,10 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             eprintln!("note: --memo implies the bound-guided pruned (warm) path");
         }
         let path = std::path::Path::new(memo_path);
-        let (mut memo, recovered) =
-            crate::dse::EvalMemo::load_with_recovery(path).map_err(corrupt_input)?;
+        let (mut memo, recovered) = {
+            let _t = crate::util::profile::scope("memo-io");
+            crate::dse::EvalMemo::load_with_recovery(path).map_err(corrupt_input)?
+        };
         report_recovery(&recovered, path);
         // The session journals every evaluation round to `<memo>.wal` and
         // checkpoints the candidate order, so a crash loses at most the
@@ -668,7 +699,10 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             &mut recovery,
         )?;
         let secs = t0.elapsed().as_secs_f64();
-        memo.save(path)?;
+        {
+            let _t = crate::util::profile::scope("memo-io");
+            memo.save(path)?;
+        }
         print!("{}", crate::dse::render(&points, top, objective));
         println!("pruning: {}", stats.render());
         println!(
@@ -690,6 +724,12 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             order,
             ctx.cached_reports(),
         );
+        emit_profile(crate::dse::DeltaStats {
+            hits: stats.delta_hits,
+            fallbacks: stats.delta_fallbacks,
+            suffix_events: stats.delta_suffix_events,
+            total_events: stats.delta_total_events,
+        });
         return Ok(0);
     }
     let ctx = crate::dse::SweepContext::for_space(&program, board, &FpgaPart::xc7z045(), &space);
@@ -706,12 +746,18 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
             secs,
             ctx.cached_reports(),
         );
+        emit_profile(crate::dse::DeltaStats {
+            hits: stats.delta_hits,
+            fallbacks: stats.delta_fallbacks,
+            suffix_events: stats.delta_suffix_events,
+            total_events: stats.delta_total_events,
+        });
         return Ok(0);
     }
     if args.has("order") {
         eprintln!("note: --order applies to pruned sweeps; ignored for the exhaustive path");
     }
-    let points = ctx.explore(&space, objective, workers);
+    let (points, delta) = ctx.explore_with_stats(&space, objective, workers);
     let secs = t0.elapsed().as_secs_f64();
     print!("{}", crate::dse::render(&points, top, objective));
     println!(
@@ -721,6 +767,7 @@ fn cmd_dse(args: &Args, board: &BoardConfig) -> anyhow::Result<i32> {
         points.len() as f64 / secs.max(1e-9),
         ctx.cached_reports(),
     );
+    emit_profile(delta);
     Ok(0)
 }
 

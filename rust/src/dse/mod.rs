@@ -45,7 +45,9 @@ pub use cross::{
     CrossBoardSweep,
 };
 pub use prune::{enumerate_pruned, OrderMode, PruneStats, SweepCancelled};
-pub use sweep::{default_workers, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker};
+pub use sweep::{
+    default_workers, DeltaStats, SuiteApp, SuiteAppResult, SweepContext, SweepSuite, SweepWorker,
+};
 pub use warm::{EvalMemo, GcReport, MemoContextStat, MemoStats, SweepJournal, WalRecovery};
 
 /// Exploration space for one kernel.

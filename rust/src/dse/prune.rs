@@ -240,6 +240,24 @@ pub struct PruneStats {
     /// poisoned set is identical for any worker count. Non-zero only under
     /// injected faults (`eval.point`) or genuine model bugs.
     pub poisoned: u64,
+    /// Evaluations served by the incremental (delta) path: the candidate
+    /// differed from its chain head in one kernel's option, and the
+    /// simulator resumed the head's checkpointed schedule prefix instead
+    /// of re-running the whole DAG (bit-identical to scratch; see
+    /// [`sweep::DeltaStats`](super::DeltaStats)). Chain partitioning is
+    /// static over the candidate list, so this counter is identical for
+    /// any worker count.
+    pub delta_hits: u64,
+    /// Neighbor-chain evaluations that fell back to a scratch run (no
+    /// provably safe checkpoint, a forced `delta.plan` fault, or a
+    /// poisoned chain head).
+    pub delta_fallbacks: u64,
+    /// Events the delta hits actually replayed (suffix only) — with
+    /// `delta_total_events`, the evaluated-suffix fraction gated in
+    /// `BENCH_engine.json`.
+    pub delta_suffix_events: u64,
+    /// Events a scratch run of the delta-hit points would process.
+    pub delta_total_events: u64,
 }
 
 impl PruneStats {
@@ -278,8 +296,17 @@ impl PruneStats {
         } else {
             String::new()
         };
+        let delta = if self.delta_hits + self.delta_fallbacks > 0 {
+            format!(
+                " + delta {}/{}",
+                self.delta_hits,
+                self.delta_hits + self.delta_fallbacks
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "space {} -> feasible {} -> enumerated {} -> evaluated {}{memo}{kernel} \
+            "space {} -> feasible {} -> enumerated {} -> evaluated {}{memo}{kernel}{delta} \
              (cuts: resource {}, dominance {} [{} variants], bound {}{seeded}{global}, \
              unrunnable {}{poisoned})",
             self.space_points,
@@ -585,6 +612,7 @@ fn enumerate_options(
 /// relative order: exactly the feasible candidates that use no dominated
 /// unroll variant.
 pub fn enumerate_pruned(ctx: &SweepContext<'_>, space: &DseSpace) -> (Vec<CoDesign>, PruneStats) {
+    let _t = crate::util::profile::scope("prune");
     let mut stats = PruneStats::default();
     let table = build_options(ctx, space);
     let budget = ctx.part.effective_budget();
@@ -865,22 +893,60 @@ fn run_rounds<'a, 'p>(
         }
 
         let jobs_ref: &[JobState<'a, 'p>] = &*jobs;
-        let n_slots = slots.len().min(work.len());
-        let (mut results, poisoned) = super::sweep::parallel_for_indexed_isolated(
-            &mut slots[..n_slots],
-            work.len(),
-            |slot, w| {
-                let (ji, ci) = work[w];
-                let worker = slot[ji].get_or_insert_with(|| jobs_ref[ji].ctx.worker());
-                worker.evaluate(&jobs_ref[ji].cands[ci]).map(|p| (ji, ci, p))
-            },
-            // A panic can leave any simulator of the pool mid-run; drop
-            // them all — the next item rebuilds its job's worker lazily.
-            |slot| slot.iter_mut().for_each(|w| *w = None),
-        );
+        // Partition the round's work list into neighbor chains (never
+        // across jobs): consecutive same-job candidates differing in one
+        // kernel's option ride the incremental (delta) path, and the
+        // chains — not the points — are the parallel work units, so every
+        // delta/scratch decision is a pure function of the work list,
+        // identical for any worker count.
+        let chains = super::sweep::delta_chains(work.len(), |w| {
+            let (ji, ci) = work[w];
+            let (pji, pci) = work[w - 1];
+            if ji != pji {
+                return None;
+            }
+            super::sweep::single_kernel_diff(
+                jobs_ref[ji].ctx.program,
+                &jobs_ref[ji].cands[pci],
+                &jobs_ref[ji].cands[ci],
+            )
+        });
+        let mut delta: Vec<super::sweep::DeltaStats> =
+            vec![Default::default(); jobs_ref.len()];
+        let n_slots = slots.len().min(chains.len());
+        let outcomes = {
+            let _t = crate::util::profile::scope("simulate");
+            super::sweep::parallel_for_indexed(&mut slots[..n_slots], chains.len(), |slot, c| {
+                let chain = chains[c];
+                let ji = work[chain.start].0;
+                let out = super::sweep::evaluate_chain(
+                    &mut slot[ji],
+                    || jobs_ref[ji].ctx.worker(),
+                    chain,
+                    |w| &jobs_ref[ji].cands[work[w].1],
+                );
+                Some((ji, out))
+            })
+        };
+        let mut results: Vec<(usize, usize, DsePoint)> = Vec::with_capacity(work.len());
+        let mut poisoned: Vec<usize> = Vec::new();
+        for (ji, out) in outcomes {
+            delta[ji].merge(&out.stats);
+            for (w, p) in out.results {
+                results.push((ji, work[w].1, p));
+            }
+            poisoned.extend(out.poisoned);
+        }
+        poisoned.sort_unstable();
         // Deterministic merge (and journal) order regardless of which
         // thread produced which result.
         results.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        for (ji, d) in delta.iter().enumerate() {
+            jobs[ji].stats.delta_hits += d.hits;
+            jobs[ji].stats.delta_fallbacks += d.fallbacks;
+            jobs[ji].stats.delta_suffix_events += d.suffix_events;
+            jobs[ji].stats.delta_total_events += d.total_events;
+        }
 
         // Barrier: merge results and thaw the frontiers for the next round.
         for &w in &poisoned {

@@ -36,11 +36,212 @@ use crate::coordinator::sched::Policy;
 use crate::coordinator::task::{KernelId, TaskProgram};
 use crate::hls::{CostModel, FpgaPart, HlsReport, Resources};
 use crate::power::PowerModel;
-use crate::sim::engine::{AccelInstance, Simulator};
+use crate::sim::engine::{AccelInstance, DeltaPlan, SimCheckpoint, Simulator};
 use crate::sim::{EstimatorModel, SimResult};
 use crate::util::fxhash::FxHashMap;
 
 use super::{describe, DsePoint, DseSpace, Objective};
+
+/// Deterministic reuse counters for the incremental (delta) evaluation
+/// path. `hits`/`fallbacks` partition the **non-head** positions of the
+/// neighbor chains (see [`delta_chains`]); `suffix_events`/`total_events`
+/// accumulate, per hit, the events the resume actually replayed vs the
+/// events a scratch run of the same point processes — their ratio is the
+/// evaluated-suffix fraction gated in `BENCH_engine.json`. All counters
+/// depend only on the candidate list (chains are partitioned statically),
+/// never on worker scheduling, so they are bit-identical for any worker
+/// count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Neighbor evaluations served by checkpoint resume.
+    pub hits: u64,
+    /// Neighbor evaluations that fell back to scratch (invalid or unsafe
+    /// checkpoint, forced by the `delta.plan` faultpoint, or a poisoned
+    /// chain head).
+    pub fallbacks: u64,
+    /// Events replayed by the delta hits (suffix only).
+    pub suffix_events: u64,
+    /// Events a scratch run of those same hit points processes.
+    pub total_events: u64,
+}
+
+impl DeltaStats {
+    /// Fold another counter set into this one.
+    pub fn merge(&mut self, o: &DeltaStats) {
+        self.hits += o.hits;
+        self.fallbacks += o.fallbacks;
+        self.suffix_events += o.suffix_events;
+        self.total_events += o.total_events;
+    }
+
+    /// Fraction of neighbor-pair evaluations that took the delta path.
+    pub fn reuse_rate(&self) -> f64 {
+        let n = self.hits + self.fallbacks;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    /// Mean fraction of a hit point's events actually replayed — below
+    /// 1.0 means the prefix reuse saved simulation work.
+    pub fn suffix_fraction(&self) -> f64 {
+        if self.total_events == 0 {
+            1.0
+        } else {
+            self.suffix_events as f64 / self.total_events as f64
+        }
+    }
+}
+
+/// Which single kernel two co-designs differ in — `Some(k)` iff exactly
+/// one kernel's option (its accelerator instance sequence or its SMP
+/// flag) changed. Returns `None` for identical candidates, multi-kernel
+/// diffs, or kernels the program does not know: no provably safe delta
+/// either way. Instance *order* within a kernel is compared as-is
+/// (heterogeneous multisets dispatch in instance order), which is
+/// conservative but never unsafe.
+pub(crate) fn single_kernel_diff(
+    program: &TaskProgram,
+    a: &CoDesign,
+    b: &CoDesign,
+) -> Option<KernelId> {
+    let n_kernels = program.kernels.len();
+    let mut ua: Vec<Vec<u32>> = vec![Vec::new(); n_kernels];
+    let mut ub: Vec<Vec<u32>> = vec![Vec::new(); n_kernels];
+    for s in &a.accels {
+        ua[program.kernel_id(&s.kernel)? as usize].push(s.unroll);
+    }
+    for s in &b.accels {
+        ub[program.kernel_id(&s.kernel)? as usize].push(s.unroll);
+    }
+    let mut diff: Option<KernelId> = None;
+    for kid in 0..n_kernels {
+        let name = &program.kernels[kid].name;
+        if ua[kid] != ub[kid] || a.allows_smp(name) != b.allows_smp(name) {
+            if diff.is_some() {
+                return None; // more than one kernel changed
+            }
+            diff = Some(kid as KernelId);
+        }
+    }
+    diff
+}
+
+/// Cap on neighbor-chain length. Chains are the parallel work unit (the
+/// checkpoint lives on the worker that evaluated the chain head), so
+/// short chains keep pool utilization high while still amortizing one
+/// scratch run per `DELTA_CHAIN_CAP` points.
+pub(crate) const DELTA_CHAIN_CAP: usize = 16;
+
+/// One capped run of consecutive candidates where every adjacent pair
+/// differs in exactly the same single kernel — the delta evaluation unit.
+/// Every member then differs from the chain *head* only in that kernel
+/// (single-kernel diffs against a fixed base compose), so one checkpoint
+/// captured on the head's scratch run serves the whole chain.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct DeltaChain {
+    /// Start index into the caller's candidate/work list.
+    pub start: usize,
+    /// Number of consecutive members (≥ 1).
+    pub len: usize,
+    /// The changed kernel (`None` for singleton chains — scratch only).
+    pub kernel: Option<KernelId>,
+}
+
+/// Partition positions `0..n` into [`DeltaChain`]s. `diff(j)` reports the
+/// single-kernel diff between positions `j - 1` and `j` (and `None` to
+/// force a break — different suite job, no safe diff, …). Deterministic:
+/// depends only on the list, so chain boundaries — and with them every
+/// delta/scratch decision — are identical for any worker count.
+pub(crate) fn delta_chains<D>(n: usize, diff: D) -> Vec<DeltaChain>
+where
+    D: Fn(usize) -> Option<KernelId>,
+{
+    let mut chains = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let mut len = 1usize;
+        let mut kernel: Option<KernelId> = None;
+        while i + len < n && len < DELTA_CHAIN_CAP {
+            match (kernel, diff(i + len)) {
+                (None, Some(k)) => kernel = Some(k),
+                (Some(k0), Some(k)) if k == k0 => {}
+                _ => break,
+            }
+            len += 1;
+        }
+        chains.push(DeltaChain { start: i, len, kernel });
+        i += len;
+    }
+    chains
+}
+
+/// Outcome of one chain evaluated by [`evaluate_chain`].
+pub(crate) struct ChainOutcome {
+    /// `(position, point)` for every member that evaluated.
+    pub results: Vec<(usize, DsePoint)>,
+    /// Positions whose evaluation panicked (quarantined; ascending).
+    pub poisoned: Vec<usize>,
+    /// Delta counters attributed to this chain.
+    pub stats: DeltaStats,
+}
+
+/// Evaluate one neighbor chain on one worker slot with per-point panic
+/// isolation: the head runs from scratch (capturing the chain checkpoint
+/// when the chain has a changed kernel), every later member goes through
+/// [`SweepWorker::evaluate_delta`]. A panicking point poisons only
+/// itself — the worker is dropped and lazily rebuilt, and because the
+/// rebuilt worker holds no checkpoint the rest of the chain falls back to
+/// scratch. Which points poison (and which fall back) depends only on the
+/// points themselves, never on worker scheduling.
+pub(crate) fn evaluate_chain<'c, 'p, 'x, F, C>(
+    slot: &mut Option<SweepWorker<'c, 'p>>,
+    make_worker: F,
+    chain: DeltaChain,
+    cand: C,
+) -> ChainOutcome
+where
+    F: Fn() -> SweepWorker<'c, 'p>,
+    C: Fn(usize) -> &'x CoDesign,
+{
+    let mut out = ChainOutcome {
+        results: Vec::with_capacity(chain.len),
+        poisoned: Vec::new(),
+        stats: DeltaStats::default(),
+    };
+    for j in 0..chain.len {
+        let i = chain.start + j;
+        let w = slot.get_or_insert_with(&make_worker);
+        let before = w.delta_stats();
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if j == 0 {
+                w.evaluate_chain_head(cand(i), chain.kernel)
+            } else {
+                w.evaluate_delta(cand(i))
+            }
+        }));
+        match run {
+            Ok(maybe) => {
+                let after = slot.as_ref().expect("worker alive after Ok").delta_stats();
+                out.stats.hits += after.hits - before.hits;
+                out.stats.fallbacks += after.fallbacks - before.fallbacks;
+                out.stats.suffix_events += after.suffix_events - before.suffix_events;
+                out.stats.total_events += after.total_events - before.total_events;
+                if let Some(p) = maybe {
+                    out.results.push((i, p));
+                }
+            }
+            Err(_) => {
+                // A panic can unwind mid-simulation: rebuild, don't trust.
+                *slot = None;
+                out.poisoned.push(i);
+            }
+        }
+    }
+    out
+}
 
 /// Number of evaluation workers to use by default: one per available core.
 pub fn default_workers() -> usize {
@@ -93,74 +294,6 @@ where
         }
     });
     out
-}
-
-/// [`parallel_for_indexed`] with **panic isolation**: every call to `f`
-/// runs under `catch_unwind`, so one poisoned item can never tear down the
-/// worker pool or lose the results of its siblings. On a panic the
-/// worker's slot is passed through `reset` (worker state that unwound
-/// mid-simulation must be rebuilt, not reused) and the item's index is
-/// recorded. Returns the unordered results plus the poisoned indices in
-/// ascending order — which items poison depends only on the items
-/// themselves, never on worker scheduling, so callers stay bit-identical
-/// for any worker count. (The default panic hook still prints each
-/// poisoned point's message to stderr — deliberate: a poisoned point is a
-/// bug report, not something to swallow silently.)
-pub(crate) fn parallel_for_indexed_isolated<S, R, F, G>(
-    slots: &mut [S],
-    n_items: usize,
-    f: F,
-    reset: G,
-) -> (Vec<R>, Vec<usize>)
-where
-    S: Send,
-    R: Send,
-    F: Fn(&mut S, usize) -> Option<R> + Sync,
-    G: Fn(&mut S) + Sync,
-{
-    debug_assert!(!slots.is_empty() || n_items == 0);
-    let cursor = AtomicUsize::new(0);
-    let mut out: Vec<R> = Vec::with_capacity(n_items);
-    let mut poisoned: Vec<usize> = Vec::new();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = slots
-            .iter_mut()
-            .map(|slot| {
-                let f = &f;
-                let reset = &reset;
-                let cursor = &cursor;
-                s.spawn(move || {
-                    let mut acc: Vec<R> = Vec::new();
-                    let mut poison: Vec<usize> = Vec::new();
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= n_items {
-                            break;
-                        }
-                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || f(&mut *slot, i),
-                        ));
-                        match run {
-                            Ok(Some(r)) => acc.push(r),
-                            Ok(None) => {}
-                            Err(_) => {
-                                reset(&mut *slot);
-                                poison.push(i);
-                            }
-                        }
-                    }
-                    (acc, poison)
-                })
-            })
-            .collect();
-        for h in handles {
-            let (acc, poison) = h.join().expect("isolated worker cannot itself panic");
-            out.extend(acc);
-            poisoned.extend(poison);
-        }
-    });
-    poisoned.sort_unstable();
-    (out, poisoned)
 }
 
 /// Shared, immutable evaluation context for one (program, board, part)
@@ -509,6 +642,9 @@ impl<'p> SweepContext<'p> {
             ctx: self,
             sim,
             model: EstimatorModel::new(self.board),
+            plan: None,
+            ckpt: SimCheckpoint::new(),
+            delta: DeltaStats::default(),
         }
     }
 
@@ -542,24 +678,44 @@ impl<'p> SweepContext<'p> {
     /// skipped too (isolation — one bad point never tears down the pool),
     /// identically for any worker count.
     pub fn evaluate_all(&self, cands: &[CoDesign], workers: usize) -> Vec<DsePoint> {
-        let n = cands.len();
-        let workers = workers.clamp(1, n.max(1));
+        self.evaluate_all_with_stats(cands, workers).0
+    }
+
+    /// [`SweepContext::evaluate_all`] plus the delta-reuse counters. The
+    /// candidate list is partitioned into static neighbor chains
+    /// ([`delta_chains`]) and the chains — not the points — are the
+    /// parallel work units, so both the points *and* the counters are
+    /// bit-identical for any worker count.
+    pub fn evaluate_all_with_stats(
+        &self,
+        cands: &[CoDesign],
+        workers: usize,
+    ) -> (Vec<DsePoint>, DeltaStats) {
+        let chains = delta_chains(cands.len(), |j| {
+            single_kernel_diff(self.program, &cands[j - 1], &cands[j])
+        });
+        let workers = workers.clamp(1, chains.len().max(1));
         // One lazily-built worker (simulator + model) per thread; a
-        // poisoned worker is dropped and lazily rebuilt.
+        // poisoned worker is dropped and lazily rebuilt by the chain
+        // executor.
         let mut slots: Vec<Option<SweepWorker<'_, 'p>>> = (0..workers).map(|_| None).collect();
-        let (mut indexed, _poisoned) = parallel_for_indexed_isolated(
-            &mut slots,
-            n,
-            |slot, i| {
-                let w = slot.get_or_insert_with(|| self.worker());
-                w.evaluate(&cands[i]).map(|p| (i, p))
-            },
-            |slot| *slot = None,
-        );
+        let outcomes = parallel_for_indexed(&mut slots, chains.len(), |slot, c| {
+            Some(evaluate_chain(slot, || self.worker(), chains[c], |i| {
+                &cands[i]
+            }))
+        });
+        let mut indexed: Vec<(usize, DsePoint)> = Vec::with_capacity(cands.len());
+        let mut stats = DeltaStats::default();
+        for o in &outcomes {
+            stats.merge(&o.stats);
+        }
+        for o in outcomes {
+            indexed.extend(o.results);
+        }
         // Restore enumeration order so ranking ties break exactly like the
         // serial path (the score sort below is stable).
         indexed.sort_unstable_by_key(|e| e.0);
-        indexed.into_iter().map(|(_, p)| p).collect()
+        (indexed.into_iter().map(|(_, p)| p).collect(), stats)
     }
 
     /// Enumerate + evaluate + rank. Bit-identical output for any worker
@@ -595,10 +751,28 @@ impl<'p> SweepContext<'p> {
         objective: Objective,
         workers: usize,
     ) -> Vec<DsePoint> {
-        let cands = self.enumerate(space);
-        let mut points = self.evaluate_all(&cands, workers);
+        self.explore_with_stats(space, objective, workers).0
+    }
+
+    /// [`SweepContext::explore`] plus the delta-reuse counters of the
+    /// evaluation pass (`dse --profile` and the incremental bench read
+    /// them; the ranking is byte-identical to `explore`'s).
+    pub fn explore_with_stats(
+        &self,
+        space: &DseSpace,
+        objective: Objective,
+        workers: usize,
+    ) -> (Vec<DsePoint>, DeltaStats) {
+        let cands = {
+            let _t = crate::util::profile::scope("enumerate");
+            self.enumerate(space)
+        };
+        let (mut points, stats) = {
+            let _t = crate::util::profile::scope("simulate");
+            self.evaluate_all_with_stats(&cands, workers)
+        };
         points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());
-        points
+        (points, stats)
     }
 
     /// Like [`SweepContext::explore`], but with the bound-guided pruned
@@ -718,23 +892,27 @@ impl<'p> SweepContext<'p> {
 }
 
 /// Worker-local evaluation state: a [`Simulator`] whose buffers persist
-/// across points (reset per co-design) and an estimator timing model.
+/// across points (reset per co-design), an estimator timing model, and
+/// the delta state for the neighbor chain currently running on this
+/// worker — the chain's [`DeltaPlan`], the checkpoint captured on the
+/// chain head's scratch run, and monotonic reuse counters.
 pub struct SweepWorker<'c, 'p> {
     ctx: &'c SweepContext<'p>,
     sim: Simulator<'c>,
     model: EstimatorModel,
+    plan: Option<DeltaPlan>,
+    ckpt: SimCheckpoint,
+    delta: DeltaStats,
 }
 
 impl<'c, 'p> SweepWorker<'c, 'p> {
-    /// Evaluate one co-design; `None` if it cannot run (skipped point).
-    ///
-    /// Carries the `eval.point` faultpoint, tagged by the FNV hash of the
+    /// The `eval.point` faultpoint, tagged by the FNV hash of the
     /// co-design name: an armed spec always manifests as a **panic** here
     /// (evaluation has no error channel), exercising the poison-isolation
-    /// path of [`parallel_for_indexed_isolated`]. The tag selects points
-    /// by identity, never by schedule, so the poisoned set is identical
-    /// for any worker count.
-    pub fn evaluate(&mut self, codesign: &CoDesign) -> Option<DsePoint> {
+    /// path of [`evaluate_chain`] (one point never tears down a pool). The
+    /// tag selects points by identity, never by schedule, so the poisoned
+    /// set is identical for any worker count.
+    fn fault_eval_point(codesign: &CoDesign) {
         if crate::util::faultpoint::armed() {
             if let Err(e) = crate::util::faultpoint::hit_tagged(
                 "eval.point",
@@ -743,12 +921,108 @@ impl<'c, 'p> SweepWorker<'c, 'p> {
                 panic!("{e}");
             }
         }
+    }
+
+    /// Evaluate one co-design from scratch; `None` if it cannot run
+    /// (skipped point). This is the **oracle**: it never touches the
+    /// delta machinery, and every delta-path result is regression-tested
+    /// bitwise against it.
+    pub fn evaluate(&mut self, codesign: &CoDesign) -> Option<DsePoint> {
+        Self::fault_eval_point(codesign);
         let (accels, smp) = self.ctx.resolve(codesign).ok()?;
         // `resolve` already built owned instances: hand them to the
         // simulator instead of copying them a second time.
         self.sim.reset_owned(accels, smp);
         let res = self.sim.run_mut(&mut self.model);
         Some(self.ctx.point_from(codesign, &res))
+    }
+
+    /// Begin a neighbor chain: evaluate the head **from scratch** while
+    /// capturing the chain checkpoint just before the first event whose
+    /// timing depends on `kernel` (see
+    /// [`Simulator::run_mut_with_checkpoint`]). `kernel == None` marks a
+    /// singleton chain — plain scratch evaluation, and the stale
+    /// checkpoint from any previous chain is invalidated so it can never
+    /// leak across chains.
+    pub fn evaluate_chain_head(
+        &mut self,
+        codesign: &CoDesign,
+        kernel: Option<KernelId>,
+    ) -> Option<DsePoint> {
+        let Some(k) = kernel else {
+            self.ckpt.invalidate();
+            return self.evaluate(codesign);
+        };
+        Self::fault_eval_point(codesign);
+        let plan_matches = matches!(&self.plan, Some(p) if p.kernel() == k);
+        if !plan_matches {
+            self.plan = Some(DeltaPlan::new(self.ctx.program, &self.ctx.elab, k));
+        }
+        let (accels, smp) = match self.ctx.resolve(codesign) {
+            Ok(x) => x,
+            Err(_) => {
+                // Unrunnable head: no checkpoint, the rest of the chain
+                // falls back to scratch.
+                self.ckpt.invalidate();
+                return None;
+            }
+        };
+        self.sim.reset_owned(accels, smp);
+        let plan = self.plan.as_ref().expect("plan installed above");
+        let res = self
+            .sim
+            .run_mut_with_checkpoint(&mut self.model, plan, &mut self.ckpt);
+        Some(self.ctx.point_from(codesign, &res))
+    }
+
+    /// Evaluate a non-head chain member against the chain checkpoint:
+    /// resume the head's schedule prefix and replay only the suffix whose
+    /// timing the changed kernel can influence. Falls back to a scratch
+    /// run — bit-identical by the engine's determinism contract — whenever
+    /// the resume is not provably safe (invalid checkpoint, unmappable
+    /// accelerator layout, non-replay-safe timing model) or when the
+    /// `delta.plan` faultpoint forces it.
+    pub fn evaluate_delta(&mut self, codesign: &CoDesign) -> Option<DsePoint> {
+        Self::fault_eval_point(codesign);
+        // `delta.plan` is a *soft* faultpoint: an armed spec does not
+        // panic, it forces this point down the scratch fallback — the
+        // chaos suite uses it to prove fallback == delta == scratch.
+        let forced = crate::util::faultpoint::armed()
+            && crate::util::faultpoint::hit_tagged(
+                "delta.plan",
+                crate::util::faultpoint::str_tag(&codesign.name),
+            )
+            .is_err();
+        let mut resolved = match self.ctx.resolve(codesign) {
+            Ok(x) => Some(x),
+            Err(_) => return None, // unrunnable either way
+        };
+        if !forced && self.ckpt.is_valid() {
+            let (accels, smp) = resolved.take().expect("resolved above");
+            if let Some(res) = self.sim.resume_mut(&mut self.model, &self.ckpt, accels, smp) {
+                self.delta.hits += 1;
+                self.delta.suffix_events +=
+                    self.sim.events_processed() - self.ckpt.events();
+                self.delta.total_events += self.sim.events_processed();
+                return Some(self.ctx.point_from(codesign, &res));
+            }
+        }
+        // Scratch fallback. `resume_mut` consumed the resolved instances
+        // (and may have partially reset the simulator), so re-resolve and
+        // rebuild run state from zero.
+        self.delta.fallbacks += 1;
+        let (accels, smp) = match resolved {
+            Some(x) => x,
+            None => self.ctx.resolve(codesign).ok()?,
+        };
+        self.sim.reset_owned(accels, smp);
+        let res = self.sim.run_mut(&mut self.model);
+        Some(self.ctx.point_from(codesign, &res))
+    }
+
+    /// Accumulated delta counters (monotonic over this worker's life).
+    pub fn delta_stats(&self) -> DeltaStats {
+        self.delta
     }
 }
 
@@ -844,38 +1118,64 @@ impl<'p> SweepSuite<'p> {
     /// Evaluate a flattened `(application, candidate index)` work list
     /// through one shared worker pool: one lazily-built worker (simulator
     /// + model) per thread per application, reused for every point that
-    /// thread evaluates for that application. Results come back sorted by
+    /// thread evaluates for that application. The work list is partitioned
+    /// into neighbor chains ([`delta_chains`]; chains never cross
+    /// applications), so consecutive same-app candidates differing in one
+    /// kernel ride the delta path. Results come back sorted by
     /// `(application, enumeration index)` — the merge order every suite
     /// sweep (cold, warm, exhaustive) shares, which is what makes them
     /// all bit-identical for any worker count. Points whose evaluation
     /// panicked come back separately as sorted `(application, candidate)`
-    /// poison records; the pool survives them.
+    /// poison records; the pool survives them. The third element is the
+    /// per-application delta counter set.
     fn evaluate_flat(
         &self,
         per_app: &[Vec<CoDesign>],
         flat: &[(usize, usize)],
         workers: usize,
-    ) -> (Vec<(usize, usize, DsePoint)>, Vec<(usize, usize)>) {
-        let workers = workers.clamp(1, flat.len().max(1));
+    ) -> (
+        Vec<(usize, usize, DsePoint)>,
+        Vec<(usize, usize)>,
+        Vec<DeltaStats>,
+    ) {
+        let chains = delta_chains(flat.len(), |j| {
+            let (ai, ci) = flat[j];
+            let (pai, pci) = flat[j - 1];
+            if ai != pai {
+                return None; // chains never cross applications
+            }
+            single_kernel_diff(self.apps[ai].ctx.program, &per_app[ai][pci], &per_app[ai][ci])
+        });
+        let workers = workers.clamp(1, chains.len().max(1));
         let mut slots: Vec<Vec<Option<SweepWorker<'_, 'p>>>> = (0..workers)
             .map(|_| (0..self.apps.len()).map(|_| None).collect())
             .collect();
-        let (mut indexed, poisoned) = parallel_for_indexed_isolated(
-            &mut slots,
-            flat.len(),
-            |pool, i| {
-                let (ai, ci) = flat[i];
-                let w = pool[ai].get_or_insert_with(|| self.apps[ai].ctx.worker());
-                w.evaluate(&per_app[ai][ci]).map(|p| (ai, ci, p))
-            },
-            // A panic can unwind mid-simulation, so every worker in the
-            // poisoned slot is rebuilt rather than trusted.
-            |pool| pool.iter_mut().for_each(|w| *w = None),
-        );
+        let outcomes = parallel_for_indexed(&mut slots, chains.len(), |pool, c| {
+            let chain = chains[c];
+            let ai = flat[chain.start].0;
+            let out = evaluate_chain(
+                &mut pool[ai],
+                || self.apps[ai].ctx.worker(),
+                chain,
+                |i| &per_app[ai][flat[i].1],
+            );
+            Some((ai, out))
+        });
+        let mut indexed: Vec<(usize, usize, DsePoint)> = Vec::with_capacity(flat.len());
+        let mut poisoned: Vec<(usize, usize)> = Vec::new();
+        let mut delta = vec![DeltaStats::default(); self.apps.len()];
+        for (ai, out) in outcomes {
+            delta[ai].merge(&out.stats);
+            for (i, p) in out.results {
+                indexed.push((ai, flat[i].1, p));
+            }
+            for i in out.poisoned {
+                poisoned.push(flat[i]);
+            }
+        }
         indexed.sort_unstable_by_key(|&(ai, ci, _)| (ai, ci));
-        let mut poisoned: Vec<(usize, usize)> = poisoned.into_iter().map(|i| flat[i]).collect();
         poisoned.sort_unstable();
-        (indexed, poisoned)
+        (indexed, poisoned, delta)
     }
 
     /// Exhaustively sweep every application in a single pass over one
@@ -893,7 +1193,7 @@ impl<'p> SweepSuite<'p> {
             .enumerate()
             .flat_map(|(ai, cands)| (0..cands.len()).map(move |ci| (ai, ci)))
             .collect();
-        let (indexed, poisoned) = self.evaluate_flat(&per_app, &flat, workers);
+        let (indexed, poisoned, delta) = self.evaluate_flat(&per_app, &flat, workers);
         let mut results: Vec<SuiteAppResult> = self
             .apps
             .iter()
@@ -903,6 +1203,10 @@ impl<'p> SweepSuite<'p> {
                 points: Vec::new(),
                 stats: super::prune::PruneStats {
                     feasible_points: per_app[ai].len() as u64,
+                    delta_hits: delta[ai].hits,
+                    delta_fallbacks: delta[ai].fallbacks,
+                    delta_suffix_events: delta[ai].suffix_events,
+                    delta_total_events: delta[ai].total_events,
                     ..Default::default()
                 },
             })
@@ -1035,7 +1339,7 @@ impl<'p> SweepSuite<'p> {
                 }
             }
         }
-        let (indexed, poisoned) = self.evaluate_flat(&per_app, &flat, workers);
+        let (indexed, poisoned, delta) = self.evaluate_flat(&per_app, &flat, workers);
         // Record both levels, then assemble per-app results.
         let mut fresh: Vec<Vec<(usize, DsePoint)>> =
             (0..self.apps.len()).map(|_| Vec::new()).collect();
@@ -1070,6 +1374,10 @@ impl<'p> SweepSuite<'p> {
                     - fresh[ai].len() as u64
                     - hits[ai].len() as u64
                     - poisoned_per_app[ai],
+                delta_hits: delta[ai].hits,
+                delta_fallbacks: delta[ai].fallbacks,
+                delta_suffix_events: delta[ai].suffix_events,
+                delta_total_events: delta[ai].total_events,
                 ..Default::default()
             };
             points.sort_by(|a, b| a.score(objective).partial_cmp(&b.score(objective)).unwrap());

@@ -195,6 +195,18 @@ pub trait TimingModel {
         true
     }
 
+    /// Whether every cost method is a pure function of its arguments — no
+    /// internal state evolving from call to call. Replay-safe models allow
+    /// the engine's checkpoint/resume delta path
+    /// ([`Simulator::run_mut_with_checkpoint`] /
+    /// [`Simulator::resume_mut`]): a suffix replayed from a snapshot must
+    /// see exactly the costs a scratch run would. Stateful models (the
+    /// PRNG-seeded board emulator) keep the `false` default, which forces
+    /// scratch evaluation.
+    fn replay_safe(&self) -> bool {
+        false
+    }
+
     /// Task-creation cost on the SMP (§IV creation-cost tasks).
     fn creation_ps(&mut self, board: &BoardConfig) -> Ps;
     /// Task-body latency on an ARM core.
@@ -339,6 +351,110 @@ enum ProducerClass {
     Fpga,
 }
 
+/// Which simulation prefix is provably independent of one kernel's
+/// accelerator / SMP option, derived from the elaborated dependence graph:
+/// per-task bitmaps of "belongs to the changed kernel" and "completing
+/// this task can ready a changed-kernel task". Built once per neighbor
+/// chain in a sweep and shared by every pair in the chain (see
+/// [`crate::dse::sweep`]); [`Simulator::run_mut_with_checkpoint`] consults
+/// it to place the checkpoint.
+pub struct DeltaPlan {
+    kernel: KernelId,
+    /// task → belongs to the changed kernel.
+    is_kernel_task: Vec<bool>,
+    /// task → some data successor belongs to the changed kernel.
+    readies_kernel_task: Vec<bool>,
+}
+
+impl DeltaPlan {
+    /// Build the trigger tables for `kernel` over one elaborated program.
+    pub fn new(program: &TaskProgram, elab: &ElabProgram, kernel: KernelId) -> Self {
+        assert_eq!(program.tasks.len(), elab.n_tasks);
+        let is_kernel_task: Vec<bool> =
+            program.tasks.iter().map(|t| t.kernel == kernel).collect();
+        let readies_kernel_task = (0..elab.n_tasks)
+            .map(|t| {
+                elab.data_succs[t]
+                    .iter()
+                    .any(|&s| is_kernel_task[s as usize])
+            })
+            .collect();
+        DeltaPlan {
+            kernel,
+            is_kernel_task,
+            readies_kernel_task,
+        }
+    }
+
+    /// The kernel whose option differs between the chained candidates.
+    pub fn kernel(&self) -> KernelId {
+        self.kernel
+    }
+}
+
+/// A resumable snapshot of the simulator's dynamic state, captured by
+/// [`Simulator::run_mut_with_checkpoint`] immediately before the first
+/// event whose processing could observe the [`DeltaPlan`] kernel's
+/// configuration, and restored under a neighboring co-design by
+/// [`Simulator::resume_mut`]. All buffers are reused across captures, so
+/// one long-lived checkpoint per sweep worker costs no steady-state
+/// allocation.
+#[derive(Default)]
+pub struct SimCheckpoint {
+    valid: bool,
+    now: Ps,
+    seq: u64,
+    events_processed: u64,
+    /// Flat copy of the event heap (order-insensitive; see
+    /// `save_checkpoint`).
+    heap: Vec<Entry>,
+    free_cores: VecDeque<u32>,
+    ready_smp: VecDeque<SmpNode>,
+    next_creation: TaskId,
+    preds_left: Vec<u32>,
+    dispatched: Vec<bool>,
+    completed: Vec<bool>,
+    n_completed: usize,
+    accel_free: Vec<bool>,
+    accel_q: Vec<VecDeque<TaskId>>,
+    accel_backlog: Vec<usize>,
+    submit_busy: bool,
+    submit_q: VecDeque<SubmitJob>,
+    chan_busy: Vec<bool>,
+    chan_q: Vec<VecDeque<DmaJob>>,
+    active_dma_streams: u32,
+    busy_acc: Vec<Ps>,
+    tasks_on_smp: usize,
+    tasks_on_accel: usize,
+    /// Kernel of each flat accelerator index at capture — the key for the
+    /// `(kernel, ordinal)` remap on restore.
+    accel_kernels: Vec<KernelId>,
+    smp_cores: u32,
+}
+
+impl SimCheckpoint {
+    /// An empty (invalid) checkpoint buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether a capture succeeded and the checkpoint can be resumed.
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Drop the capture (e.g. when a worker moves to an unrelated chain).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Events the captured prefix had processed — the complement of the
+    /// replayed suffix in reuse accounting.
+    pub fn events(&self) -> u64 {
+        self.events_processed
+    }
+}
+
 /// The simulator.
 ///
 /// Construct one per (program, policy) and call [`Simulator::run`] with a
@@ -388,6 +504,9 @@ pub struct Simulator<'a> {
     /// Set from `TimingModel::needs_coherence` at run start.
     track_coherence: bool,
     active_dma_streams: u32,
+    /// Events popped since the last reset — a deterministic progress
+    /// counter the delta path derives evaluated-suffix fractions from.
+    events_processed: u64,
 
     segments: Vec<Segment>,
     /// When false (sweep mode), skip building `segments` entirely; busy
@@ -442,6 +561,7 @@ impl<'a> Simulator<'a> {
             producer: FxHashMap::default(),
             track_coherence: true,
             active_dma_streams: 0,
+            events_processed: 0,
             segments: Vec::with_capacity(elab.n_tasks * 4),
             record_segments: true,
             busy_acc: Vec::new(),
@@ -525,6 +645,7 @@ impl<'a> Simulator<'a> {
 
         self.producer.clear();
         self.active_dma_streams = 0;
+        self.events_processed = 0;
 
         self.segments.clear();
         self.busy_acc.clear();
@@ -636,24 +757,42 @@ impl<'a> Simulator<'a> {
     /// before every subsequent `run_mut`.
     pub fn run_mut(&mut self, timing: &mut dyn TimingModel) -> SimResult {
         self.track_coherence = timing.needs_coherence();
-        // Seed: first creation task.
+        self.seed(timing);
+        self.drain_events(timing);
+        self.finish()
+    }
+
+    /// Enqueue the first creation task and fill the free cores.
+    fn seed(&mut self, timing: &mut dyn TimingModel) {
         if self.elab.n_tasks > 0 {
             self.ready_smp.push_back(SmpNode::Creation(0));
             self.next_creation = 1;
         }
         self.dispatch_smp(timing);
+    }
 
+    /// Pop and process events until the heap runs dry.
+    fn drain_events(&mut self, timing: &mut dyn TimingModel) {
         while let Some(Reverse(e)) = self.heap.pop() {
             debug_assert!(e.time >= self.now);
             self.now = e.time;
-            match e.ev {
-                Ev::SmpDone { core, node } => self.on_smp_done(core, node, timing),
-                Ev::AccelDone { accel, task } => self.on_accel_done(accel, task, timing),
-                Ev::SubmitDone { job } => self.on_submit_done(job, timing),
-                Ev::DmaDone { chan, job } => self.on_dma_done(chan, job, timing),
-            }
+            self.events_processed += 1;
+            self.step(e.ev, timing);
         }
+    }
 
+    #[inline]
+    fn step(&mut self, ev: Ev, timing: &mut dyn TimingModel) {
+        match ev {
+            Ev::SmpDone { core, node } => self.on_smp_done(core, node, timing),
+            Ev::AccelDone { accel, task } => self.on_accel_done(accel, task, timing),
+            Ev::SubmitDone { job } => self.on_submit_done(job, timing),
+            Ev::DmaDone { chan, job } => self.on_dma_done(chan, job, timing),
+        }
+    }
+
+    /// Assemble the [`SimResult`] once the event heap is empty.
+    fn finish(&mut self) -> SimResult {
         assert_eq!(
             self.n_completed, self.elab.n_tasks,
             "deadlock: {}/{} tasks completed",
@@ -693,6 +832,253 @@ impl<'a> Simulator<'a> {
             tasks_on_accel: self.tasks_on_accel,
             accel_kernels,
         }
+    }
+
+    // --- incremental re-simulation (delta path) ------------------------------
+
+    /// Events popped since the last reset (or injected checkpoint).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Like [`Simulator::run_mut`], but additionally captures a
+    /// [`SimCheckpoint`] immediately **before** the first event whose
+    /// processing could make a task of `plan`'s kernel ready — the longest
+    /// prefix whose schedule provably never reads that kernel's
+    /// configuration (its accelerator instances, variant reports or SMP
+    /// eligibility). The checkpoint is left invalid when the trigger fires
+    /// before any event was processed (the changed kernel sits at the DAG
+    /// root, so there is nothing to reuse), when the timing model is not
+    /// [`TimingModel::replay_safe`], or when coherence tracking / segment
+    /// recording is on (that state is not snapshotted). The returned
+    /// result is bit-identical to [`Simulator::run_mut`] in every case.
+    pub fn run_mut_with_checkpoint(
+        &mut self,
+        timing: &mut dyn TimingModel,
+        plan: &DeltaPlan,
+        ckpt: &mut SimCheckpoint,
+    ) -> SimResult {
+        self.track_coherence = timing.needs_coherence();
+        ckpt.valid = false;
+        self.seed(timing);
+        let can_snapshot =
+            timing.replay_safe() && !self.track_coherence && !self.record_segments;
+        while let Some(&Reverse(e)) = self.heap.peek() {
+            if self.is_delta_trigger(plan, &e.ev) {
+                if can_snapshot && self.events_processed > 0 {
+                    self.save_checkpoint(ckpt);
+                }
+                break;
+            }
+            let Reverse(e) = self.heap.pop().unwrap();
+            debug_assert!(e.time >= self.now);
+            self.now = e.time;
+            self.events_processed += 1;
+            self.step(e.ev, timing);
+        }
+        self.drain_events(timing);
+        self.finish()
+    }
+
+    /// Restart from a checkpoint under a neighboring co-design: rebuild
+    /// the per-candidate layout, inject the snapshot — remapping flat
+    /// accelerator indices by `(kernel, ordinal)` where instance counts
+    /// shifted — and replay only the suffix. Returns `None` (leaving the
+    /// simulator in need of a reset) whenever the restore is not provably
+    /// safe: invalid checkpoint, non-replay-safe timing model, coherence
+    /// tracking or segment recording on, a changed shared-DMA-channel
+    /// count (`dma_out_scales` boards whose accelerator total moved), or a
+    /// snapshot reference to an accelerator instance the new co-design no
+    /// longer has. Callers fall back to scratch evaluation; on `Some`, the
+    /// result is bit-identical to a scratch [`Simulator::run_mut`].
+    pub fn resume_mut(
+        &mut self,
+        timing: &mut dyn TimingModel,
+        ckpt: &SimCheckpoint,
+        accels: Vec<AccelInstance>,
+        smp_eligible: Vec<bool>,
+    ) -> Option<SimResult> {
+        self.track_coherence = timing.needs_coherence();
+        if !ckpt.valid
+            || !timing.replay_safe()
+            || self.track_coherence
+            || self.record_segments
+            || ckpt.smp_cores != self.board.smp_cores
+        {
+            return None;
+        }
+        self.reset_owned(accels, smp_eligible);
+        if self.chan_busy.len() != ckpt.chan_busy.len() {
+            return None;
+        }
+        // Flat accelerator indices shift when an earlier kernel's instance
+        // count changes; identify instances by (kernel, ordinal) instead.
+        // Unmapped entries belong to the changed kernel, which the prefix
+        // provably never touched — any reference to one aborts the resume.
+        let mut map: Vec<Option<u32>> = Vec::with_capacity(ckpt.accel_kernels.len());
+        let mut ord = vec![0usize; self.program.kernels.len()];
+        for &k in &ckpt.accel_kernels {
+            let o = ord[k as usize];
+            ord[k as usize] += 1;
+            map.push(self.kernel_accels[k as usize].get(o).copied());
+        }
+        let remap = |a: u32| map[a as usize];
+        self.now = ckpt.now;
+        self.seq = ckpt.seq;
+        self.events_processed = ckpt.events_processed;
+        self.heap.clear();
+        for &e in &ckpt.heap {
+            let ev = match e.ev {
+                Ev::AccelDone { accel, task } => Ev::AccelDone {
+                    accel: remap(accel)?,
+                    task,
+                },
+                Ev::SubmitDone { job } => Ev::SubmitDone {
+                    job: SubmitJob {
+                        accel: remap(job.accel)?,
+                        ..job
+                    },
+                },
+                Ev::DmaDone { chan, job } => Ev::DmaDone {
+                    chan,
+                    job: DmaJob {
+                        accel: remap(job.accel)?,
+                        ..job
+                    },
+                },
+                smp @ Ev::SmpDone { .. } => smp,
+            };
+            self.heap.push(Reverse(Entry { ev, ..e }));
+        }
+        self.free_cores.clone_from(&ckpt.free_cores);
+        self.ready_smp.clone_from(&ckpt.ready_smp);
+        self.next_creation = ckpt.next_creation;
+        self.preds_left.clone_from(&ckpt.preds_left);
+        self.dispatched.clone_from(&ckpt.dispatched);
+        self.completed.clone_from(&ckpt.completed);
+        self.n_completed = ckpt.n_completed;
+        // The new co-design may have more or fewer instances of the
+        // changed kernel than the snapshot; those are all still free.
+        for f in &mut self.accel_free {
+            *f = true;
+        }
+        for (i, &free) in ckpt.accel_free.iter().enumerate() {
+            match map[i] {
+                Some(ni) => self.accel_free[ni as usize] = free,
+                None => debug_assert!(free, "changed-kernel instance busy in prefix"),
+            }
+        }
+        for (q, cq) in self.accel_q.iter_mut().zip(&ckpt.accel_q) {
+            q.clone_from(cq);
+        }
+        self.accel_backlog.clone_from(&ckpt.accel_backlog);
+        self.submit_busy = ckpt.submit_busy;
+        self.submit_q.clear();
+        for &job in &ckpt.submit_q {
+            let accel = remap(job.accel)?;
+            self.submit_q.push_back(SubmitJob { accel, ..job });
+        }
+        self.chan_busy.clone_from(&ckpt.chan_busy);
+        for (q, cq) in self.chan_q.iter_mut().zip(&ckpt.chan_q) {
+            q.clear();
+            for &job in cq {
+                let accel = remap(job.accel)?;
+                q.push_back(DmaJob { accel, ..job });
+            }
+        }
+        self.active_dma_streams = ckpt.active_dma_streams;
+        // Busy accumulators: [smp cores | accels | submit | chans], with
+        // the accel block permuted through the same (kernel, ordinal) map.
+        let cores = self.board.smp_cores as usize;
+        let old_acc = ckpt.accel_kernels.len();
+        let new_acc = self.accels.len();
+        self.busy_acc[..cores].copy_from_slice(&ckpt.busy_acc[..cores]);
+        for (i, m) in map.iter().enumerate() {
+            let busy = ckpt.busy_acc[cores + i];
+            match *m {
+                Some(ni) => self.busy_acc[cores + ni as usize] = busy,
+                None => debug_assert_eq!(busy, 0),
+            }
+        }
+        self.busy_acc[cores + new_acc] = ckpt.busy_acc[cores + old_acc];
+        for c in 0..self.chan_busy.len() {
+            self.busy_acc[cores + new_acc + 1 + c] = ckpt.busy_acc[cores + old_acc + 1 + c];
+        }
+        self.tasks_on_smp = ckpt.tasks_on_smp;
+        self.tasks_on_accel = ckpt.tasks_on_accel;
+        self.drain_events(timing);
+        Some(self.finish())
+    }
+
+    /// Would processing `ev` call `make_ready` on a task of the plan's
+    /// kernel? Exact — checked against the live `preds_left` counters, so
+    /// an event that merely *decrements* a changed-kernel task's counter
+    /// keeps the prefix going. `make_ready` is the first (and only) point
+    /// the engine reads a kernel's configuration for one of its tasks, so
+    /// snapshotting before this event is what makes the prefix reusable.
+    fn is_delta_trigger(&self, plan: &DeltaPlan, ev: &Ev) -> bool {
+        match *ev {
+            Ev::SmpDone {
+                node: SmpNode::Creation(t),
+                ..
+            } => plan.is_kernel_task[t as usize] && self.preds_left[t as usize] == 1,
+            Ev::SmpDone {
+                node: SmpNode::Compute(t),
+                ..
+            } => self.completion_readies(plan, t),
+            Ev::AccelDone { task, .. } => {
+                // Completes immediately only when there is no output DMA.
+                self.elab.xfers[task as usize].bytes_out == 0
+                    && self.completion_readies(plan, task)
+            }
+            Ev::DmaDone { job, .. } => {
+                job.dir == XferDir::Out && self.completion_readies(plan, job.task)
+            }
+            Ev::SubmitDone { .. } => false,
+        }
+    }
+
+    /// Whether completing `task` right now would ready a changed-kernel
+    /// successor.
+    fn completion_readies(&self, plan: &DeltaPlan, task: TaskId) -> bool {
+        plan.readies_kernel_task[task as usize]
+            && self.elab.data_succs[task as usize]
+                .iter()
+                .any(|&s| plan.is_kernel_task[s as usize] && self.preds_left[s as usize] == 1)
+    }
+
+    /// Snapshot every piece of dynamic state into `ckpt`, reusing its
+    /// buffers. The heap is stored as a flat entry list: the total
+    /// `(time, seq)` order makes pop order independent of the internal
+    /// arrangement, so re-heapifying on restore is lossless.
+    fn save_checkpoint(&self, ckpt: &mut SimCheckpoint) {
+        ckpt.now = self.now;
+        ckpt.seq = self.seq;
+        ckpt.events_processed = self.events_processed;
+        ckpt.heap.clear();
+        ckpt.heap.extend(self.heap.iter().map(|r| r.0));
+        ckpt.free_cores.clone_from(&self.free_cores);
+        ckpt.ready_smp.clone_from(&self.ready_smp);
+        ckpt.next_creation = self.next_creation;
+        ckpt.preds_left.clone_from(&self.preds_left);
+        ckpt.dispatched.clone_from(&self.dispatched);
+        ckpt.completed.clone_from(&self.completed);
+        ckpt.n_completed = self.n_completed;
+        ckpt.accel_free.clone_from(&self.accel_free);
+        ckpt.accel_q.clone_from(&self.accel_q);
+        ckpt.accel_backlog.clone_from(&self.accel_backlog);
+        ckpt.submit_busy = self.submit_busy;
+        ckpt.submit_q.clone_from(&self.submit_q);
+        ckpt.chan_busy.clone_from(&self.chan_busy);
+        ckpt.chan_q.clone_from(&self.chan_q);
+        ckpt.active_dma_streams = self.active_dma_streams;
+        ckpt.busy_acc.clone_from(&self.busy_acc);
+        ckpt.tasks_on_smp = self.tasks_on_smp;
+        ckpt.tasks_on_accel = self.tasks_on_accel;
+        ckpt.accel_kernels.clear();
+        ckpt.accel_kernels.extend(self.accels.iter().map(|a| a.kernel));
+        ckpt.smp_cores = self.board.smp_cores;
+        ckpt.valid = true;
     }
 
     // --- SMP ---------------------------------------------------------------
@@ -1333,6 +1719,139 @@ mod tests {
             second.segments.capacity() <= recycled_cap.max(fresh.segments.capacity()),
             "recycling must not grow the pool beyond one run's footprint"
         );
+    }
+
+    /// Independent SMP producers (`ka`) each feeding one FPGA consumer
+    /// (`kb`) — the changed kernel sits strictly downstream, so a delta
+    /// checkpoint has a non-trivial prefix to reuse.
+    fn two_kernel_program(n: usize) -> TaskProgram {
+        let mut p = TaskProgram::new("twok");
+        let ka = p.add_kernel(KernelDecl {
+            name: "ka".into(),
+            targets: Targets::SMP,
+            profile: small_profile(),
+        });
+        let kb = p.add_kernel(KernelDecl {
+            name: "kb".into(),
+            targets: Targets::FPGA,
+            profile: heavy_profile(),
+        });
+        for i in 0..n as u64 {
+            p.add_task(ka, 50_000, vec![Dep::inout(0x1000 + i * 0x100, 256)]);
+            p.add_task(
+                kb,
+                10_000,
+                vec![
+                    Dep::input(0x1000 + i * 0x100, 256),
+                    Dep::inout(0x100_0000 + i * 0x4000, 16_384),
+                ],
+            );
+        }
+        p
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_scratch_run() {
+        let board = BoardConfig::zynq706();
+        let p = two_kernel_program(12);
+        let graph = DepGraph::build(&p);
+        let elab = ElabProgram::build(&p, &graph);
+        let part = FpgaPart::xc7z045();
+        let kb = p.kernel_id("kb").unwrap();
+        let head = CoDesign::new("1xkb4").with_accel("kb", 4);
+        // One unroll neighbor, one instance-count neighbor.
+        let neighbors = [
+            CoDesign::new("1xkb8").with_accel("kb", 8),
+            CoDesign::new("2xkb4").with_accel("kb", 4).with_accel("kb", 4),
+        ];
+        let (accels, smp) = resolve_codesign(&p, &head, &board, &part).unwrap();
+        let mut sim = Simulator::new(&p, &elab, &board, &accels, &smp, Policy::Greedy);
+        sim.set_record_segments(false);
+        let mut model = EstimatorModel::new(&board);
+        let plan = DeltaPlan::new(&p, &elab, kb);
+        let mut ckpt = SimCheckpoint::new();
+        let head_res = sim.run_mut_with_checkpoint(&mut model, &plan, &mut ckpt);
+        assert!(ckpt.is_valid(), "kb is downstream of ka: prefix must exist");
+        assert!(ckpt.events() > 0);
+        // The checkpointing run itself is bit-identical to a scratch run.
+        sim.reset(&accels, &smp);
+        let head_scratch = sim.run_mut(&mut model);
+        assert_eq!(head_res.makespan, head_scratch.makespan);
+        assert_eq!(head_res.device_busy, head_scratch.device_busy);
+        for cd in &neighbors {
+            let (na, ns) = resolve_codesign(&p, cd, &board, &part).unwrap();
+            let resumed = sim
+                .resume_mut(&mut model, &ckpt, na.clone(), ns.clone())
+                .expect("provably safe delta must resume");
+            let suffix = sim.events_processed() - ckpt.events();
+            assert!(suffix > 0, "{}: suffix must replay events", cd.name);
+            sim.reset(&na, &ns);
+            let scratch = sim.run_mut(&mut model);
+            assert_eq!(resumed.makespan, scratch.makespan, "{}", cd.name);
+            assert_eq!(resumed.device_busy, scratch.device_busy, "{}", cd.name);
+            assert_eq!(resumed.tasks_on_smp, scratch.tasks_on_smp, "{}", cd.name);
+            assert_eq!(resumed.tasks_on_accel, scratch.tasks_on_accel, "{}", cd.name);
+            assert_eq!(
+                sim.events_processed(),
+                ckpt.events() + suffix,
+                "scratch replays the same event count"
+            );
+        }
+    }
+
+    #[test]
+    fn root_kernel_delta_has_no_checkpoint() {
+        // The changed kernel's first task is the first thing the schedule
+        // readies: nothing precedes it, so there is no prefix to save and
+        // the delta must fall back to scratch.
+        let board = BoardConfig::zynq706();
+        let p = chain_program(10, Targets::FPGA);
+        let graph = DepGraph::build(&p);
+        let elab = ElabProgram::build(&p, &graph);
+        let part = FpgaPart::xc7z045();
+        let cd = CoDesign::new("1acc").with_accel("k", 4);
+        let (accels, smp) = resolve_codesign(&p, &cd, &board, &part).unwrap();
+        let mut sim = Simulator::new(&p, &elab, &board, &accels, &smp, Policy::Greedy);
+        sim.set_record_segments(false);
+        let mut model = EstimatorModel::new(&board);
+        let plan = DeltaPlan::new(&p, &elab, p.kernel_id("k").unwrap());
+        let mut ckpt = SimCheckpoint::new();
+        let res = sim.run_mut_with_checkpoint(&mut model, &plan, &mut ckpt);
+        assert!(!ckpt.is_valid(), "root-kernel change must not checkpoint");
+        // The run itself still completes and matches scratch.
+        sim.reset(&accels, &smp);
+        let scratch = sim.run_mut(&mut model);
+        assert_eq!(res.makespan, scratch.makespan);
+        // And an invalid checkpoint refuses to resume.
+        let (na, ns) = resolve_codesign(
+            &p,
+            &CoDesign::new("1acc8").with_accel("k", 8),
+            &board,
+            &part,
+        )
+        .unwrap();
+        assert!(sim.resume_mut(&mut model, &ckpt, na, ns).is_none());
+    }
+
+    #[test]
+    fn segment_recording_disables_checkpoint_capture() {
+        // Timeline segments are not snapshotted, so a recording run must
+        // never hand out a checkpoint (the delta path would silently drop
+        // prefix segments otherwise).
+        let board = BoardConfig::zynq706();
+        let p = two_kernel_program(4);
+        let graph = DepGraph::build(&p);
+        let elab = ElabProgram::build(&p, &graph);
+        let part = FpgaPart::xc7z045();
+        let cd = CoDesign::new("1xkb4").with_accel("kb", 4);
+        let (accels, smp) = resolve_codesign(&p, &cd, &board, &part).unwrap();
+        let mut sim = Simulator::new(&p, &elab, &board, &accels, &smp, Policy::Greedy);
+        let mut model = EstimatorModel::new(&board);
+        let plan = DeltaPlan::new(&p, &elab, p.kernel_id("kb").unwrap());
+        let mut ckpt = SimCheckpoint::new();
+        let res = sim.run_mut_with_checkpoint(&mut model, &plan, &mut ckpt);
+        assert!(!ckpt.is_valid());
+        assert!(!res.segments.is_empty());
     }
 
     #[test]

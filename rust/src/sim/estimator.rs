@@ -29,6 +29,14 @@ impl TimingModel for EstimatorModel {
         false // §VI: the coarse-grain estimator ignores cache coherence
     }
 
+    fn replay_safe(&self) -> bool {
+        // Every cost below is a closed form over (task, report, board) —
+        // no PRNG, no history — so a checkpointed suffix replay sees
+        // exactly the costs a scratch run would (the engine's delta path
+        // depends on this; see `Simulator::resume_mut`).
+        true
+    }
+
     fn creation_ps(&mut self, board: &BoardConfig) -> Ps {
         us_to_ps(board.task_creation_us)
     }

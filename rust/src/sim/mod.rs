@@ -19,8 +19,8 @@ use crate::coordinator::task::TaskProgram;
 use crate::hls::FpgaPart;
 
 pub use engine::{
-    resolve_codesign, AccelInstance, DeviceLabel, SegKind, Segment, SimResult, Simulator,
-    TaskCtx, TimingModel,
+    resolve_codesign, AccelInstance, DeltaPlan, DeviceLabel, SegKind, Segment, SimCheckpoint,
+    SimResult, Simulator, TaskCtx, TimingModel,
 };
 pub use estimator::EstimatorModel;
 

@@ -2,8 +2,9 @@
 //!
 //! A *faultpoint* is a named site in the code (the registered sites:
 //! `memo.save`, `memo.load`, `wal.append`, `wal.replay`, `eval.point`,
-//! `board.toml`, `sweep.round`, and the service daemon's overload sites
-//! `conn.read`, `conn.write`, `queue.admit`, `save.breaker`) that
+//! `delta.plan`, `board.toml`, `sweep.round`, and the service daemon's
+//! overload sites `conn.read`, `conn.write`, `queue.admit`,
+//! `save.breaker`) that
 //! normally does nothing and costs one
 //! relaxed atomic load. Arming a spec — from a test, `--faults` on the
 //! CLI, or the `ZYNQ_FAULTS` environment variable — makes the matching

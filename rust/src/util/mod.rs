@@ -12,6 +12,7 @@ pub mod fnv;
 pub mod fxhash;
 pub mod json;
 pub mod persist;
+pub mod profile;
 
 /// SplitMix64 — used to seed the main generator and as a cheap standalone
 /// stream. Reference: Steele, Lea, Flood. "Fast splittable pseudorandom

@@ -1,0 +1,120 @@
+//! Opt-in per-phase profiling for the CLI (`dse --profile`).
+//!
+//! Costs one relaxed atomic load when disabled. When enabled, named scopes
+//! ([`scope`]) accumulate wall-clock time and a hit count into a global
+//! table, and [`report`] renders the breakdown to one writer (the CLI
+//! points it at stderr so `--json` output stays clean). Wall-clock numbers
+//! are diagnostic only — everything CI gates on is a deterministic counter
+//! (see `util::bench_check`); the profile exists so a human can see where
+//! a sweep's time went (enumerate / prune / simulate / memo-io) without
+//! reaching for an external profiler.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PHASES: Mutex<Vec<(String, Duration, u64)>> = Mutex::new(Vec::new());
+
+/// Turn the profiler on (idempotent). There is deliberately no `disable`:
+/// the CLI enables it once per process, before any timed phase runs.
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether `--profile` is active.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Accumulates its scope's wall time into the named phase on drop.
+pub struct Guard {
+    name: &'static str,
+    start: Instant,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let dt = self.start.elapsed();
+        let mut phases = PHASES.lock().unwrap();
+        if let Some(row) = phases.iter_mut().find(|(n, _, _)| n == self.name) {
+            row.1 += dt;
+            row.2 += 1;
+        } else {
+            phases.push((self.name.to_string(), dt, 1));
+        }
+    }
+}
+
+/// Time a phase: hold the returned guard for the phase's duration. `None`
+/// (no timing, no lock) when the profiler is off, so call sites stay free
+/// on the default path.
+pub fn scope(name: &'static str) -> Option<Guard> {
+    if !enabled() {
+        return None;
+    }
+    Some(Guard {
+        name,
+        start: Instant::now(),
+    })
+}
+
+/// Drop all accumulated phases (tests; the CLI never needs it).
+pub fn reset() {
+    PHASES.lock().unwrap().clear();
+}
+
+/// Render the accumulated breakdown, longest phase first, plus any extra
+/// caller-provided lines (e.g. the delta-reuse rate, which is a counter
+/// ratio rather than a timing).
+pub fn report(out: &mut dyn std::io::Write, extra: &[String]) -> std::io::Result<()> {
+    let mut phases = PHASES.lock().unwrap().clone();
+    phases.sort_by(|a, b| b.1.cmp(&a.1));
+    let total: Duration = phases.iter().map(|p| p.1).sum();
+    writeln!(out, "--- profile ({:.3} s timed) ---", total.as_secs_f64())?;
+    for (name, dt, hits) in &phases {
+        let pct = if total.as_nanos() > 0 {
+            100.0 * dt.as_secs_f64() / total.as_secs_f64()
+        } else {
+            0.0
+        };
+        writeln!(
+            out,
+            "{name:<12} {:>9.3} s  {pct:>5.1}%  ({hits} call{})",
+            dt.as_secs_f64(),
+            if *hits == 1 { "" } else { "s" }
+        )?;
+    }
+    for line in extra {
+        writeln!(out, "{line}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_scope_is_free_and_enabled_scope_accumulates() {
+        // Off by default: no guard, nothing recorded.
+        reset();
+        assert!(scope("idle").is_none());
+        enable();
+        {
+            let _g = scope("phase-a");
+            let _h = scope("phase-a");
+        }
+        {
+            let _g = scope("phase-b");
+        }
+        let mut buf = Vec::new();
+        report(&mut buf, &["extra: 1".into()]).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("phase-a"), "missing phase-a in:\n{s}");
+        assert!(s.contains("2 calls"), "phase-a hit twice in:\n{s}");
+        assert!(s.contains("phase-b"));
+        assert!(s.contains("extra: 1"));
+        reset();
+    }
+}

@@ -1,14 +1,17 @@
 //! Sweep-engine guarantees: parallel `explore()` is bit-identical to the
-//! serial path (any worker count, any objective), and `SweepContext`
-//! cached estimation equals a fresh `sim::estimate` for random co-designs
-//! (seeded forall harness, same style as `proptests.rs`).
+//! serial path (any worker count, any objective), `SweepContext` cached
+//! estimation equals a fresh `sim::estimate` for random co-designs
+//! (seeded forall harness, same style as `proptests.rs`), and the
+//! delta-evaluation fast path (`SweepWorker::evaluate_delta`) is bitwise
+//! identical to the scratch oracle across random neighbor chains, all
+//! three pruned order modes, and worker counts 1/2/4.
 
 use zynq_estimator::apps::{cholesky::Cholesky, matmul::Matmul};
 use zynq_estimator::config::{BoardConfig, CoDesign};
 use zynq_estimator::coordinator::task::{
     Dep, Dir, KernelDecl, KernelProfile, TaskProgram, Targets,
 };
-use zynq_estimator::dse::{sweep, DsePoint, DseSpace, Objective, SweepContext};
+use zynq_estimator::dse::{sweep, DsePoint, DseSpace, Objective, OrderMode, SweepContext};
 use zynq_estimator::hls::FpgaPart;
 use zynq_estimator::util::Rng;
 
@@ -285,4 +288,291 @@ fn prop_worker_reuse_is_stateless_across_points() {
             _ => panic!("seed {seed}: reused worker changed feasibility"),
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Incremental re-simulation (delta-evaluation of neighboring sweep points).
+// Contract under test: delta == scratch, bit for bit, for every point and
+// every worker count; the reuse counters are a pure function of the
+// candidate list (never of thread timing); an unsafe delta (changed kernel
+// at the critical-path root) falls back to scratch.
+// ---------------------------------------------------------------------------
+
+/// Two-kernel pipeline with the changed kernel *off* the critical-path
+/// root: every `tail` task reads a block a `head` task wrote, so the first
+/// event whose timing depends on `tail` comes strictly after the head
+/// work — a tail-only delta has a non-empty reusable prefix by
+/// construction.
+fn head_tail_program() -> TaskProgram {
+    let mut p = TaskProgram::new("headtail");
+    for name in ["head", "tail"] {
+        p.add_kernel(KernelDecl {
+            name: name.to_string(),
+            targets: Targets {
+                smp: true,
+                fpga: true,
+            },
+            profile: KernelProfile {
+                flops: 200_000,
+                inner_trip: 100_000,
+                in_bytes: 16_384,
+                out_bytes: 8_192,
+                dtype_bytes: 4,
+                divsqrt: false,
+            },
+        });
+    }
+    for i in 0..4u64 {
+        p.add_task(
+            0,
+            500_000,
+            vec![Dep {
+                addr: 0x1000 + i * 0x100,
+                len: 4096,
+                dir: Dir::Out,
+            }],
+        );
+    }
+    for i in 0..4u64 {
+        p.add_task(
+            1,
+            500_000,
+            vec![Dep {
+                addr: 0x1000 + i * 0x100,
+                len: 4096,
+                dir: Dir::In,
+            }],
+        );
+    }
+    p
+}
+
+/// A neighbor chain over [`head_tail_program`]: consecutive candidates
+/// differ only in `tail`'s unroll, so `delta_chains` keeps them in one
+/// chain. `prefix` keeps candidate names unique per test — the tagged
+/// `delta.plan` faultpoint test must never match another test's points.
+fn tail_chain(prefix: &str, n: usize) -> Vec<CoDesign> {
+    (0..n)
+        .map(|i| {
+            let unroll = 1u32 << (i + 1);
+            CoDesign::new(format!("{prefix}-u{unroll}"))
+                .with_accel("head", 4)
+                .with_accel("tail", unroll)
+        })
+        .collect()
+}
+
+#[test]
+fn neighbor_chain_reuses_prefix_and_matches_scratch() {
+    let board = BoardConfig::zynq706();
+    let p = head_tail_program();
+    let ctx = SweepContext::new(&p, &board, FpgaPart::xc7z045());
+    let cands = tail_chain("tail", 5);
+    let mut w = ctx.worker();
+    let oracle: Vec<DsePoint> = cands.iter().filter_map(|cd| w.evaluate(cd)).collect();
+    assert_eq!(oracle.len(), cands.len(), "all chain points must be runnable");
+    let mut per_workers = Vec::new();
+    for workers in [1, 2, 4] {
+        let (points, stats) = ctx.evaluate_all_with_stats(&cands, workers);
+        assert_points_bit_identical(&oracle, &points, &format!("headtail workers={workers}"));
+        assert!(
+            stats.hits > 0,
+            "workers={workers}: no delta hit on a chain built for one: {stats:?}"
+        );
+        assert!(
+            stats.suffix_events < stats.total_events,
+            "workers={workers}: reused prefix must shrink the replayed suffix: {stats:?}"
+        );
+        per_workers.push(stats);
+    }
+    assert!(
+        per_workers.windows(2).all(|s| s[0] == s[1]),
+        "delta counters depend on worker count: {per_workers:?}"
+    );
+}
+
+#[test]
+fn root_kernel_chain_falls_back_to_scratch() {
+    // Matmul has exactly one kernel, so the changed kernel sits at the
+    // critical-path root: the first simulated event already depends on it,
+    // no checkpoint can be captured, and every non-head chain position
+    // must take the scratch fallback — with unchanged results.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Matmul::new(256, 64).build_program(&board);
+    let space = DseSpace::from_program(&program);
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let cands = ctx.enumerate(&space);
+    assert!(cands.len() > 1, "need a chain to exercise the delta path");
+    let mut w = ctx.worker();
+    let oracle: Vec<DsePoint> = cands.iter().filter_map(|cd| w.evaluate(cd)).collect();
+    let (points, stats) = ctx.evaluate_all_with_stats(&cands, 2);
+    assert_points_bit_identical(&oracle, &points, "matmul root fallback");
+    assert_eq!(
+        stats.hits, 0,
+        "a root-kernel delta must never be applied: {stats:?}"
+    );
+    assert!(
+        stats.fallbacks > 0,
+        "the chain's non-head positions must fall back to scratch: {stats:?}"
+    );
+}
+
+#[test]
+fn prop_delta_evaluation_is_bit_identical_to_scratch() {
+    // Random programs, random neighbor chains (consecutive candidates
+    // differ in at most one kernel's variants — the odometer property
+    // `delta_chains` exploits): the chained evaluation equals the
+    // per-point scratch oracle bit for bit, and the reuse counters are
+    // identical for workers 1, 2 and 4.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    forall(40, 0xDE17A, |seed, rng| {
+        let p = random_program(rng);
+        let fpga: Vec<String> = p
+            .kernels
+            .iter()
+            .filter(|k| k.targets.fpga)
+            .map(|k| k.name.clone())
+            .collect();
+        if fpga.is_empty() {
+            return;
+        }
+        let varied = fpga[rng.gen_range(0, fpga.len() as u64) as usize].clone();
+        // Fixed base option per non-varied kernel; the varied kernel gets
+        // a fresh random option at every chain position.
+        let mut base: Vec<(String, u64, u32, bool)> = Vec::new();
+        for name in &fpga {
+            if *name == varied {
+                continue;
+            }
+            let n_acc = rng.gen_range(0, 3);
+            let unroll = 1u32 << rng.gen_range(1, 5);
+            let smp = n_acc > 0 && rng.next_f64() < 0.5;
+            base.push((name.clone(), n_acc, unroll, smp));
+        }
+        let len = rng.gen_range(2, 7);
+        let mut chain = Vec::new();
+        for i in 0..len {
+            let mut cd = CoDesign::new(format!("chain-{i}"));
+            for (name, n_acc, unroll, smp) in &base {
+                for _ in 0..*n_acc {
+                    cd = cd.with_accel(name, *unroll);
+                }
+                if *smp {
+                    cd = cd.with_smp(name);
+                }
+            }
+            let n_acc = rng.gen_range(1, 4);
+            let unroll = 1u32 << rng.gen_range(1, 5);
+            for _ in 0..n_acc {
+                cd = cd.with_accel(&varied, unroll);
+            }
+            if rng.next_f64() < 0.5 {
+                cd = cd.with_smp(&varied);
+            }
+            chain.push(cd);
+        }
+        let ctx = SweepContext::new(&p, &board, part.clone());
+        let mut w = ctx.worker();
+        let oracle: Vec<DsePoint> = chain.iter().filter_map(|cd| w.evaluate(cd)).collect();
+        let mut per_workers = Vec::new();
+        for workers in [1, 2, 4] {
+            let (points, stats) = ctx.evaluate_all_with_stats(&chain, workers);
+            assert_points_bit_identical(
+                &oracle,
+                &points,
+                &format!("seed {seed} workers={workers}"),
+            );
+            per_workers.push(stats);
+        }
+        assert!(
+            per_workers.windows(2).all(|s| s[0] == s[1]),
+            "seed {seed}: delta counters depend on worker count: {per_workers:?}"
+        );
+    });
+}
+
+#[test]
+fn pruned_explore_delta_matches_scratch_across_order_modes() {
+    // All three candidate orders of the bound-guided sweep run on top of
+    // the same chain executor: rankings and delta counters must be
+    // bit-identical for workers 1/2/4, and every evaluated point must
+    // equal a scratch re-evaluation of its co-design.
+    let board = BoardConfig::zynq706();
+    let part = FpgaPart::xc7z045();
+    let program = Cholesky::new(256, 64).build_program(&board);
+    let space = DseSpace::from_program(&program);
+    let ctx = SweepContext::for_space(&program, &board, &part, &space);
+    let mut oracle = ctx.worker();
+    for order in [OrderMode::Fifo, OrderMode::BoundAsc, OrderMode::Ranked] {
+        let (serial, serial_stats) = ctx.explore_pruned_with(&space, Objective::Time, 1, order);
+        assert!(!serial.is_empty(), "{order:?}: empty pruned ranking");
+        for p in &serial {
+            let fresh = oracle
+                .evaluate(&p.codesign)
+                .expect("an evaluated point is runnable");
+            assert_eq!(
+                p.est_ms.to_bits(),
+                fresh.est_ms.to_bits(),
+                "{order:?}: delta diverged from scratch for {}",
+                p.codesign.name
+            );
+            assert_eq!(
+                p.energy_j.to_bits(),
+                fresh.energy_j.to_bits(),
+                "{order:?}: energy diverged from scratch for {}",
+                p.codesign.name
+            );
+        }
+        for workers in [2, 4] {
+            let (points, stats) = ctx.explore_pruned_with(&space, Objective::Time, workers, order);
+            assert_points_bit_identical(
+                &serial,
+                &points,
+                &format!("{order:?} workers={workers}"),
+            );
+            assert_eq!(
+                serial_stats, stats,
+                "{order:?} workers={workers}: prune/delta counters diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_delta_plan_fault_falls_back_without_changing_results() {
+    // `delta.plan` is a *soft* faultpoint: an armed spec forces the
+    // scratch fallback (it never errors or panics), so results must be
+    // byte-identical with and without it. Tag the specs to this test's
+    // candidate names so concurrent tests in this binary never match.
+    use zynq_estimator::util::faultpoint;
+    let board = BoardConfig::zynq706();
+    let p = head_tail_program();
+    let ctx = SweepContext::new(&p, &board, FpgaPart::xc7z045());
+    let cands = tail_chain("forced", 4);
+    let (clean, clean_stats) = ctx.evaluate_all_with_stats(&cands, 2);
+    assert!(
+        clean_stats.hits > 0,
+        "precondition: the chain must hit the delta path: {clean_stats:?}"
+    );
+    let spec = cands
+        .iter()
+        .skip(1)
+        .map(|c| format!("delta.plan#{:x}", faultpoint::str_tag(&c.name)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let guard = faultpoint::arm(&spec).unwrap();
+    let (forced, forced_stats) = ctx.evaluate_all_with_stats(&cands, 2);
+    drop(guard);
+    assert_points_bit_identical(&clean, &forced, "forced delta.plan fallback");
+    assert_eq!(
+        forced_stats.hits, 0,
+        "every non-head position must be forced to scratch: {forced_stats:?}"
+    );
+    assert_eq!(
+        forced_stats.fallbacks,
+        clean_stats.hits + clean_stats.fallbacks,
+        "forced fallbacks must cover every non-head position"
+    );
 }
